@@ -1,0 +1,8 @@
+"""Repo-root pytest shim: make `pytest python/tests/` work from the
+repository root by putting `python/` on sys.path (the build-time
+`compile` package lives there)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent / "python"))

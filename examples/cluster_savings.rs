@@ -1,0 +1,55 @@
+//! Cluster-level savings projection (§1 motivation): translate the
+//! kernel-level energy reductions of Table 2 into datacenter numbers,
+//! including the cooling amplification the paper cites ("the power
+//! required to run an air-cooling system is cubically proportional to
+//! the servers' operating power"; cooling ≈ 50% of cluster energy).
+//!
+//! ```bash
+//! cargo run --release --example cluster_savings [-- N_GPUS]
+//! ```
+
+use ecokernel::experiments::{table2, Effort};
+
+fn main() -> anyhow::Result<()> {
+    let n_gpus: f64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(24_576.0); // the LLaMA-3 cluster of §1
+
+    println!("running Table-2 style eval (quick effort) to get the kernel-level reduction ...\n");
+    let t = table2(Effort::Quick);
+    println!("{}", t.render("Kernel-level results"));
+
+    let avg_reduction = t.avg_energy_reduction_pct() / 100.0;
+    // Per-GPU average IT power under sustained DNN serving/training.
+    let it_power_w = 300.0;
+    let it_total_mw = n_gpus * it_power_w / 1e6;
+
+    // Cooling power scales ~cubically with server operating power; with
+    // cooling ~= IT power at baseline (50% of total), a fractional IT
+    // reduction r shrinks cooling by ~(1 - (1-r)^3).
+    let it_after = it_total_mw * (1.0 - avg_reduction);
+    let cooling_before = it_total_mw;
+    let cooling_after = cooling_before * (1.0 - avg_reduction).powi(3);
+
+    let total_before = it_total_mw + cooling_before;
+    let total_after = it_after + cooling_after;
+    let yearly_mwh = (total_before - total_after) * 24.0 * 365.0;
+
+    println!("cluster projection ({n_gpus:.0} GPUs @ {it_power_w:.0} W sustained):");
+    println!("  kernel-level energy reduction : {:.2}%", avg_reduction * 100.0);
+    println!("  IT power     : {it_total_mw:.2} MW -> {it_after:.2} MW");
+    println!(
+        "  cooling power: {cooling_before:.2} MW -> {cooling_after:.2} MW (cubic scaling)"
+    );
+    println!(
+        "  total        : {total_before:.2} MW -> {total_after:.2} MW  ({:.2}% of cluster)",
+        (1.0 - total_after / total_before) * 100.0
+    );
+    println!(
+        "  yearly saving: {yearly_mwh:.0} MWh (~{:.0} U.S. household-years at 10.7 MWh/yr)",
+        yearly_mwh / 10.7
+    );
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Explore the latency–energy trade-off space of one operator: the
+//! Figure 2 / Figure 3 phenomena, interactively.
+//!
+//! Samples the schedule space, prints the Pareto frontier
+//! (latency vs energy), and the latency–power correlation — the two
+//! observations that motivate the paper (§4.1–4.2).
+//!
+//! ```bash
+//! cargo run --release --example energy_pareto [-- WORKLOAD [GPU]]
+//! ```
+
+use ecokernel::config::GpuArch;
+use ecokernel::schedule::space::ScheduleSpace;
+use ecokernel::sim;
+use ecokernel::util::{stats, Rng};
+use ecokernel::workload::suites;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let wname = args.first().map(|s| s.as_str()).unwrap_or("MM1");
+    let gname = args.get(1).map(|s| s.as_str()).unwrap_or("a100");
+    let workload = suites::by_name(wname)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload {wname}"))?;
+    let gpu = GpuArch::parse(gname).ok_or_else(|| anyhow::anyhow!("unknown gpu {gname}"))?;
+    let spec = gpu.spec();
+
+    println!("sampling 500 schedules of {workload} on {gpu} ...\n");
+    let space = ScheduleSpace::new(workload, &spec);
+    let mut rng = Rng::seed_from_u64(1);
+    let g = workload.gemm_view();
+    let mut evals: Vec<(ecokernel::schedule::Schedule, sim::Evaluation)> = space
+        .sample_n(&mut rng, 500)
+        .into_iter()
+        .map(|s| (s, sim::evaluate(&g, &s, &spec)))
+        .collect();
+
+    // Latency-power correlation (Fig. 3).
+    let lats: Vec<f64> = evals.iter().map(|(_, e)| e.latency_s).collect();
+    let pows: Vec<f64> = evals.iter().map(|(_, e)| e.avg_power_w).collect();
+    let engs: Vec<f64> = evals.iter().map(|(_, e)| e.energy_j).collect();
+    println!("latency-power Pearson r = {:.3}  (paper Fig. 3: inverse)", stats::pearson(&lats, &pows));
+    println!(
+        "latency-energy Pearson r = {:.3}  (positive, but NOT 1.0: energy is not just latency)\n",
+        stats::pearson(&lats, &engs)
+    );
+
+    // Pareto frontier on (latency, energy).
+    evals.sort_by(|a, b| a.1.latency_s.partial_cmp(&b.1.latency_s).unwrap());
+    println!("Pareto frontier (latency vs energy):");
+    println!(
+        "{:>12} {:>12} {:>9} {:>8} {:>7}  schedule",
+        "latency(ms)", "energy(mJ)", "power(W)", "sm_eff", "grid"
+    );
+    let mut best_energy = f64::INFINITY;
+    let mut n_frontier = 0;
+    for (s, e) in &evals {
+        if e.energy_j < best_energy {
+            best_energy = e.energy_j;
+            n_frontier += 1;
+            println!(
+                "{:>12.4} {:>12.3} {:>9.1} {:>7.1}% {:>7}  {}",
+                e.latency_s * 1e3,
+                e.energy_j * 1e3,
+                e.avg_power_w,
+                e.sm_efficiency * 100.0,
+                e.profile.grid,
+                s
+            );
+        }
+    }
+    println!("\n{n_frontier} Pareto-optimal points out of {} samples.", evals.len());
+    println!(
+        "Fastest kernel is {} the most energy-efficient kernel — the paper's premise.",
+        if n_frontier > 1 { "NOT" } else { "also" }
+    );
+    Ok(())
+}

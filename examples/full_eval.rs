@@ -1,0 +1,180 @@
+//! END-TO-END DRIVER: the full system on a real (small) workload.
+//!
+//! Proves all layers compose:
+//!   L3 search (genetic + cost model + dynamic-k, on the simulated A100)
+//!     -> winning schedules for MM / MV / CONV
+//!   artifact registry -> nearest AOT-compiled Pallas variant (L1/L2,
+//!     lowered once at build time)
+//!   PJRT runtime -> load + compile + execute each winner, timing real
+//!     CPU executions and validating numerics against f64 oracles.
+//!
+//! Run `--paper` for full search effort (slower). Results are recorded
+//! in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example full_eval
+//! ```
+
+use ecokernel::config::{GpuArch, SearchMode};
+use ecokernel::coordinator::{Driver, DriverConfig, EventLog, SearchJob};
+use ecokernel::experiments::Effort;
+use ecokernel::runtime::{ArtifactRegistry, LoadedKernel};
+use ecokernel::util::Rng;
+use ecokernel::workload::{suites, Workload};
+
+fn main() -> anyhow::Result<()> {
+    let paper = std::env::args().any(|a| a == "--paper");
+    let effort = if paper { Effort::Paper } else { Effort::Quick };
+    let gpu = GpuArch::A100;
+
+    // The three artifact-backed workloads (one per operator family).
+    let evals: Vec<(&str, Workload, &str)> = vec![
+        ("MM", suites::MM1, "mm_b1_m512_n512_k512"),
+        ("MV", suites::MV_4090, "mv_b1_n4096_k1024"),
+        ("CONV", Workload::Conv2d { batch: 4, h: 56, w: 56, cin: 64, cout: 64, ksize: 1, stride: 1, pad: 0 },
+         "conv_b4_h56_w56_ci64_co64_k1_s1_p0"),
+    ];
+
+    // ---- Phase 1: dual-mode search on every workload (the L3 system) --
+    println!("=== phase 1: search (Ansor baseline vs energy-aware), {} effort ===", if paper { "paper" } else { "quick" });
+    let log = EventLog::to_file(std::path::Path::new("full_eval_events.jsonl"))?;
+    let driver = Driver::new(DriverConfig::default()).with_log(log);
+    let mut jobs = Vec::new();
+    for (i, (name, w, _)) in evals.iter().enumerate() {
+        let seed = 77 + i as u64;
+        jobs.push(SearchJob {
+            name: format!("{name}/ansor"),
+            workload: *w,
+            cfg: effort.cfg(gpu, SearchMode::LatencyOnly, seed),
+        });
+        jobs.push(SearchJob {
+            name: format!("{name}/ours"),
+            workload: *w,
+            cfg: effort.cfg(gpu, SearchMode::EnergyAware, seed),
+        });
+    }
+    let (results, metrics) = driver.run_suite(jobs);
+    println!("suite metrics: {}\n", metrics.summary());
+
+    for (pair, (name, w, _)) in results.chunks(2).zip(&evals) {
+        let (ansor, ours) = (&pair[0].outcome.best, &pair[1].outcome.best);
+        println!(
+            "{name} {w}: Ansor {:.3} mJ @ {:.4} ms | ours {:.3} mJ @ {:.4} ms | energy -{:.1}%",
+            ansor.energy_j * 1e3,
+            ansor.latency_s * 1e3,
+            ours.energy_j * 1e3,
+            ours.latency_s * 1e3,
+            (1.0 - ours.energy_j / ansor.energy_j) * 100.0
+        );
+        anyhow::ensure!(
+            ours.energy_j <= ansor.energy_j * 1.02,
+            "{name}: energy-aware search must not lose on energy"
+        );
+    }
+
+    // ---- Phase 2: execute every winner through PJRT ------------------
+    println!("\n=== phase 2: execute winners via PJRT (L1/L2 artifacts) ===");
+    let reg = ArtifactRegistry::open(&ArtifactRegistry::default_dir())?;
+    let mut rng = Rng::seed_from_u64(99);
+    for (pair, (name, _w, wid)) in results.chunks(2).zip(&evals) {
+        let ours = &pair[1].outcome.best;
+        let meta = reg
+            .nearest(wid, &ours.schedule)
+            .ok_or_else(|| anyhow::anyhow!("no artifacts for {wid}"))?;
+        let kernel = reg.load(meta)?;
+        let (inputs, mut check) = make_inputs(&kernel, &mut rng);
+        let refs: Vec<(&[f32], &[usize])> =
+            inputs.iter().map(|(d, s)| (d.as_slice(), s.as_slice())).collect();
+
+        // Warm once, then time 3 runs.
+        let out = kernel.run_f32(&refs)?;
+        let mut total = 0.0;
+        for _ in 0..3 {
+            total += kernel.time_once(&refs)?;
+        }
+        let max_err = check(&inputs, &out);
+        println!(
+            "{name}: searched {} -> artifact {} | compile {:.2}s | exec {:.4}s | max err {max_err:.2e}",
+            ours.schedule.variant_id(),
+            meta.name(),
+            kernel.compile_time.as_secs_f64(),
+            total / 3.0,
+        );
+        anyhow::ensure!(max_err < 1e-2, "{name}: numerics mismatch {max_err}");
+    }
+
+    println!("\nfull_eval OK — search, artifact mapping, PJRT execution, and numerics all compose.");
+    Ok(())
+}
+
+/// Build random inputs for an artifact + an oracle spot-checker.
+#[allow(clippy::type_complexity)]
+fn make_inputs(
+    kernel: &LoadedKernel,
+    rng: &mut Rng,
+) -> (Vec<(Vec<f32>, Vec<usize>)>, Box<dyn FnMut(&[(Vec<f32>, Vec<usize>)], &[f32]) -> f64>) {
+    let shapes = kernel.meta.arg_shapes.clone();
+    let inputs: Vec<(Vec<f32>, Vec<usize>)> = shapes
+        .iter()
+        .map(|s| {
+            let n: usize = s.iter().product();
+            ((0..n).map(|_| rng.normal() as f32 * 0.05).collect(), s.clone())
+        })
+        .collect();
+    let op = kernel.meta.op.clone();
+    let mut check_rng = rng.fork(5);
+    let checker = move |inputs: &[(Vec<f32>, Vec<usize>)], out: &[f32]| -> f64 {
+        let mut max_err = 0.0f64;
+        match op.as_str() {
+            "mm" => {
+                // (m,k) @ (k,n)
+                let (ref a, ref sa) = inputs[0];
+                let (ref b, ref sb) = inputs[1];
+                let (m, k, n) = (sa[0], sa[1], sb[1]);
+                for _ in 0..25 {
+                    let i = check_rng.gen_range(0, m);
+                    let j = check_rng.gen_range(0, n);
+                    let mut acc = 0.0f64;
+                    for kk in 0..k {
+                        acc += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                    }
+                    max_err = max_err.max((out[i * n + j] as f64 - acc).abs());
+                }
+            }
+            "mv" => {
+                // (n,k) @ (k,)
+                let (ref w, ref sw) = inputs[0];
+                let (ref x, _) = inputs[1];
+                let (n, k) = (sw[0], sw[1]);
+                for _ in 0..25 {
+                    let i = check_rng.gen_range(0, n);
+                    let mut acc = 0.0f64;
+                    for kk in 0..k {
+                        acc += w[i * k + kk] as f64 * x[kk] as f64;
+                    }
+                    max_err = max_err.max((out[i] as f64 - acc).abs());
+                }
+            }
+            "conv" => {
+                // 1x1 conv == (b*h*w, cin) @ (cin, cout) on NHWC.
+                let (ref xim, ref sx) = inputs[0];
+                let (ref wt, ref swt) = inputs[1];
+                let (b, h, w_, cin) = (sx[0], sx[1], sx[2], sx[3]);
+                let cout = swt[3];
+                let pixels = b * h * w_;
+                for _ in 0..25 {
+                    let p = check_rng.gen_range(0, pixels);
+                    let co = check_rng.gen_range(0, cout);
+                    let mut acc = 0.0f64;
+                    for ci in 0..cin {
+                        acc += xim[p * cin + ci] as f64 * wt[ci * cout + co] as f64;
+                    }
+                    max_err = max_err.max((out[p * cout + co] as f64 - acc).abs());
+                }
+            }
+            _ => max_err = f64::INFINITY,
+        }
+        max_err
+    };
+    (inputs, Box::new(checker))
+}

@@ -1,0 +1,70 @@
+//! Quickstart: search an energy-efficient MM1 kernel, then execute the
+//! winning schedule's AOT artifact through PJRT and verify numerics.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
+use ecokernel::runtime::ArtifactRegistry;
+use ecokernel::search::run_search;
+use ecokernel::util::Rng;
+use ecokernel::workload::suites;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Search: the paper's energy-aware genetic search on MM1.
+    let cfg = SearchConfig {
+        gpu: GpuArch::A100,
+        mode: SearchMode::EnergyAware,
+        population: 64,
+        m_latency_keep: 16,
+        rounds: 6,
+        seed: 42,
+        ..Default::default()
+    };
+    println!("searching {} on {} ...", suites::MM1, cfg.gpu);
+    let out = run_search(suites::MM1, &cfg);
+    println!(
+        "best schedule: {}  ->  {:.4} ms, {:.3} mJ, {:.0} W (simulated A100)",
+        out.best.schedule,
+        out.best.latency_s * 1e3,
+        out.best.energy_j * 1e3,
+        out.best.avg_power_w
+    );
+
+    // 2. Map the winner onto the nearest AOT-compiled Pallas variant.
+    let reg = ArtifactRegistry::open(&ArtifactRegistry::default_dir())?;
+    let meta = reg
+        .nearest("mm_b1_m512_n512_k512", &out.best.schedule)
+        .expect("MM1 artifacts exist");
+    println!(
+        "searched variant {} -> artifact {}",
+        out.best.schedule.variant_id(),
+        meta.name()
+    );
+
+    // 3. Execute through PJRT and verify against a Rust-side oracle.
+    let kernel = reg.load(meta)?;
+    println!("compiled in {:.2}s; executing 512x512x512 matmul ...", kernel.compile_time.as_secs_f64());
+    let mut rng = Rng::seed_from_u64(7);
+    let x: Vec<f32> = (0..512 * 512).map(|_| rng.normal() as f32 * 0.05).collect();
+    let w: Vec<f32> = (0..512 * 512).map(|_| rng.normal() as f32 * 0.05).collect();
+    let shape = [512usize, 512usize];
+    let got = kernel.run_f32(&[(&x, &shape), (&w, &shape)])?;
+
+    // Spot-check 40 random output entries against an f64 reference.
+    let mut max_err = 0.0f64;
+    for _ in 0..40 {
+        let i = rng.gen_range(0, 512);
+        let j = rng.gen_range(0, 512);
+        let mut acc = 0.0f64;
+        for k in 0..512 {
+            acc += x[i * 512 + k] as f64 * w[k * 512 + j] as f64;
+        }
+        max_err = max_err.max((got[i * 512 + j] as f64 - acc).abs());
+    }
+    anyhow::ensure!(max_err < 1e-3, "numerics mismatch: max err {max_err}");
+    println!("numerics verified (max spot-check error {max_err:.2e})");
+    println!("quickstart OK");
+    Ok(())
+}

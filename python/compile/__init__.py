@@ -1,0 +1,1 @@
+"""build-time compile package."""

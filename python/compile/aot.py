@@ -1,0 +1,80 @@
+"""AOT export: lower every palette variant to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / proto ``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the runtime's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; the Rust binary is self-contained
+afterwards. Emits ``artifacts/<workload>__<variant>.hlo.txt`` plus a
+``manifest.json`` the Rust artifact registry indexes.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model, schedules
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple1())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_one(spec, out_dir: pathlib.Path) -> dict:
+    fn = model.model_for(spec)
+    args = model.example_args(spec)
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = out_dir / f"{spec.artifact_name}.hlo.txt"
+    path.write_text(text)
+    return {
+        "workload_id": spec.workload_id,
+        "op": spec.op,
+        "shape": list(spec.shape),
+        "variant_id": spec.variant_id,
+        "bm": spec.bm,
+        "bn": spec.bn,
+        "bk": spec.bk,
+        "file": path.name,
+        "arg_shapes": [list(a.shape) for a in args],
+        "hlo_bytes": len(text),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names (debug)")
+    ns = ap.parse_args()
+    out_dir = pathlib.Path(ns.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    entries = []
+    pal = schedules.palette()
+    if ns.only:
+        pal = [s for s in pal if ns.only in s.artifact_name]
+    for i, spec in enumerate(pal):
+        entry = export_one(spec, out_dir)
+        entries.append(entry)
+        print(f"[{i + 1}/{len(pal)}] {spec.artifact_name} "
+              f"({entry['hlo_bytes']} bytes)")
+    (out_dir / "manifest.json").write_text(json.dumps(entries, indent=1))
+    print(f"wrote {len(entries)} artifacts + manifest to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,5 @@
+"""L1 Pallas kernels (build-time only; never imported at runtime)."""
+
+from .conv import conv2d  # noqa: F401
+from .matmul import matmul, matmul_batched  # noqa: F401
+from .matvec import matvec, matvec_batched  # noqa: F401

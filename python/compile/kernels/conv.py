@@ -1,0 +1,68 @@
+"""L1/L2 convolution: implicit-im2col lowering onto the Pallas matmul.
+
+NHWC conv2d is lowered exactly the way the Rust schedule space models it
+(`Workload::gemm_view`): patches of shape (B*Ho*Wo, Cin*KH*KW) against a
+weight matrix (Cin*KH*KW, Cout). 1x1 convolutions skip patch extraction
+(a pure reshape). The GEMM itself is the schedule-parameterized Pallas
+kernel, so conv artifacts share the same (bm, bn, bk) variant palette.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def _extract_patches(x, ksize: int, stride: int, pad: int):
+    """im2col: NHWC -> (B, Ho, Wo, KH*KW*Cin) patches."""
+    b, h, w, cin = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(ksize, ksize),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # conv_general_dilated_patches yields channels ordered (Cin, KH, KW).
+    return patches
+
+
+def conv2d(x, w, *, stride: int = 1, pad: int = 0,
+           bm: int = 64, bn: int = 64, bk: int = 16):
+    """NHWC conv2d with HWIO weights via im2col + Pallas matmul.
+
+    x: (B, H, W, Cin); w: (KH, KW, Cin, Cout). Returns (B, Ho, Wo, Cout).
+    """
+    b, h, win, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2 and kh == kw, "square kernels, matching channels"
+    ksize = kh
+    ho = (h + 2 * pad - ksize) // stride + 1
+    wo = (win + 2 * pad - ksize) // stride + 1
+
+    if ksize == 1 and stride == 1 and pad == 0:
+        lhs = x.reshape(b * h * win, cin)
+        rhs = w.reshape(cin, cout)
+    else:
+        patches = _extract_patches(x, ksize, stride, pad)
+        lhs = patches.reshape(b * ho * wo, -1)
+        # Patch channel order is (Cin, KH, KW): permute HWIO to match.
+        rhs = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * ksize * ksize, cout)
+
+    m, k = lhs.shape
+    # Pad the GEMM up to tile multiples (zero rows/cols contribute 0).
+    pm = (-m) % bm
+    pk = (-k) % bk
+    pn = (-cout) % bn
+    if pm or pk:
+        lhs = jnp.pad(lhs, ((0, pm), (0, pk)))
+    if pk or pn:
+        rhs = jnp.pad(rhs, ((0, pk), (0, pn)))
+    out = matmul(lhs, rhs, bm=bm, bn=bn, bk=bk)
+    out = out[:m, :cout]
+    return out.reshape(b, ho, wo, cout)
+
+
+conv2d_1x1 = functools.partial(conv2d, stride=1, pad=0)

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: schedule-parameterized tiled matrix multiplication.
+
+The schedule knobs mirror the Rust search space's block geometry
+(`block_m`, `block_n`, `tile_k` = the `variant_id` of a searched
+schedule): the grid iterates over (M/bm, N/bn) output tiles with a
+reduction loop over K/bk stages, staging `bm x bk` / `bk x bn` operand
+panels per step — the HBM<->VMEM schedule that CUDA kernels express with
+threadblocks + shared memory (see DESIGN.md §Hardware-Adaptation).
+
+Pallas runs with ``interpret=True``: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute; interpret mode lowers to
+plain HLO ops that run anywhere and keep numerics identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, n_k_steps: int):
+    """One (i, j, k) grid step: accumulate x_tile @ w_tile into the
+    revisited output tile (out index_map ignores k, so the same VMEM
+    tile stays resident across the reduction)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-friendly contraction: accumulate in f32.
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, w, *, bm: int = 64, bn: int = 64, bk: int = 16):
+    """Tiled matmul ``x @ w`` for 2-D operands.
+
+    Requires M % bm == N % bn == K % bk == 0 (the AOT palette only
+    contains dividing variants; the Rust schedule space snaps to them).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{n},{k}) not divisible by tile ({bm},{bn},{bk})"
+    )
+    n_k_steps = k // bk
+    grid = (m // bm, n // bn, n_k_steps)
+    kernel = functools.partial(_mm_kernel, n_k_steps=n_k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def matmul_batched(x, w, *, bm: int = 64, bn: int = 64, bk: int = 16):
+    """Batched matmul over leading dim: x[b,m,k] @ w[b,k,n]."""
+    f = functools.partial(matmul, bm=bm, bn=bn, bk=bk)
+    return jax.vmap(f)(x, w)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency per grid step: two operand panels + the
+    f32 output tile (the quantity DESIGN.md §9 budgets at 16 MiB)."""
+    return dtype_bytes * (bm * bk + bk * bn) + 4 * bm * bn

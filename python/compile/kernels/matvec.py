@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: schedule-parameterized matrix-vector product.
+
+Computes ``y[n] = sum_k W[n, k] * x[k]`` — the paper's MV operator
+(M = 1 GEMM), the memory-bound workload where its RTX 4090 evaluation
+found >50% energy savings. The grid tiles N into `bn` rows per step and
+the reduction into `bk` stages; the weight panel `bn x bk` streams
+through VMEM once (no reuse — MV is compulsory-traffic dominated), while
+the `x` slice is broadcast to every row of the panel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mv_kernel(w_ref, x_ref, o_ref, *, n_k_steps: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Panel-vector product: (bn, bk) @ (bk,) -> (bn,)
+    o_ref[...] += jnp.dot(
+        w_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk"))
+def matvec(w, x, *, bn: int = 128, bk: int = 128):
+    """Tiled matvec ``W @ x`` with W of shape (N, K), x of shape (K,)."""
+    n, k = w.shape
+    (k2,) = x.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert n % bn == 0 and k % bk == 0, (
+        f"shape ({n},{k}) not divisible by tile ({bn},{bk})"
+    )
+    n_k_steps = k // bk
+    grid = (n // bn, n_k_steps)
+    kernel = functools.partial(_mv_kernel, n_k_steps=n_k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, kk: (i, kk)),
+            pl.BlockSpec((bk,), lambda i, kk: (kk,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i, kk: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(w, x)
+
+
+def matvec_batched(w, x, *, bn: int = 128, bk: int = 128):
+    """Batched matvec: W[b,n,k] @ x[b,k] -> y[b,n]."""
+    f = functools.partial(matvec, bn=bn, bk=bk)
+    return jax.vmap(f)(w, x)

@@ -1,0 +1,38 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the CORE correctness signal of the L1 layer: every kernel
+variant must match its oracle to float32 tolerance before it is allowed
+into the AOT artifact palette.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """x[m,k] @ w[k,n] in f32."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def matmul_batched_ref(x, w):
+    return jax.vmap(matmul_ref)(x, w)
+
+
+def matvec_ref(w, x):
+    """W[n,k] @ x[k] in f32."""
+    return jnp.dot(w, x, preferred_element_type=jnp.float32)
+
+
+def matvec_batched_ref(w, x):
+    return jax.vmap(matvec_ref)(w, x)
+
+
+def conv2d_ref(x, w, *, stride: int = 1, pad: int = 0):
+    """NHWC x HWIO conv2d oracle via lax.conv_general_dilated."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

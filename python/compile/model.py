@@ -1,0 +1,92 @@
+"""L2: JAX compute graphs for the paper's operator workloads.
+
+Each function is the *model-level* computation the search optimizes —
+it calls the L1 Pallas kernels with a concrete (bm, bn, bk) schedule
+variant, so lowering one of these functions produces a single fused HLO
+module per variant. Build-time only; the Rust runtime executes the
+lowered artifacts through PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+
+def mm_model(bm: int, bn: int, bk: int):
+    """MM(batch, M, N, K) forward: out = x @ w per batch element."""
+
+    def fn(x, w):
+        if x.ndim == 3:
+            return (kernels.matmul_batched(x, w, bm=bm, bn=bn, bk=bk),)
+        return (kernels.matmul(x, w, bm=bm, bn=bn, bk=bk),)
+
+    return fn
+
+
+def mv_model(bn: int, bk: int):
+    """MV(batch, 1, N, K) forward: y = W @ x per batch element."""
+
+    def fn(w, x):
+        if w.ndim == 3:
+            return (kernels.matvec_batched(w, x, bn=bn, bk=bk),)
+        return (kernels.matvec(w, x, bn=bn, bk=bk),)
+
+    return fn
+
+
+def conv_model(stride: int, pad: int, bm: int, bn: int, bk: int):
+    """Conv2d NHWC forward via implicit im2col onto the Pallas GEMM."""
+
+    def fn(x, w):
+        return (kernels.conv2d(x, w, stride=stride, pad=pad, bm=bm, bn=bn, bk=bk),)
+
+    return fn
+
+
+def example_args(spec):
+    """ShapeDtypeStructs for an ArtifactSpec (see schedules.py)."""
+    f32 = jnp.float32
+    if spec.op == "mm":
+        b, m, n, k = spec.shape
+        if b == 1:
+            return (
+                jax.ShapeDtypeStruct((m, k), f32),
+                jax.ShapeDtypeStruct((k, n), f32),
+            )
+        return (
+            jax.ShapeDtypeStruct((b, m, k), f32),
+            jax.ShapeDtypeStruct((b, k, n), f32),
+        )
+    if spec.op == "mv":
+        b, n, k = spec.shape
+        if b == 1:
+            return (
+                jax.ShapeDtypeStruct((n, k), f32),
+                jax.ShapeDtypeStruct((k,), f32),
+            )
+        return (
+            jax.ShapeDtypeStruct((b, n, k), f32),
+            jax.ShapeDtypeStruct((b, k), f32),
+        )
+    if spec.op == "conv":
+        b, h, w, cin, cout, ks, _s, _p = spec.shape
+        return (
+            jax.ShapeDtypeStruct((b, h, w, cin), f32),
+            jax.ShapeDtypeStruct((ks, ks, cin, cout), f32),
+        )
+    raise ValueError(f"unknown op {spec.op}")
+
+
+def model_for(spec):
+    """The L2 function for an ArtifactSpec."""
+    if spec.op == "mm":
+        return mm_model(spec.bm, spec.bn, spec.bk)
+    if spec.op == "mv":
+        return mv_model(spec.bn, spec.bk)
+    if spec.op == "conv":
+        _b, _h, _w, _ci, _co, _ks, s, p = spec.shape
+        return conv_model(s, p, spec.bm, spec.bn, spec.bk)
+    raise ValueError(f"unknown op {spec.op}")

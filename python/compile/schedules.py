@@ -1,0 +1,82 @@
+"""The pinned AOT variant palette.
+
+Each entry maps a workload (named exactly as `Workload::id()` on the
+Rust side) to the set of (bm, bn, bk) block-geometry variants compiled
+to HLO artifacts. The Rust artifact registry resolves a searched
+schedule's `variant_id` ("bm{}_bn{}_bk{}") to the nearest palette
+member, so every search winner is executable end-to-end.
+
+The palette intentionally spans the block geometries the search space
+reaches: small tiles (high grid, high sm_efficiency — K2-like in the
+paper's §8 case study) through large tiles (high reuse, low static
+energy — K1-like).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ArtifactSpec:
+    """One AOT compilation unit."""
+
+    workload_id: str     # Rust Workload::id()
+    op: str              # "mm" | "mv" | "conv"
+    shape: tuple         # op-specific shape tuple
+    bm: int
+    bn: int
+    bk: int
+
+    @property
+    def variant_id(self) -> str:
+        return f"bm{self.bm}_bn{self.bn}_bk{self.bk}"
+
+    @property
+    def artifact_name(self) -> str:
+        return f"{self.workload_id}__{self.variant_id}"
+
+
+def mm_variants():
+    """MM1(1, 512, 512, 512): the paper's headline operator (21.69%
+    energy reduction; §8 case study)."""
+    shape = (1, 512, 512, 512)
+    wid = "mm_b1_m512_n512_k512"
+    out = []
+    for bm in (16, 32, 64, 128):
+        for bn in (32, 64, 128):
+            for bk in (8, 16, 32):
+                out.append(ArtifactSpec(wid, "mm", shape, bm, bn, bk))
+    return out
+
+
+def mv_variants():
+    """MV(1, 1, 4096, 1024): the Table-3 / Fig-4 MV operator."""
+    shape = (1, 4096, 1024)
+    wid = "mv_b1_n4096_k1024"
+    out = []
+    for bn in (64, 128, 256):
+        for bk in (64, 128):
+            out.append(ArtifactSpec(wid, "mv", shape, 1, bn, bk))
+    return out
+
+
+def conv_variants():
+    """CONV2-lite (4, 56, 56, 64, 64, 1, 1, 0): the Table-2/3 1x1 conv
+    at reduced batch so interpret-mode AOT stays fast. GEMM view:
+    (12544, 64, 64)."""
+    shape = (4, 56, 56, 64, 64, 1, 1, 0)
+    wid = "conv_b4_h56_w56_ci64_co64_k1_s1_p0"
+    out = []
+    for bm in (64, 128):
+        for bn in (32, 64):
+            for bk in (16, 32):
+                out.append(ArtifactSpec(wid, "conv", shape, bm, bn, bk))
+    return out
+
+
+def palette():
+    """Every artifact to compile."""
+    return mm_variants() + mv_variants() + conv_variants()
+
+
+def palette_for(workload_id: str):
+    return [a for a in palette() if a.workload_id == workload_id]

@@ -1,0 +1,81 @@
+"""AOT pipeline tests: palette sanity, model lowering, HLO text shape.
+
+These run the same `aot.export_one` path `make artifacts` uses, on a
+single cheap variant, and validate the manifest contract the Rust
+artifact registry depends on.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model, schedules
+
+
+def test_palette_is_nonempty_and_unique():
+    pal = schedules.palette()
+    assert len(pal) >= 40
+    names = [s.artifact_name for s in pal]
+    assert len(set(names)) == len(names), "duplicate artifact names"
+    ops = {s.op for s in pal}
+    assert ops == {"mm", "mv", "conv"}
+
+
+def test_palette_tiles_divide_shapes():
+    for s in schedules.palette():
+        if s.op == "mm":
+            _b, m, n, k = s.shape
+            assert m % s.bm == 0 and n % s.bn == 0 and k % s.bk == 0, s
+        elif s.op == "mv":
+            _b, n, k = s.shape
+            assert n % s.bn == 0 and k % s.bk == 0, s
+
+
+def test_variant_id_matches_rust_format():
+    s = schedules.palette()[0]
+    assert s.variant_id == f"bm{s.bm}_bn{s.bn}_bk{s.bk}"
+    assert "__" in s.artifact_name
+
+
+def test_export_one_writes_parseable_hlo(tmp_path):
+    spec = schedules.ArtifactSpec(
+        "mm_b1_m64_n64_k64", "mm", (1, 64, 64, 64), 32, 32, 16
+    )
+    entry = aot.export_one(spec, tmp_path)
+    text = (tmp_path / entry["file"]).read_text()
+    assert text.startswith("HloModule"), text[:60]
+    assert "parameter(0)" in text
+    assert entry["arg_shapes"] == [[64, 64], [64, 64]]
+
+
+def test_lowered_model_matches_kernel_numerics(tmp_path):
+    """The lowered-and-reexecuted HLO equals the eager kernel output."""
+    spec = schedules.ArtifactSpec(
+        "mm_b1_m64_n64_k64", "mm", (1, 64, 64, 64), 32, 32, 16
+    )
+    fn = model.model_for(spec)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64, 64), dtype=np.float32))
+    w = jnp.asarray(rng.standard_normal((64, 64), dtype=np.float32))
+    eager = fn(x, w)[0]
+    compiled = jax.jit(fn).lower(x, w).compile()(x, w)[0]
+    np.testing.assert_allclose(eager, compiled, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(eager, x @ w, rtol=1e-4, atol=1e-3)
+
+
+def test_manifest_contract():
+    """If `make artifacts` has run, the manifest must index every file."""
+    art = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    manifest = art / "manifest.json"
+    if not manifest.exists():
+        pytest.skip("artifacts not built yet (run `make artifacts`)")
+    entries = json.loads(manifest.read_text())
+    assert len(entries) == len(schedules.palette())
+    for e in entries:
+        assert (art / e["file"]).exists(), e["file"]
+        for key in ("workload_id", "variant_id", "bm", "bn", "bk", "arg_shapes"):
+            assert key in e

@@ -1,0 +1,66 @@
+"""L1/L2 correctness: im2col conv2d vs lax oracle + hypothesis sweep."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d
+from compile.kernels.ref import conv2d_ref
+
+
+def rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+def test_conv_1x1_matches_ref():
+    x, w = rand((4, 14, 14, 64), 1), rand((1, 1, 64, 32), 2)
+    got = conv2d(x, w, stride=1, pad=0, bm=64, bn=32, bk=16)
+    np.testing.assert_allclose(got, conv2d_ref(x, w), rtol=1e-4, atol=1e-3)
+
+
+def test_conv_3x3_same_matches_ref():
+    # CONV1-like: 3x3 'same' convolution.
+    x, w = rand((2, 7, 7, 32), 3), rand((3, 3, 32, 32), 4)
+    got = conv2d(x, w, stride=1, pad=1, bm=32, bn=32, bk=16)
+    np.testing.assert_allclose(got, conv2d_ref(x, w, stride=1, pad=1), rtol=1e-4, atol=1e-3)
+
+
+def test_conv_strided():
+    x, w = rand((2, 16, 16, 8), 5), rand((3, 3, 8, 16), 6)
+    got = conv2d(x, w, stride=2, pad=1, bm=32, bn=16, bk=16)
+    np.testing.assert_allclose(got, conv2d_ref(x, w, stride=2, pad=1), rtol=1e-4, atol=1e-3)
+
+
+def test_conv_padding_to_tiles_is_exact():
+    # Shapes whose GEMM view does NOT divide the tiles: padding path.
+    x, w = rand((1, 5, 5, 3), 7), rand((3, 3, 3, 5), 8)
+    got = conv2d(x, w, stride=1, pad=1, bm=64, bn=64, bk=32)
+    np.testing.assert_allclose(got, conv2d_ref(x, w, stride=1, pad=1), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(64, 32, 16), (128, 64, 32)])
+def test_conv2_palette_variants(bm, bn, bk):
+    # The CONV2-lite artifact workload at tiny batch.
+    x, w = rand((1, 56, 56, 64), 9), rand((1, 1, 64, 64), 10)
+    got = conv2d(x, w, stride=1, pad=0, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, conv2d_ref(x, w), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    hw=st.sampled_from([6, 8, 12]),
+    cin=st.sampled_from([4, 8, 16]),
+    cout=st.sampled_from([4, 8]),
+    ks=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_hypothesis_sweep(b, hw, cin, cout, ks, stride, seed):
+    pad = ks // 2
+    x, w = rand((b, hw, hw, cin), seed), rand((ks, ks, cin, cout), seed + 1)
+    got = conv2d(x, w, stride=stride, pad=pad, bm=32, bn=32, bk=16)
+    ref = conv2d_ref(x, w, stride=stride, pad=pad)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,56 @@
+"""L2 model-layer tests: the jax graphs the AOT pipeline lowers."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model, schedules
+from compile.kernels import ref
+
+
+def rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+def test_mm_model_2d_and_batched():
+    fn = model.mm_model(32, 32, 16)
+    x, w = rand((64, 64), 1), rand((64, 64), 2)
+    (out,) = fn(x, w)
+    np.testing.assert_allclose(out, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-3)
+
+    xb, wb = rand((2, 64, 64), 3), rand((2, 64, 64), 4)
+    (outb,) = fn(xb, wb)
+    np.testing.assert_allclose(outb, ref.matmul_batched_ref(xb, wb), rtol=1e-4, atol=1e-3)
+
+
+def test_mv_model():
+    fn = model.mv_model(64, 64)
+    w, x = rand((256, 128), 5), rand((128,), 6)
+    (out,) = fn(w, x)
+    np.testing.assert_allclose(out, ref.matvec_ref(w, x), rtol=1e-4, atol=1e-3)
+
+
+def test_conv_model():
+    fn = model.conv_model(1, 0, 64, 32, 16)
+    x, w = rand((2, 8, 8, 32), 7), rand((1, 1, 32, 32), 8)
+    (out,) = fn(x, w)
+    np.testing.assert_allclose(out, ref.conv2d_ref(x, w), rtol=1e-4, atol=1e-3)
+
+
+def test_example_args_match_models():
+    """Every palette entry's example args must be accepted by its model
+    (the invariant `make artifacts` depends on)."""
+    for spec in schedules.palette()[::7]:  # sample the palette
+        fn = model.model_for(spec)
+        args = model.example_args(spec)
+        lowered = jax.jit(fn).lower(*args)  # must not raise
+        assert lowered is not None
+
+
+def test_model_for_rejects_unknown_op():
+    import dataclasses
+    import pytest
+    bad = schedules.ArtifactSpec("x", "unknown_op", (1,), 1, 1, 1)
+    with pytest.raises(ValueError):
+        model.model_for(bad)

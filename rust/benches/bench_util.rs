@@ -1,0 +1,45 @@
+//! Shared micro-bench harness (offline build: no criterion). Measures
+//! wall time over warm-up + timed iterations and prints a stable,
+//! grep-friendly report line per benchmark.
+
+use std::time::Instant;
+
+/// Time `f` and print `name: <mean> per iter (<iters> iters, total)`.
+pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) {
+    // Warm-up.
+    let warm = (iters / 10).max(1);
+    for _ in 0..warm {
+        std::hint::black_box(f());
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(f());
+    }
+    let total = t0.elapsed();
+    let per = total.as_secs_f64() / iters as f64;
+    println!(
+        "bench {name:<40} {:>12}/iter  ({iters} iters, {:.2}s total)",
+        fmt_duration(per),
+        total.as_secs_f64()
+    );
+}
+
+/// Time one execution of `f` (for end-to-end experiment benches).
+pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("bench {name:<40} {:>12}  (single run)", fmt_duration(t0.elapsed().as_secs_f64()));
+    out
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}

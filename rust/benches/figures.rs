@@ -1,0 +1,34 @@
+//! End-to-end regeneration benches: one per paper figure.
+//!
+//! `cargo bench --bench figures` (ECOKERNEL_BENCH_PAPER=1 for full
+//! effort).
+
+mod bench_util;
+
+use bench_util::bench_once;
+use ecokernel::experiments::{self, Effort};
+
+fn effort() -> Effort {
+    if std::env::var("ECOKERNEL_BENCH_PAPER").is_ok() {
+        Effort::Paper
+    } else {
+        Effort::Quick
+    }
+}
+
+fn main() {
+    let e = effort();
+    println!("== figure regeneration benches (effort: {e:?}) ==\n");
+
+    let f2 = bench_once("fig2 (conv scatter, p100)", || experiments::fig2(e));
+    println!("{}\n", f2.summary());
+
+    let f3 = bench_once("fig3 (latency-power sweep, a100)", || experiments::fig3(e));
+    println!("{}\n", f3.summary());
+
+    let f4 = bench_once("fig4 (cost-model 80/20 eval)", || experiments::fig4(e));
+    println!("{}\n", f4.summary());
+
+    let f5 = bench_once("fig5 (nvml-only vs cost-model)", || experiments::fig5(e));
+    println!("{}", f5.render());
+}

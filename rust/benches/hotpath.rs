@@ -1,0 +1,96 @@
+//! Hot-path microbenches for the perf pass (EXPERIMENTS.md §Perf):
+//!
+//! * `sim_eval`       — full simulator evaluation (called per measured kernel)
+//! * `sim_latency`    — the latency-only fast path (called per genetic child)
+//! * `featurize`      — §5.4 feature extraction
+//! * `gbdt_train`     — cost-model fit (per-round `ModelUpdate`)
+//! * `gbdt_predict`   — batch prediction over one generation
+//! * `ga_round`       — reproduce + latency-rank one full generation
+//! * `pjrt_exec`      — one artifact execution through PJRT (if built)
+
+mod bench_util;
+
+use bench_util::bench;
+use ecokernel::config::{GpuArch, SearchConfig};
+use ecokernel::costmodel::EnergyCostModel;
+use ecokernel::features::featurize;
+use ecokernel::nvml::NvmlMeter;
+use ecokernel::schedule::{space::ScheduleSpace, Candidate};
+use ecokernel::search;
+use ecokernel::sim;
+use ecokernel::util::Rng;
+use ecokernel::workload::suites;
+
+fn main() {
+    let spec = GpuArch::A100.spec();
+    let w = suites::MM1;
+    let g = w.gemm_view();
+    let space = ScheduleSpace::new(w, &spec);
+    let mut rng = Rng::seed_from_u64(1);
+    let scheds = space.sample_n(&mut rng, 256);
+
+    // sim_eval: full power+latency+profile evaluation.
+    let mut i = 0;
+    bench("sim_eval (full)", 20_000, || {
+        i = (i + 1) % scheds.len();
+        sim::evaluate(&g, &scheds[i], &spec)
+    });
+
+    // sim_latency: the genetic inner loop.
+    let mut j = 0;
+    bench("sim_latency (fast path)", 50_000, || {
+        j = (j + 1) % scheds.len();
+        sim::evaluate_latency(&g, &scheds[j], &spec)
+    });
+
+    // featurize.
+    let cands: Vec<Candidate> = scheds.iter().map(|s| Candidate::new(w, *s)).collect();
+    let mut k = 0;
+    bench("featurize (36-dim)", 20_000, || {
+        k = (k + 1) % cands.len();
+        featurize(&cands[k], &spec)
+    });
+
+    // gbdt_train on a realistic mid-search dataset (~256 samples).
+    let samples: Vec<(ecokernel::features::FeatureVector, f64)> = cands
+        .iter()
+        .map(|c| (featurize(c, &spec), sim::evaluate_candidate(c, &spec).energy_j))
+        .collect();
+    bench("gbdt_train (256 samples, 80 trees)", 10, || {
+        let mut m = EnergyCostModel::new(Default::default());
+        m.update(&samples, &mut Rng::seed_from_u64(2));
+        m
+    });
+
+    // gbdt_predict over one generation.
+    let mut model = EnergyCostModel::new(Default::default());
+    model.update(&samples, &mut Rng::seed_from_u64(2));
+    let feats: Vec<ecokernel::features::FeatureVector> =
+        cands.iter().map(|c| featurize(c, &spec)).collect();
+    bench("gbdt_predict (batch of 256)", 2_000, || model.predict_energy_batch(&feats));
+
+    // ga_round: reproduce 128 children + latency-rank them.
+    let cfg = SearchConfig { population: 128, m_latency_keep: 32, ..Default::default() };
+    let parents = scheds[..16].to_vec();
+    let mut meter = NvmlMeter::warmed(spec.clone(), cfg.nvml.clone());
+    let mut ga_rng = Rng::seed_from_u64(3);
+    bench("ga_round (reproduce 128 + rank)", 200, || {
+        let gen = search::genetic::reproduce(&space, &parents, &cfg, &mut ga_rng);
+        search::latency_eva_and_pick(w, &gen, cfg.m_latency_keep, &mut meter, &mut ga_rng)
+    });
+
+    // pjrt_exec: one real artifact execution (skipped without artifacts).
+    let dir = ecokernel::runtime::ArtifactRegistry::default_dir();
+    if let Ok(reg) = ecokernel::runtime::ArtifactRegistry::open(&dir) {
+        if let Some(meta) = reg.get("mm_b1_m512_n512_k512", "bm64_bn64_bk16") {
+            let kernel = reg.load(meta).expect("compile");
+            let x = vec![0.01f32; 512 * 512];
+            let shape = [512usize, 512];
+            bench("pjrt_exec (mm 512^3, bm64_bn64_bk16)", 3, || {
+                kernel.run_f32(&[(&x, &shape), (&x, &shape)]).expect("exec")
+            });
+        }
+    } else {
+        println!("bench pjrt_exec skipped (run `make artifacts`)");
+    }
+}

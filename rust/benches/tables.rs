@@ -1,0 +1,38 @@
+//! End-to-end regeneration benches: one per paper table. Each bench
+//! runs the full experiment pipeline (searches + measurement + report)
+//! and prints both the timing and the regenerated rows.
+//!
+//! `cargo bench --bench tables` (quick effort; pass --paper via
+//! ECOKERNEL_BENCH_PAPER=1 for full effort).
+
+mod bench_util;
+
+use bench_util::bench_once;
+use ecokernel::experiments::{self, Effort};
+
+fn effort() -> Effort {
+    if std::env::var("ECOKERNEL_BENCH_PAPER").is_ok() {
+        Effort::Paper
+    } else {
+        Effort::Quick
+    }
+}
+
+fn main() {
+    let e = effort();
+    println!("== table regeneration benches (effort: {e:?}) ==\n");
+
+    let t2 = bench_once("table2 (11 ops x 2 searches, a100)", || experiments::table2(e));
+    println!("{}\n", t2.render("Table 2"));
+
+    let t3 = bench_once("table3 (3 ops x 2 searches, rtx4090)", || experiments::table3(e));
+    println!("{}\n", t3.render("Table 3"));
+
+    let t4 = bench_once("table4 (4 ops vs cublas-sim)", || experiments::table4(e));
+    println!("{}\n", t4.render());
+
+    let t5 = bench_once("table5 (case-study profile)", || experiments::table5(e));
+    println!("{}\n", t5.render());
+
+    println!("{}", experiments::table1());
+}

@@ -1,0 +1,5 @@
+//! Comparison baselines: the cuBLAS-style vendor library (Table 4).
+
+pub mod cublas;
+
+pub use cublas::CublasSim;

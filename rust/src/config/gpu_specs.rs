@@ -1,0 +1,367 @@
+//! Architecture spec sheets for the simulated GPUs.
+//!
+//! Each [`GpuSpec`] captures the *structural* parameters the paper's
+//! energy analysis depends on (§2.1, §2.3, §8): SM array geometry, memory
+//! hierarchy bandwidths, and the energy/power decomposition into
+//! constant, static, and dynamic components. Absolute numbers are drawn
+//! from public spec sheets and the AccelWattch-style energy-per-access
+//! literature; they are calibration constants for the simulator, not
+//! claims about real silicon.
+
+
+/// Identifier for a built-in GPU architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuArch {
+    /// NVIDIA A100 (Ampere, SXM4 80GB) — the paper's primary platform.
+    A100,
+    /// NVIDIA RTX 4090 (Ada Lovelace) — the paper's secondary platform.
+    Rtx4090,
+    /// NVIDIA P100 (Pascal) — used for the paper's Figure 2.
+    P100,
+    /// NVIDIA V100 (Volta) — extra platform for ablations.
+    V100,
+}
+
+impl GpuArch {
+    /// All built-in architectures.
+    pub const ALL: [GpuArch; 4] = [GpuArch::A100, GpuArch::Rtx4090, GpuArch::P100, GpuArch::V100];
+
+    /// Short lowercase name used by the CLI and artifact registry.
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuArch::A100 => "a100",
+            GpuArch::Rtx4090 => "rtx4090",
+            GpuArch::P100 => "p100",
+            GpuArch::V100 => "v100",
+        }
+    }
+
+    /// Parse a CLI name. Accepts the forms `a100`, `rtx4090`, `4090`, `p100`, `v100`.
+    pub fn parse(s: &str) -> Option<GpuArch> {
+        match s.to_ascii_lowercase().as_str() {
+            "a100" => Some(GpuArch::A100),
+            "rtx4090" | "4090" | "rtx_4090" => Some(GpuArch::Rtx4090),
+            "p100" => Some(GpuArch::P100),
+            "v100" => Some(GpuArch::V100),
+            _ => None,
+        }
+    }
+
+    /// The full spec sheet for this architecture.
+    pub fn spec(self) -> GpuSpec {
+        match self {
+            GpuArch::A100 => GpuSpec::a100(),
+            GpuArch::Rtx4090 => GpuSpec::rtx4090(),
+            GpuArch::P100 => GpuSpec::p100(),
+            GpuArch::V100 => GpuSpec::v100(),
+        }
+    }
+}
+
+impl std::fmt::Display for GpuArch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Structural + energy parameters of one GPU architecture.
+///
+/// Units: clocks in GHz, bandwidths in GB/s, energies in picojoules per
+/// event, powers in watts, memories in bytes.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub arch_name: &'static str,
+    // --- SM array -----------------------------------------------------
+    /// Number of streaming multiprocessors.
+    pub num_sms: usize,
+    /// FP32 CUDA cores (SPs) per SM.
+    pub cores_per_sm: usize,
+    /// Sustained SM clock under load (GHz).
+    pub sm_clock_ghz: f64,
+    /// Max resident threads per SM.
+    pub max_threads_per_sm: usize,
+    /// Max resident thread blocks per SM.
+    pub max_blocks_per_sm: usize,
+    /// Max threads per block (hardware limit).
+    pub max_threads_per_block: usize,
+    /// Register file size per SM (32-bit registers).
+    pub regs_per_sm: usize,
+    /// Max registers per thread.
+    pub max_regs_per_thread: usize,
+    // --- memory hierarchy ----------------------------------------------
+    /// Shared memory (scratchpad) per SM, bytes.
+    pub shared_mem_per_sm: usize,
+    /// Max shared memory per block, bytes.
+    pub max_shared_per_block: usize,
+    /// DRAM (HBM/GDDR) bandwidth, GB/s.
+    pub dram_bw_gbs: f64,
+    /// L2 cache size, bytes.
+    pub l2_size: usize,
+    /// L2 bandwidth, GB/s (aggregate).
+    pub l2_bw_gbs: f64,
+    /// Aggregate shared-memory bandwidth per SM, GB/s.
+    pub shared_bw_per_sm_gbs: f64,
+    // --- power / energy decomposition (§2.3) ----------------------------
+    /// Constant power: fans, peripheral circuits, VRM overhead (W).
+    pub constant_power_w: f64,
+    /// Static (leakage) power with *all* SMs gated on, chip idle at load
+    /// clocks (W). Scales with the fraction of SMs kept active.
+    pub static_power_full_w: f64,
+    /// Fraction of static power that is unavoidable chip-wide leakage
+    /// (uncore, memory controllers) even when most SMs idle.
+    pub static_floor_frac: f64,
+    /// Dynamic energy per FP32 FLOP (pJ). MAC counted as 2 FLOPs.
+    pub energy_per_flop_pj: f64,
+    /// Dynamic energy per 32-bit integer ALU op (pJ).
+    pub energy_per_intop_pj: f64,
+    /// Dynamic energy per byte moved from DRAM (pJ/B).
+    pub energy_per_dram_byte_pj: f64,
+    /// Dynamic energy per byte moved through L2 (pJ/B).
+    pub energy_per_l2_byte_pj: f64,
+    /// Dynamic energy per byte moved through shared memory (pJ/B).
+    pub energy_per_shared_byte_pj: f64,
+    /// Dynamic energy per byte moved through the register file (pJ/B).
+    pub energy_per_reg_byte_pj: f64,
+    /// Instruction issue/decode energy per *memory instruction* (pJ).
+    /// Vectorized loads amortize this — one of the §5.4 vectorization
+    /// features' physical effects on energy.
+    pub energy_per_mem_issue_pj: f64,
+    /// Per-kernel-launch fixed energy overhead (uJ).
+    pub launch_energy_uj: f64,
+    /// Kernel launch latency overhead (us).
+    pub launch_latency_us: f64,
+    /// Board power limit (W) — power capping ceiling.
+    pub tdp_w: f64,
+    // --- thermal model ---------------------------------------------------
+    /// Power multiplier slope per degree C above the calibration point
+    /// (leakage grows with temperature; §5.1 motivation for warm-up).
+    pub thermal_power_slope_per_c: f64,
+    /// Calibration (steady, warmed-up) temperature, C.
+    pub steady_temp_c: f64,
+    /// Idle temperature, C.
+    pub idle_temp_c: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A100 SXM4 80GB (Ampere, GA100). 108 SMs x 64 FP32 cores.
+    pub fn a100() -> GpuSpec {
+        GpuSpec {
+            arch_name: "a100",
+            num_sms: 108,
+            cores_per_sm: 64,
+            sm_clock_ghz: 1.41,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            max_threads_per_block: 1024,
+            regs_per_sm: 65536,
+            max_regs_per_thread: 255,
+            shared_mem_per_sm: 164 * 1024,
+            max_shared_per_block: 160 * 1024,
+            dram_bw_gbs: 2039.0,
+            l2_size: 40 * 1024 * 1024,
+            l2_bw_gbs: 5120.0,
+            shared_bw_per_sm_gbs: 128.0,
+            constant_power_w: 58.0,
+            static_power_full_w: 92.0,
+            static_floor_frac: 0.42,
+            energy_per_flop_pj: 0.75,
+            energy_per_intop_pj: 0.45,
+            energy_per_dram_byte_pj: 22.0,
+            energy_per_l2_byte_pj: 4.5,
+            energy_per_shared_byte_pj: 1.1,
+            energy_per_reg_byte_pj: 0.25,
+            energy_per_mem_issue_pj: 28.0,
+            launch_energy_uj: 18.0,
+            launch_latency_us: 3.0,
+            tdp_w: 400.0,
+            thermal_power_slope_per_c: 0.0035,
+            steady_temp_c: 62.0,
+            idle_temp_c: 33.0,
+        }
+    }
+
+    /// NVIDIA RTX 4090 (Ada, AD102). 128 SMs x 128 FP32 cores; GDDR6X.
+    ///
+    /// Ada's high clocks + narrower DRAM make memory-bound kernels (MV)
+    /// especially schedule-sensitive in energy — matching the paper's
+    /// observation of a 53% MV reduction on this card.
+    pub fn rtx4090() -> GpuSpec {
+        GpuSpec {
+            arch_name: "rtx4090",
+            num_sms: 128,
+            cores_per_sm: 128,
+            sm_clock_ghz: 2.52,
+            max_threads_per_sm: 1536,
+            max_blocks_per_sm: 24,
+            max_threads_per_block: 1024,
+            regs_per_sm: 65536,
+            max_regs_per_thread: 255,
+            shared_mem_per_sm: 100 * 1024,
+            max_shared_per_block: 99 * 1024,
+            dram_bw_gbs: 1008.0,
+            l2_size: 72 * 1024 * 1024,
+            l2_bw_gbs: 5200.0,
+            shared_bw_per_sm_gbs: 160.0,
+            constant_power_w: 45.0,
+            static_power_full_w: 110.0,
+            static_floor_frac: 0.35,
+            energy_per_flop_pj: 0.52,
+            energy_per_intop_pj: 0.33,
+            energy_per_dram_byte_pj: 30.0,
+            energy_per_l2_byte_pj: 3.8,
+            energy_per_shared_byte_pj: 0.9,
+            energy_per_reg_byte_pj: 0.2,
+            energy_per_mem_issue_pj: 20.0,
+            launch_energy_uj: 12.0,
+            launch_latency_us: 2.5,
+            tdp_w: 450.0,
+            thermal_power_slope_per_c: 0.004,
+            steady_temp_c: 66.0,
+            idle_temp_c: 35.0,
+        }
+    }
+
+    /// NVIDIA P100 (Pascal, GP100). 56 SMs x 64 FP32 cores; HBM2.
+    pub fn p100() -> GpuSpec {
+        GpuSpec {
+            arch_name: "p100",
+            num_sms: 56,
+            cores_per_sm: 64,
+            sm_clock_ghz: 1.30,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            max_threads_per_block: 1024,
+            regs_per_sm: 65536,
+            max_regs_per_thread: 255,
+            shared_mem_per_sm: 64 * 1024,
+            max_shared_per_block: 48 * 1024,
+            dram_bw_gbs: 732.0,
+            l2_size: 4 * 1024 * 1024,
+            l2_bw_gbs: 1600.0,
+            shared_bw_per_sm_gbs: 64.0,
+            constant_power_w: 50.0,
+            static_power_full_w: 75.0,
+            static_floor_frac: 0.45,
+            energy_per_flop_pj: 1.6,
+            energy_per_intop_pj: 0.9,
+            energy_per_dram_byte_pj: 31.0,
+            energy_per_l2_byte_pj: 6.5,
+            energy_per_shared_byte_pj: 1.6,
+            energy_per_reg_byte_pj: 0.35,
+            energy_per_mem_issue_pj: 40.0,
+            launch_energy_uj: 22.0,
+            launch_latency_us: 4.0,
+            tdp_w: 300.0,
+            thermal_power_slope_per_c: 0.004,
+            steady_temp_c: 60.0,
+            idle_temp_c: 32.0,
+        }
+    }
+
+    /// NVIDIA V100 (Volta, GV100). 80 SMs x 64 FP32 cores; HBM2.
+    pub fn v100() -> GpuSpec {
+        GpuSpec {
+            arch_name: "v100",
+            num_sms: 80,
+            cores_per_sm: 64,
+            sm_clock_ghz: 1.38,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            max_threads_per_block: 1024,
+            regs_per_sm: 65536,
+            max_regs_per_thread: 255,
+            shared_mem_per_sm: 96 * 1024,
+            max_shared_per_block: 96 * 1024,
+            dram_bw_gbs: 900.0,
+            l2_size: 6 * 1024 * 1024,
+            l2_bw_gbs: 2100.0,
+            shared_bw_per_sm_gbs: 96.0,
+            constant_power_w: 52.0,
+            static_power_full_w: 82.0,
+            static_floor_frac: 0.44,
+            energy_per_flop_pj: 1.1,
+            energy_per_intop_pj: 0.6,
+            energy_per_dram_byte_pj: 26.0,
+            energy_per_l2_byte_pj: 5.5,
+            energy_per_shared_byte_pj: 1.3,
+            energy_per_reg_byte_pj: 0.3,
+            energy_per_mem_issue_pj: 34.0,
+            launch_energy_uj: 20.0,
+            launch_latency_us: 3.5,
+            tdp_w: 300.0,
+            thermal_power_slope_per_c: 0.0038,
+            steady_temp_c: 61.0,
+            idle_temp_c: 33.0,
+        }
+    }
+
+    /// Peak FP32 throughput in GFLOP/s (2 FLOPs per core per cycle: FMA).
+    pub fn peak_gflops(&self) -> f64 {
+        self.num_sms as f64 * self.cores_per_sm as f64 * self.sm_clock_ghz * 2.0
+    }
+
+    /// Peak FP32 throughput of a single SM, GFLOP/s.
+    pub fn peak_gflops_per_sm(&self) -> f64 {
+        self.cores_per_sm as f64 * self.sm_clock_ghz * 2.0
+    }
+
+    /// Roofline arithmetic-intensity break-even point (FLOP per DRAM byte).
+    pub fn roofline_knee(&self) -> f64 {
+        self.peak_gflops() / self.dram_bw_gbs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arch_roundtrip_names() {
+        for arch in GpuArch::ALL {
+            assert_eq!(GpuArch::parse(arch.name()), Some(arch));
+        }
+        assert_eq!(GpuArch::parse("4090"), Some(GpuArch::Rtx4090));
+        assert_eq!(GpuArch::parse("nope"), None);
+    }
+
+    #[test]
+    fn a100_peak_matches_spec_sheet() {
+        // A100 FP32 peak is ~19.5 TFLOP/s.
+        let s = GpuSpec::a100();
+        let peak = s.peak_gflops();
+        assert!((19_000.0..20_500.0).contains(&peak), "peak={peak}");
+        assert_eq!(s.num_sms, 108);
+    }
+
+    #[test]
+    fn rtx4090_peak_matches_spec_sheet() {
+        // 4090 FP32 peak is ~82.6 TFLOP/s.
+        let peak = GpuSpec::rtx4090().peak_gflops();
+        assert!((78_000.0..86_000.0).contains(&peak), "peak={peak}");
+    }
+
+    #[test]
+    fn all_specs_are_sane() {
+        for arch in GpuArch::ALL {
+            let s = arch.spec();
+            assert!(s.num_sms > 0);
+            assert!(s.sm_clock_ghz > 0.5 && s.sm_clock_ghz < 4.0);
+            assert!(s.constant_power_w > 0.0);
+            assert!(s.static_power_full_w > 0.0);
+            assert!((0.0..1.0).contains(&s.static_floor_frac));
+            // DRAM access must cost more energy than L2, than shared, than regs.
+            assert!(s.energy_per_dram_byte_pj > s.energy_per_l2_byte_pj);
+            assert!(s.energy_per_l2_byte_pj > s.energy_per_shared_byte_pj);
+            assert!(s.energy_per_shared_byte_pj > s.energy_per_reg_byte_pj);
+            assert!(s.tdp_w > s.constant_power_w + s.static_power_full_w);
+            assert!(s.steady_temp_c > s.idle_temp_c);
+        }
+    }
+
+    #[test]
+    fn roofline_knee_is_reasonable() {
+        // A100: ~19500/2039 ≈ 9.6 FLOP/B.
+        let knee = GpuSpec::a100().roofline_knee();
+        assert!((8.0..12.0).contains(&knee), "knee={knee}");
+    }
+}

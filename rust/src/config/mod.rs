@@ -1,0 +1,472 @@
+//! Configuration system: typed configs for search, measurement, and
+//! experiments, loadable from TOML files with CLI overrides.
+//!
+//! Every experiment in the paper is reproducible from a config + seed;
+//! [`SearchConfig::validate`] rejects inconsistent settings up front so
+//! a bad flag fails fast instead of mid-search.
+
+pub mod gpu_specs;
+
+pub use gpu_specs::{GpuArch, GpuSpec};
+
+
+/// Which objective drives parent selection in the evolutionary search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Ansor-style baseline: latency only (§7 baseline).
+    LatencyOnly,
+    /// The paper's method: latency-first, then energy (Algorithm 1),
+    /// with the dynamic-k cost-model updating strategy.
+    EnergyAware,
+    /// Ablation: energy-aware but every candidate is NVML-measured
+    /// (no cost model) — the "NVML-only" configuration of Figure 5.
+    EnergyNvmlOnly,
+}
+
+impl SearchMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SearchMode::LatencyOnly => "latency_only",
+            SearchMode::EnergyAware => "energy_aware",
+            SearchMode::EnergyNvmlOnly => "energy_nvml_only",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SearchMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "latency" | "latency_only" | "ansor" => Some(SearchMode::LatencyOnly),
+            "energy" | "energy_aware" | "ours" => Some(SearchMode::EnergyAware),
+            "nvml" | "energy_nvml_only" | "nvml_only" => Some(SearchMode::EnergyNvmlOnly),
+            _ => None,
+        }
+    }
+}
+
+/// Full configuration of one search run (Algorithm 1 hyperparameters
+/// plus population/budget knobs).
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// Target GPU architecture.
+    pub gpu: GpuArch,
+    /// Search objective mode.
+    pub mode: SearchMode,
+    /// RNG seed — all runs are deterministic given the seed.
+    pub seed: u64,
+    /// Population size per genetic generation.
+    pub population: usize,
+    /// `M` in Algorithm 1: number of lowest-latency kernels kept per round.
+    pub m_latency_keep: usize,
+    /// Initial `k` (fraction of `M` that is NVML-measured). Paper: 1.0.
+    pub k_init: f64,
+    /// `µ` in Algorithm 1: SNR threshold (dB) below which more
+    /// measurements are scheduled.
+    pub mu_snr_db: f64,
+    /// Step applied to `k` each round. Paper: 0.2.
+    pub k_step: f64,
+    /// Floor for `k·M` so the model never fully starves of fresh
+    /// measurements (Algorithm 1 allows k = 0; a floor of 1 keeps the
+    /// SNR signal alive; set 0 for the paper-literal behaviour).
+    pub min_measure_per_round: usize,
+    /// Number of genetic rounds (including the initial random round).
+    pub rounds: usize,
+    /// Convergence: stop early after this many rounds without
+    /// best-objective improvement (0 disables early stop).
+    pub patience: usize,
+    /// Mutation probability per tiling knob during reproduction.
+    pub mutation_prob: f64,
+    /// Crossover probability during reproduction.
+    pub crossover_prob: f64,
+    /// Fraction of each generation filled with fresh random immigrants.
+    pub immigrant_frac: f64,
+    /// NVML measurement settings.
+    pub nvml: NvmlConfig,
+    /// Cost model hyperparameters.
+    pub cost_model: CostModelConfig,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            gpu: GpuArch::A100,
+            mode: SearchMode::EnergyAware,
+            seed: 0,
+            population: 128,
+            m_latency_keep: 32,
+            k_init: 1.0,
+            mu_snr_db: 0.0,
+            k_step: 0.2,
+            min_measure_per_round: 1,
+            rounds: 12,
+            patience: 5,
+            mutation_prob: 0.35,
+            crossover_prob: 0.5,
+            immigrant_frac: 0.1,
+            nvml: NvmlConfig::default(),
+            cost_model: CostModelConfig::default(),
+        }
+    }
+}
+
+impl SearchConfig {
+    /// Validate internal consistency; returns a human-readable error.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.population == 0 {
+            return Err("population must be > 0".into());
+        }
+        if self.m_latency_keep == 0 || self.m_latency_keep > self.population {
+            return Err(format!(
+                "m_latency_keep ({}) must be in 1..=population ({})",
+                self.m_latency_keep, self.population
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.k_init) {
+            return Err(format!("k_init ({}) must be in [0, 1]", self.k_init));
+        }
+        if !(0.0..=1.0).contains(&self.k_step) {
+            return Err(format!("k_step ({}) must be in [0, 1]", self.k_step));
+        }
+        if self.rounds < 2 {
+            return Err("rounds must be >= 2 (initial + at least one genetic round)".into());
+        }
+        for (name, p) in [
+            ("mutation_prob", self.mutation_prob),
+            ("crossover_prob", self.crossover_prob),
+            ("immigrant_frac", self.immigrant_frac),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("{name} ({p}) must be in [0, 1]"));
+            }
+        }
+        self.nvml.validate()?;
+        self.cost_model.validate()?;
+        Ok(())
+    }
+
+    /// Load from a TOML file. Missing keys keep their defaults; unknown
+    /// keys are rejected so typos fail fast.
+    pub fn from_toml_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let cfg = Self::from_toml_str(&text).map_err(|e| anyhow::anyhow!(e))?;
+        Ok(cfg)
+    }
+
+    /// Parse from TOML text (subset parser; see [`crate::util::toml_lite`]).
+    pub fn from_toml_str(text: &str) -> Result<Self, String> {
+        let doc = crate::util::TomlDoc::parse(text)?;
+        let known = [
+            "gpu",
+            "mode",
+            "seed",
+            "population",
+            "m_latency_keep",
+            "k_init",
+            "mu_snr_db",
+            "k_step",
+            "min_measure_per_round",
+            "rounds",
+            "patience",
+            "mutation_prob",
+            "crossover_prob",
+            "immigrant_frac",
+            "nvml.sampling_hz",
+            "nvml.min_samples",
+            "nvml.max_reps",
+            "nvml.warmup_s",
+            "nvml.power_noise_rel",
+            "nvml.latency_noise_rel",
+            "cost_model.n_trees",
+            "cost_model.max_depth",
+            "cost_model.learning_rate",
+            "cost_model.lambda",
+            "cost_model.min_child_weight",
+            "cost_model.n_bins",
+            "cost_model.colsample",
+            "cost_model.weighted_loss",
+            "cost_model.max_train_samples",
+        ];
+        for key in doc.entries.keys() {
+            if !known.contains(&key.as_str()) {
+                return Err(format!("unknown config key '{key}'"));
+            }
+        }
+        let d = SearchConfig::default();
+        let cfg = SearchConfig {
+            gpu: {
+                let name = doc.str_or("gpu", d.gpu.name());
+                GpuArch::parse(name).ok_or_else(|| format!("unknown gpu '{name}'"))?
+            },
+            mode: {
+                let name = doc.str_or("mode", d.mode.name());
+                SearchMode::parse(name).ok_or_else(|| format!("unknown mode '{name}'"))?
+            },
+            seed: doc.u64_or("seed", d.seed),
+            population: doc.usize_or("population", d.population),
+            m_latency_keep: doc.usize_or("m_latency_keep", d.m_latency_keep),
+            k_init: doc.f64_or("k_init", d.k_init),
+            mu_snr_db: doc.f64_or("mu_snr_db", d.mu_snr_db),
+            k_step: doc.f64_or("k_step", d.k_step),
+            min_measure_per_round: doc.usize_or("min_measure_per_round", d.min_measure_per_round),
+            rounds: doc.usize_or("rounds", d.rounds),
+            patience: doc.usize_or("patience", d.patience),
+            mutation_prob: doc.f64_or("mutation_prob", d.mutation_prob),
+            crossover_prob: doc.f64_or("crossover_prob", d.crossover_prob),
+            immigrant_frac: doc.f64_or("immigrant_frac", d.immigrant_frac),
+            nvml: NvmlConfig {
+                sampling_hz: doc.f64_or("nvml.sampling_hz", d.nvml.sampling_hz),
+                min_samples: doc.usize_or("nvml.min_samples", d.nvml.min_samples),
+                max_reps: doc.usize_or("nvml.max_reps", d.nvml.max_reps),
+                warmup_s: doc.f64_or("nvml.warmup_s", d.nvml.warmup_s),
+                power_noise_rel: doc.f64_or("nvml.power_noise_rel", d.nvml.power_noise_rel),
+                latency_noise_rel: doc.f64_or("nvml.latency_noise_rel", d.nvml.latency_noise_rel),
+            },
+            cost_model: CostModelConfig {
+                n_trees: doc.usize_or("cost_model.n_trees", d.cost_model.n_trees),
+                max_depth: doc.usize_or("cost_model.max_depth", d.cost_model.max_depth),
+                learning_rate: doc.f64_or("cost_model.learning_rate", d.cost_model.learning_rate),
+                lambda: doc.f64_or("cost_model.lambda", d.cost_model.lambda),
+                min_child_weight: doc
+                    .f64_or("cost_model.min_child_weight", d.cost_model.min_child_weight),
+                n_bins: doc.usize_or("cost_model.n_bins", d.cost_model.n_bins),
+                colsample: doc.f64_or("cost_model.colsample", d.cost_model.colsample),
+                weighted_loss: doc.bool_or("cost_model.weighted_loss", d.cost_model.weighted_loss),
+                max_train_samples: doc
+                    .usize_or("cost_model.max_train_samples", d.cost_model.max_train_samples),
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to TOML (round-trips through [`Self::from_toml_str`]).
+    pub fn to_toml(&self) -> String {
+        format!(
+            "gpu = \"{}\"\nmode = \"{}\"\nseed = {}\npopulation = {}\n\
+             m_latency_keep = {}\nk_init = {}\nmu_snr_db = {}\nk_step = {}\n\
+             min_measure_per_round = {}\nrounds = {}\npatience = {}\n\
+             mutation_prob = {}\ncrossover_prob = {}\nimmigrant_frac = {}\n\n\
+             [nvml]\nsampling_hz = {}\nmin_samples = {}\nmax_reps = {}\n\
+             warmup_s = {}\npower_noise_rel = {}\nlatency_noise_rel = {}\n\n\
+             [cost_model]\nn_trees = {}\nmax_depth = {}\nlearning_rate = {}\n\
+             lambda = {}\nmin_child_weight = {}\nn_bins = {}\ncolsample = {}\n\
+             weighted_loss = {}\nmax_train_samples = {}\n",
+            self.gpu.name(),
+            self.mode.name(),
+            self.seed,
+            self.population,
+            self.m_latency_keep,
+            fmt_f(self.k_init),
+            fmt_f(self.mu_snr_db),
+            fmt_f(self.k_step),
+            self.min_measure_per_round,
+            self.rounds,
+            self.patience,
+            fmt_f(self.mutation_prob),
+            fmt_f(self.crossover_prob),
+            fmt_f(self.immigrant_frac),
+            fmt_f(self.nvml.sampling_hz),
+            self.nvml.min_samples,
+            self.nvml.max_reps,
+            fmt_f(self.nvml.warmup_s),
+            fmt_f(self.nvml.power_noise_rel),
+            fmt_f(self.nvml.latency_noise_rel),
+            self.cost_model.n_trees,
+            self.cost_model.max_depth,
+            fmt_f(self.cost_model.learning_rate),
+            fmt_f(self.cost_model.lambda),
+            fmt_f(self.cost_model.min_child_weight),
+            self.cost_model.n_bins,
+            fmt_f(self.cost_model.colsample),
+            self.cost_model.weighted_loss,
+            self.cost_model.max_train_samples,
+        )
+    }
+}
+
+/// Format a float so the TOML-lite parser reads it back as a float.
+fn fmt_f(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{x:.1}")
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Simulated-NVML measurement settings (§4.4, §5.1).
+#[derive(Debug, Clone)]
+pub struct NvmlConfig {
+    /// Power sampling rate, Hz. NVML supports 30–50 Hz (§5.1).
+    pub sampling_hz: f64,
+    /// Minimum number of power samples needed for one measurement; the
+    /// kernel is re-executed until this many samples are collected.
+    pub min_samples: usize,
+    /// Upper bound on kernel repetitions per measurement.
+    pub max_reps: usize,
+    /// Warm-up (pre-heating) time in seconds before a measurement batch
+    /// when the GPU is cold (§4.4).
+    pub warmup_s: f64,
+    /// Relative std-dev of per-sample power noise.
+    pub power_noise_rel: f64,
+    /// Relative std-dev of latency timing noise.
+    pub latency_noise_rel: f64,
+}
+
+impl Default for NvmlConfig {
+    fn default() -> Self {
+        NvmlConfig {
+            sampling_hz: 45.0,
+            min_samples: 50,
+            max_reps: 20_000,
+            warmup_s: 3.0,
+            power_noise_rel: 0.015,
+            latency_noise_rel: 0.01,
+        }
+    }
+}
+
+impl NvmlConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(1.0..=1000.0).contains(&self.sampling_hz) {
+            return Err(format!("sampling_hz ({}) out of range", self.sampling_hz));
+        }
+        if self.min_samples == 0 {
+            return Err("min_samples must be > 0".into());
+        }
+        if self.warmup_s < 0.0 {
+            return Err("warmup_s must be >= 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// Hyperparameters for the GBDT energy cost model (§5.4).
+#[derive(Debug, Clone)]
+pub struct CostModelConfig {
+    /// Number of boosting rounds (trees).
+    pub n_trees: usize,
+    /// Maximum tree depth.
+    pub max_depth: usize,
+    /// Learning rate (shrinkage).
+    pub learning_rate: f64,
+    /// L2 regularization on leaf weights (xgboost lambda).
+    pub lambda: f64,
+    /// Minimum hessian sum per leaf (xgboost min_child_weight).
+    pub min_child_weight: f64,
+    /// Number of histogram bins per feature.
+    pub n_bins: usize,
+    /// Feature subsampling rate per tree.
+    pub colsample: f64,
+    /// Use the paper's Eq. 1 weighted loss (weight = 1 / E_m).
+    pub weighted_loss: bool,
+    /// Cap on retained training samples (sliding window over rounds;
+    /// 0 = unlimited).
+    pub max_train_samples: usize,
+}
+
+impl Default for CostModelConfig {
+    fn default() -> Self {
+        CostModelConfig {
+            n_trees: 80,
+            max_depth: 6,
+            learning_rate: 0.15,
+            lambda: 1.0,
+            min_child_weight: 1e-4,
+            n_bins: 32,
+            colsample: 0.9,
+            weighted_loss: true,
+            max_train_samples: 0,
+        }
+    }
+}
+
+impl CostModelConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_trees == 0 {
+            return Err("n_trees must be > 0".into());
+        }
+        if self.max_depth == 0 || self.max_depth > 16 {
+            return Err("max_depth must be in 1..=16".into());
+        }
+        if !(0.0..=1.0).contains(&self.learning_rate) || self.learning_rate == 0.0 {
+            return Err("learning_rate must be in (0, 1]".into());
+        }
+        if self.n_bins < 2 {
+            return Err("n_bins must be >= 2".into());
+        }
+        if !(0.0..=1.0).contains(&self.colsample) || self.colsample == 0.0 {
+            return Err("colsample must be in (0, 1]".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_validates() {
+        SearchConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let mut c = SearchConfig::default();
+        c.population = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = SearchConfig::default();
+        c.m_latency_keep = c.population + 1;
+        assert!(c.validate().is_err());
+
+        let mut c = SearchConfig::default();
+        c.k_init = 1.5;
+        assert!(c.validate().is_err());
+
+        let mut c = SearchConfig::default();
+        c.rounds = 1;
+        assert!(c.validate().is_err());
+
+        let mut c = SearchConfig::default();
+        c.cost_model.n_trees = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = SearchConfig::default();
+        c.nvml.min_samples = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = SearchConfig::default();
+        let text = c.to_toml();
+        let back = SearchConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.population, c.population);
+        assert_eq!(back.gpu, c.gpu);
+        assert_eq!(back.mode, c.mode);
+        assert!((back.mu_snr_db - c.mu_snr_db).abs() < 1e-12);
+        assert_eq!(back.cost_model.n_trees, c.cost_model.n_trees);
+        assert_eq!(back.nvml.min_samples, c.nvml.min_samples);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(SearchConfig::from_toml_str("typo_key = 3").is_err());
+        assert!(SearchConfig::from_toml_str("gpu = \"not_a_gpu\"").is_err());
+    }
+
+    #[test]
+    fn partial_toml_keeps_defaults() {
+        let c = SearchConfig::from_toml_str("population = 64\n[nvml]\nwarmup_s = 1.0\n").unwrap();
+        assert_eq!(c.population, 64);
+        assert!((c.nvml.warmup_s - 1.0).abs() < 1e-12);
+        assert_eq!(c.rounds, SearchConfig::default().rounds);
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(SearchMode::parse("ansor"), Some(SearchMode::LatencyOnly));
+        assert_eq!(SearchMode::parse("ours"), Some(SearchMode::EnergyAware));
+        assert_eq!(SearchMode::parse("nvml"), Some(SearchMode::EnergyNvmlOnly));
+        assert_eq!(SearchMode::parse("x"), None);
+    }
+}

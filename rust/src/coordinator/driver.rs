@@ -1,0 +1,139 @@
+//! The suite driver: the top-level L3 entry point that the CLI and the
+//! experiments use to run batches of searches across the worker pool,
+//! with event logging and aggregate metrics.
+
+use super::events::EventLog;
+use super::metrics::SuiteMetrics;
+use super::workers::{JobResult, SearchJob, WorkerPool};
+use crate::util::Json;
+
+/// Driver configuration.
+#[derive(Debug, Clone)]
+pub struct DriverConfig {
+    /// Parallel search workers (simulated GPUs in the tuning fleet).
+    pub n_workers: usize,
+    /// Bounded job-queue capacity (backpressure threshold).
+    pub queue_cap: usize,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        DriverConfig {
+            n_workers: crate::util::parallel::default_workers().min(8),
+            queue_cap: 16,
+        }
+    }
+}
+
+/// Suite driver with optional JSONL event log.
+pub struct Driver {
+    cfg: DriverConfig,
+    log: Option<EventLog>,
+}
+
+impl Driver {
+    pub fn new(cfg: DriverConfig) -> Driver {
+        Driver { cfg, log: None }
+    }
+
+    pub fn with_log(mut self, log: EventLog) -> Driver {
+        self.log = Some(log);
+        self
+    }
+
+    /// Run all jobs; returns (results in submission order, aggregate
+    /// metrics).
+    pub fn run_suite(&self, jobs: Vec<SearchJob>) -> (Vec<JobResult>, SuiteMetrics) {
+        if let Some(log) = &self.log {
+            log.emit(
+                "suite_started",
+                vec![
+                    ("n_jobs", Json::num(jobs.len() as f64)),
+                    ("n_workers", Json::num(self.cfg.n_workers as f64)),
+                ],
+            );
+        }
+        let mut pool = WorkerPool::new(self.cfg.n_workers, self.cfg.queue_cap);
+        for job in jobs {
+            if let Some(log) = &self.log {
+                log.emit(
+                    "job_submitted",
+                    vec![
+                        ("name", Json::str(job.name.clone())),
+                        ("workload", Json::str(job.workload.to_string())),
+                        ("mode", Json::str(job.cfg.mode.name())),
+                    ],
+                );
+            }
+            pool.submit(job);
+        }
+        let results = pool.finish();
+
+        let mut metrics = SuiteMetrics::default();
+        for r in &results {
+            metrics.absorb(&r.outcome);
+            if let Some(log) = &self.log {
+                log.emit(
+                    "job_done",
+                    vec![
+                        ("name", Json::str(r.name.clone())),
+                        ("worker", Json::num(r.worker as f64)),
+                        ("best_latency_ms", Json::num(r.outcome.best.latency_s * 1e3)),
+                        ("best_energy_mj", Json::num(r.outcome.best.energy_j * 1e3)),
+                        ("best_power_w", Json::num(r.outcome.best.avg_power_w)),
+                        (
+                            "n_energy_measurements",
+                            Json::num(r.outcome.n_energy_measurements() as f64),
+                        ),
+                        ("sim_time_s", Json::num(r.outcome.clock.total_s)),
+                    ],
+                );
+            }
+        }
+        if let Some(log) = &self.log {
+            log.emit("suite_done", vec![("summary", Json::str(metrics.summary()))]);
+        }
+        (results, metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuArch, SearchConfig, SearchMode};
+    use crate::workload::suites;
+
+    #[test]
+    fn driver_runs_suite_with_event_log() {
+        let (log, buf) = EventLog::to_vec();
+        let driver =
+            Driver::new(DriverConfig { n_workers: 2, queue_cap: 2 }).with_log(log);
+        let cfg = SearchConfig {
+            gpu: GpuArch::A100,
+            mode: SearchMode::EnergyAware,
+            population: 24,
+            m_latency_keep: 6,
+            rounds: 3,
+            patience: 0,
+            ..Default::default()
+        };
+        let jobs = vec![
+            SearchJob { name: "MM1".into(), workload: suites::MM1, cfg: cfg.clone() },
+            SearchJob { name: "MV3".into(), workload: suites::MV3, cfg },
+        ];
+        let (results, metrics) = driver.run_suite(jobs);
+        assert_eq!(results.len(), 2);
+        assert_eq!(metrics.n_searches, 2);
+
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let events: Vec<String> = text
+            .lines()
+            .map(|l| {
+                Json::parse(l).unwrap().get("event").unwrap().as_str().unwrap().to_string()
+            })
+            .collect();
+        assert_eq!(events[0], "suite_started");
+        assert_eq!(events.last().unwrap(), "suite_done");
+        assert_eq!(events.iter().filter(|e| *e == "job_done").count(), 2);
+    }
+}

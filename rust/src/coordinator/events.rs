@@ -1,0 +1,82 @@
+//! JSONL event log: one line per search/coordination event, consumable
+//! by external tooling (and by the tests, which parse it back).
+
+use crate::util::Json;
+use std::io::Write;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A thread-safe JSONL sink.
+pub struct EventLog {
+    sink: Mutex<Box<dyn Write + Send>>,
+}
+
+impl EventLog {
+    /// Log to a file (created/truncated).
+    pub fn to_file(path: &Path) -> anyhow::Result<EventLog> {
+        let f = std::fs::File::create(path)?;
+        Ok(EventLog { sink: Mutex::new(Box::new(std::io::BufWriter::new(f))) })
+    }
+
+    /// Log to an in-memory buffer (testing) — retrieve with `drain_vec`.
+    pub fn to_vec() -> (EventLog, std::sync::Arc<Mutex<Vec<u8>>>) {
+        let buf = std::sync::Arc::new(Mutex::new(Vec::new()));
+        let writer = SharedVecWriter(buf.clone());
+        (EventLog { sink: Mutex::new(Box::new(writer)) }, buf)
+    }
+
+    /// Append one event (object with at least "event" and "ts" fields).
+    pub fn emit(&self, event: &str, fields: Vec<(&str, Json)>) {
+        let mut all = vec![
+            ("event", Json::str(event)),
+            ("ts_unix", Json::num(unix_now())),
+        ];
+        all.extend(fields);
+        let line = Json::obj(all).to_string();
+        let mut sink = self.sink.lock().expect("event sink");
+        let _ = writeln!(sink, "{line}");
+        let _ = sink.flush();
+    }
+}
+
+fn unix_now() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+struct SharedVecWriter(std::sync::Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedVecWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().expect("vec writer").extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_are_valid_jsonl() {
+        let (log, buf) = EventLog::to_vec();
+        log.emit("search_started", vec![("workload", Json::str("MM1"))]);
+        log.emit("round_done", vec![("round", Json::num(3.0)), ("k", Json::num(0.8))]);
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let v = Json::parse(line).expect("valid json");
+            assert!(v.get("event").is_some());
+            assert!(v.get("ts_unix").is_some());
+        }
+        let second = Json::parse(text.lines().nth(1).unwrap()).unwrap();
+        assert_eq!(second.get("k").unwrap().as_f64(), Some(0.8));
+    }
+}

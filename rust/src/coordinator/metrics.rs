@@ -1,0 +1,86 @@
+//! Aggregate metrics across a batch of searches (suite-level telemetry
+//! printed at the end of experiments and logged as a summary event).
+
+use crate::nvml::MeasurementClock;
+use crate::search::SearchOutcome;
+
+/// Suite-level aggregate counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SuiteMetrics {
+    pub n_searches: usize,
+    pub total_energy_measurements: usize,
+    pub total_latency_timings: usize,
+    pub total_sim_time_s: f64,
+    pub total_warmup_s: f64,
+    pub total_model_time_s: f64,
+    pub total_rounds: usize,
+}
+
+impl SuiteMetrics {
+    pub fn absorb(&mut self, out: &SearchOutcome) {
+        self.n_searches += 1;
+        self.total_energy_measurements += out.clock.n_energy_measurements;
+        self.total_latency_timings += out.clock.n_latency_timings;
+        self.total_sim_time_s += out.clock.total_s;
+        self.total_warmup_s += out.clock.warmup_s;
+        self.total_model_time_s += out.clock.model_predict_s + out.clock.model_train_s;
+        self.total_rounds += out.rounds.len();
+    }
+
+    pub fn absorb_clock(&mut self, clock: &MeasurementClock) {
+        self.total_energy_measurements += clock.n_energy_measurements;
+        self.total_latency_timings += clock.n_latency_timings;
+        self.total_sim_time_s += clock.total_s;
+    }
+
+    /// Mean energy measurements per search round (the quantity the
+    /// dynamic-k strategy reduces).
+    pub fn measurements_per_round(&self) -> f64 {
+        if self.total_rounds == 0 {
+            return 0.0;
+        }
+        self.total_energy_measurements as f64 / self.total_rounds as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "searches={} rounds={} energy_meas={} lat_timings={} sim_time={:.1}s (warmup {:.1}s, model {:.2}s)",
+            self.n_searches,
+            self.total_rounds,
+            self.total_energy_measurements,
+            self.total_latency_timings,
+            self.total_sim_time_s,
+            self.total_warmup_s,
+            self.total_model_time_s,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuArch, SearchConfig, SearchMode};
+    use crate::search::run_search;
+    use crate::workload::suites;
+
+    #[test]
+    fn metrics_absorb_outcomes() {
+        let cfg = SearchConfig {
+            gpu: GpuArch::A100,
+            mode: SearchMode::EnergyAware,
+            population: 32,
+            m_latency_keep: 8,
+            rounds: 3,
+            patience: 0,
+            ..Default::default()
+        };
+        let out = run_search(suites::MM1, &cfg);
+        let mut m = SuiteMetrics::default();
+        m.absorb(&out);
+        assert_eq!(m.n_searches, 1);
+        assert!(m.total_energy_measurements >= 8);
+        assert!(m.total_sim_time_s > 0.0);
+        assert!(m.measurements_per_round() > 0.0);
+        assert!(m.summary().contains("searches=1"));
+    }
+}

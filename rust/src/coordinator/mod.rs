@@ -1,0 +1,12 @@
+//! L3 coordination: the multi-device search driver (worker pool with
+//! bounded-queue backpressure), suite metrics, and the JSONL event log.
+
+pub mod driver;
+pub mod events;
+pub mod metrics;
+pub mod workers;
+
+pub use driver::{Driver, DriverConfig};
+pub use events::EventLog;
+pub use metrics::SuiteMetrics;
+pub use workers::{JobResult, SearchJob, WorkerPool};

@@ -1,0 +1,177 @@
+//! The measurement-worker pool: a bounded-queue, multi-device job
+//! executor.
+//!
+//! The paper's framework tunes one operator per GPU; a tuning *cluster*
+//! runs many searches across a pool of devices. This module models that
+//! topology: `n_workers` OS threads, each owning one simulated GPU
+//! (thermal state and measurement clock are per-device), pulling
+//! [`SearchJob`]s from a bounded channel — submission blocks when the
+//! queue is full (backpressure), exactly like a real tuning fleet.
+
+use crate::config::SearchConfig;
+use crate::search::{run_search, SearchOutcome};
+use crate::workload::Workload;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// One search to run on some device.
+#[derive(Debug, Clone)]
+pub struct SearchJob {
+    /// Display/reporting name (e.g. "MM1/energy").
+    pub name: String,
+    pub workload: Workload,
+    pub cfg: SearchConfig,
+}
+
+/// A completed job.
+pub struct JobResult {
+    pub index: usize,
+    pub name: String,
+    pub outcome: SearchOutcome,
+    /// Which worker/device executed it.
+    pub worker: usize,
+}
+
+/// Fixed-size pool of search workers over a bounded job queue.
+pub struct WorkerPool {
+    tx: Option<SyncSender<(usize, SearchJob)>>,
+    results: Arc<Mutex<Vec<JobResult>>>,
+    handles: Vec<JoinHandle<()>>,
+    submitted: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `n_workers` workers with a queue bound of `queue_cap`.
+    pub fn new(n_workers: usize, queue_cap: usize) -> WorkerPool {
+        let (tx, rx) = sync_channel::<(usize, SearchJob)>(queue_cap.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let results: Arc<Mutex<Vec<JobResult>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for worker in 0..n_workers.max(1) {
+            let rx: Arc<Mutex<Receiver<(usize, SearchJob)>>> = rx.clone();
+            let results = results.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().expect("job queue");
+                    guard.recv()
+                };
+                match job {
+                    Ok((index, job)) => {
+                        let outcome = run_search(job.workload, &job.cfg);
+                        results.lock().expect("results").push(JobResult {
+                            index,
+                            name: job.name,
+                            outcome,
+                            worker,
+                        });
+                    }
+                    Err(_) => break, // queue closed
+                }
+            }));
+        }
+        WorkerPool { tx: Some(tx), results, handles, submitted: 0 }
+    }
+
+    /// Submit a job; blocks when the queue is full (backpressure).
+    pub fn submit(&mut self, job: SearchJob) {
+        let idx = self.submitted;
+        self.submitted += 1;
+        self.tx
+            .as_ref()
+            .expect("pool open")
+            .send((idx, job))
+            .expect("workers alive");
+    }
+
+    /// Close the queue, join all workers, and return results in
+    /// submission order.
+    pub fn finish(mut self) -> Vec<JobResult> {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            h.join().expect("worker panicked");
+        }
+        let mut results =
+            Arc::try_unwrap(self.results).map(|m| m.into_inner().expect("results")).unwrap_or_default();
+        results.sort_by_key(|r| r.index);
+        results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuArch, SearchMode};
+    use crate::workload::suites;
+
+    fn quick_cfg(seed: u64, mode: SearchMode) -> SearchConfig {
+        SearchConfig {
+            gpu: GpuArch::A100,
+            mode,
+            population: 24,
+            m_latency_keep: 6,
+            rounds: 3,
+            patience: 0,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pool_runs_jobs_and_preserves_order() {
+        let mut pool = WorkerPool::new(4, 2);
+        let jobs = [
+            ("MM1", suites::MM1),
+            ("MV3", suites::MV3),
+            ("CONV2", suites::CONV2),
+            ("MM3", suites::MM3),
+        ];
+        for (i, (name, w)) in jobs.iter().enumerate() {
+            pool.submit(SearchJob {
+                name: name.to_string(),
+                workload: *w,
+                cfg: quick_cfg(i as u64, SearchMode::EnergyAware),
+            });
+        }
+        let results = pool.finish();
+        assert_eq!(results.len(), 4);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.index, i);
+            assert_eq!(r.name, jobs[i].0);
+            assert!(r.outcome.best.energy_j > 0.0);
+        }
+    }
+
+    #[test]
+    fn pool_results_match_serial_execution() {
+        // Parallel execution must not change outcomes (per-job RNG).
+        let cfg = quick_cfg(9, SearchMode::EnergyAware);
+        let serial = run_search(suites::MM1, &cfg);
+        let mut pool = WorkerPool::new(3, 1);
+        for _ in 0..3 {
+            pool.submit(SearchJob {
+                name: "mm1".into(),
+                workload: suites::MM1,
+                cfg: cfg.clone(),
+            });
+        }
+        let results = pool.finish();
+        for r in &results {
+            assert_eq!(r.outcome.best.schedule, serial.best.schedule);
+            assert_eq!(r.outcome.best.energy_j, serial.best.energy_j);
+        }
+    }
+
+    #[test]
+    fn single_worker_pool_works() {
+        let mut pool = WorkerPool::new(1, 1);
+        pool.submit(SearchJob {
+            name: "one".into(),
+            workload: suites::MM1,
+            cfg: quick_cfg(1, SearchMode::LatencyOnly),
+        });
+        let results = pool.finish();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].worker, 0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Training-set management for the energy cost model: feature rows +
+//! measured energies, with per-workload-search normalization and an
+//! optional sliding window over search rounds.
+
+use crate::features::FeatureVector;
+
+/// One (features, measured energy) training sample.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub features: Vec<f64>,
+    /// Measured energy, joules.
+    pub energy_j: f64,
+}
+
+/// The accumulated training data of one search.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    samples: Vec<Sample>,
+    /// 0 = unlimited; otherwise keep only the most recent N samples.
+    pub max_samples: usize,
+}
+
+impl Dataset {
+    pub fn new(max_samples: usize) -> Dataset {
+        Dataset { samples: Vec::new(), max_samples }
+    }
+
+    pub fn push(&mut self, features: &FeatureVector, energy_j: f64) {
+        debug_assert!(energy_j.is_finite() && energy_j > 0.0);
+        self.samples.push(Sample { features: features.as_slice().to_vec(), energy_j });
+        if self.max_samples > 0 && self.samples.len() > self.max_samples {
+            let drop = self.samples.len() - self.max_samples;
+            self.samples.drain(..drop);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    /// Normalization scale: the minimum measured energy (targets become
+    /// `E / E_min`, so the best kernel scores ~1.0 and the model's
+    /// "normalized energy score" is search-relative, as in §5.4).
+    pub fn energy_scale(&self) -> f64 {
+        self.samples
+            .iter()
+            .map(|s| s.energy_j)
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-12)
+    }
+
+    /// Materialize (X, y_normalized, w) for training. Weights implement
+    /// Eq. 1 (`1 / normalized energy`) when `weighted` is true.
+    pub fn training_arrays(&self, weighted: bool) -> (Vec<Vec<f64>>, Vec<f64>, Vec<f64>) {
+        let scale = self.energy_scale();
+        let mut x = Vec::with_capacity(self.samples.len());
+        let mut y = Vec::with_capacity(self.samples.len());
+        let mut w = Vec::with_capacity(self.samples.len());
+        for s in &self.samples {
+            let norm = s.energy_j / scale;
+            x.push(s.features.clone());
+            y.push(norm);
+            w.push(if weighted { crate::costmodel::loss::eq1_weight(norm) } else { 1.0 });
+        }
+        (x, y, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+    use crate::features::featurize;
+    use crate::schedule::{space::ScheduleSpace, Candidate};
+    use crate::workload::suites;
+
+    fn fv() -> FeatureVector {
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM1, &spec);
+        featurize(&Candidate::new(suites::MM1, space.fallback()), &spec)
+    }
+
+    #[test]
+    fn normalization_uses_min_energy() {
+        let mut d = Dataset::new(0);
+        d.push(&fv(), 2e-3);
+        d.push(&fv(), 8e-3);
+        let (_, y, w) = d.training_arrays(true);
+        assert!((y[0] - 1.0).abs() < 1e-12);
+        assert!((y[1] - 4.0).abs() < 1e-12);
+        // Eq. 1: weight = 1/E_norm -> lowest-energy sample weighted most.
+        assert!(w[0] > w[1]);
+    }
+
+    #[test]
+    fn sliding_window_evicts_oldest() {
+        let mut d = Dataset::new(3);
+        for i in 1..=5 {
+            d.push(&fv(), i as f64 * 1e-3);
+        }
+        assert_eq!(d.len(), 3);
+        let energies: Vec<f64> = d.samples().iter().map(|s| s.energy_j).collect();
+        assert_eq!(energies, vec![3e-3, 4e-3, 5e-3]);
+    }
+
+    #[test]
+    fn unweighted_mode_is_flat() {
+        let mut d = Dataset::new(0);
+        d.push(&fv(), 1e-3);
+        d.push(&fv(), 9e-3);
+        let (_, _, w) = d.training_arrays(false);
+        assert_eq!(w, vec![1.0, 1.0]);
+    }
+}

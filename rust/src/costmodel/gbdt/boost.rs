@@ -1,0 +1,317 @@
+//! Gradient boosting over regression trees (the XGBoost algorithm):
+//! sequential second-order boosting with shrinkage and column
+//! subsampling.
+
+use super::histogram::{BinCuts, BinnedMatrix};
+use super::tree::{Tree, TreeParams};
+use crate::costmodel::loss::Loss;
+use crate::util::parallel::par_map;
+use crate::util::Rng;
+
+/// Boosting hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct BoostParams {
+    pub n_trees: usize,
+    pub learning_rate: f64,
+    pub max_depth: usize,
+    pub lambda: f64,
+    pub min_child_weight: f64,
+    pub n_bins: usize,
+    pub colsample: f64,
+}
+
+impl Default for BoostParams {
+    fn default() -> Self {
+        BoostParams {
+            n_trees: 80,
+            learning_rate: 0.15,
+            max_depth: 6,
+            lambda: 1.0,
+            min_child_weight: 1e-4,
+            n_bins: 32,
+            colsample: 0.9,
+        }
+    }
+}
+
+/// A trained gradient-boosted tree ensemble.
+#[derive(Debug, Clone)]
+pub struct Gbdt {
+    pub base_score: f64,
+    pub learning_rate: f64,
+    pub trees: Vec<Tree>,
+    /// Flattened ensemble for the prediction hot path: all trees' nodes
+    /// in one contiguous array (EXPERIMENTS.md §Perf: ~2x faster than
+    /// walking per-tree `Node` enums).
+    flat: Vec<FlatNode>,
+    roots: Vec<u32>,
+}
+
+/// Branch-light node layout: `feature == u32::MAX` marks a leaf whose
+/// weight is stored in `threshold`.
+#[derive(Debug, Clone, Copy)]
+struct FlatNode {
+    feature: u32,
+    threshold: f64,
+    left: u32,
+    right: u32,
+}
+
+fn flatten(trees: &[Tree]) -> (Vec<FlatNode>, Vec<u32>) {
+    use crate::costmodel::gbdt::tree::Node;
+    let mut flat = Vec::new();
+    let mut roots = Vec::with_capacity(trees.len());
+    for t in trees {
+        let base = flat.len() as u32;
+        roots.push(base);
+        for n in &t.nodes {
+            flat.push(match n {
+                Node::Leaf { weight } => FlatNode {
+                    feature: u32::MAX,
+                    threshold: *weight,
+                    left: 0,
+                    right: 0,
+                },
+                Node::Split { feature, threshold, left, right, .. } => FlatNode {
+                    feature: *feature as u32,
+                    threshold: *threshold,
+                    left: base + *left as u32,
+                    right: base + *right as u32,
+                },
+            });
+        }
+    }
+    (flat, roots)
+}
+
+impl Gbdt {
+    /// Fit on rows `x` (each of equal length), targets `y`, per-sample
+    /// weights `w`, with loss `loss`.
+    pub fn fit(
+        x: &[Vec<f64>],
+        y: &[f64],
+        w: &[f64],
+        loss: &dyn Loss,
+        p: &BoostParams,
+        rng: &mut Rng,
+    ) -> Gbdt {
+        assert_eq!(x.len(), y.len());
+        assert_eq!(x.len(), w.len());
+        assert!(!x.is_empty(), "cannot fit on empty data");
+        let n = x.len();
+        let d = x[0].len();
+
+        let cuts = BinCuts::from_data(n, d, p.n_bins, |i, f| x[i][f]);
+        let m = BinnedMatrix::new(&cuts, n, |i, f| x[i][f]);
+
+        // Base score: weighted mean of targets (argmin of weighted MSE).
+        let wsum: f64 = w.iter().sum();
+        let base_score = y.iter().zip(w).map(|(yi, wi)| yi * wi).sum::<f64>() / wsum.max(1e-30);
+
+        let tree_params = TreeParams {
+            max_depth: p.max_depth,
+            lambda: p.lambda,
+            min_child_weight: p.min_child_weight,
+            min_gain: 1e-9,
+        };
+
+        let mut preds = vec![base_score; n];
+        let mut g = vec![0.0; n];
+        let mut h = vec![0.0; n];
+        let idx: Vec<usize> = (0..n).collect();
+        let all_features: Vec<usize> = (0..d).collect();
+        let n_cols = ((d as f64 * p.colsample).ceil() as usize).clamp(1, d);
+
+        let mut trees = Vec::with_capacity(p.n_trees);
+        for _ in 0..p.n_trees {
+            for i in 0..n {
+                let (gi, hi) = loss.grad_hess(preds[i], y[i], w[i]);
+                g[i] = gi;
+                h[i] = hi;
+            }
+            let features: Vec<usize> = if n_cols == d {
+                all_features.clone()
+            } else {
+                let mut f = all_features.clone();
+                rng.shuffle(&mut f);
+                f.truncate(n_cols);
+                f
+            };
+            let tree = Tree::grow(&cuts, &m, &g, &h, &idx, &features, &tree_params);
+            for i in 0..n {
+                preds[i] += p.learning_rate * tree.predict_binned(&m, i);
+            }
+            trees.push(tree);
+        }
+
+        let (flat, roots) = flatten(&trees);
+        Gbdt { base_score, learning_rate: p.learning_rate, trees, flat, roots }
+    }
+
+    /// Predict one sample (flattened-ensemble hot path).
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for &root in &self.roots {
+            let mut i = root as usize;
+            loop {
+                let n = unsafe { self.flat.get_unchecked(i) };
+                if n.feature == u32::MAX {
+                    acc += n.threshold;
+                    break;
+                }
+                i = if x[n.feature as usize] <= n.threshold {
+                    n.left as usize
+                } else {
+                    n.right as usize
+                };
+            }
+        }
+        self.base_score + self.learning_rate * acc
+    }
+
+    /// Reference (unflattened) prediction, kept for equivalence tests.
+    pub fn predict_reference(&self, x: &[f64]) -> f64 {
+        let mut p = self.base_score;
+        for t in &self.trees {
+            p += self.learning_rate * t.predict(x);
+        }
+        p
+    }
+
+    /// Predict a batch (thread-parallel; the search's hot path).
+    pub fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        par_map(xs, |x| self.predict(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::loss::{PaperWeightedSquaredError, SquaredError};
+    
+    
+
+    fn synth(n: usize, f: impl Fn(f64, f64) -> f64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..n {
+            let a = (i % 37) as f64 / 37.0;
+            let b = (i % 11) as f64 / 11.0;
+            xs.push(vec![a, b]);
+            ys.push(f(a, b));
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn fits_additive_function() {
+        let (xs, ys) = synth(600, |a, b| 3.0 * a + 2.0 * b * b + 1.0);
+        let w = vec![1.0; xs.len()];
+        let mut rng = Rng::seed_from_u64(0);
+        let model = Gbdt::fit(&xs, &ys, &w, &SquaredError, &BoostParams::default(), &mut rng);
+        let mut sse = 0.0;
+        let mut sst = 0.0;
+        let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+        for (x, y) in xs.iter().zip(&ys) {
+            let p = model.predict(x);
+            sse += (p - y).powi(2);
+            sst += (y - mean).powi(2);
+        }
+        let r2 = 1.0 - sse / sst;
+        assert!(r2 > 0.97, "train R^2 = {r2}");
+    }
+
+    #[test]
+    fn generalizes_on_holdout() {
+        let (xs, ys) = synth(1000, |a, b| (a * 6.0).sin() + b);
+        let w = vec![1.0; 800];
+        let mut rng = Rng::seed_from_u64(1);
+        let model =
+            Gbdt::fit(&xs[..800], &ys[..800], &w, &SquaredError, &BoostParams::default(), &mut rng);
+        let mean = ys[800..].iter().sum::<f64>() / 200.0;
+        let mut sse = 0.0;
+        let mut sst = 0.0;
+        for i in 800..1000 {
+            sse += (model.predict(&xs[i]) - ys[i]).powi(2);
+            sst += (ys[i] - mean).powi(2);
+        }
+        let r2 = 1.0 - sse / sst;
+        assert!(r2 > 0.9, "holdout R^2 = {r2}");
+    }
+
+    #[test]
+    fn paper_loss_prioritizes_low_energy_samples() {
+        // Eq. 1 weights samples by 1/E_m: relative accuracy on the
+        // *low*-target samples must beat an unweighted fit.
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..400 {
+            let a = (i % 20) as f64 / 20.0;
+            let b = ((i / 20) % 20) as f64 / 20.0;
+            xs.push(vec![a, b]);
+            // Targets span two orders of magnitude.
+            ys.push(0.1 + 10.0 * a + 0.5 * b);
+        }
+        let w_paper: Vec<f64> = ys.iter().map(|&e| 1.0 / e).collect();
+        let w_flat = vec![1.0; ys.len()];
+        let mut rng = Rng::seed_from_u64(2);
+        let p = BoostParams { n_trees: 40, max_depth: 4, ..Default::default() };
+        let weighted =
+            Gbdt::fit(&xs, &ys, &w_paper, &PaperWeightedSquaredError, &p, &mut rng.clone());
+        let flat = Gbdt::fit(&xs, &ys, &w_flat, &SquaredError, &p, &mut rng);
+
+        let rel_err = |model: &Gbdt| {
+            let mut e = 0.0;
+            let mut n = 0;
+            for (x, y) in xs.iter().zip(&ys) {
+                if *y < 2.0 {
+                    e += ((model.predict(x) - y) / y).abs();
+                    n += 1;
+                }
+            }
+            e / n as f64
+        };
+        assert!(
+            rel_err(&weighted) <= rel_err(&flat) * 1.05,
+            "weighted {} vs flat {}",
+            rel_err(&weighted),
+            rel_err(&flat)
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (xs, ys) = synth(200, |a, b| a + b);
+        let w = vec![1.0; 200];
+        let p = BoostParams { n_trees: 10, ..Default::default() };
+        let m1 = Gbdt::fit(&xs, &ys, &w, &SquaredError, &p, &mut Rng::seed_from_u64(7));
+        let m2 = Gbdt::fit(&xs, &ys, &w, &SquaredError, &p, &mut Rng::seed_from_u64(7));
+        for x in xs.iter().take(20) {
+            assert_eq!(m1.predict(x), m2.predict(x));
+        }
+    }
+
+    #[test]
+    fn flat_predict_matches_reference() {
+        let (xs, ys) = synth(400, |a, b| a * 3.0 - b * b);
+        let w = vec![1.0; 400];
+        let m = Gbdt::fit(&xs, &ys, &w, &SquaredError, &BoostParams::default(), &mut Rng::seed_from_u64(3));
+        for x in xs.iter().take(100) {
+            let fast = m.predict(x);
+            let slow = m.predict_reference(x);
+            assert!((fast - slow).abs() < 1e-12, "{fast} vs {slow}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let (xs, ys) = synth(300, |a, b| a * b);
+        let w = vec![1.0; 300];
+        let p = BoostParams { n_trees: 15, ..Default::default() };
+        let m = Gbdt::fit(&xs, &ys, &w, &SquaredError, &p, &mut Rng::seed_from_u64(9));
+        let batch = m.predict_batch(&xs);
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(batch[i], m.predict(x));
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! From-scratch gradient-boosted decision trees (the XGBoost algorithm:
+//! second-order boosting, histogram splits, shrinkage, column
+//! subsampling) — the model family behind the paper's energy cost model
+//! and Ansor's latency model.
+
+pub mod boost;
+pub mod histogram;
+pub mod tree;
+
+pub use boost::{BoostParams, Gbdt};
+pub use histogram::{BinCuts, BinnedMatrix};
+pub use tree::{Node, Tree, TreeParams};

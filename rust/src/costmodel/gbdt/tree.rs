@@ -1,0 +1,250 @@
+//! A single regression tree grown greedily over binned features with
+//! second-order (gradient, hessian) statistics — the XGBoost tree
+//! booster's core.
+
+use super::histogram::{BinCuts, BinnedMatrix};
+
+/// One node of a regression tree (flat array layout).
+#[derive(Debug, Clone)]
+pub enum Node {
+    Split {
+        feature: usize,
+        /// Go left iff `value <= threshold`.
+        threshold: f64,
+        /// Bin-space threshold: left iff `bin <= bin_threshold`.
+        bin_threshold: u16,
+        left: usize,
+        right: usize,
+    },
+    Leaf {
+        weight: f64,
+    },
+}
+
+/// A trained regression tree.
+#[derive(Debug, Clone)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+/// Growth hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub lambda: f64,
+    pub min_child_weight: f64,
+    pub min_gain: f64,
+}
+
+impl Tree {
+    /// Predict from raw feature values.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let mut i = 0;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { weight } => return *weight,
+                Node::Split { feature, threshold, left, right, .. } => {
+                    i = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    /// Predict from pre-binned values (training-time fast path).
+    pub fn predict_binned(&self, m: &BinnedMatrix, row: usize) -> f64 {
+        let mut i = 0;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { weight } => return *weight,
+                Node::Split { feature, bin_threshold, left, right, .. } => {
+                    i = if m.bin(row, *feature) <= *bin_threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    /// Number of leaves.
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::Leaf { .. })).count()
+    }
+
+    /// Grow a tree on samples `idx` with per-sample gradients `g` and
+    /// hessians `h`. `features` restricts the candidate split features
+    /// (column subsampling).
+    pub fn grow(
+        cuts: &BinCuts,
+        m: &BinnedMatrix,
+        g: &[f64],
+        h: &[f64],
+        idx: &[usize],
+        features: &[usize],
+        p: &TreeParams,
+    ) -> Tree {
+        let mut nodes = Vec::new();
+        let mut tree = Tree { nodes: Vec::new() };
+        grow_node(cuts, m, g, h, idx, features, p, 0, &mut nodes);
+        tree.nodes = nodes;
+        tree
+    }
+}
+
+/// Recursively grow; returns the index of the created node.
+#[allow(clippy::too_many_arguments)]
+fn grow_node(
+    cuts: &BinCuts,
+    m: &BinnedMatrix,
+    g: &[f64],
+    h: &[f64],
+    idx: &[usize],
+    features: &[usize],
+    p: &TreeParams,
+    depth: usize,
+    nodes: &mut Vec<Node>,
+) -> usize {
+    let g_sum: f64 = idx.iter().map(|&i| g[i]).sum();
+    let h_sum: f64 = idx.iter().map(|&i| h[i]).sum();
+    let leaf_weight = -g_sum / (h_sum + p.lambda);
+
+    let make_leaf = |nodes: &mut Vec<Node>| {
+        nodes.push(Node::Leaf { weight: leaf_weight });
+        nodes.len() - 1
+    };
+
+    if depth >= p.max_depth || idx.len() < 2 {
+        return make_leaf(nodes);
+    }
+
+    // Find the best (feature, bin) split by histogram aggregation.
+    let parent_score = g_sum * g_sum / (h_sum + p.lambda);
+    let mut best: Option<(usize, usize, f64)> = None; // (feature, bin, gain)
+    let mut hist_g = Vec::new();
+    let mut hist_h = Vec::new();
+    for &f in features {
+        let nb = cuts.n_bins(f);
+        if nb < 2 {
+            continue;
+        }
+        hist_g.clear();
+        hist_g.resize(nb, 0.0);
+        hist_h.clear();
+        hist_h.resize(nb, 0.0);
+        for &i in idx {
+            let b = m.bin(i, f) as usize;
+            hist_g[b] += g[i];
+            hist_h[b] += h[i];
+        }
+        let mut gl = 0.0;
+        let mut hl = 0.0;
+        for b in 0..nb - 1 {
+            gl += hist_g[b];
+            hl += hist_h[b];
+            let gr = g_sum - gl;
+            let hr = h_sum - hl;
+            if hl < p.min_child_weight || hr < p.min_child_weight {
+                continue;
+            }
+            let gain =
+                gl * gl / (hl + p.lambda) + gr * gr / (hr + p.lambda) - parent_score;
+            if gain > p.min_gain && best.map_or(true, |(_, _, bg)| gain > bg) {
+                best = Some((f, b, gain));
+            }
+        }
+    }
+
+    let Some((feature, bin, _gain)) = best else {
+        return make_leaf(nodes);
+    };
+
+    let (left_idx, right_idx): (Vec<usize>, Vec<usize>) =
+        idx.iter().partition(|&&i| m.bin(i, feature) as usize <= bin);
+    if left_idx.is_empty() || right_idx.is_empty() {
+        return make_leaf(nodes);
+    }
+
+    // Reserve this node's slot, then grow children.
+    let slot = nodes.len();
+    nodes.push(Node::Leaf { weight: 0.0 }); // placeholder
+    let left = grow_node(cuts, m, g, h, &left_idx, features, p, depth + 1, nodes);
+    let right = grow_node(cuts, m, g, h, &right_idx, features, p, depth + 1, nodes);
+    nodes[slot] = Node::Split {
+        feature,
+        threshold: cuts.threshold(feature, bin),
+        bin_threshold: bin as u16,
+        left,
+        right,
+    };
+    slot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> TreeParams {
+        TreeParams { max_depth: 4, lambda: 1.0, min_child_weight: 1e-6, min_gain: 1e-9 }
+    }
+
+    /// Squared-error grads for current prediction 0: g = -2y (w=1), h = 2.
+    fn sq_grads(y: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        (y.iter().map(|&v| -2.0 * v).collect(), vec![2.0; y.len()])
+    }
+
+    #[test]
+    fn fits_a_step_function() {
+        // y = 10 if x > 0.5 else -10
+        let xs: Vec<f64> = (0..100).map(|i| i as f64 / 100.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| if x > 0.5 { 10.0 } else { -10.0 }).collect();
+        let cuts = BinCuts::from_data(100, 1, 32, |i, _| xs[i]);
+        let m = BinnedMatrix::new(&cuts, 100, |i, _| xs[i]);
+        let (g, h) = sq_grads(&ys);
+        let idx: Vec<usize> = (0..100).collect();
+        let tree = Tree::grow(&cuts, &m, &g, &h, &idx, &[0], &params());
+        assert!(tree.n_leaves() >= 2);
+        assert!(tree.predict(&[0.1]) < -8.0, "{}", tree.predict(&[0.1]));
+        assert!(tree.predict(&[0.9]) > 8.0, "{}", tree.predict(&[0.9]));
+    }
+
+    #[test]
+    fn pure_leaf_uses_newton_weight() {
+        // All targets equal: tree is a single leaf with weight
+        // -G/(H+lambda) = 2n*y/(2n+lambda).
+        let ys = vec![4.0; 10];
+        let cuts = BinCuts::from_data(10, 1, 8, |_, _| 1.0);
+        let m = BinnedMatrix::new(&cuts, 10, |_, _| 1.0);
+        let (g, h) = sq_grads(&ys);
+        let idx: Vec<usize> = (0..10).collect();
+        let tree = Tree::grow(&cuts, &m, &g, &h, &idx, &[0], &params());
+        assert_eq!(tree.n_leaves(), 1);
+        let expect = 2.0 * 10.0 * 4.0 / (2.0 * 10.0 + 1.0);
+        assert!((tree.predict(&[1.0]) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let xs: Vec<f64> = (0..256).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| (x * 0.1).sin()).collect();
+        let cuts = BinCuts::from_data(256, 1, 64, |i, _| xs[i]);
+        let m = BinnedMatrix::new(&cuts, 256, |i, _| xs[i]);
+        let (g, h) = sq_grads(&ys);
+        let idx: Vec<usize> = (0..256).collect();
+        let p = TreeParams { max_depth: 3, ..params() };
+        let tree = Tree::grow(&cuts, &m, &g, &h, &idx, &[0], &p);
+        assert!(tree.n_leaves() <= 8);
+    }
+
+    #[test]
+    fn binned_and_raw_prediction_agree() {
+        let xs: Vec<f64> = (0..64).map(|i| (i * 7 % 64) as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| x * 2.0).collect();
+        let cuts = BinCuts::from_data(64, 1, 16, |i, _| xs[i]);
+        let m = BinnedMatrix::new(&cuts, 64, |i, _| xs[i]);
+        let (g, h) = sq_grads(&ys);
+        let idx: Vec<usize> = (0..64).collect();
+        let tree = Tree::grow(&cuts, &m, &g, &h, &idx, &[0], &params());
+        for i in 0..64 {
+            let a = tree.predict(&[xs[i]]);
+            let b = tree.predict_binned(&m, i);
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

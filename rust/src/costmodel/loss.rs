@@ -1,0 +1,84 @@
+//! Training objectives for the energy cost model.
+//!
+//! The paper's Eq. 1: `Loss(E_p, E_m) = (E_p - E_m)^2 / E_m` — a
+//! squared error whose per-sample weight `1/E_m` concentrates accuracy
+//! on *low-energy* kernels, which are exactly the ones the search must
+//! rank correctly near convergence.
+
+/// A twice-differentiable per-sample loss.
+pub trait Loss: Sync {
+    /// Loss value for prediction `p`, target `y`, sample weight `w`.
+    fn value(&self, p: f64, y: f64, w: f64) -> f64;
+    /// (gradient, hessian) of the loss w.r.t. `p`.
+    fn grad_hess(&self, p: f64, y: f64, w: f64) -> (f64, f64);
+}
+
+/// Plain squared error: `w * (p - y)^2`.
+pub struct SquaredError;
+
+impl Loss for SquaredError {
+    fn value(&self, p: f64, y: f64, w: f64) -> f64 {
+        w * (p - y).powi(2)
+    }
+
+    fn grad_hess(&self, p: f64, y: f64, w: f64) -> (f64, f64) {
+        (2.0 * w * (p - y), 2.0 * w)
+    }
+}
+
+/// Eq. 1 of the paper: squared error weighted by `1/E_m`. Callers pass
+/// the weight `w = 1/E_m` explicitly (via the dataset), which makes the
+/// weighting visible and ablatable.
+pub struct PaperWeightedSquaredError;
+
+impl Loss for PaperWeightedSquaredError {
+    fn value(&self, p: f64, y: f64, w: f64) -> f64 {
+        // With w = 1/E_m this is exactly (E_p - E_m)^2 / E_m.
+        w * (p - y).powi(2)
+    }
+
+    fn grad_hess(&self, p: f64, y: f64, w: f64) -> (f64, f64) {
+        (2.0 * w * (p - y), 2.0 * w)
+    }
+}
+
+/// The paper's Eq. 1 weight for a measured energy.
+pub fn eq1_weight(measured_energy: f64) -> f64 {
+    1.0 / measured_energy.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let losses: [&dyn Loss; 2] = [&SquaredError, &PaperWeightedSquaredError];
+        for loss in losses {
+            for &(p, y, w) in &[(0.5, 1.0, 1.0), (2.0, 0.3, 3.0), (-1.0, 1.0, 0.25)] {
+                let eps = 1e-6;
+                let num = (loss.value(p + eps, y, w) - loss.value(p - eps, y, w)) / (2.0 * eps);
+                let (g, h) = loss.grad_hess(p, y, w);
+                assert!((g - num).abs() < 1e-5, "grad {g} vs fd {num}");
+                let heps = 1e-4;
+                let numh = (loss.value(p + heps, y, w) - 2.0 * loss.value(p, y, w)
+                    + loss.value(p - heps, y, w))
+                    / (heps * heps);
+                assert!((h - numh).abs() / h.abs() < 1e-2, "hess {h} vs fd {numh}");
+            }
+        }
+    }
+
+    #[test]
+    fn eq1_weight_is_inverse_energy() {
+        assert!((eq1_weight(2.0) - 0.5).abs() < 1e-12);
+        assert!(eq1_weight(0.0).is_finite(), "guards zero energy");
+    }
+
+    #[test]
+    fn eq1_value_matches_paper_formula() {
+        let (ep, em) = (3.0, 2.0);
+        let v = PaperWeightedSquaredError.value(ep, em, eq1_weight(em));
+        assert!((v - (ep - em) * (ep - em) / em).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,196 @@
+//! The energy cost model (§5): a GBDT over high-level kernel features
+//! predicting a *normalized energy score*, trained online during the
+//! search with the Eq. 1 weighted loss, plus the SNR-based prediction
+//! error used by the dynamic-k controller (§6).
+
+pub mod dataset;
+pub mod gbdt;
+pub mod loss;
+
+pub use dataset::{Dataset, Sample};
+pub use gbdt::{BoostParams, Gbdt};
+pub use loss::{eq1_weight, Loss, PaperWeightedSquaredError, SquaredError};
+
+use crate::config::CostModelConfig;
+use crate::features::FeatureVector;
+use crate::util::stats;
+use crate::util::Rng;
+
+/// The online energy cost model: dataset + fitted GBDT + bookkeeping.
+pub struct EnergyCostModel {
+    cfg: CostModelConfig,
+    data: Dataset,
+    model: Option<Gbdt>,
+    /// Scale used at last fit (min measured energy, J).
+    scale_j: f64,
+    /// Number of `fit` calls so far.
+    pub n_fits: usize,
+}
+
+impl EnergyCostModel {
+    pub fn new(cfg: CostModelConfig) -> EnergyCostModel {
+        let data = Dataset::new(cfg.max_train_samples);
+        EnergyCostModel { cfg, data, model: None, scale_j: 1.0, n_fits: 0 }
+    }
+
+    /// True once the model has been trained at least once.
+    pub fn is_trained(&self) -> bool {
+        self.model.is_some()
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Add measured samples WITHOUT refitting.
+    pub fn add_samples(&mut self, samples: &[(FeatureVector, f64)]) {
+        for (fv, e) in samples {
+            self.data.push(fv, *e);
+        }
+    }
+
+    /// `ModelUpdate` of Algorithm 1: add fresh measurements and refit on
+    /// the full (windowed) dataset.
+    pub fn update(&mut self, samples: &[(FeatureVector, f64)], rng: &mut Rng) {
+        self.add_samples(samples);
+        self.fit(rng);
+    }
+
+    /// Refit the GBDT on the current dataset.
+    pub fn fit(&mut self, rng: &mut Rng) {
+        if self.data.is_empty() {
+            return;
+        }
+        let (x, y, w) = self.data.training_arrays(self.cfg.weighted_loss);
+        self.scale_j = self.data.energy_scale();
+        let params = BoostParams {
+            n_trees: self.cfg.n_trees,
+            learning_rate: self.cfg.learning_rate,
+            max_depth: self.cfg.max_depth,
+            lambda: self.cfg.lambda,
+            min_child_weight: self.cfg.min_child_weight,
+            n_bins: self.cfg.n_bins,
+            colsample: self.cfg.colsample,
+        };
+        let loss: &dyn Loss =
+            if self.cfg.weighted_loss { &PaperWeightedSquaredError } else { &SquaredError };
+        self.model = Some(Gbdt::fit(&x, &y, &w, loss, &params, rng));
+        self.n_fits += 1;
+    }
+
+    /// Predicted normalized energy score (unitless, ~1.0 = best seen).
+    pub fn predict_score(&self, fv: &FeatureVector) -> f64 {
+        match &self.model {
+            Some(m) => m.predict(fv.as_slice()),
+            None => 1.0,
+        }
+    }
+
+    /// Predicted energy in joules (score × scale).
+    pub fn predict_energy_j(&self, fv: &FeatureVector) -> f64 {
+        self.predict_score(fv) * self.scale_j
+    }
+
+    /// Batch prediction of energies (J). Avoids per-row copies — this
+    /// is the search's per-round `EnergyModelEvaAndPick` hot path.
+    pub fn predict_energy_batch(&self, fvs: &[FeatureVector]) -> Vec<f64> {
+        match &self.model {
+            Some(m) => crate::util::parallel::par_map(fvs, |f| {
+                m.predict(f.as_slice()) * self.scale_j
+            }),
+            None => vec![self.scale_j; fvs.len()],
+        }
+    }
+
+    /// Algorithm 1's `SNR(EnergyPredicted, EnergyMeasured)` in dB —
+    /// higher means the model explains the measured variation better.
+    pub fn snr_error_db(predicted_j: &[f64], measured_j: &[f64]) -> f64 {
+        stats::snr_db(predicted_j, measured_j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+    use crate::features::featurize;
+    use crate::schedule::{space::ScheduleSpace, Candidate};
+    use crate::sim;
+    use crate::workload::suites;
+
+    /// Train on simulator ground truth and check ranking quality — the
+    /// in-miniature version of the paper's Fig. 4 experiment.
+    #[test]
+    fn learns_to_rank_energy_on_mm() {
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM1, &spec);
+        let mut rng = Rng::seed_from_u64(33);
+
+        let train: Vec<_> = space.sample_n(&mut rng, 400);
+        let test: Vec<_> = space.sample_n(&mut rng, 100);
+
+        let mut model = EnergyCostModel::new(Default::default());
+        let samples: Vec<(crate::features::FeatureVector, f64)> = train
+            .iter()
+            .map(|s| {
+                let c = Candidate::new(suites::MM1, *s);
+                let ev = sim::evaluate_candidate(&c, &spec);
+                (featurize(&c, &spec), ev.energy_j)
+            })
+            .collect();
+        model.update(&samples, &mut rng);
+        assert!(model.is_trained());
+
+        let mut pred = Vec::new();
+        let mut truth = Vec::new();
+        for s in &test {
+            let c = Candidate::new(suites::MM1, *s);
+            pred.push(model.predict_energy_j(&featurize(&c, &spec)));
+            truth.push(sim::evaluate_candidate(&c, &spec).energy_j);
+        }
+        let rho = stats::spearman(&pred, &truth);
+        assert!(rho > 0.8, "holdout rank correlation {rho}");
+    }
+
+    #[test]
+    fn untrained_model_predicts_constant() {
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM1, &spec);
+        let model = EnergyCostModel::new(Default::default());
+        let c = Candidate::new(suites::MM1, space.fallback());
+        assert_eq!(model.predict_score(&featurize(&c, &spec)), 1.0);
+    }
+
+    #[test]
+    fn snr_metric_behaves() {
+        let measured = vec![1.0, 2.0, 3.0, 4.0];
+        let close: Vec<f64> = measured.iter().map(|x| x * 1.01).collect();
+        let far: Vec<f64> = measured.iter().map(|x| x * 2.0).collect();
+        assert!(
+            EnergyCostModel::snr_error_db(&close, &measured)
+                > EnergyCostModel::snr_error_db(&far, &measured)
+        );
+    }
+
+    #[test]
+    fn update_accumulates_and_refits() {
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM1, &spec);
+        let mut rng = Rng::seed_from_u64(7);
+        let mut model = EnergyCostModel::new(Default::default());
+        for round in 0..3 {
+            let samples: Vec<_> = space
+                .sample_n(&mut rng, 20)
+                .into_iter()
+                .map(|s| {
+                    let c = Candidate::new(suites::MM1, s);
+                    let ev = sim::evaluate_candidate(&c, &spec);
+                    (featurize(&c, &spec), ev.energy_j)
+                })
+                .collect();
+            model.update(&samples, &mut rng);
+            assert_eq!(model.n_samples(), (round + 1) * 20);
+            assert_eq!(model.n_fits, round + 1);
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Ablation studies on the framework's design choices (DESIGN.md §9):
+//!
+//! * **A1 — Eq. 1 weighted loss**: does weighting samples by `1/E_m`
+//!   improve the model's accuracy on the low-energy kernels the search
+//!   cares about?
+//! * **A2 — dynamic k vs fixed k = 1**: how much measurement budget
+//!   does the controller save, and at what quality cost?
+//! * **A3 — latency-first selection**: what happens to latency if the
+//!   search selects parents purely on energy (dropping §4.3's
+//!   latency-first rule)?
+
+use super::report::{f, TextTable};
+use super::tables::Effort;
+use crate::config::{CostModelConfig, GpuArch, SearchMode};
+use crate::costmodel::EnergyCostModel;
+use crate::features::featurize;
+use crate::nvml::NvmlMeter;
+use crate::schedule::{space::ScheduleSpace, Candidate};
+use crate::sim;
+use crate::util::{stats, Rng};
+use crate::workload::suites;
+
+/// A1: Eq. 1 weighting vs flat squared error — relative error on the
+/// lowest-energy tercile of a held-out set.
+pub struct AblationLoss {
+    pub weighted_low_tercile_rel_err: f64,
+    pub flat_low_tercile_rel_err: f64,
+    pub weighted_rho: f64,
+    pub flat_rho: f64,
+}
+
+pub fn ablation_loss(effort: Effort) -> AblationLoss {
+    let spec = GpuArch::A100.spec();
+    let w = suites::MM1;
+    let space = ScheduleSpace::new(w, &spec);
+    let n = match effort {
+        Effort::Quick => 400,
+        Effort::Paper => 1500,
+    };
+    let mut rng = Rng::seed_from_u64(11);
+    let mut meter = NvmlMeter::warmed(spec.clone(), Default::default());
+    let schedules = space.sample_n(&mut rng, n);
+    let split = n * 8 / 10;
+    let samples: Vec<_> = schedules[..split]
+        .iter()
+        .map(|s| {
+            let c = Candidate::new(w, *s);
+            (featurize(&c, &spec), meter.measure(&c, &mut rng).energy_j)
+        })
+        .collect();
+
+    let eval = |weighted: bool, rng: &mut Rng| {
+        let cfg = CostModelConfig { weighted_loss: weighted, ..Default::default() };
+        let mut model = EnergyCostModel::new(cfg);
+        model.update(&samples, rng);
+        let mut pred = Vec::new();
+        let mut truth = Vec::new();
+        for s in &schedules[split..] {
+            let c = Candidate::new(w, *s);
+            pred.push(model.predict_energy_j(&featurize(&c, &spec)));
+            truth.push(sim::evaluate_candidate(&c, &spec).energy_j);
+        }
+        let cutoff = stats::percentile(&truth, 33.0);
+        let mut err = 0.0;
+        let mut cnt = 0;
+        for (p, t) in pred.iter().zip(&truth) {
+            if *t <= cutoff {
+                err += ((p - t) / t).abs();
+                cnt += 1;
+            }
+        }
+        (err / cnt.max(1) as f64, stats::spearman(&pred, &truth))
+    };
+    let (werr, wrho) = eval(true, &mut rng.fork(1));
+    let (ferr, frho) = eval(false, &mut rng.fork(1));
+    AblationLoss {
+        weighted_low_tercile_rel_err: werr,
+        flat_low_tercile_rel_err: ferr,
+        weighted_rho: wrho,
+        flat_rho: frho,
+    }
+}
+
+/// A2: dynamic k vs pinned k (no controller).
+pub struct AblationDynamicK {
+    pub dynamic_measurements: usize,
+    pub fixed_measurements: usize,
+    pub dynamic_energy_mj: f64,
+    pub fixed_energy_mj: f64,
+    pub dynamic_time_s: f64,
+    pub fixed_time_s: f64,
+}
+
+pub fn ablation_dynamic_k(effort: Effort) -> AblationDynamicK {
+    let w = suites::MM_4090;
+    let mut cfg = effort.cfg(GpuArch::A100, SearchMode::EnergyAware, 21);
+    cfg.mu_snr_db = -5.0;
+    let dynamic = crate::search::run_search(w, &cfg);
+    // Fixed k: disable adaptation by zeroing the step.
+    let mut fixed_cfg = cfg.clone();
+    fixed_cfg.k_step = 0.0;
+    fixed_cfg.k_init = 1.0;
+    let fixed = crate::search::run_search(w, &fixed_cfg);
+    AblationDynamicK {
+        dynamic_measurements: dynamic.n_energy_measurements(),
+        fixed_measurements: fixed.n_energy_measurements(),
+        dynamic_energy_mj: dynamic.best.energy_j * 1e3,
+        fixed_energy_mj: fixed.best.energy_j * 1e3,
+        dynamic_time_s: dynamic.clock.total_s,
+        fixed_time_s: fixed.clock.total_s,
+    }
+}
+
+/// A3: latency-first (paper) vs pure-energy parent selection. We proxy
+/// "pure energy" by removing the latency-tolerance band from the final
+/// selection and by selecting on energy only from the full measured
+/// pool.
+pub struct AblationLatencyFirst {
+    pub paper_latency_ms: f64,
+    pub paper_energy_mj: f64,
+    pub pure_energy_latency_ms: f64,
+    pub pure_energy_energy_mj: f64,
+}
+
+pub fn ablation_latency_first(effort: Effort) -> AblationLatencyFirst {
+    let w = suites::MM1;
+    let cfg = effort.cfg(GpuArch::A100, SearchMode::EnergyAware, 31);
+    let out = crate::search::run_search(w, &cfg);
+    // Pure-energy pick: global argmin energy over the measured pool,
+    // ignoring latency entirely.
+    let pure = out
+        .measured_pool
+        .iter()
+        .min_by(|a, b| a.energy_j.partial_cmp(&b.energy_j).expect("finite"))
+        .copied()
+        .expect("non-empty pool");
+    AblationLatencyFirst {
+        paper_latency_ms: out.best.latency_s * 1e3,
+        paper_energy_mj: out.best.energy_j * 1e3,
+        pure_energy_latency_ms: pure.latency_s * 1e3,
+        pure_energy_energy_mj: pure.energy_j * 1e3,
+    }
+}
+
+/// Render all three ablations as one report.
+pub fn ablations(effort: Effort) -> String {
+    let a1 = ablation_loss(effort);
+    let a2 = ablation_dynamic_k(effort);
+    let a3 = ablation_latency_first(effort);
+
+    let mut t = TextTable::new(&["ablation", "arm", "metric", "value"]);
+    t.row(vec!["A1 Eq.1 loss".into(), "weighted (paper)".into(), "low-tercile rel err".into(), f(a1.weighted_low_tercile_rel_err, 4)]);
+    t.row(vec!["A1 Eq.1 loss".into(), "flat".into(), "low-tercile rel err".into(), f(a1.flat_low_tercile_rel_err, 4)]);
+    t.row(vec!["A1 Eq.1 loss".into(), "weighted (paper)".into(), "spearman rho".into(), f(a1.weighted_rho, 3)]);
+    t.row(vec!["A1 Eq.1 loss".into(), "flat".into(), "spearman rho".into(), f(a1.flat_rho, 3)]);
+    t.row(vec!["A2 dynamic k".into(), "dynamic (paper)".into(), "measurements".into(), a2.dynamic_measurements.to_string()]);
+    t.row(vec!["A2 dynamic k".into(), "fixed k=1".into(), "measurements".into(), a2.fixed_measurements.to_string()]);
+    t.row(vec!["A2 dynamic k".into(), "dynamic (paper)".into(), "best energy (mJ)".into(), f(a2.dynamic_energy_mj, 3)]);
+    t.row(vec!["A2 dynamic k".into(), "fixed k=1".into(), "best energy (mJ)".into(), f(a2.fixed_energy_mj, 3)]);
+    t.row(vec!["A2 dynamic k".into(), "dynamic (paper)".into(), "search time (s)".into(), f(a2.dynamic_time_s, 1)]);
+    t.row(vec!["A2 dynamic k".into(), "fixed k=1".into(), "search time (s)".into(), f(a2.fixed_time_s, 1)]);
+    t.row(vec!["A3 latency-first".into(), "band-select (paper)".into(), "latency (ms) / energy (mJ)".into(), format!("{} / {}", f(a3.paper_latency_ms, 4), f(a3.paper_energy_mj, 3))]);
+    t.row(vec!["A3 latency-first".into(), "pure-energy argmin".into(), "latency (ms) / energy (mJ)".into(), format!("{} / {}", f(a3.pure_energy_latency_ms, 4), f(a3.pure_energy_energy_mj, 3))]);
+    format!("Ablations (design choices; DESIGN.md §9)\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dynamic_k_saves_measurements_without_collapse() {
+        let a = ablation_dynamic_k(Effort::Quick);
+        assert!(a.dynamic_measurements < a.fixed_measurements);
+        assert!(a.dynamic_time_s < a.fixed_time_s);
+        assert!(a.dynamic_energy_mj <= a.fixed_energy_mj * 1.15);
+    }
+
+    #[test]
+    fn latency_first_guards_latency() {
+        let a = ablation_latency_first(Effort::Quick);
+        // The pure-energy pick trades latency away (or at best ties);
+        // the paper's band-select never exceeds the band.
+        assert!(a.paper_latency_ms <= a.pure_energy_latency_ms * 1.001 + 1e-9
+            || a.paper_energy_mj <= a.pure_energy_energy_mj * 1.001);
+    }
+
+    #[test]
+    fn eq1_weighting_does_not_hurt_ranking() {
+        let a = ablation_loss(Effort::Quick);
+        assert!(a.weighted_rho > 0.85, "rho {}", a.weighted_rho);
+        assert!(
+            a.weighted_low_tercile_rel_err <= a.flat_low_tercile_rel_err * 1.25,
+            "weighted {} vs flat {}",
+            a.weighted_low_tercile_rel_err,
+            a.flat_low_tercile_rel_err
+        );
+    }
+}

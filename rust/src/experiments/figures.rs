@@ -1,0 +1,350 @@
+//! Figure experiments: Figures 2, 3, 4, and 5 of the paper. Each
+//! produces the CSV series behind the figure plus the summary statistic
+//! that encodes the figure's claim.
+
+use super::report::{f, TextTable};
+use super::tables::Effort;
+use crate::config::{GpuArch, SearchConfig, SearchMode};
+use crate::costmodel::EnergyCostModel;
+use crate::features::featurize;
+use crate::nvml::NvmlMeter;
+use crate::schedule::{space::ScheduleSpace, Candidate};
+use crate::sim;
+use crate::util::stats;
+use crate::util::Rng;
+use crate::workload::{suites, Workload};
+
+// ---------------------------------------------------------------------
+// Figure 2: latency-energy scatter of Conv kernels (P100) + ours marker
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig2 {
+    /// (latency_ms, energy_mj) of sampled search-space kernels.
+    pub scatter: Vec<(f64, f64)>,
+    /// Ansor's pick.
+    pub ansor: (f64, f64),
+    /// Our pick.
+    pub ours: (f64, f64),
+}
+
+impl Fig2 {
+    pub fn to_csv(&self) -> String {
+        let mut t = TextTable::new(&["latency_ms", "energy_mj", "kind"]);
+        for (l, e) in &self.scatter {
+            t.row(vec![format!("{l}"), format!("{e}"), "sampled".into()]);
+        }
+        t.row(vec![format!("{}", self.ansor.0), format!("{}", self.ansor.1), "ansor".into()]);
+        t.row(vec![format!("{}", self.ours.0), format!("{}", self.ours.1), "ours".into()]);
+        t.to_csv()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "Fig 2 (Conv on p100): {} sampled kernels; Ansor ({:.4} ms, {:.2} mJ) vs ours ({:.4} ms, {:.2} mJ); ours saves {:.1}% energy at {:+.1}% latency",
+            self.scatter.len(),
+            self.ansor.0,
+            self.ansor.1,
+            self.ours.0,
+            self.ours.1,
+            (1.0 - self.ours.1 / self.ansor.1) * 100.0,
+            (self.ours.0 / self.ansor.0 - 1.0) * 100.0,
+        )
+    }
+}
+
+pub fn fig2(effort: Effort) -> Fig2 {
+    // The paper uses a ResNet-50 conv on a P100 (its Fig. 2 setup).
+    let gpu = GpuArch::P100;
+    let spec = gpu.spec();
+    let w = suites::CONV1;
+    let space = ScheduleSpace::new(w, &spec);
+    let mut rng = Rng::seed_from_u64(42);
+    let n = match effort {
+        Effort::Quick => 150,
+        Effort::Paper => 600,
+    };
+    let g = w.gemm_view();
+    let scatter: Vec<(f64, f64)> = space
+        .sample_n(&mut rng, n)
+        .iter()
+        .map(|s| {
+            let ev = sim::evaluate(&g, s, &spec);
+            (ev.latency_s * 1e3, ev.energy_j * 1e3)
+        })
+        .collect();
+
+    let ansor = crate::search::run_search(w, &effort.cfg(gpu, SearchMode::LatencyOnly, 7));
+    let ours = crate::search::run_search(w, &effort.cfg(gpu, SearchMode::EnergyAware, 7));
+    Fig2 {
+        scatter,
+        ansor: (ansor.best.latency_s * 1e3, ansor.best.energy_j * 1e3),
+        ours: (ours.best.latency_s * 1e3, ours.best.energy_j * 1e3),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Figure 3: latency-power inverse correlation, MatMul 1024^3 on A100
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig3 {
+    /// (latency_ms, avg_power_w) pairs.
+    pub series: Vec<(f64, f64)>,
+    pub pearson_r: f64,
+}
+
+impl Fig3 {
+    pub fn to_csv(&self) -> String {
+        let mut t = TextTable::new(&["latency_ms", "avg_power_w"]);
+        for (l, p) in &self.series {
+            t.row(vec![format!("{l}"), format!("{p}")]);
+        }
+        t.to_csv()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "Fig 3 (MM 1024^3 on a100): {} kernels, latency-power Pearson r = {:.3} (paper: inverse correlation)",
+            self.series.len(),
+            self.pearson_r
+        )
+    }
+}
+
+pub fn fig3(effort: Effort) -> Fig3 {
+    let spec = GpuArch::A100.spec();
+    let w = suites::MM2;
+    let space = ScheduleSpace::new(w, &spec);
+    let mut rng = Rng::seed_from_u64(3);
+    let n = match effort {
+        Effort::Quick => 200,
+        Effort::Paper => 800,
+    };
+    let g = w.gemm_view();
+    let series: Vec<(f64, f64)> = space
+        .sample_n(&mut rng, n)
+        .iter()
+        .map(|s| {
+            let ev = sim::evaluate(&g, s, &spec);
+            (ev.latency_s * 1e3, ev.avg_power_w)
+        })
+        .collect();
+    let xs: Vec<f64> = series.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = series.iter().map(|p| p.1).collect();
+    Fig3 { pearson_r: stats::pearson(&xs, &ys), series }
+}
+
+// ---------------------------------------------------------------------
+// Figure 4: cost-model predicted vs measured normalized energy
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig4Panel {
+    pub name: String,
+    pub workload: Workload,
+    /// (normalized predicted, normalized measured) on the held-out 20%.
+    pub points: Vec<(f64, f64)>,
+    pub r2: f64,
+    pub spearman: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig4 {
+    pub panels: Vec<Fig4Panel>,
+}
+
+impl Fig4 {
+    pub fn to_csv(&self) -> String {
+        let mut t = TextTable::new(&["panel", "predicted_norm", "measured_norm"]);
+        for p in &self.panels {
+            for (pr, me) in &p.points {
+                t.row(vec![p.name.clone(), format!("{pr}"), format!("{me}")]);
+            }
+        }
+        t.to_csv()
+    }
+
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = self
+            .panels
+            .iter()
+            .map(|p| {
+                format!("{}: R2={} rho={}", p.name, f(p.r2, 3), f(p.spearman, 3))
+            })
+            .collect();
+        format!("Fig 4 (cost model, 80/20 split): {}", parts.join("; "))
+    }
+}
+
+pub fn fig4(effort: Effort) -> Fig4 {
+    let spec = GpuArch::A100.spec();
+    let n = match effort {
+        Effort::Quick => 400,
+        Effort::Paper => 2000,
+    };
+    let panels = suites::fig4_suite()
+        .into_iter()
+        .enumerate()
+        .map(|(i, (name, w))| {
+            let space = ScheduleSpace::new(w, &spec);
+            let mut rng = Rng::seed_from_u64(100 + i as u64);
+            let mut meter = NvmlMeter::warmed(spec.clone(), Default::default());
+            let schedules = space.sample_n(&mut rng, n);
+            let split = n * 8 / 10;
+
+            let mut model = EnergyCostModel::new(Default::default());
+            let train: Vec<_> = schedules[..split]
+                .iter()
+                .map(|s| {
+                    let c = Candidate::new(w, *s);
+                    let m = meter.measure(&c, &mut rng);
+                    (featurize(&c, &spec), m.energy_j)
+                })
+                .collect();
+            model.update(&train, &mut rng);
+
+            let mut pred = Vec::new();
+            let mut meas = Vec::new();
+            for s in &schedules[split..] {
+                let c = Candidate::new(w, *s);
+                pred.push(model.predict_energy_j(&featurize(&c, &spec)));
+                meas.push(meter.measure(&c, &mut rng).energy_j);
+            }
+            // Normalize both axes to [0, 1] as in the figure.
+            let pmax = pred.iter().cloned().fold(f64::MIN, f64::max);
+            let mmax = meas.iter().cloned().fold(f64::MIN, f64::max);
+            let points: Vec<(f64, f64)> =
+                pred.iter().zip(&meas).map(|(p, m)| (p / pmax, m / mmax)).collect();
+            Fig4Panel {
+                name: name.to_string(),
+                workload: w,
+                r2: stats::r2(&pred, &meas),
+                spearman: stats::spearman(&pred, &meas),
+                points,
+            }
+        })
+        .collect();
+    Fig4 { panels }
+}
+
+// ---------------------------------------------------------------------
+// Figure 5: NVML-only vs cost-model search time
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub name: String,
+    pub nvml_only_s: f64,
+    pub cost_model_s: f64,
+    pub nvml_measurements_nvml_only: usize,
+    pub nvml_measurements_cost_model: usize,
+}
+
+impl Fig5Row {
+    pub fn speedup(&self) -> f64 {
+        self.nvml_only_s / self.cost_model_s
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig5 {
+    pub rows: Vec<Fig5Row>,
+}
+
+impl Fig5 {
+    pub fn render(&self) -> String {
+        let mut t = TextTable::new(&[
+            "op",
+            "NVML-only (s)",
+            "cost-model (s)",
+            "speedup",
+            "meas (NVML-only)",
+            "meas (cost-model)",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.name.clone(),
+                f(r.nvml_only_s, 1),
+                f(r.cost_model_s, 1),
+                format!("{}x", f(r.speedup(), 2)),
+                r.nvml_measurements_nvml_only.to_string(),
+                r.nvml_measurements_cost_model.to_string(),
+            ]);
+        }
+        format!("Fig 5: search time, NVML-only vs cost-model (a100)\n{}", t.render())
+    }
+}
+
+pub fn fig5(effort: Effort) -> Fig5 {
+    // Paper setup: ~1000 kernels generated per search on the A100; µ is
+    // tuned (as §7.4 does) so the measurement count roughly halves.
+    let gpu = GpuArch::A100;
+    let base = |mode, seed| -> SearchConfig {
+        let mut c = effort.cfg(gpu, mode, seed);
+        // §7.4: "adjusted the µ value to nearly halve the number of NVML
+        // measurements". The SNR is computed on the *selected*
+        // (lowest-predicted-energy) kernels — a restricted range whose
+        // signal variance sits near the measurement noise floor — so the
+        // tuned µ is low in absolute dB terms.
+        c.mu_snr_db = -5.0;
+        match effort {
+            Effort::Paper => {
+                c.population = 125;
+                c.m_latency_keep = 32;
+                c.rounds = 8; // 8 * 125 = 1000 kernels
+                c.patience = 0;
+            }
+            Effort::Quick => {
+                c.m_latency_keep = 12;
+                c.rounds = 8;
+                c.patience = 0;
+            }
+        }
+        c
+    };
+    let rows = suites::table3_suite()
+        .into_iter()
+        .enumerate()
+        .map(|(i, (name, w))| {
+            let seed = 500 + i as u64;
+            let ours = crate::search::run_search(w, &base(SearchMode::EnergyAware, seed));
+            let nvml = crate::search::run_search(w, &base(SearchMode::EnergyNvmlOnly, seed));
+            Fig5Row {
+                name: name.to_string(),
+                nvml_only_s: nvml.clock.total_s,
+                cost_model_s: ours.clock.total_s,
+                nvml_measurements_nvml_only: nvml.n_energy_measurements(),
+                nvml_measurements_cost_model: ours.n_energy_measurements(),
+            }
+        })
+        .collect();
+    Fig5 { rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_inverse_correlation() {
+        let fig = fig3(Effort::Quick);
+        assert!(fig.pearson_r < -0.3, "r = {}", fig.pearson_r);
+        assert!(fig.to_csv().lines().count() > 100);
+    }
+
+    #[test]
+    fn fig5_cost_model_is_faster_and_measures_less() {
+        let fig = fig5(Effort::Quick);
+        for r in &fig.rows {
+            assert!(r.speedup() > 1.0, "{}: speedup {}", r.name, r.speedup());
+            assert!(
+                r.nvml_measurements_cost_model < r.nvml_measurements_nvml_only,
+                "{}: {} !< {}",
+                r.name,
+                r.nvml_measurements_cost_model,
+                r.nvml_measurements_nvml_only
+            );
+        }
+    }
+}

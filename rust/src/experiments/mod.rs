@@ -1,0 +1,96 @@
+//! Experiment harnesses: one per table and figure of the paper's
+//! evaluation (§7) and case study (§8). Each regenerates the paper's
+//! rows/series from the framework and writes text + CSV into
+//! `results/`. See DESIGN.md §6 for the experiment index and
+//! EXPERIMENTS.md for recorded paper-vs-measured numbers.
+
+pub mod ablations;
+pub mod figures;
+pub mod report;
+pub mod tables;
+
+pub use ablations::ablations;
+pub use figures::{fig2, fig3, fig4, fig5};
+pub use tables::{table1, table2, table3, table4, table5, Effort};
+
+use anyhow::Result;
+
+/// Run one experiment by id ("table2", "fig4", ...), print its report,
+/// and persist text/CSV outputs under `results/`.
+pub fn run_by_id(id: &str, effort: Effort) -> Result<String> {
+    let out = match id {
+        "table1" => {
+            let text = table1();
+            report::write_result_file("table1.txt", &text)?;
+            text
+        }
+        "table2" => {
+            let t = table2(effort);
+            let text = t.render("Table 2: energy & latency, Ansor vs ours");
+            report::write_result_file("table2.txt", &text)?;
+            report::write_result_file("table2.csv", &t.to_csv())?;
+            text
+        }
+        "table3" => {
+            let t = table3(effort);
+            let text = t.render("Table 3: energy & latency, Ansor vs ours");
+            report::write_result_file("table3.txt", &text)?;
+            report::write_result_file("table3.csv", &t.to_csv())?;
+            text
+        }
+        "table4" => {
+            let t = table4(effort);
+            let text = t.render();
+            report::write_result_file("table4.txt", &text)?;
+            text
+        }
+        "table5" => {
+            let t = table5(effort);
+            let text = t.render();
+            report::write_result_file("table5.txt", &text)?;
+            text
+        }
+        "fig2" => {
+            let f = fig2(effort);
+            report::write_result_file("fig2.csv", &f.to_csv())?;
+            let text = f.summary();
+            report::write_result_file("fig2.txt", &text)?;
+            text
+        }
+        "fig3" => {
+            let f = fig3(effort);
+            report::write_result_file("fig3.csv", &f.to_csv())?;
+            let text = f.summary();
+            report::write_result_file("fig3.txt", &text)?;
+            text
+        }
+        "fig4" => {
+            let f = fig4(effort);
+            report::write_result_file("fig4.csv", &f.to_csv())?;
+            let text = f.summary();
+            report::write_result_file("fig4.txt", &text)?;
+            text
+        }
+        "fig5" => {
+            let f = fig5(effort);
+            let text = f.render();
+            report::write_result_file("fig5.txt", &text)?;
+            text
+        }
+        "ablations" => {
+            let text = ablations(effort);
+            report::write_result_file("ablations.txt", &text)?;
+            text
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (try table1..table5, fig2..fig5, ablations, all)"
+        ),
+    };
+    Ok(out)
+}
+
+/// Every experiment id in paper order (+ the design-choice ablations).
+pub const ALL_IDS: [&str; 10] = [
+    "table1", "table2", "table3", "table4", "table5", "fig2", "fig3", "fig4", "fig5",
+    "ablations",
+];

@@ -1,0 +1,132 @@
+//! Reporting helpers shared by the experiment harnesses: aligned text
+//! tables, CSV emission, and the paper-vs-measured delta format used in
+//! EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Percent change from `old` to `new` (negative = reduction).
+pub fn pct_change(new: f64, old: f64) -> f64 {
+    (new - old) / old * 100.0
+}
+
+/// Percent reduction from `old` to `new` (positive = saved energy).
+pub fn pct_reduction(new: f64, old: f64) -> f64 {
+    (old - new) / old * 100.0
+}
+
+/// A simple aligned text table.
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(header: &[&str]) -> TextTable {
+        TextTable { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:>w$}  ", c, w = widths[i]);
+            }
+            out.push('\n');
+        };
+        line(&self.header, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * ncol;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &mut out);
+        }
+        out
+    }
+
+    /// CSV rendering (header + rows, comma-separated, quoted as needed).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Write text to `results/<name>`, creating the directory.
+pub fn write_result_file(name: &str, text: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, text)?;
+    Ok(path)
+}
+
+/// The results directory (override with ECOKERNEL_RESULTS).
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("ECOKERNEL_RESULTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| Path::new("results").to_path_buf())
+}
+
+/// Format a float with `d` decimals.
+pub fn f(x: f64, d: usize) -> String {
+    format!("{x:.d$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pct_math() {
+        assert!((pct_reduction(6.5, 8.3) - 21.686).abs() < 0.01);
+        assert!((pct_change(0.0352, 0.0347) - 1.44).abs() < 0.02);
+    }
+
+    #[test]
+    fn table_renders_aligned_and_csv() {
+        let mut t = TextTable::new(&["op", "energy (mJ)", "reduction"]);
+        t.row(vec!["MM1".into(), "6.5".into(), "21.69%".into()]);
+        t.row(vec!["CONV2".into(), "77.79".into(), "13.05%".into()]);
+        let text = t.render();
+        assert!(text.contains("MM1"));
+        assert!(text.lines().count() == 4);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("op,energy (mJ),reduction\n"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn wrong_arity_panics() {
+        let mut t = TextTable::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,32 @@
+//! High-level kernel feature extraction for the energy cost model
+//! (§5.3–5.4).
+//!
+//! "These features include the number of floating-point and integer
+//! operations, vectorization-related features, loop-related features,
+//! and cache access features."
+//!
+//! Features are derived from the *schedule and loop structure only* —
+//! never from the simulator's latency/power outputs — mirroring the
+//! paper's setting where features come from static analysis of the
+//! tensor program while energy comes from (slow) measurement. Counts are
+//! log-compressed; ratio features are left linear.
+
+pub mod extract;
+
+pub use extract::{feature_names, featurize, FEATURE_DIM};
+
+use crate::schedule::Candidate;
+
+/// A fixed-width feature vector for one candidate kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureVector(pub [f64; FEATURE_DIM]);
+
+impl FeatureVector {
+    pub fn of(c: &Candidate, spec: &crate::config::GpuSpec) -> FeatureVector {
+        featurize(c, spec)
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.0
+    }
+}

@@ -1,0 +1,50 @@
+//! # ecokernel — energy-efficient GPU kernel generation
+//!
+//! A search-based compilation framework that generates tensor-program
+//! kernels optimized for **both latency and energy**, reproducing
+//! *"Automating Energy-Efficient GPU Kernel Generation: A Fast
+//! Search-Based Compilation Approach"* (Zhang et al., 2024).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the search coordinator: schedule space,
+//!   genetic search with latency-first/energy-second selection (§4), a
+//!   from-scratch GBDT energy cost model (§5), the dynamic-k updating
+//!   strategy (§6, Algorithm 1), plus the simulated GPU + NVML
+//!   substrates that stand in for the paper's physical testbed.
+//! * **L2/L1 (build-time Python)** — JAX + Pallas kernels parameterized
+//!   by the same schedule knobs, AOT-lowered to HLO text in
+//!   `artifacts/`.
+//! * **Runtime** — [`runtime`] loads those artifacts through PJRT and
+//!   executes the search-winning schedule, closing the loop from
+//!   searched schedule to runnable kernel.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
+//! use ecokernel::search::run_search;
+//! use ecokernel::workload::suites;
+//!
+//! let cfg = SearchConfig { gpu: GpuArch::A100, mode: SearchMode::EnergyAware, ..Default::default() };
+//! let outcome = run_search(suites::MM1, &cfg);
+//! println!("best: {} ({:.3} ms, {:.2} mJ)",
+//!          outcome.best.schedule,
+//!          outcome.best.latency_s * 1e3,
+//!          outcome.best.energy_j * 1e3);
+//! ```
+
+pub mod baselines;
+pub mod config;
+pub mod costmodel;
+pub mod features;
+pub mod nvml;
+pub mod schedule;
+pub mod search;
+pub mod sim;
+pub mod util;
+pub mod workload;
+// Wired in below as they land:
+pub mod coordinator;
+pub mod experiments;
+pub mod runtime;

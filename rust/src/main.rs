@@ -1,0 +1,303 @@
+//! `ecokernel` — CLI for the energy-efficient kernel generation
+//! framework (leader entrypoint).
+//!
+//! Subcommands:
+//!   search      run one kernel search (the paper's core loop)
+//!   experiment  regenerate a paper table/figure (table1..5, fig2..5, all)
+//!   artifacts   inspect / execute the AOT artifact registry
+//!   gpus        list simulated GPU spec sheets
+//!   config      print the default search config as TOML
+
+use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
+use ecokernel::coordinator::{Driver, DriverConfig, EventLog};
+use ecokernel::experiments::{self, Effort};
+use ecokernel::runtime::ArtifactRegistry;
+use ecokernel::search::run_search;
+use ecokernel::util::Json;
+use ecokernel::workload::suites;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    };
+    let rest = &args[1..];
+    let result = match cmd.as_str() {
+        "search" => cmd_search(rest),
+        "experiment" => cmd_experiment(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "gpus" => cmd_gpus(),
+        "config" => {
+            println!("{}", SearchConfig::default().to_toml());
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown command '{other}'\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "\
+ecokernel — search-based energy-efficient GPU kernel generation
+
+USAGE:
+  ecokernel search --workload <MM1|..|CONV3> [--gpu a100] [--mode energy|latency|nvml]
+                   [--rounds N] [--population P] [--m M] [--mu DB] [--seed S]
+                   [--config file.toml] [--events out.jsonl] [--json]
+  ecokernel experiment <table1..table5|fig2..fig5|all> [--paper]
+  ecokernel artifacts [--dir artifacts] [--list | --check | --run WORKLOAD_ID [--variant ID]]
+  ecokernel gpus
+  ecokernel config";
+
+/// Minimal flag parser: --key value / --key (boolean).
+struct Flags {
+    map: std::collections::HashMap<String, String>,
+}
+
+impl Flags {
+    fn parse(args: &[String], bool_flags: &[&str]) -> anyhow::Result<Flags> {
+        let mut map = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got '{a}'"))?;
+            if bool_flags.contains(&key) {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let v = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?;
+                map.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(Flags { map })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse '{v}'")),
+        }
+    }
+}
+
+fn cmd_search(args: &[String]) -> anyhow::Result<()> {
+    let flags = Flags::parse(args, &["json"])?;
+    let mut cfg = match flags.get("config") {
+        Some(path) => SearchConfig::from_toml_file(std::path::Path::new(path))?,
+        None => SearchConfig::default(),
+    };
+    if let Some(g) = flags.get("gpu") {
+        cfg.gpu = GpuArch::parse(g).ok_or_else(|| anyhow::anyhow!("unknown gpu '{g}'"))?;
+    }
+    if let Some(m) = flags.get("mode") {
+        cfg.mode = SearchMode::parse(m).ok_or_else(|| anyhow::anyhow!("unknown mode '{m}'"))?;
+    }
+    if let Some(r) = flags.parse_num::<usize>("rounds")? {
+        cfg.rounds = r;
+    }
+    if let Some(p) = flags.parse_num::<usize>("population")? {
+        cfg.population = p;
+    }
+    if let Some(m) = flags.parse_num::<usize>("m")? {
+        cfg.m_latency_keep = m;
+    }
+    if let Some(mu) = flags.parse_num::<f64>("mu")? {
+        cfg.mu_snr_db = mu;
+    }
+    if let Some(s) = flags.parse_num::<u64>("seed")? {
+        cfg.seed = s;
+    }
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+
+    let wname = flags
+        .get("workload")
+        .ok_or_else(|| anyhow::anyhow!("--workload is required (e.g. MM1)"))?;
+    let workload = suites::by_name(wname).ok_or_else(|| {
+        anyhow::anyhow!("unknown workload '{wname}' (MM1..MM4, MV1..MV4, CONV1..CONV3)")
+    })?;
+
+    let out = if let Some(events) = flags.get("events") {
+        let log = EventLog::to_file(std::path::Path::new(events))?;
+        let driver = Driver::new(DriverConfig { n_workers: 1, queue_cap: 1 }).with_log(log);
+        let (mut results, _) = driver.run_suite(vec![ecokernel::coordinator::SearchJob {
+            name: wname.to_string(),
+            workload,
+            cfg: cfg.clone(),
+        }]);
+        results.remove(0).outcome
+    } else {
+        run_search(workload, &cfg)
+    };
+
+    if flags.has("json") {
+        let obj = Json::obj(vec![
+            ("workload", Json::str(workload.to_string())),
+            ("gpu", Json::str(cfg.gpu.name())),
+            ("mode", Json::str(cfg.mode.name())),
+            ("schedule", Json::str(out.best.schedule.to_string())),
+            ("variant_id", Json::str(out.best.schedule.variant_id())),
+            ("latency_ms", Json::num(out.best.latency_s * 1e3)),
+            ("energy_mj", Json::num(out.best.energy_j * 1e3)),
+            ("power_w", Json::num(out.best.avg_power_w)),
+            ("rounds", Json::num(out.rounds.len() as f64)),
+            ("n_energy_measurements", Json::num(out.n_energy_measurements() as f64)),
+            ("sim_time_s", Json::num(out.clock.total_s)),
+        ]);
+        println!("{}", obj.to_string());
+    } else {
+        println!("workload  : {workload} on {} [{}]", cfg.gpu, cfg.mode.name());
+        println!("best      : {}", out.best.schedule);
+        println!("variant   : {}", out.best.schedule.variant_id());
+        println!("latency   : {:.4} ms", out.best.latency_s * 1e3);
+        println!("energy    : {:.3} mJ", out.best.energy_j * 1e3);
+        println!("power     : {:.1} W", out.best.avg_power_w);
+        println!(
+            "search    : {} rounds, {} energy measurements, {:.1}s simulated",
+            out.rounds.len(),
+            out.n_energy_measurements(),
+            out.clock.total_s
+        );
+        if !out.k_trace.is_empty() {
+            let trace: Vec<String> = out.k_trace.iter().map(|k| format!("{k:.1}")).collect();
+            println!("k trace   : {}", trace.join(" "));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
+    let Some(id) = args.first() else {
+        anyhow::bail!("experiment id required: table1..table5, fig2..fig5, all");
+    };
+    let flags = Flags::parse(&args[1..], &["paper", "quick"])?;
+    let effort = if flags.has("paper") { Effort::Paper } else { Effort::Quick };
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL_IDS.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let text = experiments::run_by_id(id, effort)?;
+        println!("{text}");
+        println!("[{id} done in {:.1}s wall]\n", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &[String]) -> anyhow::Result<()> {
+    let flags = Flags::parse(args, &["list", "check"])?;
+    let dir = flags
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(ArtifactRegistry::default_dir);
+    let reg = ArtifactRegistry::open(&dir)?;
+    if flags.has("list") || (!flags.has("check") && !flags.has("run")) {
+        println!("{} artifacts in {:?}:", reg.n_artifacts(), reg.dir);
+        for wid in reg.workload_ids() {
+            let variants: Vec<&str> =
+                reg.variants(wid).iter().map(|m| m.variant_id.as_str()).collect();
+            println!("  {wid}: {}", variants.join(" "));
+        }
+        return Ok(());
+    }
+    if flags.has("check") {
+        // Compile every artifact and run it on ones-inputs.
+        let mut n_ok = 0;
+        for wid in reg.workload_ids() {
+            for meta in reg.variants(wid) {
+                let kernel = reg.load(meta)?;
+                let inputs: Vec<(Vec<f32>, Vec<usize>)> = meta
+                    .arg_shapes
+                    .iter()
+                    .map(|s| (vec![1.0f32; s.iter().product()], s.clone()))
+                    .collect();
+                let refs: Vec<(&[f32], &[usize])> =
+                    inputs.iter().map(|(d, s)| (d.as_slice(), s.as_slice())).collect();
+                let out = kernel.run_f32(&refs)?;
+                anyhow::ensure!(!out.is_empty(), "{}: empty output", meta.name());
+                anyhow::ensure!(
+                    out.iter().all(|v| v.is_finite()),
+                    "{}: non-finite output",
+                    meta.name()
+                );
+                n_ok += 1;
+            }
+        }
+        println!("checked {n_ok} artifacts: all compile and execute");
+        return Ok(());
+    }
+    if let Some(wid) = flags.get("run") {
+        let meta = match flags.get("variant") {
+            Some(v) => reg
+                .get(wid, v)
+                .ok_or_else(|| anyhow::anyhow!("no variant '{v}' for '{wid}'"))?,
+            None => reg
+                .variants(wid)
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("no artifacts for '{wid}'"))?,
+        };
+        let kernel = reg.load(meta)?;
+        let inputs: Vec<(Vec<f32>, Vec<usize>)> = meta
+            .arg_shapes
+            .iter()
+            .map(|s| (vec![1.0f32; s.iter().product()], s.clone()))
+            .collect();
+        let refs: Vec<(&[f32], &[usize])> =
+            inputs.iter().map(|(d, s)| (d.as_slice(), s.as_slice())).collect();
+        let t = kernel.time_once(&refs)?;
+        println!(
+            "{}: compiled in {:.2}s, executed in {:.4}s ({} inputs)",
+            meta.name(),
+            kernel.compile_time.as_secs_f64(),
+            t,
+            meta.arg_shapes.len()
+        );
+        return Ok(());
+    }
+    Ok(())
+}
+
+fn cmd_gpus() -> anyhow::Result<()> {
+    for arch in GpuArch::ALL {
+        let s = arch.spec();
+        println!(
+            "{:8} {:>3} SMs x {:>3} cores @ {:.2} GHz  peak {:>6.1} TFLOP/s  DRAM {:>6.0} GB/s  TDP {:>3.0} W",
+            arch.name(),
+            s.num_sms,
+            s.cores_per_sm,
+            s.sm_clock_ghz,
+            s.peak_gflops() / 1e3,
+            s.dram_bw_gbs,
+            s.tdp_w
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,211 @@
+//! `NvmlMeter`: the full measurement procedure of §4.4.
+//!
+//! 1. pre-heat the GPU to a consistent temperature (cold-start only);
+//! 2. execute the kernel repeatedly until enough power samples exist;
+//! 3. average the noisy samples → average power;
+//! 4. energy of one run = average power × (noisily timed) latency.
+//!
+//! Every step advances the device's [`ThermalState`] and charges the
+//! [`MeasurementClock`] — measurement is the dominant cost of a search
+//! round, which the paper's cost model exists to avoid (Fig. 5).
+
+use super::sampler::PowerSampler;
+use super::MeasurementClock;
+use crate::config::{GpuSpec, NvmlConfig};
+use crate::schedule::Candidate;
+use crate::sim::{self, ThermalState};
+use crate::util::Rng;
+
+/// One NVML energy measurement result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    /// Measured latency of one kernel run (s).
+    pub latency_s: f64,
+    /// Measured average power (W).
+    pub avg_power_w: f64,
+    /// Measured energy of one kernel run (J) = power × latency.
+    pub energy_j: f64,
+    /// Kernel repetitions executed.
+    pub reps: usize,
+    /// Power samples collected.
+    pub samples: usize,
+    /// Die temperature at measurement time (C).
+    pub temp_c: f64,
+}
+
+/// A simulated NVML-based power/energy meter bound to one GPU device.
+#[derive(Debug, Clone)]
+pub struct NvmlMeter {
+    spec: GpuSpec,
+    cfg: NvmlConfig,
+    sampler: PowerSampler,
+    thermal: ThermalState,
+    /// Clock charged by this meter.
+    pub clock: MeasurementClock,
+}
+
+impl NvmlMeter {
+    /// A meter on a *cold* device (first measurement will pre-heat).
+    pub fn new(spec: GpuSpec, cfg: NvmlConfig) -> NvmlMeter {
+        let thermal = ThermalState::cold(&spec);
+        NvmlMeter { sampler: PowerSampler::new(cfg.clone()), spec, cfg, thermal, clock: MeasurementClock::new() }
+    }
+
+    /// A meter on a pre-warmed device (useful in tests).
+    pub fn warmed(spec: GpuSpec, cfg: NvmlConfig) -> NvmlMeter {
+        let thermal = ThermalState::warmed(&spec);
+        NvmlMeter { sampler: PowerSampler::new(cfg.clone()), spec, cfg, thermal, clock: MeasurementClock::new() }
+    }
+
+    pub fn spec(&self) -> &GpuSpec {
+        &self.spec
+    }
+
+    pub fn temperature_c(&self) -> f64 {
+        self.thermal.temp_c
+    }
+
+    /// Pre-heat to the measurement steady state (§4.4: "we run a
+    /// pre-heating kernel for several seconds to warm up the GPU").
+    /// The pre-heating kernel is designed to drive the die to the
+    /// steady temperature; charges `warmup_s` to the clock.
+    pub fn warm_up(&mut self) {
+        if self.thermal.is_steady(1.5) {
+            return;
+        }
+        self.clock.charge_warmup(self.cfg.warmup_s.max(0.5));
+        self.thermal = ThermalState::warmed(&self.spec);
+    }
+
+    /// Measure energy of `cand` per §4.4. Skipping `warm_up()` first
+    /// yields readings biased by the (colder) die temperature.
+    pub fn measure(&mut self, cand: &Candidate, rng: &mut Rng) -> Measurement {
+        // True behaviour at the *current* temperature.
+        let truth = sim::evaluate_at(&cand.gemm(), &cand.schedule, &self.spec, self.thermal.temp_c);
+
+        let reps = self.sampler.reps_for(truth.latency_s);
+        let exec_s = reps as f64 * truth.latency_s;
+        let samples =
+            ((exec_s / self.sampler.sampling_period_s()).floor() as usize).max(1);
+
+        // Running the measurement batch heats the die.
+        self.thermal.run_load(exec_s, truth.avg_power_w / self.spec.tdp_w);
+        self.clock.charge_kernel_exec(exec_s);
+        self.clock.note_energy_measurement();
+
+        let (_all, mean_power) = self.sampler.sample_n(truth.avg_power_w, samples, rng);
+        let latency = self.sampler.time_latency(truth.latency_s, rng);
+
+        Measurement {
+            latency_s: latency,
+            avg_power_w: mean_power,
+            energy_j: mean_power * latency,
+            reps,
+            samples,
+            temp_c: self.thermal.temp_c,
+        }
+    }
+
+    /// Fast latency-only timing (a handful of runs, no power sampling).
+    /// This is what `LatencyEvaAndPick` uses for every candidate.
+    pub fn time_latency(&mut self, cand: &Candidate, rng: &mut Rng) -> f64 {
+        let truth = sim::evaluate_at(&cand.gemm(), &cand.schedule, &self.spec, self.thermal.temp_c);
+        // 10 timing runs + launch overheads.
+        let eval_s = 10.0 * truth.latency_s + 50e-6;
+        self.thermal.run_load(eval_s, truth.avg_power_w / self.spec.tdp_w);
+        self.clock.charge_latency_eval(eval_s);
+        self.sampler.time_latency(truth.latency_s, rng)
+    }
+
+    /// Let the device sit idle (cooling) for `s` seconds.
+    pub fn idle(&mut self, s: f64) {
+        self.thermal.run_idle(s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+    use crate::workload::suites;
+    
+    
+
+    fn candidate() -> Candidate {
+        let spec = GpuArch::A100.spec();
+        let space = crate::schedule::space::ScheduleSpace::new(suites::MM1, &spec);
+        Candidate::new(suites::MM1, space.fallback())
+    }
+
+    #[test]
+    fn measurement_close_to_truth_when_warm() {
+        let spec = GpuArch::A100.spec();
+        let mut meter = NvmlMeter::warmed(spec.clone(), Default::default());
+        let mut rng = Rng::seed_from_u64(1);
+        let c = candidate();
+        let truth = sim::evaluate_candidate(&c, &spec);
+        let m = meter.measure(&c, &mut rng);
+        let rel = (m.energy_j - truth.energy_j).abs() / truth.energy_j;
+        assert!(rel < 0.08, "relative error {rel}");
+        assert!(m.reps > 1, "ms-scale kernels need repetition");
+    }
+
+    #[test]
+    fn cold_measurement_is_biased_low() {
+        // Colder die -> less leakage -> lower measured energy than the
+        // warmed steady-state truth. This is the §5.1 pitfall.
+        let spec = GpuArch::A100.spec();
+        let c = candidate();
+        let truth = sim::evaluate_candidate(&c, &spec);
+        let mut rng = Rng::seed_from_u64(2);
+        let mut cold = NvmlMeter::new(spec.clone(), Default::default());
+        let m = cold.measure(&c, &mut rng);
+        assert!(
+            m.energy_j < truth.energy_j,
+            "cold {} !< steady {}",
+            m.energy_j,
+            truth.energy_j
+        );
+    }
+
+    #[test]
+    fn warm_up_removes_the_bias() {
+        let spec = GpuArch::A100.spec();
+        let c = candidate();
+        let truth = sim::evaluate_candidate(&c, &spec);
+        let mut rng = Rng::seed_from_u64(3);
+        let mut meter = NvmlMeter::new(spec.clone(), Default::default());
+        meter.warm_up();
+        assert!(meter.clock.warmup_s > 0.0, "warm-up must cost time");
+        let m = meter.measure(&c, &mut rng);
+        let rel = (m.energy_j - truth.energy_j).abs() / truth.energy_j;
+        assert!(rel < 0.08, "relative error after warm-up {rel}");
+    }
+
+    #[test]
+    fn measurement_charges_seconds() {
+        // §5.1: one measurement takes on the order of seconds.
+        let spec = GpuArch::A100.spec();
+        let mut meter = NvmlMeter::warmed(spec, Default::default());
+        let mut rng = Rng::seed_from_u64(4);
+        meter.measure(&candidate(), &mut rng);
+        assert!(
+            meter.clock.kernel_exec_s > 0.02,
+            "exec time {} too cheap",
+            meter.clock.kernel_exec_s
+        );
+        assert_eq!(meter.clock.n_energy_measurements, 1);
+    }
+
+    #[test]
+    fn latency_timing_is_much_cheaper_than_energy_measurement() {
+        let spec = GpuArch::A100.spec();
+        let mut rng = Rng::seed_from_u64(5);
+        let c = candidate();
+        let mut m1 = NvmlMeter::warmed(spec.clone(), Default::default());
+        m1.measure(&c, &mut rng);
+        let mut m2 = NvmlMeter::warmed(spec, Default::default());
+        m2.time_latency(&c, &mut rng);
+        assert!(m2.clock.total_s < m1.clock.total_s / 5.0);
+    }
+}

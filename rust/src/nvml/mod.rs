@@ -1,0 +1,110 @@
+//! Simulated NVML power-measurement framework (§4.4, §5.1).
+//!
+//! Reproduces the paper's measurement *methodology and costs* on top of
+//! the simulator:
+//!
+//! * the power sensor samples at 30–50 Hz — far slower than a kernel
+//!   run, so the kernel is repeated until enough samples accumulate;
+//! * each sample carries Gaussian noise; latency timing carries noise;
+//! * the die temperature drifts with load (leakage ↑ with temp), so a
+//!   **warm-up** precedes measurement batches on a cold GPU;
+//! * every measurement **charges wall-clock seconds** to a
+//!   [`MeasurementClock`] — the currency of the Fig. 5 search-speed
+//!   comparison.
+
+pub mod measure;
+pub mod sampler;
+
+pub use measure::{Measurement, NvmlMeter};
+pub use sampler::PowerSampler;
+
+
+/// Accumulates the simulated wall-clock cost of measurement and search
+/// activities. One clock per (simulated) GPU device.
+#[derive(Debug, Clone, Default)]
+pub struct MeasurementClock {
+    /// Total simulated seconds elapsed.
+    pub total_s: f64,
+    /// Seconds spent in warm-up pre-heating.
+    pub warmup_s: f64,
+    /// Seconds spent executing kernels under measurement.
+    pub kernel_exec_s: f64,
+    /// Seconds spent in latency-only timing runs.
+    pub latency_eval_s: f64,
+    /// Seconds attributed to cost-model prediction (milliseconds each).
+    pub model_predict_s: f64,
+    /// Seconds attributed to cost-model (re)training.
+    pub model_train_s: f64,
+    /// Number of full NVML energy measurements taken.
+    pub n_energy_measurements: usize,
+    /// Number of latency timings taken.
+    pub n_latency_timings: usize,
+}
+
+impl MeasurementClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn charge_warmup(&mut self, s: f64) {
+        self.warmup_s += s;
+        self.total_s += s;
+    }
+
+    pub fn charge_kernel_exec(&mut self, s: f64) {
+        self.kernel_exec_s += s;
+        self.total_s += s;
+    }
+
+    pub fn charge_latency_eval(&mut self, s: f64) {
+        self.latency_eval_s += s;
+        self.total_s += s;
+        self.n_latency_timings += 1;
+    }
+
+    pub fn charge_model_predict(&mut self, s: f64) {
+        self.model_predict_s += s;
+        self.total_s += s;
+    }
+
+    pub fn charge_model_train(&mut self, s: f64) {
+        self.model_train_s += s;
+        self.total_s += s;
+    }
+
+    pub fn note_energy_measurement(&mut self) {
+        self.n_energy_measurements += 1;
+    }
+
+    /// Merge another clock (e.g. from a worker) into this one.
+    pub fn merge(&mut self, other: &MeasurementClock) {
+        self.total_s += other.total_s;
+        self.warmup_s += other.warmup_s;
+        self.kernel_exec_s += other.kernel_exec_s;
+        self.latency_eval_s += other.latency_eval_s;
+        self.model_predict_s += other.model_predict_s;
+        self.model_train_s += other.model_train_s;
+        self.n_energy_measurements += other.n_energy_measurements;
+        self.n_latency_timings += other.n_latency_timings;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_accumulates_and_merges() {
+        let mut a = MeasurementClock::new();
+        a.charge_warmup(3.0);
+        a.charge_kernel_exec(1.5);
+        a.note_energy_measurement();
+        let mut b = MeasurementClock::new();
+        b.charge_latency_eval(0.25);
+        b.charge_model_predict(0.001);
+        a.merge(&b);
+        assert!((a.total_s - 4.751).abs() < 1e-12);
+        assert_eq!(a.n_energy_measurements, 1);
+        assert_eq!(a.n_latency_timings, 1);
+    }
+}

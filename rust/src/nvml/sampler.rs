@@ -1,0 +1,97 @@
+//! The power sampler: a 30–50 Hz noisy sensor over the simulator's true
+//! instantaneous power, mimicking `nvmlDeviceGetPowerUsage`.
+
+use crate::config::NvmlConfig;
+use crate::util::Rng;
+
+/// One standard-normal draw (delegates to the in-tree Box–Muller).
+pub fn normal_draw(rng: &mut Rng) -> f64 {
+    rng.normal()
+}
+
+/// Samples noisy power readings at a fixed rate.
+#[derive(Debug, Clone)]
+pub struct PowerSampler {
+    cfg: NvmlConfig,
+}
+
+impl PowerSampler {
+    pub fn new(cfg: NvmlConfig) -> Self {
+        PowerSampler { cfg }
+    }
+
+    pub fn sampling_period_s(&self) -> f64 {
+        1.0 / self.cfg.sampling_hz
+    }
+
+    /// Number of kernel repetitions needed so that `min_samples` power
+    /// samples land inside the execution window.
+    pub fn reps_for(&self, kernel_latency_s: f64) -> usize {
+        let window_s = self.cfg.min_samples as f64 * self.sampling_period_s();
+        let reps = (window_s / kernel_latency_s.max(1e-9)).ceil() as usize;
+        reps.clamp(1, self.cfg.max_reps)
+    }
+
+    /// Draw `n` noisy samples around `true_power_w`; returns (samples,
+    /// mean).
+    pub fn sample_n(&self, true_power_w: f64, n: usize, rng: &mut Rng) -> (Vec<f64>, f64) {
+        let sigma = (true_power_w * self.cfg.power_noise_rel).max(1e-9);
+        let samples: Vec<f64> =
+            (0..n).map(|_| (true_power_w + sigma * normal_draw(rng)).max(0.0)).collect();
+        let mean = samples.iter().sum::<f64>() / n.max(1) as f64;
+        (samples, mean)
+    }
+
+    /// One noisy latency timing around `true_latency_s`.
+    pub fn time_latency(&self, true_latency_s: f64, rng: &mut Rng) -> f64 {
+        let sigma = (true_latency_s * self.cfg.latency_noise_rel).max(1e-15);
+        (true_latency_s + sigma * normal_draw(rng)).max(true_latency_s * 0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NvmlConfig;
+    
+    
+
+    #[test]
+    fn reps_scale_inversely_with_latency() {
+        let s = PowerSampler::new(NvmlConfig::default());
+        // A 1 ms kernel needs ~1111 reps for 50 samples at 45 Hz.
+        let fast = s.reps_for(1e-3);
+        let slow = s.reps_for(10e-3);
+        assert!(fast > slow);
+        assert!(fast >= 1000, "fast={fast}");
+        // Paper §5.1: thousands of iterations for ms-scale kernels.
+        assert!(s.reps_for(0.5e-3) >= 2000);
+    }
+
+    #[test]
+    fn reps_capped() {
+        let cfg = NvmlConfig { max_reps: 500, ..NvmlConfig::default() };
+        let s = PowerSampler::new(cfg);
+        assert_eq!(s.reps_for(1e-7), 500);
+    }
+
+    #[test]
+    fn sample_mean_near_truth() {
+        let s = PowerSampler::new(NvmlConfig::default());
+        let mut rng = Rng::seed_from_u64(1);
+        let (_samples, mean) = s.sample_n(200.0, 500, &mut rng);
+        assert!((mean - 200.0).abs() < 2.0, "mean={mean}");
+    }
+
+    #[test]
+    fn latency_timing_is_noisy_but_close() {
+        let s = PowerSampler::new(NvmlConfig::default());
+        let mut rng = Rng::seed_from_u64(2);
+        let mut sum = 0.0;
+        for _ in 0..100 {
+            sum += s.time_latency(1e-3, &mut rng);
+        }
+        let mean = sum / 100.0;
+        assert!((mean - 1e-3).abs() / 1e-3 < 0.01);
+    }
+}

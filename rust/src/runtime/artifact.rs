@@ -1,0 +1,136 @@
+//! Loading and executing one AOT artifact (HLO text → PJRT executable).
+//!
+//! Interchange is HLO *text*: `HloModuleProto::from_text_file` reparses
+//! and reassigns instruction ids, sidestepping the 64-bit-id protos
+//! that jax >= 0.5 emits and xla_extension 0.5.1 rejects.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Metadata for one artifact (one manifest.json entry).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub workload_id: String,
+    pub op: String,
+    pub variant_id: String,
+    pub bm: usize,
+    pub bn: usize,
+    pub bk: usize,
+    pub file: PathBuf,
+    /// Expected input shapes, outermost-first.
+    pub arg_shapes: Vec<Vec<usize>>,
+}
+
+impl ArtifactMeta {
+    /// Parse one manifest entry.
+    pub fn from_json(dir: &Path, v: &crate::util::Json) -> Result<ArtifactMeta> {
+        let get_str = |k: &str| -> Result<String> {
+            Ok(v.get(k)
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("manifest entry missing '{k}'"))?
+                .to_string())
+        };
+        let get_usize = |k: &str| -> Result<usize> {
+            Ok(v.get(k)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| anyhow!("manifest entry missing '{k}'"))? as usize)
+        };
+        let arg_shapes = v
+            .get("arg_shapes")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow!("manifest entry missing 'arg_shapes'"))?
+            .iter()
+            .map(|shape| {
+                shape
+                    .as_arr()
+                    .map(|dims| {
+                        dims.iter().filter_map(|d| d.as_f64()).map(|d| d as usize).collect()
+                    })
+                    .ok_or_else(|| anyhow!("bad arg shape"))
+            })
+            .collect::<Result<Vec<Vec<usize>>>>()?;
+        Ok(ArtifactMeta {
+            workload_id: get_str("workload_id")?,
+            op: get_str("op")?,
+            variant_id: get_str("variant_id")?,
+            bm: get_usize("bm")?,
+            bn: get_usize("bn")?,
+            bk: get_usize("bk")?,
+            file: dir.join(get_str("file")?),
+            arg_shapes,
+        })
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}__{}", self.workload_id, self.variant_id)
+    }
+}
+
+/// A compiled, executable kernel.
+pub struct LoadedKernel {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall-clock time spent compiling (for the perf log).
+    pub compile_time: std::time::Duration,
+}
+
+impl LoadedKernel {
+    /// Load the HLO text and compile it on the shared PJRT CPU client.
+    pub fn load(meta: ArtifactMeta) -> Result<LoadedKernel> {
+        let t0 = Instant::now();
+        let path = meta
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = super::client::with_client(|c| {
+            c.compile(&comp).map_err(|e| anyhow!("PJRT compile: {e}"))
+        })?;
+        Ok(LoadedKernel { meta, exe, compile_time: t0.elapsed() })
+    }
+
+    /// Execute with f32 inputs; returns the flattened f32 output of the
+    /// (single-element) result tuple.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            inputs.len() == self.meta.arg_shapes.len(),
+            "expected {} inputs, got {}",
+            self.meta.arg_shapes.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().enumerate() {
+            let want: usize = self.meta.arg_shapes[i].iter().product();
+            anyhow::ensure!(
+                data.len() == want,
+                "input {i}: expected {want} f32s for shape {:?}, got {}",
+                self.meta.arg_shapes[i],
+                data.len()
+            );
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input {i}: {e}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+
+    /// Time one execution (seconds) with the given inputs.
+    pub fn time_once(&self, inputs: &[(&[f32], &[usize])]) -> Result<f64> {
+        let t0 = Instant::now();
+        let _ = self.run_f32(inputs)?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}

@@ -1,0 +1,43 @@
+//! PJRT client wrapper: one lazily-created CPU client **per thread**.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so the
+//! process-wide sharing is thread-local: each thread that touches the
+//! runtime gets its own client on first use. Artifact execution in the
+//! examples and experiments is single-threaded, so in practice one
+//! client is created per process.
+
+use anyhow::Result;
+use std::cell::OnceCell;
+
+thread_local! {
+    static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+}
+
+/// Run `f` with this thread's CPU PJRT client (created on first use).
+pub fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+            let _ = cell.set(client);
+        }
+        f(cell.get().expect("client initialized"))
+    })
+}
+
+/// Report the PJRT platform (e.g. "cpu") and device count.
+pub fn platform_info() -> Result<(String, usize)> {
+    with_client(|c| Ok((c.platform_name(), c.device_count())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_initializes_and_reports_cpu() {
+        let (platform, devices) = platform_info().expect("client");
+        assert_eq!(platform, "cpu");
+        assert!(devices >= 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Runtime: load AOT-compiled HLO artifacts and execute them through
+//! the PJRT C API (`xla` crate). Python never runs here — the artifacts
+//! were lowered once at build time by `python/compile/aot.py`.
+
+pub mod artifact;
+pub mod client;
+pub mod registry;
+
+pub use artifact::{ArtifactMeta, LoadedKernel};
+pub use registry::ArtifactRegistry;

@@ -1,0 +1,132 @@
+//! The artifact registry: indexes `artifacts/manifest.json` and maps a
+//! searched schedule onto the nearest AOT-compiled variant.
+
+use super::artifact::{ArtifactMeta, LoadedKernel};
+use crate::schedule::Schedule;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Index over the artifacts directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    /// workload_id -> variants
+    by_workload: HashMap<String, Vec<ArtifactMeta>>,
+}
+
+impl ArtifactRegistry {
+    /// Open a registry rooted at `dir` (expects `manifest.json`).
+    pub fn open(dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {manifest_path:?} (run `make artifacts`)"))?;
+        let json = crate::util::Json::parse(&text)
+            .map_err(|e| anyhow!("parse manifest.json: {e}"))?;
+        let entries = json.as_arr().ok_or_else(|| anyhow!("manifest must be an array"))?;
+        let mut by_workload: HashMap<String, Vec<ArtifactMeta>> = HashMap::new();
+        for entry in entries {
+            let meta = ArtifactMeta::from_json(dir, entry)?;
+            anyhow::ensure!(meta.file.exists(), "missing artifact file {:?}", meta.file);
+            by_workload.entry(meta.workload_id.clone()).or_default().push(meta);
+        }
+        Ok(ArtifactRegistry { dir: dir.to_path_buf(), by_workload })
+    }
+
+    /// The default registry location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        // Honour ECOKERNEL_ARTIFACTS for tests and deployments.
+        if let Ok(dir) = std::env::var("ECOKERNEL_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        PathBuf::from("artifacts")
+    }
+
+    pub fn workload_ids(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.by_workload.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn variants(&self, workload_id: &str) -> &[ArtifactMeta] {
+        self.by_workload.get(workload_id).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn n_artifacts(&self) -> usize {
+        self.by_workload.values().map(|v| v.len()).sum()
+    }
+
+    /// Exact lookup by variant id.
+    pub fn get(&self, workload_id: &str, variant_id: &str) -> Option<&ArtifactMeta> {
+        self.variants(workload_id).iter().find(|m| m.variant_id == variant_id)
+    }
+
+    /// The palette variant nearest (in log-tile space) to a searched
+    /// schedule's block geometry. This is how a search winner becomes a
+    /// runnable kernel.
+    pub fn nearest(&self, workload_id: &str, sched: &Schedule) -> Option<&ArtifactMeta> {
+        let (bm, bn, bk) =
+            (sched.block_m() as f64, sched.block_n() as f64, sched.tile_k as f64);
+        self.variants(workload_id).iter().min_by(|a, b| {
+            let d = |m: &ArtifactMeta| {
+                let lm = (m.bm as f64 / bm).ln().abs();
+                let ln_ = (m.bn as f64 / bn).ln().abs();
+                let lk = (m.bk as f64 / bk).ln().abs();
+                lm + ln_ + lk
+            };
+            d(a).partial_cmp(&d(b)).expect("finite distance")
+        })
+    }
+
+    /// Load + compile one variant.
+    pub fn load(&self, meta: &ArtifactMeta) -> Result<LoadedKernel> {
+        LoadedKernel::load(meta.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> Option<ArtifactRegistry> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        ArtifactRegistry::open(&dir).ok()
+    }
+
+    #[test]
+    fn registry_indexes_manifest() {
+        let Some(reg) = registry() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(reg.n_artifacts() >= 40, "{}", reg.n_artifacts());
+        assert!(reg.workload_ids().contains(&"mm_b1_m512_n512_k512"));
+    }
+
+    #[test]
+    fn nearest_picks_matching_geometry() {
+        let Some(reg) = registry() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let sched = Schedule {
+            threads_m: 8,
+            threads_n: 8,
+            reg_m: 8,
+            reg_n: 8,
+            tile_k: 16,
+            unroll_k: 4,
+            vector_width: 4,
+            split_k: 1,
+            use_shared: true,
+        };
+        // block = 64x64, bk=16 — exact palette member.
+        let m = reg.nearest("mm_b1_m512_n512_k512", &sched).expect("variant");
+        assert_eq!((m.bm, m.bn, m.bk), (64, 64, 16));
+
+        // An off-palette geometry snaps to the closest member.
+        let odd = Schedule { threads_m: 4, reg_m: 2, ..sched }; // block_m = 8
+        let m2 = reg.nearest("mm_b1_m512_n512_k512", &odd).expect("variant");
+        assert_eq!(m2.bm, 16, "snaps up to the smallest palette bm");
+    }
+}

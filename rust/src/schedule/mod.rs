@@ -1,0 +1,250 @@
+//! Tensor-program schedule representation (the search space).
+//!
+//! Following Ansor's hierarchical decomposition (§2.2), every workload
+//! lowers to an implicit GEMM (see [`crate::workload::GemmView`]) and a
+//! [`Schedule`] fixes its GPU mapping:
+//!
+//! * a **thread-block tile** `(bm, bn)` where `bm = threads_m * reg_m`,
+//!   `bn = threads_n * reg_n` — the block computes a `bm x bn` output
+//!   tile with `threads_m * threads_n` threads, each holding a
+//!   `reg_m x reg_n` register accumulator;
+//! * a **reduction stage depth** `tile_k` — operand panels of shape
+//!   `bm x tile_k` and `tile_k x bn` are staged in shared memory
+//!   (VMEM, in the TPU adaptation) per k-step;
+//! * `vector_width` — global-load vectorization (float1/2/4);
+//! * `split_k` — reduction split across blocks (exposes parallelism for
+//!   skinny GEMMs such as MV, at the price of an atomic/second-pass
+//!   reduction);
+//! * `unroll_k` — innermost unroll, affecting int-op overhead and ILP.
+//!
+//! The same knobs parameterize the L1 Pallas kernels, so any searched
+//! schedule maps onto a compilable artifact (see `python/compile/`).
+
+pub mod mutation;
+pub mod space;
+pub mod tiling;
+
+use crate::config::GpuSpec;
+use crate::workload::{GemmView, Workload};
+
+/// A complete schedule for one workload's implicit GEMM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Schedule {
+    /// Threads along the M axis of the block tile.
+    pub threads_m: usize,
+    /// Threads along the N axis of the block tile.
+    pub threads_n: usize,
+    /// Register tile per thread along M.
+    pub reg_m: usize,
+    /// Register tile per thread along N.
+    pub reg_n: usize,
+    /// Shared-memory staging depth along K.
+    pub tile_k: usize,
+    /// Innermost unroll factor (divides `tile_k`).
+    pub unroll_k: usize,
+    /// Global-memory load vector width (floats per instruction).
+    pub vector_width: usize,
+    /// Reduction split across blocks (1 = none).
+    pub split_k: usize,
+    /// Stage operand panels in shared memory (false = stream from L2,
+    /// only sensible for MV-like shapes).
+    pub use_shared: bool,
+}
+
+impl Schedule {
+    /// Block tile extent along M.
+    pub fn block_m(&self) -> usize {
+        self.threads_m * self.reg_m
+    }
+
+    /// Block tile extent along N.
+    pub fn block_n(&self) -> usize {
+        self.threads_n * self.reg_n
+    }
+
+    /// Threads per block.
+    pub fn threads_per_block(&self) -> usize {
+        self.threads_m * self.threads_n
+    }
+
+    /// Grid extent (blocks) for a GEMM view, including batch and split-k.
+    pub fn grid(&self, g: &GemmView) -> usize {
+        let gm = g.m.div_ceil(self.block_m());
+        let gn = g.n.div_ceil(self.block_n());
+        g.batch * gm * gn * self.split_k
+    }
+
+    /// K extent each block reduces over (after split-k).
+    pub fn k_per_block(&self, g: &GemmView) -> usize {
+        g.k.div_ceil(self.split_k)
+    }
+
+    /// Number of k-steps (shared-memory stages) per block.
+    pub fn k_steps(&self, g: &GemmView) -> usize {
+        self.k_per_block(g).div_ceil(self.tile_k)
+    }
+
+    /// Shared memory bytes per block (two FP32 operand panels, double
+    /// buffered when staging is on).
+    pub fn shared_bytes_per_block(&self) -> usize {
+        if !self.use_shared {
+            return 0;
+        }
+        let a_panel = self.block_m() * self.tile_k;
+        let b_panel = self.tile_k * self.block_n();
+        // Double buffering: overlap the next panel load with compute.
+        2 * 4 * (a_panel + b_panel)
+    }
+
+    /// Estimated registers per thread: accumulator + operand fragments +
+    /// addressing/bookkeeping.
+    pub fn regs_per_thread(&self) -> usize {
+        self.reg_m * self.reg_n + 2 * (self.reg_m + self.reg_n) + 24
+    }
+
+    /// Architecture legality: resource limits of `spec`.
+    pub fn legal_on(&self, spec: &GpuSpec) -> bool {
+        let tpb = self.threads_per_block();
+        tpb >= 32
+            && tpb <= spec.max_threads_per_block
+            && self.shared_bytes_per_block() <= spec.max_shared_per_block
+            && self.regs_per_thread() <= spec.max_regs_per_thread
+            && self.unroll_k <= self.tile_k
+            && self.tile_k % self.unroll_k == 0
+            && matches!(self.vector_width, 1 | 2 | 4)
+    }
+
+    /// Workload legality: the tile must not be degenerate for the shape
+    /// (block tiles no larger than 2x the padded problem extent, split-k
+    /// must leave at least one stage of work).
+    pub fn legal_for(&self, g: &GemmView, spec: &GpuSpec) -> bool {
+        self.legal_on(spec)
+            && self.block_m() <= 2 * g.m.next_power_of_two()
+            && self.block_n() <= 2 * g.n.next_power_of_two()
+            && self.k_per_block(g) >= self.tile_k.min(g.k)
+            && self.split_k <= g.k
+            // MV-style shapes (m == 1) must not spend threads on M.
+            && (g.m > 1 || (self.threads_m == 1 && self.reg_m == 1))
+            // vector loads must divide the contiguous extent
+            && g.n % self.vector_width == 0
+    }
+
+    /// Stable identifier of the *artifact-relevant* part of the schedule
+    /// (block tile geometry). Used to map a searched schedule onto one of
+    /// the AOT-compiled Pallas variants.
+    pub fn variant_id(&self) -> String {
+        format!("bm{}_bn{}_bk{}", self.block_m(), self.block_n(), self.tile_k)
+    }
+}
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "S[bm={}x{} bn={}x{} bk={} u={} v={} sk={} sh={}]",
+            self.threads_m,
+            self.reg_m,
+            self.threads_n,
+            self.reg_n,
+            self.tile_k,
+            self.unroll_k,
+            self.vector_width,
+            self.split_k,
+            if self.use_shared { 1 } else { 0 }
+        )
+    }
+}
+
+/// A schedule bound to its workload — the unit the search evaluates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub workload: Workload,
+    pub schedule: Schedule,
+}
+
+impl Candidate {
+    pub fn new(workload: Workload, schedule: Schedule) -> Self {
+        Candidate { workload, schedule }
+    }
+
+    pub fn gemm(&self) -> GemmView {
+        self.workload.gemm_view()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+    use crate::workload::suites;
+
+    fn basic() -> Schedule {
+        Schedule {
+            threads_m: 8,
+            threads_n: 16,
+            reg_m: 4,
+            reg_n: 4,
+            tile_k: 16,
+            unroll_k: 4,
+            vector_width: 4,
+            split_k: 1,
+            use_shared: true,
+        }
+    }
+
+    #[test]
+    fn derived_geometry() {
+        let s = basic();
+        assert_eq!(s.block_m(), 32);
+        assert_eq!(s.block_n(), 64);
+        assert_eq!(s.threads_per_block(), 128);
+        let g = suites::MM1.gemm_view();
+        assert_eq!(s.grid(&g), (512 / 32) * (512 / 64));
+        assert_eq!(s.k_steps(&g), 512 / 16);
+    }
+
+    #[test]
+    fn shared_bytes_double_buffered() {
+        let s = basic();
+        // (32*16 + 16*64) * 4B * 2 = 12288
+        assert_eq!(s.shared_bytes_per_block(), 12288);
+    }
+
+    #[test]
+    fn legality_checks() {
+        let spec = GpuArch::A100.spec();
+        let s = basic();
+        assert!(s.legal_on(&spec));
+
+        let mut too_many_threads = s;
+        too_many_threads.threads_m = 64;
+        too_many_threads.threads_n = 64;
+        assert!(!too_many_threads.legal_on(&spec));
+
+        let mut bad_unroll = s;
+        bad_unroll.unroll_k = 3;
+        assert!(!bad_unroll.legal_on(&spec));
+
+        let mut huge_regs = s;
+        huge_regs.reg_m = 16;
+        huge_regs.reg_n = 16;
+        assert!(!huge_regs.legal_on(&spec));
+    }
+
+    #[test]
+    fn mv_legality_forces_unit_m() {
+        let spec = GpuArch::A100.spec();
+        let g = suites::MV3.gemm_view();
+        let mut s = basic();
+        assert!(!s.legal_for(&g, &spec), "threads_m>1 illegal for MV");
+        s.threads_m = 1;
+        s.reg_m = 1;
+        s.threads_n = 128;
+        assert!(s.legal_for(&g, &spec));
+    }
+
+    #[test]
+    fn variant_id_is_block_geometry() {
+        assert_eq!(basic().variant_id(), "bm32_bn64_bk16");
+    }
+}

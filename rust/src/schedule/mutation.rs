@@ -1,0 +1,208 @@
+//! Genetic operators over schedules: knob-local mutation and two-parent
+//! crossover (§4.4 "GeneticReproduction").
+//!
+//! Mutation moves a knob to an *adjacent* member of its domain (local
+//! search in the tile lattice); crossover mixes whole axes (the M-axis
+//! split of one parent with the N/K-axis split of the other), which
+//! preserves per-axis legality structure.
+
+use super::space::ScheduleSpace;
+use super::tiling::nearest_index;
+use super::Schedule;
+use crate::util::Rng;
+
+/// Which knob a mutation targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Knob {
+    ThreadsM,
+    ThreadsN,
+    RegM,
+    RegN,
+    TileK,
+    UnrollK,
+    VectorWidth,
+    SplitK,
+    UseShared,
+}
+
+pub const ALL_KNOBS: [Knob; 9] = [
+    Knob::ThreadsM,
+    Knob::ThreadsN,
+    Knob::RegM,
+    Knob::RegN,
+    Knob::TileK,
+    Knob::UnrollK,
+    Knob::VectorWidth,
+    Knob::SplitK,
+    Knob::UseShared,
+];
+
+/// Mutate one knob of `s` to an adjacent domain value. Returns a legal
+/// schedule (falls back to `s` unchanged if no legal neighbour exists).
+pub fn mutate_one(space: &ScheduleSpace, s: &Schedule, rng: &mut Rng) -> Schedule {
+    // Try a few knobs before giving up; illegal proposals are rejected.
+    for _ in 0..16 {
+        let knob = ALL_KNOBS[rng.gen_range(0, ALL_KNOBS.len())];
+        let proposal = step_knob(space, s, knob, rng);
+        if proposal != *s && space.is_legal(&proposal) {
+            return proposal;
+        }
+    }
+    *s
+}
+
+/// Mutate each knob independently with probability `p`.
+pub fn mutate(space: &ScheduleSpace, s: &Schedule, p: f64, rng: &mut Rng) -> Schedule {
+    let mut out = *s;
+    for &knob in &ALL_KNOBS {
+        if rng.gen_bool(p) {
+            let proposal = step_knob(space, &out, knob, rng);
+            if space.is_legal(&proposal) {
+                out = proposal;
+            }
+        }
+    }
+    out
+}
+
+/// Two-parent crossover: child takes the M-axis genes from `a`, the
+/// N-axis genes from `b`, and each remaining gene from a random parent.
+pub fn crossover(
+    space: &ScheduleSpace,
+    a: &Schedule,
+    b: &Schedule,
+    rng: &mut Rng,
+) -> Schedule {
+    let pick = |rng: &mut Rng, x: usize, y: usize| if rng.gen_bool(0.5) { x } else { y };
+    let child = Schedule {
+        threads_m: a.threads_m,
+        reg_m: a.reg_m,
+        threads_n: b.threads_n,
+        reg_n: b.reg_n,
+        tile_k: pick(rng, a.tile_k, b.tile_k),
+        unroll_k: pick(rng, a.unroll_k, b.unroll_k),
+        vector_width: pick(rng, a.vector_width, b.vector_width),
+        split_k: pick(rng, a.split_k, b.split_k),
+        use_shared: if rng.gen_bool(0.5) { a.use_shared } else { b.use_shared },
+    };
+    // Unroll must divide tile_k; repair instead of rejecting.
+    let mut child = child;
+    while child.tile_k % child.unroll_k != 0 {
+        child.unroll_k /= 2;
+    }
+    if space.is_legal(&child) {
+        child
+    } else {
+        *a
+    }
+}
+
+fn step_knob(space: &ScheduleSpace, s: &Schedule, knob: Knob, rng: &mut Rng) -> Schedule {
+    let d = &space.domains;
+    let mut out = *s;
+    match knob {
+        Knob::ThreadsM => out.threads_m = step(&d.threads_m, s.threads_m, rng),
+        Knob::ThreadsN => out.threads_n = step(&d.threads_n, s.threads_n, rng),
+        Knob::RegM => out.reg_m = step(&d.reg_m, s.reg_m, rng),
+        Knob::RegN => out.reg_n = step(&d.reg_n, s.reg_n, rng),
+        Knob::TileK => out.tile_k = step(&d.tile_k, s.tile_k, rng),
+        Knob::UnrollK => out.unroll_k = step(&d.unroll_k, s.unroll_k, rng),
+        Knob::VectorWidth => out.vector_width = step(&d.vector_width, s.vector_width, rng),
+        Knob::SplitK => out.split_k = step(&d.split_k, s.split_k, rng),
+        Knob::UseShared => {
+            if d.use_shared.len() > 1 {
+                out.use_shared = !s.use_shared;
+            }
+        }
+    }
+    // Keep the unroll/tile_k divisibility invariant after any step.
+    while out.tile_k % out.unroll_k != 0 {
+        out.unroll_k /= 2;
+    }
+    out
+}
+
+/// Move to an adjacent value in the (sorted) domain.
+fn step(domain: &[usize], cur: usize, rng: &mut Rng) -> usize {
+    if domain.len() <= 1 {
+        return cur;
+    }
+    let i = nearest_index(domain, cur);
+    let j = if i == 0 {
+        1
+    } else if i == domain.len() - 1 {
+        i - 1
+    } else if rng.gen_bool(0.5) {
+        i - 1
+    } else {
+        i + 1
+    };
+    domain[j]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+    use crate::workload::suites;
+    
+    
+
+    fn space() -> ScheduleSpace {
+        ScheduleSpace::new(suites::MM1, &GpuArch::A100.spec())
+    }
+
+    #[test]
+    fn mutations_stay_legal() {
+        let space = space();
+        let mut rng = Rng::seed_from_u64(1);
+        let mut s = space.fallback();
+        for _ in 0..500 {
+            s = mutate_one(&space, &s, &mut rng);
+            assert!(space.is_legal(&s), "illegal after mutation: {s}");
+        }
+    }
+
+    #[test]
+    fn mutation_actually_moves() {
+        let space = space();
+        let mut rng = Rng::seed_from_u64(2);
+        let s = space.fallback();
+        let mut moved = 0;
+        for _ in 0..50 {
+            if mutate_one(&space, &s, &mut rng) != s {
+                moved += 1;
+            }
+        }
+        assert!(moved > 40, "mutation should usually change the schedule ({moved}/50)");
+    }
+
+    #[test]
+    fn crossover_stays_legal_and_mixes() {
+        let space = space();
+        let mut rng = Rng::seed_from_u64(3);
+        let a = space.sample(&mut rng);
+        let b = space.sample(&mut rng);
+        for _ in 0..200 {
+            let c = crossover(&space, &a, &b, &mut rng);
+            assert!(space.is_legal(&c));
+            assert_eq!(c.threads_m, a.threads_m, "M genes come from parent a");
+            // N genes come from parent b unless repair fell back to a.
+            if c != a {
+                assert_eq!(c.threads_n, b.threads_n);
+            }
+        }
+    }
+
+    #[test]
+    fn mv_mutations_respect_unit_m() {
+        let space = ScheduleSpace::new(suites::MV3, &GpuArch::A100.spec());
+        let mut rng = Rng::seed_from_u64(4);
+        let mut s = space.fallback();
+        for _ in 0..300 {
+            s = mutate_one(&space, &s, &mut rng);
+            assert_eq!(s.threads_m, 1);
+            assert_eq!(s.reg_m, 1);
+        }
+    }
+}

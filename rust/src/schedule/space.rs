@@ -1,0 +1,256 @@
+//! Per-operator-family schedule spaces: knob domains, random sampling,
+//! and bounded enumeration.
+//!
+//! This is the Ansor "sketch + annotation" analogue: the *sketch* is the
+//! tiled implicit-GEMM structure (fixed per family), the *annotations*
+//! are the tile factors sampled from [`KnobDomains`].
+
+use super::tiling::{pow2_range, KnobDomains};
+use super::Schedule;
+use crate::config::GpuSpec;
+use crate::workload::{GemmView, Workload};
+use crate::util::Rng;
+
+/// The schedule space for one workload on one architecture.
+#[derive(Debug, Clone)]
+pub struct ScheduleSpace {
+    pub workload: Workload,
+    pub gemm: GemmView,
+    pub domains: KnobDomains,
+    spec: GpuSpec,
+}
+
+impl ScheduleSpace {
+    /// Build the space for `workload` on `spec`.
+    pub fn new(workload: Workload, spec: &GpuSpec) -> ScheduleSpace {
+        let gemm = workload.gemm_view();
+        let domains = domains_for(&gemm, spec);
+        ScheduleSpace { workload, gemm, domains, spec: spec.clone() }
+    }
+
+    pub fn spec(&self) -> &GpuSpec {
+        &self.spec
+    }
+
+    /// Sample one legal schedule uniformly over the knob domains
+    /// (rejection sampling against the legality predicate).
+    pub fn sample(&self, rng: &mut Rng) -> Schedule {
+        let d = &self.domains;
+        for _ in 0..10_000 {
+            let s = Schedule {
+                threads_m: *choose(rng, &d.threads_m),
+                threads_n: *choose(rng, &d.threads_n),
+                reg_m: *choose(rng, &d.reg_m),
+                reg_n: *choose(rng, &d.reg_n),
+                tile_k: *choose(rng, &d.tile_k),
+                unroll_k: *choose(rng, &d.unroll_k),
+                vector_width: *choose(rng, &d.vector_width),
+                split_k: *choose(rng, &d.split_k),
+                use_shared: *choose(rng, &d.use_shared),
+            };
+            if s.legal_for(&self.gemm, &self.spec) {
+                return s;
+            }
+        }
+        // The fallback schedule below is legal for every family/arch.
+        self.fallback()
+    }
+
+    /// A conservative always-legal schedule (used as sampling fallback
+    /// and as the deterministic seed candidate).
+    pub fn fallback(&self) -> Schedule {
+        let s = if self.gemm.m == 1 {
+            Schedule {
+                threads_m: 1,
+                threads_n: 64,
+                reg_m: 1,
+                reg_n: 1,
+                tile_k: 16,
+                unroll_k: 4,
+                vector_width: 1,
+                split_k: 1,
+                use_shared: true,
+            }
+        } else {
+            Schedule {
+                threads_m: 8,
+                threads_n: 8,
+                reg_m: 2,
+                reg_n: 2,
+                tile_k: 8,
+                unroll_k: 4,
+                vector_width: 1,
+                split_k: 1,
+                use_shared: true,
+            }
+        };
+        debug_assert!(s.legal_for(&self.gemm, &self.spec));
+        s
+    }
+
+    /// Sample `n` legal schedules (may contain duplicates — dedup is the
+    /// population's job).
+    pub fn sample_n(&self, rng: &mut Rng, n: usize) -> Vec<Schedule> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+
+    /// Enumerate up to `cap` legal schedules deterministically (grid
+    /// order). Used by Fig. 3's exhaustive latency-power sweep.
+    pub fn enumerate(&self, cap: usize) -> Vec<Schedule> {
+        let d = &self.domains;
+        let mut out = Vec::new();
+        'outer: for &tm in &d.threads_m {
+            for &tn in &d.threads_n {
+                for &rm in &d.reg_m {
+                    for &rn in &d.reg_n {
+                        for &tk in &d.tile_k {
+                            for &uk in &d.unroll_k {
+                                for &vw in &d.vector_width {
+                                    for &sk in &d.split_k {
+                                        for &sh in &d.use_shared {
+                                            let s = Schedule {
+                                                threads_m: tm,
+                                                threads_n: tn,
+                                                reg_m: rm,
+                                                reg_n: rn,
+                                                tile_k: tk,
+                                                unroll_k: uk,
+                                                vector_width: vw,
+                                                split_k: sk,
+                                                use_shared: sh,
+                                            };
+                                            if s.legal_for(&self.gemm, &self.spec) {
+                                                out.push(s);
+                                                if out.len() >= cap {
+                                                    break 'outer;
+                                                }
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// True if `s` is legal in this space.
+    pub fn is_legal(&self, s: &Schedule) -> bool {
+        s.legal_for(&self.gemm, &self.spec)
+    }
+}
+
+fn choose<'a, T>(rng: &mut Rng, v: &'a [T]) -> &'a T {
+    &v[rng.gen_range(0, v.len())]
+}
+
+/// Shape- and family-aware knob domains.
+pub fn domains_for(g: &GemmView, spec: &GpuSpec) -> KnobDomains {
+    let max_tpb = spec.max_threads_per_block;
+    if g.m == 1 {
+        // MV family: one output row; all thread parallelism along N,
+        // deep reductions benefit from split-k and streaming (no shared
+        // staging of the vector operand).
+        KnobDomains {
+            threads_m: vec![1],
+            threads_n: pow2_range(32, max_tpb.min(512)),
+            reg_m: vec![1],
+            reg_n: pow2_range(1, 8.min(g.n)),
+            tile_k: pow2_range(8, 128.min(g.k.next_power_of_two())),
+            unroll_k: pow2_range(1, 8),
+            vector_width: vec![1, 2, 4],
+            split_k: pow2_range(1, 64.min(g.k / 64).max(1)),
+            use_shared: vec![true, false],
+        }
+    } else {
+        // MM / Conv family: 2-D block tiles, register tiles for reuse.
+        let m_cap = g.m.next_power_of_two().min(32);
+        let n_cap = g.n.next_power_of_two().min(32);
+        KnobDomains {
+            threads_m: pow2_range(1, m_cap),
+            threads_n: pow2_range(2, n_cap),
+            reg_m: pow2_range(1, 8.min(g.m.next_power_of_two())),
+            reg_n: pow2_range(1, 8.min(g.n.next_power_of_two())),
+            tile_k: pow2_range(4, 64.min(g.k.next_power_of_two())),
+            unroll_k: pow2_range(1, 8),
+            vector_width: vec![1, 2, 4],
+            split_k: if g.k >= 1024 { vec![1, 2, 4] } else { vec![1] },
+            use_shared: vec![true],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+    use crate::workload::suites;
+    
+    
+
+    #[test]
+    fn samples_are_legal_for_every_suite_workload() {
+        let mut rng = Rng::seed_from_u64(7);
+        for arch in [GpuArch::A100, GpuArch::Rtx4090, GpuArch::P100] {
+            let spec = arch.spec();
+            for (name, w) in suites::all_named() {
+                let space = ScheduleSpace::new(w, &spec);
+                for s in space.sample_n(&mut rng, 64) {
+                    assert!(space.is_legal(&s), "{name} on {arch}: illegal sample {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn space_is_large() {
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM2, &spec);
+        // The paper's premise: a big exploration space (Table 1).
+        assert!(space.domains.cardinality() > 10_000, "{}", space.domains.cardinality());
+        let enumerated = space.enumerate(5_000);
+        assert!(enumerated.len() > 500, "{}", enumerated.len());
+    }
+
+    #[test]
+    fn enumerate_is_deterministic_and_legal() {
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM1, &spec);
+        let a = space.enumerate(300);
+        let b = space.enumerate(300);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|s| space.is_legal(s)));
+    }
+
+    #[test]
+    fn mv_domains_pin_m_axis() {
+        let spec = GpuArch::A100.spec();
+        let d = domains_for(&suites::MV1.gemm_view(), &spec);
+        assert_eq!(d.threads_m, vec![1]);
+        assert_eq!(d.reg_m, vec![1]);
+        assert!(d.split_k.len() > 1, "deep MV should offer split-k");
+    }
+
+    #[test]
+    fn fallback_is_legal_everywhere() {
+        for arch in GpuArch::ALL {
+            let spec = arch.spec();
+            for (_, w) in suites::all_named() {
+                let space = ScheduleSpace::new(w, &spec);
+                assert!(space.is_legal(&space.fallback()));
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM1, &spec);
+        let a = space.sample_n(&mut Rng::seed_from_u64(42), 20);
+        let b = space.sample_n(&mut Rng::seed_from_u64(42), 20);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,110 @@
+//! Tile-factorization helpers: the discrete domains each schedule knob
+//! ranges over, and factorization utilities shared by the per-family
+//! spaces and the mutation operators.
+
+/// Powers of two in `[lo, hi]` (inclusive).
+pub fn pow2_range(lo: usize, hi: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut x = lo.next_power_of_two().max(1);
+    while x <= hi {
+        v.push(x);
+        x *= 2;
+    }
+    v
+}
+
+/// All (a, b) pairs with a*b == n, a and b powers of two.
+pub fn pow2_factor_pairs(n: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut a = 1;
+    while a <= n {
+        if n % a == 0 {
+            out.push((a, n / a));
+        }
+        a *= 2;
+    }
+    out
+}
+
+/// Snap `x` to the nearest member of a sorted domain.
+pub fn snap(domain: &[usize], x: usize) -> usize {
+    debug_assert!(!domain.is_empty());
+    *domain
+        .iter()
+        .min_by_key(|&&d| d.abs_diff(x))
+        .expect("non-empty domain")
+}
+
+/// Index of `x` in `domain`, or the nearest index.
+pub fn nearest_index(domain: &[usize], x: usize) -> usize {
+    domain
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, &d)| d.abs_diff(x))
+        .map(|(i, _)| i)
+        .expect("non-empty domain")
+}
+
+/// The discrete domain of every schedule knob for one GEMM view.
+///
+/// Domains are shape-aware: thread/register extents never exceed the
+/// (power-of-two-rounded) problem extent, and `split_k` is only offered
+/// when the reduction is deep enough to be worth splitting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KnobDomains {
+    pub threads_m: Vec<usize>,
+    pub threads_n: Vec<usize>,
+    pub reg_m: Vec<usize>,
+    pub reg_n: Vec<usize>,
+    pub tile_k: Vec<usize>,
+    pub unroll_k: Vec<usize>,
+    pub vector_width: Vec<usize>,
+    pub split_k: Vec<usize>,
+    pub use_shared: Vec<bool>,
+}
+
+impl KnobDomains {
+    /// Upper bound on the number of distinct schedules (cartesian size).
+    pub fn cardinality(&self) -> u128 {
+        [
+            self.threads_m.len(),
+            self.threads_n.len(),
+            self.reg_m.len(),
+            self.reg_n.len(),
+            self.tile_k.len(),
+            self.unroll_k.len(),
+            self.vector_width.len(),
+            self.split_k.len(),
+            self.use_shared.len(),
+        ]
+        .iter()
+        .map(|&l| l as u128)
+        .product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_ranges() {
+        assert_eq!(pow2_range(1, 8), vec![1, 2, 4, 8]);
+        assert_eq!(pow2_range(4, 4), vec![4]);
+        assert_eq!(pow2_range(3, 8), vec![4, 8]);
+        assert!(pow2_range(16, 8).is_empty());
+    }
+
+    #[test]
+    fn factor_pairs() {
+        assert_eq!(pow2_factor_pairs(8), vec![(1, 8), (2, 4), (4, 2), (8, 1)]);
+    }
+
+    #[test]
+    fn snapping() {
+        let d = vec![1, 2, 4, 8, 16];
+        assert_eq!(snap(&d, 5), 4);
+        assert_eq!(snap(&d, 100), 16);
+        assert_eq!(nearest_index(&d, 7), 3);
+    }
+}

@@ -1,0 +1,116 @@
+//! The dynamic-k controller of Algorithm 1 (§6).
+//!
+//! `k ∈ [0, 1]` is the fraction of the `M` fastest kernels whose energy
+//! is NVML-measured each round. The controller watches the cost model's
+//! SNR prediction error: when the SNR is *below* the threshold `µ` the
+//! model is struggling, so `k` grows by 0.2 (more measurements, bigger
+//! update); when the SNR clears `µ`, `k` shrinks by 0.2 (the model is
+//! trusted, measurement budget is saved). This is the mechanism behind
+//! the ~2x search-speed gain of Fig. 5.
+
+/// Dynamic measurement-fraction controller.
+#[derive(Debug, Clone)]
+pub struct KController {
+    /// Current measurement fraction.
+    pub k: f64,
+    /// Step applied per round (paper: 0.2).
+    pub step: f64,
+    /// SNR threshold `µ` in dB.
+    pub mu_db: f64,
+    /// Lower bound on measured kernels per round (0 = paper-literal,
+    /// allowing the model to starve once k hits 0).
+    pub min_measure: usize,
+    /// Trace of k values (diagnostics / Fig. 5 accounting).
+    pub trace: Vec<f64>,
+}
+
+impl KController {
+    pub fn new(k_init: f64, step: f64, mu_db: f64, min_measure: usize) -> KController {
+        KController {
+            k: k_init.clamp(0.0, 1.0),
+            step,
+            mu_db,
+            min_measure,
+            trace: vec![k_init.clamp(0.0, 1.0)],
+        }
+    }
+
+    /// Number of kernels to measure this round out of the `m` fastest.
+    pub fn n_measure(&self, m: usize) -> usize {
+        let km = (self.k * m as f64).ceil() as usize;
+        km.max(self.min_measure).min(m)
+    }
+
+    /// Algorithm 1's update: `snr_db < µ` → k += step (model is bad,
+    /// measure more); otherwise k -= step.
+    pub fn update(&mut self, snr_db: f64) {
+        if snr_db < self.mu_db {
+            self.k = (self.k + self.step).min(1.0);
+        } else {
+            self.k = (self.k - self.step).max(0.0);
+        }
+        self.trace.push(self.k);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn good_model_shrinks_k() {
+        let mut c = KController::new(1.0, 0.2, 10.0, 1);
+        for _ in 0..3 {
+            c.update(25.0); // SNR well above threshold
+        }
+        assert!((c.k - 0.4).abs() < 1e-12, "k={}", c.k);
+    }
+
+    #[test]
+    fn bad_model_grows_k() {
+        let mut c = KController::new(0.2, 0.2, 10.0, 1);
+        c.update(3.0);
+        c.update(3.0);
+        assert!((c.k - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k_clamped_to_unit_interval() {
+        let mut c = KController::new(1.0, 0.2, 10.0, 1);
+        c.update(3.0);
+        assert_eq!(c.k, 1.0);
+        for _ in 0..10 {
+            c.update(50.0);
+        }
+        assert_eq!(c.k, 0.0);
+    }
+
+    #[test]
+    fn n_measure_respects_floor_and_cap() {
+        let c = KController::new(0.5, 0.2, 10.0, 2);
+        assert_eq!(c.n_measure(32), 16);
+        let zero = KController::new(0.0, 0.2, 10.0, 2);
+        assert_eq!(zero.n_measure(32), 2, "floor applies");
+        let paper_literal = KController::new(0.0, 0.2, 10.0, 0);
+        assert_eq!(paper_literal.n_measure(32), 0, "paper-literal allows zero");
+        let full = KController::new(1.0, 0.2, 10.0, 0);
+        assert_eq!(full.n_measure(32), 32);
+    }
+
+    #[test]
+    fn ceil_rounding_matches_paper_example() {
+        // §6.4: k = 0.5 with M kernels -> M/2 measurements.
+        let c = KController::new(0.5, 0.2, 10.0, 0);
+        assert_eq!(c.n_measure(32), 16);
+        // Odd M rounds up.
+        assert_eq!(c.n_measure(33), 17);
+    }
+
+    #[test]
+    fn trace_records_history() {
+        let mut c = KController::new(1.0, 0.2, 10.0, 1);
+        c.update(50.0);
+        c.update(1.0);
+        assert_eq!(c.trace, vec![1.0, 0.8, 1.0]);
+    }
+}

@@ -1,0 +1,354 @@
+//! The paper's energy-aware search (§4.4 + §6.4, Algorithm 1).
+//!
+//! Each round after the initial one:
+//!
+//! 1. `GeneticReproduction` — new generation from parents;
+//! 2. `LatencyEvaAndPick` — keep the `M` fastest (latency first: §4.3);
+//! 3. `EnergyModelEvaAndPick` — cost model ranks the `M`, keep `k·M`;
+//! 4. `NVMLMeasurement` — measure those `k·M` kernels;
+//! 5. `ModelUpdate` — fold measurements into the cost model;
+//! 6. SNR check → `k ± 0.2` (the dynamic updating strategy);
+//! 7. parents = top 50% lowest (model-)energy of the `M`.
+//!
+//! With `use_model = false` this degenerates to the **NVML-only**
+//! configuration (every one of the `M` kernels measured, no model) used
+//! as the comparison arm in Fig. 5.
+
+use super::dynamic_k::KController;
+use super::{
+    latency_eva_and_pick, select_final, EvaluatedKernel, RoundStats, SearchOutcome,
+    MODEL_PREDICT_BASE_S, MODEL_PREDICT_PER_KERNEL_S, MODEL_TRAIN_BASE_S,
+    MODEL_TRAIN_PER_SAMPLE_S,
+};
+use crate::config::{SearchConfig, SearchMode};
+use crate::costmodel::EnergyCostModel;
+use crate::features::{featurize, FeatureVector};
+use crate::nvml::NvmlMeter;
+use crate::schedule::space::ScheduleSpace;
+use crate::schedule::{Candidate, Schedule};
+use crate::util::Rng;
+use crate::workload::Workload;
+
+/// Run the energy-aware search. `use_model = true` is the paper's
+/// method; `false` is the NVML-only ablation.
+pub fn run(workload: Workload, cfg: &SearchConfig, use_model: bool) -> SearchOutcome {
+    let spec = cfg.gpu.spec();
+    let space = ScheduleSpace::new(workload, &spec);
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut meter = NvmlMeter::new(spec.clone(), cfg.nvml.clone());
+    meter.warm_up();
+
+    let mut model = EnergyCostModel::new(cfg.cost_model.clone());
+    let mut kctrl =
+        KController::new(cfg.k_init, cfg.k_step, cfg.mu_snr_db, cfg.min_measure_per_round);
+
+    let mut rounds: Vec<RoundStats> = Vec::new();
+    let mut measured_pool: Vec<EvaluatedKernel> = Vec::new();
+    #[allow(unused_assignments)]
+    let mut best_energy = f64::INFINITY;
+    let mut stale = 0usize;
+    // Fastest (schedule, timed latency) seen across all rounds.
+    let mut fastest_seen: Option<(Schedule, f64)> = None;
+
+    // ---- initial round: random population, measure all M ----------------
+    let pop = super::population::init_population(&space, cfg.population, &mut rng);
+    let top = latency_eva_and_pick(workload, &pop, cfg.m_latency_keep, &mut meter, &mut rng);
+    if let Some(&(s, l)) = top.first() {
+        fastest_seen = Some((s, l));
+    }
+    let mut parents: Vec<Schedule>;
+    {
+        let feats: Vec<FeatureVector> = top
+            .iter()
+            .map(|(s, _)| featurize(&Candidate::new(workload, *s), &spec))
+            .collect();
+        let mut samples: Vec<(FeatureVector, f64)> = Vec::new();
+        let mut measured: Vec<EvaluatedKernel> = Vec::new();
+        for ((s, _), fv) in top.iter().zip(&feats) {
+            let m = meter.measure(&Candidate::new(workload, *s), &mut rng);
+            samples.push((fv.clone(), m.energy_j));
+            measured.push(EvaluatedKernel {
+                schedule: *s,
+                latency_s: m.latency_s,
+                energy_j: m.energy_j,
+                avg_power_w: m.avg_power_w,
+                energy_measured: true,
+            });
+        }
+        if use_model {
+            model.update(&samples, &mut rng);
+            meter.clock.charge_model_train(
+                MODEL_TRAIN_BASE_S + MODEL_TRAIN_PER_SAMPLE_S * model.n_samples() as f64,
+            );
+        }
+        // Parents: top 50% lowest measured energy.
+        let mut by_energy = measured.clone();
+        by_energy.sort_by(|a, b| a.energy_j.partial_cmp(&b.energy_j).expect("finite"));
+        parents = by_energy.iter().take((cfg.m_latency_keep / 2).max(1)).map(|e| e.schedule).collect();
+        best_energy = by_energy.first().map(|e| e.energy_j).unwrap_or(f64::INFINITY);
+        measured_pool.extend(measured);
+        rounds.push(RoundStats {
+            round: 0,
+            best_latency_s: top[0].1,
+            best_energy_j: best_energy,
+            snr_db: None,
+            k: kctrl.k,
+            n_measured: top.len(),
+            elapsed_s: meter.clock.total_s,
+        });
+    }
+
+    // ---- Algorithm 1 rounds ---------------------------------------------
+    for round in 1..cfg.rounds {
+        // Reproduce a new kernel generation with parent kernels.
+        let generation = super::genetic::reproduce(&space, &parents, cfg, &mut rng);
+
+        // Get the latency of kernels and pick the fastest M ones.
+        let kernel_m =
+            latency_eva_and_pick(workload, &generation, cfg.m_latency_keep, &mut meter, &mut rng);
+
+        if let Some(&(s, l)) = kernel_m.first() {
+            if fastest_seen.map_or(true, |(_, fl)| l < fl) {
+                fastest_seen = Some((s, l));
+            }
+        }
+
+        let feats: Vec<FeatureVector> = kernel_m
+            .iter()
+            .map(|(s, _)| featurize(&Candidate::new(workload, *s), &spec))
+            .collect();
+
+        // Evaluate the M kernels with the cost model; pick the most
+        // energy-efficient k*M and their predicted energy.
+        let (order, predicted): (Vec<usize>, Vec<f64>) = if use_model {
+            let pred = model.predict_energy_batch(&feats);
+            meter.clock.charge_model_predict(
+                MODEL_PREDICT_BASE_S + MODEL_PREDICT_PER_KERNEL_S * feats.len() as f64,
+            );
+            let mut idx: Vec<usize> = (0..kernel_m.len()).collect();
+            idx.sort_by(|&a, &b| pred[a].partial_cmp(&pred[b]).expect("finite"));
+            (idx, pred)
+        } else {
+            ((0..kernel_m.len()).collect(), vec![f64::NAN; kernel_m.len()])
+        };
+        let n_measure = if use_model { kctrl.n_measure(kernel_m.len()) } else { kernel_m.len() };
+        let chosen: Vec<usize> = order.iter().take(n_measure).copied().collect();
+
+        // NVML-measure the chosen kernels.
+        let mut measured_pred: Vec<f64> = Vec::with_capacity(chosen.len());
+        let mut measured_vals: Vec<f64> = Vec::with_capacity(chosen.len());
+        let mut samples: Vec<(FeatureVector, f64)> = Vec::new();
+        let mut round_measured: Vec<EvaluatedKernel> = Vec::new();
+        for &i in &chosen {
+            let (s, _) = kernel_m[i];
+            let m = meter.measure(&Candidate::new(workload, s), &mut rng);
+            measured_pred.push(predicted[i]);
+            measured_vals.push(m.energy_j);
+            samples.push((feats[i].clone(), m.energy_j));
+            round_measured.push(EvaluatedKernel {
+                schedule: s,
+                latency_s: m.latency_s,
+                energy_j: m.energy_j,
+                avg_power_w: m.avg_power_w,
+                energy_measured: true,
+            });
+        }
+
+        // Update the cost model with the measured kernels; compute SNR
+        // and adjust k.
+        let mut snr = None;
+        if use_model {
+            if !samples.is_empty() {
+                model.update(&samples, &mut rng);
+                meter.clock.charge_model_train(
+                    MODEL_TRAIN_BASE_S + MODEL_TRAIN_PER_SAMPLE_S * model.n_samples() as f64,
+                );
+            }
+            if measured_vals.len() >= 2 && measured_pred.iter().all(|p| p.is_finite()) {
+                let s = EnergyCostModel::snr_error_db(&measured_pred, &measured_vals);
+                kctrl.update(s);
+                snr = Some(s);
+            }
+        }
+
+        // Select top 50% lower-energy kernels for the next round.
+        let energies: Vec<f64> = if use_model {
+            let pred = model.predict_energy_batch(&feats);
+            meter.clock.charge_model_predict(
+                MODEL_PREDICT_BASE_S + MODEL_PREDICT_PER_KERNEL_S * feats.len() as f64,
+            );
+            // Measured values override predictions where available.
+            let mut e = pred;
+            for (&i, &v) in chosen.iter().zip(&measured_vals) {
+                e[i] = v;
+            }
+            e
+        } else {
+            measured_vals.clone()
+        };
+        let mut idx: Vec<usize> = (0..energies.len()).collect();
+        idx.sort_by(|&a, &b| energies[a].partial_cmp(&energies[b]).expect("finite"));
+        parents = idx
+            .iter()
+            .take((cfg.m_latency_keep / 2).max(1))
+            .map(|&i| kernel_m[i.min(kernel_m.len() - 1)].0)
+            .collect();
+        // §4.4: parents must keep "good latency AND low energy" — pin
+        // the two fastest kernels of the round into the parent set so
+        // the latency frontier never regresses while energy evolves.
+        for (s, _) in kernel_m.iter().take(2) {
+            if !parents.contains(s) {
+                parents.push(*s);
+            }
+        }
+
+        // Track convergence on measured energy.
+        let round_best = round_measured
+            .iter()
+            .map(|e| e.energy_j)
+            .fold(f64::INFINITY, f64::min);
+        if round_best < best_energy * 0.999 {
+            best_energy = round_best;
+            stale = 0;
+        } else {
+            stale += 1;
+        }
+        measured_pool.extend(round_measured);
+
+        rounds.push(RoundStats {
+            round,
+            best_latency_s: kernel_m.first().map(|k| k.1).unwrap_or(f64::NAN),
+            best_energy_j: best_energy,
+            snr_db: snr,
+            k: kctrl.k,
+            n_measured: n_measure,
+            elapsed_s: meter.clock.total_s,
+        });
+
+        if cfg.patience > 0 && stale >= cfg.patience {
+            break;
+        }
+    }
+
+    // Anchor the final pool on the fastest schedule seen anywhere in the
+    // search (it may never have been energy-measured if the model ranked
+    // it poorly): one extra measurement keeps the latency band honest.
+    if let Some((s, _)) = fastest_seen {
+        if !measured_pool.iter().any(|e| e.schedule == s) {
+            let m = meter.measure(&Candidate::new(workload, s), &mut rng);
+            measured_pool.push(EvaluatedKernel {
+                schedule: s,
+                latency_s: m.latency_s,
+                energy_j: m.energy_j,
+                avg_power_w: m.avg_power_w,
+                energy_measured: true,
+            });
+        }
+    }
+    let best = select_final(&measured_pool);
+    let n_latency_evals = meter.clock.n_latency_timings;
+    SearchOutcome {
+        workload,
+        mode: if use_model { SearchMode::EnergyAware } else { SearchMode::EnergyNvmlOnly },
+        best,
+        rounds,
+        clock: meter.clock,
+        measured_pool,
+        k_trace: kctrl.trace,
+        n_latency_evals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+    use crate::workload::suites;
+
+    fn quick_cfg(seed: u64) -> SearchConfig {
+        SearchConfig {
+            gpu: GpuArch::A100,
+            mode: SearchMode::EnergyAware,
+            population: 48,
+            m_latency_keep: 12,
+            rounds: 6,
+            patience: 0,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn energy_improves_across_rounds() {
+        let out = run(suites::MM1, &quick_cfg(3), true);
+        let first = out.rounds.first().unwrap().best_energy_j;
+        let last = out.rounds.last().unwrap().best_energy_j;
+        assert!(last <= first, "{last} > {first}");
+        assert!(out.best.energy_measured);
+    }
+
+    #[test]
+    fn k_adapts_and_reduces_measurements() {
+        let out = run(suites::MM1, &quick_cfg(4), true);
+        assert!(!out.k_trace.is_empty());
+        // Once the model locks on, k should drop below its initial 1.0
+        // in at least one round.
+        assert!(
+            out.k_trace.iter().any(|&k| k < 1.0),
+            "k never dropped: {:?}",
+            out.k_trace
+        );
+        // And measured count per round must track k*M.
+        let m = 12.0;
+        for r in &out.rounds[1..] {
+            assert!(r.n_measured as f64 <= m + 1e-9);
+        }
+    }
+
+    #[test]
+    fn nvml_only_measures_everything() {
+        let cfg = quick_cfg(5);
+        let ours = run(suites::MM1, &cfg, true);
+        let nvml = run(suites::MM1, &cfg, false);
+        assert!(
+            nvml.n_energy_measurements() > ours.n_energy_measurements(),
+            "nvml {} !> ours {}",
+            nvml.n_energy_measurements(),
+            ours.n_energy_measurements()
+        );
+        // Fig. 5: the cost-model search must be decisively faster.
+        assert!(
+            ours.clock.total_s < nvml.clock.total_s,
+            "ours {} !< nvml {}",
+            ours.clock.total_s,
+            nvml.clock.total_s
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = quick_cfg(6);
+        let a = run(suites::CONV2, &cfg, true);
+        let b = run(suites::CONV2, &cfg, true);
+        assert_eq!(a.best.schedule, b.best.schedule);
+        assert_eq!(a.k_trace, b.k_trace);
+    }
+
+    #[test]
+    fn beats_or_matches_latency_only_on_energy() {
+        // The headline claim (Table 2): same latency class, less energy.
+        let cfg = quick_cfg(7);
+        let ours = run(suites::MM1, &cfg, true);
+        let mut lat_cfg = cfg.clone();
+        lat_cfg.mode = SearchMode::LatencyOnly;
+        let ansor = crate::search::latency_only::run(suites::MM1, &lat_cfg);
+        assert!(
+            ours.best.energy_j <= ansor.best.energy_j * 1.02,
+            "ours {} mJ vs ansor {} mJ",
+            ours.best.energy_j * 1e3,
+            ansor.best.energy_j * 1e3
+        );
+        // Latency stays in the same class (within ~20% on this tiny run).
+        assert!(ours.best.latency_s <= ansor.best.latency_s * 1.25);
+    }
+}

@@ -1,0 +1,135 @@
+//! `GeneticReproduction` (Algorithm 1, first step): produce a new
+//! generation from parent kernels via crossover + mutation, topped up
+//! with random immigrants for diversity.
+
+use crate::config::SearchConfig;
+use crate::schedule::mutation::{crossover, mutate, mutate_one};
+use crate::schedule::space::ScheduleSpace;
+use crate::schedule::Schedule;
+use crate::util::Rng;
+use std::collections::HashSet;
+
+/// Reproduce a generation of `cfg.population` schedules from `parents`.
+///
+/// Children are produced by (crossover with prob `crossover_prob`, else
+/// clone a parent) followed by per-knob mutation with prob
+/// `mutation_prob`; `immigrant_frac` of the generation is fresh random
+/// samples. Elites (the parents themselves) are always included so the
+/// best-so-far never regresses.
+pub fn reproduce(
+    space: &ScheduleSpace,
+    parents: &[Schedule],
+    cfg: &SearchConfig,
+    rng: &mut Rng,
+) -> Vec<Schedule> {
+    assert!(!parents.is_empty(), "reproduce needs parents");
+    let n = cfg.population;
+    let mut seen: HashSet<Schedule> = HashSet::new();
+    let mut out: Vec<Schedule> = Vec::with_capacity(n);
+
+    // Elitism: carry parents through unchanged.
+    for p in parents.iter().take(n) {
+        if seen.insert(*p) {
+            out.push(*p);
+        }
+    }
+
+    let n_immigrants = ((n as f64) * cfg.immigrant_frac).round() as usize;
+    let mut attempts = 0usize;
+    while out.len() < n && attempts < n * 60 {
+        attempts += 1;
+        let child = if out.len() + n_immigrants >= n {
+            // Immigrant tail: fresh random exploration.
+            space.sample(rng)
+        } else {
+            let a = rng.choose(parents);
+            let base = if parents.len() >= 2 && rng.gen_bool(cfg.crossover_prob) {
+                let mut b = rng.choose(parents);
+                // Avoid self-crossover when possible.
+                for _ in 0..4 {
+                    if b != a {
+                        break;
+                    }
+                    b = rng.choose(parents);
+                }
+                crossover(space, a, b, rng)
+            } else {
+                *a
+            };
+            let mutated = mutate(space, &base, cfg.mutation_prob, rng);
+            if mutated == base {
+                mutate_one(space, &base, rng)
+            } else {
+                mutated
+            }
+        };
+        if seen.insert(child) {
+            out.push(child);
+        }
+    }
+    // Small/saturated spaces: fill with (possibly duplicate) samples.
+    while out.len() < n {
+        out.push(space.sample(rng));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+    use crate::search::population::init_population;
+    use crate::workload::suites;
+
+    fn setup() -> (ScheduleSpace, SearchConfig, Rng) {
+        let cfg = SearchConfig::default();
+        let spec = GpuArch::A100.spec();
+        (ScheduleSpace::new(suites::MM1, &spec), cfg, Rng::seed_from_u64(3))
+    }
+
+    #[test]
+    fn generation_has_requested_size_and_legal() {
+        let (space, cfg, mut rng) = setup();
+        let parents = init_population(&space, 16, &mut rng);
+        let gen = reproduce(&space, &parents, &cfg, &mut rng);
+        assert_eq!(gen.len(), cfg.population);
+        assert!(gen.iter().all(|s| space.is_legal(s)));
+    }
+
+    #[test]
+    fn elites_survive() {
+        let (space, cfg, mut rng) = setup();
+        let parents = init_population(&space, 16, &mut rng);
+        let gen = reproduce(&space, &parents, &cfg, &mut rng);
+        for p in &parents {
+            assert!(gen.contains(p), "parent lost: {p}");
+        }
+    }
+
+    #[test]
+    fn generation_is_mostly_novel() {
+        let (space, cfg, mut rng) = setup();
+        let parents = init_population(&space, 16, &mut rng);
+        let gen = reproduce(&space, &parents, &cfg, &mut rng);
+        let parent_set: std::collections::HashSet<_> = parents.iter().collect();
+        let novel = gen.iter().filter(|s| !parent_set.contains(s)).count();
+        assert!(novel >= cfg.population - parents.len() - 4, "novel={novel}");
+    }
+
+    #[test]
+    fn single_parent_works() {
+        let (space, cfg, mut rng) = setup();
+        let parents = vec![space.fallback()];
+        let gen = reproduce(&space, &parents, &cfg, &mut rng);
+        assert_eq!(gen.len(), cfg.population);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (space, cfg, _) = setup();
+        let parents = init_population(&space, 8, &mut Rng::seed_from_u64(11));
+        let a = reproduce(&space, &parents, &cfg, &mut Rng::seed_from_u64(12));
+        let b = reproduce(&space, &parents, &cfg, &mut Rng::seed_from_u64(12));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,203 @@
+//! The search framework (§4, §6): latency-only baseline (Ansor),
+//! the paper's energy-aware search with the dynamic-k cost-model
+//! strategy (Algorithm 1), and the NVML-only ablation of Fig. 5.
+
+pub mod dynamic_k;
+pub mod energy_aware;
+pub mod genetic;
+pub mod latency_only;
+pub mod population;
+
+pub use dynamic_k::KController;
+
+use crate::config::{SearchConfig, SearchMode};
+use crate::nvml::{MeasurementClock, NvmlMeter};
+use crate::schedule::{Candidate, Schedule};
+use crate::util::parallel::par_map;
+use crate::util::Rng;
+use crate::workload::Workload;
+
+/// Latency tolerance for final kernel selection: among measured
+/// kernels, those within this fraction of the best latency compete on
+/// energy (§4.3: energy must not trade away latency).
+pub const FINAL_LATENCY_TOL: f64 = 0.08;
+
+/// Simulated cost charged per cost-model batch prediction (§7.4: "the
+/// cost model predicts kernel times in milliseconds").
+pub const MODEL_PREDICT_BASE_S: f64 = 1e-3;
+/// Additional per-kernel prediction cost.
+pub const MODEL_PREDICT_PER_KERNEL_S: f64 = 2e-5;
+/// Simulated cost per model (re)fit, plus per-sample term.
+pub const MODEL_TRAIN_BASE_S: f64 = 0.08;
+pub const MODEL_TRAIN_PER_SAMPLE_S: f64 = 2e-4;
+
+/// A schedule with its evaluated metrics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvaluatedKernel {
+    pub schedule: Schedule,
+    /// Latency of one run (s) — NVML-timed (noisy).
+    pub latency_s: f64,
+    /// Energy of one run (J).
+    pub energy_j: f64,
+    /// Average power (W).
+    pub avg_power_w: f64,
+    /// True if `energy_j` came from an NVML measurement (vs cost model).
+    pub energy_measured: bool,
+}
+
+/// Per-round telemetry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundStats {
+    pub round: usize,
+    pub best_latency_s: f64,
+    pub best_energy_j: f64,
+    /// SNR prediction error of this round's model check (dB).
+    pub snr_db: Option<f64>,
+    /// k value *after* this round's update.
+    pub k: f64,
+    pub n_measured: usize,
+    /// Cumulative simulated search time (s).
+    pub elapsed_s: f64,
+}
+
+/// Result of one search run.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub workload: Workload,
+    pub mode: SearchMode,
+    /// The selected kernel (metrics NVML-measured).
+    pub best: EvaluatedKernel,
+    pub rounds: Vec<RoundStats>,
+    /// Simulated wall-clock accounting (the Fig. 5 currency).
+    pub clock: MeasurementClock,
+    /// Every NVML-measured kernel seen during the search (Fig. 2 data).
+    pub measured_pool: Vec<EvaluatedKernel>,
+    /// k trace across rounds (energy-aware mode only).
+    pub k_trace: Vec<f64>,
+    /// Total kernels whose latency was timed.
+    pub n_latency_evals: usize,
+}
+
+impl SearchOutcome {
+    /// Total NVML energy measurements performed.
+    pub fn n_energy_measurements(&self) -> usize {
+        self.clock.n_energy_measurements
+    }
+}
+
+/// Run a search in the mode chosen by `cfg.mode`.
+pub fn run_search(workload: Workload, cfg: &SearchConfig) -> SearchOutcome {
+    cfg.validate().expect("invalid search config");
+    match cfg.mode {
+        SearchMode::LatencyOnly => latency_only::run(workload, cfg),
+        SearchMode::EnergyAware => energy_aware::run(workload, cfg, true),
+        SearchMode::EnergyNvmlOnly => energy_aware::run(workload, cfg, false),
+    }
+}
+
+/// Time the latency of every schedule in `gen` (noisy NVML timing for
+/// the charged clock + deterministic simulator ranking in parallel).
+///
+/// Returns (schedule, timed latency) pairs sorted ascending by latency.
+pub fn latency_eva_and_pick(
+    workload: Workload,
+    gen: &[Schedule],
+    m: usize,
+    meter: &mut NvmlMeter,
+    rng: &mut Rng,
+) -> Vec<(Schedule, f64)> {
+    // Deterministic part (the analytic model) evaluates in parallel;
+    // the noise + clock charge is applied serially for determinism.
+    let spec = meter.spec().clone();
+    let g = workload.gemm_view();
+    let truths: Vec<f64> =
+        par_map(gen, |s| crate::sim::evaluate_latency(&g, s, &spec));
+    let mut timed: Vec<(Schedule, f64)> = gen
+        .iter()
+        .zip(&truths)
+        .map(|(s, &truth)| {
+            let c = Candidate::new(workload, *s);
+            // time_latency re-derives truth internally at the current
+            // temperature; we charge the clock through it.
+            let t = meter.time_latency(&c, rng);
+            // Blend: meter returns noisy truth (temperature-adjusted);
+            // `truth` keeps ranking deterministic-ish but we use the
+            // timed value, as the paper does.
+            let _ = truth;
+            (*s, t)
+        })
+        .collect();
+    timed.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite latency"));
+    timed.truncate(m);
+    timed
+}
+
+/// Final selection rule shared by the energy modes: among measured
+/// kernels, restrict to those within `FINAL_LATENCY_TOL` of the best
+/// measured latency, then take the lowest energy.
+pub fn select_final(pool: &[EvaluatedKernel]) -> EvaluatedKernel {
+    assert!(!pool.is_empty());
+    let best_lat =
+        pool.iter().map(|e| e.latency_s).fold(f64::INFINITY, f64::min);
+    let cutoff = best_lat * (1.0 + FINAL_LATENCY_TOL);
+    pool.iter()
+        .filter(|e| e.latency_s <= cutoff)
+        .min_by(|a, b| a.energy_j.partial_cmp(&b.energy_j).expect("finite"))
+        .copied()
+        .expect("non-empty pool within tolerance")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+    use crate::schedule::space::ScheduleSpace;
+    use crate::workload::suites;
+
+    fn ek(lat: f64, e: f64) -> EvaluatedKernel {
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM1, &spec);
+        EvaluatedKernel {
+            schedule: space.fallback(),
+            latency_s: lat,
+            energy_j: e,
+            avg_power_w: e / lat,
+            energy_measured: true,
+        }
+    }
+
+    #[test]
+    fn select_final_prefers_energy_within_latency_band() {
+        let pool = vec![
+            ek(1.00, 10.0), // fastest, high energy
+            ek(1.05, 7.0),  // within 8% tolerance, lower energy -> winner
+            ek(1.50, 2.0),  // lowest energy but too slow
+        ];
+        let best = select_final(&pool);
+        assert!((best.latency_s - 1.05).abs() < 1e-12);
+        assert!((best.energy_j - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn select_final_falls_back_to_fastest() {
+        let pool = vec![ek(1.0, 5.0), ek(2.0, 1.0)];
+        let best = select_final(&pool);
+        assert_eq!(best.energy_j, 5.0);
+    }
+
+    #[test]
+    fn latency_eva_sorts_and_truncates() {
+        let cfg = SearchConfig::default();
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM1, &spec);
+        let mut rng = Rng::seed_from_u64(9);
+        let gen = space.sample_n(&mut rng, 40);
+        let mut meter = NvmlMeter::warmed(spec, cfg.nvml.clone());
+        let picked = latency_eva_and_pick(suites::MM1, &gen, 10, &mut meter, &mut rng);
+        assert_eq!(picked.len(), 10);
+        for w in picked.windows(2) {
+            assert!(w[0].1 <= w[1].1, "not sorted");
+        }
+        assert_eq!(meter.clock.n_latency_timings, 40);
+    }
+}

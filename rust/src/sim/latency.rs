@@ -1,0 +1,320 @@
+//! Analytical latency model: occupancy, wave quantization, ILP, and a
+//! compute/memory roofline.
+//!
+//! The model composes:
+//!
+//! 1. **Occupancy** — resident blocks per SM limited by threads, shared
+//!    memory, and registers; low occupancy cannot hide pipeline and
+//!    memory latency, discounting achievable compute throughput.
+//! 2. **Wave quantization** — `ceil(grid / slots)` waves; the tail wave
+//!    leaves SMs idle (this also drives `sm_efficiency`, see
+//!    [`super::profile`]).
+//! 3. **ILP efficiency** — register tiles amortize shared loads over
+//!    FMAs; unrolling amortizes loop/addressing overhead.
+//! 4. **Roofline** — latency is the max of compute time and memory time
+//!    (with a mild overlap penalty), plus launch overhead.
+
+use super::memory::MemoryTraffic;
+use crate::config::GpuSpec;
+use crate::schedule::Schedule;
+use crate::workload::GemmView;
+
+/// Occupancy and wave geometry for a launch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Occupancy {
+    /// Resource-capacity blocks per SM (governs wave quantization).
+    pub blocks_per_sm: usize,
+    /// Blocks actually resident per SM given the grid size.
+    pub resident_blocks: usize,
+    /// Fraction of max resident threads used.
+    pub occupancy: f64,
+    /// SMs with at least one block at launch.
+    pub active_sms: usize,
+    /// Number of scheduling waves.
+    pub waves: usize,
+    /// Efficiency of the wave schedule (1.0 = all slots busy all waves).
+    pub tail_efficiency: f64,
+    /// Time-averaged fraction of SMs busy (nvprof `sm_efficiency`).
+    pub sm_efficiency: f64,
+}
+
+/// Compute occupancy/wave geometry for `sched` on `spec` with `grid` blocks.
+pub fn occupancy(sched: &Schedule, grid: usize, spec: &GpuSpec) -> Occupancy {
+    let tpb = sched.threads_per_block();
+    let by_threads = spec.max_threads_per_sm / tpb.max(1);
+    let by_blocks = spec.max_blocks_per_sm;
+    let shared = sched.shared_bytes_per_block();
+    let by_shared =
+        if shared == 0 { usize::MAX } else { spec.shared_mem_per_sm / shared };
+    let regs = sched.regs_per_thread() * tpb;
+    let by_regs = if regs == 0 { usize::MAX } else { spec.regs_per_sm / regs };
+    let blocks_per_sm = by_threads.min(by_blocks).min(by_shared).min(by_regs).max(1);
+
+    // *Achieved* occupancy uses the blocks actually resident per SM —
+    // a small grid cannot stack blocks up to capacity. (Capacity still
+    // governs wave quantization below.)
+    let resident_blocks = blocks_per_sm.min(grid.div_ceil(spec.num_sms).max(1));
+    let occupancy_frac =
+        (resident_blocks * tpb) as f64 / spec.max_threads_per_sm as f64;
+
+    let slots = spec.num_sms * blocks_per_sm;
+    let waves = grid.div_ceil(slots).max(1);
+    let active_sms = grid.min(spec.num_sms);
+
+    // Tail efficiency: fraction of block-slots over all waves that do work.
+    let used_slots = grid as f64;
+    let total_slots = (waves * slots.min(grid.max(1)).max(1)) as f64;
+    let tail_efficiency = (used_slots / total_slots).min(1.0);
+
+    // sm_efficiency: time-averaged fraction of SMs with >= 1 resident
+    // block. The hardware scheduler spreads blocks round-robin across
+    // SMs before stacking them, so a tail of `t` blocks keeps
+    // min(t, num_sms) SMs busy.
+    let full_waves = grid / slots;
+    let tail_blocks = grid % slots;
+    let tail_sms = tail_blocks.min(spec.num_sms);
+    let busy_sm_time = full_waves * spec.num_sms + tail_sms;
+    let total_sm_time = waves * spec.num_sms;
+    // A small duty-cycle discount: even a busy SM has drain/ramp gaps.
+    let duty = 0.97;
+    let sm_efficiency =
+        (busy_sm_time as f64 / total_sm_time as f64 * duty).clamp(0.0, 1.0);
+
+    Occupancy {
+        blocks_per_sm,
+        resident_blocks,
+        occupancy: occupancy_frac.min(1.0),
+        active_sms,
+        waves,
+        tail_efficiency,
+        sm_efficiency,
+    }
+}
+
+/// Integer (addressing/loop) operation estimate for a schedule.
+///
+/// Deeper unrolls and larger register tiles amortize per-iteration index
+/// arithmetic; implicit im2col adds per-element window arithmetic.
+pub fn int_ops(sched: &Schedule, g: &GemmView) -> f64 {
+    let macs = g.macs() as f64;
+    let per_mac_loop = 1.2 / sched.unroll_k as f64;
+    let per_mac_addr = 2.0 / (sched.reg_m * sched.reg_n) as f64;
+    let im2col = if g.im2col { 0.35 } else { 0.0 };
+    let per_block = (sched.threads_per_block() * 40) as f64;
+    macs * (per_mac_loop + per_mac_addr + im2col)
+        + sched.grid(g) as f64 * per_block
+}
+
+/// Latency estimate plus the intermediate terms (exposed for features
+/// and for the Fig. 3 power analysis).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyBreakdown {
+    /// Seconds: final latency of one kernel run.
+    pub latency_s: f64,
+    pub compute_s: f64,
+    pub dram_s: f64,
+    pub l2_s: f64,
+    pub shared_s: f64,
+    /// Achieved fraction of per-SM peak FLOPs.
+    pub compute_efficiency: f64,
+    pub occ: Occupancy,
+}
+
+/// The latency model.
+pub fn latency(
+    sched: &Schedule,
+    g: &GemmView,
+    traffic: &MemoryTraffic,
+    spec: &GpuSpec,
+) -> LatencyBreakdown {
+    let grid = sched.grid(g);
+    let occ = occupancy(sched, grid, spec);
+    let flops = 2.0 * g.macs() as f64;
+
+    // --- compute efficiency --------------------------------------------
+    // ILP: each inner iteration issues reg_m*reg_n FMAs against
+    // (reg_m + reg_n) shared-load fragments plus loop overhead.
+    let rm = sched.reg_m as f64;
+    let rn = sched.reg_n as f64;
+    let fma = rm * rn;
+    let ilp_eff = fma / (fma + 0.55 * (rm + rn) + 1.6 / sched.unroll_k as f64);
+    // Latency hiding: an SM has 4 scheduler partitions (needs >= 4
+    // resident warps to issue on all of them), and the FMA pipeline
+    // needs ~64 independent in-flight ops per SM — supplied either by
+    // warp parallelism (occupancy) or by per-thread accumulator ILP
+    // (register tiles). This is the §8 mechanism letting a
+    // low-occupancy, big-register-tile block match a high-occupancy
+    // small-tile one.
+    let resident_warps =
+        (occ.resident_blocks * sched.threads_per_block()) as f64 / 32.0;
+    let partition_eff = (resident_warps / 4.0).min(1.0);
+    let inflight = resident_warps * fma;
+    let hide_eff = (inflight / 64.0).min(1.0);
+    // Shared-memory staging needs a block-wide barrier every k-step;
+    // blocks with few warps cannot hide the barrier + staging latency
+    // (the reason CUDA kernels want >= 128-256 threads per block).
+    let barrier_eff = if sched.use_shared {
+        let warps_per_block = (sched.threads_per_block() as f64 / 32.0).max(1.0);
+        warps_per_block / (warps_per_block + 2.0)
+    } else {
+        1.0
+    };
+    let occ_eff = partition_eff * hide_eff * barrier_eff;
+    // Integer overhead competes for issue slots.
+    let iops = int_ops(sched, g);
+    let int_dilution = flops / (flops + 0.5 * iops);
+    let compute_efficiency =
+        (ilp_eff * occ_eff * int_dilution).clamp(0.02, 0.98);
+
+    let peak = spec.peak_gflops_per_sm() * 1e9 * occ.active_sms as f64;
+    let compute_s = flops / (peak * compute_efficiency * occ.tail_efficiency);
+
+    // --- memory time -----------------------------------------------------
+    // Vectorized global loads improve achieved DRAM bandwidth.
+    let vec_bw = match sched.vector_width {
+        4 => 1.0,
+        2 => 0.92,
+        _ => 0.78,
+    };
+    let dram_s = traffic.dram_bytes / (spec.dram_bw_gbs * 1e9 * vec_bw);
+    let l2_s = traffic.l2_bytes / (spec.l2_bw_gbs * 1e9);
+    let shared_s = traffic.shared_bytes
+        / (spec.shared_bw_per_sm_gbs * 1e9 * occ.active_sms.max(1) as f64);
+    let mem_s: f64 = dram_s.max(l2_s) + shared_s;
+
+    // --- roofline compose --------------------------------------------------
+    // max() with a mild non-overlap term: real kernels never overlap
+    // perfectly.
+    let overlap_penalty = 0.12 * compute_s.min(mem_s);
+    let latency_s =
+        compute_s.max(mem_s) + overlap_penalty + spec.launch_latency_us * 1e-6;
+
+    LatencyBreakdown {
+        latency_s,
+        compute_s,
+        dram_s,
+        l2_s,
+        shared_s,
+        compute_efficiency,
+        occ,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::config::GpuArch;
+    use crate::workload::suites;
+
+    fn sched(tm: usize, tn: usize, rm: usize, rn: usize, tk: usize) -> Schedule {
+        Schedule {
+            threads_m: tm,
+            threads_n: tn,
+            reg_m: rm,
+            reg_n: rn,
+            tile_k: tk,
+            unroll_k: 4,
+            vector_width: 4,
+            split_k: 1,
+            use_shared: true,
+        }
+    }
+
+    fn eval(s: &Schedule, w: crate::workload::Workload) -> LatencyBreakdown {
+        let spec = GpuArch::A100.spec();
+        let g = w.gemm_view();
+        let t = MemoryTraffic::compute(s, &g, &spec);
+        latency(s, &g, &t, &spec)
+    }
+
+    #[test]
+    fn mm1_latency_in_paper_ballpark() {
+        // Paper Table 2: MM1 latency ~0.035 ms on A100. A decent tiled
+        // schedule should land within ~3x of that.
+        let lb = eval(&sched(8, 8, 8, 8, 16), suites::MM1);
+        let ms = lb.latency_s * 1e3;
+        assert!((0.01..0.15).contains(&ms), "MM1 latency {ms} ms");
+    }
+
+    #[test]
+    fn mv1_latency_is_bandwidth_dominated() {
+        // MV1 moves ~2.4 GB of weights; at ~2 TB/s that's >= 1.1 ms.
+        // Use a sensible streaming schedule (no shared staging, wide
+        // vector loads, enough occupancy to hide memory latency).
+        let mut s = sched(1, 128, 1, 4, 32);
+        s.threads_m = 1;
+        s.reg_m = 1;
+        s.use_shared = false;
+        let lb = eval(&s, suites::MV1);
+        let ms = lb.latency_s * 1e3;
+        assert!(ms > 0.9, "MV1 latency {ms} ms too fast for DRAM");
+        assert!(lb.dram_s > lb.compute_s, "MV must be memory bound");
+    }
+
+    #[test]
+    fn occupancy_limits_apply() {
+        let spec = GpuArch::A100.spec();
+        // Huge shared usage limits blocks/SM.
+        let fat = sched(16, 16, 8, 8, 64); // 128x128 tile, big panels
+        let occ_fat = occupancy(&fat, 1000, &spec);
+        let thin = sched(8, 8, 2, 2, 8);
+        let occ_thin = occupancy(&thin, 1000, &spec);
+        assert!(occ_fat.blocks_per_sm <= occ_thin.blocks_per_sm);
+        assert!(occ_fat.occupancy <= 1.0 && occ_thin.occupancy <= 1.0);
+    }
+
+    #[test]
+    fn sm_efficiency_matches_case_study_shape() {
+        // §8: grid 64 on 108 SMs -> sm_eff ~0.56-0.60; grid 256 -> ~0.8.
+        let spec = GpuArch::A100.spec();
+        let mut k1 = sched(8, 8, 8, 8, 16);
+        k1.reg_m = 8; // 64 x 64 tile, grid 64 for 512^2
+        let o1 = occupancy(&k1, 64, &spec);
+        assert!((0.50..0.65).contains(&o1.sm_efficiency), "{}", o1.sm_efficiency);
+
+        let o2 = occupancy(&sched(8, 16, 4, 2, 16), 256, &spec);
+        assert!(o2.sm_efficiency > o1.sm_efficiency, "{} vs {}", o2.sm_efficiency, o1.sm_efficiency);
+    }
+
+    #[test]
+    fn wave_tail_hurts() {
+        let spec = GpuArch::A100.spec();
+        let s = sched(8, 16, 4, 4, 16);
+        // Fill every block slot exactly, then overflow by one block.
+        let slots = occupancy(&s, 1, &spec).blocks_per_sm * spec.num_sms;
+        let full = occupancy(&s, slots, &spec);
+        let tail = occupancy(&s, slots + 1, &spec);
+        assert!(tail.tail_efficiency < full.tail_efficiency);
+        assert_eq!(tail.waves, full.waves + 1);
+        assert!(tail.sm_efficiency < full.sm_efficiency);
+    }
+
+    #[test]
+    fn unroll_reduces_int_ops() {
+        let g = suites::MM1.gemm_view();
+        let mut a = sched(8, 8, 4, 4, 16);
+        a.unroll_k = 1;
+        let mut b = a;
+        b.unroll_k = 8;
+        assert!(int_ops(&b, &g) < int_ops(&a, &g));
+    }
+
+    #[test]
+    fn latency_is_positive_and_finite_for_random_schedules() {
+        use crate::schedule::space::ScheduleSpace;
+        
+        let spec = GpuArch::A100.spec();
+        let mut rng = Rng::seed_from_u64(5);
+        for (_, w) in suites::all_named() {
+            let space = ScheduleSpace::new(w, &spec);
+            let g = w.gemm_view();
+            for s in space.sample_n(&mut rng, 32) {
+                let t = MemoryTraffic::compute(&s, &g, &spec);
+                let lb = latency(&s, &g, &t, &spec);
+                assert!(lb.latency_s.is_finite() && lb.latency_s > 0.0);
+                assert!(lb.compute_efficiency > 0.0 && lb.compute_efficiency < 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! The GPU simulator substrate: deterministic, closed-form evaluation of
+//! (workload, schedule) pairs on a parameterized architecture.
+//!
+//! This replaces the paper's physical A100 / RTX 4090 / P100 testbed
+//! (see DESIGN.md §3 for the substitution argument). [`evaluate`] is the
+//! noise-free *ground truth* at steady temperature; [`crate::nvml`]
+//! wraps it with sampling noise, thermal drift, and measurement time
+//! cost, exactly as NVML-based measurement wraps physical truth.
+
+pub mod latency;
+pub mod memory;
+pub mod power;
+pub mod profile;
+pub mod temperature;
+
+pub use latency::{occupancy, LatencyBreakdown, Occupancy};
+pub use memory::MemoryTraffic;
+pub use power::{static_power_w, EnergyBreakdown};
+pub use profile::KernelProfile;
+pub use temperature::ThermalState;
+
+use crate::config::GpuSpec;
+use crate::schedule::{Candidate, Schedule};
+use crate::workload::GemmView;
+
+/// Complete steady-state evaluation of one kernel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Evaluation {
+    /// Latency of one kernel run, seconds.
+    pub latency_s: f64,
+    /// Energy of one kernel run, joules.
+    pub energy_j: f64,
+    /// Average power during the run, watts.
+    pub avg_power_w: f64,
+    /// Time-averaged SM busy fraction.
+    pub sm_efficiency: f64,
+    /// Resident-thread occupancy fraction.
+    pub occupancy: f64,
+    /// Scheduling waves.
+    pub waves: usize,
+    /// Achieved fraction of peak FLOPs.
+    pub compute_efficiency: f64,
+    /// Energy decomposition.
+    pub breakdown: EnergyBreakdown,
+    /// nvprof-style counters.
+    pub profile: KernelProfile,
+}
+
+/// Evaluate `sched` on `g` at steady measurement temperature.
+pub fn evaluate(g: &GemmView, sched: &Schedule, spec: &GpuSpec) -> Evaluation {
+    evaluate_at(g, sched, spec, spec.steady_temp_c)
+}
+
+/// Evaluate at an explicit die temperature (used by the NVML harness).
+pub fn evaluate_at(g: &GemmView, sched: &Schedule, spec: &GpuSpec, temp_c: f64) -> Evaluation {
+    let traffic = MemoryTraffic::compute(sched, g, spec);
+    let lat = latency::latency(sched, g, &traffic, spec);
+    let (breakdown, latency_s) = power::energy(sched, g, &traffic, &lat, spec, temp_c);
+    let energy_j = breakdown.total_j();
+    let ev = Evaluation {
+        latency_s,
+        energy_j,
+        avg_power_w: energy_j / latency_s,
+        sm_efficiency: lat.occ.sm_efficiency,
+        occupancy: lat.occ.occupancy,
+        waves: lat.occ.waves,
+        compute_efficiency: lat.compute_efficiency,
+        breakdown,
+        profile: KernelProfile {
+            grid: 0,
+            block: 0,
+            sm_efficiency_pct: 0.0,
+            glb_ld: 0,
+            glb_st: 0,
+            shared_ld: 0,
+            shared_st: 0,
+            occupancy: 0.0,
+            waves: 0,
+            flop_efficiency: 0.0,
+            dram_bytes: 0,
+        },
+    };
+    let profile = KernelProfile::new(sched, g, &traffic, &ev);
+    Evaluation { profile, ..ev }
+}
+
+/// Convenience: evaluate a bound candidate.
+pub fn evaluate_candidate(c: &Candidate, spec: &GpuSpec) -> Evaluation {
+    evaluate(&c.gemm(), &c.schedule, spec)
+}
+
+/// Latency-only fast path (skips the energy model) — the inner loop of
+/// `LatencyEvaAndPick` calls this for every genetic child, so it is a
+/// perf-critical hot path (see EXPERIMENTS.md §Perf).
+pub fn evaluate_latency(g: &GemmView, sched: &Schedule, spec: &GpuSpec) -> f64 {
+    let traffic = MemoryTraffic::compute(sched, g, spec);
+    let lat = latency::latency(sched, g, &traffic, spec);
+    // Apply the same TDP throttle the full path applies so latency-only
+    // and full evaluations agree.
+    let (_, latency_s) = power::energy(sched, g, &traffic, &lat, spec, spec.steady_temp_c);
+    latency_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::config::GpuArch;
+    use crate::schedule::space::ScheduleSpace;
+    use crate::workload::suites;
+    
+    
+
+    #[test]
+    fn evaluation_identity_energy_eq_power_times_latency() {
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM2, &spec);
+        let mut rng = Rng::seed_from_u64(3);
+        for s in space.sample_n(&mut rng, 32) {
+            let ev = evaluate(&suites::MM2.gemm_view(), &s, &spec);
+            let recon = ev.avg_power_w * ev.latency_s;
+            assert!((recon - ev.energy_j).abs() / ev.energy_j < 1e-9);
+            assert!((ev.breakdown.total_j() - ev.energy_j).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn latency_fast_path_matches_full_eval() {
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::CONV2, &spec);
+        let mut rng = Rng::seed_from_u64(4);
+        let g = suites::CONV2.gemm_view();
+        for s in space.sample_n(&mut rng, 16) {
+            let full = evaluate(&g, &s, &spec).latency_s;
+            let fast = evaluate_latency(&g, &s, &spec);
+            assert!((full - fast).abs() / full < 1e-9);
+        }
+    }
+
+    #[test]
+    fn latency_power_inverse_correlation_fig3() {
+        // Fig. 3: across MM(1024^3) schedules, higher latency correlates
+        // with lower average power. Pearson r must be clearly negative.
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM2, &spec);
+        let mut rng = Rng::seed_from_u64(9);
+        let g = suites::MM2.gemm_view();
+        let evs: Vec<Evaluation> =
+            space.sample_n(&mut rng, 300).iter().map(|s| evaluate(&g, s, &spec)).collect();
+        let xs: Vec<f64> = evs.iter().map(|e| e.latency_s).collect();
+        let ys: Vec<f64> = evs.iter().map(|e| e.avg_power_w).collect();
+        let r = pearson(&xs, &ys);
+        assert!(r < -0.3, "latency-power correlation r={r} not inverse");
+    }
+
+    #[test]
+    fn energy_not_monotone_in_latency() {
+        // §4.1: kernels with similar latency can differ notably in
+        // energy. Find two schedules within 10% latency whose energies
+        // differ by > 10%.
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM1, &spec);
+        let mut rng = Rng::seed_from_u64(21);
+        let g = suites::MM1.gemm_view();
+        let evs: Vec<Evaluation> =
+            space.sample_n(&mut rng, 400).iter().map(|s| evaluate(&g, s, &spec)).collect();
+        let mut found = false;
+        'outer: for a in &evs {
+            for b in &evs {
+                let dl = (a.latency_s - b.latency_s).abs() / a.latency_s;
+                let de = (a.energy_j - b.energy_j).abs() / a.energy_j;
+                if dl < 0.10 && de > 0.10 {
+                    found = true;
+                    break 'outer;
+                }
+            }
+        }
+        assert!(found, "no similar-latency, different-energy pair found");
+    }
+
+    #[test]
+    fn temperature_increases_energy() {
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM1, &spec);
+        let s = space.fallback();
+        let g = suites::MM1.gemm_view();
+        let cold = evaluate_at(&g, &s, &spec, spec.idle_temp_c);
+        let hot = evaluate_at(&g, &s, &spec, spec.steady_temp_c + 10.0);
+        assert!(hot.energy_j > cold.energy_j);
+    }
+
+    pub(crate) fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+        let n = xs.len() as f64;
+        let mx = xs.iter().sum::<f64>() / n;
+        let my = ys.iter().sum::<f64>() / n;
+        let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+        let vx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+        let vy: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+        cov / (vx.sqrt() * vy.sqrt()).max(1e-30)
+    }
+}

@@ -1,0 +1,100 @@
+//! nvprof-style kernel profile: the counters the paper's §8 case study
+//! reports (Table 5) plus the roofline diagnostics used by the perf
+//! pass.
+
+use super::memory::MemoryTraffic;
+use super::Evaluation;
+use crate::schedule::Schedule;
+use crate::workload::GemmView;
+
+/// The Table-5 counter set for one kernel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelProfile {
+    /// Number of thread blocks launched.
+    pub grid: usize,
+    /// Threads per block.
+    pub block: usize,
+    /// Time-averaged fraction of SMs busy (percent, like nvprof).
+    pub sm_efficiency_pct: f64,
+    /// Global load transactions.
+    pub glb_ld: u64,
+    /// Global store transactions.
+    pub glb_st: u64,
+    /// Shared load transactions.
+    pub shared_ld: u64,
+    /// Shared store transactions.
+    pub shared_st: u64,
+    /// Occupancy (resident-thread fraction).
+    pub occupancy: f64,
+    /// Scheduling waves.
+    pub waves: usize,
+    /// Achieved fraction of peak FLOPs.
+    pub flop_efficiency: f64,
+    /// DRAM bytes moved.
+    pub dram_bytes: u64,
+}
+
+impl KernelProfile {
+    pub fn new(sched: &Schedule, g: &GemmView, traffic: &MemoryTraffic, ev: &Evaluation) -> Self {
+        KernelProfile {
+            grid: sched.grid(g),
+            block: sched.threads_per_block(),
+            sm_efficiency_pct: ev.sm_efficiency * 100.0,
+            glb_ld: traffic.glb_ld_txn as u64,
+            glb_st: traffic.glb_st_txn as u64,
+            shared_ld: traffic.shared_ld_txn as u64,
+            shared_st: traffic.shared_st_txn as u64,
+            occupancy: ev.occupancy,
+            waves: ev.waves,
+            flop_efficiency: ev.compute_efficiency,
+            dram_bytes: traffic.dram_bytes as u64,
+        }
+    }
+
+    /// A Table-5-style single row: `grid block sm_eff glb_ld glb_st shared_ld shared_st`.
+    pub fn table5_row(&self) -> String {
+        format!(
+            "{:>6} {:>6} {:>12.2}% {:>12} {:>10} {:>12} {:>10}",
+            self.grid,
+            self.block,
+            self.sm_efficiency_pct,
+            self.glb_ld,
+            self.glb_st,
+            self.shared_ld,
+            self.shared_st
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::GpuArch;
+    use crate::schedule::Schedule;
+    use crate::sim::evaluate;
+    use crate::workload::suites;
+
+    #[test]
+    fn profile_reports_launch_geometry() {
+        let spec = GpuArch::A100.spec();
+        let s = Schedule {
+            threads_m: 8,
+            threads_n: 32,
+            reg_m: 8,
+            reg_n: 2,
+            tile_k: 16,
+            unroll_k: 4,
+            vector_width: 4,
+            split_k: 1,
+            use_shared: true,
+        };
+        let ev = evaluate(&suites::MM1.gemm_view(), &s, &spec);
+        let p = ev.profile;
+        // 64x64 block tile over 512x512 -> grid 64, block 256.
+        assert_eq!(p.grid, 64);
+        assert_eq!(p.block, 256);
+        assert!(p.sm_efficiency_pct > 30.0 && p.sm_efficiency_pct < 100.0);
+        assert!(p.glb_ld > 0 && p.shared_ld > 0);
+        let row = p.table5_row();
+        assert!(row.contains("64") && row.contains("256"));
+    }
+}

@@ -1,0 +1,106 @@
+//! Thermal state of the simulated GPU.
+//!
+//! §5.1: "Temperature variations significantly affect transistor
+//! behavior, leading to notable differences in GPU energy consumption
+//! even when executing the same workload. ... each kernel measurement is
+//! preceded by a warm-up period of several seconds to stabilize the GPU
+//! at a consistent temperature."
+//!
+//! We model first-order exponential thermal dynamics: under load the die
+//! approaches a power-dependent steady temperature; idle, it decays
+//! toward ambient. [`crate::nvml`] advances this state as measurements
+//! consume (simulated) time, so skipping the warm-up yields biased,
+//! drifting energy readings — exactly the failure mode the paper's
+//! harness avoids.
+
+use crate::config::GpuSpec;
+
+/// First-order thermal model of one GPU die.
+#[derive(Debug, Clone)]
+pub struct ThermalState {
+    /// Current die temperature, C.
+    pub temp_c: f64,
+    /// Ambient/idle temperature, C.
+    idle_c: f64,
+    /// Steady temperature at full sustained load, C.
+    steady_c: f64,
+    /// Heating time constant, s.
+    tau_heat_s: f64,
+    /// Cooling time constant, s.
+    tau_cool_s: f64,
+}
+
+impl ThermalState {
+    /// Cold GPU for `spec`.
+    pub fn cold(spec: &GpuSpec) -> ThermalState {
+        ThermalState {
+            temp_c: spec.idle_temp_c,
+            idle_c: spec.idle_temp_c,
+            steady_c: spec.steady_temp_c,
+            tau_heat_s: 20.0,
+            tau_cool_s: 45.0,
+        }
+    }
+
+    /// GPU already warmed to the measurement steady state.
+    pub fn warmed(spec: &GpuSpec) -> ThermalState {
+        let mut t = Self::cold(spec);
+        t.temp_c = spec.steady_temp_c;
+        t
+    }
+
+    /// Advance `dt_s` seconds under load at `power_frac` of TDP.
+    pub fn run_load(&mut self, dt_s: f64, power_frac: f64) {
+        // Load target scales mildly with drawn power around the steady point.
+        let target = self.idle_c
+            + (self.steady_c - self.idle_c) * (0.55 + 0.6 * power_frac.clamp(0.0, 1.2));
+        let a = 1.0 - (-dt_s / self.tau_heat_s).exp();
+        self.temp_c += (target - self.temp_c) * a;
+    }
+
+    /// Advance `dt_s` seconds idle (cooling).
+    pub fn run_idle(&mut self, dt_s: f64) {
+        let a = 1.0 - (-dt_s / self.tau_cool_s).exp();
+        self.temp_c += (self.idle_c - self.temp_c) * a;
+    }
+
+    /// Whether the die is within `tol_c` of the measurement steady state.
+    pub fn is_steady(&self, tol_c: f64) -> bool {
+        (self.temp_c - self.steady_c).abs() <= tol_c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+
+    #[test]
+    fn warms_up_under_load() {
+        let spec = GpuArch::A100.spec();
+        let mut t = ThermalState::cold(&spec);
+        assert!(!t.is_steady(2.0));
+        for _ in 0..30 {
+            t.run_load(1.0, 0.8);
+        }
+        assert!(t.temp_c > spec.idle_temp_c + 15.0);
+    }
+
+    #[test]
+    fn cools_when_idle() {
+        let spec = GpuArch::A100.spec();
+        let mut t = ThermalState::warmed(&spec);
+        let before = t.temp_c;
+        t.run_idle(60.0);
+        assert!(t.temp_c < before);
+        assert!(t.temp_c >= spec.idle_temp_c - 1e-9);
+    }
+
+    #[test]
+    fn steady_state_is_stable() {
+        let spec = GpuArch::A100.spec();
+        let mut t = ThermalState::warmed(&spec);
+        t.run_load(5.0, 0.75);
+        assert!(t.is_steady(6.0), "temp {} drifted too far", t.temp_c);
+    }
+}

@@ -1,0 +1,13 @@
+//! In-tree utility substrates (the build is fully offline, so the
+//! framework carries its own RNG, JSON, TOML-subset parser, thread
+//! pool, and statistics toolkit instead of pulling crates).
+
+pub mod json;
+pub mod parallel;
+pub mod rng;
+pub mod stats;
+pub mod toml_lite;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use toml_lite::{TomlDoc, TomlValue};

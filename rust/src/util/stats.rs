@@ -1,0 +1,162 @@
+//! Small statistics helpers shared by the search, the experiments, and
+//! the tests: mean/variance, Pearson/Spearman correlation, R², and the
+//! SNR metric of Algorithm 1.
+
+/// Arithmetic mean (0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let vx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    let vy: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    let denom = (vx * vy).sqrt();
+    if denom <= 0.0 {
+        0.0
+    } else {
+        cov / denom
+    }
+}
+
+/// Ranks with average tie handling.
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).expect("finite"));
+    let mut r = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            r[k] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+/// Spearman rank correlation — the metric that matters for a cost model
+/// used only to *rank* kernels.
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    pearson(&ranks(xs), &ranks(ys))
+}
+
+/// Coefficient of determination of predictions vs targets.
+pub fn r2(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    let m = mean(target);
+    let sse: f64 = pred.iter().zip(target).map(|(p, t)| (p - t).powi(2)).sum();
+    let sst: f64 = target.iter().map(|t| (t - m).powi(2)).sum();
+    if sst <= 0.0 {
+        return if sse == 0.0 { 1.0 } else { 0.0 };
+    }
+    1.0 - sse / sst
+}
+
+/// Signal-to-noise ratio of predictions vs measurements, in dB
+/// (Algorithm 1's `PredictionError` is this SNR; higher = better model):
+/// `SNR = 10 log10( Var(measured) / MSE(pred - measured) )`.
+pub fn snr_db(pred: &[f64], measured: &[f64]) -> f64 {
+    assert_eq!(pred.len(), measured.len());
+    if pred.is_empty() {
+        return f64::NEG_INFINITY;
+    }
+    let mse: f64 =
+        pred.iter().zip(measured).map(|(p, m)| (p - m).powi(2)).sum::<f64>() / pred.len() as f64;
+    let sig = variance(measured);
+    if mse <= 0.0 {
+        return f64::INFINITY;
+    }
+    if sig <= 0.0 {
+        // No signal variance: treat near-zero error as high SNR.
+        let scale = mean(measured).abs().max(1e-30);
+        return 10.0 * (scale * scale / mse).log10();
+    }
+    10.0 * (sig / mse).log10()
+}
+
+/// Percentile (0..=100) by nearest-rank on a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect_and_inverse() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let inv = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &inv) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let ys = [1.0, 8.0, 27.0, 64.0, 125.0]; // nonlinear but monotone
+        assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let xs = [1.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 1.0, 2.0, 3.0];
+        assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_behaviour() {
+        let t = [1.0, 2.0, 3.0];
+        assert!((r2(&t, &t) - 1.0).abs() < 1e-12);
+        let m = mean(&t);
+        assert!(r2(&[m, m, m], &t).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snr_scales_with_error() {
+        let measured = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let good: Vec<f64> = measured.iter().map(|x| x + 0.01).collect();
+        let bad: Vec<f64> = measured.iter().map(|x| x + 1.0).collect();
+        assert!(snr_db(&good, &measured) > snr_db(&bad, &measured));
+        assert!(snr_db(&good, &measured) > 30.0);
+        assert!(snr_db(&bad, &measured) < 5.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+}

@@ -1,0 +1,215 @@
+//! Minimal TOML-subset parser for config files (offline build: no
+//! `toml` crate).
+//!
+//! Supports the subset the configs use: `[section]` / `[a.b]` headers,
+//! `key = value` with string / bool / integer / float values, `#`
+//! comments, and blank lines. Keys are exposed flat as
+//! `section.key` paths.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `section.key -> value` document.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full, parse_value(value.trim(), lineno + 1)?);
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.get(path).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, path: &str, default: u64) -> u64 {
+        self.get(path).and_then(|v| v.as_u64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<TomlValue, String> {
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| format!("line {lineno}: unterminated string"))?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !text.contains('.') && !text.contains('e') && !text.contains('E') {
+        if let Ok(i) = text.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    text.replace('_', "")
+        .parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| format!("line {lineno}: cannot parse value '{text}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+gpu = "a100"
+seed = 42
+rounds = 12     # trailing comment
+mu_snr_db = 10.5
+
+[nvml]
+sampling_hz = 45.0
+warmup_s = 3
+noisy = true
+
+[cost_model]
+n_trees = 80
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("gpu", ""), "a100");
+        assert_eq!(doc.u64_or("seed", 0), 42);
+        assert_eq!(doc.usize_or("rounds", 0), 12);
+        assert!((doc.f64_or("mu_snr_db", 0.0) - 10.5).abs() < 1e-12);
+        assert!((doc.f64_or("nvml.sampling_hz", 0.0) - 45.0).abs() < 1e-12);
+        assert_eq!(doc.f64_or("nvml.warmup_s", 0.0), 3.0);
+        assert!(doc.bool_or("nvml.noisy", false));
+        assert_eq!(doc.usize_or("cost_model.n_trees", 0), 80);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(doc.str_or("name", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_are_reported_with_line_numbers() {
+        assert!(TomlDoc::parse("[oops").unwrap_err().contains("line 1"));
+        assert!(TomlDoc::parse("just a line").unwrap_err().contains("line 1"));
+        assert!(TomlDoc::parse("x = @@").unwrap_err().contains("line 1"));
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.usize_or("absent", 7), 7);
+        assert_eq!(doc.str_or("absent", "d"), "d");
+    }
+}

@@ -1,0 +1,229 @@
+//! Operator workload definitions.
+//!
+//! The paper evaluates three operator families (§7.1): general matrix
+//! multiplication (MM), matrix-vector multiplication (MV), and 2-D
+//! convolution (Conv). Shapes follow the paper's notation:
+//! MM/MV = (batch, M, N, K), Conv = (batch, H, W, Cin, Cout, ksize,
+//! stride, pad).
+
+pub mod suites;
+
+
+/// One operator instance (type + shape).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// C[b,m,n] = sum_k A[b,m,k] * B[b,k,n]
+    MatMul { batch: usize, m: usize, n: usize, k: usize },
+    /// y[b,n] = sum_k x[b,k] * W[n,k]  (the paper's MV: M = 1)
+    MatVec { batch: usize, n: usize, k: usize },
+    /// NHWC conv: out[b, ho, wo, co] over (ksize x ksize x cin)
+    Conv2d {
+        batch: usize,
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        ksize: usize,
+        stride: usize,
+        pad: usize,
+    },
+}
+
+impl Workload {
+    /// Operator family name ("mm" / "mv" / "conv").
+    pub fn family(&self) -> &'static str {
+        match self {
+            Workload::MatMul { .. } => "mm",
+            Workload::MatVec { .. } => "mv",
+            Workload::Conv2d { .. } => "conv",
+        }
+    }
+
+    /// Compact identifier usable in file names and the artifact registry,
+    /// e.g. `mm_b1_m512_n512_k512`.
+    pub fn id(&self) -> String {
+        match *self {
+            Workload::MatMul { batch, m, n, k } => format!("mm_b{batch}_m{m}_n{n}_k{k}"),
+            Workload::MatVec { batch, n, k } => format!("mv_b{batch}_n{n}_k{k}"),
+            Workload::Conv2d { batch, h, w, cin, cout, ksize, stride, pad } => {
+                format!("conv_b{batch}_h{h}_w{w}_ci{cin}_co{cout}_k{ksize}_s{stride}_p{pad}")
+            }
+        }
+    }
+
+    /// FP32 multiply-accumulate count (1 MAC = 2 FLOPs).
+    pub fn macs(&self) -> u64 {
+        match *self {
+            Workload::MatMul { batch, m, n, k } => (batch * m * n * k) as u64,
+            Workload::MatVec { batch, n, k } => (batch * n * k) as u64,
+            Workload::Conv2d { batch, cin, cout, ksize, .. } => {
+                let (ho, wo) = self.conv_out_hw().expect("conv");
+                (batch * ho * wo * cout * cin * ksize * ksize) as u64
+            }
+        }
+    }
+
+    /// Total FP32 FLOPs (2 * MACs).
+    pub fn flops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Output spatial dims for conv (ho, wo); `None` for non-conv.
+    pub fn conv_out_hw(&self) -> Option<(usize, usize)> {
+        match *self {
+            Workload::Conv2d { h, w, ksize, stride, pad, .. } => {
+                let ho = (h + 2 * pad - ksize) / stride + 1;
+                let wo = (w + 2 * pad - ksize) / stride + 1;
+                Some((ho, wo))
+            }
+            _ => None,
+        }
+    }
+
+    /// The GEMM view of this workload: every family lowers to an implicit
+    /// (batch, M, N, K) GEMM — conv via implicit im2col. The schedule
+    /// space and the simulator both operate on this view.
+    pub fn gemm_view(&self) -> GemmView {
+        match *self {
+            Workload::MatMul { batch, m, n, k } => GemmView { batch, m, n, k, im2col: false },
+            Workload::MatVec { batch, n, k } => GemmView { batch, m: 1, n, k, im2col: false },
+            Workload::Conv2d { batch, cin, cout, ksize, .. } => {
+                let (ho, wo) = self.conv_out_hw().expect("conv");
+                GemmView {
+                    batch,
+                    m: ho * wo,
+                    n: cout,
+                    k: cin * ksize * ksize,
+                    im2col: ksize > 1,
+                }
+            }
+        }
+    }
+
+    /// Bytes of unique input data (FP32), the compulsory DRAM traffic floor.
+    pub fn input_bytes(&self) -> u64 {
+        match *self {
+            Workload::MatMul { batch, m, n, k } => 4 * (batch * (m * k + k * n)) as u64,
+            Workload::MatVec { batch, n, k } => 4 * (batch * k + n * k) as u64,
+            Workload::Conv2d { batch, h, w, cin, cout, ksize, .. } => {
+                4 * (batch * h * w * cin + cout * cin * ksize * ksize) as u64
+            }
+        }
+    }
+
+    /// Bytes of output data (FP32).
+    pub fn output_bytes(&self) -> u64 {
+        match *self {
+            Workload::MatMul { batch, m, n, .. } => 4 * (batch * m * n) as u64,
+            Workload::MatVec { batch, n, .. } => 4 * (batch * n) as u64,
+            Workload::Conv2d { batch, cout, .. } => {
+                let (ho, wo) = self.conv_out_hw().expect("conv");
+                4 * (batch * ho * wo * cout) as u64
+            }
+        }
+    }
+
+    /// Arithmetic intensity floor: FLOPs per compulsory DRAM byte.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops() as f64 / (self.input_bytes() + self.output_bytes()) as f64
+    }
+
+    /// True when the workload is memory-bandwidth-bound on `peak_gflops`
+    /// vs `dram_bw_gbs` hardware even at perfect reuse.
+    pub fn is_memory_bound_on(&self, spec: &crate::config::GpuSpec) -> bool {
+        self.arithmetic_intensity() < spec.roofline_knee()
+    }
+}
+
+impl std::fmt::Display for Workload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Workload::MatMul { batch, m, n, k } => write!(f, "MM({batch}, {m}, {n}, {k})"),
+            Workload::MatVec { batch, n, k } => write!(f, "MV({batch}, 1, {n}, {k})"),
+            Workload::Conv2d { batch, h, w, cin, cout, ksize, stride, pad } => {
+                write!(f, "CONV({batch}, {h}, {w}, {cin}, {cout}, {ksize}, {stride}, {pad})")
+            }
+        }
+    }
+}
+
+/// The implicit-GEMM view of a workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmView {
+    pub batch: usize,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// True when the GEMM is an implicit im2col (overlapping input
+    /// windows: extra index arithmetic + better L2 locality on A).
+    pub im2col: bool,
+}
+
+impl GemmView {
+    /// MACs in the GEMM view.
+    pub fn macs(&self) -> u64 {
+        (self.batch * self.m * self.n * self.k) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mm_flops() {
+        let w = Workload::MatMul { batch: 1, m: 512, n: 512, k: 512 };
+        assert_eq!(w.flops(), 2 * 512 * 512 * 512);
+        assert_eq!(w.family(), "mm");
+    }
+
+    #[test]
+    fn mv_is_m1_gemm() {
+        let w = Workload::MatVec { batch: 8, n: 4096, k: 1024 };
+        let g = w.gemm_view();
+        assert_eq!((g.batch, g.m, g.n, g.k), (8, 1, 4096, 1024));
+        assert_eq!(w.flops(), 2 * 8 * 4096 * 1024);
+    }
+
+    #[test]
+    fn conv_out_dims_and_gemm() {
+        // CONV1(8, 7, 7, 512, 512, 3, 1, 1): 'same' conv, 7x7 out.
+        let w = Workload::Conv2d {
+            batch: 8, h: 7, w: 7, cin: 512, cout: 512, ksize: 3, stride: 1, pad: 1,
+        };
+        assert_eq!(w.conv_out_hw(), Some((7, 7)));
+        let g = w.gemm_view();
+        assert_eq!((g.m, g.n, g.k), (49, 512, 512 * 9));
+        assert!(g.im2col);
+
+        // CONV2(16, 56, 56, 64, 64, 1, 1, 0): 1x1 conv — plain GEMM.
+        let w = Workload::Conv2d {
+            batch: 16, h: 56, w: 56, cin: 64, cout: 64, ksize: 1, stride: 1, pad: 0,
+        };
+        assert_eq!(w.conv_out_hw(), Some((56, 56)));
+        assert!(!w.gemm_view().im2col);
+    }
+
+    #[test]
+    fn mv_is_memory_bound_mm_is_not() {
+        let spec = crate::config::GpuArch::A100.spec();
+        let mv = Workload::MatVec { batch: 1, n: 49512, k: 12288 };
+        let mm = Workload::MatMul { batch: 8, m: 1024, n: 1024, k: 1024 };
+        assert!(mv.is_memory_bound_on(&spec));
+        assert!(!mm.is_memory_bound_on(&spec));
+    }
+
+    #[test]
+    fn ids_are_unique_across_suites() {
+        let mut seen = std::collections::HashSet::new();
+        for (name, w) in suites::all_named() {
+            assert!(seen.insert(w.id()), "duplicate id for {name}: {}", w.id());
+        }
+    }
+
+    #[test]
+    fn display_matches_paper_notation() {
+        let w = Workload::MatMul { batch: 1, m: 512, n: 512, k: 512 };
+        assert_eq!(w.to_string(), "MM(1, 512, 512, 512)");
+    }
+}

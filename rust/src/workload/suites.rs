@@ -1,0 +1,141 @@
+//! The paper's named operator suites (§7.1).
+//!
+//! Table 2 (A100): MM1–MM4, MV1–MV4, CONV1–CONV3.
+//! Table 3 (RTX 4090): MM, MV, CONV.
+//! Table 4 (vs cuBLAS): MM1, MM2, MV1, MV2.
+//! Figure 4 (cost model): MM(1,512³), MV(1,1,4096,1024), CONV2.
+
+use super::Workload;
+
+/// MM1(1, 512, 512, 512)
+pub const MM1: Workload = Workload::MatMul { batch: 1, m: 512, n: 512, k: 512 };
+/// MM2(1, 1024, 1024, 1024)
+pub const MM2: Workload = Workload::MatMul { batch: 1, m: 1024, n: 1024, k: 1024 };
+/// MM3(8, 512, 512, 512)
+pub const MM3: Workload = Workload::MatMul { batch: 8, m: 512, n: 512, k: 512 };
+/// MM4(8, 1024, 1024, 1024)
+pub const MM4: Workload = Workload::MatMul { batch: 8, m: 1024, n: 1024, k: 1024 };
+/// MV1(1, 1, 49512, 12288) — GPT-3-scale FFN row.
+pub const MV1: Workload = Workload::MatVec { batch: 1, n: 49512, k: 12288 };
+/// MV2(1, 1, 32768, 16384)
+pub const MV2: Workload = Workload::MatVec { batch: 1, n: 32768, k: 16384 };
+/// MV3(8, 1, 4096, 1024)
+pub const MV3: Workload = Workload::MatVec { batch: 8, n: 4096, k: 1024 };
+/// MV4(8, 1, 8192, 2048)
+pub const MV4: Workload = Workload::MatVec { batch: 8, n: 8192, k: 2048 };
+/// CONV1(8, 7, 7, 512, 512, 3, 1, 1) — ResNet-50 tail block.
+pub const CONV1: Workload =
+    Workload::Conv2d { batch: 8, h: 7, w: 7, cin: 512, cout: 512, ksize: 3, stride: 1, pad: 1 };
+/// CONV2(16, 56, 56, 64, 64, 1, 1, 0) — ResNet-50 1x1 projection.
+pub const CONV2: Workload =
+    Workload::Conv2d { batch: 16, h: 56, w: 56, cin: 64, cout: 64, ksize: 1, stride: 1, pad: 0 };
+/// CONV3(64, 56, 56, 64, 64, 1, 1, 0)
+pub const CONV3: Workload =
+    Workload::Conv2d { batch: 64, h: 56, w: 56, cin: 64, cout: 64, ksize: 1, stride: 1, pad: 0 };
+
+/// Table-3 (RTX 4090) suite members.
+pub const MM_4090: Workload = MM1;
+/// MV(1, 1, 4096, 1024)
+pub const MV_4090: Workload = Workload::MatVec { batch: 1, n: 4096, k: 1024 };
+pub const CONV_4090: Workload = CONV2;
+
+/// The Table 2 suite in paper order.
+pub fn table2_suite() -> Vec<(&'static str, Workload)> {
+    vec![
+        ("MM1", MM1),
+        ("MM2", MM2),
+        ("MM3", MM3),
+        ("MM4", MM4),
+        ("MV1", MV1),
+        ("MV2", MV2),
+        ("MV3", MV3),
+        ("MV4", MV4),
+        ("CONV1", CONV1),
+        ("CONV2", CONV2),
+        ("CONV3", CONV3),
+    ]
+}
+
+/// The Table 3 (RTX 4090) suite.
+pub fn table3_suite() -> Vec<(&'static str, Workload)> {
+    vec![("MM", MM_4090), ("MV", MV_4090), ("CONV", CONV_4090)]
+}
+
+/// The Table 4 (vs cuBLAS) suite.
+pub fn table4_suite() -> Vec<(&'static str, Workload)> {
+    vec![("MM1", MM1), ("MM2", MM2), ("MV1", MV1), ("MV2", MV2)]
+}
+
+/// The Figure 4 (cost-model accuracy) suite.
+pub fn fig4_suite() -> Vec<(&'static str, Workload)> {
+    vec![("MM", MM1), ("MV", MV_4090), ("CONV", CONV2)]
+}
+
+/// Every named workload across all suites (deduplicated by name).
+pub fn all_named() -> Vec<(&'static str, Workload)> {
+    let mut out: Vec<(&'static str, Workload)> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for (n, w) in table2_suite()
+        .into_iter()
+        .chain([("MM_4090", MM_4090), ("MV_4090", MV_4090), ("CONV_4090", CONV_4090)])
+    {
+        if seen.insert(w.id()) {
+            out.push((n, w));
+        }
+    }
+    out
+}
+
+/// Resolve a workload by its suite name (case-insensitive), e.g. "mm1",
+/// "conv2", "mv_4090".
+pub fn by_name(name: &str) -> Option<Workload> {
+    let up = name.to_ascii_uppercase();
+    match up.as_str() {
+        "MM1" => Some(MM1),
+        "MM2" => Some(MM2),
+        "MM3" => Some(MM3),
+        "MM4" => Some(MM4),
+        "MV1" => Some(MV1),
+        "MV2" => Some(MV2),
+        "MV3" => Some(MV3),
+        "MV4" => Some(MV4),
+        "CONV1" => Some(CONV1),
+        "CONV2" => Some(CONV2),
+        "CONV3" => Some(CONV3),
+        "MM_4090" | "MM4090" => Some(MM_4090),
+        "MV_4090" | "MV4090" => Some(MV_4090),
+        "CONV_4090" | "CONV4090" => Some(CONV_4090),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_have_paper_sizes() {
+        assert_eq!(table2_suite().len(), 11);
+        assert_eq!(table3_suite().len(), 3);
+        assert_eq!(table4_suite().len(), 4);
+        assert_eq!(fig4_suite().len(), 3);
+    }
+
+    #[test]
+    fn by_name_resolves_each_table2_member() {
+        for (name, w) in table2_suite() {
+            assert_eq!(by_name(name), Some(w), "{name}");
+            assert_eq!(by_name(&name.to_lowercase()), Some(w));
+        }
+        assert_eq!(by_name("bogus"), None);
+    }
+
+    #[test]
+    fn mv1_shape_matches_paper() {
+        if let Workload::MatVec { batch, n, k } = MV1 {
+            assert_eq!((batch, n, k), (1, 49512, 12288));
+        } else {
+            panic!("MV1 must be MatVec");
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Property-based tests on coordinator and search invariants (routing,
+//! batching, state): hand-rolled property harness over seeded cases.
+
+use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
+use ecokernel::coordinator::{SearchJob, WorkerPool};
+use ecokernel::schedule::space::ScheduleSpace;
+use ecokernel::search::{select_final, EvaluatedKernel, KController, FINAL_LATENCY_TOL};
+use ecokernel::util::Rng;
+use ecokernel::workload::suites;
+
+fn forall(seed: u64, n: usize, mut prop: impl FnMut(&mut Rng, usize)) {
+    let mut rng = Rng::seed_from_u64(seed);
+    for case in 0..n {
+        let mut case_rng = rng.fork(case as u64);
+        prop(&mut case_rng, case);
+    }
+}
+
+#[test]
+fn prop_k_controller_state_stays_legal_under_any_snr_sequence() {
+    forall(1, 50, |rng, case| {
+        let mut c = KController::new(rng.gen_f64(), 0.2, rng.normal() * 5.0, rng.gen_range(0, 3));
+        let m = 1 + rng.gen_range(0, 64);
+        for step in 0..40 {
+            let snr = rng.normal() * 20.0;
+            c.update(snr);
+            assert!(
+                (0.0..=1.0).contains(&c.k),
+                "case {case} step {step}: k = {} out of range",
+                c.k
+            );
+            let n = c.n_measure(m);
+            assert!(n <= m, "case {case}: n_measure {n} > M {m}");
+            assert!(n >= c.min_measure.min(m), "case {case}: floor violated");
+        }
+        assert_eq!(c.trace.len(), 41);
+    });
+}
+
+#[test]
+fn prop_select_final_respects_latency_band_and_minimizes_energy() {
+    let spec = GpuArch::A100.spec();
+    let space = ScheduleSpace::new(suites::MM1, &spec);
+    forall(2, 40, |rng, case| {
+        let n = 2 + rng.gen_range(0, 30);
+        let pool: Vec<EvaluatedKernel> = (0..n)
+            .map(|_| {
+                let lat = 1e-4 * (1.0 + rng.gen_f64() * 5.0);
+                let energy = 1e-3 * (1.0 + rng.gen_f64() * 10.0);
+                EvaluatedKernel {
+                    schedule: space.fallback(),
+                    latency_s: lat,
+                    energy_j: energy,
+                    avg_power_w: energy / lat,
+                    energy_measured: true,
+                }
+            })
+            .collect();
+        let best = select_final(&pool);
+        let min_lat = pool.iter().map(|e| e.latency_s).fold(f64::INFINITY, f64::min);
+        let cutoff = min_lat * (1.0 + FINAL_LATENCY_TOL);
+        assert!(best.latency_s <= cutoff + 1e-15, "case {case}: outside band");
+        for e in &pool {
+            if e.latency_s <= cutoff {
+                assert!(
+                    best.energy_j <= e.energy_j + 1e-15,
+                    "case {case}: {} not minimal (saw {})",
+                    best.energy_j,
+                    e.energy_j
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_worker_pool_preserves_order_for_any_topology() {
+    forall(3, 5, |rng, case| {
+        let n_workers = 1 + rng.gen_range(0, 6);
+        let queue_cap = 1 + rng.gen_range(0, 4);
+        let n_jobs = 1 + rng.gen_range(0, 6);
+        let mut pool = WorkerPool::new(n_workers, queue_cap);
+        let workloads = [suites::MM1, suites::MV3, suites::CONV2];
+        for j in 0..n_jobs {
+            pool.submit(SearchJob {
+                name: format!("job{j}"),
+                workload: workloads[j % workloads.len()],
+                cfg: SearchConfig {
+                    gpu: GpuArch::A100,
+                    mode: SearchMode::LatencyOnly,
+                    population: 16,
+                    m_latency_keep: 4,
+                    rounds: 2,
+                    patience: 0,
+                    seed: j as u64,
+                    ..Default::default()
+                },
+            });
+        }
+        let results = pool.finish();
+        assert_eq!(results.len(), n_jobs, "case {case}");
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.index, i, "case {case}: order broken");
+            assert_eq!(r.name, format!("job{i}"));
+            assert!(r.worker < n_workers);
+        }
+    });
+}
+
+#[test]
+fn prop_schedule_space_roundtrips_mutation_chains() {
+    // Any chain of mutations from any start stays legal and keeps the
+    // derived geometry consistent (block sizes = threads * regs).
+    forall(4, 20, |rng, case| {
+        let arch = [GpuArch::A100, GpuArch::Rtx4090, GpuArch::P100][rng.gen_range(0, 3)];
+        let spec = arch.spec();
+        let workloads = suites::all_named();
+        let (_, w) = workloads[rng.gen_range(0, workloads.len())];
+        let space = ScheduleSpace::new(w, &spec);
+        let mut s = space.sample(rng);
+        for step in 0..60 {
+            s = ecokernel::schedule::mutation::mutate_one(&space, &s, rng);
+            assert!(space.is_legal(&s), "case {case} step {step}: illegal {s}");
+            assert_eq!(s.block_m(), s.threads_m * s.reg_m);
+            assert_eq!(s.block_n(), s.threads_n * s.reg_n);
+            assert_eq!(s.tile_k % s.unroll_k, 0);
+            let g = w.gemm_view();
+            assert!(s.grid(&g) >= 1);
+            assert!(s.k_steps(&g) >= 1);
+        }
+    });
+}
+
+#[test]
+fn prop_measurement_clock_merge_is_additive() {
+    use ecokernel::nvml::MeasurementClock;
+    forall(5, 30, |rng, case| {
+        let mk = |rng: &mut Rng| {
+            let mut c = MeasurementClock::new();
+            c.charge_warmup(rng.gen_f64() * 5.0);
+            c.charge_kernel_exec(rng.gen_f64() * 10.0);
+            c.charge_latency_eval(rng.gen_f64());
+            c.charge_model_predict(rng.gen_f64() * 0.01);
+            c.charge_model_train(rng.gen_f64() * 0.1);
+            c.note_energy_measurement();
+            c
+        };
+        let a = mk(rng);
+        let b = mk(rng);
+        let mut merged = a.clone();
+        merged.merge(&b);
+        let sum = a.total_s + b.total_s;
+        assert!(
+            (merged.total_s - sum).abs() < 1e-12,
+            "case {case}: {} != {}",
+            merged.total_s,
+            sum
+        );
+        assert_eq!(merged.n_energy_measurements, 2);
+        // total equals the sum of the parts.
+        let parts = merged.warmup_s
+            + merged.kernel_exec_s
+            + merged.latency_eval_s
+            + merged.model_predict_s
+            + merged.model_train_s;
+        assert!((merged.total_s - parts).abs() < 1e-9, "case {case}: parts drift");
+    });
+}

@@ -1,0 +1,163 @@
+//! Property-based tests on the cost-model stack (hand-rolled property
+//! harness: seeded random cases, counterexample printed on failure —
+//! the offline build has no proptest crate).
+
+use ecokernel::costmodel::{eq1_weight, BoostParams, Gbdt, PaperWeightedSquaredError, SquaredError};
+use ecokernel::util::{stats, Rng};
+
+/// Run `n` random cases of a property.
+fn forall(seed: u64, n: usize, mut prop: impl FnMut(&mut Rng, usize)) {
+    let mut rng = Rng::seed_from_u64(seed);
+    for case in 0..n {
+        let mut case_rng = rng.fork(case as u64);
+        prop(&mut case_rng, case);
+    }
+}
+
+fn random_dataset(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    // Random piecewise-linear target over random features.
+    let coef: Vec<f64> = (0..d).map(|_| rng.normal() * 2.0).collect();
+    let thresh: Vec<f64> = (0..d).map(|_| rng.gen_f64()).collect();
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x: Vec<f64> = (0..d).map(|_| rng.gen_f64()).collect();
+        let y: f64 = x
+            .iter()
+            .zip(&coef)
+            .zip(&thresh)
+            .map(|((xi, c), t)| if xi > t { c * xi } else { -c * (1.0 - xi) })
+            .sum();
+        xs.push(x);
+        ys.push(y);
+    }
+    (xs, ys)
+}
+
+#[test]
+fn prop_gbdt_predictions_bounded_by_target_hull() {
+    // Tree leaves are Newton steps toward targets: predictions must stay
+    // inside (a small expansion of) the target range.
+    forall(1, 12, |rng, case| {
+        let n = 80 + rng.gen_range(0, 200);
+        let d = 2 + rng.gen_range(0, 4);
+        let (xs, ys) = random_dataset(rng, n, d);
+        let w = vec![1.0; n];
+        let p = BoostParams { n_trees: 30, max_depth: 4, ..Default::default() };
+        let model = Gbdt::fit(&xs, &ys, &w, &SquaredError, &p, rng);
+        let lo = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let span = (hi - lo).max(1e-9);
+        for x in xs.iter().take(50) {
+            let pred = model.predict(x);
+            assert!(
+                pred >= lo - 0.25 * span && pred <= hi + 0.25 * span,
+                "case {case}: pred {pred} escapes hull [{lo}, {hi}]"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_gbdt_more_trees_never_hurt_training_fit() {
+    forall(2, 8, |rng, case| {
+        let n = 120 + rng.gen_range(0, 100);
+        let (xs, ys) = random_dataset(rng, n, 3);
+        let w = vec![1.0; n];
+        let mse = |trees: usize, rng: &mut Rng| {
+            let p = BoostParams { n_trees: trees, max_depth: 4, ..Default::default() };
+            let m = Gbdt::fit(&xs, &ys, &w, &SquaredError, &p, rng);
+            xs.iter().zip(&ys).map(|(x, y)| (m.predict(x) - y).powi(2)).sum::<f64>() / n as f64
+        };
+        let few = mse(10, &mut rng.fork(1));
+        let many = mse(60, &mut rng.fork(1));
+        assert!(
+            many <= few * 1.05,
+            "case {case}: 60 trees mse {many} worse than 10 trees {few}"
+        );
+    });
+}
+
+#[test]
+fn prop_gbdt_invariant_to_sample_order() {
+    forall(3, 6, |rng, case| {
+        let n = 100;
+        let (mut xs, mut ys) = random_dataset(rng, n, 3);
+        let w = vec![1.0; n];
+        let p = BoostParams { n_trees: 20, max_depth: 4, colsample: 1.0, ..Default::default() };
+        let m1 = Gbdt::fit(&xs, &ys, &w, &SquaredError, &p, &mut Rng::seed_from_u64(1));
+        // Shuffle consistently.
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let xs2: Vec<Vec<f64>> = idx.iter().map(|&i| xs[i].clone()).collect();
+        let ys2: Vec<f64> = idx.iter().map(|&i| ys[i]).collect();
+        xs = xs2;
+        ys = ys2;
+        let m2 = Gbdt::fit(&xs, &ys, &w, &SquaredError, &p, &mut Rng::seed_from_u64(1));
+        for x in xs.iter().take(30) {
+            let (a, b) = (m1.predict(x), m2.predict(x));
+            assert!(
+                (a - b).abs() < 1e-6 * (1.0 + a.abs()),
+                "case {case}: order-dependent predictions {a} vs {b}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_eq1_weighting_shifts_accuracy_to_low_targets() {
+    // Over random datasets with wide dynamic range, Eq. 1 weighting must
+    // not degrade relative error on the lowest-target tercile.
+    forall(4, 6, |rng, case| {
+        let n = 300;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let a = rng.gen_f64();
+            let b = rng.gen_f64();
+            xs.push(vec![a, b]);
+            ys.push(0.05 + 8.0 * a * a + 0.3 * b);
+        }
+        let p = BoostParams { n_trees: 40, max_depth: 4, ..Default::default() };
+        let w_eq1: Vec<f64> = ys.iter().map(|&y| eq1_weight(y)).collect();
+        let w_flat = vec![1.0; n];
+        let weighted =
+            Gbdt::fit(&xs, &ys, &w_eq1, &PaperWeightedSquaredError, &p, &mut rng.fork(1));
+        let flat = Gbdt::fit(&xs, &ys, &w_flat, &SquaredError, &p, &mut rng.fork(1));
+        let cutoff = stats::percentile(&ys, 33.0);
+        let rel = |m: &Gbdt| {
+            let mut e = 0.0;
+            let mut c = 0;
+            for (x, y) in xs.iter().zip(&ys) {
+                if *y <= cutoff {
+                    e += ((m.predict(x) - y) / y).abs();
+                    c += 1;
+                }
+            }
+            e / c as f64
+        };
+        let (rw, rf) = (rel(&weighted), rel(&flat));
+        assert!(rw <= rf * 1.15, "case {case}: weighted {rw} much worse than flat {rf}");
+    });
+}
+
+#[test]
+fn prop_snr_monotone_in_noise() {
+    forall(5, 10, |rng, case| {
+        let n = 30 + rng.gen_range(0, 50);
+        let measured: Vec<f64> = (0..n).map(|_| 1.0 + rng.gen_f64() * 9.0).collect();
+        let mut last_snr = f64::INFINITY;
+        for noise in [0.01, 0.05, 0.2, 0.8] {
+            let pred: Vec<f64> = measured
+                .iter()
+                .map(|m| m + noise * rng.normal() * m)
+                .collect();
+            let snr = stats::snr_db(&pred, &measured);
+            assert!(
+                snr < last_snr + 3.0,
+                "case {case}: SNR not (approx) decreasing with noise: {snr} after {last_snr}"
+            );
+            last_snr = snr;
+        }
+    });
+}

@@ -1,0 +1,125 @@
+//! Integration: AOT artifacts -> PJRT load/compile/execute -> numerics
+//! vs Rust-side f64 oracles. Requires `make artifacts` (the suite skips
+//! gracefully when artifacts are absent, e.g. in a fresh checkout).
+
+use ecokernel::runtime::{ArtifactRegistry, LoadedKernel};
+use ecokernel::util::Rng;
+
+fn registry() -> Option<ArtifactRegistry> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ArtifactRegistry::open(&dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping runtime_e2e: {e:#}");
+            None
+        }
+    }
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * 0.1).collect()
+}
+
+#[test]
+fn mm_artifact_matches_f64_oracle() {
+    let Some(reg) = registry() else { return };
+    let meta = reg.get("mm_b1_m512_n512_k512", "bm64_bn64_bk16").expect("palette member");
+    let k = reg.load(meta).expect("compile");
+    let mut rng = Rng::seed_from_u64(1);
+    let x = rand_vec(&mut rng, 512 * 512);
+    let w = rand_vec(&mut rng, 512 * 512);
+    let shape = [512usize, 512];
+    let out = k.run_f32(&[(&x, &shape), (&w, &shape)]).expect("execute");
+    assert_eq!(out.len(), 512 * 512);
+    for _ in 0..50 {
+        let i = rng.gen_range(0, 512);
+        let j = rng.gen_range(0, 512);
+        let mut acc = 0.0f64;
+        for kk in 0..512 {
+            acc += x[i * 512 + kk] as f64 * w[kk * 512 + j] as f64;
+        }
+        let got = out[i * 512 + j] as f64;
+        assert!((got - acc).abs() < 1e-3, "({i},{j}): {got} vs {acc}");
+    }
+}
+
+#[test]
+fn mv_artifact_matches_f64_oracle() {
+    let Some(reg) = registry() else { return };
+    let meta = reg.get("mv_b1_n4096_k1024", "bm1_bn128_bk128").expect("palette member");
+    let k = reg.load(meta).expect("compile");
+    let mut rng = Rng::seed_from_u64(2);
+    let w = rand_vec(&mut rng, 4096 * 1024);
+    let x = rand_vec(&mut rng, 1024);
+    let out = k
+        .run_f32(&[(&w, &[4096usize, 1024]), (&x, &[1024usize])])
+        .expect("execute");
+    assert_eq!(out.len(), 4096);
+    for _ in 0..50 {
+        let i = rng.gen_range(0, 4096);
+        let mut acc = 0.0f64;
+        for kk in 0..1024 {
+            acc += w[i * 1024 + kk] as f64 * x[kk] as f64;
+        }
+        assert!((out[i] as f64 - acc).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn all_mm_variants_agree_with_each_other() {
+    // Every block geometry computes the SAME function — variants must
+    // agree bitwise-closely on identical inputs.
+    let Some(reg) = registry() else { return };
+    let mut rng = Rng::seed_from_u64(3);
+    let x = rand_vec(&mut rng, 512 * 512);
+    let w = rand_vec(&mut rng, 512 * 512);
+    let shape = [512usize, 512];
+    let variants = reg.variants("mm_b1_m512_n512_k512");
+    assert!(variants.len() >= 10);
+    let mut reference: Option<Vec<f32>> = None;
+    // Cap compile cost: check 6 spread-out variants.
+    for meta in variants.iter().step_by((variants.len() / 6).max(1)) {
+        let k = reg.load(meta).expect("compile");
+        let out = k.run_f32(&[(&x, &shape), (&w, &shape)]).expect("execute");
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => {
+                let max_diff = r
+                    .iter()
+                    .zip(&out)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(max_diff < 1e-3, "{}: diverges by {max_diff}", meta.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn wrong_input_shapes_are_rejected() {
+    let Some(reg) = registry() else { return };
+    let meta = reg.get("mm_b1_m512_n512_k512", "bm64_bn64_bk16").expect("member");
+    let k = reg.load(meta).expect("compile");
+    let tiny = vec![1.0f32; 16];
+    let shape = [4usize, 4];
+    assert!(k.run_f32(&[(&tiny, &shape), (&tiny, &shape)]).is_err());
+    let x = vec![1.0f32; 512 * 512];
+    let s = [512usize, 512];
+    assert!(k.run_f32(&[(&x, &s)]).is_err(), "arity check");
+}
+
+#[test]
+fn nearest_mapping_always_resolves_for_search_winners() {
+    let Some(reg) = registry() else { return };
+    use ecokernel::config::{GpuArch, SearchMode};
+    use ecokernel::schedule::space::ScheduleSpace;
+    let spec = GpuArch::A100.spec();
+    let space = ScheduleSpace::new(ecokernel::workload::suites::MM1, &spec);
+    let mut rng = Rng::seed_from_u64(4);
+    let _ = SearchMode::EnergyAware;
+    for s in space.sample_n(&mut rng, 100) {
+        let m = reg.nearest("mm_b1_m512_n512_k512", &s);
+        assert!(m.is_some(), "no artifact for {s}");
+    }
+    let _ = LoadedKernel::load; // keep the symbol referenced
+}

@@ -1,0 +1,143 @@
+//! Integration: the full search stack (schedule space -> simulator ->
+//! NVML-sim -> cost model -> Algorithm 1) across modes and workloads.
+
+use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
+use ecokernel::search::{run_search, FINAL_LATENCY_TOL};
+use ecokernel::workload::suites;
+
+fn cfg(gpu: GpuArch, mode: SearchMode, seed: u64) -> SearchConfig {
+    SearchConfig {
+        gpu,
+        mode,
+        seed,
+        population: 48,
+        m_latency_keep: 12,
+        rounds: 6,
+        patience: 0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn energy_aware_beats_ansor_on_energy_across_operator_families() {
+    // The Table-2 headline, one operator per family.
+    for (i, w) in [suites::MM1, suites::MV3, suites::CONV2].into_iter().enumerate() {
+        let seed = 10 + i as u64;
+        let ansor = run_search(w, &cfg(GpuArch::A100, SearchMode::LatencyOnly, seed));
+        let ours = run_search(w, &cfg(GpuArch::A100, SearchMode::EnergyAware, seed));
+        assert!(
+            ours.best.energy_j <= ansor.best.energy_j * 1.02,
+            "{w}: ours {} mJ vs ansor {} mJ",
+            ours.best.energy_j * 1e3,
+            ansor.best.energy_j * 1e3
+        );
+        // Latency stays in the same class.
+        assert!(
+            ours.best.latency_s <= ansor.best.latency_s * (1.0 + 3.0 * FINAL_LATENCY_TOL),
+            "{w}: latency regressed {} vs {}",
+            ours.best.latency_s,
+            ansor.best.latency_s
+        );
+    }
+}
+
+#[test]
+fn works_on_all_simulated_gpus() {
+    for gpu in [GpuArch::A100, GpuArch::Rtx4090, GpuArch::P100, GpuArch::V100] {
+        let out = run_search(suites::MM1, &cfg(gpu, SearchMode::EnergyAware, 3));
+        assert!(out.best.energy_j > 0.0 && out.best.latency_s > 0.0, "{gpu}");
+        assert!(out.best.avg_power_w < gpu.spec().tdp_w * 1.02, "{gpu}");
+    }
+}
+
+#[test]
+fn k_controller_reduces_measurements_vs_nvml_only() {
+    let w = suites::MM_4090;
+    let seed = 500;
+    let mut c = cfg(GpuArch::A100, SearchMode::EnergyAware, seed);
+    c.mu_snr_db = -5.0;
+    c.rounds = 8;
+    let ours = run_search(w, &c);
+    c.mode = SearchMode::EnergyNvmlOnly;
+    let nvml = run_search(w, &c);
+    assert!(
+        (ours.n_energy_measurements() as f64)
+            < nvml.n_energy_measurements() as f64 * 0.85,
+        "ours {} vs nvml {}",
+        ours.n_energy_measurements(),
+        nvml.n_energy_measurements()
+    );
+    assert!(ours.clock.total_s < nvml.clock.total_s);
+    // Search quality must not collapse: within 15% energy of NVML-only
+    // at this deliberately tiny budget (paper-effort runs in
+    // EXPERIMENTS.md show parity).
+    assert!(
+        ours.best.energy_j <= nvml.best.energy_j * 1.15,
+        "quality loss: {} vs {}",
+        ours.best.energy_j,
+        nvml.best.energy_j
+    );
+}
+
+#[test]
+fn outcomes_are_reproducible_and_seed_sensitive() {
+    let c = cfg(GpuArch::A100, SearchMode::EnergyAware, 42);
+    let a = run_search(suites::CONV2, &c);
+    let b = run_search(suites::CONV2, &c);
+    assert_eq!(a.best.schedule, b.best.schedule);
+    assert_eq!(a.best.energy_j, b.best.energy_j);
+    assert_eq!(a.k_trace, b.k_trace);
+
+    let mut c2 = c.clone();
+    c2.seed = 43;
+    let d = run_search(suites::CONV2, &c2);
+    // Different seeds explore differently (almost surely different pools).
+    assert_ne!(
+        a.measured_pool.len() + a.rounds.len() * 1000 + a.n_latency_evals,
+        d.measured_pool.len() + d.rounds.len() * 1000 + d.n_latency_evals + usize::MAX / 2,
+        "trivially true; the real check is below"
+    );
+    assert!(a.best.schedule != d.best.schedule || a.best.energy_j != d.best.energy_j);
+}
+
+#[test]
+fn best_kernel_is_always_from_the_measured_pool() {
+    let out = run_search(suites::MM3, &cfg(GpuArch::A100, SearchMode::EnergyAware, 9));
+    assert!(out.best.energy_measured);
+    assert!(out
+        .measured_pool
+        .iter()
+        .any(|e| e.schedule == out.best.schedule && e.energy_j == out.best.energy_j));
+    // And it respects the final-selection latency tolerance.
+    let best_lat = out
+        .measured_pool
+        .iter()
+        .map(|e| e.latency_s)
+        .fold(f64::INFINITY, f64::min);
+    assert!(out.best.latency_s <= best_lat * (1.0 + FINAL_LATENCY_TOL) + 1e-12);
+}
+
+#[test]
+fn round_telemetry_is_monotone_and_complete() {
+    let out = run_search(suites::MM2, &cfg(GpuArch::A100, SearchMode::EnergyAware, 4));
+    assert_eq!(out.rounds.len(), 6);
+    for (i, r) in out.rounds.iter().enumerate() {
+        assert_eq!(r.round, i);
+        assert!(r.best_energy_j.is_finite());
+        assert!(r.elapsed_s >= 0.0);
+    }
+    // Best-so-far energy never increases.
+    for w in out.rounds.windows(2) {
+        assert!(w[1].best_energy_j <= w[0].best_energy_j + 1e-12);
+        assert!(w[1].elapsed_s >= w[0].elapsed_s);
+    }
+}
+
+#[test]
+fn patience_stops_early() {
+    let mut c = cfg(GpuArch::A100, SearchMode::EnergyAware, 5);
+    c.rounds = 30;
+    c.patience = 2;
+    let out = run_search(suites::MM1, &c);
+    assert!(out.rounds.len() < 30, "patience must trigger, got {} rounds", out.rounds.len());
+}
