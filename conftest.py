@@ -1,8 +1,105 @@
 """Repo-root pytest shim: make `pytest python/tests/` work from the
 repository root by putting `python/` on sys.path (the build-time
-`compile` package lives there)."""
+`compile` package lives there).
+
+Also provides a minimal, deterministic fallback for `hypothesis` when
+the real package is not installed (the build environment is offline):
+the property tests then run a fixed-seed random sweep with the same
+`@given`/`@settings`/`strategies` surface instead of erroring at
+collection. When hypothesis is available it is used untouched.
+"""
 
 import pathlib
 import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent / "python"))
+
+
+def _install_hypothesis_fallback():
+    import functools
+    import inspect
+    import random
+    import types
+    import zlib
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: rng.choice(options))
+
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    class _Rejected(Exception):
+        """Raised by assume() to skip one generated example."""
+
+    def assume(condition):
+        if not condition:
+            raise _Rejected()
+        return True
+
+    class settings:  # noqa: N801 - mirrors hypothesis' API
+        def __init__(self, max_examples=10, deadline=None, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._fallback_max_examples = self.max_examples
+            return fn
+
+    def given(**strategies):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                max_examples = getattr(wrapper, "_fallback_max_examples", 10)
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                ran = 0
+                attempts = 0
+                while ran < max_examples and attempts < max_examples * 50:
+                    attempts += 1
+                    values = {k: s.sample(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **values, **kwargs)
+                    except _Rejected:
+                        continue
+                    ran += 1
+
+            # Hide the strategy parameters from pytest's fixture
+            # resolution: the wrapper supplies them itself.
+            wrapper.__signature__ = inspect.Signature(
+                [
+                    p
+                    for p in inspect.signature(fn).parameters.values()
+                    if p.name not in strategies
+                ]
+            )
+            return wrapper
+
+        return decorate
+
+    mod = types.ModuleType("hypothesis")
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.sampled_from = sampled_from
+    st_mod.booleans = booleans
+    st_mod.floats = floats
+    mod.strategies = st_mod
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_fallback()

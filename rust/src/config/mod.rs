@@ -82,6 +82,8 @@ pub struct SearchConfig {
     pub nvml: NvmlConfig,
     /// Cost model hyperparameters.
     pub cost_model: CostModelConfig,
+    /// Persistent tuning store + warm-start transfer settings.
+    pub store: StoreConfig,
 }
 
 impl Default for SearchConfig {
@@ -103,6 +105,7 @@ impl Default for SearchConfig {
             immigrant_frac: 0.1,
             nvml: NvmlConfig::default(),
             cost_model: CostModelConfig::default(),
+            store: StoreConfig::default(),
         }
     }
 }
@@ -139,6 +142,7 @@ impl SearchConfig {
         }
         self.nvml.validate()?;
         self.cost_model.validate()?;
+        self.store.validate()?;
         Ok(())
     }
 
@@ -183,6 +187,10 @@ impl SearchConfig {
             "cost_model.colsample",
             "cost_model.weighted_loss",
             "cost_model.max_train_samples",
+            "store.dir",
+            "store.transfer",
+            "store.max_neighbors",
+            "store.write_back",
         ];
         for key in doc.entries.keys() {
             if !known.contains(&key.as_str()) {
@@ -232,6 +240,16 @@ impl SearchConfig {
                 max_train_samples: doc
                     .usize_or("cost_model.max_train_samples", d.cost_model.max_train_samples),
             },
+            store: StoreConfig {
+                dir: doc
+                    .get("store.dir")
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .or(d.store.dir),
+                transfer: doc.bool_or("store.transfer", d.store.transfer),
+                max_neighbors: doc.usize_or("store.max_neighbors", d.store.max_neighbors),
+                write_back: doc.bool_or("store.write_back", d.store.write_back),
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -239,7 +257,7 @@ impl SearchConfig {
 
     /// Serialize to TOML (round-trips through [`Self::from_toml_str`]).
     pub fn to_toml(&self) -> String {
-        format!(
+        let mut out = format!(
             "gpu = \"{}\"\nmode = \"{}\"\nseed = {}\npopulation = {}\n\
              m_latency_keep = {}\nk_init = {}\nmu_snr_db = {}\nk_step = {}\n\
              min_measure_per_round = {}\nrounds = {}\npatience = {}\n\
@@ -278,7 +296,17 @@ impl SearchConfig {
             fmt_f(self.cost_model.colsample),
             self.cost_model.weighted_loss,
             self.cost_model.max_train_samples,
-        )
+        );
+        out.push_str("\n[store]\n");
+        if let Some(dir) = &self.store.dir {
+            let escaped = dir.replace('\\', "\\\\").replace('"', "\\\"");
+            out.push_str(&format!("dir = \"{escaped}\"\n"));
+        }
+        out.push_str(&format!(
+            "transfer = {}\nmax_neighbors = {}\nwrite_back = {}\n",
+            self.store.transfer, self.store.max_neighbors, self.store.write_back
+        ));
+        out
     }
 }
 
@@ -399,6 +427,38 @@ impl CostModelConfig {
     }
 }
 
+/// Persistent tuning-store + warm-start transfer settings (see
+/// [`crate::store`]). With `dir = None` the search is fully stateless
+/// (the seed behaviour); with a directory set, finished searches are
+/// recorded and repeat/neighboring workloads are served from the cache.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreConfig {
+    /// Store directory (holds `tuning_store.jsonl`). `None` disables
+    /// the store entirely.
+    pub dir: Option<String>,
+    /// Warm-start new searches from cached neighbor workloads.
+    pub transfer: bool,
+    /// Maximum number of neighbor records consulted per transfer.
+    pub max_neighbors: usize,
+    /// Record finished searches back into the store.
+    pub write_back: bool,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig { dir: None, transfer: true, max_neighbors: 3, write_back: true }
+    }
+}
+
+impl StoreConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.transfer && self.max_neighbors == 0 {
+            return Err("store.max_neighbors must be >= 1 when store.transfer is on".into());
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -460,6 +520,29 @@ mod tests {
         assert_eq!(c.population, 64);
         assert!((c.nvml.warmup_s - 1.0).abs() < 1e-12);
         assert_eq!(c.rounds, SearchConfig::default().rounds);
+    }
+
+    #[test]
+    fn store_config_roundtrips_and_validates() {
+        let mut c = SearchConfig::default();
+        c.store.dir = Some("/tmp/ecokernel-store".into());
+        c.store.transfer = false;
+        c.store.max_neighbors = 5;
+        let back = SearchConfig::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(back.store, c.store);
+
+        let parsed = SearchConfig::from_toml_str(
+            "[store]\ndir = \"/tmp/s\"\ntransfer = true\nmax_neighbors = 2\n",
+        )
+        .unwrap();
+        assert_eq!(parsed.store.dir.as_deref(), Some("/tmp/s"));
+        assert_eq!(parsed.store.max_neighbors, 2);
+        assert!(parsed.store.write_back, "default preserved");
+
+        let mut bad = SearchConfig::default();
+        bad.store.transfer = true;
+        bad.store.max_neighbors = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

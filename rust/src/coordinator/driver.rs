@@ -5,6 +5,7 @@
 use super::events::EventLog;
 use super::metrics::SuiteMetrics;
 use super::workers::{JobResult, SearchJob, WorkerPool};
+use crate::store::TuningStore;
 use crate::util::Json;
 
 /// Driver configuration.
@@ -54,7 +55,39 @@ impl Driver {
             );
         }
         let mut pool = WorkerPool::new(self.cfg.n_workers, self.cfg.queue_cap);
-        for job in jobs {
+        let mut cached: Vec<JobResult> = Vec::new();
+        // One parsed store per distinct dir for the whole suite (a
+        // per-suite snapshot: hits reflect the store as of submission;
+        // workers append their own outcomes as they finish).
+        let mut stores: std::collections::HashMap<String, Option<TuningStore>> =
+            std::collections::HashMap::new();
+        for (index, job) in jobs.into_iter().enumerate() {
+            // Consult the tuning store before dispatching: an exact hit
+            // short-circuits the job entirely — no worker, no clock.
+            let hit = job.cfg.store.dir.as_ref().and_then(|dir| {
+                let store = stores
+                    .entry(dir.clone())
+                    .or_insert_with(|| TuningStore::open(std::path::Path::new(dir)).ok());
+                store
+                    .as_ref()
+                    .and_then(|s| s.exact_hit(job.workload, &job.cfg))
+                    .map(|rec| rec.to_outcome())
+            });
+            if let Some(outcome) = hit {
+                if let Some(log) = &self.log {
+                    log.emit(
+                        "job_cache_hit",
+                        vec![
+                            ("name", Json::str(job.name.clone())),
+                            ("workload", Json::str(job.workload.to_string())),
+                            ("mode", Json::str(job.cfg.mode.name())),
+                            ("best_energy_mj", Json::num(outcome.best.energy_j * 1e3)),
+                        ],
+                    );
+                }
+                cached.push(JobResult { index, name: job.name, outcome, worker: 0, cached: true });
+                continue;
+            }
             if let Some(log) = &self.log {
                 log.emit(
                     "job_submitted",
@@ -65,19 +98,31 @@ impl Driver {
                     ],
                 );
             }
-            pool.submit(job);
+            // Workers run the full store flow themselves (warm-start +
+            // write-back) through `run_search`, keyed off job.cfg.store.
+            pool.submit_at(index, job);
         }
-        let results = pool.finish();
+        let mut results = pool.finish();
+        results.extend(cached);
+        results.sort_by_key(|r| r.index);
 
         let mut metrics = SuiteMetrics::default();
         for r in &results {
-            metrics.absorb(&r.outcome);
+            if r.cached {
+                // A replayed cache hit is not a search: count it (and
+                // its zero clock) separately.
+                metrics.n_cache_hits += 1;
+                metrics.absorb_clock(&r.outcome.clock);
+            } else {
+                metrics.absorb(&r.outcome);
+            }
             if let Some(log) = &self.log {
                 log.emit(
                     "job_done",
                     vec![
                         ("name", Json::str(r.name.clone())),
                         ("worker", Json::num(r.worker as f64)),
+                        ("cached", Json::Bool(r.cached)),
                         ("best_latency_ms", Json::num(r.outcome.best.latency_s * 1e3)),
                         ("best_energy_mj", Json::num(r.outcome.best.energy_j * 1e3)),
                         ("best_power_w", Json::num(r.outcome.best.avg_power_w)),
@@ -135,5 +180,43 @@ mod tests {
         assert_eq!(events[0], "suite_started");
         assert_eq!(events.last().unwrap(), "suite_done");
         assert_eq!(events.iter().filter(|e| *e == "job_done").count(), 2);
+    }
+
+    #[test]
+    fn driver_serves_exact_hits_from_the_store() {
+        let dir = std::env::temp_dir()
+            .join(format!("ecokernel_driver_cache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = SearchConfig {
+            gpu: GpuArch::A100,
+            mode: SearchMode::EnergyAware,
+            population: 24,
+            m_latency_keep: 6,
+            rounds: 3,
+            patience: 0,
+            ..Default::default()
+        };
+        cfg.store.dir = Some(dir.to_string_lossy().into_owned());
+        let driver = Driver::new(DriverConfig { n_workers: 1, queue_cap: 1 });
+        let job = |name: &str| SearchJob {
+            name: name.to_string(),
+            workload: suites::MM1,
+            cfg: cfg.clone(),
+        };
+
+        let (r1, m1) = driver.run_suite(vec![job("first")]);
+        assert!(!r1[0].cached, "first run must search");
+        assert_eq!(m1.n_cache_hits, 0);
+        assert_eq!(m1.n_searches, 1);
+        assert!(r1[0].outcome.n_energy_measurements() > 0);
+
+        let (r2, m2) = driver.run_suite(vec![job("second")]);
+        assert!(r2[0].cached, "second run must be a cache hit");
+        assert_eq!(m2.n_cache_hits, 1);
+        assert_eq!(m2.n_searches, 0, "a replayed hit is not a search");
+        assert_eq!(r2[0].outcome.n_energy_measurements(), 0);
+        assert_eq!(r2[0].outcome.clock.total_s, 0.0);
+        assert_eq!(r2[0].outcome.best.schedule, r1[0].outcome.best.schedule);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -14,6 +14,8 @@ pub struct SuiteMetrics {
     pub total_warmup_s: f64,
     pub total_model_time_s: f64,
     pub total_rounds: usize,
+    /// Jobs served from the tuning store without dispatching a search.
+    pub n_cache_hits: usize,
 }
 
 impl SuiteMetrics {
@@ -44,8 +46,9 @@ impl SuiteMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "searches={} rounds={} energy_meas={} lat_timings={} sim_time={:.1}s (warmup {:.1}s, model {:.2}s)",
+            "searches={} cache_hits={} rounds={} energy_meas={} lat_timings={} sim_time={:.1}s (warmup {:.1}s, model {:.2}s)",
             self.n_searches,
+            self.n_cache_hits,
             self.total_rounds,
             self.total_energy_measurements,
             self.total_latency_timings,

@@ -29,8 +29,12 @@ pub struct JobResult {
     pub index: usize,
     pub name: String,
     pub outcome: SearchOutcome,
-    /// Which worker/device executed it.
+    /// Which worker/device executed it (0 for cache hits, which never
+    /// reach a device).
     pub worker: usize,
+    /// True when the driver served this job from the tuning store
+    /// without dispatching it.
+    pub cached: bool,
 }
 
 /// Fixed-size pool of search workers over a bounded job queue.
@@ -59,11 +63,18 @@ impl WorkerPool {
                 match job {
                     Ok((index, job)) => {
                         let outcome = run_search(job.workload, &job.cfg);
+                        // run_search may itself have hit the tuning
+                        // store (e.g. an identical earlier job in this
+                        // suite wrote back first): report it as cached
+                        // so suite metrics don't count a replay as a
+                        // search.
+                        let cached = outcome.is_cache_replay();
                         results.lock().expect("results").push(JobResult {
                             index,
                             name: job.name,
                             outcome,
                             worker,
+                            cached,
                         });
                     }
                     Err(_) => break, // queue closed
@@ -76,11 +87,17 @@ impl WorkerPool {
     /// Submit a job; blocks when the queue is full (backpressure).
     pub fn submit(&mut self, job: SearchJob) {
         let idx = self.submitted;
-        self.submitted += 1;
+        self.submit_at(idx, job);
+    }
+
+    /// Submit a job under an explicit result index (used by the driver
+    /// when some indices were already served from the tuning store).
+    pub fn submit_at(&mut self, index: usize, job: SearchJob) {
+        self.submitted = self.submitted.max(index) + 1;
         self.tx
             .as_ref()
             .expect("pool open")
-            .send((idx, job))
+            .send((index, job))
             .expect("workers alive");
     }
 

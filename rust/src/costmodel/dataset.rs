@@ -46,6 +46,16 @@ impl Dataset {
         &self.samples
     }
 
+    /// Multiply every stored target energy by `factor`. Used by
+    /// warm-start calibration: transferred cross-shape samples carry an
+    /// approximate (MAC-ratio) scale that one real measurement corrects.
+    pub fn scale_energies(&mut self, factor: f64) {
+        debug_assert!(factor.is_finite() && factor > 0.0);
+        for s in &mut self.samples {
+            s.energy_j *= factor;
+        }
+    }
+
     /// Normalization scale: the minimum measured energy (targets become
     /// `E / E_min`, so the best kernel scores ~1.0 and the model's
     /// "normalized energy score" is search-relative, as in §5.4).
@@ -109,6 +119,16 @@ mod tests {
         assert_eq!(d.len(), 3);
         let energies: Vec<f64> = d.samples().iter().map(|s| s.energy_j).collect();
         assert_eq!(energies, vec![3e-3, 4e-3, 5e-3]);
+    }
+
+    #[test]
+    fn scale_energies_rescales_targets() {
+        let mut d = Dataset::new(0);
+        d.push(&fv(), 2e-3);
+        d.push(&fv(), 4e-3);
+        d.scale_energies(2.0);
+        let energies: Vec<f64> = d.samples().iter().map(|s| s.energy_j).collect();
+        assert_eq!(energies, vec![4e-3, 8e-3]);
     }
 
     #[test]

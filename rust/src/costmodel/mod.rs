@@ -49,6 +49,14 @@ impl EnergyCostModel {
         }
     }
 
+    /// Rescale every stored training target by `factor` (no refit —
+    /// call [`Self::fit`] or [`Self::update`] afterwards). Warm-start
+    /// calibration uses this to pin transferred samples to the target
+    /// workload's measured energy scale.
+    pub fn scale_energies(&mut self, factor: f64) {
+        self.data.scale_energies(factor);
+    }
+
     /// `ModelUpdate` of Algorithm 1: add fresh measurements and refit on
     /// the full (windowed) dataset.
     pub fn update(&mut self, samples: &[(FeatureVector, f64)], rng: &mut Rng) {

@@ -8,10 +8,12 @@ pub mod ablations;
 pub mod figures;
 pub mod report;
 pub mod tables;
+pub mod warm_cold;
 
 pub use ablations::ablations;
 pub use figures::{fig2, fig3, fig4, fig5};
 pub use tables::{table1, table2, table3, table4, table5, Effort};
+pub use warm_cold::warm_cold;
 
 use anyhow::Result;
 
@@ -82,15 +84,23 @@ pub fn run_by_id(id: &str, effort: Effort) -> Result<String> {
             report::write_result_file("ablations.txt", &text)?;
             text
         }
+        "warmcold" => {
+            let r = warm_cold(effort);
+            let text = r.render();
+            report::write_result_file("warmcold.txt", &text)?;
+            report::write_result_file("warmcold.csv", &r.to_csv())?;
+            text
+        }
         other => anyhow::bail!(
-            "unknown experiment '{other}' (try table1..table5, fig2..fig5, ablations, all)"
+            "unknown experiment '{other}' (try table1..table5, fig2..fig5, ablations, warmcold, all)"
         ),
     };
     Ok(out)
 }
 
-/// Every experiment id in paper order (+ the design-choice ablations).
-pub const ALL_IDS: [&str; 10] = [
+/// Every experiment id in paper order (+ the design-choice ablations
+/// and the tuning-store warm-vs-cold study).
+pub const ALL_IDS: [&str; 11] = [
     "table1", "table2", "table3", "table4", "table5", "fig2", "fig3", "fig4", "fig5",
-    "ablations",
+    "ablations", "warmcold",
 ];

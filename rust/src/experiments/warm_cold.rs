@@ -1,0 +1,219 @@
+//! Warm-vs-cold experiment: quantify what the tuning store saves.
+//!
+//! For each operator family, an anchor workload is tuned into a fresh
+//! store, then a neighboring workload is tuned twice — cold (stateless,
+//! the seed behaviour) and warm (store + transfer). The report counts
+//! NVML energy measurements and simulated search seconds saved at
+//! equal-or-better final energy, plus the exact-hit replay of the
+//! anchor (0 measurements, 0 seconds).
+
+use super::report::{f, pct_reduction, TextTable};
+use super::tables::Effort;
+use crate::config::{GpuArch, SearchMode};
+use crate::search::run_search;
+use crate::workload::{suites, Workload};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// One warm-vs-cold comparison row.
+#[derive(Debug, Clone)]
+pub struct WarmColdRow {
+    pub name: String,
+    pub anchor: String,
+    pub cold_measurements: usize,
+    pub warm_measurements: usize,
+    pub cold_sim_s: f64,
+    pub warm_sim_s: f64,
+    pub cold_energy_j: f64,
+    pub warm_energy_j: f64,
+}
+
+impl WarmColdRow {
+    pub fn measurements_saved_pct(&self) -> f64 {
+        pct_reduction(self.warm_measurements as f64, self.cold_measurements as f64)
+    }
+
+    pub fn sim_time_saved_pct(&self) -> f64 {
+        pct_reduction(self.warm_sim_s, self.cold_sim_s)
+    }
+}
+
+/// The full warm-vs-cold report.
+#[derive(Debug, Clone)]
+pub struct WarmColdReport {
+    pub rows: Vec<WarmColdRow>,
+    /// Energy measurements of replaying the first anchor (exact hit).
+    pub exact_hit_measurements: usize,
+    /// Simulated seconds of the exact-hit replay.
+    pub exact_hit_sim_s: f64,
+    /// The anchor's original (cold, store-writing) search cost.
+    pub anchor_cold_sim_s: f64,
+}
+
+impl WarmColdReport {
+    pub fn avg_measurements_saved_pct(&self) -> f64 {
+        self.rows.iter().map(|r| r.measurements_saved_pct()).sum::<f64>()
+            / self.rows.len().max(1) as f64
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = TextTable::new(&[
+            "op",
+            "anchor",
+            "cold meas",
+            "warm meas",
+            "meas saved",
+            "cold sim (s)",
+            "warm sim (s)",
+            "time saved",
+            "cold E (mJ)",
+            "warm E (mJ)",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.name.clone(),
+                r.anchor.clone(),
+                r.cold_measurements.to_string(),
+                r.warm_measurements.to_string(),
+                format!("{:.1}%", r.measurements_saved_pct()),
+                f(r.cold_sim_s, 1),
+                f(r.warm_sim_s, 1),
+                format!("{:.1}%", r.sim_time_saved_pct()),
+                f(r.cold_energy_j * 1e3, 3),
+                f(r.warm_energy_j * 1e3, 3),
+            ]);
+        }
+        format!(
+            "Warm-start transfer vs cold search (store-seeded neighbors)\n{}\navg measurements saved: {:.1}%\nexact-hit replay of anchor: {} measurements, {:.1}s simulated (cold anchor paid {:.1}s)\n",
+            t.render(),
+            self.avg_measurements_saved_pct(),
+            self.exact_hit_measurements,
+            self.exact_hit_sim_s,
+            self.anchor_cold_sim_s,
+        )
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut t = TextTable::new(&[
+            "op",
+            "anchor",
+            "cold_measurements",
+            "warm_measurements",
+            "cold_sim_s",
+            "warm_sim_s",
+            "cold_energy_mj",
+            "warm_energy_mj",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.name.clone(),
+                r.anchor.clone(),
+                r.cold_measurements.to_string(),
+                r.warm_measurements.to_string(),
+                r.cold_sim_s.to_string(),
+                r.warm_sim_s.to_string(),
+                (r.cold_energy_j * 1e3).to_string(),
+                (r.warm_energy_j * 1e3).to_string(),
+            ]);
+        }
+        t.to_csv()
+    }
+}
+
+static RUN_COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+/// Anchor → target pairs, one per operator family (MM / MV / CONV).
+fn family_pairs() -> Vec<(&'static str, Workload, &'static str, Workload)> {
+    vec![
+        ("MM3", suites::MM3, "MM1", suites::MM1),
+        ("MV4", suites::MV4, "MV3", suites::MV3),
+        ("CONV3", suites::CONV3, "CONV2", suites::CONV2),
+    ]
+}
+
+/// Run the warm-vs-cold comparison across the operator families.
+pub fn warm_cold(effort: Effort) -> WarmColdReport {
+    let run_id = RUN_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir()
+        .join(format!("ecokernel_warmcold_{}_{run_id}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store_dir = dir.to_string_lossy().into_owned();
+
+    let mut rows = Vec::new();
+    let mut anchor_cold_sim_s = 0.0;
+    let mut first_anchor_cfg = None;
+    for (i, (anchor_name, anchor, target_name, target)) in family_pairs().into_iter().enumerate() {
+        // 1. Tune the anchor into the store (a cold search that records
+        //    its outcome).
+        let mut anchor_cfg = effort.cfg(GpuArch::A100, SearchMode::EnergyAware, 40 + i as u64);
+        anchor_cfg.store.dir = Some(store_dir.clone());
+        let anchor_out = run_search(anchor, &anchor_cfg);
+        anchor_cold_sim_s += anchor_out.clock.total_s;
+        if first_anchor_cfg.is_none() {
+            first_anchor_cfg = Some((anchor, anchor_cfg.clone()));
+        }
+
+        // 2. Tune the target cold (no store) and warm (store + transfer)
+        //    with identical config and seed.
+        let cold_cfg = effort.cfg(GpuArch::A100, SearchMode::EnergyAware, 50 + i as u64);
+        let cold = run_search(target, &cold_cfg);
+        let mut warm_cfg = cold_cfg.clone();
+        warm_cfg.store.dir = Some(store_dir.clone());
+        let warm = run_search(target, &warm_cfg);
+
+        rows.push(WarmColdRow {
+            name: target_name.to_string(),
+            anchor: anchor_name.to_string(),
+            cold_measurements: cold.n_energy_measurements(),
+            warm_measurements: warm.n_energy_measurements(),
+            cold_sim_s: cold.clock.total_s,
+            warm_sim_s: warm.clock.total_s,
+            cold_energy_j: cold.best.energy_j,
+            warm_energy_j: warm.best.energy_j,
+        });
+    }
+
+    // 3. Replay the first anchor: an exact hit costs nothing.
+    let (anchor, anchor_cfg) = first_anchor_cfg.expect("at least one family");
+    let replay = run_search(anchor, &anchor_cfg);
+    let report = WarmColdReport {
+        rows,
+        exact_hit_measurements: replay.n_energy_measurements(),
+        exact_hit_sim_s: replay.clock.total_s,
+        anchor_cold_sim_s,
+    };
+    let _ = std::fs::remove_dir_all(&dir);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warm_cold_saves_measurements_at_equal_energy() {
+        let r = warm_cold(Effort::Quick);
+        assert_eq!(r.rows.len(), 3);
+        // The exact-hit replay is free.
+        assert_eq!(r.exact_hit_measurements, 0);
+        assert_eq!(r.exact_hit_sim_s, 0.0);
+        // Transfer saves measurements on average across the families.
+        assert!(
+            r.avg_measurements_saved_pct() > 0.0,
+            "no average saving:\n{}",
+            r.render()
+        );
+        // No family regresses final energy beyond noise.
+        for row in &r.rows {
+            assert!(
+                row.warm_energy_j <= row.cold_energy_j * 1.05,
+                "{}: warm {} mJ vs cold {} mJ",
+                row.name,
+                row.warm_energy_j * 1e3,
+                row.cold_energy_j * 1e3
+            );
+        }
+        let text = r.render();
+        assert!(text.contains("exact-hit"));
+        assert!(r.to_csv().lines().count() == 4);
+    }
+}

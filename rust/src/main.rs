@@ -4,6 +4,7 @@
 //! Subcommands:
 //!   search      run one kernel search (the paper's core loop)
 //!   experiment  regenerate a paper table/figure (table1..5, fig2..5, all)
+//!   cache       inspect / maintain a persistent tuning store
 //!   artifacts   inspect / execute the AOT artifact registry
 //!   gpus        list simulated GPU spec sheets
 //!   config      print the default search config as TOML
@@ -13,6 +14,7 @@ use ecokernel::coordinator::{Driver, DriverConfig, EventLog};
 use ecokernel::experiments::{self, Effort};
 use ecokernel::runtime::ArtifactRegistry;
 use ecokernel::search::run_search;
+use ecokernel::store::TuningStore;
 use ecokernel::util::Json;
 use ecokernel::workload::suites;
 use std::process::ExitCode;
@@ -27,6 +29,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "search" => cmd_search(rest),
         "experiment" => cmd_experiment(rest),
+        "cache" => cmd_cache(rest),
         "artifacts" => cmd_artifacts(rest),
         "gpus" => cmd_gpus(),
         "config" => {
@@ -54,8 +57,10 @@ ecokernel — search-based energy-efficient GPU kernel generation
 USAGE:
   ecokernel search --workload <MM1|..|CONV3> [--gpu a100] [--mode energy|latency|nvml]
                    [--rounds N] [--population P] [--m M] [--mu DB] [--seed S]
+                   [--store DIR] [--no-transfer]
                    [--config file.toml] [--events out.jsonl] [--json]
-  ecokernel experiment <table1..table5|fig2..fig5|all> [--paper]
+  ecokernel experiment <table1..table5|fig2..fig5|warmcold|all> [--paper]
+  ecokernel cache <stats|list|prune|export> --store DIR
   ecokernel artifacts [--dir artifacts] [--list | --check | --run WORKLOAD_ID [--variant ID]]
   ecokernel gpus
   ecokernel config";
@@ -108,7 +113,7 @@ impl Flags {
 }
 
 fn cmd_search(args: &[String]) -> anyhow::Result<()> {
-    let flags = Flags::parse(args, &["json"])?;
+    let flags = Flags::parse(args, &["json", "no-transfer"])?;
     let mut cfg = match flags.get("config") {
         Some(path) => SearchConfig::from_toml_file(std::path::Path::new(path))?,
         None => SearchConfig::default(),
@@ -133,6 +138,12 @@ fn cmd_search(args: &[String]) -> anyhow::Result<()> {
     }
     if let Some(s) = flags.parse_num::<u64>("seed")? {
         cfg.seed = s;
+    }
+    if let Some(dir) = flags.get("store") {
+        cfg.store.dir = Some(dir.to_string());
+    }
+    if flags.has("no-transfer") {
+        cfg.store.transfer = false;
     }
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 
@@ -208,6 +219,57 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
         let text = experiments::run_by_id(id, effort)?;
         println!("{text}");
         println!("[{id} done in {:.1}s wall]\n", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn cmd_cache(args: &[String]) -> anyhow::Result<()> {
+    let Some(action) = args.first() else {
+        anyhow::bail!("cache action required: stats, list, prune, export");
+    };
+    let flags = Flags::parse(&args[1..], &[])?;
+    let dir = flags
+        .get("store")
+        .ok_or_else(|| anyhow::anyhow!("--store DIR is required"))?;
+    let mut store = TuningStore::open(std::path::Path::new(dir))?;
+    match action.as_str() {
+        "stats" => {
+            let s = store.stats();
+            println!("store     : {:?}", store.dir());
+            println!("records   : {}", s.n_records);
+            println!("workloads : {}", s.n_workloads);
+            println!("keys      : {}", s.n_keys);
+            println!("paid      : {} energy measurements", s.total_energy_measurements);
+            println!("saved/hit : {:.1}s simulated search time", s.total_sim_time_s);
+        }
+        "list" => {
+            for rec in store.records() {
+                println!(
+                    "{:<30} {:<8} {:<16} seed={:<4} E={:>8.3} mJ  lat={:>8.4} ms  meas={:<4} {}",
+                    rec.workload_id,
+                    rec.gpu,
+                    rec.mode,
+                    rec.seed,
+                    rec.best.energy_j * 1e3,
+                    rec.best.latency_s * 1e3,
+                    rec.n_energy_measurements,
+                    rec.best.schedule
+                );
+            }
+            if store.is_empty() {
+                println!("(store is empty)");
+            }
+        }
+        "prune" => {
+            let removed = store.prune()?;
+            println!("pruned {removed} superseded records ({} kept)", store.len());
+        }
+        "export" => {
+            for rec in store.records() {
+                println!("{}", rec.to_json().to_string());
+            }
+        }
+        other => anyhow::bail!("unknown cache action '{other}' (stats, list, prune, export)"),
     }
     Ok(())
 }

@@ -26,12 +26,35 @@ use crate::features::{featurize, FeatureVector};
 use crate::nvml::NvmlMeter;
 use crate::schedule::space::ScheduleSpace;
 use crate::schedule::{Candidate, Schedule};
+use crate::store::WarmStart;
 use crate::util::Rng;
 use crate::workload::Workload;
+use std::collections::HashSet;
 
-/// Run the energy-aware search. `use_model = true` is the paper's
+/// Run the energy-aware search cold. `use_model = true` is the paper's
 /// method; `false` is the NVML-only ablation.
 pub fn run(workload: Workload, cfg: &SearchConfig, use_model: bool) -> SearchOutcome {
+    run_warm(workload, cfg, use_model, None)
+}
+
+/// Run the energy-aware search, optionally warm-started from a tuning
+/// store (see [`crate::store::transfer`]). With `warm = None` this is
+/// byte-identical to the cold search. A warm start:
+///
+/// * injects re-legalized neighbor schedules into the initial
+///   population (capped at half the population);
+/// * pre-trains the cost model on transferred measured samples, so
+///   round 0 runs model-guided like every later round — one
+///   scale-calibration measurement plus `k·M` kernels instead of all
+///   `M`;
+/// * starts the dynamic-k controller at the neighbor's final `k`
+///   (SNR-guarded: a bad transfer drives `k` back up).
+pub fn run_warm(
+    workload: Workload,
+    cfg: &SearchConfig,
+    use_model: bool,
+    warm: Option<&WarmStart>,
+) -> SearchOutcome {
     let spec = cfg.gpu.spec();
     let space = ScheduleSpace::new(workload, &spec);
     let mut rng = Rng::seed_from_u64(cfg.seed);
@@ -39,8 +62,11 @@ pub fn run(workload: Workload, cfg: &SearchConfig, use_model: bool) -> SearchOut
     meter.warm_up();
 
     let mut model = EnergyCostModel::new(cfg.cost_model.clone());
-    let mut kctrl =
-        KController::new(cfg.k_init, cfg.k_step, cfg.mu_snr_db, cfg.min_measure_per_round);
+    let k_init = match warm.and_then(|w| w.k_hint) {
+        Some(k) if use_model => k,
+        _ => cfg.k_init,
+    };
+    let mut kctrl = KController::new(k_init, cfg.k_step, cfg.mu_snr_db, cfg.min_measure_per_round);
 
     let mut rounds: Vec<RoundStats> = Vec::new();
     let mut measured_pool: Vec<EvaluatedKernel> = Vec::new();
@@ -50,14 +76,146 @@ pub fn run(workload: Workload, cfg: &SearchConfig, use_model: bool) -> SearchOut
     // Fastest (schedule, timed latency) seen across all rounds.
     let mut fastest_seen: Option<(Schedule, f64)> = None;
 
-    // ---- initial round: random population, measure all M ----------------
-    let pop = super::population::init_population(&space, cfg.population, &mut rng);
+    // ---- initial round ---------------------------------------------------
+    let mut pop = super::population::init_population(&space, cfg.population, &mut rng);
+    if let Some(w) = warm {
+        inject_seeds(&mut pop, &w.seed_schedules, cfg.population);
+    }
+    // Pre-train the model on transferred measured samples: round 0 can
+    // then run model-guided instead of measuring all M.
+    if use_model {
+        if let Some(w) = warm {
+            if !w.seed_samples.is_empty() {
+                model.update(&w.seed_samples, &mut rng);
+                meter.clock.charge_model_train(
+                    MODEL_TRAIN_BASE_S + MODEL_TRAIN_PER_SAMPLE_S * model.n_samples() as f64,
+                );
+            }
+        }
+    }
+    let warm_model = use_model && model.is_trained();
+
     let top = latency_eva_and_pick(workload, &pop, cfg.m_latency_keep, &mut meter, &mut rng);
     if let Some(&(s, l)) = top.first() {
         fastest_seen = Some((s, l));
     }
     let mut parents: Vec<Schedule>;
-    {
+    if warm_model {
+        // Warm round 0: rank the M fastest with the transferred model,
+        // measure only k·M (this is where warm starts save NVML time).
+        //
+        // First, calibrate the transferred model's absolute scale with
+        // ONE real measurement of the fastest kernel: cross-shape
+        // samples carry an approximate (MAC-ratio) energy scale, and an
+        // uncorrected scale error would show up as a huge SNR error and
+        // trip the dynamic-k guard on the spot.
+        let cal_cand = Candidate::new(workload, top[0].0);
+        let cal_feats = featurize(&cal_cand, &spec);
+        let cal_pred = model.predict_energy_j(&cal_feats);
+        meter.clock.charge_model_predict(MODEL_PREDICT_BASE_S + MODEL_PREDICT_PER_KERNEL_S);
+        let cal = meter.measure(&cal_cand, &mut rng);
+        if cal_pred.is_finite() && cal_pred > 0.0 {
+            let ratio = (cal.energy_j / cal_pred).clamp(0.2, 5.0);
+            model.scale_energies(ratio);
+        }
+        model.update(&[(cal_feats, cal.energy_j)], &mut rng);
+        meter.clock.charge_model_train(
+            MODEL_TRAIN_BASE_S + MODEL_TRAIN_PER_SAMPLE_S * model.n_samples() as f64,
+        );
+        let cal_kernel = EvaluatedKernel {
+            schedule: top[0].0,
+            latency_s: cal.latency_s,
+            energy_j: cal.energy_j,
+            avg_power_w: cal.avg_power_w,
+            energy_measured: true,
+        };
+
+        let feats: Vec<FeatureVector> = top
+            .iter()
+            .map(|(s, _)| featurize(&Candidate::new(workload, *s), &spec))
+            .collect();
+        let pred = model.predict_energy_batch(&feats);
+        meter.clock.charge_model_predict(
+            MODEL_PREDICT_BASE_S + MODEL_PREDICT_PER_KERNEL_S * feats.len() as f64,
+        );
+        let mut idx: Vec<usize> = (0..top.len()).collect();
+        idx.sort_by(|&a, &b| pred[a].partial_cmp(&pred[b]).expect("finite"));
+        let n_measure = kctrl.n_measure(top.len());
+        // top[0] already has its measurement (the calibration): spend
+        // the rest of the round's k·M budget on distinct kernels. The
+        // calibration pair stays OUT of the SNR arrays — the model was
+        // just fit on that exact point, so its prediction is in-sample
+        // and would flatter the SNR precisely when the transfer is bad.
+        let chosen: Vec<usize> = idx
+            .iter()
+            .filter(|&&i| i != 0)
+            .take(n_measure.saturating_sub(1))
+            .copied()
+            .collect();
+
+        let mut measured_pred: Vec<f64> = Vec::with_capacity(chosen.len());
+        let mut measured_vals: Vec<f64> = Vec::with_capacity(chosen.len());
+        let mut samples: Vec<(FeatureVector, f64)> = Vec::new();
+        let mut measured: Vec<EvaluatedKernel> = vec![cal_kernel];
+        for &i in &chosen {
+            let (s, _) = top[i];
+            let m = meter.measure(&Candidate::new(workload, s), &mut rng);
+            measured_pred.push(pred[i]);
+            measured_vals.push(m.energy_j);
+            samples.push((feats[i].clone(), m.energy_j));
+            measured.push(EvaluatedKernel {
+                schedule: s,
+                latency_s: m.latency_s,
+                energy_j: m.energy_j,
+                avg_power_w: m.avg_power_w,
+                energy_measured: true,
+            });
+        }
+        let mut snr = None;
+        if !samples.is_empty() {
+            model.update(&samples, &mut rng);
+            meter.clock.charge_model_train(
+                MODEL_TRAIN_BASE_S + MODEL_TRAIN_PER_SAMPLE_S * model.n_samples() as f64,
+            );
+        }
+        if measured_vals.len() >= 2 && measured_pred.iter().all(|p| p.is_finite()) {
+            let s = EnergyCostModel::snr_error_db(&measured_pred, &measured_vals);
+            kctrl.update(s);
+            snr = Some(s);
+        }
+        // Parents: predictions with measured overrides, top 50% lowest,
+        // plus the two fastest pinned (mirrors the later rounds).
+        let mut energies = pred;
+        energies[0] = cal.energy_j;
+        for (&i, &v) in chosen.iter().zip(&measured_vals) {
+            energies[i] = v;
+        }
+        let mut order: Vec<usize> = (0..energies.len()).collect();
+        order.sort_by(|&a, &b| energies[a].partial_cmp(&energies[b]).expect("finite"));
+        parents = order
+            .iter()
+            .take((cfg.m_latency_keep / 2).max(1))
+            .map(|&i| top[i].0)
+            .collect();
+        for (s, _) in top.iter().take(2) {
+            if !parents.contains(s) {
+                parents.push(*s);
+            }
+        }
+        best_energy = measured.iter().map(|e| e.energy_j).fold(f64::INFINITY, f64::min);
+        let n_measured = measured.len();
+        measured_pool.extend(measured);
+        rounds.push(RoundStats {
+            round: 0,
+            best_latency_s: top[0].1,
+            best_energy_j: best_energy,
+            snr_db: snr,
+            k: kctrl.k,
+            n_measured,
+            elapsed_s: meter.clock.total_s,
+        });
+    } else {
+        // Cold round 0 (the paper's flow): measure all M.
         let feats: Vec<FeatureVector> = top
             .iter()
             .map(|(s, _)| featurize(&Candidate::new(workload, *s), &spec))
@@ -259,6 +417,33 @@ pub fn run(workload: Workload, cfg: &SearchConfig, use_model: bool) -> SearchOut
     }
 }
 
+/// Merge transferred seed schedules into the head of the initial
+/// population (dedup, capped at half the population so random
+/// exploration keeps its share).
+fn inject_seeds(pop: &mut Vec<Schedule>, seeds: &[Schedule], population: usize) {
+    if seeds.is_empty() || pop.is_empty() {
+        return;
+    }
+    let n_seed = seeds.len().min((population / 2).max(1));
+    let mut seen: HashSet<Schedule> = HashSet::new();
+    let mut merged: Vec<Schedule> = Vec::with_capacity(population);
+    for s in seeds.iter().take(n_seed).chain(pop.iter()) {
+        if merged.len() == population {
+            break;
+        }
+        if seen.insert(*s) {
+            merged.push(*s);
+        }
+    }
+    // Tiny/saturated spaces: refill with (possibly duplicate) originals.
+    let mut i = 0;
+    while merged.len() < population {
+        merged.push(pop[i % pop.len()]);
+        i += 1;
+    }
+    *pop = merged;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,6 +517,64 @@ mod tests {
         let b = run(suites::CONV2, &cfg, true);
         assert_eq!(a.best.schedule, b.best.schedule);
         assert_eq!(a.k_trace, b.k_trace);
+    }
+
+    #[test]
+    fn inject_seeds_caps_and_keeps_population_size() {
+        let spec = GpuArch::A100.spec();
+        let space = crate::schedule::space::ScheduleSpace::new(suites::MM1, &spec);
+        let mut rng = crate::util::Rng::seed_from_u64(21);
+        let mut pop = super::super::population::init_population(&space, 32, &mut rng);
+        let seeds = space.sample_n(&mut rng, 40);
+        inject_seeds(&mut pop, &seeds, 32);
+        assert_eq!(pop.len(), 32);
+        // At most half the population comes from seeds; the head is
+        // seed-first.
+        let seed_set: HashSet<Schedule> = seeds.iter().copied().collect();
+        let n_from_seeds = pop.iter().filter(|s| seed_set.contains(s)).count();
+        assert!(n_from_seeds >= 1);
+        assert!(pop.iter().any(|s| !seed_set.contains(s)), "random share survives");
+    }
+
+    #[test]
+    fn warm_start_measures_less_in_round0_and_overall() {
+        let cfg = quick_cfg(8);
+        let cold = run(suites::MM1, &cfg, true);
+        // Fabricate a warm start from the cold run's own measured pool —
+        // the best-case transfer (same workload), isolating the
+        // mechanism from neighbor-similarity effects.
+        let spec = cfg.gpu.spec();
+        let samples: Vec<(FeatureVector, f64)> = cold
+            .measured_pool
+            .iter()
+            .map(|e| (featurize(&Candidate::new(suites::MM1, e.schedule), &spec), e.energy_j))
+            .collect();
+        let seeds: Vec<Schedule> =
+            cold.measured_pool.iter().map(|e| e.schedule).take(8).collect();
+        let warm = WarmStart {
+            seed_schedules: seeds,
+            seed_samples: samples,
+            k_hint: Some(0.4),
+            n_neighbors: 1,
+        };
+        let warm_out = run_warm(suites::MM1, &cfg, true, Some(&warm));
+        // Round 0 cold measures all M = 12; warm spends ceil(0.4*12) = 5
+        // total (1 calibration + 4 model-chosen kernels).
+        assert_eq!(cold.rounds[0].n_measured, 12);
+        assert!(
+            warm_out.rounds[0].n_measured <= 5,
+            "warm round 0 measured {}",
+            warm_out.rounds[0].n_measured
+        );
+        assert!(
+            warm_out.n_energy_measurements() < cold.n_energy_measurements(),
+            "warm {} !< cold {}",
+            warm_out.n_energy_measurements(),
+            cold.n_energy_measurements()
+        );
+        // And the warm search still ends with a measured, finite winner.
+        assert!(warm_out.best.energy_measured);
+        assert!(warm_out.best.energy_j.is_finite());
     }
 
     #[test]

@@ -13,7 +13,6 @@ pub use dynamic_k::KController;
 use crate::config::{SearchConfig, SearchMode};
 use crate::nvml::{MeasurementClock, NvmlMeter};
 use crate::schedule::{Candidate, Schedule};
-use crate::util::parallel::par_map;
 use crate::util::Rng;
 use crate::workload::Workload;
 
@@ -83,11 +82,38 @@ impl SearchOutcome {
     pub fn n_energy_measurements(&self) -> usize {
         self.clock.n_energy_measurements
     }
+
+    /// True when this outcome is a tuning-store replay rather than an
+    /// executed search: a real search always runs at least one round
+    /// and charges the clock; a cache hit does neither.
+    pub fn is_cache_replay(&self) -> bool {
+        self.rounds.is_empty() && self.clock.total_s == 0.0
+    }
 }
 
 /// Run a search in the mode chosen by `cfg.mode`.
+///
+/// When `cfg.store.dir` is set, the search goes through the persistent
+/// tuning store: an exact cache hit returns the recorded kernel with a
+/// zero clock, an unseen workload warm-starts from its nearest cached
+/// neighbors, and the finished outcome is written back. With no store
+/// configured this is the stateless paper flow.
 pub fn run_search(workload: Workload, cfg: &SearchConfig) -> SearchOutcome {
     cfg.validate().expect("invalid search config");
+    if let Some(dir) = cfg.store.dir.as_deref() {
+        match crate::store::TuningStore::open(std::path::Path::new(dir)) {
+            Ok(mut store) => return run_search_with_store(workload, cfg, &mut store),
+            Err(e) => {
+                // An unreadable/corrupt store must not brick the search:
+                // run stateless (and skip write-back into the bad store).
+                eprintln!("warning: tuning store disabled: {e:#}");
+            }
+        }
+    }
+    run_search_stateless(workload, cfg)
+}
+
+fn run_search_stateless(workload: Workload, cfg: &SearchConfig) -> SearchOutcome {
     match cfg.mode {
         SearchMode::LatencyOnly => latency_only::run(workload, cfg),
         SearchMode::EnergyAware => energy_aware::run(workload, cfg, true),
@@ -95,8 +121,36 @@ pub fn run_search(workload: Workload, cfg: &SearchConfig) -> SearchOutcome {
     }
 }
 
-/// Time the latency of every schedule in `gen` (noisy NVML timing for
-/// the charged clock + deterministic simulator ranking in parallel).
+/// Run a search through an already-open tuning store: exact-hit
+/// short-circuit, warm-start transfer, write-back.
+pub fn run_search_with_store(
+    workload: Workload,
+    cfg: &SearchConfig,
+    store: &mut crate::store::TuningStore,
+) -> SearchOutcome {
+    if let Some(rec) = store.exact_hit(workload, cfg) {
+        return rec.to_outcome();
+    }
+    let warm = if cfg.store.transfer && cfg.mode != SearchMode::LatencyOnly {
+        crate::store::transfer::build(store, workload, cfg)
+    } else {
+        None
+    };
+    let out = match cfg.mode {
+        SearchMode::LatencyOnly => latency_only::run(workload, cfg),
+        SearchMode::EnergyAware => energy_aware::run_warm(workload, cfg, true, warm.as_ref()),
+        SearchMode::EnergyNvmlOnly => energy_aware::run_warm(workload, cfg, false, warm.as_ref()),
+    };
+    if cfg.store.write_back {
+        if let Err(e) = store.append(crate::store::TuningRecord::from_outcome(&out, cfg)) {
+            eprintln!("warning: tuning store write-back failed: {e:#}");
+        }
+    }
+    out
+}
+
+/// Time the latency of every schedule in `gen` with noisy NVML timing,
+/// charging the measurement clock per candidate.
 ///
 /// Returns (schedule, timed latency) pairs sorted ascending by latency.
 pub fn latency_eva_and_pick(
@@ -106,25 +160,14 @@ pub fn latency_eva_and_pick(
     meter: &mut NvmlMeter,
     rng: &mut Rng,
 ) -> Vec<(Schedule, f64)> {
-    // Deterministic part (the analytic model) evaluates in parallel;
-    // the noise + clock charge is applied serially for determinism.
-    let spec = meter.spec().clone();
-    let g = workload.gemm_view();
-    let truths: Vec<f64> =
-        par_map(gen, |s| crate::sim::evaluate_latency(&g, s, &spec));
+    // time_latency derives the analytic truth internally at the current
+    // die temperature and charges the clock; ranking uses the timed
+    // (noisy) value, as the paper does.
     let mut timed: Vec<(Schedule, f64)> = gen
         .iter()
-        .zip(&truths)
-        .map(|(s, &truth)| {
+        .map(|s| {
             let c = Candidate::new(workload, *s);
-            // time_latency re-derives truth internally at the current
-            // temperature; we charge the clock through it.
-            let t = meter.time_latency(&c, rng);
-            // Blend: meter returns noisy truth (temperature-adjusted);
-            // `truth` keeps ranking deterministic-ish but we use the
-            // timed value, as the paper does.
-            let _ = truth;
-            (*s, t)
+            (*s, meter.time_latency(&c, rng))
         })
         .collect();
     timed.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite latency"));

@@ -1,0 +1,373 @@
+//! The persistent tuning store: an on-disk, append-only cache of
+//! finished searches plus warm-start transfer for unseen workloads.
+//!
+//! Production deployments see the same workloads over and over; paying
+//! the full search cost (hours of NVML measurement in the paper's
+//! setting) per repeat is the dominant amortized cost. This subsystem
+//! makes search results durable and reusable:
+//!
+//! * [`TuningStore`] — a JSONL file (`tuning_store.jsonl`) of
+//!   schema-versioned [`TuningRecord`]s keyed by
+//!   `(workload id, GPU arch, search mode)` + a config fingerprint.
+//!   Append-only writes are crash-safe and safe under concurrent
+//!   workers; [`TuningStore::prune`] compacts superseded records.
+//! * **exact hit** — a repeat search returns the cached kernel with a
+//!   zero measurement clock (0 NVML measurements, 0 simulated seconds).
+//! * **warm-start transfer** ([`transfer`]) — an unseen workload seeds
+//!   its genetic population, GBDT dataset, and dynamic-k controller
+//!   from its nearest cached neighbors (log-shape similarity,
+//!   [`similarity`]), cutting on-device measurements from round 0.
+//!
+//! Enabled via [`crate::config::StoreConfig`] (`--store DIR` on the
+//! CLI); the stateless path is untouched when no store is configured.
+
+pub mod record;
+pub mod similarity;
+pub mod transfer;
+
+pub use record::{config_fingerprint, StoredKernel, TuningRecord, SCHEMA_VERSION};
+pub use similarity::gemm_distance;
+pub use transfer::WarmStart;
+
+use crate::config::SearchConfig;
+use crate::util::Json;
+use crate::workload::Workload;
+use anyhow::{anyhow, Context as _};
+use std::collections::{BTreeMap, HashSet};
+use std::path::{Path, PathBuf};
+
+/// File name of the store inside its directory.
+pub const STORE_FILE: &str = "tuning_store.jsonl";
+
+/// An open tuning store: the on-disk JSONL file plus its parsed records.
+#[derive(Debug, Clone)]
+pub struct TuningStore {
+    dir: PathBuf,
+    path: PathBuf,
+    records: Vec<TuningRecord>,
+}
+
+/// Aggregate store statistics (the `ecokernel cache stats` view).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StoreStats {
+    pub n_records: usize,
+    /// Distinct workload ids.
+    pub n_workloads: usize,
+    /// Distinct (workload, gpu, mode, fingerprint) keys.
+    pub n_keys: usize,
+    /// NVML energy measurements the recorded searches paid for.
+    pub total_energy_measurements: usize,
+    /// Simulated seconds the recorded searches paid for — what an exact
+    /// hit saves.
+    pub total_sim_time_s: f64,
+}
+
+impl TuningStore {
+    /// Open (creating the directory if needed) and load every record.
+    /// A corrupt line or an incompatible schema version is an error —
+    /// the store never silently drops data.
+    pub fn open(dir: &Path) -> anyhow::Result<TuningStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create tuning store dir {dir:?}"))?;
+        let path = dir.join(STORE_FILE);
+        let mut records = Vec::new();
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("read tuning store {path:?}"))?;
+            for (lineno, line) in text.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let v = Json::parse(line)
+                    .map_err(|e| anyhow!("{path:?} line {}: {e}", lineno + 1))?;
+                let rec = TuningRecord::from_json(&v)
+                    .map_err(|e| anyhow!("{path:?} line {}: {e}", lineno + 1))?;
+                records.push(rec);
+            }
+        }
+        Ok(TuningStore { dir: dir.to_path_buf(), path, records })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn records(&self) -> &[TuningRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Append one record (one JSONL line, O_APPEND — concurrent workers
+    /// interleave whole lines, never partial ones at these sizes).
+    pub fn append(&mut self, rec: TuningRecord) -> anyhow::Result<()> {
+        use std::io::Write as _;
+        let line = rec.to_json().to_string();
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("append to tuning store {:?}", self.path))?;
+        writeln!(f, "{line}")?;
+        self.records.push(rec);
+        Ok(())
+    }
+
+    /// The latest record exactly matching `(workload, gpu, mode)` and
+    /// the config fingerprint. Cold-search records replay an identical
+    /// deterministic search; transfer-enabled records replay the
+    /// *recorded* outcome (which also depended on store contents at
+    /// write time) — see [`record::config_fingerprint`].
+    pub fn exact_hit(&self, workload: Workload, cfg: &SearchConfig) -> Option<&TuningRecord> {
+        let id = workload.id();
+        let fp = config_fingerprint(cfg);
+        self.records.iter().rev().find(|r| {
+            r.workload_id == id
+                && r.gpu == cfg.gpu.name()
+                && r.mode == cfg.mode.name()
+                && r.fingerprint == fp
+        })
+    }
+
+    /// Nearest cached neighbors of `workload` on `gpu`: the latest
+    /// record per foreign workload id, sorted by shape distance
+    /// (deterministic tie-break on workload id), truncated to `max_n`.
+    pub fn neighbors(&self, workload: Workload, gpu: &str, max_n: usize) -> Vec<(&TuningRecord, f64)> {
+        let id = workload.id();
+        let target = workload.gemm_view();
+        let mut latest: BTreeMap<&str, &TuningRecord> = BTreeMap::new();
+        for r in &self.records {
+            if r.gpu == gpu && r.workload_id != id && !r.measured.is_empty() {
+                latest.insert(r.workload_id.as_str(), r);
+            }
+        }
+        let mut out: Vec<(&TuningRecord, f64)> = latest
+            .into_values()
+            .map(|r| (r, gemm_distance(&target, &r.workload.gemm_view())))
+            .collect();
+        out.sort_by(|a, b| {
+            a.1.partial_cmp(&b.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.0.workload_id.cmp(&b.0.workload_id))
+        });
+        out.truncate(max_n);
+        out
+    }
+
+    /// Compact the store: keep only the **latest** record per
+    /// `(workload id, gpu, mode, fingerprint)` key, drop everything
+    /// superseded, and rewrite the file atomically (tmp + rename).
+    /// Returns the number of records removed.
+    pub fn prune(&mut self) -> anyhow::Result<usize> {
+        let mut seen: HashSet<(&str, &str, &str, &str)> = HashSet::new();
+        let mut keep_rev: Vec<usize> = Vec::new();
+        for (i, r) in self.records.iter().enumerate().rev() {
+            let key =
+                (r.workload_id.as_str(), r.gpu.as_str(), r.mode.as_str(), r.fingerprint.as_str());
+            if seen.insert(key) {
+                keep_rev.push(i);
+            }
+        }
+        keep_rev.reverse();
+        let removed = self.records.len() - keep_rev.len();
+        if removed == 0 {
+            return Ok(0);
+        }
+        let kept: Vec<TuningRecord> =
+            keep_rev.into_iter().map(|i| self.records[i].clone()).collect();
+        let mut text = String::new();
+        for r in &kept {
+            text.push_str(&r.to_json().to_string());
+            text.push('\n');
+        }
+        let tmp = self.path.with_extension("jsonl.tmp");
+        std::fs::write(&tmp, &text)
+            .with_context(|| format!("write pruned store {tmp:?}"))?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("replace store {:?}", self.path))?;
+        self.records = kept;
+        Ok(removed)
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let mut workloads: HashSet<&str> = HashSet::new();
+        let mut keys: HashSet<(&str, &str, &str, &str)> = HashSet::new();
+        let mut stats = StoreStats { n_records: self.records.len(), ..Default::default() };
+        for r in &self.records {
+            workloads.insert(r.workload_id.as_str());
+            keys.insert((
+                r.workload_id.as_str(),
+                r.gpu.as_str(),
+                r.mode.as_str(),
+                r.fingerprint.as_str(),
+            ));
+            stats.total_energy_measurements += r.n_energy_measurements;
+            stats.total_sim_time_s += r.sim_time_s;
+        }
+        stats.n_workloads = workloads.len();
+        stats.n_keys = keys.len();
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::suites;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ecokernel_store_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn quick_cfg(seed: u64) -> SearchConfig {
+        SearchConfig {
+            population: 24,
+            m_latency_keep: 6,
+            rounds: 3,
+            patience: 0,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    fn record_for(w: Workload, seed: u64) -> (TuningRecord, SearchConfig) {
+        let cfg = quick_cfg(seed);
+        let out = crate::search::run_search(w, &cfg);
+        (TuningRecord::from_outcome(&out, &cfg), cfg)
+    }
+
+    #[test]
+    fn roundtrip_write_reopen_identical() {
+        let dir = tmp_dir("roundtrip");
+        let (rec1, _) = record_for(suites::MM1, 1);
+        let (rec2, _) = record_for(suites::MV3, 2);
+        {
+            let mut store = TuningStore::open(&dir).unwrap();
+            store.append(rec1.clone()).unwrap();
+            store.append(rec2.clone()).unwrap();
+        }
+        let store = TuningStore::open(&dir).unwrap();
+        assert_eq!(store.records(), &[rec1, rec2]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn incompatible_schema_version_fails_open() {
+        let dir = tmp_dir("schema");
+        let (rec, _) = record_for(suites::MM1, 3);
+        {
+            let mut store = TuningStore::open(&dir).unwrap();
+            store.append(rec.clone()).unwrap();
+        }
+        // Rewrite the line with a bumped version field.
+        let path = dir.join(STORE_FILE);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let bumped = text.replace(
+            &format!("\"v\":{SCHEMA_VERSION}"),
+            &format!("\"v\":{}", SCHEMA_VERSION + 1),
+        );
+        assert_ne!(text, bumped, "version field must appear in the line");
+        std::fs::write(&path, bumped).unwrap();
+        let err = TuningStore::open(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("schema version"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_line_fails_open() {
+        let dir = tmp_dir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(STORE_FILE), "{not json\n").unwrap();
+        assert!(TuningStore::open(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn exact_hit_matches_key_and_fingerprint() {
+        let dir = tmp_dir("hit");
+        let (rec, cfg) = record_for(suites::MM1, 4);
+        let mut store = TuningStore::open(&dir).unwrap();
+        store.append(rec).unwrap();
+        assert!(store.exact_hit(suites::MM1, &cfg).is_some());
+        assert!(store.exact_hit(suites::MM2, &cfg).is_none(), "different workload");
+        let mut other_seed = cfg.clone();
+        other_seed.seed = 999;
+        assert!(store.exact_hit(suites::MM1, &other_seed).is_none(), "different fingerprint");
+        let mut other_mode = cfg.clone();
+        other_mode.mode = crate::config::SearchMode::LatencyOnly;
+        assert!(store.exact_hit(suites::MM1, &other_mode).is_none(), "different mode");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_keeps_latest_per_key_and_rewrites_file() {
+        let dir = tmp_dir("prune");
+        let (rec_a1, cfg) = record_for(suites::MM1, 5);
+        let (rec_b, _) = record_for(suites::MV3, 6);
+        let mut store = TuningStore::open(&dir).unwrap();
+        // Same key appended three times: two must be pruned.
+        store.append(rec_a1.clone()).unwrap();
+        store.append(rec_a1.clone()).unwrap();
+        store.append(rec_b.clone()).unwrap();
+        store.append(rec_a1.clone()).unwrap();
+        let removed = store.prune().unwrap();
+        assert_eq!(removed, 2);
+        assert_eq!(store.len(), 2);
+        // Latest-per-key survives in original relative order, and the
+        // exact hit still resolves after reopen.
+        let reopened = TuningStore::open(&dir).unwrap();
+        assert_eq!(reopened.records(), store.records());
+        assert!(reopened.exact_hit(suites::MM1, &cfg).is_some());
+        // Pruning an already-compact store is a no-op.
+        let mut store = reopened;
+        assert_eq!(store.prune().unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn neighbors_sorted_by_distance_and_exclude_self() {
+        let dir = tmp_dir("neighbors");
+        let mut store = TuningStore::open(&dir).unwrap();
+        for (w, seed) in [(suites::MM1, 7), (suites::MM3, 8), (suites::MV3, 9)] {
+            let (rec, _) = record_for(w, seed);
+            store.append(rec).unwrap();
+        }
+        let n = store.neighbors(suites::MM2, "a100", 8);
+        assert_eq!(n.len(), 3);
+        for w in n.windows(2) {
+            assert!(w[0].1 <= w[1].1, "not sorted by distance");
+        }
+        // MM neighbors beat the MV record for an MM target.
+        assert!(n[0].0.workload_id.starts_with("mm_"));
+        // Self is excluded.
+        let self_n = store.neighbors(suites::MM1, "a100", 8);
+        assert!(self_n.iter().all(|(r, _)| r.workload_id != suites::MM1.id()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_aggregate() {
+        let dir = tmp_dir("stats");
+        let mut store = TuningStore::open(&dir).unwrap();
+        let (rec1, _) = record_for(suites::MM1, 10);
+        let (rec2, _) = record_for(suites::MM1, 11);
+        store.append(rec1).unwrap();
+        store.append(rec2).unwrap();
+        let s = store.stats();
+        assert_eq!(s.n_records, 2);
+        assert_eq!(s.n_workloads, 1);
+        assert_eq!(s.n_keys, 2, "different seeds are different keys");
+        assert!(s.total_energy_measurements > 0);
+        assert!(s.total_sim_time_s > 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

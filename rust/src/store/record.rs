@@ -1,0 +1,446 @@
+//! The on-disk schema of the tuning store: one [`TuningRecord`] per
+//! finished search, serialized as one JSONL line via [`crate::util::Json`].
+//!
+//! Records are schema-versioned: every line carries `"v"`, and loading
+//! rejects records written by an incompatible schema instead of
+//! guessing. The record stores *schedules + measured metrics*, not
+//! feature vectors — features are re-derived at load time, so the
+//! feature map can evolve without invalidating the store.
+
+use crate::config::{SearchConfig, SearchMode};
+use crate::nvml::MeasurementClock;
+use crate::schedule::Schedule;
+use crate::search::{EvaluatedKernel, SearchOutcome};
+use crate::util::Json;
+use crate::workload::Workload;
+
+/// Version of the record schema; bump on incompatible change.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Cap on measured-pool entries stored per record (lowest-energy kept).
+pub const MAX_STORED_MEASURED: usize = 256;
+
+/// One NVML-measured kernel as stored on disk.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StoredKernel {
+    pub schedule: Schedule,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+}
+
+impl StoredKernel {
+    pub fn from_evaluated(e: &EvaluatedKernel) -> StoredKernel {
+        StoredKernel {
+            schedule: e.schedule,
+            latency_s: e.latency_s,
+            energy_j: e.energy_j,
+            avg_power_w: e.avg_power_w,
+        }
+    }
+
+    pub fn to_evaluated(&self) -> EvaluatedKernel {
+        EvaluatedKernel {
+            schedule: self.schedule,
+            latency_s: self.latency_s,
+            energy_j: self.energy_j,
+            avg_power_w: self.avg_power_w,
+            energy_measured: true,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schedule", schedule_to_json(&self.schedule)),
+            ("latency_s", Json::num(self.latency_s)),
+            ("energy_j", Json::num(self.energy_j)),
+            ("avg_power_w", Json::num(self.avg_power_w)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<StoredKernel, String> {
+        Ok(StoredKernel {
+            schedule: schedule_from_json(v.get("schedule").ok_or("kernel missing 'schedule'")?)?,
+            latency_s: get_f64(v, "latency_s")?,
+            energy_j: get_f64(v, "energy_j")?,
+            avg_power_w: get_f64(v, "avg_power_w")?,
+        })
+    }
+}
+
+/// One finished search, keyed by (workload id, GPU arch, search mode)
+/// plus a config fingerprint for exact-hit semantics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuningRecord {
+    /// Compact workload identifier (`Workload::id()`).
+    pub workload_id: String,
+    /// The full workload (reconstructible: transfer needs its shape).
+    pub workload: Workload,
+    /// GPU architecture name (`GpuArch::name()`).
+    pub gpu: String,
+    /// Search mode name (`SearchMode::name()`).
+    pub mode: String,
+    /// RNG seed of the recorded run.
+    pub seed: u64,
+    /// Fingerprint of the search-relevant config knobs; exact cache
+    /// hits require an identical fingerprint.
+    pub fingerprint: String,
+    /// The selected kernel (NVML-measured metrics).
+    pub best: StoredKernel,
+    /// Measured pool, sorted by energy ascending, capped at
+    /// [`MAX_STORED_MEASURED`] — the cost-model seed for transfer.
+    pub measured: Vec<StoredKernel>,
+    /// Cost accounting of the recorded search.
+    pub n_energy_measurements: usize,
+    pub n_latency_evals: usize,
+    pub sim_time_s: f64,
+    pub rounds: usize,
+    /// Final dynamic-k value (None for latency-only searches).
+    pub final_k: Option<f64>,
+}
+
+impl TuningRecord {
+    /// Build a record from a finished search.
+    pub fn from_outcome(out: &SearchOutcome, cfg: &SearchConfig) -> TuningRecord {
+        let mut measured: Vec<StoredKernel> =
+            out.measured_pool.iter().map(StoredKernel::from_evaluated).collect();
+        measured.sort_by(|a, b| a.energy_j.partial_cmp(&b.energy_j).expect("finite energy"));
+        measured.truncate(MAX_STORED_MEASURED);
+        TuningRecord {
+            workload_id: out.workload.id(),
+            workload: out.workload,
+            gpu: cfg.gpu.name().to_string(),
+            mode: out.mode.name().to_string(),
+            seed: cfg.seed,
+            fingerprint: config_fingerprint(cfg),
+            best: StoredKernel::from_evaluated(&out.best),
+            measured,
+            n_energy_measurements: out.n_energy_measurements(),
+            n_latency_evals: out.n_latency_evals,
+            sim_time_s: out.clock.total_s,
+            rounds: out.rounds.len(),
+            final_k: out.k_trace.last().copied(),
+        }
+    }
+
+    /// Reconstruct a zero-cost [`SearchOutcome`] from this record — the
+    /// exact-hit short-circuit: the cached kernel with a fresh (all
+    /// zeros) measurement clock.
+    pub fn to_outcome(&self) -> SearchOutcome {
+        SearchOutcome {
+            workload: self.workload,
+            mode: SearchMode::parse(&self.mode).unwrap_or(SearchMode::EnergyAware),
+            best: self.best.to_evaluated(),
+            rounds: Vec::new(),
+            clock: MeasurementClock::new(),
+            measured_pool: self.measured.iter().map(|k| k.to_evaluated()).collect(),
+            k_trace: Vec::new(),
+            n_latency_evals: 0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("v", Json::num(SCHEMA_VERSION as f64)),
+            ("workload_id", Json::str(self.workload_id.clone())),
+            ("workload", workload_to_json(&self.workload)),
+            ("gpu", Json::str(self.gpu.clone())),
+            ("mode", Json::str(self.mode.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("fingerprint", Json::str(self.fingerprint.clone())),
+            ("best", self.best.to_json()),
+            ("measured", Json::arr(self.measured.iter().map(|k| k.to_json()))),
+            ("n_energy_measurements", Json::num(self.n_energy_measurements as f64)),
+            ("n_latency_evals", Json::num(self.n_latency_evals as f64)),
+            ("sim_time_s", Json::num(self.sim_time_s)),
+            ("rounds", Json::num(self.rounds as f64)),
+            (
+                "final_k",
+                match self.final_k {
+                    Some(k) => Json::num(k),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<TuningRecord, String> {
+        let version = get_usize(v, "v")? as u64;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "unsupported tuning-store schema version {version} (this build reads v{SCHEMA_VERSION})"
+            ));
+        }
+        let measured = v
+            .get("measured")
+            .and_then(|m| m.as_arr())
+            .ok_or("record missing 'measured'")?
+            .iter()
+            .map(StoredKernel::from_json)
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(TuningRecord {
+            workload_id: get_str(v, "workload_id")?,
+            workload: workload_from_json(v.get("workload").ok_or("record missing 'workload'")?)?,
+            gpu: get_str(v, "gpu")?,
+            mode: get_str(v, "mode")?,
+            seed: get_usize(v, "seed")? as u64,
+            fingerprint: get_str(v, "fingerprint")?,
+            best: StoredKernel::from_json(v.get("best").ok_or("record missing 'best'")?)?,
+            measured,
+            n_energy_measurements: get_usize(v, "n_energy_measurements")?,
+            n_latency_evals: get_usize(v, "n_latency_evals")?,
+            sim_time_s: get_f64(v, "sim_time_s")?,
+            rounds: get_usize(v, "rounds")?,
+            final_k: match v.get("final_k") {
+                None | Some(Json::Null) => None,
+                Some(x) => Some(x.as_f64().ok_or("bad 'final_k'")?),
+            },
+        })
+    }
+}
+
+/// Fingerprint of every config knob that shapes the search trajectory —
+/// including the NVML measurement and cost-model hyperparameters (which
+/// change what gets measured and recorded) and the transfer knobs (a
+/// warm-started run must never serve a `--no-transfer` request, or vice
+/// versa). For cold runs, equal fingerprints imply an identical
+/// deterministic search; for transfer-enabled runs the outcome also
+/// depends on the store contents at write time, so a hit replays the
+/// *recorded* result — cache semantics, refreshable via `cache prune`
+/// or a new seed.
+pub fn config_fingerprint(cfg: &SearchConfig) -> String {
+    format!(
+        "{}|{}|s{}|p{}|m{}|r{}|ki{}|mu{}|ks{}|mm{}|pat{}|mut{}|x{}|im{}|\
+         nv:{}:{}:{}:{}:{}:{}|cm:{}:{}:{}:{}:{}:{}:{}:{}:{}|tr:{}:{}",
+        cfg.gpu.name(),
+        cfg.mode.name(),
+        cfg.seed,
+        cfg.population,
+        cfg.m_latency_keep,
+        cfg.rounds,
+        cfg.k_init,
+        cfg.mu_snr_db,
+        cfg.k_step,
+        cfg.min_measure_per_round,
+        cfg.patience,
+        cfg.mutation_prob,
+        cfg.crossover_prob,
+        cfg.immigrant_frac,
+        cfg.nvml.sampling_hz,
+        cfg.nvml.min_samples,
+        cfg.nvml.max_reps,
+        cfg.nvml.warmup_s,
+        cfg.nvml.power_noise_rel,
+        cfg.nvml.latency_noise_rel,
+        cfg.cost_model.n_trees,
+        cfg.cost_model.max_depth,
+        cfg.cost_model.learning_rate,
+        cfg.cost_model.lambda,
+        cfg.cost_model.min_child_weight,
+        cfg.cost_model.n_bins,
+        cfg.cost_model.colsample,
+        cfg.cost_model.weighted_loss,
+        cfg.cost_model.max_train_samples,
+        cfg.store.transfer,
+        cfg.store.max_neighbors,
+    )
+}
+
+fn schedule_to_json(s: &Schedule) -> Json {
+    Json::obj(vec![
+        ("tm", Json::num(s.threads_m as f64)),
+        ("tn", Json::num(s.threads_n as f64)),
+        ("rm", Json::num(s.reg_m as f64)),
+        ("rn", Json::num(s.reg_n as f64)),
+        ("tk", Json::num(s.tile_k as f64)),
+        ("uk", Json::num(s.unroll_k as f64)),
+        ("vw", Json::num(s.vector_width as f64)),
+        ("sk", Json::num(s.split_k as f64)),
+        ("sh", Json::Bool(s.use_shared)),
+    ])
+}
+
+fn schedule_from_json(v: &Json) -> Result<Schedule, String> {
+    Ok(Schedule {
+        threads_m: get_usize(v, "tm")?,
+        threads_n: get_usize(v, "tn")?,
+        reg_m: get_usize(v, "rm")?,
+        reg_n: get_usize(v, "rn")?,
+        tile_k: get_usize(v, "tk")?,
+        unroll_k: get_usize(v, "uk")?,
+        vector_width: get_usize(v, "vw")?,
+        split_k: get_usize(v, "sk")?,
+        use_shared: v.get("sh").and_then(|b| b.as_bool()).ok_or("schedule missing 'sh'")?,
+    })
+}
+
+fn workload_to_json(w: &Workload) -> Json {
+    match *w {
+        Workload::MatMul { batch, m, n, k } => Json::obj(vec![
+            ("kind", Json::str("mm")),
+            ("batch", Json::num(batch as f64)),
+            ("m", Json::num(m as f64)),
+            ("n", Json::num(n as f64)),
+            ("k", Json::num(k as f64)),
+        ]),
+        Workload::MatVec { batch, n, k } => Json::obj(vec![
+            ("kind", Json::str("mv")),
+            ("batch", Json::num(batch as f64)),
+            ("n", Json::num(n as f64)),
+            ("k", Json::num(k as f64)),
+        ]),
+        Workload::Conv2d { batch, h, w, cin, cout, ksize, stride, pad } => Json::obj(vec![
+            ("kind", Json::str("conv")),
+            ("batch", Json::num(batch as f64)),
+            ("h", Json::num(h as f64)),
+            ("w", Json::num(w as f64)),
+            ("cin", Json::num(cin as f64)),
+            ("cout", Json::num(cout as f64)),
+            ("ksize", Json::num(ksize as f64)),
+            ("stride", Json::num(stride as f64)),
+            ("pad", Json::num(pad as f64)),
+        ]),
+    }
+}
+
+fn workload_from_json(v: &Json) -> Result<Workload, String> {
+    match get_str(v, "kind")?.as_str() {
+        "mm" => Ok(Workload::MatMul {
+            batch: get_usize(v, "batch")?,
+            m: get_usize(v, "m")?,
+            n: get_usize(v, "n")?,
+            k: get_usize(v, "k")?,
+        }),
+        "mv" => Ok(Workload::MatVec {
+            batch: get_usize(v, "batch")?,
+            n: get_usize(v, "n")?,
+            k: get_usize(v, "k")?,
+        }),
+        "conv" => Ok(Workload::Conv2d {
+            batch: get_usize(v, "batch")?,
+            h: get_usize(v, "h")?,
+            w: get_usize(v, "w")?,
+            cin: get_usize(v, "cin")?,
+            cout: get_usize(v, "cout")?,
+            ksize: get_usize(v, "ksize")?,
+            stride: get_usize(v, "stride")?,
+            pad: get_usize(v, "pad")?,
+        }),
+        other => Err(format!("unknown workload kind '{other}'")),
+    }
+}
+
+fn get_f64(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key).and_then(|x| x.as_f64()).ok_or_else(|| format!("missing/bad field '{key}'"))
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize, String> {
+    let x = get_f64(v, key)?;
+    if x < 0.0 || x.fract() != 0.0 {
+        return Err(format!("field '{key}' is not a non-negative integer: {x}"));
+    }
+    Ok(x as usize)
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String, String> {
+    Ok(v.get(key)
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| format!("missing/bad field '{key}'"))?
+        .to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+    use crate::workload::suites;
+
+    fn sample_record() -> TuningRecord {
+        let cfg = SearchConfig {
+            population: 24,
+            m_latency_keep: 6,
+            rounds: 3,
+            patience: 0,
+            seed: 5,
+            ..Default::default()
+        };
+        let out = crate::search::run_search(suites::MM1, &cfg);
+        TuningRecord::from_outcome(&out, &cfg)
+    }
+
+    #[test]
+    fn record_json_roundtrip_is_identical() {
+        let rec = sample_record();
+        let line = rec.to_json().to_string();
+        let back = TuningRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn wrong_schema_version_is_rejected() {
+        let rec = sample_record();
+        let mut v = rec.to_json();
+        if let Json::Obj(m) = &mut v {
+            m.insert("v".to_string(), Json::num((SCHEMA_VERSION + 1) as f64));
+        }
+        let err = TuningRecord::from_json(&v).unwrap_err();
+        assert!(err.contains("schema version"), "{err}");
+    }
+
+    #[test]
+    fn workload_json_covers_all_families() {
+        for w in [suites::MM3, suites::MV1, suites::CONV1] {
+            let v = workload_to_json(&w);
+            assert_eq!(workload_from_json(&v).unwrap(), w);
+        }
+    }
+
+    #[test]
+    fn fingerprint_separates_configs() {
+        let a = SearchConfig::default();
+        let mut b = SearchConfig::default();
+        b.seed = 99;
+        let mut c = SearchConfig::default();
+        c.gpu = GpuArch::V100;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+        // Measurement + cost-model knobs shape outcomes too: no stale
+        // hit after a TOML edit to either section.
+        let mut d = SearchConfig::default();
+        d.cost_model.n_trees = 7;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&d));
+        let mut e = SearchConfig::default();
+        e.nvml.power_noise_rel = 0.5;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&e));
+        // A warm-started record must not serve a --no-transfer request.
+        let mut g = SearchConfig::default();
+        g.store.transfer = false;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&g));
+        // The store *location* is not part of the key (the same record
+        // set copied to another dir stays valid).
+        let mut h = SearchConfig::default();
+        h.store.dir = Some("/tmp/elsewhere".into());
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&h));
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&SearchConfig::default()));
+    }
+
+    #[test]
+    fn to_outcome_is_zero_cost_and_preserves_best() {
+        let rec = sample_record();
+        let out = rec.to_outcome();
+        assert_eq!(out.n_energy_measurements(), 0);
+        assert_eq!(out.clock.total_s, 0.0);
+        assert_eq!(out.best.schedule, rec.best.schedule);
+        assert_eq!(out.measured_pool.len(), rec.measured.len());
+        assert!(out.best.energy_measured);
+    }
+
+    #[test]
+    fn measured_pool_is_sorted_and_capped() {
+        let rec = sample_record();
+        assert!(rec.measured.len() <= MAX_STORED_MEASURED);
+        for w in rec.measured.windows(2) {
+            assert!(w[0].energy_j <= w[1].energy_j);
+        }
+    }
+}

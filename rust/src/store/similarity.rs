@@ -1,0 +1,84 @@
+//! Workload similarity for warm-start transfer: a log-space metric
+//! over [`GemmView`] shapes.
+//!
+//! Every workload family lowers to an implicit (batch, M, N, K) GEMM,
+//! so shape similarity is distance in log-dimension space — a GEMM
+//! twice as large in every dimension is "one doubling away", not "a
+//! billion MACs away". Structural mismatches that change which
+//! schedules are even legal (im2col indexing, the M == 1 matrix-vector
+//! regime) add fixed penalties on top.
+
+use crate::workload::GemmView;
+
+/// Penalty when one side is an implicit-im2col GEMM and the other not.
+pub const IM2COL_PENALTY: f64 = 1.0;
+
+/// Penalty when one side is MV-shaped (M == 1) and the other is not —
+/// their schedule spaces barely overlap.
+pub const MV_REGIME_PENALTY: f64 = 2.0;
+
+/// Log-space distance between two GEMM views. 0 = identical shape;
+/// ~0.7 per doubled dimension; structural mismatches add their
+/// penalties.
+pub fn gemm_distance(a: &GemmView, b: &GemmView) -> f64 {
+    let ln = |x: usize| (x.max(1) as f64).ln();
+    let db = ln(a.batch) - ln(b.batch);
+    let dm = ln(a.m) - ln(b.m);
+    let dn = ln(a.n) - ln(b.n);
+    let dk = ln(a.k) - ln(b.k);
+    let mut dist = (db * db + dm * dm + dn * dn + dk * dk).sqrt();
+    if a.im2col != b.im2col {
+        dist += IM2COL_PENALTY;
+    }
+    if (a.m == 1) != (b.m == 1) {
+        dist += MV_REGIME_PENALTY;
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::suites;
+
+    fn d(a: crate::workload::Workload, b: crate::workload::Workload) -> f64 {
+        gemm_distance(&a.gemm_view(), &b.gemm_view())
+    }
+
+    #[test]
+    fn identical_shapes_are_zero() {
+        assert_eq!(d(suites::MM1, suites::MM1), 0.0);
+    }
+
+    #[test]
+    fn metric_is_symmetric() {
+        let ab = d(suites::MM1, suites::MM4);
+        let ba = d(suites::MM4, suites::MM1);
+        assert!((ab - ba).abs() < 1e-12);
+    }
+
+    #[test]
+    fn within_family_is_closer_than_across() {
+        // MM1 -> MM2 (one doubling per dim) must beat MM1 -> MV3.
+        assert!(d(suites::MM1, suites::MM2) < d(suites::MM1, suites::MV3));
+        // MV shapes cluster together.
+        assert!(d(suites::MV3, suites::MV4) < d(suites::MV3, suites::MM1));
+        // CONV 1x1 shapes differ only in batch.
+        assert!(d(suites::CONV2, suites::CONV3) < d(suites::CONV2, suites::CONV1));
+    }
+
+    #[test]
+    fn mv_regime_mismatch_is_penalized() {
+        let mm = suites::MM1.gemm_view();
+        let mv = suites::MV3.gemm_view();
+        assert!(gemm_distance(&mm, &mv) >= MV_REGIME_PENALTY);
+    }
+
+    #[test]
+    fn doubling_every_dim_is_about_ln2_per_dim() {
+        // MM1 (1,512,512,512) vs MM2 (1,1024,1024,1024): 3 doubled dims.
+        let got = d(suites::MM1, suites::MM2);
+        let want = (3.0f64).sqrt() * (2.0f64).ln();
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+}

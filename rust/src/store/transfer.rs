@@ -1,0 +1,215 @@
+//! Warm-start transfer: seed a new search from cached neighbors.
+//!
+//! For an unseen workload, the nearest cached neighbors (by
+//! [`crate::store::similarity::gemm_distance`]) contribute three things:
+//!
+//! 1. **population seeds** — their best schedules, re-legalized against
+//!    the new workload's [`ScheduleSpace`], injected into the initial
+//!    genetic population;
+//! 2. **cost-model seeds** — their NVML-measured (schedule, energy)
+//!    samples, re-featurized, so the GBDT starts trained instead of
+//!    blind and the dynamic-k controller can trust it immediately;
+//! 3. **a k hint** — the neighbor's final dynamic-k value, so round 0
+//!    measures `k·M` kernels instead of all `M`.
+//!
+//! The SNR guard of Algorithm 1 keeps the transfer honest: if the
+//! transferred model turns out wrong for the new shape, prediction SNR
+//! drops below `µ` and `k` climbs back toward full measurement.
+
+use super::TuningStore;
+use crate::config::SearchConfig;
+use crate::features::{featurize, FeatureVector};
+use crate::schedule::space::ScheduleSpace;
+use crate::schedule::tiling::snap;
+use crate::schedule::{Candidate, Schedule};
+use crate::workload::Workload;
+use std::collections::HashSet;
+
+/// Neighbors farther than this (log-space + penalties) are ignored:
+/// within-family shape changes stay well below it, cross-family
+/// transfers (whose schedule spaces barely overlap) sit far above.
+pub const MAX_TRANSFER_DISTANCE: f64 = 3.0;
+
+/// Best/measured schedules taken per neighbor as population seeds.
+const SEEDS_PER_NEIGHBOR: usize = 16;
+
+/// Measured samples taken per neighbor as cost-model training data.
+const SAMPLES_PER_NEIGHBOR: usize = 64;
+
+/// Bounds for the transferred k hint: never start fully trusting a
+/// transferred model (floor), and always grant some round-0
+/// measurement discount (ceiling) — the SNR guard raises `k` again if
+/// the transfer proves wrong.
+const K_HINT_FLOOR: f64 = 0.2;
+const K_HINT_CEIL: f64 = 0.8;
+
+/// Everything a warm-started search begins with.
+#[derive(Debug, Clone)]
+pub struct WarmStart {
+    /// Re-legalized neighbor schedules, nearest neighbor first.
+    pub seed_schedules: Vec<Schedule>,
+    /// (features, measured energy) pairs from neighbor searches.
+    pub seed_samples: Vec<(FeatureVector, f64)>,
+    /// Initial dynamic-k suggestion (nearest neighbor's final k).
+    pub k_hint: Option<f64>,
+    /// How many neighbor records contributed.
+    pub n_neighbors: usize,
+}
+
+/// Build a warm start for `workload` from the store, or `None` when no
+/// neighbor is close enough to help.
+pub fn build(store: &TuningStore, workload: Workload, cfg: &SearchConfig) -> Option<WarmStart> {
+    let spec = cfg.gpu.spec();
+    let space = ScheduleSpace::new(workload, &spec);
+
+    let neighbors: Vec<_> = store
+        .neighbors(workload, cfg.gpu.name(), cfg.store.max_neighbors)
+        .into_iter()
+        .filter(|(_, dist)| *dist <= MAX_TRANSFER_DISTANCE)
+        .collect();
+    if neighbors.is_empty() {
+        return None;
+    }
+
+    let target_macs = workload.gemm_view().macs() as f64;
+    let mut seed_schedules: Vec<Schedule> = Vec::new();
+    let mut seen: HashSet<Schedule> = HashSet::new();
+    let mut seed_samples: Vec<(FeatureVector, f64)> = Vec::new();
+    for (rec, _) in &neighbors {
+        // Population seeds: the neighbor's best + its lowest-energy
+        // measured schedules, made legal for the new shape.
+        let candidates =
+            std::iter::once(&rec.best).chain(rec.measured.iter()).take(1 + SEEDS_PER_NEIGHBOR);
+        for sk in candidates {
+            if let Some(s) = relegalize(&sk.schedule, &space) {
+                if seen.insert(s) {
+                    seed_schedules.push(s);
+                }
+            }
+        }
+        // Model seeds: approximate training points for the TARGET —
+        // each measured neighbor schedule is re-legalized into the
+        // target space, featurized against the target workload, and its
+        // measured energy rescaled by the MAC ratio (within a family,
+        // energy-per-MAC is comparable). Keeping predictions in the
+        // target's energy range is what lets round 0's SNR check pass
+        // and the dynamic-k controller trust the transferred model.
+        let neighbor_macs = rec.workload.gemm_view().macs() as f64;
+        let scale = target_macs / neighbor_macs.max(1.0);
+        for sk in rec.measured.iter().take(SAMPLES_PER_NEIGHBOR) {
+            if let Some(s) = relegalize(&sk.schedule, &space) {
+                let c = Candidate::new(workload, s);
+                seed_samples.push((featurize(&c, &spec), sk.energy_j * scale));
+            }
+        }
+    }
+    // Cap population seeding at half the population: transfer guides
+    // the search, it must not collapse its diversity.
+    seed_schedules.truncate((cfg.population / 2).max(1));
+
+    if seed_schedules.is_empty() && seed_samples.is_empty() {
+        return None;
+    }
+    let k_hint = neighbors[0].0.final_k.map(|k| k.clamp(K_HINT_FLOOR, K_HINT_CEIL));
+    Some(WarmStart { seed_schedules, seed_samples, k_hint, n_neighbors: neighbors.len() })
+}
+
+/// Map a schedule from another workload's space into `space`: snap each
+/// knob to the nearest domain value, restore invariants, and repair the
+/// usual legality offenders. Returns `None` when no close legal
+/// schedule exists (the seed is dropped rather than distorted).
+pub fn relegalize(s: &Schedule, space: &ScheduleSpace) -> Option<Schedule> {
+    let d = &space.domains;
+    let g = &space.gemm;
+    let mut out = Schedule {
+        threads_m: snap(&d.threads_m, s.threads_m),
+        threads_n: snap(&d.threads_n, s.threads_n),
+        reg_m: snap(&d.reg_m, s.reg_m),
+        reg_n: snap(&d.reg_n, s.reg_n),
+        tile_k: snap(&d.tile_k, s.tile_k),
+        unroll_k: snap(&d.unroll_k, s.unroll_k),
+        vector_width: snap(&d.vector_width, s.vector_width),
+        split_k: snap(&d.split_k, s.split_k),
+        use_shared: if d.use_shared.contains(&s.use_shared) {
+            s.use_shared
+        } else {
+            d.use_shared[0]
+        },
+    };
+    // Invariant: unroll divides tile_k (domains always contain 1).
+    while out.tile_k % out.unroll_k != 0 {
+        out.unroll_k /= 2;
+    }
+    if space.is_legal(&out) {
+        return Some(out);
+    }
+    // Repair 1: vector loads must divide the contiguous N extent.
+    if g.n % out.vector_width != 0 {
+        out.vector_width = d
+            .vector_width
+            .iter()
+            .copied()
+            .filter(|&v| v <= s.vector_width && g.n % v == 0)
+            .max()
+            .unwrap_or(1);
+    }
+    if space.is_legal(&out) {
+        return Some(out);
+    }
+    // Repair 2: split-k must leave a full stage of work per block.
+    out.split_k = 1;
+    if space.is_legal(&out) {
+        return Some(out);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+    use crate::util::Rng;
+    use crate::workload::suites;
+
+    #[test]
+    fn relegalize_maps_across_mm_shapes() {
+        let spec = GpuArch::A100.spec();
+        let from = ScheduleSpace::new(suites::MM2, &spec);
+        let to = ScheduleSpace::new(suites::MM1, &spec);
+        let mut rng = Rng::seed_from_u64(11);
+        let mut mapped = 0;
+        for s in from.sample_n(&mut rng, 50) {
+            if let Some(t) = relegalize(&s, &to) {
+                assert!(to.is_legal(&t), "relegalized schedule illegal: {t}");
+                mapped += 1;
+            }
+        }
+        assert!(mapped >= 45, "only {mapped}/50 MM2 schedules mapped onto MM1");
+    }
+
+    #[test]
+    fn relegalize_respects_mv_regime() {
+        // MM schedules forced into an MV space must pin the M axis.
+        let spec = GpuArch::A100.spec();
+        let from = ScheduleSpace::new(suites::MM1, &spec);
+        let to = ScheduleSpace::new(suites::MV3, &spec);
+        let mut rng = Rng::seed_from_u64(12);
+        for s in from.sample_n(&mut rng, 30) {
+            if let Some(t) = relegalize(&s, &to) {
+                assert_eq!(t.threads_m, 1);
+                assert_eq!(t.reg_m, 1);
+                assert!(to.is_legal(&t));
+            }
+        }
+    }
+
+    #[test]
+    fn identity_relegalization_is_exact() {
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM1, &spec);
+        let mut rng = Rng::seed_from_u64(13);
+        for s in space.sample_n(&mut rng, 30) {
+            assert_eq!(relegalize(&s, &space), Some(s), "legal schedule must map to itself");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Integration: the persistent tuning store end to end — exact-hit
+//! replay, warm-start transfer across neighboring shapes, and
+//! reproducibility of warm-started searches (the ISSUE 1 acceptance
+//! criteria).
+
+use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
+use ecokernel::search::run_search;
+use ecokernel::store::TuningStore;
+use ecokernel::workload::suites;
+use std::path::PathBuf;
+
+fn tmp_store(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("ecokernel_e2e_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn cfg(seed: u64, store_dir: Option<&PathBuf>) -> SearchConfig {
+    let mut c = SearchConfig {
+        gpu: GpuArch::A100,
+        mode: SearchMode::EnergyAware,
+        population: 48,
+        m_latency_keep: 12,
+        rounds: 6,
+        patience: 0,
+        seed,
+        ..Default::default()
+    };
+    c.store.dir = store_dir.map(|d| d.to_string_lossy().into_owned());
+    c
+}
+
+#[test]
+fn second_identical_search_is_an_exact_cache_hit() {
+    // `ecokernel search --workload MM1 --store DIR` twice: the second
+    // run must cost zero measurements and return the identical kernel.
+    let dir = tmp_store("exact_hit");
+    let c = cfg(3, Some(&dir));
+
+    let first = run_search(suites::MM1, &c);
+    assert!(first.n_energy_measurements() > 0, "first run searches for real");
+    assert!(first.clock.total_s > 0.0);
+
+    let second = run_search(suites::MM1, &c);
+    assert_eq!(second.n_energy_measurements(), 0, "exact hit measures nothing");
+    assert_eq!(second.clock.total_s, 0.0, "exact hit costs zero simulated time");
+    assert_eq!(second.best.schedule, first.best.schedule, "identical best schedule");
+    assert!((second.best.energy_j - first.best.energy_j).abs() < 1e-12);
+
+    // A different seed is a different fingerprint: no false hit.
+    let other = run_search(suites::MM1, &cfg(4, Some(&dir)));
+    assert!(other.n_energy_measurements() > 0, "different config must re-search");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn transfer_to_neighbor_shape_saves_measurements_at_equal_energy() {
+    // Seed the store with MM1, then search the neighboring MM2 shape:
+    // warm-start transfer must use measurably fewer NVML energy
+    // measurements than the cold run, at equal-or-better final energy.
+    let dir = tmp_store("transfer");
+    let seed_run = run_search(suites::MM1, &cfg(5, Some(&dir)));
+    assert!(seed_run.n_energy_measurements() > 0);
+
+    let cold = run_search(suites::MM2, &cfg(6, None));
+
+    // `--no-transfer` (checked before MM2 is cached) reverts to the
+    // cold trajectory exactly.
+    let mut no_transfer = cfg(6, Some(&dir));
+    no_transfer.store.transfer = false;
+    no_transfer.store.write_back = false;
+    let isolated = run_search(suites::MM2, &no_transfer);
+    assert_eq!(isolated.best.schedule, cold.best.schedule);
+    assert_eq!(isolated.n_energy_measurements(), cold.n_energy_measurements());
+
+    let warm = run_search(suites::MM2, &cfg(6, Some(&dir)));
+    assert!(
+        warm.n_energy_measurements() < cold.n_energy_measurements(),
+        "warm {} !< cold {} energy measurements",
+        warm.n_energy_measurements(),
+        cold.n_energy_measurements()
+    );
+    assert!(
+        warm.best.energy_j <= cold.best.energy_j * 1.05,
+        "warm energy regressed: {} mJ vs cold {} mJ",
+        warm.best.energy_j * 1e3,
+        cold.best.energy_j * 1e3
+    );
+    // Transfer must not bypass final measurement: the winner is real.
+    assert!(warm.best.energy_measured);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_started_search_is_deterministic() {
+    let dir = tmp_store("determinism");
+    let _ = run_search(suites::MV3, &cfg(7, Some(&dir)));
+
+    // write_back off so the first warm run does not turn the second
+    // into an exact hit — both must perform the same warm search.
+    let mut warm_cfg = cfg(8, Some(&dir));
+    warm_cfg.store.write_back = false;
+    let a = run_search(suites::MV4, &warm_cfg);
+    let b = run_search(suites::MV4, &warm_cfg);
+    assert_eq!(a.best.schedule, b.best.schedule);
+    assert_eq!(a.k_trace, b.k_trace);
+    assert_eq!(a.n_energy_measurements(), b.n_energy_measurements());
+    assert_eq!(a.clock.total_s, b.clock.total_s);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_survives_reopen_and_serves_across_processes_shape() {
+    // Simulates the two-invocation CLI flow: process A searches and
+    // exits; process B reopens the directory and gets the hit.
+    let dir = tmp_store("reopen");
+    let c = cfg(9, Some(&dir));
+    let first = run_search(suites::CONV2, &c);
+
+    let store = TuningStore::open(&dir).expect("reopen");
+    assert_eq!(store.len(), 1);
+    let rec = store.exact_hit(suites::CONV2, &c).expect("hit after reopen");
+    assert_eq!(rec.best.schedule, first.best.schedule);
+    assert_eq!(rec.n_energy_measurements, first.n_energy_measurements());
+    let _ = std::fs::remove_dir_all(&dir);
+}
