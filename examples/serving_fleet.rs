@@ -1,0 +1,132 @@
+//! Fleet-serving replay: run the kernel-serving daemon in-process,
+//! replay a zipf-distributed workload stream against it (production
+//! traffic is heavy-tailed: a few hot operators dominate), and report
+//! how many NVML measurements the store saved versus cold-searching
+//! every request.
+//!
+//! ```bash
+//! cargo run --release --example serving_fleet [-- N_REQUESTS [ZIPF_S]]
+//! ```
+
+#[cfg(unix)]
+use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
+#[cfg(unix)]
+use ecokernel::serve::{Daemon, DaemonConfig, ServeClient};
+#[cfg(unix)]
+use ecokernel::util::Rng;
+#[cfg(unix)]
+use ecokernel::workload::suites;
+#[cfg(unix)]
+use std::time::Duration;
+
+#[cfg(not(unix))]
+fn main() {
+    eprintln!("serving_fleet needs Unix-domain sockets (unix-only)");
+}
+
+#[cfg(unix)]
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let n_requests: usize = args.next().map(|s| s.parse()).transpose()?.unwrap_or(60);
+    let zipf_s: f64 = args.next().map(|s| s.parse()).transpose()?.unwrap_or(1.2);
+
+    let dir = std::env::temp_dir().join(format!("ecokernel_fleet_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+
+    // Quick-effort searches: the point here is serving behavior, not
+    // search quality.
+    let mut search = SearchConfig {
+        gpu: GpuArch::A100,
+        mode: SearchMode::EnergyAware,
+        population: 24,
+        m_latency_keep: 6,
+        rounds: 3,
+        patience: 0,
+        seed: 42,
+        ..Default::default()
+    };
+    search.serve.n_workers = 2;
+    search.serve.n_shards = 8;
+
+    let handle = Daemon::spawn(
+        DaemonConfig {
+            socket_path: dir.join("ecokernel.sock"),
+            store_dir: dir.clone(),
+            search,
+        },
+        None,
+    )?;
+    let mut client = ServeClient::connect(&handle.socket_path)?;
+
+    // Zipf over the Table-2 suite: rank r drawn with p ∝ r^-s.
+    let suite = suites::table2_suite();
+    let weights: Vec<f64> =
+        (1..=suite.len()).map(|r| 1.0 / (r as f64).powf(zipf_s)).collect();
+    let total_w: f64 = weights.iter().sum();
+    let mut rng = Rng::seed_from_u64(7);
+    let mut pick = || {
+        let mut x = rng.gen_f64() * total_w;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    };
+
+    println!(
+        "replaying {n_requests} zipf(s={zipf_s}) requests over {} operators ...\n",
+        suite.len()
+    );
+    let mut request_log: Vec<usize> = Vec::with_capacity(n_requests);
+    for req in 0..n_requests {
+        let i = pick();
+        request_log.push(i);
+        let (name, w) = suite[i];
+        let reply = client.get_kernel(w, None, None)?;
+        println!(
+            "  #{req:<3} {name:<6} -> {:4} [{}]{}",
+            if reply.hit { "hit" } else { "miss" },
+            reply.source.name(),
+            if reply.enqueued { " (search enqueued)" } else { "" },
+        );
+    }
+
+    // Let the background searches land, then replay the same stream: a
+    // warmed store serves it entirely from cache.
+    println!("\ndraining background searches ...");
+    client.wait_for_drain(Duration::from_secs(600))?;
+    for &i in &request_log {
+        let (_, w) = suite[i];
+        assert!(client.get_kernel(w, None, None)?.hit, "warmed store must hit");
+    }
+
+    let s = client.stats()?;
+    // Counterfactual: a fleet with no store cold-searches every request
+    // at the average per-search measurement cost.
+    let per_search = s.measurements_paid as f64 / s.n_searches_done.max(1) as f64;
+    let cold = per_search * s.n_requests as f64;
+    println!("\nserving metrics: requests={} hit_rate={:.1}%", s.n_requests, s.hit_rate * 100.0);
+    println!(
+        "reply time     : p50 {:.3} ms, p99 {:.3} ms (simulated; misses pay the neighbor scan)",
+        s.p50_reply_s * 1e3,
+        s.p99_reply_s * 1e3
+    );
+    println!(
+        "store          : {} records in {} shards, {} searches run for {} requests",
+        s.n_records, s.n_shards, s.n_searches_done, s.n_requests
+    );
+    println!(
+        "measurements   : paid {} vs ~{:.0} if every request cold-searched ({:.1}x saved)",
+        s.measurements_paid,
+        cold,
+        cold / s.measurements_paid.max(1) as f64
+    );
+
+    client.shutdown()?;
+    handle.join()?;
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

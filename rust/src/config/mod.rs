@@ -84,6 +84,8 @@ pub struct SearchConfig {
     pub cost_model: CostModelConfig,
     /// Persistent tuning store + warm-start transfer settings.
     pub store: StoreConfig,
+    /// Kernel-serving daemon settings (`ecokernel serve`).
+    pub serve: ServeConfig,
 }
 
 impl Default for SearchConfig {
@@ -106,6 +108,7 @@ impl Default for SearchConfig {
             nvml: NvmlConfig::default(),
             cost_model: CostModelConfig::default(),
             store: StoreConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -143,6 +146,7 @@ impl SearchConfig {
         self.nvml.validate()?;
         self.cost_model.validate()?;
         self.store.validate()?;
+        self.serve.validate()?;
         Ok(())
     }
 
@@ -191,6 +195,11 @@ impl SearchConfig {
             "store.transfer",
             "store.max_neighbors",
             "store.write_back",
+            "serve.n_shards",
+            "serve.per_gpu_quota",
+            "serve.max_records",
+            "serve.n_workers",
+            "serve.queue_cap",
         ];
         for key in doc.entries.keys() {
             if !known.contains(&key.as_str()) {
@@ -250,6 +259,13 @@ impl SearchConfig {
                 max_neighbors: doc.usize_or("store.max_neighbors", d.store.max_neighbors),
                 write_back: doc.bool_or("store.write_back", d.store.write_back),
             },
+            serve: ServeConfig {
+                n_shards: doc.usize_or("serve.n_shards", d.serve.n_shards),
+                per_gpu_quota: doc.usize_or("serve.per_gpu_quota", d.serve.per_gpu_quota),
+                max_records: doc.usize_or("serve.max_records", d.serve.max_records),
+                n_workers: doc.usize_or("serve.n_workers", d.serve.n_workers),
+                queue_cap: doc.usize_or("serve.queue_cap", d.serve.queue_cap),
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -305,6 +321,15 @@ impl SearchConfig {
         out.push_str(&format!(
             "transfer = {}\nmax_neighbors = {}\nwrite_back = {}\n",
             self.store.transfer, self.store.max_neighbors, self.store.write_back
+        ));
+        out.push_str(&format!(
+            "\n[serve]\nn_shards = {}\nper_gpu_quota = {}\nmax_records = {}\n\
+             n_workers = {}\nqueue_cap = {}\n",
+            self.serve.n_shards,
+            self.serve.per_gpu_quota,
+            self.serve.max_records,
+            self.serve.n_workers,
+            self.serve.queue_cap
         ));
         out
     }
@@ -459,6 +484,53 @@ impl StoreConfig {
     }
 }
 
+/// Kernel-serving daemon settings (`[serve]`, see [`crate::serve`]).
+/// None of these knobs shape a search trajectory, so they stay out of
+/// the store's config fingerprint: records written under one serve
+/// topology remain exact hits under another.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Number of store shards (`shards/shard_XXX.jsonl` files).
+    pub n_shards: usize,
+    /// Maximum records kept per GPU arch; 0 = unlimited. Overflow
+    /// evicts least-recently-served keys on that GPU.
+    pub per_gpu_quota: usize,
+    /// Global record cap across all GPUs; 0 = unlimited.
+    pub max_records: usize,
+    /// Background search workers owned by the daemon.
+    pub n_workers: usize,
+    /// Bounded search-queue capacity; a full queue load-sheds new
+    /// background searches (misses still answer immediately).
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            n_shards: 8,
+            per_gpu_quota: 0,
+            max_records: 0,
+            n_workers: 2,
+            queue_cap: 16,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_shards == 0 {
+            return Err("serve.n_shards must be >= 1".into());
+        }
+        if self.n_workers == 0 {
+            return Err("serve.n_workers must be >= 1".into());
+        }
+        if self.queue_cap == 0 {
+            return Err("serve.queue_cap must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -543,6 +615,33 @@ mod tests {
         bad.store.transfer = true;
         bad.store.max_neighbors = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn serve_config_roundtrips_and_validates() {
+        let mut c = SearchConfig::default();
+        c.serve.n_shards = 16;
+        c.serve.per_gpu_quota = 1000;
+        c.serve.max_records = 5000;
+        c.serve.n_workers = 4;
+        let back = SearchConfig::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(back.serve, c.serve);
+
+        let parsed = SearchConfig::from_toml_str(
+            "[serve]\nn_shards = 4\nper_gpu_quota = 100\nqueue_cap = 8\n",
+        )
+        .unwrap();
+        assert_eq!(parsed.serve.n_shards, 4);
+        assert_eq!(parsed.serve.per_gpu_quota, 100);
+        assert_eq!(parsed.serve.queue_cap, 8);
+        assert_eq!(parsed.serve.n_workers, ServeConfig::default().n_workers, "default kept");
+
+        for bad_toml in
+            ["[serve]\nn_shards = 0\n", "[serve]\nn_workers = 0\n", "[serve]\nqueue_cap = 0\n"]
+        {
+            assert!(SearchConfig::from_toml_str(bad_toml).is_err(), "{bad_toml}");
+        }
+        assert!(SearchConfig::from_toml_str("[serve]\ntypo = 1\n").is_err());
     }
 
     #[test]

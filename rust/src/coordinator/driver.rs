@@ -56,23 +56,27 @@ impl Driver {
         }
         let mut pool = WorkerPool::new(self.cfg.n_workers, self.cfg.queue_cap);
         let mut cached: Vec<JobResult> = Vec::new();
-        // One parsed store per distinct dir for the whole suite (a
-        // per-suite snapshot: hits reflect the store as of submission;
-        // workers append their own outcomes as they finish).
-        let mut stores: std::collections::HashMap<String, Option<TuningStore>> =
+        // One parsed store per distinct dir for the whole suite, shared
+        // with the workers as an `Arc` snapshot (parse-once plumbing):
+        // hits reflect the store as of submission; workers append their
+        // own outcomes to the file as they finish without reopening it.
+        let mut stores: std::collections::HashMap<String, Option<std::sync::Arc<TuningStore>>> =
             std::collections::HashMap::new();
         for (index, job) in jobs.into_iter().enumerate() {
             // Consult the tuning store before dispatching: an exact hit
             // short-circuits the job entirely — no worker, no clock.
-            let hit = job.cfg.store.dir.as_ref().and_then(|dir| {
-                let store = stores
+            let snapshot = job.cfg.store.dir.as_ref().and_then(|dir| {
+                stores
                     .entry(dir.clone())
-                    .or_insert_with(|| TuningStore::open(std::path::Path::new(dir)).ok());
-                store
-                    .as_ref()
-                    .and_then(|s| s.exact_hit(job.workload, &job.cfg))
-                    .map(|rec| rec.to_outcome())
+                    .or_insert_with(|| {
+                        TuningStore::open(std::path::Path::new(dir)).ok().map(std::sync::Arc::new)
+                    })
+                    .clone()
             });
+            let hit = snapshot
+                .as_ref()
+                .and_then(|s| s.exact_hit(job.workload, &job.cfg))
+                .map(|rec| rec.to_outcome());
             if let Some(outcome) = hit {
                 if let Some(log) = &self.log {
                     log.emit(
@@ -85,7 +89,14 @@ impl Driver {
                         ],
                     );
                 }
-                cached.push(JobResult { index, name: job.name, outcome, worker: 0, cached: true });
+                cached.push(JobResult {
+                    index,
+                    name: job.name,
+                    cfg: job.cfg,
+                    outcome,
+                    worker: 0,
+                    cached: true,
+                });
                 continue;
             }
             if let Some(log) = &self.log {
@@ -99,8 +110,9 @@ impl Driver {
                 );
             }
             // Workers run the full store flow themselves (warm-start +
-            // write-back) through `run_search`, keyed off job.cfg.store.
-            pool.submit_at(index, job);
+            // write-back) against the shared snapshot; without a store
+            // configured they run the stateless paper flow.
+            pool.submit_at_with_snapshot(index, job, snapshot);
         }
         let mut results = pool.finish();
         results.extend(cached);

@@ -9,4 +9,4 @@ pub mod workers;
 pub use driver::{Driver, DriverConfig};
 pub use events::EventLog;
 pub use metrics::SuiteMetrics;
-pub use workers::{JobResult, SearchJob, WorkerPool};
+pub use workers::{JobResult, PoolEvent, SearchJob, WorkerPool};

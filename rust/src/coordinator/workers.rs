@@ -9,9 +9,10 @@
 //! queue is full (backpressure), exactly like a real tuning fleet.
 
 use crate::config::SearchConfig;
-use crate::search::{run_search, SearchOutcome};
+use crate::search::{run_search, run_search_with_snapshot, SearchOutcome};
+use crate::store::TuningStore;
 use crate::workload::Workload;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -28,6 +29,9 @@ pub struct SearchJob {
 pub struct JobResult {
     pub index: usize,
     pub name: String,
+    /// The config the job ran with (the daemon rebuilds tuning records
+    /// from outcome + config on write-back).
+    pub cfg: SearchConfig,
     pub outcome: SearchOutcome,
     /// Which worker/device executed it (0 for cache hits, which never
     /// reach a device).
@@ -37,9 +41,25 @@ pub struct JobResult {
     pub cached: bool,
 }
 
+/// What travels down the job queue: the result index, the job, and an
+/// optional shared parsed-store snapshot (ROADMAP "Store parse-once
+/// plumbing") — with a snapshot the worker consults it instead of
+/// re-reading the whole JSONL file per job.
+type QueuedJob = (usize, SearchJob, Option<Arc<TuningStore>>);
+
+/// A worker-pool notification streamed to a result sink.
+pub enum PoolEvent {
+    /// The search finished.
+    Done(JobResult),
+    /// The search panicked. Carries the job's identity so the owner can
+    /// release anything keyed on it (the daemon's in-flight
+    /// reservation) instead of leaking it for the pool's lifetime.
+    Failed { index: usize, name: String, cfg: SearchConfig, workload: Workload, error: String },
+}
+
 /// Fixed-size pool of search workers over a bounded job queue.
 pub struct WorkerPool {
-    tx: Option<SyncSender<(usize, SearchJob)>>,
+    tx: Option<SyncSender<QueuedJob>>,
     results: Arc<Mutex<Vec<JobResult>>>,
     handles: Vec<JoinHandle<()>>,
     submitted: usize,
@@ -48,34 +68,85 @@ pub struct WorkerPool {
 impl WorkerPool {
     /// Spawn `n_workers` workers with a queue bound of `queue_cap`.
     pub fn new(n_workers: usize, queue_cap: usize) -> WorkerPool {
-        let (tx, rx) = sync_channel::<(usize, SearchJob)>(queue_cap.max(1));
+        Self::spawn(n_workers, queue_cap, None)
+    }
+
+    /// Like [`WorkerPool::new`], but completed jobs are streamed into
+    /// `sink` as they finish instead of being collected for
+    /// [`WorkerPool::finish`] — the serving daemon's write-back path.
+    /// A panicking search is reported as [`PoolEvent::Failed`] (the
+    /// worker survives). The sink disconnects once every worker has
+    /// exited.
+    pub fn with_sink(n_workers: usize, queue_cap: usize, sink: Sender<PoolEvent>) -> WorkerPool {
+        Self::spawn(n_workers, queue_cap, Some(sink))
+    }
+
+    fn spawn(n_workers: usize, queue_cap: usize, sink: Option<Sender<PoolEvent>>) -> WorkerPool {
+        let (tx, rx) = sync_channel::<QueuedJob>(queue_cap.max(1));
         let rx = Arc::new(Mutex::new(rx));
         let results: Arc<Mutex<Vec<JobResult>>> = Arc::new(Mutex::new(Vec::new()));
         let mut handles = Vec::new();
         for worker in 0..n_workers.max(1) {
-            let rx: Arc<Mutex<Receiver<(usize, SearchJob)>>> = rx.clone();
+            let rx: Arc<Mutex<Receiver<QueuedJob>>> = rx.clone();
             let results = results.clone();
+            let sink = sink.clone();
             handles.push(std::thread::spawn(move || loop {
                 let job = {
                     let guard = rx.lock().expect("job queue");
                     guard.recv()
                 };
                 match job {
-                    Ok((index, job)) => {
-                        let outcome = run_search(job.workload, &job.cfg);
-                        // run_search may itself have hit the tuning
-                        // store (e.g. an identical earlier job in this
-                        // suite wrote back first): report it as cached
-                        // so suite metrics don't count a replay as a
-                        // search.
-                        let cached = outcome.is_cache_replay();
-                        results.lock().expect("results").push(JobResult {
-                            index,
-                            name: job.name,
-                            outcome,
-                            worker,
-                            cached,
-                        });
+                    Ok((index, job, snapshot)) => {
+                        let SearchJob { name, workload, cfg } = job;
+                        let outcome =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                match &snapshot {
+                                    Some(snap) => run_search_with_snapshot(workload, &cfg, snap),
+                                    None => run_search(workload, &cfg),
+                                }
+                            }));
+                        match outcome {
+                            Ok(outcome) => {
+                                // The search may have been served as a
+                                // store replay — from the shared
+                                // snapshot, or (on the snapshot-less
+                                // path, which reopens per job) from an
+                                // identical earlier job's write-back.
+                                // Report it as cached so suite metrics
+                                // don't count a replay as a search.
+                                // Note the snapshot is fixed at
+                                // submission: duplicate in-flight jobs
+                                // each search rather than racing on the
+                                // first write-back.
+                                let cached = outcome.is_cache_replay();
+                                let result =
+                                    JobResult { index, name, cfg, outcome, worker, cached };
+                                match &sink {
+                                    Some(tx) => {
+                                        let _ = tx.send(PoolEvent::Done(result));
+                                    }
+                                    None => results.lock().expect("results").push(result),
+                                }
+                            }
+                            Err(panic) => match &sink {
+                                Some(tx) => {
+                                    let error = panic_message(panic.as_ref());
+                                    eprintln!(
+                                        "worker {worker}: search '{name}' panicked: {error}"
+                                    );
+                                    let _ = tx.send(PoolEvent::Failed {
+                                        index,
+                                        name,
+                                        cfg,
+                                        workload,
+                                        error,
+                                    });
+                                }
+                                // Batch mode keeps the old contract:
+                                // finish() panics on a worker panic.
+                                None => std::panic::resume_unwind(panic),
+                            },
+                        }
                     }
                     Err(_) => break, // queue closed
                 }
@@ -93,16 +164,53 @@ impl WorkerPool {
     /// Submit a job under an explicit result index (used by the driver
     /// when some indices were already served from the tuning store).
     pub fn submit_at(&mut self, index: usize, job: SearchJob) {
+        self.submit_at_with_snapshot(index, job, None);
+    }
+
+    /// Submit a job that consults a shared parsed store snapshot
+    /// instead of reopening the store file.
+    pub fn submit_at_with_snapshot(
+        &mut self,
+        index: usize,
+        job: SearchJob,
+        snapshot: Option<Arc<TuningStore>>,
+    ) {
         self.submitted = self.submitted.max(index) + 1;
         self.tx
             .as_ref()
             .expect("pool open")
-            .send((index, job))
+            .send((index, job, snapshot))
             .expect("workers alive");
     }
 
+    /// [`WorkerPool::submit`] with a shared store snapshot.
+    pub fn submit_with_snapshot(&mut self, job: SearchJob, snapshot: Option<Arc<TuningStore>>) {
+        let idx = self.submitted;
+        self.submit_at_with_snapshot(idx, job, snapshot);
+    }
+
+    /// Non-blocking submit: returns `false` (dropping the job) when the
+    /// queue is full. The serving daemon load-sheds with this so a miss
+    /// reply is never delayed by a full search queue.
+    pub fn try_submit_with_snapshot(
+        &mut self,
+        job: SearchJob,
+        snapshot: Option<Arc<TuningStore>>,
+    ) -> bool {
+        let index = self.submitted;
+        let tx = self.tx.as_ref().expect("pool open");
+        match tx.try_send((index, job, snapshot)) {
+            Ok(()) => {
+                self.submitted = index + 1;
+                true
+            }
+            Err(_) => false, // queue full (or workers gone)
+        }
+    }
+
     /// Close the queue, join all workers, and return results in
-    /// submission order.
+    /// submission order. In batch (non-sink) mode a worker panic
+    /// propagates here.
     pub fn finish(mut self) -> Vec<JobResult> {
         drop(self.tx.take());
         for h in self.handles.drain(..) {
@@ -112,6 +220,17 @@ impl WorkerPool {
             Arc::try_unwrap(self.results).map(|m| m.into_inner().expect("results")).unwrap_or_default();
         results.sort_by_key(|r| r.index);
         results
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -176,6 +295,119 @@ mod tests {
         for r in &results {
             assert_eq!(r.outcome.best.schedule, serial.best.schedule);
             assert_eq!(r.outcome.best.energy_j, serial.best.energy_j);
+        }
+    }
+
+    #[test]
+    fn shared_snapshot_serves_hits_without_reopening_the_store() {
+        let dir = std::env::temp_dir()
+            .join(format!("ecokernel_pool_snapshot_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = quick_cfg(21, SearchMode::EnergyAware);
+        cfg.store.dir = Some(dir.to_string_lossy().into_owned());
+
+        // Populate the store with one finished search.
+        let first = run_search(suites::MM1, &cfg);
+        assert!(first.n_energy_measurements() > 0);
+
+        // Parse once, share the snapshot, then DELETE the store file:
+        // a worker that re-opened per job would now run a cold search,
+        // a snapshot-driven worker still replays the hit.
+        let snapshot = Arc::new(TuningStore::open(&dir).unwrap());
+        std::fs::remove_file(dir.join(crate::store::STORE_FILE)).unwrap();
+        let mut pool = WorkerPool::new(1, 1);
+        pool.submit_with_snapshot(
+            SearchJob { name: "mm1".into(), workload: suites::MM1, cfg: cfg.clone() },
+            Some(snapshot),
+        );
+        let results = pool.finish();
+        assert!(results[0].cached, "snapshot hit is a cache replay");
+        assert_eq!(results[0].outcome.n_energy_measurements(), 0);
+        assert_eq!(results[0].outcome.best.schedule, first.best.schedule);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_miss_searches_and_appends_write_back() {
+        let dir = std::env::temp_dir()
+            .join(format!("ecokernel_pool_snapmiss_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = quick_cfg(22, SearchMode::EnergyAware);
+        cfg.store.dir = Some(dir.to_string_lossy().into_owned());
+
+        let snapshot = Arc::new(TuningStore::open(&dir).unwrap());
+        assert!(snapshot.is_empty());
+        let mut pool = WorkerPool::new(1, 1);
+        pool.submit_with_snapshot(
+            SearchJob { name: "mv3".into(), workload: suites::MV3, cfg: cfg.clone() },
+            Some(snapshot),
+        );
+        let results = pool.finish();
+        assert!(!results[0].cached);
+        assert!(results[0].outcome.n_energy_measurements() > 0);
+        // Write-back appended to the file even though the snapshot is
+        // immutable: reopening sees the record.
+        let reopened = TuningStore::open(&dir).unwrap();
+        assert!(reopened.exact_hit(suites::MV3, &cfg).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sink_streams_results_and_finish_returns_nothing() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut pool = WorkerPool::with_sink(2, 2, tx);
+        for (i, w) in [suites::MM1, suites::MV3, suites::CONV2].iter().enumerate() {
+            pool.submit(SearchJob {
+                name: format!("job{i}"),
+                workload: *w,
+                cfg: quick_cfg(i as u64, SearchMode::LatencyOnly),
+            });
+        }
+        let leftover = pool.finish();
+        assert!(leftover.is_empty(), "sink mode collects nothing");
+        let mut streamed: Vec<JobResult> = rx
+            .iter()
+            .map(|e| match e {
+                PoolEvent::Done(r) => r,
+                PoolEvent::Failed { name, error, .. } => panic!("{name} failed: {error}"),
+            })
+            .collect();
+        assert_eq!(streamed.len(), 3, "every result reached the sink");
+        streamed.sort_by_key(|r| r.index);
+        for (i, r) in streamed.iter().enumerate() {
+            assert_eq!(r.name, format!("job{i}"));
+            assert_eq!(r.cfg.seed, i as u64, "job config travels with the result");
+        }
+    }
+
+    #[test]
+    fn sink_reports_panicked_jobs_as_failed_and_worker_survives() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut pool = WorkerPool::with_sink(1, 2, tx);
+        // run_search panics on an invalid config — the worker must
+        // survive it, report the failure, and still run the next job.
+        let mut bad = quick_cfg(0, SearchMode::EnergyAware);
+        bad.population = 0;
+        pool.submit(SearchJob { name: "bad".into(), workload: suites::MM1, cfg: bad });
+        pool.submit(SearchJob {
+            name: "good".into(),
+            workload: suites::MM1,
+            cfg: quick_cfg(1, SearchMode::LatencyOnly),
+        });
+        pool.finish();
+        let events: Vec<PoolEvent> = rx.iter().collect();
+        assert_eq!(events.len(), 2);
+        match &events[0] {
+            PoolEvent::Failed { name, error, workload, .. } => {
+                assert_eq!(name, "bad");
+                assert_eq!(*workload, suites::MM1);
+                assert!(error.contains("population"), "{error}");
+            }
+            PoolEvent::Done(_) => panic!("invalid config must fail, not finish"),
+        }
+        match &events[1] {
+            PoolEvent::Done(r) => assert_eq!(r.name, "good"),
+            PoolEvent::Failed { error, .. } => panic!("good job failed: {error}"),
         }
     }
 

@@ -85,6 +85,14 @@ fn flatten(trees: &[Tree]) -> (Vec<FlatNode>, Vec<u32>) {
 }
 
 impl Gbdt {
+    /// Rebuild an ensemble from persisted parts (the tuning store's
+    /// cost-model snapshots); the flattened prediction layout is
+    /// reconstructed from the trees.
+    pub fn from_parts(base_score: f64, learning_rate: f64, trees: Vec<Tree>) -> Gbdt {
+        let (flat, roots) = flatten(&trees);
+        Gbdt { base_score, learning_rate, trees, flat, roots }
+    }
+
     /// Fit on rows `x` (each of equal length), targets `y`, per-sample
     /// weights `w`, with loss `loss`.
     pub fn fit(

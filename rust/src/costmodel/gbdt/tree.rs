@@ -5,7 +5,7 @@
 use super::histogram::{BinCuts, BinnedMatrix};
 
 /// One node of a regression tree (flat array layout).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Node {
     Split {
         feature: usize,
@@ -22,7 +22,7 @@ pub enum Node {
 }
 
 /// A trained regression tree.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Tree {
     pub nodes: Vec<Node>,
 }

@@ -14,7 +14,127 @@ pub use loss::{eq1_weight, Loss, PaperWeightedSquaredError, SquaredError};
 use crate::config::CostModelConfig;
 use crate::features::FeatureVector;
 use crate::util::stats;
-use crate::util::Rng;
+use crate::util::{Json, Rng};
+use gbdt::{Node, Tree};
+
+/// Version of the serialized cost-model snapshot. Versioned separately
+/// from the tuning-record schema: a record whose snapshot version is
+/// unknown still loads — it just loads without a model.
+pub const MODEL_SNAPSHOT_VERSION: u64 = 1;
+
+/// A serializable view of a fitted energy cost model: the GBDT trees
+/// plus the feature meta and energy scale needed to predict with them.
+/// Persisted inside [`crate::store::TuningRecord`] so a warm-started
+/// search can install the neighbor's trees instead of paying the first
+/// fit (ROADMAP "Cost-model persistence").
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModelSnapshot {
+    /// Feature-vector width the trees were trained on; a snapshot from
+    /// a build with a different feature map is rejected at install.
+    pub n_features: usize,
+    /// Energy scale (J) mapping normalized scores back to joules.
+    pub scale_j: f64,
+    pub base_score: f64,
+    pub learning_rate: f64,
+    pub trees: Vec<Tree>,
+}
+
+impl CostModelSnapshot {
+    /// Compact JSON: each tree is an array of nodes, a leaf is `[w]`,
+    /// a split is `[feature, threshold, bin_threshold, left, right]`.
+    pub fn to_json(&self) -> Json {
+        let trees = self.trees.iter().map(|t| {
+            Json::arr(t.nodes.iter().map(|n| match n {
+                Node::Leaf { weight } => Json::arr([Json::num(*weight)]),
+                Node::Split { feature, threshold, bin_threshold, left, right } => Json::arr([
+                    Json::num(*feature as f64),
+                    Json::num(*threshold),
+                    Json::num(*bin_threshold as f64),
+                    Json::num(*left as f64),
+                    Json::num(*right as f64),
+                ]),
+            }))
+        });
+        Json::obj(vec![
+            ("model_v", Json::num(MODEL_SNAPSHOT_VERSION as f64)),
+            ("n_features", Json::num(self.n_features as f64)),
+            ("scale_j", Json::num(self.scale_j)),
+            ("base_score", Json::num(self.base_score)),
+            ("learning_rate", Json::num(self.learning_rate)),
+            ("trees", Json::arr(trees)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<CostModelSnapshot, String> {
+        let version = v
+            .get("model_v")
+            .and_then(|x| x.as_f64())
+            .ok_or("snapshot missing 'model_v'")? as u64;
+        if version != MODEL_SNAPSHOT_VERSION {
+            return Err(format!(
+                "unsupported cost-model snapshot version {version} \
+                 (this build reads v{MODEL_SNAPSHOT_VERSION})"
+            ));
+        }
+        let num = |key: &str| -> Result<f64, String> {
+            v.get(key).and_then(|x| x.as_f64()).ok_or_else(|| format!("snapshot missing '{key}'"))
+        };
+        let n_features = num("n_features")? as usize;
+        let mut trees = Vec::new();
+        for tv in v.get("trees").and_then(|t| t.as_arr()).ok_or("snapshot missing 'trees'")? {
+            let mut nodes = Vec::new();
+            for nv in tv.as_arr().ok_or("snapshot tree is not an array")? {
+                let parts: Vec<f64> = nv
+                    .as_arr()
+                    .ok_or("snapshot node is not an array")?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or("snapshot node holds a non-number"))
+                    .collect::<Result<_, _>>()?;
+                nodes.push(match parts.as_slice() {
+                    [weight] => Node::Leaf { weight: *weight },
+                    [feature, threshold, bin_threshold, left, right] => Node::Split {
+                        feature: *feature as usize,
+                        threshold: *threshold,
+                        bin_threshold: *bin_threshold as u16,
+                        left: *left as usize,
+                        right: *right as usize,
+                    },
+                    other => return Err(format!("snapshot node of arity {}", other.len())),
+                });
+            }
+            // A corrupt snapshot must fail parse, not panic (or loop) a
+            // background worker at predict time: every split must
+            // reference a known feature and link strictly forward (the
+            // grower appends children after their parent, so valid
+            // trees always satisfy this — and it rules out cycles).
+            if nodes.is_empty() {
+                return Err("snapshot tree has no nodes".into());
+            }
+            for (i, node) in nodes.iter().enumerate() {
+                if let Node::Split { feature, left, right, .. } = node {
+                    let legal = *feature < n_features
+                        && *left > i
+                        && *right > i
+                        && *left < nodes.len()
+                        && *right < nodes.len();
+                    if !legal {
+                        return Err(format!(
+                            "snapshot tree node {i} has out-of-bounds feature or non-forward child links"
+                        ));
+                    }
+                }
+            }
+            trees.push(Tree { nodes });
+        }
+        Ok(CostModelSnapshot {
+            n_features,
+            scale_j: num("scale_j")?,
+            base_score: num("base_score")?,
+            learning_rate: num("learning_rate")?,
+            trees,
+        })
+    }
+}
 
 /// The online energy cost model: dataset + fitted GBDT + bookkeeping.
 pub struct EnergyCostModel {
@@ -36,6 +156,34 @@ impl EnergyCostModel {
     /// True once the model has been trained at least once.
     pub fn is_trained(&self) -> bool {
         self.model.is_some()
+    }
+
+    /// Snapshot the fitted ensemble for persistence, or `None` when the
+    /// model has never been fit.
+    pub fn snapshot(&self) -> Option<CostModelSnapshot> {
+        self.model.as_ref().map(|m| CostModelSnapshot {
+            n_features: crate::features::FEATURE_DIM,
+            scale_j: self.scale_j,
+            base_score: m.base_score,
+            learning_rate: m.learning_rate,
+            trees: m.trees.clone(),
+        })
+    }
+
+    /// Install a persisted ensemble, replacing any fitted model. The
+    /// dataset is untouched: banked samples stay available for the next
+    /// refit. Rejects snapshots trained on a different feature map.
+    pub fn install(&mut self, snap: &CostModelSnapshot) -> Result<(), String> {
+        if snap.n_features != crate::features::FEATURE_DIM {
+            return Err(format!(
+                "snapshot has {} features, this build extracts {}",
+                snap.n_features,
+                crate::features::FEATURE_DIM
+            ));
+        }
+        self.model = Some(Gbdt::from_parts(snap.base_score, snap.learning_rate, snap.trees.clone()));
+        self.scale_j = snap.scale_j;
+        Ok(())
     }
 
     pub fn n_samples(&self) -> usize {
@@ -178,6 +326,95 @@ mod tests {
             EnergyCostModel::snr_error_db(&close, &measured)
                 > EnergyCostModel::snr_error_db(&far, &measured)
         );
+    }
+
+    #[test]
+    fn snapshot_roundtrips_and_predicts_identically() {
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM1, &spec);
+        let mut rng = Rng::seed_from_u64(44);
+        let mut model = EnergyCostModel::new(Default::default());
+        let samples: Vec<(crate::features::FeatureVector, f64)> = space
+            .sample_n(&mut rng, 60)
+            .into_iter()
+            .map(|s| {
+                let c = Candidate::new(suites::MM1, s);
+                (featurize(&c, &spec), sim::evaluate_candidate(&c, &spec).energy_j)
+            })
+            .collect();
+        model.update(&samples, &mut rng);
+
+        let snap = model.snapshot().expect("trained model snapshots");
+        let line = snap.to_json().to_string();
+        let back = CostModelSnapshot::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, snap);
+
+        let mut restored = EnergyCostModel::new(Default::default());
+        restored.install(&back).unwrap();
+        assert!(restored.is_trained());
+        for (fv, _) in samples.iter().take(20) {
+            assert_eq!(restored.predict_energy_j(fv), model.predict_energy_j(fv));
+        }
+    }
+
+    #[test]
+    fn corrupt_snapshot_links_are_rejected_at_parse() {
+        let split = |left: usize, right: usize, feature: usize| Node::Split {
+            feature,
+            threshold: 1.0,
+            bin_threshold: 0,
+            left,
+            right,
+        };
+        let good = CostModelSnapshot {
+            n_features: crate::features::FEATURE_DIM,
+            scale_j: 1.0,
+            base_score: 0.5,
+            learning_rate: 0.1,
+            trees: vec![Tree {
+                nodes: vec![split(1, 2, 0), Node::Leaf { weight: 0.1 }, Node::Leaf { weight: 0.2 }],
+            }],
+        };
+        assert!(CostModelSnapshot::from_json(&good.to_json()).is_ok());
+
+        let mut bad_feature = good.clone();
+        bad_feature.trees[0].nodes[0] = split(1, 2, 9999);
+        assert!(CostModelSnapshot::from_json(&bad_feature.to_json()).is_err());
+
+        // A self/backward link would make predict() loop forever.
+        let mut cyclic = good.clone();
+        cyclic.trees[0].nodes[0] = split(0, 2, 0);
+        assert!(CostModelSnapshot::from_json(&cyclic.to_json()).is_err());
+
+        let mut dangling = good.clone();
+        dangling.trees[0].nodes[0] = split(1, 7, 0);
+        assert!(CostModelSnapshot::from_json(&dangling.to_json()).is_err());
+
+        let mut empty = good;
+        empty.trees[0].nodes.clear();
+        assert!(CostModelSnapshot::from_json(&empty.to_json()).is_err());
+    }
+
+    #[test]
+    fn snapshot_rejects_wrong_version_and_feature_dim() {
+        let mut snap = CostModelSnapshot {
+            n_features: crate::features::FEATURE_DIM,
+            scale_j: 1.0,
+            base_score: 0.5,
+            learning_rate: 0.1,
+            trees: vec![Tree { nodes: vec![Node::Leaf { weight: 0.25 }] }],
+        };
+        let mut v = snap.to_json();
+        if let Json::Obj(m) = &mut v {
+            m.insert("model_v".to_string(), Json::num((MODEL_SNAPSHOT_VERSION + 1) as f64));
+        }
+        let err = CostModelSnapshot::from_json(&v).unwrap_err();
+        assert!(err.contains("snapshot version"), "{err}");
+
+        snap.n_features += 1;
+        let mut model = EnergyCostModel::new(Default::default());
+        assert!(model.install(&snap).is_err());
+        assert!(!model.is_trained());
     }
 
     #[test]

@@ -20,7 +20,11 @@
 //!   pre-trained cost model, transferred dynamic-k — so production
 //!   deployments stop re-paying the full search cost per workload.
 //!   [`coordinator`] consults the store before dispatching jobs to the
-//!   worker pool and writes outcomes back after each search.
+//!   worker pool and writes outcomes back after each search. The
+//!   [`serve`] daemon puts that store behind a `get_kernel` socket API:
+//!   exact hits reply instantly from a sharded, eviction-managed store;
+//!   misses reply with a warm guess while a background search fills the
+//!   cache for the next request.
 //! * **L2/L1 (build-time Python)** — JAX + Pallas kernels parameterized
 //!   by the same schedule knobs, AOT-lowered to HLO text in
 //!   `artifacts/`.
@@ -58,3 +62,6 @@ pub mod workload;
 pub mod coordinator;
 pub mod experiments;
 pub mod runtime;
+/// Kernel-serving daemon (Unix-domain sockets; unix-only).
+#[cfg(unix)]
+pub mod serve;

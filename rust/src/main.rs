@@ -3,6 +3,8 @@
 //!
 //! Subcommands:
 //!   search      run one kernel search (the paper's core loop)
+//!   serve       run the kernel-serving daemon on a Unix socket
+//!   query       ask a running daemon for a kernel / stats / shutdown
 //!   experiment  regenerate a paper table/figure (table1..5, fig2..5, all)
 //!   cache       inspect / maintain a persistent tuning store
 //!   artifacts   inspect / execute the AOT artifact registry
@@ -14,7 +16,7 @@ use ecokernel::coordinator::{Driver, DriverConfig, EventLog};
 use ecokernel::experiments::{self, Effort};
 use ecokernel::runtime::ArtifactRegistry;
 use ecokernel::search::run_search;
-use ecokernel::store::TuningStore;
+use ecokernel::store::{ShardedStore, TuningRecord, TuningStore};
 use ecokernel::util::Json;
 use ecokernel::workload::suites;
 use std::process::ExitCode;
@@ -28,6 +30,8 @@ fn main() -> ExitCode {
     let rest = &args[1..];
     let result = match cmd.as_str() {
         "search" => cmd_search(rest),
+        "serve" => cmd_serve(rest),
+        "query" => cmd_query(rest),
         "experiment" => cmd_experiment(rest),
         "cache" => cmd_cache(rest),
         "artifacts" => cmd_artifacts(rest),
@@ -59,6 +63,10 @@ USAGE:
                    [--rounds N] [--population P] [--m M] [--mu DB] [--seed S]
                    [--store DIR] [--no-transfer]
                    [--config file.toml] [--events out.jsonl] [--json]
+  ecokernel serve  --store DIR --socket PATH [--config file.toml] [--workers N]
+                   [--shards N] [--quota N] [--max-records N] [--events out.jsonl]
+  ecokernel query  --socket PATH (--workload MM1 [--gpu a100] [--mode energy]
+                   [--wait] [--timeout S] | --stats | --shutdown) [--json]
   ecokernel experiment <table1..table5|fig2..fig5|warmcold|all> [--paper]
   ecokernel cache <stats|list|prune|export> --store DIR
   ecokernel artifacts [--dir artifacts] [--list | --check | --run WORKLOAD_ID [--variant ID]]
@@ -181,7 +189,7 @@ fn cmd_search(args: &[String]) -> anyhow::Result<()> {
             ("n_energy_measurements", Json::num(out.n_energy_measurements() as f64)),
             ("sim_time_s", Json::num(out.clock.total_s)),
         ]);
-        println!("{}", obj.to_string());
+        println!("{obj}");
     } else {
         println!("workload  : {workload} on {} [{}]", cfg.gpu, cfg.mode.name());
         println!("best      : {}", out.best.schedule);
@@ -201,6 +209,146 @@ fn cmd_search(args: &[String]) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Run the kernel-serving daemon (blocking until a `shutdown` request).
+#[cfg(unix)]
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    use ecokernel::serve::{Daemon, DaemonConfig};
+    let flags = Flags::parse(args, &[])?;
+    let mut cfg = match flags.get("config") {
+        Some(path) => SearchConfig::from_toml_file(std::path::Path::new(path))?,
+        None => SearchConfig::default(),
+    };
+    if let Some(n) = flags.parse_num::<usize>("workers")? {
+        cfg.serve.n_workers = n;
+    }
+    if let Some(n) = flags.parse_num::<usize>("shards")? {
+        cfg.serve.n_shards = n;
+    }
+    if let Some(n) = flags.parse_num::<usize>("quota")? {
+        cfg.serve.per_gpu_quota = n;
+    }
+    if let Some(n) = flags.parse_num::<usize>("max-records")? {
+        cfg.serve.max_records = n;
+    }
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    let store_dir = flags
+        .get("store")
+        .ok_or_else(|| anyhow::anyhow!("--store DIR is required"))?;
+    let socket = flags
+        .get("socket")
+        .ok_or_else(|| anyhow::anyhow!("--socket PATH is required"))?;
+    let log = match flags.get("events") {
+        Some(path) => Some(EventLog::to_file(std::path::Path::new(path))?),
+        None => None,
+    };
+    let daemon = Daemon::bind(
+        DaemonConfig {
+            socket_path: std::path::PathBuf::from(socket),
+            store_dir: std::path::PathBuf::from(store_dir),
+            search: cfg.clone(),
+        },
+        log,
+    )?;
+    println!(
+        "serving on {:?} (store {store_dir}, {} shards, {} workers; stop with `ecokernel query --socket {socket} --shutdown`)",
+        daemon.socket_path(),
+        cfg.serve.n_shards,
+        cfg.serve.n_workers
+    );
+    daemon.run()
+}
+
+#[cfg(not(unix))]
+fn cmd_serve(_args: &[String]) -> anyhow::Result<()> {
+    anyhow::bail!("`ecokernel serve` needs Unix-domain sockets (unix-only)")
+}
+
+/// Talk to a running daemon: get a kernel, read stats, or shut it down.
+#[cfg(unix)]
+fn cmd_query(args: &[String]) -> anyhow::Result<()> {
+    use ecokernel::serve::ServeClient;
+    let flags = Flags::parse(args, &["json", "wait", "stats", "shutdown"])?;
+    let socket = flags
+        .get("socket")
+        .ok_or_else(|| anyhow::anyhow!("--socket PATH is required"))?;
+    let mut client = ServeClient::connect(std::path::Path::new(socket))?;
+
+    if flags.has("stats") {
+        let s = client.stats()?;
+        if flags.has("json") {
+            println!("{}", s.to_json());
+        } else {
+            println!("requests    : {} ({} hits, {} misses)", s.n_requests, s.n_hits, s.n_misses);
+            println!("hit rate    : {:.1}%", s.hit_rate * 100.0);
+            println!("reply time  : p50 {:.3} ms, p99 {:.3} ms (simulated)", s.p50_reply_s * 1e3, s.p99_reply_s * 1e3);
+            println!("queue depth : {}", s.queue_depth);
+            println!("searches    : {} done, {} enqueued total", s.n_searches_done, s.n_enqueued);
+            println!("store       : {} records in {} shards ({} evicted)", s.n_records, s.n_shards, s.n_evicted_records);
+            println!("paid        : {} NVML measurements", s.measurements_paid);
+        }
+        return Ok(());
+    }
+    if flags.has("shutdown") {
+        client.shutdown()?;
+        println!("daemon acknowledged shutdown");
+        return Ok(());
+    }
+
+    let wname = flags
+        .get("workload")
+        .ok_or_else(|| anyhow::anyhow!("--workload NAME (or --stats / --shutdown) is required"))?;
+    let workload = suites::by_name(wname).ok_or_else(|| {
+        anyhow::anyhow!("unknown workload '{wname}' (MM1..MM4, MV1..MV4, CONV1..CONV3)")
+    })?;
+    let gpu = match flags.get("gpu") {
+        Some(g) => Some(GpuArch::parse(g).ok_or_else(|| anyhow::anyhow!("unknown gpu '{g}'"))?),
+        None => None,
+    };
+    let mode = match flags.get("mode") {
+        Some(m) => {
+            Some(SearchMode::parse(m).ok_or_else(|| anyhow::anyhow!("unknown mode '{m}'"))?)
+        }
+        None => None,
+    };
+    let reply = if flags.has("wait") {
+        let timeout = flags.parse_num::<u64>("timeout")?.unwrap_or(300);
+        client.get_kernel_wait(workload, gpu, mode, std::time::Duration::from_secs(timeout))?
+    } else {
+        client.get_kernel(workload, gpu, mode)?
+    };
+    if flags.has("json") {
+        println!("{}", reply.to_json());
+    } else {
+        println!("workload  : {workload}");
+        println!(
+            "result    : {} (source: {})",
+            if reply.hit { "hit" } else { "miss" },
+            reply.source.name()
+        );
+        println!("schedule  : {}", reply.schedule);
+        println!("variant   : {}", reply.schedule.variant_id());
+        if reply.hit {
+            println!("latency   : {:.4} ms (measured)", reply.latency_s * 1e3);
+            println!("energy    : {:.3} mJ (measured)", reply.energy_j * 1e3);
+        } else if reply.energy_j > 0.0 {
+            println!("latency   : ~{:.4} ms (estimate)", reply.latency_s * 1e3);
+            println!("energy    : ~{:.3} mJ (estimate)", reply.energy_j * 1e3);
+        }
+        println!(
+            "serving   : reply {:.3} ms simulated, queue depth {}{}",
+            reply.reply_time_s * 1e3,
+            reply.queue_depth,
+            if reply.enqueued { ", background search enqueued" } else { "" }
+        );
+    }
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn cmd_query(_args: &[String]) -> anyhow::Result<()> {
+    anyhow::bail!("`ecokernel query` needs Unix-domain sockets (unix-only)")
 }
 
 fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
@@ -231,7 +379,48 @@ fn cmd_cache(args: &[String]) -> anyhow::Result<()> {
     let dir = flags
         .get("store")
         .ok_or_else(|| anyhow::anyhow!("--store DIR is required"))?;
-    let mut store = TuningStore::open(std::path::Path::new(dir))?;
+    let dir = std::path::Path::new(dir);
+
+    // A serve-daemon store (shards/ layout) reads through ShardedStore;
+    // a classic single-file store through TuningStore.
+    let sharded = dir.join(ecokernel::store::sharded::SHARDS_DIR)
+        .join(ecokernel::store::sharded::META_FILE)
+        .exists();
+    if sharded {
+        let store = ShardedStore::open_existing(dir)?;
+        match action.as_str() {
+            "stats" => {
+                let s = store.stats();
+                println!("store     : {:?} (sharded, {} shards)", store.dir(), store.n_shards());
+                println!("records   : {}", s.n_records);
+                println!("workloads : {}", s.n_workloads);
+                println!("keys      : {}", s.n_keys);
+                println!("paid      : {} energy measurements", s.total_energy_measurements);
+                println!("saved/hit : {:.1}s simulated search time", s.total_sim_time_s);
+            }
+            "list" => {
+                for rec in store.iter() {
+                    print_record(rec);
+                }
+                if store.is_empty() {
+                    println!("(store is empty)");
+                }
+            }
+            "export" => {
+                for rec in store.iter() {
+                    println!("{}", rec.to_json());
+                }
+            }
+            "prune" => anyhow::bail!(
+                "sharded stores are compacted by the daemon's eviction quotas \
+                 ([serve] per_gpu_quota / max_records), not by `cache prune`"
+            ),
+            other => anyhow::bail!("unknown cache action '{other}' (stats, list, prune, export)"),
+        }
+        return Ok(());
+    }
+
+    let mut store = TuningStore::open(dir)?;
     match action.as_str() {
         "stats" => {
             let s = store.stats();
@@ -244,17 +433,7 @@ fn cmd_cache(args: &[String]) -> anyhow::Result<()> {
         }
         "list" => {
             for rec in store.records() {
-                println!(
-                    "{:<30} {:<8} {:<16} seed={:<4} E={:>8.3} mJ  lat={:>8.4} ms  meas={:<4} {}",
-                    rec.workload_id,
-                    rec.gpu,
-                    rec.mode,
-                    rec.seed,
-                    rec.best.energy_j * 1e3,
-                    rec.best.latency_s * 1e3,
-                    rec.n_energy_measurements,
-                    rec.best.schedule
-                );
+                print_record(rec);
             }
             if store.is_empty() {
                 println!("(store is empty)");
@@ -266,12 +445,26 @@ fn cmd_cache(args: &[String]) -> anyhow::Result<()> {
         }
         "export" => {
             for rec in store.records() {
-                println!("{}", rec.to_json().to_string());
+                println!("{}", rec.to_json());
             }
         }
         other => anyhow::bail!("unknown cache action '{other}' (stats, list, prune, export)"),
     }
     Ok(())
+}
+
+fn print_record(rec: &TuningRecord) {
+    println!(
+        "{:<30} {:<8} {:<16} seed={:<4} E={:>8.3} mJ  lat={:>8.4} ms  meas={:<4} {}",
+        rec.workload_id,
+        rec.gpu,
+        rec.mode,
+        rec.seed,
+        rec.best.energy_j * 1e3,
+        rec.best.latency_s * 1e3,
+        rec.n_energy_measurements,
+        rec.best.schedule
+    );
 }
 
 fn cmd_artifacts(args: &[String]) -> anyhow::Result<()> {

@@ -21,7 +21,7 @@ pub use sampler::PowerSampler;
 
 /// Accumulates the simulated wall-clock cost of measurement and search
 /// activities. One clock per (simulated) GPU device.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct MeasurementClock {
     /// Total simulated seconds elapsed.
     pub total_s: f64,

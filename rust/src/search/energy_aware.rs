@@ -43,8 +43,10 @@ pub fn run(workload: Workload, cfg: &SearchConfig, use_model: bool) -> SearchOut
 ///
 /// * injects re-legalized neighbor schedules into the initial
 ///   population (capped at half the population);
-/// * pre-trains the cost model on transferred measured samples, so
-///   round 0 runs model-guided like every later round — one
+/// * pre-trains the cost model on transferred measured samples — or,
+///   when the neighbor record carries a persisted model snapshot,
+///   installs those trees directly and **skips the first fit** — so
+///   round 0 runs model-guided like every later round: one
 ///   scale-calibration measurement plus `k·M` kernels instead of all
 ///   `M`;
 /// * starts the dynamic-k controller at the neighbor's final `k`
@@ -82,14 +84,24 @@ pub fn run_warm(
         inject_seeds(&mut pop, &w.seed_schedules, cfg.population);
     }
     // Pre-train the model on transferred measured samples: round 0 can
-    // then run model-guided instead of measuring all M.
+    // then run model-guided instead of measuring all M. When the
+    // neighbor record carries a persisted model snapshot, install its
+    // trees instead of refitting — the first fit (and its simulated
+    // training cost) is skipped; the samples are still banked so the
+    // calibration refit below trains on them.
     if use_model {
         if let Some(w) = warm {
+            let installed =
+                w.model.as_ref().is_some_and(|snap| model.install(snap).is_ok());
             if !w.seed_samples.is_empty() {
-                model.update(&w.seed_samples, &mut rng);
-                meter.clock.charge_model_train(
-                    MODEL_TRAIN_BASE_S + MODEL_TRAIN_PER_SAMPLE_S * model.n_samples() as f64,
-                );
+                if installed {
+                    model.add_samples(&w.seed_samples);
+                } else {
+                    model.update(&w.seed_samples, &mut rng);
+                    meter.clock.charge_model_train(
+                        MODEL_TRAIN_BASE_S + MODEL_TRAIN_PER_SAMPLE_S * model.n_samples() as f64,
+                    );
+                }
             }
         }
     }
@@ -130,86 +142,27 @@ pub fn run_warm(
             energy_measured: true,
         };
 
-        let feats: Vec<FeatureVector> = top
-            .iter()
-            .map(|(s, _)| featurize(&Candidate::new(workload, *s), &spec))
-            .collect();
-        let pred = model.predict_energy_batch(&feats);
-        meter.clock.charge_model_predict(
-            MODEL_PREDICT_BASE_S + MODEL_PREDICT_PER_KERNEL_S * feats.len() as f64,
+        let r = model_guided_round(
+            workload,
+            &spec,
+            cfg,
+            &top,
+            true,
+            Some(&cal_kernel),
+            &mut model,
+            &mut kctrl,
+            &mut meter,
+            &mut rng,
         );
-        let mut idx: Vec<usize> = (0..top.len()).collect();
-        idx.sort_by(|&a, &b| pred[a].partial_cmp(&pred[b]).expect("finite"));
-        let n_measure = kctrl.n_measure(top.len());
-        // top[0] already has its measurement (the calibration): spend
-        // the rest of the round's k·M budget on distinct kernels. The
-        // calibration pair stays OUT of the SNR arrays — the model was
-        // just fit on that exact point, so its prediction is in-sample
-        // and would flatter the SNR precisely when the transfer is bad.
-        let chosen: Vec<usize> = idx
-            .iter()
-            .filter(|&&i| i != 0)
-            .take(n_measure.saturating_sub(1))
-            .copied()
-            .collect();
-
-        let mut measured_pred: Vec<f64> = Vec::with_capacity(chosen.len());
-        let mut measured_vals: Vec<f64> = Vec::with_capacity(chosen.len());
-        let mut samples: Vec<(FeatureVector, f64)> = Vec::new();
-        let mut measured: Vec<EvaluatedKernel> = vec![cal_kernel];
-        for &i in &chosen {
-            let (s, _) = top[i];
-            let m = meter.measure(&Candidate::new(workload, s), &mut rng);
-            measured_pred.push(pred[i]);
-            measured_vals.push(m.energy_j);
-            samples.push((feats[i].clone(), m.energy_j));
-            measured.push(EvaluatedKernel {
-                schedule: s,
-                latency_s: m.latency_s,
-                energy_j: m.energy_j,
-                avg_power_w: m.avg_power_w,
-                energy_measured: true,
-            });
-        }
-        let mut snr = None;
-        if !samples.is_empty() {
-            model.update(&samples, &mut rng);
-            meter.clock.charge_model_train(
-                MODEL_TRAIN_BASE_S + MODEL_TRAIN_PER_SAMPLE_S * model.n_samples() as f64,
-            );
-        }
-        if measured_vals.len() >= 2 && measured_pred.iter().all(|p| p.is_finite()) {
-            let s = EnergyCostModel::snr_error_db(&measured_pred, &measured_vals);
-            kctrl.update(s);
-            snr = Some(s);
-        }
-        // Parents: predictions with measured overrides, top 50% lowest,
-        // plus the two fastest pinned (mirrors the later rounds).
-        let mut energies = pred;
-        energies[0] = cal.energy_j;
-        for (&i, &v) in chosen.iter().zip(&measured_vals) {
-            energies[i] = v;
-        }
-        let mut order: Vec<usize> = (0..energies.len()).collect();
-        order.sort_by(|&a, &b| energies[a].partial_cmp(&energies[b]).expect("finite"));
-        parents = order
-            .iter()
-            .take((cfg.m_latency_keep / 2).max(1))
-            .map(|&i| top[i].0)
-            .collect();
-        for (s, _) in top.iter().take(2) {
-            if !parents.contains(s) {
-                parents.push(*s);
-            }
-        }
-        best_energy = measured.iter().map(|e| e.energy_j).fold(f64::INFINITY, f64::min);
-        let n_measured = measured.len();
-        measured_pool.extend(measured);
+        parents = r.parents;
+        best_energy = r.measured.iter().map(|e| e.energy_j).fold(f64::INFINITY, f64::min);
+        let n_measured = r.measured.len();
+        measured_pool.extend(r.measured);
         rounds.push(RoundStats {
             round: 0,
             best_latency_s: top[0].1,
             best_energy_j: best_energy,
-            snr_db: snr,
+            snr_db: r.snr,
             k: kctrl.k,
             n_measured,
             elapsed_s: meter.clock.total_s,
@@ -271,115 +224,37 @@ pub fn run_warm(
             }
         }
 
-        let feats: Vec<FeatureVector> = kernel_m
-            .iter()
-            .map(|(s, _)| featurize(&Candidate::new(workload, *s), &spec))
-            .collect();
-
-        // Evaluate the M kernels with the cost model; pick the most
-        // energy-efficient k*M and their predicted energy.
-        let (order, predicted): (Vec<usize>, Vec<f64>) = if use_model {
-            let pred = model.predict_energy_batch(&feats);
-            meter.clock.charge_model_predict(
-                MODEL_PREDICT_BASE_S + MODEL_PREDICT_PER_KERNEL_S * feats.len() as f64,
-            );
-            let mut idx: Vec<usize> = (0..kernel_m.len()).collect();
-            idx.sort_by(|&a, &b| pred[a].partial_cmp(&pred[b]).expect("finite"));
-            (idx, pred)
-        } else {
-            ((0..kernel_m.len()).collect(), vec![f64::NAN; kernel_m.len()])
-        };
-        let n_measure = if use_model { kctrl.n_measure(kernel_m.len()) } else { kernel_m.len() };
-        let chosen: Vec<usize> = order.iter().take(n_measure).copied().collect();
-
-        // NVML-measure the chosen kernels.
-        let mut measured_pred: Vec<f64> = Vec::with_capacity(chosen.len());
-        let mut measured_vals: Vec<f64> = Vec::with_capacity(chosen.len());
-        let mut samples: Vec<(FeatureVector, f64)> = Vec::new();
-        let mut round_measured: Vec<EvaluatedKernel> = Vec::new();
-        for &i in &chosen {
-            let (s, _) = kernel_m[i];
-            let m = meter.measure(&Candidate::new(workload, s), &mut rng);
-            measured_pred.push(predicted[i]);
-            measured_vals.push(m.energy_j);
-            samples.push((feats[i].clone(), m.energy_j));
-            round_measured.push(EvaluatedKernel {
-                schedule: s,
-                latency_s: m.latency_s,
-                energy_j: m.energy_j,
-                avg_power_w: m.avg_power_w,
-                energy_measured: true,
-            });
-        }
-
-        // Update the cost model with the measured kernels; compute SNR
-        // and adjust k.
-        let mut snr = None;
-        if use_model {
-            if !samples.is_empty() {
-                model.update(&samples, &mut rng);
-                meter.clock.charge_model_train(
-                    MODEL_TRAIN_BASE_S + MODEL_TRAIN_PER_SAMPLE_S * model.n_samples() as f64,
-                );
-            }
-            if measured_vals.len() >= 2 && measured_pred.iter().all(|p| p.is_finite()) {
-                let s = EnergyCostModel::snr_error_db(&measured_pred, &measured_vals);
-                kctrl.update(s);
-                snr = Some(s);
-            }
-        }
-
-        // Select top 50% lower-energy kernels for the next round.
-        let energies: Vec<f64> = if use_model {
-            let pred = model.predict_energy_batch(&feats);
-            meter.clock.charge_model_predict(
-                MODEL_PREDICT_BASE_S + MODEL_PREDICT_PER_KERNEL_S * feats.len() as f64,
-            );
-            // Measured values override predictions where available.
-            let mut e = pred;
-            for (&i, &v) in chosen.iter().zip(&measured_vals) {
-                e[i] = v;
-            }
-            e
-        } else {
-            measured_vals.clone()
-        };
-        let mut idx: Vec<usize> = (0..energies.len()).collect();
-        idx.sort_by(|&a, &b| energies[a].partial_cmp(&energies[b]).expect("finite"));
-        parents = idx
-            .iter()
-            .take((cfg.m_latency_keep / 2).max(1))
-            .map(|&i| kernel_m[i.min(kernel_m.len() - 1)].0)
-            .collect();
-        // §4.4: parents must keep "good latency AND low energy" — pin
-        // the two fastest kernels of the round into the parent set so
-        // the latency frontier never regresses while energy evolves.
-        for (s, _) in kernel_m.iter().take(2) {
-            if !parents.contains(s) {
-                parents.push(*s);
-            }
-        }
+        let r = model_guided_round(
+            workload,
+            &spec,
+            cfg,
+            &kernel_m,
+            use_model,
+            None,
+            &mut model,
+            &mut kctrl,
+            &mut meter,
+            &mut rng,
+        );
+        parents = r.parents;
 
         // Track convergence on measured energy.
-        let round_best = round_measured
-            .iter()
-            .map(|e| e.energy_j)
-            .fold(f64::INFINITY, f64::min);
+        let round_best = r.measured.iter().map(|e| e.energy_j).fold(f64::INFINITY, f64::min);
         if round_best < best_energy * 0.999 {
             best_energy = round_best;
             stale = 0;
         } else {
             stale += 1;
         }
-        measured_pool.extend(round_measured);
+        measured_pool.extend(r.measured);
 
         rounds.push(RoundStats {
             round,
             best_latency_s: kernel_m.first().map(|k| k.1).unwrap_or(f64::NAN),
             best_energy_j: best_energy,
-            snr_db: snr,
+            snr_db: r.snr,
             k: kctrl.k,
-            n_measured: n_measure,
+            n_measured: r.n_measured,
             elapsed_s: meter.clock.total_s,
         });
 
@@ -405,6 +280,7 @@ pub fn run_warm(
     }
     let best = select_final(&measured_pool);
     let n_latency_evals = meter.clock.n_latency_timings;
+    let model_snapshot = if use_model { model.snapshot() } else { None };
     SearchOutcome {
         workload,
         mode: if use_model { SearchMode::EnergyAware } else { SearchMode::EnergyNvmlOnly },
@@ -414,7 +290,159 @@ pub fn run_warm(
         measured_pool,
         k_trace: kctrl.trace,
         n_latency_evals,
+        model: model_snapshot,
     }
+}
+
+/// Outcome of one model-guided round over the `M` fastest kernels.
+struct ModelRound {
+    /// Parent schedules for the next generation.
+    parents: Vec<Schedule>,
+    /// Kernels NVML-measured this round (calibration kernel first on
+    /// the warm round), in measurement order.
+    measured: Vec<EvaluatedKernel>,
+    /// SNR of this round's prediction check, when computed.
+    snr: Option<f64>,
+    /// Measured-count to report in [`RoundStats`].
+    n_measured: usize,
+}
+
+/// The round protocol shared by the warm round 0 and every later round
+/// (steps 3–7 of Algorithm 1): model-rank the `M` fastest, NVML-measure
+/// the best `k·M`, fold the measurements into the model, check SNR and
+/// adjust `k`, then pick the next round's parents.
+///
+/// `cal` is the warm round's already-measured calibration kernel
+/// (always `kernel_m[0]`, the fastest): its measurement counts against
+/// the `k·M` budget, its prediction stays OUT of the SNR arrays (the
+/// model was just fit on that exact point — an in-sample prediction
+/// would flatter the SNR precisely when the transfer is bad), and the
+/// parent selection reuses the ranking predictions instead of
+/// re-predicting with the just-calibrated model.
+#[allow(clippy::too_many_arguments)]
+fn model_guided_round(
+    workload: Workload,
+    spec: &crate::config::GpuSpec,
+    cfg: &SearchConfig,
+    kernel_m: &[(Schedule, f64)],
+    use_model: bool,
+    cal: Option<&EvaluatedKernel>,
+    model: &mut EnergyCostModel,
+    kctrl: &mut KController,
+    meter: &mut NvmlMeter,
+    rng: &mut Rng,
+) -> ModelRound {
+    let feats: Vec<FeatureVector> = kernel_m
+        .iter()
+        .map(|(s, _)| featurize(&Candidate::new(workload, *s), spec))
+        .collect();
+
+    // Evaluate the M kernels with the cost model; pick the most
+    // energy-efficient k*M and their predicted energy.
+    let (order, predicted): (Vec<usize>, Vec<f64>) = if use_model {
+        let pred = model.predict_energy_batch(&feats);
+        meter.clock.charge_model_predict(
+            MODEL_PREDICT_BASE_S + MODEL_PREDICT_PER_KERNEL_S * feats.len() as f64,
+        );
+        let mut idx: Vec<usize> = (0..kernel_m.len()).collect();
+        idx.sort_by(|&a, &b| pred[a].partial_cmp(&pred[b]).expect("finite"));
+        (idx, pred)
+    } else {
+        ((0..kernel_m.len()).collect(), vec![f64::NAN; kernel_m.len()])
+    };
+    let n_measure = if use_model { kctrl.n_measure(kernel_m.len()) } else { kernel_m.len() };
+    let chosen: Vec<usize> = if cal.is_some() {
+        // The calibration kernel (index 0) already has its measurement:
+        // spend the rest of the round's budget on distinct kernels.
+        order.iter().filter(|&&i| i != 0).take(n_measure.saturating_sub(1)).copied().collect()
+    } else {
+        order.iter().take(n_measure).copied().collect()
+    };
+
+    // NVML-measure the chosen kernels.
+    let mut measured_pred: Vec<f64> = Vec::with_capacity(chosen.len());
+    let mut measured_vals: Vec<f64> = Vec::with_capacity(chosen.len());
+    let mut samples: Vec<(FeatureVector, f64)> = Vec::new();
+    let mut round_measured: Vec<EvaluatedKernel> = Vec::new();
+    for &i in &chosen {
+        let (s, _) = kernel_m[i];
+        let m = meter.measure(&Candidate::new(workload, s), rng);
+        measured_pred.push(predicted[i]);
+        measured_vals.push(m.energy_j);
+        samples.push((feats[i].clone(), m.energy_j));
+        round_measured.push(EvaluatedKernel {
+            schedule: s,
+            latency_s: m.latency_s,
+            energy_j: m.energy_j,
+            avg_power_w: m.avg_power_w,
+            energy_measured: true,
+        });
+    }
+
+    // Update the cost model with the measured kernels; compute SNR and
+    // adjust k.
+    let mut snr = None;
+    if use_model {
+        if !samples.is_empty() {
+            model.update(&samples, rng);
+            meter.clock.charge_model_train(
+                MODEL_TRAIN_BASE_S + MODEL_TRAIN_PER_SAMPLE_S * model.n_samples() as f64,
+            );
+        }
+        if measured_vals.len() >= 2 && measured_pred.iter().all(|p| p.is_finite()) {
+            let s = EnergyCostModel::snr_error_db(&measured_pred, &measured_vals);
+            kctrl.update(s);
+            snr = Some(s);
+        }
+    }
+
+    // Select top 50% lower-energy kernels for the next round; measured
+    // values override predictions where available.
+    let energies: Vec<f64> = match cal {
+        Some(c) => {
+            let mut e = predicted;
+            e[0] = c.energy_j;
+            for (&i, &v) in chosen.iter().zip(&measured_vals) {
+                e[i] = v;
+            }
+            e
+        }
+        None if use_model => {
+            let pred = model.predict_energy_batch(&feats);
+            meter.clock.charge_model_predict(
+                MODEL_PREDICT_BASE_S + MODEL_PREDICT_PER_KERNEL_S * feats.len() as f64,
+            );
+            let mut e = pred;
+            for (&i, &v) in chosen.iter().zip(&measured_vals) {
+                e[i] = v;
+            }
+            e
+        }
+        None => measured_vals.clone(),
+    };
+    let mut idx: Vec<usize> = (0..energies.len()).collect();
+    idx.sort_by(|&a, &b| energies[a].partial_cmp(&energies[b]).expect("finite"));
+    let mut parents: Vec<Schedule> = idx
+        .iter()
+        .take((cfg.m_latency_keep / 2).max(1))
+        .map(|&i| kernel_m[i.min(kernel_m.len() - 1)].0)
+        .collect();
+    // §4.4: parents must keep "good latency AND low energy" — pin the
+    // two fastest kernels of the round into the parent set so the
+    // latency frontier never regresses while energy evolves.
+    for (s, _) in kernel_m.iter().take(2) {
+        if !parents.contains(s) {
+            parents.push(*s);
+        }
+    }
+
+    let n_measured = if cal.is_some() { round_measured.len() + 1 } else { n_measure };
+    let mut measured = Vec::with_capacity(round_measured.len() + 1);
+    if let Some(c) = cal {
+        measured.push(*c);
+    }
+    measured.extend(round_measured);
+    ModelRound { parents, measured, snr, n_measured }
 }
 
 /// Merge transferred seed schedules into the head of the initial
@@ -519,6 +547,65 @@ mod tests {
         assert_eq!(a.k_trace, b.k_trace);
     }
 
+    /// Determinism pin for the folded cold path: two runs must agree on
+    /// the FULL outcome structure — every round stat, the whole
+    /// measured pool, the k trace, and the complete measurement clock —
+    /// not just the winning schedule. (`run` is a thin delegate to
+    /// `run_warm(.., None)`, so this cannot compare against the
+    /// pre-fold implementation; together with the behavioral tests
+    /// above it pins what the fold is allowed to produce.)
+    #[test]
+    fn cold_path_fold_is_fully_deterministic() {
+        for (w, use_model) in [(suites::MM1, true), (suites::MV3, true), (suites::MM1, false)] {
+            let cfg = quick_cfg(14);
+            let a = run_warm(w, &cfg, use_model, None);
+            let b = run_warm(w, &cfg, use_model, None);
+            assert_eq!(a.best, b.best);
+            assert_eq!(a.rounds, b.rounds);
+            assert_eq!(a.measured_pool, b.measured_pool);
+            assert_eq!(a.k_trace, b.k_trace);
+            assert_eq!(a.n_latency_evals, b.n_latency_evals);
+            assert_eq!(a.clock, b.clock, "identical simulated cost accounting");
+        }
+    }
+
+    #[test]
+    fn persisted_model_snapshot_skips_the_first_fit() {
+        let cfg = quick_cfg(9);
+        let cold = run(suites::MM1, &cfg, true);
+        let snap = cold.model.clone().expect("energy-aware search persists its model");
+
+        let spec = cfg.gpu.spec();
+        let samples: Vec<(FeatureVector, f64)> = cold
+            .measured_pool
+            .iter()
+            .map(|e| (featurize(&Candidate::new(suites::MM1, e.schedule), &spec), e.energy_j))
+            .collect();
+        let warm = WarmStart {
+            seed_schedules: cold.measured_pool.iter().map(|e| e.schedule).take(8).collect(),
+            seed_samples: samples,
+            k_hint: Some(0.4),
+            n_neighbors: 1,
+            model: Some(snap),
+        };
+        let out = run_warm(suites::MM1, &cfg, true, Some(&warm));
+        // The transferred trees replace the first fit: round 0 is still
+        // model-guided (k·M budget, not all M)...
+        assert!(out.rounds[0].n_measured < cfg.m_latency_keep);
+        // ...and no training time is charged before the calibration
+        // refit, so total model-training time is strictly below a warm
+        // start that must fit the transferred samples first.
+        let warm_refit = WarmStart { model: None, ..warm };
+        let refit_out = run_warm(suites::MM1, &cfg, true, Some(&warm_refit));
+        assert!(
+            out.clock.model_train_s < refit_out.clock.model_train_s,
+            "snapshot {} !< refit {}",
+            out.clock.model_train_s,
+            refit_out.clock.model_train_s
+        );
+        assert!(out.best.energy_measured && out.best.energy_j.is_finite());
+    }
+
     #[test]
     fn inject_seeds_caps_and_keeps_population_size() {
         let spec = GpuArch::A100.spec();
@@ -556,6 +643,7 @@ mod tests {
             seed_samples: samples,
             k_hint: Some(0.4),
             n_neighbors: 1,
+            model: None,
         };
         let warm_out = run_warm(suites::MM1, &cfg, true, Some(&warm));
         // Round 0 cold measures all M = 12; warm spends ceil(0.4*12) = 5

@@ -86,6 +86,7 @@ pub fn run(workload: Workload, cfg: &SearchConfig) -> SearchOutcome {
         clock: meter.clock,
         k_trace: Vec::new(),
         n_latency_evals,
+        model: None,
     }
 }
 

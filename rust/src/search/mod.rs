@@ -75,6 +75,9 @@ pub struct SearchOutcome {
     pub k_trace: Vec<f64>,
     /// Total kernels whose latency was timed.
     pub n_latency_evals: usize,
+    /// Final fitted cost model (energy modes only) — persisted by the
+    /// tuning store so warm starts can skip the first fit.
+    pub model: Option<crate::costmodel::CostModelSnapshot>,
 }
 
 impl SearchOutcome {
@@ -114,10 +117,26 @@ pub fn run_search(workload: Workload, cfg: &SearchConfig) -> SearchOutcome {
 }
 
 fn run_search_stateless(workload: Workload, cfg: &SearchConfig) -> SearchOutcome {
+    dispatch(workload, cfg, None)
+}
+
+fn dispatch(workload: Workload, cfg: &SearchConfig, warm: Option<&crate::store::WarmStart>) -> SearchOutcome {
     match cfg.mode {
         SearchMode::LatencyOnly => latency_only::run(workload, cfg),
-        SearchMode::EnergyAware => energy_aware::run(workload, cfg, true),
-        SearchMode::EnergyNvmlOnly => energy_aware::run(workload, cfg, false),
+        SearchMode::EnergyAware => energy_aware::run_warm(workload, cfg, true, warm),
+        SearchMode::EnergyNvmlOnly => energy_aware::run_warm(workload, cfg, false, warm),
+    }
+}
+
+fn build_warm(
+    workload: Workload,
+    cfg: &SearchConfig,
+    store: &crate::store::TuningStore,
+) -> Option<crate::store::WarmStart> {
+    if cfg.store.transfer && cfg.mode != SearchMode::LatencyOnly {
+        crate::store::transfer::build(store, workload, cfg)
+    } else {
+        None
     }
 }
 
@@ -131,19 +150,39 @@ pub fn run_search_with_store(
     if let Some(rec) = store.exact_hit(workload, cfg) {
         return rec.to_outcome();
     }
-    let warm = if cfg.store.transfer && cfg.mode != SearchMode::LatencyOnly {
-        crate::store::transfer::build(store, workload, cfg)
-    } else {
-        None
-    };
-    let out = match cfg.mode {
-        SearchMode::LatencyOnly => latency_only::run(workload, cfg),
-        SearchMode::EnergyAware => energy_aware::run_warm(workload, cfg, true, warm.as_ref()),
-        SearchMode::EnergyNvmlOnly => energy_aware::run_warm(workload, cfg, false, warm.as_ref()),
-    };
+    let warm = build_warm(workload, cfg, store);
+    let out = dispatch(workload, cfg, warm.as_ref());
     if cfg.store.write_back {
         if let Err(e) = store.append(crate::store::TuningRecord::from_outcome(&out, cfg)) {
             eprintln!("warning: tuning store write-back failed: {e:#}");
+        }
+    }
+    out
+}
+
+/// Run a search against a **shared, read-only snapshot** of the tuning
+/// store (ROADMAP "Store parse-once plumbing"): the worker pool parses
+/// the store once per suite and every job consults the same snapshot
+/// instead of re-reading the whole JSONL file. Write-back appends
+/// straight to the store file (O_APPEND, concurrent-safe) without
+/// touching the snapshot — hits reflect the store as of snapshot time.
+pub fn run_search_with_snapshot(
+    workload: Workload,
+    cfg: &SearchConfig,
+    snapshot: &crate::store::TuningStore,
+) -> SearchOutcome {
+    cfg.validate().expect("invalid search config");
+    if let Some(rec) = snapshot.exact_hit(workload, cfg) {
+        return rec.to_outcome();
+    }
+    let warm = build_warm(workload, cfg, snapshot);
+    let out = dispatch(workload, cfg, warm.as_ref());
+    if cfg.store.write_back {
+        if let Some(dir) = cfg.store.dir.as_deref() {
+            let rec = crate::store::TuningRecord::from_outcome(&out, cfg);
+            if let Err(e) = crate::store::append_record(std::path::Path::new(dir), &rec) {
+                eprintln!("warning: tuning store write-back failed: {e:#}");
+            }
         }
     }
     out

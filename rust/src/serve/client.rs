@@ -1,0 +1,130 @@
+//! A small blocking client for the kernel-serving daemon (used by
+//! `ecokernel query` and the serving-fleet example).
+
+use super::protocol::{KernelReply, Request, Response, StatsReply};
+use crate::config::{GpuArch, SearchMode};
+use crate::workload::Workload;
+use anyhow::{anyhow, Context as _};
+use std::io::{BufRead as _, BufReader, Write as _};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// One connection to a serving daemon. Requests are sequential
+/// (send a frame, read the reply line).
+pub struct ServeClient {
+    stream: UnixStream,
+    reader: BufReader<UnixStream>,
+    next_id: u64,
+}
+
+impl ServeClient {
+    pub fn connect(socket: &Path) -> anyhow::Result<ServeClient> {
+        let stream = UnixStream::connect(socket)
+            .with_context(|| format!("connect to daemon socket {socket:?}"))?;
+        let reader = BufReader::new(stream.try_clone().context("clone socket stream")?);
+        Ok(ServeClient { stream, reader, next_id: 0 })
+    }
+
+    fn fresh_id(&mut self) -> String {
+        self.next_id += 1;
+        format!("c{}", self.next_id)
+    }
+
+    /// Send one raw line and read one raw reply line (tests use this to
+    /// probe malformed / version-mismatched frames).
+    pub fn roundtrip_raw(&mut self, line: &str) -> anyhow::Result<String> {
+        writeln!(self.stream, "{line}").context("send frame")?;
+        self.stream.flush().context("flush frame")?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply).context("read reply")?;
+        anyhow::ensure!(n > 0, "daemon closed the connection");
+        Ok(reply.trim_end().to_string())
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> anyhow::Result<Response> {
+        let line = self.roundtrip_raw(&req.to_json().to_string())?;
+        Response::parse_line(&line).map_err(|e| anyhow!("bad response frame: {e} ({line})"))
+    }
+
+    /// One `get_kernel` request.
+    pub fn get_kernel(
+        &mut self,
+        workload: Workload,
+        gpu: Option<GpuArch>,
+        mode: Option<SearchMode>,
+    ) -> anyhow::Result<KernelReply> {
+        let id = self.fresh_id();
+        match self.roundtrip(&Request::GetKernel { id, workload, gpu, mode })? {
+            Response::Kernel(r) => Ok(r),
+            Response::Error { code, message, .. } => Err(anyhow!("daemon error [{code}]: {message}")),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Poll `get_kernel` until the store serves an exact hit (the
+    /// background search for a first-seen workload has landed), or the
+    /// timeout expires. Returns the hit reply.
+    pub fn get_kernel_wait(
+        &mut self,
+        workload: Workload,
+        gpu: Option<GpuArch>,
+        mode: Option<SearchMode>,
+        timeout: Duration,
+    ) -> anyhow::Result<KernelReply> {
+        let start = Instant::now();
+        loop {
+            let reply = self.get_kernel(workload, gpu, mode)?;
+            if reply.hit {
+                return Ok(reply);
+            }
+            if start.elapsed() > timeout {
+                return Err(anyhow!(
+                    "no hit for {workload} within {:.0}s (queue depth {})",
+                    timeout.as_secs_f64(),
+                    reply.queue_depth
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    }
+
+    pub fn stats(&mut self) -> anyhow::Result<StatsReply> {
+        let id = self.fresh_id();
+        match self.roundtrip(&Request::Stats { id })? {
+            Response::Stats(r) => Ok(r),
+            Response::Error { code, message, .. } => Err(anyhow!("daemon error [{code}]: {message}")),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Poll `stats` until every enqueued search has been written back
+    /// (queue depth 0), or the timeout expires.
+    pub fn wait_for_drain(&mut self, timeout: Duration) -> anyhow::Result<StatsReply> {
+        let start = Instant::now();
+        loop {
+            let s = self.stats()?;
+            if s.queue_depth == 0 {
+                return Ok(s);
+            }
+            if start.elapsed() > timeout {
+                return Err(anyhow!(
+                    "queue not drained within {:.0}s (depth {})",
+                    timeout.as_secs_f64(),
+                    s.queue_depth
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    }
+
+    /// Graceful daemon stop (acked before the daemon drains and exits).
+    pub fn shutdown(&mut self) -> anyhow::Result<()> {
+        let id = self.fresh_id();
+        match self.roundtrip(&Request::Shutdown { id })? {
+            Response::ShutdownAck { .. } => Ok(()),
+            Response::Error { code, message, .. } => Err(anyhow!("daemon error [{code}]: {message}")),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+}

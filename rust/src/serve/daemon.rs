@@ -1,0 +1,454 @@
+//! The kernel-serving daemon: a long-running process answering
+//! `get_kernel` requests over a Unix-domain socket.
+//!
+//! Request flow:
+//!
+//! * **exact store hit** — reply immediately with the cached,
+//!   NVML-measured kernel (zero measurements, zero search time);
+//! * **miss** — reply immediately with the best warm guess (nearest
+//!   neighbor's schedule re-legalized for the requested shape, or the
+//!   space's fallback), and enqueue a real search on the daemon-owned
+//!   [`WorkerPool`]. The finished search is written back into the
+//!   sharded store, so the next request for that key is a hit.
+//!   Duplicate in-flight keys coalesce into one search.
+//!
+//! Background searches consult a shared parsed snapshot of the store
+//! (parse-once plumbing) and warm-start from cached neighbors exactly
+//! like `search --store`; eviction quotas run after every write-back.
+
+use super::metrics::{reply_time_s, ServeMetrics};
+use super::protocol::{KernelReply, Request, Response, ServeSource, StatsReply, PROTOCOL_VERSION};
+use crate::config::SearchConfig;
+use crate::coordinator::{EventLog, PoolEvent, SearchJob, WorkerPool};
+use crate::schedule::space::ScheduleSpace;
+use crate::store::transfer::{relegalize, MAX_TRANSFER_DISTANCE};
+use crate::store::{config_fingerprint, serve_key, ShardedStore, TuningRecord, TuningStore};
+use crate::util::Json;
+use crate::workload::Workload;
+use anyhow::Context as _;
+use std::collections::HashSet;
+use std::io::{BufRead as _, BufReader, Write as _};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Daemon configuration: where to listen, where the store lives, and
+/// the search template requests run under (per-request `gpu`/`mode`
+/// overrides apply on top; the `[serve]` section sets shard count,
+/// eviction quotas, and the worker pool size).
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    pub socket_path: PathBuf,
+    pub store_dir: PathBuf,
+    pub search: SearchConfig,
+}
+
+/// Mutable daemon state behind one lock.
+struct Shared {
+    store: ShardedStore,
+    /// Parsed snapshot handed to background searches; rebuilt after
+    /// every write-back.
+    snapshot: Arc<TuningStore>,
+    /// Serve keys with a search enqueued or running.
+    pending: HashSet<String>,
+    metrics: ServeMetrics,
+}
+
+/// Everything a connection handler needs, shared across threads.
+struct Ctx {
+    shared: Mutex<Shared>,
+    /// `None` once shutdown has begun.
+    pool: Mutex<Option<WorkerPool>>,
+    shutting: AtomicBool,
+    search: SearchConfig,
+    socket_path: PathBuf,
+    log: Option<EventLog>,
+}
+
+/// A bound, running daemon (listener open, workers + writer started).
+/// Call [`Daemon::run`] to serve until shutdown.
+pub struct Daemon {
+    listener: UnixListener,
+    ctx: Arc<Ctx>,
+    writer: JoinHandle<()>,
+}
+
+/// Handle to a daemon running on a background thread (in-process tests
+/// and the serving-fleet example).
+pub struct DaemonHandle {
+    pub socket_path: PathBuf,
+    thread: JoinHandle<anyhow::Result<()>>,
+}
+
+impl DaemonHandle {
+    /// Wait for the daemon to exit (after a `shutdown` request).
+    pub fn join(self) -> anyhow::Result<()> {
+        self.thread.join().map_err(|_| anyhow::anyhow!("daemon thread panicked"))?
+    }
+}
+
+impl Daemon {
+    /// Open the store, start the worker pool + write-back thread, and
+    /// bind the socket (removing a stale socket file first). Clients
+    /// can connect as soon as this returns.
+    pub fn bind(cfg: DaemonConfig, log: Option<EventLog>) -> anyhow::Result<Daemon> {
+        cfg.search.validate().map_err(anyhow::Error::msg)?;
+        let store = ShardedStore::open(&cfg.store_dir, cfg.search.serve.n_shards)?;
+        let snapshot = Arc::new(store.snapshot());
+
+        let (tx, rx) = std::sync::mpsc::channel::<PoolEvent>();
+        let pool =
+            WorkerPool::with_sink(cfg.search.serve.n_workers, cfg.search.serve.queue_cap, tx);
+
+        if cfg.socket_path.exists() {
+            // A connectable socket means a live daemon: refuse to steal
+            // its endpoint (two daemons would corrupt one store). Only
+            // a dead (stale) socket file is removed.
+            if UnixStream::connect(&cfg.socket_path).is_ok() {
+                anyhow::bail!(
+                    "a daemon is already serving on {:?} (shut it down first)",
+                    cfg.socket_path
+                );
+            }
+            std::fs::remove_file(&cfg.socket_path)
+                .with_context(|| format!("remove stale socket {:?}", cfg.socket_path))?;
+        }
+        let listener = UnixListener::bind(&cfg.socket_path)
+            .with_context(|| format!("bind {:?}", cfg.socket_path))?;
+
+        let ctx = Arc::new(Ctx {
+            shared: Mutex::new(Shared {
+                store,
+                snapshot,
+                pending: HashSet::new(),
+                metrics: ServeMetrics::default(),
+            }),
+            pool: Mutex::new(Some(pool)),
+            shutting: AtomicBool::new(false),
+            search: cfg.search,
+            socket_path: cfg.socket_path,
+            log,
+        });
+        let writer = {
+            let ctx = ctx.clone();
+            std::thread::spawn(move || writer_loop(&ctx, rx))
+        };
+        Ok(Daemon { listener, ctx, writer })
+    }
+
+    /// Bind and serve on a background thread.
+    pub fn spawn(cfg: DaemonConfig, log: Option<EventLog>) -> anyhow::Result<DaemonHandle> {
+        let daemon = Daemon::bind(cfg, log)?;
+        let socket_path = daemon.ctx.socket_path.clone();
+        let thread = std::thread::spawn(move || daemon.run());
+        Ok(DaemonHandle { socket_path, thread })
+    }
+
+    pub fn socket_path(&self) -> &Path {
+        &self.ctx.socket_path
+    }
+
+    /// Serve connections until a `shutdown` request arrives, then drain
+    /// the worker pool, flush write-backs, and remove the socket file.
+    pub fn run(self) -> anyhow::Result<()> {
+        for stream in self.listener.incoming() {
+            if self.ctx.shutting.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(stream) => {
+                    let ctx = self.ctx.clone();
+                    std::thread::spawn(move || handle_connection(&ctx, stream));
+                }
+                Err(e) => eprintln!("serve: accept failed: {e}"),
+            }
+        }
+        // Drain: close the job queue, run queued searches to completion
+        // (their write-backs land through the writer thread), then stop.
+        let pool = self.ctx.pool.lock().expect("pool lock").take();
+        if let Some(pool) = pool {
+            pool.finish();
+        }
+        let _ = self.writer.join();
+        let _ = std::fs::remove_file(&self.ctx.socket_path);
+        Ok(())
+    }
+}
+
+/// Write-back thread: append every finished search to the sharded
+/// store, enforce eviction quotas, refresh the worker snapshot. A
+/// failed (panicked) search releases its in-flight reservation so the
+/// next request for that key can retry instead of coalescing into a
+/// dead search forever.
+fn writer_loop(ctx: &Ctx, rx: Receiver<PoolEvent>) {
+    for event in rx {
+        let result = match event {
+            PoolEvent::Done(result) => result,
+            PoolEvent::Failed { name, cfg, workload, error, .. } => {
+                let key = serve_key(
+                    &workload.id(),
+                    cfg.gpu.name(),
+                    cfg.mode.name(),
+                    &config_fingerprint(&cfg),
+                );
+                eprintln!("serve: background search '{name}' failed: {error}");
+                ctx.shared.lock().expect("shared lock").pending.remove(&key);
+                if let Some(log) = &ctx.log {
+                    log.emit(
+                        "job_search_failed",
+                        vec![("key", Json::str(key)), ("error", Json::str(error))],
+                    );
+                }
+                continue;
+            }
+        };
+        let rec = TuningRecord::from_outcome(&result.outcome, &result.cfg);
+        let key = serve_key(&rec.workload_id, &rec.gpu, &rec.mode, &rec.fingerprint);
+        let n_measurements = result.outcome.n_energy_measurements();
+        let sim_time_s = result.outcome.clock.total_s;
+        let mut evicted = 0;
+        {
+            let mut shared = ctx.shared.lock().expect("shared lock");
+            if let Err(e) = shared.store.append(rec) {
+                eprintln!("serve: write-back failed for {key}: {e:#}");
+            }
+            match shared
+                .store
+                .enforce_limits(ctx.search.serve.per_gpu_quota, ctx.search.serve.max_records)
+            {
+                Ok(n) => evicted = n,
+                Err(e) => eprintln!("serve: eviction failed: {e:#}"),
+            }
+            shared.metrics.n_searches_done += 1;
+            shared.metrics.measurements_paid += n_measurements;
+            shared.metrics.n_evicted_records += evicted;
+            shared.pending.remove(&key);
+            shared.snapshot = Arc::new(shared.store.snapshot());
+        }
+        if let Some(log) = &ctx.log {
+            log.emit(
+                "job_search_done",
+                vec![
+                    ("key", Json::str(key)),
+                    ("n_energy_measurements", Json::num(n_measurements as f64)),
+                    ("sim_time_s", Json::num(sim_time_s)),
+                    ("evicted_records", Json::num(evicted as f64)),
+                ],
+            );
+        }
+    }
+}
+
+/// One connection: serve frames until the client disconnects (or asks
+/// for shutdown).
+fn handle_connection(ctx: &Ctx, stream: UnixStream) {
+    let reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(e) => {
+            eprintln!("serve: connection clone failed: {e}");
+            return;
+        }
+    };
+    let mut out = stream;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break, // client gone
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (frame, shutdown) = handle_frame(ctx, &line);
+        if writeln!(out, "{frame}").is_err() {
+            break;
+        }
+        let _ = out.flush();
+        if shutdown {
+            ctx.shutting.store(true, Ordering::SeqCst);
+            // Wake the accept loop with a throwaway connection.
+            let _ = UnixStream::connect(&ctx.socket_path);
+            break;
+        }
+    }
+}
+
+/// Dispatch one request frame; returns (response frame, shutdown?).
+fn handle_frame(ctx: &Ctx, line: &str) -> (Json, bool) {
+    match Request::parse_line(line) {
+        Err(rej) => (rej.to_json(), false),
+        Ok(Request::Shutdown { id }) => {
+            (Response::ShutdownAck { id }.to_json(), true)
+        }
+        Ok(Request::Stats { id }) => (stats_reply(ctx, id).to_json(), false),
+        Ok(Request::GetKernel { id, workload, gpu, mode }) => {
+            (serve_get_kernel(ctx, id, workload, gpu, mode).to_json(), false)
+        }
+    }
+}
+
+fn stats_reply(ctx: &Ctx, id: String) -> StatsReply {
+    let shared = ctx.shared.lock().expect("shared lock");
+    StatsReply {
+        id,
+        n_requests: shared.metrics.n_requests,
+        n_hits: shared.metrics.n_hits,
+        n_misses: shared.metrics.n_misses,
+        n_enqueued: shared.metrics.n_enqueued,
+        n_searches_done: shared.metrics.n_searches_done,
+        n_evicted_records: shared.metrics.n_evicted_records,
+        queue_depth: shared.pending.len(),
+        n_records: shared.store.len(),
+        n_shards: shared.store.n_shards(),
+        hit_rate: shared.metrics.hit_rate(),
+        p50_reply_s: shared.metrics.p50_reply_s(),
+        p99_reply_s: shared.metrics.p99_reply_s(),
+        measurements_paid: shared.metrics.measurements_paid,
+    }
+}
+
+fn serve_get_kernel(
+    ctx: &Ctx,
+    id: String,
+    workload: Workload,
+    gpu: Option<crate::config::GpuArch>,
+    mode: Option<crate::config::SearchMode>,
+) -> KernelReply {
+    // The effective search config of this request: template + overrides.
+    // Workers never write back themselves — the daemon owns the store.
+    let mut cfg = ctx.search.clone();
+    if let Some(g) = gpu {
+        cfg.gpu = g;
+    }
+    if let Some(m) = mode {
+        cfg.mode = m;
+    }
+    cfg.store.dir = None;
+    cfg.store.write_back = false;
+    let key = serve_key(&workload.id(), cfg.gpu.name(), cfg.mode.name(), &config_fingerprint(&cfg));
+
+    let mut shared = ctx.shared.lock().expect("shared lock");
+    let shard_len = shared.store.shard_len_for(&key);
+
+    // Exact hit: reply with the recorded kernel, zero cost.
+    let hit = shared
+        .store
+        .get(workload, &cfg)
+        .map(|r| (r.best.schedule, r.best.latency_s, r.best.energy_j, r.best.avg_power_w));
+    if let Some((schedule, latency_s, energy_j, avg_power_w)) = hit {
+        if let Err(e) = shared.store.mark_served(&key) {
+            eprintln!("serve: LRU touch failed for {key}: {e:#}");
+        }
+        let t = reply_time_s(true, shard_len);
+        shared.metrics.record_reply(true, t);
+        let queue_depth = shared.pending.len();
+        drop(shared);
+        emit_served(ctx, &key, "hit", ServeSource::Store, t);
+        return KernelReply {
+            id,
+            hit: true,
+            source: ServeSource::Store,
+            schedule,
+            latency_s,
+            energy_j,
+            avg_power_w,
+            enqueued: false,
+            queue_depth,
+            reply_time_s: t,
+        };
+    }
+
+    // Miss: best warm guess now, real search in the background.
+    let spec = cfg.gpu.spec();
+    let space = ScheduleSpace::new(workload, &spec);
+    let guess = {
+        let neighbors = shared.store.neighbors(workload, cfg.gpu.name(), 1);
+        neighbors
+            .first()
+            .filter(|(_, dist)| *dist <= MAX_TRANSFER_DISTANCE)
+            .and_then(|(rec, _)| {
+                relegalize(&rec.best.schedule, &space).map(|s| {
+                    let scale = workload.gemm_view().macs() as f64
+                        / (rec.workload.gemm_view().macs() as f64).max(1.0);
+                    (s, rec.best.latency_s * scale, rec.best.energy_j * scale, rec.best.avg_power_w)
+                })
+            })
+    };
+    let (schedule, source, latency_s, energy_j, avg_power_w) = match guess {
+        Some((s, lat, en, pw)) => (s, ServeSource::WarmGuess, lat, en, pw),
+        // 0.0 = unknown: no neighbor close enough to estimate from.
+        None => (space.fallback(), ServeSource::Fallback, 0.0, 0.0, 0.0),
+    };
+    let reserve = !shared.pending.contains(&key);
+    if reserve {
+        shared.pending.insert(key.clone());
+        shared.metrics.n_enqueued += 1;
+    }
+    let snapshot = shared.snapshot.clone();
+    let queue_depth = shared.pending.len();
+    let t = reply_time_s(false, shard_len);
+    shared.metrics.record_reply(false, t);
+    drop(shared);
+
+    // The reply reports what actually happened: a reservation that
+    // cannot be submitted — search queue full (load-shedding: the miss
+    // reply must never wait on a multi-minute search slot) or daemon
+    // shutting down — is rolled back and reported as not enqueued. A
+    // shed key is retried by the next request for it.
+    let mut enqueued = false;
+    if reserve {
+        let job = SearchJob { name: key.clone(), workload, cfg };
+        enqueued = {
+            let mut pool = ctx.pool.lock().expect("pool lock");
+            match pool.as_mut() {
+                Some(p) => p.try_submit_with_snapshot(job, Some(snapshot)),
+                None => false, // shutting down
+            }
+        };
+        if enqueued {
+            if let Some(log) = &ctx.log {
+                log.emit(
+                    "job_enqueued",
+                    vec![
+                        ("key", Json::str(key.clone())),
+                        ("queue_depth", Json::num(queue_depth as f64)),
+                    ],
+                );
+            }
+        } else {
+            let mut shared = ctx.shared.lock().expect("shared lock");
+            shared.pending.remove(&key);
+            shared.metrics.n_enqueued -= 1;
+        }
+    }
+    emit_served(ctx, &key, "miss", source, t);
+    KernelReply {
+        id,
+        hit: false,
+        source,
+        schedule,
+        latency_s,
+        energy_j,
+        avg_power_w,
+        enqueued,
+        queue_depth,
+        reply_time_s: t,
+    }
+}
+
+fn emit_served(ctx: &Ctx, key: &str, result: &str, source: ServeSource, reply_time: f64) {
+    if let Some(log) = &ctx.log {
+        log.emit(
+            "job_served",
+            vec![
+                ("key", Json::str(key)),
+                ("result", Json::str(result)),
+                ("source", Json::str(source.name())),
+                ("reply_time_s", Json::num(reply_time)),
+                ("protocol_v", Json::num(PROTOCOL_VERSION as f64)),
+            ],
+        );
+    }
+}

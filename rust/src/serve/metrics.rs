@@ -1,0 +1,151 @@
+//! Serving metrics: hit rate, reply-time percentiles (simulated
+//! clock), queue depth, and the measurement-cost ledger.
+//!
+//! Reply times are charged on the same simulated clock as the search
+//! framework (the Fig. 5 currency): a store lookup costs a base term
+//! plus a per-record scan of the key's shard, and a miss additionally
+//! pays the nearest-neighbor scan that produces the warm guess. This
+//! keeps hits and misses distinguishable in p50/p99 without the noise
+//! of host wall-clock.
+
+use crate::util::stats;
+
+/// Simulated base cost of one store lookup.
+pub const REPLY_LOOKUP_BASE_S: f64 = 50e-6;
+/// Simulated per-record scan cost within the key's shard (the term
+/// sharding shrinks: N shards cut it N-fold).
+pub const REPLY_PER_RECORD_S: f64 = 200e-9;
+/// Simulated cost of the neighbor scan + re-legalization on a miss.
+pub const REPLY_MISS_NEIGHBOR_S: f64 = 2e-3;
+
+/// Reply-time samples kept for the percentile window: a long-running
+/// daemon must not grow memory per request, so p50/p99 are computed
+/// over a sliding window of the most recent replies.
+pub const REPLY_WINDOW: usize = 4096;
+
+/// Aggregate serving counters for one daemon lifetime.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub n_requests: usize,
+    pub n_hits: usize,
+    pub n_misses: usize,
+    /// Background searches enqueued (≤ misses: duplicates coalesce).
+    pub n_enqueued: usize,
+    pub n_searches_done: usize,
+    pub n_evicted_records: usize,
+    /// NVML measurements paid by completed background searches.
+    pub measurements_paid: usize,
+    /// Ring buffer of the last [`REPLY_WINDOW`] reply times.
+    reply_times_s: Vec<f64>,
+    reply_next: usize,
+}
+
+impl ServeMetrics {
+    /// Record one served request.
+    pub fn record_reply(&mut self, hit: bool, reply_time_s: f64) {
+        self.n_requests += 1;
+        if hit {
+            self.n_hits += 1;
+        } else {
+            self.n_misses += 1;
+        }
+        if self.reply_times_s.len() < REPLY_WINDOW {
+            self.reply_times_s.push(reply_time_s);
+        } else {
+            self.reply_times_s[self.reply_next] = reply_time_s;
+            self.reply_next = (self.reply_next + 1) % REPLY_WINDOW;
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.n_requests == 0 {
+            return 0.0;
+        }
+        self.n_hits as f64 / self.n_requests as f64
+    }
+
+    pub fn p50_reply_s(&self) -> f64 {
+        if self.reply_times_s.is_empty() {
+            return 0.0;
+        }
+        stats::percentile(&self.reply_times_s, 50.0)
+    }
+
+    pub fn p99_reply_s(&self) -> f64 {
+        if self.reply_times_s.is_empty() {
+            return 0.0;
+        }
+        stats::percentile(&self.reply_times_s, 99.0)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} hits={} misses={} hit_rate={:.2} enqueued={} searched={} \
+             evicted={} p50={:.2}ms p99={:.2}ms measurements_paid={}",
+            self.n_requests,
+            self.n_hits,
+            self.n_misses,
+            self.hit_rate(),
+            self.n_enqueued,
+            self.n_searches_done,
+            self.n_evicted_records,
+            self.p50_reply_s() * 1e3,
+            self.p99_reply_s() * 1e3,
+            self.measurements_paid,
+        )
+    }
+}
+
+/// Simulated reply time of one request against a shard holding
+/// `shard_len` records.
+pub fn reply_time_s(hit: bool, shard_len: usize) -> f64 {
+    let lookup = REPLY_LOOKUP_BASE_S + shard_len as f64 * REPLY_PER_RECORD_S;
+    if hit {
+        lookup
+    } else {
+        lookup + REPLY_MISS_NEIGHBOR_S
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_and_percentiles() {
+        let mut m = ServeMetrics::default();
+        assert_eq!(m.hit_rate(), 0.0);
+        assert_eq!(m.p50_reply_s(), 0.0);
+        for _ in 0..9 {
+            m.record_reply(true, reply_time_s(true, 100));
+        }
+        m.record_reply(false, reply_time_s(false, 100));
+        assert_eq!(m.n_requests, 10);
+        assert!((m.hit_rate() - 0.9).abs() < 1e-12);
+        // The single slow miss shows up at p99 but not p50.
+        assert!(m.p99_reply_s() > m.p50_reply_s());
+        assert!(m.p99_reply_s() >= REPLY_MISS_NEIGHBOR_S);
+        assert!(m.p50_reply_s() < REPLY_MISS_NEIGHBOR_S);
+        assert!(m.summary().contains("hit_rate=0.90"));
+    }
+
+    #[test]
+    fn reply_window_stays_bounded_under_load() {
+        let mut m = ServeMetrics::default();
+        for i in 0..(REPLY_WINDOW + 100) {
+            m.record_reply(true, (i + 1) as f64 * 1e-6);
+        }
+        assert_eq!(m.n_requests, REPLY_WINDOW + 100);
+        assert_eq!(m.reply_times_s.len(), REPLY_WINDOW, "ring buffer capped");
+        // Old samples aged out: the minimum surviving sample is from
+        // after the first 100 replies.
+        assert!(m.reply_times_s.iter().all(|&t| t > 100.0 * 1e-6));
+        assert!(m.p50_reply_s() > 0.0 && m.p99_reply_s() >= m.p50_reply_s());
+    }
+
+    #[test]
+    fn misses_cost_more_and_sharding_cuts_scan_cost() {
+        assert!(reply_time_s(false, 10) > reply_time_s(true, 10));
+        assert!(reply_time_s(true, 10_000) > reply_time_s(true, 10_000 / 8));
+    }
+}

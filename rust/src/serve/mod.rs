@@ -1,0 +1,35 @@
+//! The kernel-serving layer: a long-running daemon that answers
+//! `get_kernel(workload, gpu, mode)` over a Unix-domain socket.
+//!
+//! This is where the paper's tuning cost amortizes at deployment time:
+//! a fleet serving repeat traffic should pay for a search **once** and
+//! serve every later request from the store at zero measurement cost.
+//! The pieces:
+//!
+//! * [`protocol`] — versioned, line-delimited JSON frames
+//!   (request/response/error, stable error codes);
+//! * [`daemon`] — the socket server: exact hits reply instantly from
+//!   the sharded store; misses reply with a warm-start guess and
+//!   enqueue a real search on a daemon-owned
+//!   [`crate::coordinator::WorkerPool`], whose outcome is written back
+//!   so the next request hits;
+//! * [`client`] — a small blocking client (`ecokernel query`, the
+//!   serving-fleet example);
+//! * [`metrics`] — hit rate, p50/p99 reply time on the simulated
+//!   clock, queue depth, measurement-cost ledger.
+//!
+//! Storage is [`crate::store::ShardedStore`]: the tuning store split
+//! across N append-only shard files with last-served LRU eviction and
+//! per-GPU record quotas (the `[serve]` config section).
+
+pub mod client;
+pub mod daemon;
+pub mod metrics;
+pub mod protocol;
+
+pub use client::ServeClient;
+pub use daemon::{Daemon, DaemonConfig, DaemonHandle};
+pub use metrics::ServeMetrics;
+pub use protocol::{
+    error_code, KernelReply, Request, Response, ServeSource, StatsReply, PROTOCOL_VERSION,
+};

@@ -1,0 +1,564 @@
+//! The wire protocol of the kernel-serving daemon: line-delimited JSON
+//! frames over a Unix-domain socket.
+//!
+//! Every frame — request or response — is one JSON object on one line,
+//! carrying a protocol version `"v"`. Requests carry `"op"` and a
+//! client-chosen `"id"` echoed back in the response; responses carry
+//! `"ok"` (`true` for results, `false` for [`error_code`] frames).
+//!
+//! Request ops:
+//!
+//! * `get_kernel` — workload (suite name like `"MM1"` or a workload
+//!   object), optional `gpu` and `mode` overrides;
+//! * `stats` — serving metrics + store counters;
+//! * `shutdown` — graceful daemon stop (acked before the socket
+//!   closes).
+//!
+//! See README.md ("Serving daemon") for the full frame reference.
+
+use crate::config::{GpuArch, SearchMode};
+use crate::schedule::Schedule;
+use crate::store::record::{
+    schedule_from_json, schedule_to_json, workload_from_json, workload_to_json,
+};
+use crate::util::Json;
+use crate::workload::{suites, Workload};
+
+/// Version of the wire protocol; a frame with any other `"v"` is
+/// rejected with [`error_code::VERSION_MISMATCH`].
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Stable error codes carried by error frames.
+pub mod error_code {
+    /// Unparseable frame, unknown op, or malformed fields.
+    pub const BAD_REQUEST: &str = "bad_request";
+    /// The frame's `"v"` is not this daemon's [`super::PROTOCOL_VERSION`].
+    pub const VERSION_MISMATCH: &str = "version_mismatch";
+    /// The `workload` field names no known suite member and parses as
+    /// no workload object.
+    pub const UNKNOWN_WORKLOAD: &str = "unknown_workload";
+    /// Daemon-side failure while handling an otherwise valid request.
+    pub const INTERNAL: &str = "internal";
+}
+
+/// A request frame, parsed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    GetKernel {
+        id: String,
+        workload: Workload,
+        gpu: Option<GpuArch>,
+        mode: Option<SearchMode>,
+    },
+    Stats { id: String },
+    Shutdown { id: String },
+}
+
+/// A request the daemon refuses, with the code + message for the error
+/// frame (and the request id when one could be read).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reject {
+    pub id: Option<String>,
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl Reject {
+    fn new(id: Option<String>, code: &'static str, message: impl Into<String>) -> Reject {
+        Reject { id, code, message: message.into() }
+    }
+
+    /// The error frame for this rejection (one encoding shared with
+    /// [`Response::Error`]).
+    pub fn to_json(&self) -> Json {
+        Response::Error {
+            id: self.id.clone(),
+            code: self.code.to_string(),
+            message: self.message.clone(),
+        }
+        .to_json()
+    }
+}
+
+impl Request {
+    /// Encode as one frame line (no trailing newline).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("v", Json::num(PROTOCOL_VERSION as f64))];
+        match self {
+            Request::GetKernel { id, workload, gpu, mode } => {
+                fields.push(("op", Json::str("get_kernel")));
+                fields.push(("id", Json::str(id.clone())));
+                fields.push(("workload", workload_to_json(workload)));
+                if let Some(g) = gpu {
+                    fields.push(("gpu", Json::str(g.name())));
+                }
+                if let Some(m) = mode {
+                    fields.push(("mode", Json::str(m.name())));
+                }
+            }
+            Request::Stats { id } => {
+                fields.push(("op", Json::str("stats")));
+                fields.push(("id", Json::str(id.clone())));
+            }
+            Request::Shutdown { id } => {
+                fields.push(("op", Json::str("shutdown")));
+                fields.push(("id", Json::str(id.clone())));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse one request line; a `Reject` maps 1:1 to an error frame.
+    pub fn parse_line(line: &str) -> Result<Request, Reject> {
+        let v = Json::parse(line)
+            .map_err(|e| Reject::new(None, error_code::BAD_REQUEST, format!("bad frame: {e}")))?;
+        let id = v.get("id").and_then(|x| x.as_str()).map(|s| s.to_string());
+        let version = v.get("v").and_then(|x| x.as_f64()).map(|x| x as u64);
+        match version {
+            Some(ver) if ver == PROTOCOL_VERSION => {}
+            Some(ver) => {
+                return Err(Reject::new(
+                    id,
+                    error_code::VERSION_MISMATCH,
+                    format!("frame is v{ver}, this daemon speaks v{PROTOCOL_VERSION}"),
+                ))
+            }
+            None => return Err(Reject::new(id, error_code::BAD_REQUEST, "frame missing 'v'")),
+        }
+        let id = id.ok_or_else(|| Reject::new(None, error_code::BAD_REQUEST, "frame missing 'id'"))?;
+        let op = v
+            .get("op")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| Reject::new(Some(id.clone()), error_code::BAD_REQUEST, "frame missing 'op'"))?;
+        match op {
+            "stats" => Ok(Request::Stats { id }),
+            "shutdown" => Ok(Request::Shutdown { id }),
+            "get_kernel" => {
+                let wv = v.get("workload").ok_or_else(|| {
+                    Reject::new(Some(id.clone()), error_code::BAD_REQUEST, "get_kernel missing 'workload'")
+                })?;
+                let workload = parse_workload(wv).map_err(|msg| {
+                    Reject::new(Some(id.clone()), error_code::UNKNOWN_WORKLOAD, msg)
+                })?;
+                let gpu = match v.get("gpu").and_then(|x| x.as_str()) {
+                    None => None,
+                    Some(name) => Some(GpuArch::parse(name).ok_or_else(|| {
+                        Reject::new(
+                            Some(id.clone()),
+                            error_code::BAD_REQUEST,
+                            format!("unknown gpu '{name}'"),
+                        )
+                    })?),
+                };
+                let mode = match v.get("mode").and_then(|x| x.as_str()) {
+                    None => None,
+                    Some(name) => Some(SearchMode::parse(name).ok_or_else(|| {
+                        Reject::new(
+                            Some(id.clone()),
+                            error_code::BAD_REQUEST,
+                            format!("unknown mode '{name}'"),
+                        )
+                    })?),
+                };
+                Ok(Request::GetKernel { id, workload, gpu, mode })
+            }
+            other => Err(Reject::new(
+                Some(id),
+                error_code::BAD_REQUEST,
+                format!("unknown op '{other}'"),
+            )),
+        }
+    }
+}
+
+/// A workload field: a suite name string (`"MM1"`) or a workload object.
+fn parse_workload(v: &Json) -> Result<Workload, String> {
+    match v {
+        Json::Str(name) => suites::by_name(name)
+            .ok_or_else(|| format!("unknown workload '{name}' (MM1..MM4, MV1..MV4, CONV1..CONV3)")),
+        obj => workload_from_json(obj),
+    }
+}
+
+/// Where a `get_kernel` reply came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeSource {
+    /// Exact store hit: the recorded, NVML-measured kernel.
+    Store,
+    /// Miss: the nearest neighbor's best schedule re-legalized for this
+    /// shape; metrics are MAC-rescaled estimates.
+    WarmGuess,
+    /// Miss with no usable neighbor: the schedule space's fallback.
+    Fallback,
+}
+
+impl ServeSource {
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeSource::Store => "store",
+            ServeSource::WarmGuess => "warm_guess",
+            ServeSource::Fallback => "fallback",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ServeSource> {
+        match s {
+            "store" => Some(ServeSource::Store),
+            "warm_guess" => Some(ServeSource::WarmGuess),
+            "fallback" => Some(ServeSource::Fallback),
+            _ => None,
+        }
+    }
+}
+
+/// The `get_kernel` response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelReply {
+    pub id: String,
+    /// True for an exact store hit.
+    pub hit: bool,
+    pub source: ServeSource,
+    pub schedule: Schedule,
+    /// Measured metrics on a hit; MAC-rescaled estimates (or 0.0 =
+    /// unknown, for fallback schedules) on a miss.
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+    /// True when this reply enqueued a background search.
+    pub enqueued: bool,
+    /// Keys enqueued-or-searching when the reply was sent.
+    pub queue_depth: usize,
+    /// Simulated reply latency charged to this request.
+    pub reply_time_s: f64,
+}
+
+impl KernelReply {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("v", Json::num(PROTOCOL_VERSION as f64)),
+            ("id", Json::str(self.id.clone())),
+            ("ok", Json::Bool(true)),
+            ("op", Json::str("get_kernel")),
+            ("result", Json::str(if self.hit { "hit" } else { "miss" })),
+            ("source", Json::str(self.source.name())),
+            ("schedule", schedule_to_json(&self.schedule)),
+            ("variant_id", Json::str(self.schedule.variant_id())),
+            ("latency_s", Json::num(self.latency_s)),
+            ("energy_j", Json::num(self.energy_j)),
+            ("avg_power_w", Json::num(self.avg_power_w)),
+            ("enqueued", Json::Bool(self.enqueued)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("reply_time_s", Json::num(self.reply_time_s)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<KernelReply, String> {
+        let result = get_str(v, "result")?;
+        let hit = match result.as_str() {
+            "hit" => true,
+            "miss" => false,
+            other => return Err(format!("bad 'result' value '{other}'")),
+        };
+        Ok(KernelReply {
+            id: get_str(v, "id")?,
+            hit,
+            source: ServeSource::parse(&get_str(v, "source")?)
+                .ok_or("bad 'source' value")?,
+            schedule: schedule_from_json(v.get("schedule").ok_or("reply missing 'schedule'")?)?,
+            latency_s: get_f64(v, "latency_s")?,
+            energy_j: get_f64(v, "energy_j")?,
+            avg_power_w: get_f64(v, "avg_power_w")?,
+            enqueued: v.get("enqueued").and_then(|b| b.as_bool()).ok_or("missing 'enqueued'")?,
+            queue_depth: get_f64(v, "queue_depth")? as usize,
+            reply_time_s: get_f64(v, "reply_time_s")?,
+        })
+    }
+}
+
+/// The `stats` response frame: serving metrics + store counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsReply {
+    pub id: String,
+    pub n_requests: usize,
+    pub n_hits: usize,
+    pub n_misses: usize,
+    pub n_enqueued: usize,
+    pub n_searches_done: usize,
+    pub n_evicted_records: usize,
+    pub queue_depth: usize,
+    pub n_records: usize,
+    pub n_shards: usize,
+    pub hit_rate: f64,
+    pub p50_reply_s: f64,
+    pub p99_reply_s: f64,
+    /// NVML measurements the daemon's background searches have paid.
+    pub measurements_paid: usize,
+}
+
+impl StatsReply {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("v", Json::num(PROTOCOL_VERSION as f64)),
+            ("id", Json::str(self.id.clone())),
+            ("ok", Json::Bool(true)),
+            ("op", Json::str("stats")),
+            (
+                "stats",
+                Json::obj(vec![
+                    ("n_requests", Json::num(self.n_requests as f64)),
+                    ("n_hits", Json::num(self.n_hits as f64)),
+                    ("n_misses", Json::num(self.n_misses as f64)),
+                    ("n_enqueued", Json::num(self.n_enqueued as f64)),
+                    ("n_searches_done", Json::num(self.n_searches_done as f64)),
+                    ("n_evicted_records", Json::num(self.n_evicted_records as f64)),
+                    ("queue_depth", Json::num(self.queue_depth as f64)),
+                    ("n_records", Json::num(self.n_records as f64)),
+                    ("n_shards", Json::num(self.n_shards as f64)),
+                    ("hit_rate", Json::num(self.hit_rate)),
+                    ("p50_reply_s", Json::num(self.p50_reply_s)),
+                    ("p99_reply_s", Json::num(self.p99_reply_s)),
+                    ("measurements_paid", Json::num(self.measurements_paid as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<StatsReply, String> {
+        let id = get_str(v, "id")?;
+        let s = v.get("stats").ok_or("reply missing 'stats'")?;
+        Ok(StatsReply {
+            id,
+            n_requests: get_f64(s, "n_requests")? as usize,
+            n_hits: get_f64(s, "n_hits")? as usize,
+            n_misses: get_f64(s, "n_misses")? as usize,
+            n_enqueued: get_f64(s, "n_enqueued")? as usize,
+            n_searches_done: get_f64(s, "n_searches_done")? as usize,
+            n_evicted_records: get_f64(s, "n_evicted_records")? as usize,
+            queue_depth: get_f64(s, "queue_depth")? as usize,
+            n_records: get_f64(s, "n_records")? as usize,
+            n_shards: get_f64(s, "n_shards")? as usize,
+            hit_rate: get_f64(s, "hit_rate")?,
+            p50_reply_s: get_f64(s, "p50_reply_s")?,
+            p99_reply_s: get_f64(s, "p99_reply_s")?,
+            measurements_paid: get_f64(s, "measurements_paid")? as usize,
+        })
+    }
+}
+
+/// Any response frame, as parsed by the client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Kernel(KernelReply),
+    Stats(StatsReply),
+    ShutdownAck { id: String },
+    Error { id: Option<String>, code: String, message: String },
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Kernel(r) => r.to_json(),
+            Response::Stats(r) => r.to_json(),
+            Response::ShutdownAck { id } => Json::obj(vec![
+                ("v", Json::num(PROTOCOL_VERSION as f64)),
+                ("id", Json::str(id.clone())),
+                ("ok", Json::Bool(true)),
+                ("op", Json::str("shutdown")),
+            ]),
+            Response::Error { id, code, message } => Json::obj(vec![
+                ("v", Json::num(PROTOCOL_VERSION as f64)),
+                (
+                    "id",
+                    match id {
+                        Some(id) => Json::str(id.clone()),
+                        None => Json::Null,
+                    },
+                ),
+                ("ok", Json::Bool(false)),
+                (
+                    "error",
+                    Json::obj(vec![
+                        ("code", Json::str(code.clone())),
+                        ("message", Json::str(message.clone())),
+                    ]),
+                ),
+            ]),
+        }
+    }
+
+    pub fn parse_line(line: &str) -> Result<Response, String> {
+        let v = Json::parse(line)?;
+        let version = v.get("v").and_then(|x| x.as_f64()).ok_or("frame missing 'v'")? as u64;
+        if version != PROTOCOL_VERSION {
+            return Err(format!(
+                "frame is v{version}, this client speaks v{PROTOCOL_VERSION}"
+            ));
+        }
+        let ok = v.get("ok").and_then(|b| b.as_bool()).ok_or("frame missing 'ok'")?;
+        if !ok {
+            let e = v.get("error").ok_or("error frame missing 'error'")?;
+            return Ok(Response::Error {
+                id: v.get("id").and_then(|x| x.as_str()).map(|s| s.to_string()),
+                code: get_str(e, "code")?,
+                message: get_str(e, "message")?,
+            });
+        }
+        match get_str(&v, "op")?.as_str() {
+            "get_kernel" => Ok(Response::Kernel(KernelReply::from_json(&v)?)),
+            "stats" => Ok(Response::Stats(StatsReply::from_json(&v)?)),
+            "shutdown" => Ok(Response::ShutdownAck { id: get_str(&v, "id")? }),
+            other => Err(format!("unknown response op '{other}'")),
+        }
+    }
+}
+
+fn get_f64(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key).and_then(|x| x.as_f64()).ok_or_else(|| format!("missing/bad field '{key}'"))
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String, String> {
+    Ok(v.get(key)
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| format!("missing/bad field '{key}'"))?
+        .to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuArch, GpuSpec, SearchMode};
+    use crate::schedule::space::ScheduleSpace;
+
+    fn sample_schedule() -> Schedule {
+        let spec: GpuSpec = GpuArch::A100.spec();
+        ScheduleSpace::new(suites::MM1, &spec).fallback()
+    }
+
+    #[test]
+    fn request_roundtrip_all_ops() {
+        let reqs = [
+            Request::GetKernel {
+                id: "c1".into(),
+                workload: suites::MM1,
+                gpu: Some(GpuArch::A100),
+                mode: Some(SearchMode::EnergyAware),
+            },
+            Request::GetKernel { id: "c2".into(), workload: suites::CONV2, gpu: None, mode: None },
+            Request::Stats { id: "c3".into() },
+            Request::Shutdown { id: "c4".into() },
+        ];
+        for req in reqs {
+            let line = req.to_json().to_string();
+            assert_eq!(Request::parse_line(&line), Ok(req), "{line}");
+        }
+    }
+
+    #[test]
+    fn workload_accepts_suite_name_or_object() {
+        let by_name = r#"{"v":1,"op":"get_kernel","id":"x","workload":"mv3"}"#;
+        match Request::parse_line(by_name).unwrap() {
+            Request::GetKernel { workload, .. } => assert_eq!(workload, suites::MV3),
+            other => panic!("{other:?}"),
+        }
+        let by_obj = format!(
+            r#"{{"v":1,"op":"get_kernel","id":"x","workload":{}}}"#,
+            workload_to_json(&suites::CONV1).to_string()
+        );
+        match Request::parse_line(&by_obj).unwrap() {
+            Request::GetKernel { workload, .. } => assert_eq!(workload, suites::CONV1),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_frames_are_bad_requests() {
+        for line in [
+            "{not json",
+            r#"{"op":"get_kernel","id":"x","workload":"MM1"}"#, // no version
+            r#"{"v":1,"op":"get_kernel","workload":"MM1"}"#,    // no id
+            r#"{"v":1,"op":"frobnicate","id":"x"}"#,            // unknown op
+            r#"{"v":1,"op":"get_kernel","id":"x","workload":"MM1","gpu":"tpu"}"#,
+        ] {
+            let rej = Request::parse_line(line).unwrap_err();
+            assert_eq!(rej.code, error_code::BAD_REQUEST, "{line}");
+            let frame = rej.to_json();
+            assert_eq!(frame.get("ok").and_then(|b| b.as_bool()), Some(false));
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_its_own_code_and_echoes_id() {
+        let rej = Request::parse_line(r#"{"v":99,"op":"stats","id":"c9"}"#).unwrap_err();
+        assert_eq!(rej.code, error_code::VERSION_MISMATCH);
+        assert_eq!(rej.id.as_deref(), Some("c9"));
+        let frame = rej.to_json();
+        assert_eq!(frame.get("id").and_then(|x| x.as_str()), Some("c9"));
+    }
+
+    #[test]
+    fn unknown_workload_code() {
+        let rej =
+            Request::parse_line(r#"{"v":1,"op":"get_kernel","id":"x","workload":"MM99"}"#)
+                .unwrap_err();
+        assert_eq!(rej.code, error_code::UNKNOWN_WORKLOAD);
+    }
+
+    #[test]
+    fn kernel_reply_roundtrip() {
+        let reply = KernelReply {
+            id: "c1".into(),
+            hit: true,
+            source: ServeSource::Store,
+            schedule: sample_schedule(),
+            latency_s: 1.5e-3,
+            energy_j: 2.5e-3,
+            avg_power_w: 123.0,
+            enqueued: false,
+            queue_depth: 2,
+            reply_time_s: 6.4e-5,
+        };
+        let line = reply.to_json().to_string();
+        match Response::parse_line(&line).unwrap() {
+            Response::Kernel(back) => assert_eq!(back, reply),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_reply_roundtrip() {
+        let reply = StatsReply {
+            id: "c2".into(),
+            n_requests: 10,
+            n_hits: 7,
+            n_misses: 3,
+            n_enqueued: 3,
+            n_searches_done: 2,
+            n_evicted_records: 1,
+            queue_depth: 1,
+            n_records: 9,
+            n_shards: 8,
+            hit_rate: 0.7,
+            p50_reply_s: 5e-5,
+            p99_reply_s: 2.1e-3,
+            measurements_paid: 140,
+        };
+        let line = reply.to_json().to_string();
+        match Response::parse_line(&line).unwrap() {
+            Response::Stats(back) => assert_eq!(back, reply),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_frames_parse_as_errors() {
+        let rej = Reject::new(Some("c7".into()), error_code::INTERNAL, "boom");
+        match Response::parse_line(&rej.to_json().to_string()).unwrap() {
+            Response::Error { id, code, message } => {
+                assert_eq!(id.as_deref(), Some("c7"));
+                assert_eq!(code, error_code::INTERNAL);
+                assert_eq!(message, "boom");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

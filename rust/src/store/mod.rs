@@ -22,10 +22,12 @@
 //! CLI); the stateless path is untouched when no store is configured.
 
 pub mod record;
+pub mod sharded;
 pub mod similarity;
 pub mod transfer;
 
 pub use record::{config_fingerprint, StoredKernel, TuningRecord, SCHEMA_VERSION};
+pub use sharded::{serve_key, ShardedStore};
 pub use similarity::gemm_distance;
 pub use transfer::WarmStart;
 
@@ -38,6 +40,67 @@ use std::path::{Path, PathBuf};
 
 /// File name of the store inside its directory.
 pub const STORE_FILE: &str = "tuning_store.jsonl";
+
+/// Append one JSON value as one line (O_APPEND, creating the file) —
+/// the single append path shared by the flat store, the sharded store,
+/// and the LRU sidecar. Payload and newline go down in ONE write so
+/// concurrent appenders interleave whole lines and a crash can tear at
+/// most the final line.
+pub(crate) fn append_jsonl(path: &Path, value: &Json) -> anyhow::Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("append to {path:?}"))?;
+    let mut line = value.to_string();
+    line.push('\n');
+    f.write_all(line.as_bytes()).with_context(|| format!("append to {path:?}"))?;
+    Ok(())
+}
+
+/// Append one record to a store directory **without parsing the store**
+/// (one JSONL line, O_APPEND): the write-back path for workers that
+/// consult a shared parsed snapshot instead of reopening the file.
+pub fn append_record(dir: &Path, rec: &TuningRecord) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("create tuning store dir {dir:?}"))?;
+    append_jsonl(&dir.join(STORE_FILE), &rec.to_json())
+}
+
+/// Nearest-neighbor selection shared by [`TuningStore`] and
+/// [`ShardedStore`]: the latest record per foreign workload id on
+/// `gpu` (with a non-empty measured pool), sorted by shape distance
+/// with a deterministic tie-break on workload id, truncated to `max_n`.
+/// "Latest" follows the iteration order of `records`.
+pub fn neighbors_among<'a, I>(
+    records: I,
+    workload: Workload,
+    gpu: &str,
+    max_n: usize,
+) -> Vec<(&'a TuningRecord, f64)>
+where
+    I: IntoIterator<Item = &'a TuningRecord>,
+{
+    let id = workload.id();
+    let target = workload.gemm_view();
+    let mut latest: BTreeMap<&str, &TuningRecord> = BTreeMap::new();
+    for r in records {
+        if r.gpu == gpu && r.workload_id != id && !r.measured.is_empty() {
+            latest.insert(r.workload_id.as_str(), r);
+        }
+    }
+    let mut out: Vec<(&TuningRecord, f64)> = latest
+        .into_values()
+        .map(|r| (r, gemm_distance(&target, &r.workload.gemm_view())))
+        .collect();
+    out.sort_by(|a, b| {
+        a.1.partial_cmp(&b.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.0.workload_id.cmp(&b.0.workload_id))
+    });
+    out.truncate(max_n);
+    out
+}
 
 /// An open tuning store: the on-disk JSONL file plus its parsed records.
 #[derive(Debug, Clone)]
@@ -107,14 +170,7 @@ impl TuningStore {
     /// Append one record (one JSONL line, O_APPEND — concurrent workers
     /// interleave whole lines, never partial ones at these sizes).
     pub fn append(&mut self, rec: TuningRecord) -> anyhow::Result<()> {
-        use std::io::Write as _;
-        let line = rec.to_json().to_string();
-        let mut f = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(&self.path)
-            .with_context(|| format!("append to tuning store {:?}", self.path))?;
-        writeln!(f, "{line}")?;
+        append_jsonl(&self.path, &rec.to_json())?;
         self.records.push(rec);
         Ok(())
     }
@@ -139,25 +195,14 @@ impl TuningStore {
     /// record per foreign workload id, sorted by shape distance
     /// (deterministic tie-break on workload id), truncated to `max_n`.
     pub fn neighbors(&self, workload: Workload, gpu: &str, max_n: usize) -> Vec<(&TuningRecord, f64)> {
-        let id = workload.id();
-        let target = workload.gemm_view();
-        let mut latest: BTreeMap<&str, &TuningRecord> = BTreeMap::new();
-        for r in &self.records {
-            if r.gpu == gpu && r.workload_id != id && !r.measured.is_empty() {
-                latest.insert(r.workload_id.as_str(), r);
-            }
-        }
-        let mut out: Vec<(&TuningRecord, f64)> = latest
-            .into_values()
-            .map(|r| (r, gemm_distance(&target, &r.workload.gemm_view())))
-            .collect();
-        out.sort_by(|a, b| {
-            a.1.partial_cmp(&b.1)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then_with(|| a.0.workload_id.cmp(&b.0.workload_id))
-        });
-        out.truncate(max_n);
-        out
+        neighbors_among(&self.records, workload, gpu, max_n)
+    }
+
+    /// Build an in-memory snapshot over externally-loaded records (the
+    /// sharded store hands these to workers). The snapshot reads like
+    /// any other store; appending to it writes `dir/tuning_store.jsonl`.
+    pub fn from_records(dir: &Path, records: Vec<TuningRecord>) -> TuningStore {
+        TuningStore { dir: dir.to_path_buf(), path: dir.join(STORE_FILE), records }
     }
 
     /// Compact the store: keep only the **latest** record per
@@ -196,24 +241,34 @@ impl TuningStore {
     }
 
     pub fn stats(&self) -> StoreStats {
-        let mut workloads: HashSet<&str> = HashSet::new();
-        let mut keys: HashSet<(&str, &str, &str, &str)> = HashSet::new();
-        let mut stats = StoreStats { n_records: self.records.len(), ..Default::default() };
-        for r in &self.records {
-            workloads.insert(r.workload_id.as_str());
-            keys.insert((
-                r.workload_id.as_str(),
-                r.gpu.as_str(),
-                r.mode.as_str(),
-                r.fingerprint.as_str(),
-            ));
-            stats.total_energy_measurements += r.n_energy_measurements;
-            stats.total_sim_time_s += r.sim_time_s;
-        }
-        stats.n_workloads = workloads.len();
-        stats.n_keys = keys.len();
-        stats
+        stats_among(&self.records)
     }
+}
+
+/// Aggregate [`StoreStats`] over any record collection (shared by
+/// [`TuningStore`] and [`ShardedStore`]).
+pub fn stats_among<'a, I>(records: I) -> StoreStats
+where
+    I: IntoIterator<Item = &'a TuningRecord>,
+{
+    let mut workloads: HashSet<&str> = HashSet::new();
+    let mut keys: HashSet<(&str, &str, &str, &str)> = HashSet::new();
+    let mut stats = StoreStats::default();
+    for r in records {
+        stats.n_records += 1;
+        workloads.insert(r.workload_id.as_str());
+        keys.insert((
+            r.workload_id.as_str(),
+            r.gpu.as_str(),
+            r.mode.as_str(),
+            r.fingerprint.as_str(),
+        ));
+        stats.total_energy_measurements += r.n_energy_measurements;
+        stats.total_sim_time_s += r.sim_time_s;
+    }
+    stats.n_workloads = workloads.len();
+    stats.n_keys = keys.len();
+    stats
 }
 
 #[cfg(test)]

@@ -8,6 +8,7 @@
 //! feature map can evolve without invalidating the store.
 
 use crate::config::{SearchConfig, SearchMode};
+use crate::costmodel::CostModelSnapshot;
 use crate::nvml::MeasurementClock;
 use crate::schedule::Schedule;
 use crate::search::{EvaluatedKernel, SearchOutcome};
@@ -97,6 +98,11 @@ pub struct TuningRecord {
     pub rounds: usize,
     /// Final dynamic-k value (None for latency-only searches).
     pub final_k: Option<f64>,
+    /// The search's fitted cost model, when one was trained. The field
+    /// carries its own version (`model_v`): records written before the
+    /// field existed — and records whose snapshot version this build
+    /// does not understand — still load, just without a model.
+    pub model: Option<CostModelSnapshot>,
 }
 
 impl TuningRecord {
@@ -120,6 +126,7 @@ impl TuningRecord {
             sim_time_s: out.clock.total_s,
             rounds: out.rounds.len(),
             final_k: out.k_trace.last().copied(),
+            model: out.model.clone(),
         }
     }
 
@@ -136,6 +143,7 @@ impl TuningRecord {
             measured_pool: self.measured.iter().map(|k| k.to_evaluated()).collect(),
             k_trace: Vec::new(),
             n_latency_evals: 0,
+            model: self.model.clone(),
         }
     }
 
@@ -158,6 +166,13 @@ impl TuningRecord {
                 "final_k",
                 match self.final_k {
                     Some(k) => Json::num(k),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "cost_model",
+                match &self.model {
+                    Some(snap) => snap.to_json(),
                     None => Json::Null,
                 },
             ),
@@ -194,6 +209,13 @@ impl TuningRecord {
             final_k: match v.get("final_k") {
                 None | Some(Json::Null) => None,
                 Some(x) => Some(x.as_f64().ok_or("bad 'final_k'")?),
+            },
+            // Tolerant by design: a missing field (pre-snapshot
+            // records), an unknown model_v, or a malformed snapshot all
+            // load as "no model" — the kernel data stays servable.
+            model: match v.get("cost_model") {
+                None | Some(Json::Null) => None,
+                Some(m) => CostModelSnapshot::from_json(m).ok(),
             },
         })
     }
@@ -246,7 +268,9 @@ pub fn config_fingerprint(cfg: &SearchConfig) -> String {
     )
 }
 
-fn schedule_to_json(s: &Schedule) -> Json {
+/// Compact JSON encoding of a schedule (shared with the serve
+/// protocol's kernel replies).
+pub fn schedule_to_json(s: &Schedule) -> Json {
     Json::obj(vec![
         ("tm", Json::num(s.threads_m as f64)),
         ("tn", Json::num(s.threads_n as f64)),
@@ -260,7 +284,7 @@ fn schedule_to_json(s: &Schedule) -> Json {
     ])
 }
 
-fn schedule_from_json(v: &Json) -> Result<Schedule, String> {
+pub fn schedule_from_json(v: &Json) -> Result<Schedule, String> {
     Ok(Schedule {
         threads_m: get_usize(v, "tm")?,
         threads_n: get_usize(v, "tn")?,
@@ -274,7 +298,9 @@ fn schedule_from_json(v: &Json) -> Result<Schedule, String> {
     })
 }
 
-fn workload_to_json(w: &Workload) -> Json {
+/// JSON encoding of a workload (shared with the serve protocol's
+/// `get_kernel` requests).
+pub fn workload_to_json(w: &Workload) -> Json {
     match *w {
         Workload::MatMul { batch, m, n, k } => Json::obj(vec![
             ("kind", Json::str("mm")),
@@ -303,7 +329,7 @@ fn workload_to_json(w: &Workload) -> Json {
     }
 }
 
-fn workload_from_json(v: &Json) -> Result<Workload, String> {
+pub fn workload_from_json(v: &Json) -> Result<Workload, String> {
     match get_str(v, "kind")?.as_str() {
         "mm" => Ok(Workload::MatMul {
             batch: get_usize(v, "batch")?,
@@ -422,6 +448,36 @@ mod tests {
         h.store.dir = Some("/tmp/elsewhere".into());
         assert_eq!(config_fingerprint(&a), config_fingerprint(&h));
         assert_eq!(config_fingerprint(&a), config_fingerprint(&SearchConfig::default()));
+    }
+
+    #[test]
+    fn model_field_is_versioned_and_optional() {
+        let rec = sample_record();
+        assert!(rec.model.is_some(), "energy-aware searches persist their model");
+
+        // A pre-snapshot record (no 'cost_model' field) still parses.
+        let mut v = rec.to_json();
+        if let Json::Obj(m) = &mut v {
+            m.remove("cost_model");
+        }
+        let old = TuningRecord::from_json(&v).unwrap();
+        assert_eq!(old.model, None);
+        assert_eq!(old.best, rec.best, "kernel data intact without a model");
+
+        // A record whose snapshot version is from the future also
+        // parses — just without a model.
+        let mut v = rec.to_json();
+        if let Json::Obj(m) = &mut v {
+            if let Some(Json::Obj(snap)) = m.get_mut("cost_model") {
+                snap.insert(
+                    "model_v".to_string(),
+                    Json::num((crate::costmodel::MODEL_SNAPSHOT_VERSION + 1) as f64),
+                );
+            }
+        }
+        let future = TuningRecord::from_json(&v).unwrap();
+        assert_eq!(future.model, None);
+        assert_eq!(future.best, rec.best);
     }
 
     #[test]

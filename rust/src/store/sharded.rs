@@ -1,0 +1,711 @@
+//! The fleet-scale store layout behind the serving daemon: the tuning
+//! store sharded across N append-only JSONL files, with eviction.
+//!
+//! A single `tuning_store.jsonl` is fine for one experimenter; a daemon
+//! serving fleet traffic accumulates orders of magnitude more keys and
+//! must bound both file sizes and total footprint. This layer adds:
+//!
+//! * **sharding** — records are routed to `shards/shard_XXX.jsonl` by a
+//!   hash of their serve key (workload id, GPU, mode, fingerprint), so
+//!   appends and compactions touch one small file, never the world.
+//!   Reopening with a different shard count **rebalances** the layout
+//!   in place.
+//! * **eviction** — beyond `cache prune`'s compaction: a per-GPU record
+//!   quota and a global record cap, both evicting the least-recently
+//!   **served** keys first (an LRU over serve traffic, persisted in a
+//!   `served.jsonl` sidecar), so hot keys stay cached while dead
+//!   workloads age out.
+//! * **legacy import** — a PR-1 single-file store found in the same
+//!   directory is folded into the shards on first open, then archived
+//!   (`tuning_store.jsonl.imported`) so evicted records cannot
+//!   resurrect from it.
+//!
+//! Configured via the `[serve]` section ([`crate::config::ServeConfig`]).
+
+use super::{neighbors_among, StoreStats, TuningRecord, TuningStore, STORE_FILE};
+use crate::config::SearchConfig;
+use crate::workload::Workload;
+use anyhow::{anyhow, Context as _};
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+
+/// Subdirectory of the store dir holding the shard files.
+pub const SHARDS_DIR: &str = "shards";
+/// Shard-layout metadata file (shard count + layout version).
+pub const META_FILE: &str = "meta.json";
+/// Append-only sidecar of (key, tick) last-served events.
+pub const SERVED_FILE: &str = "served.jsonl";
+/// Version of the on-disk shard layout; bump on incompatible change.
+pub const LAYOUT_VERSION: u64 = 1;
+
+/// The serve key: the exact-hit identity of a record, also the unit of
+/// shard routing and eviction.
+pub fn serve_key(workload_id: &str, gpu: &str, mode: &str, fingerprint: &str) -> String {
+    format!("{workload_id}|{gpu}|{mode}|{fingerprint}")
+}
+
+fn record_key(r: &TuningRecord) -> String {
+    serve_key(&r.workload_id, &r.gpu, &r.mode, &r.fingerprint)
+}
+
+/// FNV-1a — stable across runs and platforms (shard routing must not
+/// depend on `DefaultHasher`'s unspecified, per-process seed).
+fn fnv1a(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// A sharded tuning store rooted at a store directory.
+#[derive(Debug)]
+pub struct ShardedStore {
+    dir: PathBuf,
+    shards_dir: PathBuf,
+    n_shards: usize,
+    shards: Vec<Vec<TuningRecord>>,
+    /// Serve key -> last-served logical tick (0 = never served).
+    served: HashMap<String, u64>,
+    tick: u64,
+    /// Lines appended to `served.jsonl` since the last compaction.
+    served_appends: usize,
+}
+
+impl ShardedStore {
+    /// Open (creating if needed) a sharded store with `n_shards`
+    /// shards. An existing layout with a different shard count is
+    /// rebalanced; a PR-1 single-file store in `dir` is imported when
+    /// the shards are empty.
+    pub fn open(dir: &Path, n_shards: usize) -> anyhow::Result<ShardedStore> {
+        anyhow::ensure!(n_shards >= 1, "shard count must be >= 1");
+        let shards_dir = dir.join(SHARDS_DIR);
+        std::fs::create_dir_all(&shards_dir)
+            .with_context(|| format!("create shards dir {shards_dir:?}"))?;
+
+        // Read the on-disk layout (if any) and load every record.
+        let meta_path = shards_dir.join(META_FILE);
+        let disk_shards =
+            if meta_path.exists() { read_meta(&meta_path)? } else { n_shards };
+
+        let (loaded, torn) = load_shard_files(&shards_dir, disk_shards)?;
+        let mut store = ShardedStore {
+            dir: dir.to_path_buf(),
+            shards_dir,
+            n_shards,
+            shards: vec![Vec::new(); n_shards],
+            served: HashMap::new(),
+            tick: 0,
+            served_appends: 0,
+        };
+        for rec in loaded {
+            let shard = store.shard_of(&record_key(&rec));
+            store.shards[shard].push(rec);
+        }
+
+        // Import a legacy single-file store once, while the shards are
+        // still empty; the file is then renamed so records a later
+        // eviction removes cannot resurrect from it on reopen.
+        let rebalanced = disk_shards != n_shards;
+        let mut rewrote_all = false;
+        if store.shards.iter().all(|s| s.is_empty()) && dir.join(STORE_FILE).exists() {
+            let legacy = TuningStore::open(dir)?;
+            for rec in legacy.records() {
+                let shard = store.shard_of(&record_key(rec));
+                store.shards[shard].push(rec.clone());
+            }
+            store.rewrite_all_shards()?;
+            rewrote_all = true;
+            let imported = dir.join(format!("{STORE_FILE}.imported"));
+            std::fs::rename(dir.join(STORE_FILE), &imported)
+                .with_context(|| format!("archive imported legacy store to {imported:?}"))?;
+        } else if rebalanced {
+            // Shard count changed: rewrite every shard file under the
+            // new routing and drop surplus old files.
+            store.rewrite_all_shards()?;
+            rewrote_all = true;
+            for i in n_shards..disk_shards {
+                let _ = std::fs::remove_file(store.shards_dir.join(shard_file(i)));
+            }
+        }
+        // Repair any torn shard tail now, before a future append would
+        // concatenate onto the partial line (a full rewrite above
+        // already repaired everything).
+        if !rewrote_all {
+            for i in torn {
+                if i < n_shards {
+                    store.rewrite_shard(i)?;
+                }
+            }
+        }
+        if !meta_path.exists() || rebalanced {
+            store.write_meta()?;
+        }
+
+        store.replay_served(true)?;
+        Ok(store)
+    }
+
+    /// Open an existing sharded store with whatever shard count its
+    /// meta file records, **without writing anything** — no rebalance,
+    /// no legacy import, no sidecar compaction. Safe to run against a
+    /// live daemon's store (`ecokernel cache` on a serve dir).
+    pub fn open_existing(dir: &Path) -> anyhow::Result<ShardedStore> {
+        let shards_dir = dir.join(SHARDS_DIR);
+        let meta_path = shards_dir.join(META_FILE);
+        anyhow::ensure!(meta_path.exists(), "no sharded store at {dir:?}");
+        let n_shards = read_meta(&meta_path)?;
+        let (loaded, _torn) = load_shard_files(&shards_dir, n_shards)?;
+        let mut store = ShardedStore {
+            dir: dir.to_path_buf(),
+            shards_dir,
+            n_shards,
+            shards: vec![Vec::new(); n_shards],
+            served: HashMap::new(),
+            tick: 0,
+            served_appends: 0,
+        };
+        for rec in loaded {
+            let shard = store.shard_of(&record_key(&rec));
+            store.shards[shard].push(rec);
+        }
+        store.replay_served(false)?;
+        Ok(store)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Total records across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.is_empty())
+    }
+
+    /// All records, shard-major (shard 0 first, append order within).
+    pub fn iter(&self) -> impl Iterator<Item = &TuningRecord> {
+        self.shards.iter().flatten()
+    }
+
+    /// Shard index a serve key routes to.
+    pub fn shard_of(&self, key: &str) -> usize {
+        (fnv1a(key) % self.n_shards as u64) as usize
+    }
+
+    /// Records currently in the shard a key routes to (the scan length
+    /// a lookup pays — the serving daemon's simulated reply-time term).
+    pub fn shard_len_for(&self, key: &str) -> usize {
+        self.shards[self.shard_of(key)].len()
+    }
+
+    /// The latest record exactly matching `(workload, gpu, mode)` and
+    /// the config fingerprint — only the key's shard is scanned.
+    pub fn get(&self, workload: Workload, cfg: &SearchConfig) -> Option<&TuningRecord> {
+        let id = workload.id();
+        let fp = super::config_fingerprint(cfg);
+        let key = serve_key(&id, cfg.gpu.name(), cfg.mode.name(), &fp);
+        self.shards[self.shard_of(&key)].iter().rev().find(|r| {
+            r.workload_id == id
+                && r.gpu == cfg.gpu.name()
+                && r.mode == cfg.mode.name()
+                && r.fingerprint == fp
+        })
+    }
+
+    /// Nearest cached neighbors (see [`neighbors_among`]); scans every
+    /// shard in index order.
+    pub fn neighbors(
+        &self,
+        workload: Workload,
+        gpu: &str,
+        max_n: usize,
+    ) -> Vec<(&TuningRecord, f64)> {
+        neighbors_among(self.iter(), workload, gpu, max_n)
+    }
+
+    /// Append a record to its shard (memory + one O_APPEND line) and
+    /// mark its key hot (a fresh record must not be the next eviction
+    /// victim).
+    pub fn append(&mut self, rec: TuningRecord) -> anyhow::Result<()> {
+        let key = record_key(&rec);
+        let shard = self.shard_of(&key);
+        super::append_jsonl(&self.shards_dir.join(shard_file(shard)), &rec.to_json())?;
+        self.shards[shard].push(rec);
+        self.touch(&key)?;
+        Ok(())
+    }
+
+    /// Record that `key` was just served (bumps its LRU tick).
+    pub fn mark_served(&mut self, key: &str) -> anyhow::Result<()> {
+        self.touch(key)
+    }
+
+    /// Last-served tick of a key (0 = never).
+    pub fn last_served(&self, key: &str) -> u64 {
+        self.served.get(key).copied().unwrap_or(0)
+    }
+
+    /// Enforce the eviction policy: keep at most `per_gpu_quota`
+    /// records per GPU and `max_records` records overall (0 disables
+    /// either bound), evicting least-recently-served keys whole.
+    /// Returns the number of records removed.
+    pub fn enforce_limits(
+        &mut self,
+        per_gpu_quota: usize,
+        max_records: usize,
+    ) -> anyhow::Result<usize> {
+        // Aggregate per serve key: gpu, record count, last-served tick.
+        let mut keys: BTreeMap<String, (String, usize, u64)> = BTreeMap::new();
+        for r in self.iter() {
+            let key = record_key(r);
+            let tick = self.last_served(&key);
+            let e = keys.entry(key).or_insert_with(|| (r.gpu.clone(), 0, tick));
+            e.1 += 1;
+        }
+        let mut per_gpu: HashMap<&str, usize> = HashMap::new();
+        let mut total = 0usize;
+        for (gpu, n, _) in keys.values() {
+            *per_gpu.entry(gpu.as_str()).or_default() += *n;
+            total += *n;
+        }
+
+        // Oldest-served first; deterministic tie-break on the key.
+        let mut order: Vec<(&String, &(String, usize, u64))> = keys.iter().collect();
+        order.sort_by(|a, b| a.1 .2.cmp(&b.1 .2).then_with(|| a.0.cmp(b.0)));
+
+        let mut victims: Vec<&String> = Vec::new();
+        let mut evicted = 0usize;
+        for (key, (gpu, n, _)) in &order {
+            let gpu_over = per_gpu_quota > 0
+                && per_gpu.values().any(|&count| count > per_gpu_quota);
+            let total_over = max_records > 0 && total > max_records;
+            if !gpu_over && !total_over {
+                break;
+            }
+            let this_gpu_over =
+                per_gpu_quota > 0 && per_gpu.get(gpu.as_str()).copied().unwrap_or(0) > per_gpu_quota;
+            if this_gpu_over || total_over {
+                victims.push(*key);
+                evicted += *n;
+                total -= *n;
+                if let Some(count) = per_gpu.get_mut(gpu.as_str()) {
+                    *count -= *n;
+                }
+            }
+        }
+        if victims.is_empty() {
+            return Ok(0);
+        }
+
+        let victim_set: std::collections::HashSet<&str> =
+            victims.iter().map(|k| k.as_str()).collect();
+        let dirty: Vec<usize> = victims.iter().map(|k| self.shard_of(k)).collect();
+        for shard in &dirty {
+            self.shards[*shard].retain(|r| !victim_set.contains(record_key(r).as_str()));
+        }
+        for shard in dirty {
+            self.rewrite_shard(shard)?;
+        }
+        self.served.retain(|k, _| !victim_set.contains(k.as_str()));
+        self.rewrite_served()?;
+        Ok(evicted)
+    }
+
+    /// Flatten into a plain [`TuningStore`] snapshot (what background
+    /// search workers consult for exact hits and warm-start transfer).
+    pub fn snapshot(&self) -> TuningStore {
+        TuningStore::from_records(&self.dir, self.iter().cloned().collect())
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        super::stats_among(self.iter())
+    }
+
+    fn touch(&mut self, key: &str) -> anyhow::Result<()> {
+        self.tick += 1;
+        self.served.insert(key.to_string(), self.tick);
+        super::append_jsonl(
+            &self.shards_dir.join(SERVED_FILE),
+            &crate::util::Json::obj(vec![
+                ("key", crate::util::Json::str(key)),
+                ("tick", crate::util::Json::num(self.tick as f64)),
+            ]),
+        )?;
+        // Compact online so a long-running daemon's sidecar stays
+        // bounded at ~2 lines per live key (+ slack for small stores).
+        self.served_appends += 1;
+        if self.served_appends > 2 * self.served.len() + 64 {
+            self.rewrite_served()?;
+        }
+        Ok(())
+    }
+
+    fn replay_served(&mut self, compact: bool) -> anyhow::Result<()> {
+        let path = self.shards_dir.join(SERVED_FILE);
+        if !path.exists() {
+            return Ok(());
+        }
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+        let all: Vec<&str> = text.lines().collect();
+        let last = all.iter().rposition(|l| !l.trim().is_empty());
+        let mut lines = 0usize;
+        let mut torn = false;
+        for (lineno, line) in all.iter().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parsed = crate::util::Json::parse(line).and_then(|v| {
+                let key = v
+                    .get("key")
+                    .and_then(|k| k.as_str())
+                    .ok_or_else(|| "missing 'key'".to_string())?
+                    .to_string();
+                let tick = v
+                    .get("tick")
+                    .and_then(|t| t.as_f64())
+                    .ok_or_else(|| "missing 'tick'".to_string())? as u64;
+                Ok((key, tick))
+            });
+            match parsed {
+                Ok((key, tick)) => {
+                    self.served.insert(key, tick);
+                    self.tick = self.tick.max(tick);
+                    lines += 1;
+                }
+                // A torn trailing touch only loses one LRU bump.
+                Err(e) if Some(lineno) == last => {
+                    eprintln!(
+                        "warning: {path:?} line {}: dropping torn trailing line ({e})",
+                        lineno + 1
+                    );
+                    torn = true;
+                }
+                Err(e) => return Err(anyhow!("{path:?} line {}: {e}", lineno + 1)),
+            }
+        }
+        // Compact a sidecar that has grown past ~2 lines per live key,
+        // or whose tail is torn (a future append would concatenate onto
+        // the partial line). Never in read-only opens.
+        if compact && (torn || lines > 2 * self.served.len().max(1)) {
+            self.rewrite_served()?;
+        }
+        Ok(())
+    }
+
+    fn write_meta(&self) -> anyhow::Result<()> {
+        let path = self.shards_dir.join(META_FILE);
+        let v = crate::util::Json::obj(vec![
+            ("v", crate::util::Json::num(LAYOUT_VERSION as f64)),
+            ("n_shards", crate::util::Json::num(self.n_shards as f64)),
+        ]);
+        write_atomic(&path, &v.to_string())
+    }
+
+    fn rewrite_shard(&self, shard: usize) -> anyhow::Result<()> {
+        let path = self.shards_dir.join(shard_file(shard));
+        let mut text = String::new();
+        for r in &self.shards[shard] {
+            text.push_str(&r.to_json().to_string());
+            text.push('\n');
+        }
+        write_atomic(&path, &text)
+    }
+
+    fn rewrite_all_shards(&self) -> anyhow::Result<()> {
+        for i in 0..self.n_shards {
+            self.rewrite_shard(i)?;
+        }
+        Ok(())
+    }
+
+    fn rewrite_served(&mut self) -> anyhow::Result<()> {
+        let path = self.shards_dir.join(SERVED_FILE);
+        let mut entries: Vec<(&String, &u64)> = self.served.iter().collect();
+        entries.sort_by_key(|(_, tick)| **tick);
+        let mut text = String::new();
+        for (key, tick) in entries {
+            text.push_str(
+                &crate::util::Json::obj(vec![
+                    ("key", crate::util::Json::str(key.clone())),
+                    ("tick", crate::util::Json::num(*tick as f64)),
+                ])
+                .to_string(),
+            );
+            text.push('\n');
+        }
+        self.served_appends = 0;
+        write_atomic(&path, &text)
+    }
+}
+
+fn shard_file(i: usize) -> String {
+    format!("shard_{i:03}.jsonl")
+}
+
+/// Parse `meta.json`: validate the layout version, return the shard
+/// count (shared by [`ShardedStore::open`] and
+/// [`ShardedStore::open_existing`]).
+fn read_meta(meta_path: &Path) -> anyhow::Result<usize> {
+    let text =
+        std::fs::read_to_string(meta_path).with_context(|| format!("read {meta_path:?}"))?;
+    let v = crate::util::Json::parse(&text).map_err(|e| anyhow!("{meta_path:?}: {e}"))?;
+    let layout = v.get("v").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+    anyhow::ensure!(
+        layout == LAYOUT_VERSION,
+        "unsupported shard layout version {layout} (this build reads v{LAYOUT_VERSION})"
+    );
+    Ok(v.get("n_shards")
+        .and_then(|x| x.as_f64())
+        .filter(|&n| n >= 1.0)
+        .ok_or_else(|| anyhow!("{meta_path:?}: missing 'n_shards'"))? as usize)
+}
+
+/// Load every record from `shard_000..shard_{n-1}` under `shards_dir`;
+/// also returns the indices of shard files whose tail was torn.
+///
+/// A malformed FINAL line is dropped with a warning rather than failing
+/// the open: a daemon killed mid-append can tear at most the last line
+/// (see [`super::append_jsonl`]), and a torn tail must not leave the
+/// store unbootable. Corruption anywhere else is still a hard error.
+fn load_shard_files(
+    shards_dir: &Path,
+    n_shards: usize,
+) -> anyhow::Result<(Vec<TuningRecord>, Vec<usize>)> {
+    let mut loaded: Vec<TuningRecord> = Vec::new();
+    let mut torn: Vec<usize> = Vec::new();
+    for i in 0..n_shards {
+        let path = shards_dir.join(shard_file(i));
+        if !path.exists() {
+            continue;
+        }
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("read shard {path:?}"))?;
+        let lines: Vec<&str> = text.lines().collect();
+        let last = lines.iter().rposition(|l| !l.trim().is_empty());
+        for (lineno, line) in lines.iter().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match crate::util::Json::parse(line).and_then(|v| TuningRecord::from_json(&v)) {
+                Ok(rec) => loaded.push(rec),
+                Err(e) if Some(lineno) == last => {
+                    eprintln!(
+                        "warning: {path:?} line {}: dropping torn trailing line ({e})",
+                        lineno + 1
+                    );
+                    torn.push(i);
+                }
+                Err(e) => return Err(anyhow!("{path:?} line {}: {e}", lineno + 1)),
+            }
+        }
+    }
+    Ok((loaded, torn))
+}
+
+fn write_atomic(path: &Path, text: &str) -> anyhow::Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, text).with_context(|| format!("write {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("replace {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+    use crate::workload::suites;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ecokernel_sharded_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn quick_cfg(seed: u64, gpu: GpuArch) -> SearchConfig {
+        SearchConfig {
+            gpu,
+            population: 24,
+            m_latency_keep: 6,
+            rounds: 3,
+            patience: 0,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    fn record_for(w: Workload, seed: u64, gpu: GpuArch) -> (TuningRecord, SearchConfig) {
+        let cfg = quick_cfg(seed, gpu);
+        let out = crate::search::run_search(w, &cfg);
+        (TuningRecord::from_outcome(&out, &cfg), cfg)
+    }
+
+    #[test]
+    fn append_get_and_reopen_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let (rec1, cfg1) = record_for(suites::MM1, 1, GpuArch::A100);
+        let (rec2, cfg2) = record_for(suites::MV3, 2, GpuArch::A100);
+        {
+            let mut store = ShardedStore::open(&dir, 4).unwrap();
+            store.append(rec1.clone()).unwrap();
+            store.append(rec2.clone()).unwrap();
+            assert_eq!(store.len(), 2);
+        }
+        let store = ShardedStore::open(&dir, 4).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.get(suites::MM1, &cfg1), Some(&rec1));
+        assert_eq!(store.get(suites::MV3, &cfg2), Some(&rec2));
+        assert_eq!(store.get(suites::MM2, &cfg1), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_with_different_shard_count_rebalances() {
+        let dir = tmp_dir("rebalance");
+        let mut recs = Vec::new();
+        {
+            let mut store = ShardedStore::open(&dir, 2).unwrap();
+            for (w, seed) in [(suites::MM1, 3), (suites::MM3, 4), (suites::MV3, 5)] {
+                let (rec, cfg) = record_for(w, seed, GpuArch::A100);
+                store.append(rec.clone()).unwrap();
+                recs.push((w, rec, cfg));
+            }
+        }
+        let store = ShardedStore::open(&dir, 5).unwrap();
+        assert_eq!(store.n_shards(), 5);
+        assert_eq!(store.len(), 3);
+        for (w, rec, cfg) in &recs {
+            assert_eq!(store.get(*w, cfg), Some(rec), "{} survives rebalance", rec.workload_id);
+        }
+        // The new layout is durable: meta records 5 shards and a fresh
+        // open at the same count does not rewrite anything.
+        drop(store);
+        let store = ShardedStore::open(&dir, 5).unwrap();
+        assert_eq!(store.len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_single_file_store_is_imported() {
+        let dir = tmp_dir("legacy");
+        let (rec, cfg) = record_for(suites::MM1, 6, GpuArch::A100);
+        {
+            let mut legacy = TuningStore::open(&dir).unwrap();
+            legacy.append(rec.clone()).unwrap();
+        }
+        let store = ShardedStore::open(&dir, 3).unwrap();
+        assert_eq!(store.get(suites::MM1, &cfg), Some(&rec));
+        // The legacy file is archived so evicted records can never
+        // resurrect from it, and a second open cannot re-import.
+        assert!(!dir.join(crate::store::STORE_FILE).exists());
+        assert!(dir.join(format!("{}.imported", crate::store::STORE_FILE)).exists());
+        drop(store);
+        let store = ShardedStore::open(&dir, 3).unwrap();
+        assert_eq!(store.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn per_gpu_quota_evicts_least_recently_served() {
+        let dir = tmp_dir("quota");
+        let mut store = ShardedStore::open(&dir, 4).unwrap();
+        let (rec_a, cfg_a) = record_for(suites::MM1, 7, GpuArch::A100);
+        let (rec_b, cfg_b) = record_for(suites::MV3, 8, GpuArch::A100);
+        let (rec_c, cfg_c) = record_for(suites::CONV2, 9, GpuArch::A100);
+        store.append(rec_a.clone()).unwrap();
+        store.append(rec_b.clone()).unwrap();
+        // Serve A so B becomes the least-recently-served key.
+        store.mark_served(&record_key(&rec_a)).unwrap();
+        store.append(rec_c.clone()).unwrap();
+
+        let evicted = store.enforce_limits(2, 0).unwrap();
+        assert_eq!(evicted, 1);
+        assert_eq!(store.len(), 2);
+        assert!(store.get(suites::MV3, &cfg_b).is_none(), "LRU victim evicted");
+        assert!(store.get(suites::MM1, &cfg_a).is_some(), "recently served key retained");
+        assert!(store.get(suites::CONV2, &cfg_c).is_some(), "fresh key retained");
+
+        // Eviction is durable and under quota no further eviction runs.
+        drop(store);
+        let mut store = ShardedStore::open(&dir, 4).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.enforce_limits(2, 0).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quota_is_per_gpu_and_global_cap_is_global() {
+        let dir = tmp_dir("pergpu");
+        let mut store = ShardedStore::open(&dir, 2).unwrap();
+        let (rec_a100, cfg_a100) = record_for(suites::MM1, 10, GpuArch::A100);
+        let (rec_v100, cfg_v100) = record_for(suites::MM1, 11, GpuArch::V100);
+        store.append(rec_a100).unwrap();
+        store.append(rec_v100).unwrap();
+        // One record per GPU: a per-GPU quota of 1 evicts nothing.
+        assert_eq!(store.enforce_limits(1, 0).unwrap(), 0);
+        assert!(store.get(suites::MM1, &cfg_a100).is_some());
+        assert!(store.get(suites::MM1, &cfg_v100).is_some());
+        // A global cap of 1 evicts the older key even across GPUs.
+        assert_eq!(store.enforce_limits(0, 1).unwrap(), 1);
+        assert_eq!(store.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_trailing_line_is_dropped_and_repaired_on_open() {
+        let dir = tmp_dir("torn");
+        let (rec, cfg) = record_for(suites::MM1, 12, GpuArch::A100);
+        let shard_path;
+        {
+            let mut store = ShardedStore::open(&dir, 1).unwrap();
+            store.append(rec.clone()).unwrap();
+            shard_path = dir.join(SHARDS_DIR).join(shard_file(0));
+        }
+        // Simulate a crash mid-append: an unterminated partial line.
+        let mut text = std::fs::read_to_string(&shard_path).unwrap();
+        text.push_str(r#"{"v":1,"workload_id":"mm_torn"#);
+        std::fs::write(&shard_path, &text).unwrap();
+
+        let mut store = ShardedStore::open(&dir, 1).unwrap();
+        assert_eq!(store.len(), 1, "torn tail dropped, intact record kept");
+        assert_eq!(store.get(suites::MM1, &cfg), Some(&rec));
+        // The open repaired the file: appending again and reopening
+        // must not produce a corrupt middle line.
+        let (rec2, cfg2) = record_for(suites::MV3, 13, GpuArch::A100);
+        store.append(rec2.clone()).unwrap();
+        drop(store);
+        let store = ShardedStore::open(&dir, 1).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.get(suites::MV3, &cfg2), Some(&rec2));
+
+        // Corruption in the MIDDLE of a shard is still a hard error.
+        let mut lines: Vec<String> =
+            std::fs::read_to_string(&shard_path).unwrap().lines().map(String::from).collect();
+        lines[0] = "{broken".into();
+        std::fs::write(&shard_path, format!("{}\n", lines.join("\n"))).unwrap();
+        assert!(ShardedStore::open(&dir, 1).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shard_routing_is_stable_and_in_range() {
+        let dir = tmp_dir("routing");
+        let store = ShardedStore::open(&dir, 8).unwrap();
+        let key = serve_key("mm_b1_m512_n512_k512", "a100", "energy_aware", "fp");
+        let shard = store.shard_of(&key);
+        assert!(shard < 8);
+        for _ in 0..10 {
+            assert_eq!(store.shard_of(&key), shard, "routing must be deterministic");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

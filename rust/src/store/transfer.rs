@@ -18,6 +18,7 @@
 
 use super::TuningStore;
 use crate::config::SearchConfig;
+use crate::costmodel::CostModelSnapshot;
 use crate::features::{featurize, FeatureVector};
 use crate::schedule::space::ScheduleSpace;
 use crate::schedule::tiling::snap;
@@ -54,6 +55,10 @@ pub struct WarmStart {
     pub k_hint: Option<f64>,
     /// How many neighbor records contributed.
     pub n_neighbors: usize,
+    /// The nearest neighbor's persisted cost model (energy scale
+    /// pre-adjusted by the MAC ratio): installing it lets the warm
+    /// search skip the first fit entirely.
+    pub model: Option<CostModelSnapshot>,
 }
 
 /// Build a warm start for `workload` from the store, or `None` when no
@@ -111,7 +116,16 @@ pub fn build(store: &TuningStore, workload: Workload, cfg: &SearchConfig) -> Opt
         return None;
     }
     let k_hint = neighbors[0].0.final_k.map(|k| k.clamp(K_HINT_FLOOR, K_HINT_CEIL));
-    Some(WarmStart { seed_schedules, seed_samples, k_hint, n_neighbors: neighbors.len() })
+    // The nearest neighbor's persisted model transfers directly; its
+    // energy scale is rescaled by the same MAC ratio as the samples so
+    // round 0's calibration sees a sane starting point.
+    let model = neighbors[0].0.model.as_ref().map(|snap| {
+        let neighbor_macs = neighbors[0].0.workload.gemm_view().macs() as f64;
+        let mut snap = snap.clone();
+        snap.scale_j *= target_macs / neighbor_macs.max(1.0);
+        snap
+    });
+    Some(WarmStart { seed_schedules, seed_samples, k_hint, n_neighbors: neighbors.len(), model })
 }
 
 /// Map a schedule from another workload's space into `space`: snap each

@@ -71,13 +71,6 @@ impl Json {
         }
     }
 
-    /// Compact serialization.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -129,6 +122,16 @@ impl Json {
             return Err(format!("trailing data at byte {}", p.i));
         }
         Ok(v)
+    }
+}
+
+/// Compact serialization (`value.to_string()` via the blanket
+/// `ToString`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 
@@ -296,7 +299,7 @@ impl<'a> Parser<'a> {
         let start = self.i;
         while self
             .peek()
-            .map_or(false, |c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
         {
             self.i += 1;
         }

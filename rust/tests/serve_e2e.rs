@@ -1,0 +1,228 @@
+//! Integration: the kernel-serving daemon end to end — miss → warm
+//! guess + background search → exact hit with zero measurements,
+//! protocol error handling over a real socket, eviction under per-GPU
+//! quotas, and the served-vs-searched metrics (the ISSUE 2 acceptance
+//! criteria).
+#![cfg(unix)]
+
+use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
+use ecokernel::serve::{error_code, Daemon, DaemonConfig, DaemonHandle, ServeClient, ServeSource};
+use ecokernel::util::Json;
+use ecokernel::workload::suites;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(120);
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("ecokernel_serve_e2e_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A quick daemon: small searches, small pool, temp store + socket.
+fn spawn_daemon(tag: &str, tune: impl FnOnce(&mut SearchConfig)) -> (DaemonHandle, PathBuf) {
+    let dir = tmp_dir(tag);
+    let mut search = SearchConfig {
+        gpu: GpuArch::A100,
+        mode: SearchMode::EnergyAware,
+        population: 24,
+        m_latency_keep: 6,
+        rounds: 3,
+        patience: 0,
+        seed: 7,
+        ..Default::default()
+    };
+    search.serve.n_workers = 1;
+    search.serve.n_shards = 4;
+    tune(&mut search);
+    let handle = Daemon::spawn(
+        DaemonConfig {
+            socket_path: dir.join("ecokernel.sock"),
+            store_dir: dir.clone(),
+            search,
+        },
+        None,
+    )
+    .unwrap();
+    (handle, dir)
+}
+
+fn stop(handle: DaemonHandle, dir: &Path) {
+    let mut client = ServeClient::connect(&handle.socket_path).unwrap();
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// The acceptance e2e: two identical `get_kernel` requests — the first
+/// is a miss that triggers a background search, the second is served
+/// from the sharded store with 0 NVML measurements.
+#[test]
+fn miss_then_background_search_then_hit_with_zero_measurements() {
+    let (handle, dir) = spawn_daemon("hitmiss", |_| {});
+    let mut client = ServeClient::connect(&handle.socket_path).unwrap();
+
+    let first = client.get_kernel(suites::MM1, None, None).unwrap();
+    assert!(!first.hit, "a fresh store cannot hit");
+    assert!(first.enqueued, "first miss enqueues the real search");
+    assert_eq!(first.source, ServeSource::Fallback, "empty store has no neighbor to guess from");
+    assert!(first.queue_depth >= 1);
+
+    // Wait for the background search to be written back.
+    let drained = client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    assert_eq!(drained.n_searches_done, 1);
+    let paid_after_search = drained.measurements_paid;
+    assert!(paid_after_search > 0, "the background search pays real measurements");
+
+    let second = client.get_kernel(suites::MM1, None, None).unwrap();
+    assert!(second.hit, "identical request must now hit the store");
+    assert_eq!(second.source, ServeSource::Store);
+    assert!(!second.enqueued, "hits never re-search");
+    assert!(second.energy_j > 0.0 && second.latency_s > 0.0, "measured metrics served");
+
+    // The hit itself paid nothing: the daemon's measurement ledger is
+    // unchanged, and no new search ran.
+    let s = client.stats().unwrap();
+    assert_eq!(s.measurements_paid, paid_after_search, "a hit costs 0 NVML measurements");
+    assert_eq!(s.n_searches_done, 1);
+    assert_eq!(s.n_hits, 1);
+    assert_eq!(s.n_misses, 1);
+
+    // A neighboring shape misses but gets a warm guess from the cached
+    // MM1 record instead of the blind fallback.
+    let neighbor = client.get_kernel(suites::MM2, None, None).unwrap();
+    assert!(!neighbor.hit);
+    assert_eq!(neighbor.source, ServeSource::WarmGuess);
+    assert!(neighbor.energy_j > 0.0, "warm guesses carry MAC-rescaled estimates");
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+
+    stop(handle, &dir);
+}
+
+/// Duplicate in-flight requests coalesce into one background search.
+#[test]
+fn duplicate_misses_enqueue_only_one_search() {
+    let (handle, dir) = spawn_daemon("dup", |_| {});
+    let mut client = ServeClient::connect(&handle.socket_path).unwrap();
+
+    let a = client.get_kernel(suites::MV3, None, None).unwrap();
+    let b = client.get_kernel(suites::MV3, None, None).unwrap();
+    assert!(a.enqueued, "first miss enqueues");
+    assert!(!b.enqueued, "in-flight duplicate coalesces");
+    let s = client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    assert_eq!(s.n_enqueued, 1);
+    assert_eq!(s.n_searches_done, 1);
+    assert_eq!(s.n_misses, 2);
+
+    stop(handle, &dir);
+}
+
+/// Per-GPU quota: after overflow the least-recently-served key is
+/// evicted, while retained keys keep hitting.
+#[test]
+fn per_gpu_quota_evicts_lru_but_retained_keys_still_hit() {
+    // Each quick search stores 1 record per key; quota 2 on the A100.
+    let (handle, dir) = spawn_daemon("evict", |s| s.serve.per_gpu_quota = 2);
+    let mut client = ServeClient::connect(&handle.socket_path).unwrap();
+
+    // Fill: MM1 then MV3, each searched and written back.
+    client.get_kernel(suites::MM1, None, None).unwrap();
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    client.get_kernel(suites::MV3, None, None).unwrap();
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+
+    // Serve MM1 again: MV3 is now the least-recently-served key.
+    assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+
+    // CONV2 overflows the quota: its write-back evicts MV3.
+    client.get_kernel(suites::CONV2, None, None).unwrap();
+    let s = client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    assert!(s.n_evicted_records >= 1, "overflow evicted something");
+    assert_eq!(s.n_records, 2, "store holds exactly the quota");
+
+    // Retained keys are unaffected — both still exact hits...
+    assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit, "recently-served retained");
+    assert!(client.get_kernel(suites::CONV2, None, None).unwrap().hit, "fresh key retained");
+    // ...while the evicted key is a miss again.
+    let evicted = client.get_kernel(suites::MV3, None, None).unwrap();
+    assert!(!evicted.hit, "LRU victim was evicted");
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+
+    stop(handle, &dir);
+}
+
+/// Protocol errors over a real socket: malformed frames, version
+/// mismatch, unknown workloads — each maps to its error code and the
+/// connection survives.
+#[test]
+fn protocol_errors_over_the_socket() {
+    let (handle, dir) = spawn_daemon("proto", |_| {});
+    let mut client = ServeClient::connect(&handle.socket_path).unwrap();
+
+    let cases = [
+        ("{definitely not json", error_code::BAD_REQUEST),
+        (r#"{"v":99,"op":"stats","id":"x"}"#, error_code::VERSION_MISMATCH),
+        (r#"{"v":1,"op":"get_kernel","id":"x","workload":"MM99"}"#, error_code::UNKNOWN_WORKLOAD),
+        (r#"{"v":1,"op":"frobnicate","id":"x"}"#, error_code::BAD_REQUEST),
+    ];
+    for (line, expect) in cases {
+        let reply = client.roundtrip_raw(line).unwrap();
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(false), "{line}");
+        let code = v.get("error").and_then(|e| e.get("code")).and_then(|c| c.as_str());
+        assert_eq!(code, Some(expect), "{line}");
+    }
+    // The connection still serves valid requests afterwards.
+    assert!(client.stats().is_ok());
+
+    stop(handle, &dir);
+}
+
+/// Driver-level serving metrics: hit rate, reply-time percentiles on
+/// the simulated clock, and the served-vs-searched split.
+#[test]
+fn serving_metrics_separate_served_from_searched() {
+    let (handle, dir) = spawn_daemon("metrics", |_| {});
+    let mut client = ServeClient::connect(&handle.socket_path).unwrap();
+
+    // 1 miss + search, then 4 hits.
+    client.get_kernel(suites::MM1, None, None).unwrap();
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    for _ in 0..4 {
+        assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+    }
+    let s = client.stats().unwrap();
+    assert_eq!(s.n_requests, 5);
+    assert_eq!((s.n_hits, s.n_misses), (4, 1));
+    assert!((s.hit_rate - 0.8).abs() < 1e-9);
+    assert_eq!(s.n_searches_done, 1, "5 requests, 1 search: amortization in action");
+    assert_eq!(s.queue_depth, 0);
+    // Simulated reply times: hits dominate p50, the miss (neighbor
+    // scan) dominates p99.
+    assert!(s.p50_reply_s > 0.0);
+    assert!(s.p99_reply_s >= s.p50_reply_s);
+
+    stop(handle, &dir);
+}
+
+/// Per-request gpu/mode overrides are separate serve keys.
+#[test]
+fn gpu_and_mode_are_part_of_the_serve_key() {
+    let (handle, dir) = spawn_daemon("keys", |_| {});
+    let mut client = ServeClient::connect(&handle.socket_path).unwrap();
+
+    client.get_kernel(suites::MM1, None, None).unwrap();
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+
+    // Same workload on another GPU is its own key: a miss.
+    let other_gpu = client.get_kernel(suites::MM1, Some(GpuArch::V100), None).unwrap();
+    assert!(!other_gpu.hit);
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    assert!(client.get_kernel(suites::MM1, Some(GpuArch::V100), None).unwrap().hit);
+
+    stop(handle, &dir);
+}
