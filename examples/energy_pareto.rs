@@ -38,7 +38,10 @@ fn main() -> anyhow::Result<()> {
     let lats: Vec<f64> = evals.iter().map(|(_, e)| e.latency_s).collect();
     let pows: Vec<f64> = evals.iter().map(|(_, e)| e.avg_power_w).collect();
     let engs: Vec<f64> = evals.iter().map(|(_, e)| e.energy_j).collect();
-    println!("latency-power Pearson r = {:.3}  (paper Fig. 3: inverse)", stats::pearson(&lats, &pows));
+    println!(
+        "latency-power Pearson r = {:.3}  (paper Fig. 3: inverse)",
+        stats::pearson(&lats, &pows)
+    );
     println!(
         "latency-energy Pearson r = {:.3}  (positive, but NOT 1.0: energy is not just latency)\n",
         stats::pearson(&lats, &engs)

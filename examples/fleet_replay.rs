@@ -1,0 +1,189 @@
+//! Fleet replay: two serving daemons — one on `unix:`, one on `tcp:` —
+//! mounting ONE shared store, replaying a zipf-distributed workload
+//! stream split across them. Reports what the fleet machinery buys:
+//!
+//! * **fleet-wide hit rate** — a search either daemon runs serves both;
+//! * **duplicate searches avoided** — misses that coalesced into an
+//!   in-flight search (locally or via the in-store fleet claim)
+//!   instead of re-searching;
+//! * **shed/served ratio** — the daemons run deliberately saturated
+//!   (1 worker, 1 queue slot, tiny backlog), so admission control has
+//!   to choose: hot keys are kept and searched, cold tail keys shed.
+//!
+//! ```bash
+//! cargo run --release --example fleet_replay [-- N_REQUESTS [ZIPF_S]]
+//! ```
+
+#[cfg(unix)]
+use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
+#[cfg(unix)]
+use ecokernel::serve::{Daemon, DaemonConfig, ServeAddr, ServeClient, StatsReply};
+#[cfg(unix)]
+use ecokernel::util::Rng;
+#[cfg(unix)]
+use ecokernel::workload::suites;
+#[cfg(unix)]
+use std::time::Duration;
+
+#[cfg(not(unix))]
+fn main() {
+    eprintln!("fleet_replay needs a Unix socket runtime (unix-only)");
+}
+
+#[cfg(unix)]
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let n_requests: usize = args.next().map(|s| s.parse()).transpose()?.unwrap_or(60);
+    let zipf_s: f64 = args.next().map(|s| s.parse()).transpose()?.unwrap_or(1.1);
+
+    let dir = std::env::temp_dir().join(format!("ecokernel_fleet_replay_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+
+    // Quick-effort searches and a deliberately saturated daemon: one
+    // worker, one queue slot, a two-key backlog — admission has to
+    // pick favorites.
+    let mut search = SearchConfig {
+        gpu: GpuArch::A100,
+        mode: SearchMode::EnergyAware,
+        population: 24,
+        m_latency_keep: 6,
+        rounds: 3,
+        patience: 0,
+        seed: 42,
+        ..Default::default()
+    };
+    search.serve.n_workers = 1;
+    search.serve.queue_cap = 1;
+    search.serve.n_shards = 8;
+    search.fleet.backlog_cap = 2;
+    search.fleet.heat_half_life = 32.0;
+
+    let a = Daemon::spawn(
+        DaemonConfig {
+            addr: ServeAddr::Unix(dir.join("a.sock")),
+            store_dir: dir.clone(),
+            search: search.clone(),
+        },
+        None,
+    )?;
+    let b = Daemon::spawn(
+        DaemonConfig {
+            addr: ServeAddr::Tcp("127.0.0.1:0".to_string()),
+            store_dir: dir.clone(),
+            search,
+        },
+        None,
+    )?;
+    println!("daemon A on {}, daemon B on {}, one store: {dir:?}\n", a.addr, b.addr);
+    let mut ca = ServeClient::connect(&a.addr)?;
+    let mut cb = ServeClient::connect(&b.addr)?;
+
+    // Zipf over the Table-2 suite: rank r drawn with p ∝ r^-s.
+    let suite = suites::table2_suite();
+    let weights: Vec<f64> = (1..=suite.len()).map(|r| 1.0 / (r as f64).powf(zipf_s)).collect();
+    let total_w: f64 = weights.iter().sum();
+    let mut rng = Rng::seed_from_u64(7);
+    let mut pick = || {
+        let mut x = rng.gen_f64() * total_w;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    };
+
+    println!(
+        "replaying {n_requests} zipf(s={zipf_s}) requests over {} operators, \
+         alternating daemons ...\n",
+        suite.len()
+    );
+    let mut request_log: Vec<usize> = Vec::with_capacity(n_requests);
+    for req in 0..n_requests {
+        let i = pick();
+        request_log.push(i);
+        let (name, w) = suite[i];
+        let (daemon, client) = if req % 2 == 0 { ("A", &mut ca) } else { ("B", &mut cb) };
+        let reply = client.get_kernel(w, None, None)?;
+        println!(
+            "  #{req:<3} {daemon} {name:<6} -> {:4} [{}]{}",
+            if reply.hit { "hit" } else { "miss" },
+            reply.source.name(),
+            if reply.enqueued { " (search admitted)" } else { "" },
+        );
+    }
+
+    println!("\ndraining admitted searches on both daemons ...");
+    ca.wait_for_drain(Duration::from_secs(600))?;
+    cb.wait_for_drain(Duration::from_secs(600))?;
+
+    // Second pass of the same stream: shed keys get another chance,
+    // everything searched in pass 1 is a fleet-wide hit on EITHER
+    // daemon regardless of who searched it.
+    let mut second_hits = 0usize;
+    for (req, &i) in request_log.iter().enumerate() {
+        let (_, w) = suite[i];
+        let client = if req % 2 == 0 { &mut cb } else { &mut ca }; // swap daemons
+        if client.get_kernel(w, None, None)?.hit {
+            second_hits += 1;
+        }
+    }
+    ca.wait_for_drain(Duration::from_secs(600))?;
+    cb.wait_for_drain(Duration::from_secs(600))?;
+
+    let sa = ca.stats()?;
+    let sb = cb.stats()?;
+    let sum = |f: fn(&StatsReply) -> usize| f(&sa) + f(&sb);
+    let requests = sum(|s| s.n_requests);
+    let hits = sum(|s| s.n_hits);
+    let misses = sum(|s| s.n_misses);
+    let searches = sum(|s| s.n_searches_done);
+    let shed = sum(|s| s.n_shed);
+    let fleet_coalesced = sum(|s| s.n_fleet_coalesced);
+    // A miss either searched, was shed, or coalesced into an in-flight
+    // search (same-daemon pending set or cross-daemon claim).
+    let dup_avoided = misses.saturating_sub(searches + shed);
+
+    println!("\n=== fleet of 2 daemons, one store ===");
+    println!(
+        "requests        : {requests} total ({} via A, {} via B)",
+        sa.n_requests, sb.n_requests
+    );
+    println!(
+        "fleet hit rate  : {:.1}% ({hits}/{requests}); swapped-daemon 2nd pass: {}/{}",
+        100.0 * hits as f64 / requests.max(1) as f64,
+        second_hits,
+        request_log.len()
+    );
+    println!(
+        "searches run    : {searches} fleet-wide for {} distinct-key misses",
+        misses
+    );
+    println!(
+        "dup avoided     : {dup_avoided} duplicate searches coalesced \
+         ({fleet_coalesced} across daemons)"
+    );
+    println!(
+        "shed/served     : {shed}/{requests} = {:.2} (cold tail dropped under saturation)",
+        shed as f64 / requests.max(1) as f64
+    );
+    println!(
+        "store           : {} records in {} shards; shard sizes {:?}",
+        sa.n_records, sa.n_shards, sa.shard_records
+    );
+    println!("key heat        : {:?} (log2 buckets, coldest first)", sa.heat_histogram);
+    println!(
+        "measurements    : {} paid fleet-wide vs ~{} if every miss had searched",
+        sum(|s| s.measurements_paid),
+        (sum(|s| s.measurements_paid) / searches.max(1)) * (misses.max(1))
+    );
+
+    ca.shutdown()?;
+    cb.shutdown()?;
+    a.join()?;
+    b.join()?;
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

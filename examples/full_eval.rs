@@ -31,12 +31,27 @@ fn main() -> anyhow::Result<()> {
     let evals: Vec<(&str, Workload, &str)> = vec![
         ("MM", suites::MM1, "mm_b1_m512_n512_k512"),
         ("MV", suites::MV_4090, "mv_b1_n4096_k1024"),
-        ("CONV", Workload::Conv2d { batch: 4, h: 56, w: 56, cin: 64, cout: 64, ksize: 1, stride: 1, pad: 0 },
-         "conv_b4_h56_w56_ci64_co64_k1_s1_p0"),
+        (
+            "CONV",
+            Workload::Conv2d {
+                batch: 4,
+                h: 56,
+                w: 56,
+                cin: 64,
+                cout: 64,
+                ksize: 1,
+                stride: 1,
+                pad: 0,
+            },
+            "conv_b4_h56_w56_ci64_co64_k1_s1_p0",
+        ),
     ];
 
     // ---- Phase 1: dual-mode search on every workload (the L3 system) --
-    println!("=== phase 1: search (Ansor baseline vs energy-aware), {} effort ===", if paper { "paper" } else { "quick" });
+    println!(
+        "=== phase 1: search (Ansor baseline vs energy-aware), {} effort ===",
+        if paper { "paper" } else { "quick" }
+    );
     let log = EventLog::to_file(std::path::Path::new("full_eval_events.jsonl"))?;
     let driver = Driver::new(DriverConfig::default()).with_log(log);
     let mut jobs = Vec::new();

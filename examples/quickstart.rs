@@ -45,7 +45,10 @@ fn main() -> anyhow::Result<()> {
 
     // 3. Execute through PJRT and verify against a Rust-side oracle.
     let kernel = reg.load(meta)?;
-    println!("compiled in {:.2}s; executing 512x512x512 matmul ...", kernel.compile_time.as_secs_f64());
+    println!(
+        "compiled in {:.2}s; executing 512x512x512 matmul ...",
+        kernel.compile_time.as_secs_f64()
+    );
     let mut rng = Rng::seed_from_u64(7);
     let x: Vec<f32> = (0..512 * 512).map(|_| rng.normal() as f32 * 0.05).collect();
     let w: Vec<f32> = (0..512 * 512).map(|_| rng.normal() as f32 * 0.05).collect();

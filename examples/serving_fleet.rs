@@ -11,7 +11,7 @@
 #[cfg(unix)]
 use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
 #[cfg(unix)]
-use ecokernel::serve::{Daemon, DaemonConfig, ServeClient};
+use ecokernel::serve::{Daemon, DaemonConfig, ServeAddr, ServeClient};
 #[cfg(unix)]
 use ecokernel::util::Rng;
 #[cfg(unix)]
@@ -51,13 +51,13 @@ fn main() -> anyhow::Result<()> {
 
     let handle = Daemon::spawn(
         DaemonConfig {
-            socket_path: dir.join("ecokernel.sock"),
+            addr: ServeAddr::Unix(dir.join("ecokernel.sock")),
             store_dir: dir.clone(),
             search,
         },
         None,
     )?;
-    let mut client = ServeClient::connect(&handle.socket_path)?;
+    let mut client = ServeClient::connect(&handle.addr)?;
 
     // Zipf over the Table-2 suite: rank r drawn with p ∝ r^-s.
     let suite = suites::table2_suite();

@@ -86,6 +86,8 @@ pub struct SearchConfig {
     pub store: StoreConfig,
     /// Kernel-serving daemon settings (`ecokernel serve`).
     pub serve: ServeConfig,
+    /// Fleet-serving settings (multi-daemon shared store).
+    pub fleet: FleetConfig,
 }
 
 impl Default for SearchConfig {
@@ -109,6 +111,7 @@ impl Default for SearchConfig {
             cost_model: CostModelConfig::default(),
             store: StoreConfig::default(),
             serve: ServeConfig::default(),
+            fleet: FleetConfig::default(),
         }
     }
 }
@@ -147,6 +150,7 @@ impl SearchConfig {
         self.cost_model.validate()?;
         self.store.validate()?;
         self.serve.validate()?;
+        self.fleet.validate()?;
         Ok(())
     }
 
@@ -200,6 +204,11 @@ impl SearchConfig {
             "serve.max_records",
             "serve.n_workers",
             "serve.queue_cap",
+            "fleet.coordinate",
+            "fleet.lease_ttl_ms",
+            "fleet.backlog_cap",
+            "fleet.heat_half_life",
+            "fleet.heat_keys_cap",
         ];
         for key in doc.entries.keys() {
             if !known.contains(&key.as_str()) {
@@ -266,6 +275,13 @@ impl SearchConfig {
                 n_workers: doc.usize_or("serve.n_workers", d.serve.n_workers),
                 queue_cap: doc.usize_or("serve.queue_cap", d.serve.queue_cap),
             },
+            fleet: FleetConfig {
+                coordinate: doc.bool_or("fleet.coordinate", d.fleet.coordinate),
+                lease_ttl_ms: doc.u64_or("fleet.lease_ttl_ms", d.fleet.lease_ttl_ms),
+                backlog_cap: doc.usize_or("fleet.backlog_cap", d.fleet.backlog_cap),
+                heat_half_life: doc.f64_or("fleet.heat_half_life", d.fleet.heat_half_life),
+                heat_keys_cap: doc.usize_or("fleet.heat_keys_cap", d.fleet.heat_keys_cap),
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -330,6 +346,15 @@ impl SearchConfig {
             self.serve.max_records,
             self.serve.n_workers,
             self.serve.queue_cap
+        ));
+        out.push_str(&format!(
+            "\n[fleet]\ncoordinate = {}\nlease_ttl_ms = {}\nbacklog_cap = {}\n\
+             heat_half_life = {}\nheat_keys_cap = {}\n",
+            self.fleet.coordinate,
+            self.fleet.lease_ttl_ms,
+            self.fleet.backlog_cap,
+            fmt_f(self.fleet.heat_half_life),
+            self.fleet.heat_keys_cap
         ));
         out
     }
@@ -531,6 +556,64 @@ impl ServeConfig {
     }
 }
 
+/// Fleet-serving settings (`[fleet]`, see [`crate::fleet`]): how N
+/// daemons sharing one store coordinate. Like `[serve]`, none of these
+/// knobs shape a search trajectory, so they stay out of the store's
+/// config fingerprint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Coordinate with other daemons mounting this store: fleet-mode
+    /// storage (per-shard leases, incremental refresh) and in-store
+    /// in-flight claims. Turn off for a known-single-daemon deployment
+    /// to keep the purely in-memory + O_APPEND request path (no lease
+    /// files, no claim I/O on misses).
+    pub coordinate: bool,
+    /// TTL (ms) of shard leases and in-flight search claims. The
+    /// daemon heartbeats its claims at ~TTL/3; a crashed daemon's
+    /// leases expire after one TTL and are reclaimed by the fleet.
+    pub lease_ttl_ms: u64,
+    /// Admission backlog in front of the search queue: how many keys
+    /// wait, heat-ordered, when the queue is saturated. Overflow sheds
+    /// the coldest key.
+    pub backlog_cap: usize,
+    /// Half-life of the per-key request-rate sketch, in requests: a
+    /// key untouched for this many requests loses half its heat.
+    pub heat_half_life: f64,
+    /// Max keys tracked by the heat sketch (prunes to the hottest
+    /// half when exceeded).
+    pub heat_keys_cap: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            coordinate: true,
+            lease_ttl_ms: 10_000,
+            backlog_cap: 32,
+            heat_half_life: 256.0,
+            heat_keys_cap: 4096,
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.lease_ttl_ms < 50 {
+            return Err("fleet.lease_ttl_ms must be >= 50".into());
+        }
+        if self.backlog_cap == 0 {
+            return Err("fleet.backlog_cap must be >= 1".into());
+        }
+        if self.heat_half_life <= 0.0 {
+            return Err("fleet.heat_half_life must be > 0".into());
+        }
+        if self.heat_keys_cap < 16 {
+            return Err("fleet.heat_keys_cap must be >= 16".into());
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -642,6 +725,39 @@ mod tests {
             assert!(SearchConfig::from_toml_str(bad_toml).is_err(), "{bad_toml}");
         }
         assert!(SearchConfig::from_toml_str("[serve]\ntypo = 1\n").is_err());
+    }
+
+    #[test]
+    fn fleet_config_roundtrips_and_validates() {
+        let mut c = SearchConfig::default();
+        c.fleet.lease_ttl_ms = 2_500;
+        c.fleet.backlog_cap = 8;
+        c.fleet.heat_half_life = 64.0;
+        c.fleet.heat_keys_cap = 512;
+        let back = SearchConfig::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(back.fleet, c.fleet);
+
+        let parsed = SearchConfig::from_toml_str(
+            "[fleet]\ncoordinate = false\nlease_ttl_ms = 500\nbacklog_cap = 4\n",
+        )
+        .unwrap();
+        assert!(!parsed.fleet.coordinate);
+        assert_eq!(parsed.fleet.lease_ttl_ms, 500);
+        assert_eq!(parsed.fleet.backlog_cap, 4);
+        assert!(
+            (parsed.fleet.heat_half_life - FleetConfig::default().heat_half_life).abs() < 1e-12,
+            "default kept"
+        );
+
+        for bad_toml in [
+            "[fleet]\nlease_ttl_ms = 10\n",
+            "[fleet]\nbacklog_cap = 0\n",
+            "[fleet]\nheat_half_life = 0.0\n",
+            "[fleet]\nheat_keys_cap = 2\n",
+        ] {
+            assert!(SearchConfig::from_toml_str(bad_toml).is_err(), "{bad_toml}");
+        }
+        assert!(SearchConfig::from_toml_str("[fleet]\ntypo = 1\n").is_err());
     }
 
     #[test]

@@ -216,8 +216,9 @@ impl WorkerPool {
         for h in self.handles.drain(..) {
             h.join().expect("worker panicked");
         }
-        let mut results =
-            Arc::try_unwrap(self.results).map(|m| m.into_inner().expect("results")).unwrap_or_default();
+        let mut results = Arc::try_unwrap(self.results)
+            .map(|m| m.into_inner().expect("results"))
+            .unwrap_or_default();
         results.sort_by_key(|r| r.index);
         results
     }

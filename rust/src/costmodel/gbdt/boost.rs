@@ -303,7 +303,14 @@ mod tests {
     fn flat_predict_matches_reference() {
         let (xs, ys) = synth(400, |a, b| a * 3.0 - b * b);
         let w = vec![1.0; 400];
-        let m = Gbdt::fit(&xs, &ys, &w, &SquaredError, &BoostParams::default(), &mut Rng::seed_from_u64(3));
+        let m = Gbdt::fit(
+            &xs,
+            &ys,
+            &w,
+            &SquaredError,
+            &BoostParams::default(),
+            &mut Rng::seed_from_u64(3),
+        );
         for x in xs.iter().take(100) {
             let fast = m.predict(x);
             let slow = m.predict_reference(x);

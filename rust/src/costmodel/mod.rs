@@ -181,7 +181,8 @@ impl EnergyCostModel {
                 crate::features::FEATURE_DIM
             ));
         }
-        self.model = Some(Gbdt::from_parts(snap.base_score, snap.learning_rate, snap.trees.clone()));
+        self.model =
+            Some(Gbdt::from_parts(snap.base_score, snap.learning_rate, snap.trees.clone()));
         self.scale_j = snap.scale_j;
         Ok(())
     }

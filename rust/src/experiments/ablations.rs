@@ -149,18 +149,73 @@ pub fn ablations(effort: Effort) -> String {
     let a3 = ablation_latency_first(effort);
 
     let mut t = TextTable::new(&["ablation", "arm", "metric", "value"]);
-    t.row(vec!["A1 Eq.1 loss".into(), "weighted (paper)".into(), "low-tercile rel err".into(), f(a1.weighted_low_tercile_rel_err, 4)]);
-    t.row(vec!["A1 Eq.1 loss".into(), "flat".into(), "low-tercile rel err".into(), f(a1.flat_low_tercile_rel_err, 4)]);
-    t.row(vec!["A1 Eq.1 loss".into(), "weighted (paper)".into(), "spearman rho".into(), f(a1.weighted_rho, 3)]);
+    t.row(vec![
+        "A1 Eq.1 loss".into(),
+        "weighted (paper)".into(),
+        "low-tercile rel err".into(),
+        f(a1.weighted_low_tercile_rel_err, 4),
+    ]);
+    t.row(vec![
+        "A1 Eq.1 loss".into(),
+        "flat".into(),
+        "low-tercile rel err".into(),
+        f(a1.flat_low_tercile_rel_err, 4),
+    ]);
+    t.row(vec![
+        "A1 Eq.1 loss".into(),
+        "weighted (paper)".into(),
+        "spearman rho".into(),
+        f(a1.weighted_rho, 3),
+    ]);
     t.row(vec!["A1 Eq.1 loss".into(), "flat".into(), "spearman rho".into(), f(a1.flat_rho, 3)]);
-    t.row(vec!["A2 dynamic k".into(), "dynamic (paper)".into(), "measurements".into(), a2.dynamic_measurements.to_string()]);
-    t.row(vec!["A2 dynamic k".into(), "fixed k=1".into(), "measurements".into(), a2.fixed_measurements.to_string()]);
-    t.row(vec!["A2 dynamic k".into(), "dynamic (paper)".into(), "best energy (mJ)".into(), f(a2.dynamic_energy_mj, 3)]);
-    t.row(vec!["A2 dynamic k".into(), "fixed k=1".into(), "best energy (mJ)".into(), f(a2.fixed_energy_mj, 3)]);
-    t.row(vec!["A2 dynamic k".into(), "dynamic (paper)".into(), "search time (s)".into(), f(a2.dynamic_time_s, 1)]);
-    t.row(vec!["A2 dynamic k".into(), "fixed k=1".into(), "search time (s)".into(), f(a2.fixed_time_s, 1)]);
-    t.row(vec!["A3 latency-first".into(), "band-select (paper)".into(), "latency (ms) / energy (mJ)".into(), format!("{} / {}", f(a3.paper_latency_ms, 4), f(a3.paper_energy_mj, 3))]);
-    t.row(vec!["A3 latency-first".into(), "pure-energy argmin".into(), "latency (ms) / energy (mJ)".into(), format!("{} / {}", f(a3.pure_energy_latency_ms, 4), f(a3.pure_energy_energy_mj, 3))]);
+    t.row(vec![
+        "A2 dynamic k".into(),
+        "dynamic (paper)".into(),
+        "measurements".into(),
+        a2.dynamic_measurements.to_string(),
+    ]);
+    t.row(vec![
+        "A2 dynamic k".into(),
+        "fixed k=1".into(),
+        "measurements".into(),
+        a2.fixed_measurements.to_string(),
+    ]);
+    t.row(vec![
+        "A2 dynamic k".into(),
+        "dynamic (paper)".into(),
+        "best energy (mJ)".into(),
+        f(a2.dynamic_energy_mj, 3),
+    ]);
+    t.row(vec![
+        "A2 dynamic k".into(),
+        "fixed k=1".into(),
+        "best energy (mJ)".into(),
+        f(a2.fixed_energy_mj, 3),
+    ]);
+    t.row(vec![
+        "A2 dynamic k".into(),
+        "dynamic (paper)".into(),
+        "search time (s)".into(),
+        f(a2.dynamic_time_s, 1),
+    ]);
+    t.row(vec![
+        "A2 dynamic k".into(),
+        "fixed k=1".into(),
+        "search time (s)".into(),
+        f(a2.fixed_time_s, 1),
+    ]);
+    t.row(vec![
+        "A3 latency-first".into(),
+        "band-select (paper)".into(),
+        "latency (ms) / energy (mJ)".into(),
+        format!("{} / {}", f(a3.paper_latency_ms, 4), f(a3.paper_energy_mj, 3)),
+    ]);
+    t.row(vec![
+        "A3 latency-first".into(),
+        "pure-energy argmin".into(),
+        "latency (ms) / energy (mJ)".into(),
+        format!("{} / {}", f(a3.pure_energy_latency_ms, 4), f(a3.pure_energy_energy_mj, 3)),
+    ]);
     format!("Ablations (design choices; DESIGN.md §9)\n{}", t.render())
 }
 

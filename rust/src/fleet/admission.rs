@@ -1,0 +1,313 @@
+//! Admission control for the background-search queue: when it
+//! saturates, shed cold keys and keep hot ones.
+//!
+//! The PR-2 daemon load-shed with a FIFO `try_submit`: whoever missed
+//! while the queue was full was dropped, regardless of how hot their
+//! key was. Under zipf traffic that is exactly backwards — the dropped
+//! key is as likely to be the head of the distribution as its tail.
+//! This module replaces it with:
+//!
+//! * [`HeatSketch`] — a decayed per-key request-rate estimate on a
+//!   request-count clock (every request is one tick; a key's heat
+//!   halves every `half_life` requests). Deterministic, O(1) per
+//!   touch, bounded memory (coldest half pruned past `cap` keys).
+//! * [`Backlog`] — a small buffer in front of the worker queue. A miss
+//!   that cannot be submitted is backlogged; when the backlog is full,
+//!   the **coldest** key (new arrival included) is shed. Finished
+//!   searches pump the **hottest** backlogged key into the freed queue
+//!   slot.
+//!
+//! The effect: a saturated daemon spends its search budget on the keys
+//! the traffic actually repeats, and the shed ratio concentrates on
+//! one-off cold keys (see `examples/fleet_replay.rs`).
+
+use std::collections::HashMap;
+
+/// Number of buckets in the heat histogram (powers of two from 0.5).
+pub const HEAT_BUCKETS: usize = 8;
+
+/// Decayed per-key request-rate sketch on a request-count clock.
+#[derive(Debug)]
+pub struct HeatSketch {
+    half_life: f64,
+    cap: usize,
+    t: u64,
+    /// key -> (heat at `last`, last tick touched).
+    heat: HashMap<String, (f64, u64)>,
+}
+
+impl HeatSketch {
+    /// `half_life`: requests after which an untouched key's heat
+    /// halves. `cap`: max tracked keys (prunes to the hottest half).
+    pub fn new(half_life: f64, cap: usize) -> HeatSketch {
+        HeatSketch { half_life: half_life.max(1.0), cap: cap.max(2), t: 0, heat: HashMap::new() }
+    }
+
+    fn decayed(&self, rate: f64, last: u64, now: u64) -> f64 {
+        if now <= last {
+            return rate;
+        }
+        rate * 0.5_f64.powf((now - last) as f64 / self.half_life)
+    }
+
+    /// Advance the clock one request and credit `key`. Returns the
+    /// key's updated heat.
+    pub fn touch(&mut self, key: &str) -> f64 {
+        self.t += 1;
+        let (now, half_life) = (self.t, self.half_life);
+        let entry = self.heat.entry(key.to_string()).or_insert((0.0, now));
+        let decayed = if now > entry.1 {
+            entry.0 * 0.5_f64.powf((now - entry.1) as f64 / half_life)
+        } else {
+            entry.0
+        };
+        *entry = (decayed + 1.0, now);
+        let updated = entry.0;
+        if self.heat.len() > self.cap {
+            self.prune();
+        }
+        updated
+    }
+
+    /// Current heat of a key (0.0 = never seen / fully decayed away).
+    pub fn heat(&self, key: &str) -> f64 {
+        self.heat.get(key).map(|(rate, last)| self.decayed(*rate, *last, self.t)).unwrap_or(0.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heat.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heat.is_empty()
+    }
+
+    /// Histogram of current key heats in log2 buckets:
+    /// `[0,0.5) [0.5,1) [1,2) [2,4) [4,8) [8,16) [16,32) [32,∞)`.
+    pub fn histogram(&self) -> [usize; HEAT_BUCKETS] {
+        let mut out = [0usize; HEAT_BUCKETS];
+        for (rate, last) in self.heat.values() {
+            let h = self.decayed(*rate, *last, self.t);
+            let bucket = if h < 0.5 {
+                0
+            } else {
+                // 0.5 -> 1, 1 -> 2, 2 -> 3, ... capped at the top.
+                ((h / 0.5).log2().floor() as usize + 1).min(HEAT_BUCKETS - 1)
+            };
+            out[bucket] += 1;
+        }
+        out
+    }
+
+    /// Drop the coldest half when the sketch outgrows its cap.
+    fn prune(&mut self) {
+        let mut all: Vec<(String, f64)> = self
+            .heat
+            .iter()
+            .map(|(k, (rate, last))| (k.clone(), self.decayed(*rate, *last, self.t)))
+            .collect();
+        all.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.0.cmp(&b.0))
+        });
+        all.truncate(self.cap / 2);
+        let keep: std::collections::HashSet<String> = all.into_iter().map(|(k, _)| k).collect();
+        self.heat.retain(|k, _| keep.contains(k));
+    }
+}
+
+/// What [`Backlog::offer`] decided.
+pub enum Offer<T> {
+    /// The key took a backlog slot.
+    Queued,
+    /// The key took a slot by displacing a colder backlogged key,
+    /// which the caller must shed.
+    Displaced { key: String, item: T },
+    /// The key is colder than everything backlogged: shed it.
+    Rejected { key: String, item: T },
+}
+
+/// Bounded heat-ordered buffer in front of the worker queue.
+#[derive(Debug)]
+pub struct Backlog<T> {
+    cap: usize,
+    entries: Vec<(String, T)>,
+}
+
+impl<T> Backlog<T> {
+    pub fn new(cap: usize) -> Backlog<T> {
+        Backlog { cap: cap.max(1), entries: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Offer a key a backlog slot; when full, the coldest key loses
+    /// (ties break deterministically toward keeping the incumbent).
+    pub fn offer(&mut self, key: String, item: T, heat: &HeatSketch) -> Offer<T> {
+        if self.entries.len() < self.cap {
+            self.entries.push((key, item));
+            return Offer::Queued;
+        }
+        let coldest = match self.index_of_coldest(heat) {
+            Some(i) => i,
+            None => return Offer::Rejected { key, item },
+        };
+        if heat.heat(&key) > heat.heat(&self.entries[coldest].0) {
+            let (old_key, old_item) = self.entries.swap_remove(coldest);
+            self.entries.push((key, item));
+            Offer::Displaced { key: old_key, item: old_item }
+        } else {
+            Offer::Rejected { key, item }
+        }
+    }
+
+    /// Remove and return the hottest backlogged key (deterministic
+    /// tie-break on the key string).
+    pub fn pop_hottest(&mut self, heat: &HeatSketch) -> Option<(String, T)> {
+        let mut best: Option<usize> = None;
+        for (i, (key, _)) in self.entries.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let (hb, hi) = (heat.heat(&self.entries[b].0), heat.heat(key));
+                    hi > hb || (hi == hb && *key < self.entries[b].0)
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best.map(|i| self.entries.swap_remove(i))
+    }
+
+    /// Put back an entry that could not be submitted after all.
+    pub fn restore(&mut self, key: String, item: T) {
+        self.entries.push((key, item));
+    }
+
+    /// Take every entry (shutdown: release their fleet claims).
+    pub fn drain(&mut self) -> Vec<(String, T)> {
+        std::mem::take(&mut self.entries)
+    }
+
+    fn index_of_coldest(&self, heat: &HeatSketch) -> Option<usize> {
+        let mut worst: Option<usize> = None;
+        for (i, (key, _)) in self.entries.iter().enumerate() {
+            let colder = match worst {
+                None => true,
+                Some(w) => {
+                    let (hw, hi) = (heat.heat(&self.entries[w].0), heat.heat(key));
+                    hi < hw || (hi == hw && *key > self.entries[w].0)
+                }
+            };
+            if colder {
+                worst = Some(i);
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heat_accumulates_and_decays() {
+        let mut sketch = HeatSketch::new(4.0, 1024);
+        for _ in 0..3 {
+            sketch.touch("hot");
+        }
+        let hot = sketch.heat("hot");
+        assert!(hot > 2.0, "three rapid touches stack: {hot}");
+        // Eight quiet ticks = two half-lives: heat falls ~4x.
+        for _ in 0..8 {
+            sketch.touch("other");
+        }
+        let cooled = sketch.heat("hot");
+        assert!(cooled < hot / 3.0, "{cooled} vs {hot}");
+        assert!(sketch.heat("never") == 0.0);
+    }
+
+    #[test]
+    fn hotter_key_wins_regardless_of_arrival_order() {
+        let mut sketch = HeatSketch::new(64.0, 1024);
+        sketch.touch("cold");
+        for _ in 0..5 {
+            sketch.touch("hot");
+        }
+        assert!(sketch.heat("hot") > sketch.heat("cold"));
+
+        let mut backlog: Backlog<u32> = Backlog::new(1);
+        assert!(matches!(backlog.offer("cold".into(), 1, &sketch), Offer::Queued));
+        // A hotter arrival displaces the cold incumbent...
+        match backlog.offer("hot".into(), 2, &sketch) {
+            Offer::Displaced { key, item } => {
+                assert_eq!(key, "cold");
+                assert_eq!(item, 1);
+            }
+            _ => panic!("hot key must displace the cold one"),
+        }
+        // ...and a colder arrival is rejected outright.
+        match backlog.offer("cold".into(), 3, &sketch) {
+            Offer::Rejected { key, item } => {
+                assert_eq!(key, "cold");
+                assert_eq!(item, 3);
+            }
+            _ => panic!("cold key must be shed"),
+        }
+        assert_eq!(backlog.len(), 1);
+        let (key, item) = backlog.pop_hottest(&sketch).unwrap();
+        assert_eq!((key.as_str(), item), ("hot", 2));
+        assert!(backlog.pop_hottest(&sketch).is_none());
+    }
+
+    #[test]
+    fn pop_hottest_orders_by_heat_then_key() {
+        let mut sketch = HeatSketch::new(1e6, 1024); // effectively no decay
+        sketch.touch("b");
+        sketch.touch("a");
+        for _ in 0..3 {
+            sketch.touch("c");
+        }
+        let mut backlog: Backlog<()> = Backlog::new(8);
+        for key in ["a", "b", "c"] {
+            assert!(matches!(backlog.offer(key.into(), (), &sketch), Offer::Queued));
+        }
+        let order: Vec<String> = std::iter::from_fn(|| backlog.pop_hottest(&sketch))
+            .map(|(key, _)| key)
+            .collect();
+        assert_eq!(order, ["c", "a", "b"], "hottest first, then lexicographic");
+    }
+
+    #[test]
+    fn sketch_memory_stays_bounded() {
+        let mut sketch = HeatSketch::new(128.0, 64);
+        for i in 0..1000 {
+            sketch.touch(&format!("key{i}"));
+        }
+        assert!(sketch.len() <= 64, "pruned to cap: {}", sketch.len());
+        // Recent keys (the hottest under decay) survive the prune.
+        assert!(sketch.heat("key999") > 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_by_heat() {
+        let mut sketch = HeatSketch::new(1e6, 1024);
+        sketch.touch("one"); // heat ~1 -> bucket [1,2)
+        for _ in 0..40 {
+            sketch.touch("forty"); // heat ~40 -> top bucket
+        }
+        let hist = sketch.histogram();
+        assert_eq!(hist.iter().sum::<usize>(), 2);
+        assert_eq!(hist[2], 1, "heat ~1 lands in [1,2): {hist:?}");
+        assert_eq!(hist[HEAT_BUCKETS - 1], 1, "heat ~40 lands in the top bucket: {hist:?}");
+    }
+}

@@ -1,0 +1,110 @@
+//! Fleet-wide miss coalescing: in-store claims on in-flight searches.
+//!
+//! Within one daemon, duplicate misses on a key coalesce through the
+//! in-memory `pending` set. Across a fleet sharing one store, the same
+//! dedup needs a marker **in the store**: before enqueueing a
+//! background search, a daemon claims the key here; a claim that is
+//! already held by a live fleet member means "someone is searching
+//! this" and the miss is answered with the warm guess only. The claim
+//! is a [`Lease`] (`<store>/inflight/<fnv64-of-key>.json`, the key
+//! itself in the payload), so:
+//!
+//! * the daemon's heartbeat keeps it alive for the duration of a
+//!   multi-second search;
+//! * a crashed daemon's claim expires after the TTL and the next miss
+//!   re-claims the key instead of coalescing into a dead search
+//!   forever;
+//! * the claim's **epoch** fences the write-back: a daemon that lost
+//!   its claim mid-search (paused past the TTL, reclaimed elsewhere)
+//!   has its late record rejected by
+//!   [`crate::store::ShardedStore::append_claimed`].
+
+use crate::store::lease::{now_ms, read_lease, Lease, LeaseInfo};
+use crate::store::sharded::fnv1a;
+use anyhow::Context as _;
+use std::path::{Path, PathBuf};
+
+/// Subdirectory of the store dir holding in-flight claims.
+pub const INFLIGHT_DIR: &str = "inflight";
+
+/// One daemon's view of the fleet's in-flight searches.
+#[derive(Debug)]
+pub struct InflightTable {
+    dir: PathBuf,
+    holder: String,
+    ttl_ms: u64,
+}
+
+impl InflightTable {
+    pub fn open(store_dir: &Path, holder: &str, ttl_ms: u64) -> anyhow::Result<InflightTable> {
+        let dir = store_dir.join(INFLIGHT_DIR);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create inflight dir {dir:?}"))?;
+        Ok(InflightTable { dir, holder: holder.to_string(), ttl_ms })
+    }
+
+    fn path_of(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{:016x}.json", fnv1a(key)))
+    }
+
+    /// Claim `key` for a background search. `Ok(None)` means another
+    /// live fleet member already owns it — coalesce, don't search.
+    pub fn claim(&self, key: &str) -> anyhow::Result<Option<Lease>> {
+        Lease::acquire(&self.path_of(key), &self.holder, self.ttl_ms, Some(key))
+    }
+
+    /// The live claim on `key`, if any (payload-checked, so a hash
+    /// collision never reports a foreign key as this one).
+    pub fn owner(&self, key: &str) -> anyhow::Result<Option<LeaseInfo>> {
+        let info = read_lease(&self.path_of(key))?;
+        Ok(info.filter(|i| i.is_live(now_ms()) && i.payload.as_deref() == Some(key)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ecokernel_inflight_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn duplicate_claims_coalesce_until_release() {
+        let dir = tmp_dir("dup");
+        let a = InflightTable::open(&dir, "daemon-a", 60_000).unwrap();
+        let b = InflightTable::open(&dir, "daemon-b", 60_000).unwrap();
+        let key = "mm1|a100|energy_aware|fp";
+
+        let claim = a.claim(key).unwrap().expect("first claim wins");
+        assert!(b.claim(key).unwrap().is_none(), "duplicate miss coalesces fleet-wide");
+        assert_eq!(b.owner(key).unwrap().unwrap().holder, "daemon-a");
+        // Unrelated keys claim independently.
+        assert!(b.claim("other|key").unwrap().is_some());
+
+        claim.release().unwrap();
+        assert!(b.owner(key).unwrap().is_none(), "released claim is gone");
+        assert!(b.claim(key).unwrap().is_some(), "key reclaimable after release");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crashed_holders_claim_expires_and_is_reclaimed() {
+        let dir = tmp_dir("crash");
+        let a = InflightTable::open(&dir, "daemon-a", 60).unwrap();
+        let b = InflightTable::open(&dir, "daemon-b", 60_000).unwrap();
+        let key = "mv3|a100|energy_aware|fp";
+
+        let dead = a.claim(key).unwrap().expect("claimed");
+        std::thread::sleep(std::time::Duration::from_millis(140));
+        assert!(b.owner(key).unwrap().is_none(), "expired claim is not an owner");
+        let reclaimed = b.claim(key).unwrap().expect("expired claim reclaimed");
+        assert!(reclaimed.epoch() > dead.epoch(), "reclaim bumps the fencing epoch");
+        assert!(!dead.is_current().unwrap(), "the dead claim is fenced out");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

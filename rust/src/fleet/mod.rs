@@ -1,0 +1,37 @@
+//! Fleet serving: the pieces that turn the single-node daemon into N
+//! daemons sharing one store.
+//!
+//! The paper's tuning cost amortizes best when a search runs **once
+//! per fleet**, not once per daemon. Related auto-tuning deployments
+//! (DSO-style offline stores, model-steered tuner reuse across
+//! installs of one GPU family) show the traffic shape this exploits:
+//! many frontends, heavy key repetition, one shared result store. The
+//! subsystem has four parts:
+//!
+//! * [`transport`] — `unix:`/`tcp:` addresses behind one
+//!   [`transport::Listener`]/[`transport::Stream`] pair; the versioned
+//!   line-JSON frame protocol is wire-agnostic, so the same client
+//!   bytes work against either.
+//! * leases ([`crate::store::lease`]) — per-shard advisory lock files
+//!   with epochs and heartbeat renewal; concurrent daemons append
+//!   safely, exactly one at a time compacts/rebalances/evicts, and a
+//!   crashed holder's lease expires and is reclaimed.
+//! * [`inflight`] — in-store claims that coalesce duplicate misses
+//!   **across** daemons: one member runs the search, the rest serve
+//!   the warm guess and pick the record up from the store afterwards.
+//! * [`admission`] — when the search queue saturates, a decayed
+//!   per-key request-rate sketch decides who gets the next slot: hot
+//!   keys are backlogged and pumped in heat order, cold keys are shed.
+//!
+//! The serving daemon ([`crate::serve`], unix-gated for its socket
+//! support) wires these together; the store side lives in
+//! [`crate::store::sharded`] (fleet mode: incremental refresh, fenced
+//! rewrites, epoch-fenced write-backs).
+
+pub mod admission;
+pub mod inflight;
+pub mod transport;
+
+pub use admission::{Backlog, HeatSketch, Offer, HEAT_BUCKETS};
+pub use inflight::InflightTable;
+pub use transport::{Listener, ServeAddr, Stream};

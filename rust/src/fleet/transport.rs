@@ -1,0 +1,245 @@
+//! Transport abstraction for the serving protocol: one frame format,
+//! two wires.
+//!
+//! The daemon's protocol is line-delimited JSON; nothing about it is
+//! Unix-socket-specific. This module gives `serve`/`query`/the client
+//! a [`ServeAddr`] that is either a Unix path or a TCP `host:port`,
+//! plus [`Listener`]/[`Stream`] wrappers so the daemon and the client
+//! are written once against both. The same client bytes produce the
+//! same replies on either wire (the fleet e2e pins this).
+//!
+//! Address syntax (CLI `--listen` / `--addr`):
+//!
+//! * `unix:/run/ecokernel.sock` — Unix-domain socket (also the
+//!   interpretation of a bare path, for backward compatibility with
+//!   `--socket`);
+//! * `tcp:127.0.0.1:7461` — TCP. Binding port `0` resolves to a
+//!   kernel-assigned port, reported back by [`Listener::bind`].
+
+use anyhow::Context as _;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::PathBuf;
+
+/// Where a serving daemon listens (or a client connects).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeAddr {
+    /// Unix-domain socket path.
+    #[cfg(unix)]
+    Unix(PathBuf),
+    /// TCP `host:port`.
+    Tcp(String),
+}
+
+impl ServeAddr {
+    /// Parse `unix:PATH`, `tcp:HOST:PORT`, or a bare path (treated as
+    /// a Unix socket path).
+    pub fn parse(s: &str) -> Result<ServeAddr, String> {
+        if let Some(rest) = s.strip_prefix("tcp:") {
+            if rest.is_empty() || !rest.contains(':') {
+                return Err(format!("tcp address '{rest}' must be HOST:PORT"));
+            }
+            return Ok(ServeAddr::Tcp(rest.to_string()));
+        }
+        let path = s.strip_prefix("unix:").unwrap_or(s);
+        if path.is_empty() {
+            return Err("empty address".to_string());
+        }
+        #[cfg(unix)]
+        {
+            Ok(ServeAddr::Unix(PathBuf::from(path)))
+        }
+        #[cfg(not(unix))]
+        {
+            Err(format!("unix socket address '{path}' is unsupported on this platform"))
+        }
+    }
+}
+
+impl std::fmt::Display for ServeAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            #[cfg(unix)]
+            ServeAddr::Unix(path) => write!(f, "unix:{}", path.display()),
+            ServeAddr::Tcp(hostport) => write!(f, "tcp:{hostport}"),
+        }
+    }
+}
+
+/// A bound listening socket on either wire.
+pub enum Listener {
+    #[cfg(unix)]
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    /// Bind on `addr`. For Unix sockets a *live* daemon's socket is
+    /// refused (two daemons on one endpoint would split the clients)
+    /// and a stale socket file is removed; for TCP an in-use port
+    /// fails naturally. Returns the listener plus the resolved address
+    /// (TCP port 0 becomes the kernel-assigned port).
+    pub fn bind(addr: &ServeAddr) -> anyhow::Result<(Listener, ServeAddr)> {
+        match addr {
+            #[cfg(unix)]
+            ServeAddr::Unix(path) => {
+                if path.exists() {
+                    if UnixStream::connect(path).is_ok() {
+                        anyhow::bail!(
+                            "a daemon is already serving on {path:?} (shut it down first)"
+                        );
+                    }
+                    std::fs::remove_file(path)
+                        .with_context(|| format!("remove stale socket {path:?}"))?;
+                }
+                let listener =
+                    UnixListener::bind(path).with_context(|| format!("bind {path:?}"))?;
+                Ok((Listener::Unix(listener), addr.clone()))
+            }
+            ServeAddr::Tcp(hostport) => {
+                let listener = TcpListener::bind(hostport.as_str())
+                    .with_context(|| format!("bind tcp:{hostport}"))?;
+                let local = listener.local_addr().context("resolve tcp local addr")?;
+                Ok((Listener::Tcp(listener), ServeAddr::Tcp(local.to_string())))
+            }
+        }
+    }
+
+    /// Accept one connection (blocking).
+    pub fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix(listener) => listener.accept().map(|(s, _)| Stream::Unix(s)),
+            Listener::Tcp(listener) => listener.accept().map(|(s, _)| {
+                let _ = s.set_nodelay(true); // one frame per write: don't batch
+                Stream::Tcp(s)
+            }),
+        }
+    }
+}
+
+/// One connection on either wire.
+pub enum Stream {
+    #[cfg(unix)]
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    /// Connect to a daemon at `addr`.
+    pub fn connect(addr: &ServeAddr) -> anyhow::Result<Stream> {
+        match addr {
+            #[cfg(unix)]
+            ServeAddr::Unix(path) => UnixStream::connect(path)
+                .map(Stream::Unix)
+                .with_context(|| format!("connect to daemon at unix:{}", path.display())),
+            ServeAddr::Tcp(hostport) => TcpStream::connect(hostport.as_str())
+                .map(|s| {
+                    let _ = s.set_nodelay(true);
+                    Stream::Tcp(s)
+                })
+                .with_context(|| format!("connect to daemon at tcp:{hostport}")),
+        }
+    }
+
+    /// Clone the handle (separate read/write halves of one connection).
+    pub fn try_clone(&self) -> std::io::Result<Stream> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tcp_addresses() {
+        assert_eq!(
+            ServeAddr::parse("tcp:127.0.0.1:7461"),
+            Ok(ServeAddr::Tcp("127.0.0.1:7461".to_string()))
+        );
+        assert!(ServeAddr::parse("tcp:").is_err());
+        assert!(ServeAddr::parse("tcp:no-port").is_err());
+        assert_eq!(ServeAddr::parse("tcp:[::1]:7461").unwrap().to_string(), "tcp:[::1]:7461");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn parse_unix_addresses_including_bare_paths() {
+        assert_eq!(
+            ServeAddr::parse("unix:/run/eco.sock"),
+            Ok(ServeAddr::Unix(PathBuf::from("/run/eco.sock")))
+        );
+        // Backward compatibility: a bare path is a Unix socket.
+        assert_eq!(
+            ServeAddr::parse("/tmp/eco.sock"),
+            Ok(ServeAddr::Unix(PathBuf::from("/tmp/eco.sock")))
+        );
+        assert!(ServeAddr::parse("").is_err());
+        assert_eq!(ServeAddr::parse("unix:/a/b").unwrap().to_string(), "unix:/a/b");
+    }
+
+    #[test]
+    fn tcp_roundtrip_one_line() {
+        use std::io::{BufRead as _, BufReader, Write as _};
+        let (listener, addr) =
+            Listener::bind(&ServeAddr::Tcp("127.0.0.1:0".to_string())).unwrap();
+        match &addr {
+            ServeAddr::Tcp(hp) => assert!(!hp.ends_with(":0"), "port 0 resolved: {hp}"),
+            #[cfg(unix)]
+            other => panic!("{other}"),
+        }
+        let server = std::thread::spawn(move || {
+            let stream = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let mut out = stream;
+            write!(out, "echo:{line}").unwrap();
+            out.flush().unwrap();
+        });
+        let mut client = Stream::connect(&addr).unwrap();
+        writeln!(client, "hello").unwrap();
+        client.flush().unwrap();
+        let mut reader = BufReader::new(client.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert_eq!(reply, "echo:hello\n");
+        server.join().unwrap();
+    }
+}

@@ -61,7 +61,8 @@ pub mod workload;
 // Wired in below as they land:
 pub mod coordinator;
 pub mod experiments;
+pub mod fleet;
 pub mod runtime;
-/// Kernel-serving daemon (Unix-domain sockets; unix-only).
+/// Kernel-serving daemon (needs a Unix-ish socket runtime; unix-only).
 #[cfg(unix)]
 pub mod serve;

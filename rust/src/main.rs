@@ -63,9 +63,10 @@ USAGE:
                    [--rounds N] [--population P] [--m M] [--mu DB] [--seed S]
                    [--store DIR] [--no-transfer]
                    [--config file.toml] [--events out.jsonl] [--json]
-  ecokernel serve  --store DIR --socket PATH [--config file.toml] [--workers N]
+  ecokernel serve  --store DIR --listen ADDR [--config file.toml] [--workers N]
                    [--shards N] [--quota N] [--max-records N] [--events out.jsonl]
-  ecokernel query  --socket PATH (--workload MM1 [--gpu a100] [--mode energy]
+                   (ADDR: unix:/path.sock or tcp:HOST:PORT; --socket PATH = unix)
+  ecokernel query  --addr ADDR (--workload MM1 [--gpu a100] [--mode energy]
                    [--wait] [--timeout S] | --stats | --shutdown) [--json]
   ecokernel experiment <table1..table5|fig2..fig5|warmcold|all> [--paper]
   ecokernel cache <stats|list|prune|export> --store DIR
@@ -211,6 +212,17 @@ fn cmd_search(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The daemon address from `--listen`/`--addr` (`unix:`/`tcp:` syntax)
+/// or the backward-compatible `--socket PATH`.
+#[cfg(unix)]
+fn parse_addr_flags(flags: &Flags, primary: &str) -> anyhow::Result<ecokernel::serve::ServeAddr> {
+    let raw = flags
+        .get(primary)
+        .or_else(|| flags.get("socket"))
+        .ok_or_else(|| anyhow::anyhow!("--{primary} ADDR (or --socket PATH) is required"))?;
+    ecokernel::serve::ServeAddr::parse(raw).map_err(anyhow::Error::msg)
+}
+
 /// Run the kernel-serving daemon (blocking until a `shutdown` request).
 #[cfg(unix)]
 fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
@@ -236,33 +248,33 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     let store_dir = flags
         .get("store")
         .ok_or_else(|| anyhow::anyhow!("--store DIR is required"))?;
-    let socket = flags
-        .get("socket")
-        .ok_or_else(|| anyhow::anyhow!("--socket PATH is required"))?;
+    let addr = parse_addr_flags(&flags, "listen")?;
     let log = match flags.get("events") {
         Some(path) => Some(EventLog::to_file(std::path::Path::new(path))?),
         None => None,
     };
     let daemon = Daemon::bind(
         DaemonConfig {
-            socket_path: std::path::PathBuf::from(socket),
+            addr,
             store_dir: std::path::PathBuf::from(store_dir),
             search: cfg.clone(),
         },
         log,
     )?;
     println!(
-        "serving on {:?} (store {store_dir}, {} shards, {} workers; stop with `ecokernel query --socket {socket} --shutdown`)",
-        daemon.socket_path(),
+        "serving on {} (store {store_dir}, {} shards, {} workers; stop with \
+         `ecokernel query --addr {} --shutdown`)",
+        daemon.addr(),
         cfg.serve.n_shards,
-        cfg.serve.n_workers
+        cfg.serve.n_workers,
+        daemon.addr()
     );
     daemon.run()
 }
 
 #[cfg(not(unix))]
 fn cmd_serve(_args: &[String]) -> anyhow::Result<()> {
-    anyhow::bail!("`ecokernel serve` needs Unix-domain sockets (unix-only)")
+    anyhow::bail!("`ecokernel serve` needs a Unix socket runtime (unix-only)")
 }
 
 /// Talk to a running daemon: get a kernel, read stats, or shut it down.
@@ -270,10 +282,8 @@ fn cmd_serve(_args: &[String]) -> anyhow::Result<()> {
 fn cmd_query(args: &[String]) -> anyhow::Result<()> {
     use ecokernel::serve::ServeClient;
     let flags = Flags::parse(args, &["json", "wait", "stats", "shutdown"])?;
-    let socket = flags
-        .get("socket")
-        .ok_or_else(|| anyhow::anyhow!("--socket PATH is required"))?;
-    let mut client = ServeClient::connect(std::path::Path::new(socket))?;
+    let addr = parse_addr_flags(&flags, "addr")?;
+    let mut client = ServeClient::connect(&addr)?;
 
     if flags.has("stats") {
         let s = client.stats()?;
@@ -282,10 +292,27 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
         } else {
             println!("requests    : {} ({} hits, {} misses)", s.n_requests, s.n_hits, s.n_misses);
             println!("hit rate    : {:.1}%", s.hit_rate * 100.0);
-            println!("reply time  : p50 {:.3} ms, p99 {:.3} ms (simulated)", s.p50_reply_s * 1e3, s.p99_reply_s * 1e3);
-            println!("queue depth : {}", s.queue_depth);
+            println!(
+                "reply time  : p50 {:.3} ms, p99 {:.3} ms (simulated)",
+                s.p50_reply_s * 1e3,
+                s.p99_reply_s * 1e3
+            );
+            println!("queue depth : {} ({} backlogged)", s.queue_depth, s.backlog_len);
             println!("searches    : {} done, {} enqueued total", s.n_searches_done, s.n_enqueued);
-            println!("store       : {} records in {} shards ({} evicted)", s.n_records, s.n_shards, s.n_evicted_records);
+            println!("admission   : {} shed, {} fleet-coalesced", s.n_shed, s.n_fleet_coalesced);
+            println!(
+                "store       : {} records in {} shards ({} evicted)",
+                s.n_records, s.n_shards, s.n_evicted_records
+            );
+            if !s.shard_records.is_empty() {
+                let sizes: Vec<String> = s.shard_records.iter().map(|n| n.to_string()).collect();
+                println!("shard sizes : [{}]", sizes.join(" "));
+            }
+            if !s.heat_histogram.is_empty() {
+                let buckets: Vec<String> =
+                    s.heat_histogram.iter().map(|n| n.to_string()).collect();
+                println!("key heat    : [{}] (log2 buckets, coldest first)", buckets.join(" "));
+            }
             println!("paid        : {} NVML measurements", s.measurements_paid);
         }
         return Ok(());
@@ -348,7 +375,7 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
 
 #[cfg(not(unix))]
 fn cmd_query(_args: &[String]) -> anyhow::Result<()> {
-    anyhow::bail!("`ecokernel query` needs Unix-domain sockets (unix-only)")
+    anyhow::bail!("`ecokernel query` needs a Unix socket runtime (unix-only)")
 }
 
 fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
@@ -433,7 +460,7 @@ fn cmd_cache(args: &[String]) -> anyhow::Result<()> {
         }
         "list" => {
             for rec in store.records() {
-                print_record(rec);
+                print_record(rec.as_ref());
             }
             if store.is_empty() {
                 println!("(store is empty)");

@@ -48,13 +48,25 @@ impl NvmlMeter {
     /// A meter on a *cold* device (first measurement will pre-heat).
     pub fn new(spec: GpuSpec, cfg: NvmlConfig) -> NvmlMeter {
         let thermal = ThermalState::cold(&spec);
-        NvmlMeter { sampler: PowerSampler::new(cfg.clone()), spec, cfg, thermal, clock: MeasurementClock::new() }
+        NvmlMeter {
+            sampler: PowerSampler::new(cfg.clone()),
+            spec,
+            cfg,
+            thermal,
+            clock: MeasurementClock::new(),
+        }
     }
 
     /// A meter on a pre-warmed device (useful in tests).
     pub fn warmed(spec: GpuSpec, cfg: NvmlConfig) -> NvmlMeter {
         let thermal = ThermalState::warmed(&spec);
-        NvmlMeter { sampler: PowerSampler::new(cfg.clone()), spec, cfg, thermal, clock: MeasurementClock::new() }
+        NvmlMeter {
+            sampler: PowerSampler::new(cfg.clone()),
+            spec,
+            cfg,
+            thermal,
+            clock: MeasurementClock::new(),
+        }
     }
 
     pub fn spec(&self) -> &GpuSpec {

@@ -195,7 +195,11 @@ pub fn run_warm(
         // Parents: top 50% lowest measured energy.
         let mut by_energy = measured.clone();
         by_energy.sort_by(|a, b| a.energy_j.partial_cmp(&b.energy_j).expect("finite"));
-        parents = by_energy.iter().take((cfg.m_latency_keep / 2).max(1)).map(|e| e.schedule).collect();
+        parents = by_energy
+            .iter()
+            .take((cfg.m_latency_keep / 2).max(1))
+            .map(|e| e.schedule)
+            .collect();
         best_energy = by_energy.first().map(|e| e.energy_j).unwrap_or(f64::INFINITY);
         measured_pool.extend(measured);
         rounds.push(RoundStats {

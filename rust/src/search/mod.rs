@@ -120,7 +120,11 @@ fn run_search_stateless(workload: Workload, cfg: &SearchConfig) -> SearchOutcome
     dispatch(workload, cfg, None)
 }
 
-fn dispatch(workload: Workload, cfg: &SearchConfig, warm: Option<&crate::store::WarmStart>) -> SearchOutcome {
+fn dispatch(
+    workload: Workload,
+    cfg: &SearchConfig,
+    warm: Option<&crate::store::WarmStart>,
+) -> SearchOutcome {
     match cfg.mode {
         SearchMode::LatencyOnly => latency_only::run(workload, cfg),
         SearchMode::EnergyAware => energy_aware::run_warm(workload, cfg, true, warm),

@@ -1,28 +1,27 @@
 //! A small blocking client for the kernel-serving daemon (used by
-//! `ecokernel query` and the serving-fleet example).
+//! `ecokernel query` and the fleet examples). Transport-agnostic: the
+//! same frames flow over `unix:` and `tcp:` addresses.
 
 use super::protocol::{KernelReply, Request, Response, StatsReply};
 use crate::config::{GpuArch, SearchMode};
+use crate::fleet::{ServeAddr, Stream};
 use crate::workload::Workload;
 use anyhow::{anyhow, Context as _};
 use std::io::{BufRead as _, BufReader, Write as _};
-use std::os::unix::net::UnixStream;
-use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// One connection to a serving daemon. Requests are sequential
 /// (send a frame, read the reply line).
 pub struct ServeClient {
-    stream: UnixStream,
-    reader: BufReader<UnixStream>,
+    stream: Stream,
+    reader: BufReader<Stream>,
     next_id: u64,
 }
 
 impl ServeClient {
-    pub fn connect(socket: &Path) -> anyhow::Result<ServeClient> {
-        let stream = UnixStream::connect(socket)
-            .with_context(|| format!("connect to daemon socket {socket:?}"))?;
-        let reader = BufReader::new(stream.try_clone().context("clone socket stream")?);
+    pub fn connect(addr: &ServeAddr) -> anyhow::Result<ServeClient> {
+        let stream = Stream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone().context("clone daemon stream")?);
         Ok(ServeClient { stream, reader, next_id: 0 })
     }
 
@@ -57,7 +56,9 @@ impl ServeClient {
         let id = self.fresh_id();
         match self.roundtrip(&Request::GetKernel { id, workload, gpu, mode })? {
             Response::Kernel(r) => Ok(r),
-            Response::Error { code, message, .. } => Err(anyhow!("daemon error [{code}]: {message}")),
+            Response::Error { code, message, .. } => {
+                Err(anyhow!("daemon error [{code}]: {message}"))
+            }
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }
@@ -93,7 +94,9 @@ impl ServeClient {
         let id = self.fresh_id();
         match self.roundtrip(&Request::Stats { id })? {
             Response::Stats(r) => Ok(r),
-            Response::Error { code, message, .. } => Err(anyhow!("daemon error [{code}]: {message}")),
+            Response::Error { code, message, .. } => {
+                Err(anyhow!("daemon error [{code}]: {message}"))
+            }
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }
@@ -123,7 +126,9 @@ impl ServeClient {
         let id = self.fresh_id();
         match self.roundtrip(&Request::Shutdown { id })? {
             Response::ShutdownAck { .. } => Ok(()),
-            Response::Error { code, message, .. } => Err(anyhow!("daemon error [{code}]: {message}")),
+            Response::Error { code, message, .. } => {
+                Err(anyhow!("daemon error [{code}]: {message}"))
+            }
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }

@@ -1,5 +1,5 @@
 //! The kernel-serving daemon: a long-running process answering
-//! `get_kernel` requests over a Unix-domain socket.
+//! `get_kernel` requests over a Unix or TCP socket.
 //!
 //! Request flow:
 //!
@@ -7,53 +7,78 @@
 //!   NVML-measured kernel (zero measurements, zero search time);
 //! * **miss** — reply immediately with the best warm guess (nearest
 //!   neighbor's schedule re-legalized for the requested shape, or the
-//!   space's fallback), and enqueue a real search on the daemon-owned
+//!   space's fallback), and enqueue a real search on a daemon-owned
 //!   [`WorkerPool`]. The finished search is written back into the
 //!   sharded store, so the next request for that key is a hit.
-//!   Duplicate in-flight keys coalesce into one search.
 //!
-//! Background searches consult a shared parsed snapshot of the store
-//! (parse-once plumbing) and warm-start from cached neighbors exactly
-//! like `search --store`; eviction quotas run after every write-back.
+//! Fleet behavior (N daemons, one store — see [`crate::fleet`]):
+//!
+//! * the store opens in **fleet mode**: every miss first refreshes the
+//!   key's shard, so a search another daemon already wrote back is
+//!   served as a hit without ever searching here;
+//! * duplicate misses coalesce at two levels — the in-memory `pending`
+//!   set within one daemon, and an in-store [`InflightTable`] claim
+//!   across daemons, so a key is searched **once fleet-wide**. Claims
+//!   are heartbeat-renewed for the duration of the search; a crashed
+//!   owner's claim expires and the key is reclaimed. Write-backs are
+//!   epoch-fenced: a daemon that lost its claim mid-search has its
+//!   late record rejected;
+//! * when the search queue saturates, admission control
+//!   ([`crate::fleet::admission`]) backlogs hot keys (pumped into
+//!   freed slots in heat order) and sheds cold ones, instead of the
+//!   old FIFO drop.
 
 use super::metrics::{reply_time_s, ServeMetrics};
 use super::protocol::{KernelReply, Request, Response, ServeSource, StatsReply, PROTOCOL_VERSION};
 use crate::config::SearchConfig;
 use crate::coordinator::{EventLog, PoolEvent, SearchJob, WorkerPool};
+use crate::fleet::{Backlog, HeatSketch, InflightTable, Listener, Offer, ServeAddr, Stream};
 use crate::schedule::space::ScheduleSpace;
+use crate::store::lease::Lease;
 use crate::store::transfer::{relegalize, MAX_TRANSFER_DISTANCE};
-use crate::store::{config_fingerprint, serve_key, ShardedStore, TuningRecord, TuningStore};
+use crate::store::{
+    config_fingerprint, serve_key, AppendOutcome, EvictionReport, ShardedStore, TuningRecord,
+    TuningStore,
+};
 use crate::util::Json;
 use crate::workload::Workload;
-use anyhow::Context as _;
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead as _, BufReader, Write as _};
-use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// Daemon configuration: where to listen, where the store lives, and
-/// the search template requests run under (per-request `gpu`/`mode`
-/// overrides apply on top; the `[serve]` section sets shard count,
-/// eviction quotas, and the worker pool size).
+/// Daemon configuration: where to listen (`unix:`/`tcp:`), where the
+/// store lives, and the search template requests run under
+/// (per-request `gpu`/`mode` overrides apply on top; the `[serve]` and
+/// `[fleet]` sections set shard count, eviction quotas, pool size, and
+/// fleet-coordination knobs).
 #[derive(Debug, Clone)]
 pub struct DaemonConfig {
-    pub socket_path: PathBuf,
+    pub addr: ServeAddr,
     pub store_dir: PathBuf,
     pub search: SearchConfig,
 }
 
+/// A queued-but-not-yet-submitted background search.
+type BacklogJob = (SearchJob, Arc<TuningStore>);
+
 /// Mutable daemon state behind one lock.
 struct Shared {
     store: ShardedStore,
-    /// Parsed snapshot handed to background searches; rebuilt after
-    /// every write-back.
+    /// Parsed snapshot handed to background searches; rebuilt (pointer
+    /// clones — records are `Arc`-shared) after every store change.
     snapshot: Arc<TuningStore>,
-    /// Serve keys with a search enqueued or running.
+    /// Serve keys with a search queued, backlogged, or running here.
     pending: HashSet<String>,
+    /// Fleet in-flight claims this daemon holds, by serve key.
+    claims: HashMap<String, Lease>,
+    /// Admission backlog behind a saturated search queue.
+    backlog: Backlog<BacklogJob>,
+    /// Decayed per-key request-rate sketch driving admission.
+    heat: HeatSketch,
     metrics: ServeMetrics,
 }
 
@@ -62,24 +87,30 @@ struct Ctx {
     shared: Mutex<Shared>,
     /// `None` once shutdown has begun.
     pool: Mutex<Option<WorkerPool>>,
+    /// Set by a `shutdown` request: stop accepting connections.
     shutting: AtomicBool,
+    /// Set after the drain completes: stops the claim heartbeat.
+    stopped: AtomicBool,
     search: SearchConfig,
-    socket_path: PathBuf,
+    addr: ServeAddr,
+    inflight: InflightTable,
     log: Option<EventLog>,
 }
 
 /// A bound, running daemon (listener open, workers + writer started).
 /// Call [`Daemon::run`] to serve until shutdown.
 pub struct Daemon {
-    listener: UnixListener,
+    listener: Listener,
     ctx: Arc<Ctx>,
     writer: JoinHandle<()>,
+    heartbeat: JoinHandle<()>,
 }
 
 /// Handle to a daemon running on a background thread (in-process tests
-/// and the serving-fleet example).
+/// and the fleet examples).
 pub struct DaemonHandle {
-    pub socket_path: PathBuf,
+    /// The resolved listen address (`tcp:...:0` becomes the real port).
+    pub addr: ServeAddr,
     thread: JoinHandle<anyhow::Result<()>>,
 }
 
@@ -90,99 +121,180 @@ impl DaemonHandle {
     }
 }
 
+/// Distinguishes daemons within one process (tests spawn several), on
+/// top of the pid that distinguishes processes on one host.
+static DAEMON_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A globally-unique lease-holder id. The pid alone is NOT unique
+/// across hosts or containers sharing one store volume (every
+/// container's daemon can be pid 1), and two daemons with equal holder
+/// strings would silently pass each other's lease checks — so a
+/// startup-time nanosecond nonce disambiguates.
+fn fresh_holder_id() -> String {
+    let nonce = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    format!(
+        "daemon-{}-{}-{nonce:016x}",
+        std::process::id(),
+        DAEMON_SEQ.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
 impl Daemon {
-    /// Open the store, start the worker pool + write-back thread, and
-    /// bind the socket (removing a stale socket file first). Clients
-    /// can connect as soon as this returns.
+    /// Open the store (fleet mode), start the worker pool + write-back
+    /// + heartbeat threads, and bind the listen address. Clients can
+    /// connect as soon as this returns.
     pub fn bind(cfg: DaemonConfig, log: Option<EventLog>) -> anyhow::Result<Daemon> {
         cfg.search.validate().map_err(anyhow::Error::msg)?;
-        let store = ShardedStore::open(&cfg.store_dir, cfg.search.serve.n_shards)?;
+        let holder = fresh_holder_id();
+        let fleet = &cfg.search.fleet;
+        // `fleet.coordinate = false` keeps a known-single-daemon
+        // deployment on the in-memory + O_APPEND fast path: no lease
+        // files, no per-miss claim I/O, no per-request refresh stat.
+        let store = if fleet.coordinate {
+            ShardedStore::open_fleet(
+                &cfg.store_dir,
+                cfg.search.serve.n_shards,
+                &holder,
+                fleet.lease_ttl_ms,
+            )?
+        } else {
+            ShardedStore::open(&cfg.store_dir, cfg.search.serve.n_shards)?
+        };
         let snapshot = Arc::new(store.snapshot());
+        let inflight = InflightTable::open(&cfg.store_dir, &holder, fleet.lease_ttl_ms)?;
 
         let (tx, rx) = std::sync::mpsc::channel::<PoolEvent>();
         let pool =
             WorkerPool::with_sink(cfg.search.serve.n_workers, cfg.search.serve.queue_cap, tx);
 
-        if cfg.socket_path.exists() {
-            // A connectable socket means a live daemon: refuse to steal
-            // its endpoint (two daemons would corrupt one store). Only
-            // a dead (stale) socket file is removed.
-            if UnixStream::connect(&cfg.socket_path).is_ok() {
-                anyhow::bail!(
-                    "a daemon is already serving on {:?} (shut it down first)",
-                    cfg.socket_path
-                );
-            }
-            std::fs::remove_file(&cfg.socket_path)
-                .with_context(|| format!("remove stale socket {:?}", cfg.socket_path))?;
-        }
-        let listener = UnixListener::bind(&cfg.socket_path)
-            .with_context(|| format!("bind {:?}", cfg.socket_path))?;
+        let (listener, addr) = Listener::bind(&cfg.addr)?;
 
         let ctx = Arc::new(Ctx {
             shared: Mutex::new(Shared {
                 store,
                 snapshot,
                 pending: HashSet::new(),
+                claims: HashMap::new(),
+                backlog: Backlog::new(fleet.backlog_cap),
+                heat: HeatSketch::new(fleet.heat_half_life, fleet.heat_keys_cap),
                 metrics: ServeMetrics::default(),
             }),
             pool: Mutex::new(Some(pool)),
             shutting: AtomicBool::new(false),
+            stopped: AtomicBool::new(false),
             search: cfg.search,
-            socket_path: cfg.socket_path,
+            addr,
+            inflight,
             log,
         });
         let writer = {
             let ctx = ctx.clone();
             std::thread::spawn(move || writer_loop(&ctx, rx))
         };
-        Ok(Daemon { listener, ctx, writer })
+        let heartbeat = {
+            let ctx = ctx.clone();
+            std::thread::spawn(move || heartbeat_loop(&ctx))
+        };
+        Ok(Daemon { listener, ctx, writer, heartbeat })
     }
 
     /// Bind and serve on a background thread.
     pub fn spawn(cfg: DaemonConfig, log: Option<EventLog>) -> anyhow::Result<DaemonHandle> {
         let daemon = Daemon::bind(cfg, log)?;
-        let socket_path = daemon.ctx.socket_path.clone();
+        let addr = daemon.ctx.addr.clone();
         let thread = std::thread::spawn(move || daemon.run());
-        Ok(DaemonHandle { socket_path, thread })
+        Ok(DaemonHandle { addr, thread })
     }
 
-    pub fn socket_path(&self) -> &Path {
-        &self.ctx.socket_path
+    /// The resolved listen address.
+    pub fn addr(&self) -> &ServeAddr {
+        &self.ctx.addr
     }
 
     /// Serve connections until a `shutdown` request arrives, then drain
-    /// the worker pool, flush write-backs, and remove the socket file.
+    /// the worker pool, flush write-backs, release fleet claims, and
+    /// remove a Unix socket file.
     pub fn run(self) -> anyhow::Result<()> {
-        for stream in self.listener.incoming() {
-            if self.ctx.shutting.load(Ordering::SeqCst) {
-                break;
-            }
-            match stream {
+        loop {
+            match self.listener.accept() {
                 Ok(stream) => {
+                    if self.ctx.shutting.load(Ordering::SeqCst) {
+                        break;
+                    }
                     let ctx = self.ctx.clone();
                     std::thread::spawn(move || handle_connection(&ctx, stream));
                 }
-                Err(e) => eprintln!("serve: accept failed: {e}"),
+                Err(e) => {
+                    if self.ctx.shutting.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    eprintln!("serve: accept failed: {e}");
+                }
             }
         }
         // Drain: close the job queue, run queued searches to completion
         // (their write-backs land through the writer thread), then stop.
+        // The heartbeat keeps renewing claims until the drain finishes,
+        // so in-flight write-backs are not fenced out mid-shutdown.
         let pool = self.ctx.pool.lock().expect("pool lock").take();
         if let Some(pool) = pool {
             pool.finish();
         }
         let _ = self.writer.join();
-        let _ = std::fs::remove_file(&self.ctx.socket_path);
+        // Backlogged searches never ran: hand their keys back to the
+        // fleet so another daemon's next miss claims them.
+        {
+            let mut shared = self.ctx.shared.lock().expect("shared lock");
+            let Shared { backlog, claims, pending, .. } = &mut *shared;
+            for (key, _job) in backlog.drain() {
+                pending.remove(&key);
+                if let Some(lease) = claims.remove(&key) {
+                    let _ = lease.release();
+                }
+            }
+        }
+        self.ctx.stopped.store(true, Ordering::SeqCst);
+        let _ = self.heartbeat.join();
+        #[cfg(unix)]
+        if let ServeAddr::Unix(path) = &self.ctx.addr {
+            let _ = std::fs::remove_file(path);
+        }
         Ok(())
     }
 }
 
+/// Claim heartbeat: renew this daemon's in-flight claims at ~TTL/3 so
+/// they outlive multi-second searches. Runs until the drain completes
+/// (not merely until `shutdown` arrives — queued searches still need
+/// their claims). A claim that fails to renew stays in the map: the
+/// write-back fence rejects its record, which is the correct outcome.
+fn heartbeat_loop(ctx: &Ctx) {
+    let interval =
+        std::time::Duration::from_millis((ctx.search.fleet.lease_ttl_ms / 3).clamp(25, 2000));
+    while !ctx.stopped.load(Ordering::SeqCst) {
+        std::thread::sleep(interval);
+        // Renew outside the shared lock — each renew is several file
+        // ops and must not stall hit replies. A clone carries the same
+        // (holder, epoch) identity, which is all renewal needs.
+        let leases: Vec<Lease> = {
+            let shared = ctx.shared.lock().expect("shared lock");
+            shared.claims.values().cloned().collect()
+        };
+        for lease in &leases {
+            let _ = lease.renew();
+        }
+    }
+}
+
 /// Write-back thread: append every finished search to the sharded
-/// store, enforce eviction quotas, refresh the worker snapshot. A
-/// failed (panicked) search releases its in-flight reservation so the
-/// next request for that key can retry instead of coalescing into a
-/// dead search forever.
+/// store (epoch-fenced by its fleet claim), emit the eviction audit,
+/// refresh the worker snapshot, and pump the admission backlog into
+/// the freed queue slot. A failed (panicked) search releases its
+/// reservations so the next request for that key can retry instead of
+/// coalescing into a dead search forever.
 fn writer_loop(ctx: &Ctx, rx: Receiver<PoolEvent>) {
     for event in rx {
         let result = match event {
@@ -195,13 +307,20 @@ fn writer_loop(ctx: &Ctx, rx: Receiver<PoolEvent>) {
                     &config_fingerprint(&cfg),
                 );
                 eprintln!("serve: background search '{name}' failed: {error}");
-                ctx.shared.lock().expect("shared lock").pending.remove(&key);
+                {
+                    let mut shared = ctx.shared.lock().expect("shared lock");
+                    shared.pending.remove(&key);
+                    if let Some(lease) = shared.claims.remove(&key) {
+                        let _ = lease.release();
+                    }
+                }
                 if let Some(log) = &ctx.log {
                     log.emit(
                         "job_search_failed",
                         vec![("key", Json::str(key)), ("error", Json::str(error))],
                     );
                 }
+                pump_backlog(ctx);
                 continue;
             }
         };
@@ -209,24 +328,71 @@ fn writer_loop(ctx: &Ctx, rx: Receiver<PoolEvent>) {
         let key = serve_key(&rec.workload_id, &rec.gpu, &rec.mode, &rec.fingerprint);
         let n_measurements = result.outcome.n_energy_measurements();
         let sim_time_s = result.outcome.clock.total_s;
-        let mut evicted = 0;
-        {
-            let mut shared = ctx.shared.lock().expect("shared lock");
-            if let Err(e) = shared.store.append(rec) {
-                eprintln!("serve: write-back failed for {key}: {e:#}");
+        // Land the write-back without sleeping inside the shared lock:
+        // lease contention (another member mid-eviction on this shard)
+        // is waited out BETWEEN lock acquisitions, so hit replies keep
+        // flowing while we retry.
+        let mut accepted = false;
+        let mut fenced = false;
+        for attempt in 0..8 {
+            if attempt > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(100));
             }
-            match shared
-                .store
-                .enforce_limits(ctx.search.serve.per_gpu_quota, ctx.search.serve.max_records)
-            {
-                Ok(n) => evicted = n,
-                Err(e) => eprintln!("serve: eviction failed: {e:#}"),
+            let outcome = {
+                let mut shared = ctx.shared.lock().expect("shared lock");
+                let Shared { store, claims, .. } = &mut *shared;
+                match claims.get(&key) {
+                    Some(lease) => store.try_append_claimed(rec.clone(), lease),
+                    None => store.try_append(rec.clone()),
+                }
+            };
+            match outcome {
+                Ok(AppendOutcome::Appended) => {
+                    accepted = true;
+                    break;
+                }
+                Ok(AppendOutcome::FencedOut) => {
+                    fenced = true;
+                    break;
+                }
+                Ok(AppendOutcome::LeaseBusy) => {}
+                Err(e) => {
+                    eprintln!("serve: write-back failed for {key}: {e:#}");
+                    break;
+                }
+            }
+        }
+        if fenced {
+            eprintln!(
+                "serve: write-back for {key} rejected (stale fleet claim — another daemon \
+                 reclaimed the key)"
+            );
+        } else if !accepted {
+            eprintln!("serve: write-back for {key} dropped (shard lease stayed busy)");
+        }
+        let mut evict = EvictionReport::default();
+        let claim = {
+            let mut shared = ctx.shared.lock().expect("shared lock");
+            if accepted {
+                match shared.store.enforce_limits(
+                    ctx.search.serve.per_gpu_quota,
+                    ctx.search.serve.max_records,
+                ) {
+                    Ok(report) => evict = report,
+                    Err(e) => eprintln!("serve: eviction failed: {e:#}"),
+                }
             }
             shared.metrics.n_searches_done += 1;
             shared.metrics.measurements_paid += n_measurements;
-            shared.metrics.n_evicted_records += evicted;
+            shared.metrics.n_evicted_records += evict.n_evicted;
             shared.pending.remove(&key);
             shared.snapshot = Arc::new(shared.store.snapshot());
+            shared.claims.remove(&key)
+        };
+        // Released only now — after the record is durably appended — so
+        // another daemon's claim can never race ahead of the data.
+        if let Some(lease) = claim {
+            let _ = lease.release();
         }
         if let Some(log) = &ctx.log {
             log.emit(
@@ -235,16 +401,61 @@ fn writer_loop(ctx: &Ctx, rx: Receiver<PoolEvent>) {
                     ("key", Json::str(key)),
                     ("n_energy_measurements", Json::num(n_measurements as f64)),
                     ("sim_time_s", Json::num(sim_time_s)),
-                    ("evicted_records", Json::num(evicted as f64)),
+                    ("evicted_records", Json::num(evict.n_evicted as f64)),
+                    ("accepted", Json::Bool(accepted)),
                 ],
             );
+            for victim in &evict.victims {
+                log.emit(
+                    "job_evicted",
+                    vec![
+                        ("key", Json::str(victim.key.clone())),
+                        ("reason", Json::str(victim.reason)),
+                        ("shard", Json::num(victim.shard as f64)),
+                        ("records", Json::num(victim.n_records as f64)),
+                    ],
+                );
+            }
+        }
+        pump_backlog(ctx);
+    }
+}
+
+/// Move backlogged searches into the worker queue, hottest first,
+/// until the queue refuses or the backlog empties.
+fn pump_backlog(ctx: &Ctx) {
+    loop {
+        let popped = {
+            let mut shared = ctx.shared.lock().expect("shared lock");
+            let Shared { backlog, heat, .. } = &mut *shared;
+            backlog.pop_hottest(heat)
+        };
+        let Some((key, (job, snapshot))) = popped else { return };
+        let submitted = {
+            let mut pool = ctx.pool.lock().expect("pool lock");
+            match pool.as_mut() {
+                Some(p) => p.try_submit_with_snapshot(job.clone(), Some(snapshot.clone())),
+                None => false, // shutting down: run() releases the claims
+            }
+        };
+        if submitted {
+            if let Some(log) = &ctx.log {
+                log.emit(
+                    "job_enqueued",
+                    vec![("key", Json::str(key)), ("via", Json::str("backlog"))],
+                );
+            }
+        } else {
+            let mut shared = ctx.shared.lock().expect("shared lock");
+            shared.backlog.restore(key, (job, snapshot));
+            return;
         }
     }
 }
 
 /// One connection: serve frames until the client disconnects (or asks
 /// for shutdown).
-fn handle_connection(ctx: &Ctx, stream: UnixStream) {
+fn handle_connection(ctx: &Ctx, stream: Stream) {
     let reader = match stream.try_clone() {
         Ok(s) => BufReader::new(s),
         Err(e) => {
@@ -269,7 +480,7 @@ fn handle_connection(ctx: &Ctx, stream: UnixStream) {
         if shutdown {
             ctx.shutting.store(true, Ordering::SeqCst);
             // Wake the accept loop with a throwaway connection.
-            let _ = UnixStream::connect(&ctx.socket_path);
+            let _ = Stream::connect(&ctx.addr);
             break;
         }
     }
@@ -279,9 +490,7 @@ fn handle_connection(ctx: &Ctx, stream: UnixStream) {
 fn handle_frame(ctx: &Ctx, line: &str) -> (Json, bool) {
     match Request::parse_line(line) {
         Err(rej) => (rej.to_json(), false),
-        Ok(Request::Shutdown { id }) => {
-            (Response::ShutdownAck { id }.to_json(), true)
-        }
+        Ok(Request::Shutdown { id }) => (Response::ShutdownAck { id }.to_json(), true),
         Ok(Request::Stats { id }) => (stats_reply(ctx, id).to_json(), false),
         Ok(Request::GetKernel { id, workload, gpu, mode }) => {
             (serve_get_kernel(ctx, id, workload, gpu, mode).to_json(), false)
@@ -290,6 +499,11 @@ fn handle_frame(ctx: &Ctx, line: &str) -> (Json, bool) {
 }
 
 fn stats_reply(ctx: &Ctx, id: String) -> StatsReply {
+    // Counts reflect what this daemon has ingested: the miss path's
+    // per-key refresh pulls foreign write-backs in as they are
+    // requested. No full-store refresh here — stats is polled in tight
+    // loops (wait_for_drain) and must not stall hit replies behind an
+    // all-shard disk scan under the shared lock.
     let shared = ctx.shared.lock().expect("shared lock");
     StatsReply {
         id,
@@ -306,6 +520,11 @@ fn stats_reply(ctx: &Ctx, id: String) -> StatsReply {
         p50_reply_s: shared.metrics.p50_reply_s(),
         p99_reply_s: shared.metrics.p99_reply_s(),
         measurements_paid: shared.metrics.measurements_paid,
+        n_shed: shared.metrics.n_shed,
+        n_fleet_coalesced: shared.metrics.n_fleet_coalesced,
+        backlog_len: shared.backlog.len(),
+        shard_records: shared.store.shard_sizes(),
+        heat_histogram: shared.heat.histogram().to_vec(),
     }
 }
 
@@ -330,6 +549,14 @@ fn serve_get_kernel(
     let key = serve_key(&workload.id(), cfg.gpu.name(), cfg.mode.name(), &config_fingerprint(&cfg));
 
     let mut shared = ctx.shared.lock().expect("shared lock");
+    shared.heat.touch(&key);
+    // Fleet refresh: a search another daemon wrote back since we last
+    // looked at this shard turns this request into a plain hit.
+    match shared.store.refresh_key(&key) {
+        Ok(0) => {}
+        Ok(_) => shared.snapshot = Arc::new(shared.store.snapshot()),
+        Err(e) => eprintln!("serve: shard refresh failed for {key}: {e:#}"),
+    }
     let shard_len = shared.store.shard_len_for(&key);
 
     // Exact hit: reply with the recorded kernel, zero cost.
@@ -381,7 +608,58 @@ fn serve_get_kernel(
         // 0.0 = unknown: no neighbor close enough to estimate from.
         None => (space.fallback(), ServeSource::Fallback, 0.0, 0.0, 0.0),
     };
-    let reserve = !shared.pending.contains(&key);
+
+    // Who searches this key? Local duplicates coalesce on `pending`;
+    // fleet duplicates coalesce on the in-store claim. The claim is
+    // several file ops plus a settle pause, so it runs OUTSIDE the
+    // shared lock — a burst of cold misses must not stall concurrent
+    // hit replies.
+    let mut reserve = false;
+    if !shared.pending.contains(&key) {
+        if ctx.search.fleet.coordinate {
+            drop(shared);
+            let attempt = ctx.inflight.claim(&key);
+            shared = ctx.shared.lock().expect("shared lock");
+            match attempt {
+                Ok(Some(lease)) => {
+                    // Concurrent requests for this key may both have
+                    // claimed while unlocked (same holder — each
+                    // reacquire bumps the epoch). Only the NEWEST
+                    // epoch matches the claim file, so that is the
+                    // lease the write-back fence must check — and
+                    // map-insert order follows lock reacquisition
+                    // order, not claim order, so compare explicitly.
+                    let raced = shared.pending.contains(&key);
+                    let newest = match shared.claims.get(&key) {
+                        Some(held) => lease.epoch() > held.epoch(),
+                        None => true,
+                    };
+                    if newest {
+                        shared.claims.insert(key.clone(), lease);
+                    }
+                    reserve = !raced;
+                }
+                Ok(None) => {
+                    if !shared.pending.contains(&key) {
+                        // Another daemon is already searching this key:
+                        // serve the warm guess, its write-back lands.
+                        shared.metrics.n_fleet_coalesced += 1;
+                    }
+                }
+                Err(e) => {
+                    if !shared.pending.contains(&key) {
+                        eprintln!(
+                            "serve: in-flight claim failed for {key}: {e:#} (running unfenced)"
+                        );
+                        reserve = true;
+                    }
+                }
+            }
+        } else {
+            // Uncoordinated (single-owner) mode: nothing to claim.
+            reserve = true;
+        }
+    }
     if reserve {
         shared.pending.insert(key.clone());
         shared.metrics.n_enqueued += 1;
@@ -392,35 +670,71 @@ fn serve_get_kernel(
     shared.metrics.record_reply(false, t);
     drop(shared);
 
-    // The reply reports what actually happened: a reservation that
-    // cannot be submitted — search queue full (load-shedding: the miss
-    // reply must never wait on a multi-minute search slot) or daemon
-    // shutting down — is rolled back and reported as not enqueued. A
-    // shed key is retried by the next request for it.
+    // The reply reports what actually happened: `enqueued` means the
+    // search was admitted (worker queue or heat-ordered backlog). A
+    // saturated daemon sheds the coldest key instead — a shed key's
+    // claim is released so any daemon's next request for it retries.
     let mut enqueued = false;
+    let mut shed_event: Option<(String, &'static str)> = None;
+    let mut via = "queue";
     if reserve {
         let job = SearchJob { name: key.clone(), workload, cfg };
-        enqueued = {
+        let direct = {
             let mut pool = ctx.pool.lock().expect("pool lock");
             match pool.as_mut() {
-                Some(p) => p.try_submit_with_snapshot(job, Some(snapshot)),
+                Some(p) => p.try_submit_with_snapshot(job.clone(), Some(snapshot.clone())),
                 None => false, // shutting down
             }
         };
-        if enqueued {
-            if let Some(log) = &ctx.log {
-                log.emit(
-                    "job_enqueued",
-                    vec![
-                        ("key", Json::str(key.clone())),
-                        ("queue_depth", Json::num(queue_depth as f64)),
-                    ],
-                );
-            }
+        if direct {
+            enqueued = true;
         } else {
             let mut shared = ctx.shared.lock().expect("shared lock");
-            shared.pending.remove(&key);
-            shared.metrics.n_enqueued -= 1;
+            let Shared { backlog, heat, pending, claims, metrics, .. } = &mut *shared;
+            match backlog.offer(key.clone(), (job, snapshot), heat) {
+                Offer::Queued => {
+                    enqueued = true;
+                    via = "backlog";
+                }
+                Offer::Displaced { key: shed_key, .. } => {
+                    enqueued = true;
+                    via = "backlog";
+                    pending.remove(&shed_key);
+                    metrics.n_enqueued -= 1;
+                    metrics.n_shed += 1;
+                    if let Some(lease) = claims.remove(&shed_key) {
+                        let _ = lease.release();
+                    }
+                    shed_event = Some((shed_key, "displaced_by_hotter_key"));
+                }
+                Offer::Rejected { key: cold_key, .. } => {
+                    pending.remove(&cold_key);
+                    metrics.n_enqueued -= 1;
+                    metrics.n_shed += 1;
+                    if let Some(lease) = claims.remove(&cold_key) {
+                        let _ = lease.release();
+                    }
+                    shed_event = Some((cold_key, "colder_than_backlog"));
+                }
+            }
+        }
+    }
+    if let Some(log) = &ctx.log {
+        if enqueued {
+            log.emit(
+                "job_enqueued",
+                vec![
+                    ("key", Json::str(key.clone())),
+                    ("queue_depth", Json::num(queue_depth as f64)),
+                    ("via", Json::str(via)),
+                ],
+            );
+        }
+        if let Some((shed_key, reason)) = shed_event {
+            log.emit(
+                "job_shed",
+                vec![("key", Json::str(shed_key)), ("reason", Json::str(reason))],
+            );
         }
     }
     emit_served(ctx, &key, "miss", source, t);

@@ -33,6 +33,11 @@ pub struct ServeMetrics {
     pub n_enqueued: usize,
     pub n_searches_done: usize,
     pub n_evicted_records: usize,
+    /// Misses shed by admission control (queue + backlog saturated and
+    /// the key was colder than everything waiting).
+    pub n_shed: usize,
+    /// Misses coalesced into another fleet member's in-flight search.
+    pub n_fleet_coalesced: usize,
     /// NVML measurements paid by completed background searches.
     pub measurements_paid: usize,
     /// Ring buffer of the last [`REPLY_WINDOW`] reply times.
@@ -81,13 +86,16 @@ impl ServeMetrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} hits={} misses={} hit_rate={:.2} enqueued={} searched={} \
-             evicted={} p50={:.2}ms p99={:.2}ms measurements_paid={}",
+             shed={} fleet_coalesced={} evicted={} p50={:.2}ms p99={:.2}ms \
+             measurements_paid={}",
             self.n_requests,
             self.n_hits,
             self.n_misses,
             self.hit_rate(),
             self.n_enqueued,
             self.n_searches_done,
+            self.n_shed,
+            self.n_fleet_coalesced,
             self.n_evicted_records,
             self.p50_reply_s() * 1e3,
             self.p99_reply_s() * 1e3,

@@ -1,32 +1,39 @@
-//! The kernel-serving layer: a long-running daemon that answers
-//! `get_kernel(workload, gpu, mode)` over a Unix-domain socket.
+//! The kernel-serving layer: long-running daemons that answer
+//! `get_kernel(workload, gpu, mode)` over `unix:` or `tcp:` sockets.
 //!
 //! This is where the paper's tuning cost amortizes at deployment time:
-//! a fleet serving repeat traffic should pay for a search **once** and
-//! serve every later request from the store at zero measurement cost.
-//! The pieces:
+//! a fleet serving repeat traffic should pay for a search **once
+//! fleet-wide** and serve every later request from the shared store at
+//! zero measurement cost. The pieces:
 //!
 //! * [`protocol`] — versioned, line-delimited JSON frames
-//!   (request/response/error, stable error codes);
+//!   (request/response/error, stable error codes), identical on both
+//!   wires;
 //! * [`daemon`] — the socket server: exact hits reply instantly from
 //!   the sharded store; misses reply with a warm-start guess and
 //!   enqueue a real search on a daemon-owned
 //!   [`crate::coordinator::WorkerPool`], whose outcome is written back
-//!   so the next request hits;
+//!   so the next request hits. N daemons can mount one store: misses
+//!   coalesce fleet-wide through in-store claims, shard maintenance is
+//!   lease-fenced, and a saturated search queue admits hot keys and
+//!   sheds cold ones ([`crate::fleet`]);
 //! * [`client`] — a small blocking client (`ecokernel query`, the
-//!   serving-fleet example);
+//!   fleet examples);
 //! * [`metrics`] — hit rate, p50/p99 reply time on the simulated
-//!   clock, queue depth, measurement-cost ledger.
+//!   clock, queue depth, shed/coalesce counters, measurement-cost
+//!   ledger.
 //!
 //! Storage is [`crate::store::ShardedStore`]: the tuning store split
 //! across N append-only shard files with last-served LRU eviction and
-//! per-GPU record quotas (the `[serve]` config section).
+//! per-GPU record quotas (the `[serve]` config section); fleet
+//! coordination knobs live in `[fleet]`.
 
 pub mod client;
 pub mod daemon;
 pub mod metrics;
 pub mod protocol;
 
+pub use crate::fleet::ServeAddr;
 pub use client::ServeClient;
 pub use daemon::{Daemon, DaemonConfig, DaemonHandle};
 pub use metrics::ServeMetrics;

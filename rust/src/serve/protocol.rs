@@ -125,17 +125,24 @@ impl Request {
             }
             None => return Err(Reject::new(id, error_code::BAD_REQUEST, "frame missing 'v'")),
         }
-        let id = id.ok_or_else(|| Reject::new(None, error_code::BAD_REQUEST, "frame missing 'id'"))?;
+        let id = id
+            .ok_or_else(|| Reject::new(None, error_code::BAD_REQUEST, "frame missing 'id'"))?;
         let op = v
             .get("op")
             .and_then(|x| x.as_str())
-            .ok_or_else(|| Reject::new(Some(id.clone()), error_code::BAD_REQUEST, "frame missing 'op'"))?;
+            .ok_or_else(|| {
+                Reject::new(Some(id.clone()), error_code::BAD_REQUEST, "frame missing 'op'")
+            })?;
         match op {
             "stats" => Ok(Request::Stats { id }),
             "shutdown" => Ok(Request::Shutdown { id }),
             "get_kernel" => {
                 let wv = v.get("workload").ok_or_else(|| {
-                    Reject::new(Some(id.clone()), error_code::BAD_REQUEST, "get_kernel missing 'workload'")
+                    Reject::new(
+                        Some(id.clone()),
+                        error_code::BAD_REQUEST,
+                        "get_kernel missing 'workload'",
+                    )
                 })?;
                 let workload = parse_workload(wv).map_err(|msg| {
                     Reject::new(Some(id.clone()), error_code::UNKNOWN_WORKLOAD, msg)
@@ -293,6 +300,17 @@ pub struct StatsReply {
     pub p99_reply_s: f64,
     /// NVML measurements the daemon's background searches have paid.
     pub measurements_paid: usize,
+    /// Misses shed by admission control (queue + backlog saturated).
+    pub n_shed: usize,
+    /// Misses coalesced into another fleet member's in-flight search.
+    pub n_fleet_coalesced: usize,
+    /// Keys currently heat-queued behind a saturated search queue.
+    pub backlog_len: usize,
+    /// Records per shard (the store-size histogram).
+    pub shard_records: Vec<usize>,
+    /// Key counts per heat bucket (log2 buckets, coldest first — see
+    /// [`crate::fleet::HeatSketch::histogram`]).
+    pub heat_histogram: Vec<usize>,
 }
 
 impl StatsReply {
@@ -318,6 +336,17 @@ impl StatsReply {
                     ("p50_reply_s", Json::num(self.p50_reply_s)),
                     ("p99_reply_s", Json::num(self.p99_reply_s)),
                     ("measurements_paid", Json::num(self.measurements_paid as f64)),
+                    ("n_shed", Json::num(self.n_shed as f64)),
+                    ("n_fleet_coalesced", Json::num(self.n_fleet_coalesced as f64)),
+                    ("backlog_len", Json::num(self.backlog_len as f64)),
+                    (
+                        "shard_records",
+                        Json::arr(self.shard_records.iter().map(|&n| Json::num(n as f64))),
+                    ),
+                    (
+                        "heat_histogram",
+                        Json::arr(self.heat_histogram.iter().map(|&n| Json::num(n as f64))),
+                    ),
                 ]),
             ),
         ])
@@ -341,8 +370,26 @@ impl StatsReply {
             p50_reply_s: get_f64(s, "p50_reply_s")?,
             p99_reply_s: get_f64(s, "p99_reply_s")?,
             measurements_paid: get_f64(s, "measurements_paid")? as usize,
+            // Fleet-era fields: tolerated as absent so frames from a
+            // pre-fleet daemon still parse.
+            n_shed: opt_usize(s, "n_shed"),
+            n_fleet_coalesced: opt_usize(s, "n_fleet_coalesced"),
+            backlog_len: opt_usize(s, "backlog_len"),
+            shard_records: opt_usize_arr(s, "shard_records"),
+            heat_histogram: opt_usize_arr(s, "heat_histogram"),
         })
     }
+}
+
+fn opt_usize(v: &Json, key: &str) -> usize {
+    v.get(key).and_then(|x| x.as_f64()).unwrap_or(0.0) as usize
+}
+
+fn opt_usize_arr(v: &Json, key: &str) -> Vec<usize> {
+    v.get(key)
+        .and_then(|a| a.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|f| f as usize).collect())
+        .unwrap_or_default()
 }
 
 /// Any response frame, as parsed by the client.
@@ -541,10 +588,35 @@ mod tests {
             p50_reply_s: 5e-5,
             p99_reply_s: 2.1e-3,
             measurements_paid: 140,
+            n_shed: 4,
+            n_fleet_coalesced: 2,
+            backlog_len: 3,
+            shard_records: vec![2, 0, 4, 3],
+            heat_histogram: vec![1, 0, 2, 0, 0, 0, 0, 1],
         };
         let line = reply.to_json().to_string();
         match Response::parse_line(&line).unwrap() {
             Response::Stats(back) => assert_eq!(back, reply),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_reply_tolerates_missing_fleet_fields() {
+        // A frame from a pre-fleet daemon: no shed/backlog/shard data.
+        let line = r#"{"v":1,"id":"c3","ok":true,"op":"stats","stats":{
+            "n_requests":1,"n_hits":1,"n_misses":0,"n_enqueued":0,"n_searches_done":0,
+            "n_evicted_records":0,"queue_depth":0,"n_records":1,"n_shards":2,
+            "hit_rate":1.0,"p50_reply_s":1e-5,"p99_reply_s":1e-5,"measurements_paid":0}}"#
+            .replace('\n', "");
+        match Response::parse_line(&line).unwrap() {
+            Response::Stats(back) => {
+                assert_eq!(back.n_requests, 1);
+                assert_eq!(back.n_shed, 0);
+                assert_eq!(back.backlog_len, 0);
+                assert!(back.shard_records.is_empty());
+                assert!(back.heat_histogram.is_empty());
+            }
             other => panic!("{other:?}"),
         }
     }

@@ -274,7 +274,12 @@ mod tests {
         assert!((0.50..0.65).contains(&o1.sm_efficiency), "{}", o1.sm_efficiency);
 
         let o2 = occupancy(&sched(8, 16, 4, 2, 16), 256, &spec);
-        assert!(o2.sm_efficiency > o1.sm_efficiency, "{} vs {}", o2.sm_efficiency, o1.sm_efficiency);
+        assert!(
+            o2.sm_efficiency > o1.sm_efficiency,
+            "{} vs {}",
+            o2.sm_efficiency,
+            o1.sm_efficiency
+        );
     }
 
     #[test]

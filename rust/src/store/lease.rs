@@ -1,0 +1,305 @@
+//! Advisory lease files: crash-tolerant, epoch-fenced exclusive
+//! ownership over pieces of a shared store.
+//!
+//! A fleet of serving daemons mounts one sharded store. Appends are
+//! already safe (O_APPEND whole-line writes interleave), but shard
+//! **rewrites** (eviction, rebalance, torn-tail repair) and in-flight
+//! search claims need an owner. A lease is one small JSON file:
+//!
+//! ```text
+//! {"holder":"daemon-412-0","epoch":7,"deadline_ms":1738229400123,"payload":"..."}
+//! ```
+//!
+//! * **acquire** — succeeds when the file is absent, expired, or
+//!   already ours; every successful acquire bumps the **epoch**, so a
+//!   holder that lost its lease can be told apart from the current one.
+//! * **heartbeat** — [`Lease::renew`] extends the deadline while work
+//!   is in progress; a crashed holder stops renewing and its lease
+//!   expires after the TTL, letting any other daemon reclaim it.
+//! * **fencing** — [`Lease::is_current`] re-reads the file and checks
+//!   `(holder, epoch)`; a stale holder's guarded write (e.g. a search
+//!   write-back after its claim was reclaimed) is rejected instead of
+//!   clobbering the new owner's work.
+//!
+//! The lock is *advisory* and file-based: acquisition is
+//! write-then-verify (atomic rename, then a short settle pause and a
+//! read-back), which resolves races by last-writer-wins — at most one
+//! contender sees itself on disk after the settle window. That is the
+//! right trade for this store: leases guard multi-millisecond
+//! maintenance and multi-second searches, not nanosecond-scale state.
+
+use crate::util::Json;
+use anyhow::Context as _;
+use std::path::{Path, PathBuf};
+
+/// Settle pause between writing a candidate lease and the read-back
+/// verdict: long enough for a racing writer's rename to land.
+const SETTLE_MS: u64 = 2;
+
+/// Milliseconds since the Unix epoch (the lease clock).
+pub fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Snapshot of a lease file's contents.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeaseInfo {
+    pub holder: String,
+    pub epoch: u64,
+    pub deadline_ms: u64,
+    /// Free-form payload (the in-flight tables store the serve key
+    /// here, so hash-named claim files stay self-describing).
+    pub payload: Option<String>,
+}
+
+impl LeaseInfo {
+    pub fn is_live(&self, now: u64) -> bool {
+        self.deadline_ms > now
+    }
+}
+
+/// Read a lease file. `None` when the file is absent — or unreadable
+/// as a lease, which the next acquire simply overwrites (a torn lease
+/// file must never wedge the store).
+pub fn read_lease(path: &Path) -> anyhow::Result<Option<LeaseInfo>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("read lease {path:?}")),
+    };
+    Ok(parse_lease(&text))
+}
+
+fn parse_lease(text: &str) -> Option<LeaseInfo> {
+    let v = Json::parse(text).ok()?;
+    Some(LeaseInfo {
+        holder: v.get("holder")?.as_str()?.to_string(),
+        epoch: v.get("epoch")?.as_f64()? as u64,
+        deadline_ms: v.get("deadline_ms")?.as_f64()? as u64,
+        payload: v.get("payload").and_then(|p| p.as_str()).map(|s| s.to_string()),
+    })
+}
+
+/// A lease this process believes it holds. Guarded operations must
+/// check [`Lease::is_current`] (or go through an API that does) —
+/// holding the struct alone proves nothing once the TTL has passed.
+/// Cloning copies the identity, not the ownership: clones renew and
+/// verify against the same `(holder, epoch)`.
+#[derive(Debug, Clone)]
+pub struct Lease {
+    path: PathBuf,
+    holder: String,
+    epoch: u64,
+    ttl_ms: u64,
+    payload: Option<String>,
+}
+
+impl Lease {
+    /// Try to acquire the lease at `path` for `holder`. Returns
+    /// `Ok(None)` when another holder's live lease is in the way (or a
+    /// racing acquirer won the write).
+    pub fn acquire(
+        path: &Path,
+        holder: &str,
+        ttl_ms: u64,
+        payload: Option<&str>,
+    ) -> anyhow::Result<Option<Lease>> {
+        let now = now_ms();
+        let cur = read_lease(path)?;
+        if let Some(cur) = &cur {
+            if cur.is_live(now) && cur.holder != holder {
+                return Ok(None);
+            }
+        }
+        let lease = Lease {
+            path: path.to_path_buf(),
+            holder: holder.to_string(),
+            epoch: cur.map(|c| c.epoch).unwrap_or(0) + 1,
+            ttl_ms,
+            payload: payload.map(|s| s.to_string()),
+        };
+        lease.write(now + ttl_ms)?;
+        // Let a racing writer's rename land before the verdict: after
+        // the settle pause, last-writer-wins and every loser sees the
+        // winner on disk.
+        std::thread::sleep(std::time::Duration::from_millis(SETTLE_MS));
+        if lease.is_current()? {
+            Ok(Some(lease))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Heartbeat: extend the deadline by one TTL if the lease is still
+    /// ours. Returns `false` when it was lost (expired and reclaimed).
+    /// Same write-then-settle-then-verify shape as acquire, so a renew
+    /// racing a reclaim converges on one on-disk owner before either
+    /// side trusts its verdict (heartbeating at ~TTL/3 keeps renewals
+    /// far from the deadline, making that race a crash-recovery edge).
+    pub fn renew(&self) -> anyhow::Result<bool> {
+        if !self.is_current()? {
+            return Ok(false);
+        }
+        self.write(now_ms() + self.ttl_ms)?;
+        std::thread::sleep(std::time::Duration::from_millis(SETTLE_MS));
+        self.is_current()
+    }
+
+    /// Fencing check: does the file still name this `(holder, epoch)`,
+    /// unexpired?
+    pub fn is_current(&self) -> anyhow::Result<bool> {
+        Ok(match read_lease(&self.path)? {
+            Some(info) => {
+                info.holder == self.holder && info.epoch == self.epoch && info.is_live(now_ms())
+            }
+            None => false,
+        })
+    }
+
+    /// Release the lease: expire it in place (epoch preserved, so the
+    /// next acquire still fences us out). Releasing a lease we already
+    /// lost is a no-op.
+    pub fn release(&self) -> anyhow::Result<()> {
+        if self.is_current()? {
+            self.write(0)?;
+        }
+        Ok(())
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn holder(&self) -> &str {
+        &self.holder
+    }
+
+    pub fn payload(&self) -> Option<&str> {
+        self.payload.as_deref()
+    }
+
+    /// Write the lease file atomically (per-holder tmp + rename).
+    fn write(&self, deadline_ms: u64) -> anyhow::Result<()> {
+        let mut fields = vec![
+            ("holder", Json::str(self.holder.clone())),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("deadline_ms", Json::num(deadline_ms as f64)),
+        ];
+        if let Some(p) = &self.payload {
+            fields.push(("payload", Json::str(p.clone())));
+        }
+        let tmp = self.path.with_extension(format!("{:08x}.tmp", holder_tag(&self.holder)));
+        let text = Json::obj(fields).to_string();
+        std::fs::write(&tmp, &text).with_context(|| format!("write lease tmp {tmp:?}"))?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("replace lease {:?}", self.path))?;
+        Ok(())
+    }
+}
+
+/// Short stable tag of a holder id (tmp-file disambiguation between
+/// racing acquirers).
+fn holder_tag(holder: &str) -> u32 {
+    let mut h: u32 = 0x811c9dc5;
+    for b in holder.as_bytes() {
+        h ^= *b as u32;
+        h = h.wrapping_mul(0x01000193);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_lease(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ecokernel_lease_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("lease.json")
+    }
+
+    #[test]
+    fn acquire_is_exclusive_until_released() {
+        let path = tmp_lease("exclusive");
+        let a = Lease::acquire(&path, "a", 60_000, None).unwrap().expect("a acquires");
+        assert!(a.is_current().unwrap());
+        // A live foreign lease blocks b.
+        assert!(Lease::acquire(&path, "b", 60_000, None).unwrap().is_none());
+        // Release frees it; the epoch advances across owners.
+        a.release().unwrap();
+        let b = Lease::acquire(&path, "b", 60_000, None).unwrap().expect("b acquires");
+        assert!(b.epoch() > a.epoch());
+        assert!(!a.is_current().unwrap(), "released lease is fenced out");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn expired_lease_is_reclaimed_and_old_holder_fenced() {
+        let path = tmp_lease("expiry");
+        let a = Lease::acquire(&path, "a", 50, None).unwrap().expect("a acquires");
+        // Simulated crash: a stops renewing; after the TTL, b reclaims.
+        std::thread::sleep(std::time::Duration::from_millis(120));
+        assert!(!a.is_current().unwrap(), "expired lease is no longer current");
+        let b = Lease::acquire(&path, "b", 60_000, None).unwrap().expect("b reclaims");
+        assert!(b.is_current().unwrap());
+        assert!(b.epoch() > a.epoch(), "reclaim bumps the epoch");
+        // The crashed holder's guarded writes must now be rejected.
+        assert!(!a.is_current().unwrap());
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn renew_extends_and_fails_after_takeover() {
+        let path = tmp_lease("renew");
+        let a = Lease::acquire(&path, "a", 60, None).unwrap().expect("a acquires");
+        for _ in 0..4 {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+            assert!(a.renew().unwrap(), "heartbeat keeps the lease alive past one TTL");
+        }
+        // Stop heartbeating, let it expire, let b take over.
+        std::thread::sleep(std::time::Duration::from_millis(130));
+        let b = Lease::acquire(&path, "b", 60_000, None).unwrap().expect("b reclaims");
+        assert!(!a.renew().unwrap(), "renew after takeover reports the loss");
+        assert!(b.is_current().unwrap(), "a failed renew does not disturb the new owner");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn payload_travels_with_the_lease() {
+        let path = tmp_lease("payload");
+        let a = Lease::acquire(&path, "a", 60_000, Some("mm1|a100|energy_aware|fp"))
+            .unwrap()
+            .expect("acquires");
+        assert_eq!(a.payload(), Some("mm1|a100|energy_aware|fp"));
+        let info = read_lease(&path).unwrap().expect("lease on disk");
+        assert_eq!(info.payload.as_deref(), Some("mm1|a100|energy_aware|fp"));
+        assert_eq!(info.holder, "a");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn corrupt_lease_file_reads_as_absent_and_is_overwritten() {
+        let path = tmp_lease("corrupt");
+        std::fs::write(&path, "{torn").unwrap();
+        assert_eq!(read_lease(&path).unwrap(), None);
+        let a = Lease::acquire(&path, "a", 60_000, None).unwrap().expect("acquires over torn file");
+        assert!(a.is_current().unwrap());
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn same_holder_reacquires_its_own_live_lease() {
+        let path = tmp_lease("reacquire");
+        let a1 = Lease::acquire(&path, "a", 60_000, None).unwrap().expect("first");
+        let a2 = Lease::acquire(&path, "a", 60_000, None).unwrap().expect("same holder again");
+        assert!(a2.epoch() > a1.epoch(), "reacquire still bumps the epoch");
+        assert!(!a1.is_current().unwrap(), "the older guard is fenced");
+        assert!(a2.is_current().unwrap());
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+}

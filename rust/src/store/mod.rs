@@ -21,13 +21,15 @@
 //! Enabled via [`crate::config::StoreConfig`] (`--store DIR` on the
 //! CLI); the stateless path is untouched when no store is configured.
 
+pub mod lease;
 pub mod record;
 pub mod sharded;
 pub mod similarity;
 pub mod transfer;
 
+pub use lease::{Lease, LeaseInfo};
 pub use record::{config_fingerprint, StoredKernel, TuningRecord, SCHEMA_VERSION};
-pub use sharded::{serve_key, ShardedStore};
+pub use sharded::{serve_key, AppendOutcome, EvictedKey, EvictionReport, ShardedStore};
 pub use similarity::gemm_distance;
 pub use transfer::WarmStart;
 
@@ -37,6 +39,7 @@ use crate::workload::Workload;
 use anyhow::{anyhow, Context as _};
 use std::collections::{BTreeMap, HashSet};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// File name of the store inside its directory.
 pub const STORE_FILE: &str = "tuning_store.jsonl";
@@ -45,8 +48,8 @@ pub const STORE_FILE: &str = "tuning_store.jsonl";
 /// the single append path shared by the flat store, the sharded store,
 /// and the LRU sidecar. Payload and newline go down in ONE write so
 /// concurrent appenders interleave whole lines and a crash can tear at
-/// most the final line.
-pub(crate) fn append_jsonl(path: &Path, value: &Json) -> anyhow::Result<()> {
+/// most the final line. Returns the bytes written (line + newline).
+pub(crate) fn append_jsonl(path: &Path, value: &Json) -> anyhow::Result<usize> {
     use std::io::Write as _;
     let mut f = std::fs::OpenOptions::new()
         .create(true)
@@ -56,7 +59,7 @@ pub(crate) fn append_jsonl(path: &Path, value: &Json) -> anyhow::Result<()> {
     let mut line = value.to_string();
     line.push('\n');
     f.write_all(line.as_bytes()).with_context(|| format!("append to {path:?}"))?;
-    Ok(())
+    Ok(line.len())
 }
 
 /// Append one record to a store directory **without parsing the store**
@@ -64,7 +67,8 @@ pub(crate) fn append_jsonl(path: &Path, value: &Json) -> anyhow::Result<()> {
 /// consult a shared parsed snapshot instead of reopening the file.
 pub fn append_record(dir: &Path, rec: &TuningRecord) -> anyhow::Result<()> {
     std::fs::create_dir_all(dir).with_context(|| format!("create tuning store dir {dir:?}"))?;
-    append_jsonl(&dir.join(STORE_FILE), &rec.to_json())
+    append_jsonl(&dir.join(STORE_FILE), &rec.to_json())?;
+    Ok(())
 }
 
 /// Nearest-neighbor selection shared by [`TuningStore`] and
@@ -102,12 +106,15 @@ where
     out
 }
 
-/// An open tuning store: the on-disk JSONL file plus its parsed records.
+/// An open tuning store: the on-disk JSONL file plus its parsed
+/// records. Records are held as `Arc<TuningRecord>` so snapshots and
+/// the sharded store share one allocation per record (ROADMAP
+/// "Snapshot incrementality": cloning a snapshot is pointer clones).
 #[derive(Debug, Clone)]
 pub struct TuningStore {
     dir: PathBuf,
     path: PathBuf,
-    records: Vec<TuningRecord>,
+    records: Vec<Arc<TuningRecord>>,
 }
 
 /// Aggregate store statistics (the `ecokernel cache stats` view).
@@ -145,7 +152,7 @@ impl TuningStore {
                     .map_err(|e| anyhow!("{path:?} line {}: {e}", lineno + 1))?;
                 let rec = TuningRecord::from_json(&v)
                     .map_err(|e| anyhow!("{path:?} line {}: {e}", lineno + 1))?;
-                records.push(rec);
+                records.push(Arc::new(rec));
             }
         }
         Ok(TuningStore { dir: dir.to_path_buf(), path, records })
@@ -155,7 +162,7 @@ impl TuningStore {
         &self.dir
     }
 
-    pub fn records(&self) -> &[TuningRecord] {
+    pub fn records(&self) -> &[Arc<TuningRecord>] {
         &self.records
     }
 
@@ -171,7 +178,7 @@ impl TuningStore {
     /// interleave whole lines, never partial ones at these sizes).
     pub fn append(&mut self, rec: TuningRecord) -> anyhow::Result<()> {
         append_jsonl(&self.path, &rec.to_json())?;
-        self.records.push(rec);
+        self.records.push(Arc::new(rec));
         Ok(())
     }
 
@@ -183,25 +190,35 @@ impl TuningStore {
     pub fn exact_hit(&self, workload: Workload, cfg: &SearchConfig) -> Option<&TuningRecord> {
         let id = workload.id();
         let fp = config_fingerprint(cfg);
-        self.records.iter().rev().find(|r| {
-            r.workload_id == id
-                && r.gpu == cfg.gpu.name()
-                && r.mode == cfg.mode.name()
-                && r.fingerprint == fp
-        })
+        self.records
+            .iter()
+            .rev()
+            .find(|r| {
+                r.workload_id == id
+                    && r.gpu == cfg.gpu.name()
+                    && r.mode == cfg.mode.name()
+                    && r.fingerprint == fp
+            })
+            .map(|r| r.as_ref())
     }
 
     /// Nearest cached neighbors of `workload` on `gpu`: the latest
     /// record per foreign workload id, sorted by shape distance
     /// (deterministic tie-break on workload id), truncated to `max_n`.
-    pub fn neighbors(&self, workload: Workload, gpu: &str, max_n: usize) -> Vec<(&TuningRecord, f64)> {
-        neighbors_among(&self.records, workload, gpu, max_n)
+    pub fn neighbors(
+        &self,
+        workload: Workload,
+        gpu: &str,
+        max_n: usize,
+    ) -> Vec<(&TuningRecord, f64)> {
+        neighbors_among(self.records.iter().map(|r| r.as_ref()), workload, gpu, max_n)
     }
 
     /// Build an in-memory snapshot over externally-loaded records (the
-    /// sharded store hands these to workers). The snapshot reads like
-    /// any other store; appending to it writes `dir/tuning_store.jsonl`.
-    pub fn from_records(dir: &Path, records: Vec<TuningRecord>) -> TuningStore {
+    /// sharded store hands these to workers as pointer clones). The
+    /// snapshot reads like any other store; appending to it writes
+    /// `dir/tuning_store.jsonl`.
+    pub fn from_records(dir: &Path, records: Vec<Arc<TuningRecord>>) -> TuningStore {
         TuningStore { dir: dir.to_path_buf(), path: dir.join(STORE_FILE), records }
     }
 
@@ -224,7 +241,7 @@ impl TuningStore {
         if removed == 0 {
             return Ok(0);
         }
-        let kept: Vec<TuningRecord> =
+        let kept: Vec<Arc<TuningRecord>> =
             keep_rev.into_iter().map(|i| self.records[i].clone()).collect();
         let mut text = String::new();
         for r in &kept {
@@ -241,7 +258,7 @@ impl TuningStore {
     }
 
     pub fn stats(&self) -> StoreStats {
-        stats_among(&self.records)
+        stats_among(self.records.iter().map(|r| r.as_ref()))
     }
 }
 
@@ -311,7 +328,9 @@ mod tests {
             store.append(rec2.clone()).unwrap();
         }
         let store = TuningStore::open(&dir).unwrap();
-        assert_eq!(store.records(), &[rec1, rec2]);
+        let loaded: Vec<TuningRecord> =
+            store.records().iter().map(|r| r.as_ref().clone()).collect();
+        assert_eq!(loaded, vec![rec1, rec2]);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,5 +1,6 @@
 //! The fleet-scale store layout behind the serving daemon: the tuning
-//! store sharded across N append-only JSONL files, with eviction.
+//! store sharded across N append-only JSONL files, with eviction,
+//! shared-ownership leases, and incremental refresh.
 //!
 //! A single `tuning_store.jsonl` is fine for one experimenter; a daemon
 //! serving fleet traffic accumulates orders of magnitude more keys and
@@ -14,29 +15,51 @@
 //!   quota and a global record cap, both evicting the least-recently
 //!   **served** keys first (an LRU over serve traffic, persisted in a
 //!   `served.jsonl` sidecar), so hot keys stay cached while dead
-//!   workloads age out.
+//!   workloads age out. [`ShardedStore::enforce_limits`] reports every
+//!   victim (key, shard, reason) for the serve audit stream.
+//! * **fleet mode** ([`ShardedStore::open_fleet`]) — N daemons mount
+//!   one store concurrently. Appends and shard rewrites take per-shard
+//!   advisory leases (`leases/shard_XXX.json`, see
+//!   [`crate::store::lease`]); a crashed holder's lease expires and is
+//!   reclaimed, and rewrites bump a per-shard generation counter
+//!   (`leases/gen_XXX`) so the other daemons' **incremental refresh**
+//!   ([`ShardedStore::refresh`]) knows when to re-read a whole shard
+//!   instead of just its appended tail.
 //! * **legacy import** — a PR-1 single-file store found in the same
 //!   directory is folded into the shards on first open, then archived
 //!   (`tuning_store.jsonl.imported`) so evicted records cannot
 //!   resurrect from it.
 //!
-//! Configured via the `[serve]` section ([`crate::config::ServeConfig`]).
+//! Records are held as `Arc<TuningRecord>`: a worker snapshot
+//! ([`ShardedStore::snapshot`]) is a vector of pointer clones, not an
+//! O(N) deep copy, so rebuilding it after every write-back no longer
+//! stalls hit replies on a large store.
+//!
+//! Configured via the `[serve]` and `[fleet]` sections
+//! ([`crate::config::ServeConfig`], [`crate::config::FleetConfig`]).
 
+use super::lease::Lease;
 use super::{neighbors_among, StoreStats, TuningRecord, TuningStore, STORE_FILE};
 use crate::config::SearchConfig;
+use crate::util::Json;
 use crate::workload::Workload;
 use anyhow::{anyhow, Context as _};
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Subdirectory of the store dir holding the shard files.
 pub const SHARDS_DIR: &str = "shards";
+/// Subdirectory of the store dir holding lease + generation files.
+pub const LEASES_DIR: &str = "leases";
 /// Shard-layout metadata file (shard count + layout version).
 pub const META_FILE: &str = "meta.json";
 /// Append-only sidecar of (key, tick) last-served events.
 pub const SERVED_FILE: &str = "served.jsonl";
 /// Version of the on-disk shard layout; bump on incompatible change.
 pub const LAYOUT_VERSION: u64 = 1;
+/// Lease name guarding `served.jsonl` compaction.
+pub const SERVED_LEASE_NAME: &str = "served";
 
 /// The serve key: the exact-hit identity of a record, also the unit of
 /// shard routing and eviction.
@@ -50,7 +73,7 @@ fn record_key(r: &TuningRecord) -> String {
 
 /// FNV-1a — stable across runs and platforms (shard routing must not
 /// depend on `DefaultHasher`'s unspecified, per-process seed).
-fn fnv1a(key: &str) -> u64 {
+pub(crate) fn fnv1a(key: &str) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for b in key.as_bytes() {
         h ^= *b as u64;
@@ -59,88 +82,250 @@ fn fnv1a(key: &str) -> u64 {
     h
 }
 
+/// Identity of one fleet member: lease holder id + lease TTL.
+#[derive(Debug, Clone)]
+pub struct FleetIdentity {
+    pub holder: String,
+    pub lease_ttl_ms: u64,
+}
+
+/// One evicted serve key, for the audit stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvictedKey {
+    pub key: String,
+    pub gpu: String,
+    pub shard: usize,
+    pub n_records: usize,
+    /// `"per_gpu_quota"` or `"max_records"`.
+    pub reason: &'static str,
+}
+
+/// Outcome of one [`ShardedStore::enforce_limits`] pass.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EvictionReport {
+    /// Records actually removed.
+    pub n_evicted: usize,
+    /// Victim keys, in eviction order.
+    pub victims: Vec<EvictedKey>,
+    /// Shards whose eviction was skipped because another daemon held
+    /// their lease (retried on the next pass).
+    pub n_skipped_shards: usize,
+}
+
+/// Outcome of a non-blocking fleet append attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppendOutcome {
+    /// Record written (memory + disk).
+    Appended,
+    /// The shard's lease is held by another live member right now —
+    /// retry later, without holding any caller-side locks.
+    LeaseBusy,
+    /// The guarding claim is stale (the key was reclaimed by another
+    /// daemon): the record must NOT be written.
+    FencedOut,
+}
+
+/// Result of a lease attempt for a guarded store operation.
+enum Guard {
+    /// Single-owner store: no lease needed.
+    Unneeded,
+    Held(Lease),
+    /// Another live daemon holds it.
+    Busy,
+}
+
+impl Guard {
+    fn available(&self) -> bool {
+        !matches!(self, Guard::Busy)
+    }
+
+    fn release(self) {
+        if let Guard::Held(lease) = self {
+            let _ = lease.release();
+        }
+    }
+}
+
+/// One shard file parsed: records, bytes consumed (through the last
+/// intact line), and whether a torn tail was dropped.
+struct ShardLoad {
+    records: Vec<Arc<TuningRecord>>,
+    consumed: u64,
+    torn: bool,
+}
+
 /// A sharded tuning store rooted at a store directory.
 #[derive(Debug)]
 pub struct ShardedStore {
     dir: PathBuf,
     shards_dir: PathBuf,
+    leases_dir: PathBuf,
     n_shards: usize,
-    shards: Vec<Vec<TuningRecord>>,
+    shards: Vec<Vec<Arc<TuningRecord>>>,
+    /// Bytes of each shard file already ingested into memory.
+    offsets: Vec<u64>,
+    /// Last observed per-shard rewrite generation (fleet mode).
+    gens: Vec<u64>,
     /// Serve key -> last-served logical tick (0 = never served).
     served: HashMap<String, u64>,
     tick: u64,
     /// Lines appended to `served.jsonl` since the last compaction.
     served_appends: usize,
+    /// `Some` when this store is one member of a multi-daemon fleet.
+    fleet: Option<FleetIdentity>,
 }
 
 impl ShardedStore {
     /// Open (creating if needed) a sharded store with `n_shards`
-    /// shards. An existing layout with a different shard count is
-    /// rebalanced; a PR-1 single-file store in `dir` is imported when
-    /// the shards are empty.
+    /// shards, as the sole owner. An existing layout with a different
+    /// shard count is rebalanced; a PR-1 single-file store in `dir` is
+    /// imported when the shards are empty.
     pub fn open(dir: &Path, n_shards: usize) -> anyhow::Result<ShardedStore> {
+        Self::open_inner(dir, n_shards, None)
+    }
+
+    /// Open as one member of a daemon fleet sharing this directory:
+    /// appends and rewrites are fenced by per-shard leases held as
+    /// `holder`, and [`ShardedStore::refresh`] ingests what the other
+    /// members wrote.
+    pub fn open_fleet(
+        dir: &Path,
+        n_shards: usize,
+        holder: &str,
+        lease_ttl_ms: u64,
+    ) -> anyhow::Result<ShardedStore> {
+        let fleet = FleetIdentity { holder: holder.to_string(), lease_ttl_ms };
+        Self::open_inner(dir, n_shards, Some(fleet))
+    }
+
+    fn open_inner(
+        dir: &Path,
+        n_shards: usize,
+        fleet: Option<FleetIdentity>,
+    ) -> anyhow::Result<ShardedStore> {
         anyhow::ensure!(n_shards >= 1, "shard count must be >= 1");
         let shards_dir = dir.join(SHARDS_DIR);
         std::fs::create_dir_all(&shards_dir)
             .with_context(|| format!("create shards dir {shards_dir:?}"))?;
+        let leases_dir = dir.join(LEASES_DIR);
+        if fleet.is_some() {
+            std::fs::create_dir_all(&leases_dir)
+                .with_context(|| format!("create leases dir {leases_dir:?}"))?;
+        }
 
-        // Read the on-disk layout (if any) and load every record.
+        // Read the on-disk layout (if any) and load every shard file.
         let meta_path = shards_dir.join(META_FILE);
-        let disk_shards =
-            if meta_path.exists() { read_meta(&meta_path)? } else { n_shards };
+        let disk_shards = if meta_path.exists() { read_meta(&meta_path)? } else { n_shards };
 
-        let (loaded, torn) = load_shard_files(&shards_dir, disk_shards)?;
         let mut store = ShardedStore {
             dir: dir.to_path_buf(),
             shards_dir,
+            leases_dir,
             n_shards,
             shards: vec![Vec::new(); n_shards],
+            offsets: vec![0; n_shards],
+            gens: vec![0; n_shards],
             served: HashMap::new(),
             tick: 0,
             served_appends: 0,
+            fleet,
         };
-        for rec in loaded {
-            let shard = store.shard_of(&record_key(&rec));
-            store.shards[shard].push(rec);
+        if store.fleet.is_some() {
+            store.gens = (0..n_shards).map(|i| read_gen_at(&store.leases_dir, i)).collect();
         }
 
-        // Import a legacy single-file store once, while the shards are
-        // still empty; the file is then renamed so records a later
-        // eviction removes cannot resurrect from it on reopen.
-        let rebalanced = disk_shards != n_shards;
-        let mut rewrote_all = false;
-        if store.shards.iter().all(|s| s.is_empty()) && dir.join(STORE_FILE).exists() {
-            let legacy = TuningStore::open(dir)?;
-            for rec in legacy.records() {
-                let shard = store.shard_of(&record_key(rec));
-                store.shards[shard].push(rec.clone());
+        let mut torn: Vec<usize> = Vec::new();
+        let mut disk_loads: Vec<ShardLoad> = Vec::new();
+        for i in 0..disk_shards {
+            let load = load_shard_file(&store.shards_dir.join(shard_file(i)))?;
+            if load.torn {
+                torn.push(i);
             }
-            store.rewrite_all_shards()?;
-            rewrote_all = true;
-            let imported = dir.join(format!("{STORE_FILE}.imported"));
-            std::fs::rename(dir.join(STORE_FILE), &imported)
-                .with_context(|| format!("archive imported legacy store to {imported:?}"))?;
-        } else if rebalanced {
-            // Shard count changed: rewrite every shard file under the
-            // new routing and drop surplus old files.
-            store.rewrite_all_shards()?;
-            rewrote_all = true;
-            for i in n_shards..disk_shards {
-                let _ = std::fs::remove_file(store.shards_dir.join(shard_file(i)));
-            }
+            disk_loads.push(load);
         }
-        // Repair any torn shard tail now, before a future append would
-        // concatenate onto the partial line (a full rewrite above
-        // already repaired everything).
-        if !rewrote_all {
-            for i in torn {
-                if i < n_shards {
-                    store.rewrite_shard(i)?;
+
+        let rebalanced = disk_shards != n_shards;
+        let import_legacy =
+            disk_loads.iter().all(|l| l.records.is_empty()) && dir.join(STORE_FILE).exists();
+
+        if rebalanced || import_legacy {
+            // Layout-changing open: exclusive over every shard involved.
+            let lock_n = disk_shards.max(n_shards);
+            let mut guards: Vec<Guard> = Vec::new();
+            let mut all = true;
+            for i in 0..lock_n {
+                match store.acquire_guard(&shard_lease_name(i), 3)? {
+                    Guard::Busy => {
+                        all = false;
+                        break;
+                    }
+                    g => guards.push(g),
                 }
             }
-        }
-        if !meta_path.exists() || rebalanced {
-            store.write_meta()?;
+            if !all {
+                for g in guards {
+                    g.release();
+                }
+                anyhow::bail!(
+                    "cannot {} {dir:?}: another daemon holds shard leases (stop the fleet first)",
+                    if rebalanced { "rebalance" } else { "import a legacy store into" },
+                );
+            }
+            // Route every record under the new layout, then rewrite.
+            for load in &disk_loads {
+                for rec in &load.records {
+                    let s = store.shard_of(&record_key(rec.as_ref()));
+                    store.shards[s].push(rec.clone());
+                }
+            }
+            if import_legacy {
+                let legacy = TuningStore::open(dir)?;
+                for rec in legacy.records() {
+                    let s = store.shard_of(&record_key(rec.as_ref()));
+                    store.shards[s].push(rec.clone());
+                }
+            }
+            let res = (|| -> anyhow::Result<()> {
+                store.rewrite_all_shards()?;
+                for i in n_shards..disk_shards {
+                    let _ = std::fs::remove_file(store.shards_dir.join(shard_file(i)));
+                }
+                if import_legacy {
+                    // Archive the imported file so records a later
+                    // eviction removes cannot resurrect from it.
+                    let imported = dir.join(format!("{STORE_FILE}.imported"));
+                    std::fs::rename(dir.join(STORE_FILE), &imported)
+                        .with_context(|| format!("archive imported legacy store to {imported:?}"))?;
+                }
+                store.write_meta()
+            })();
+            for g in guards {
+                g.release();
+            }
+            res?;
+        } else {
+            // Same-layout open: adopt the records in place, then repair
+            // any torn shard tail before a future append would
+            // concatenate onto the partial line.
+            for (i, load) in disk_loads.into_iter().enumerate() {
+                store.shards[i] = load.records;
+                store.offsets[i] = load.consumed;
+            }
+            for i in torn {
+                let guard = store.acquire_guard(&shard_lease_name(i), 4)?;
+                if !guard.available() {
+                    anyhow::bail!(
+                        "shard {i} of {dir:?} has a torn tail but a live daemon holds its \
+                         lease; retry the open once it finishes"
+                    );
+                }
+                let res = store.rewrite_shard(i);
+                guard.release();
+                res?;
+            }
+            if !meta_path.exists() {
+                store.write_meta()?;
+            }
         }
 
         store.replay_served(true)?;
@@ -156,19 +341,23 @@ impl ShardedStore {
         let meta_path = shards_dir.join(META_FILE);
         anyhow::ensure!(meta_path.exists(), "no sharded store at {dir:?}");
         let n_shards = read_meta(&meta_path)?;
-        let (loaded, _torn) = load_shard_files(&shards_dir, n_shards)?;
         let mut store = ShardedStore {
             dir: dir.to_path_buf(),
             shards_dir,
+            leases_dir: dir.join(LEASES_DIR),
             n_shards,
             shards: vec![Vec::new(); n_shards],
+            offsets: vec![0; n_shards],
+            gens: vec![0; n_shards],
             served: HashMap::new(),
             tick: 0,
             served_appends: 0,
+            fleet: None,
         };
-        for rec in loaded {
-            let shard = store.shard_of(&record_key(&rec));
-            store.shards[shard].push(rec);
+        for i in 0..n_shards {
+            let load = load_shard_file(&store.shards_dir.join(shard_file(i)))?;
+            store.shards[i] = load.records;
+            store.offsets[i] = load.consumed;
         }
         store.replay_served(false)?;
         Ok(store)
@@ -193,7 +382,12 @@ impl ShardedStore {
 
     /// All records, shard-major (shard 0 first, append order within).
     pub fn iter(&self) -> impl Iterator<Item = &TuningRecord> {
-        self.shards.iter().flatten()
+        self.shards.iter().flatten().map(|r| r.as_ref())
+    }
+
+    /// Records per shard (the `query --stats` size histogram).
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.len()).collect()
     }
 
     /// Shard index a serve key routes to.
@@ -213,12 +407,16 @@ impl ShardedStore {
         let id = workload.id();
         let fp = super::config_fingerprint(cfg);
         let key = serve_key(&id, cfg.gpu.name(), cfg.mode.name(), &fp);
-        self.shards[self.shard_of(&key)].iter().rev().find(|r| {
-            r.workload_id == id
-                && r.gpu == cfg.gpu.name()
-                && r.mode == cfg.mode.name()
-                && r.fingerprint == fp
-        })
+        self.shards[self.shard_of(&key)]
+            .iter()
+            .rev()
+            .find(|r| {
+                r.workload_id == id
+                    && r.gpu == cfg.gpu.name()
+                    && r.mode == cfg.mode.name()
+                    && r.fingerprint == fp
+            })
+            .map(|r| r.as_ref())
     }
 
     /// Nearest cached neighbors (see [`neighbors_among`]); scans every
@@ -234,14 +432,156 @@ impl ShardedStore {
 
     /// Append a record to its shard (memory + one O_APPEND line) and
     /// mark its key hot (a fresh record must not be the next eviction
-    /// victim).
+    /// victim). In fleet mode the append holds the shard's lease so it
+    /// cannot be lost under a concurrent eviction rewrite.
     pub fn append(&mut self, rec: TuningRecord) -> anyhow::Result<()> {
+        // Blocking variant for callers that hold no locks of their own:
+        // wait out transient lease contention (~0.5s) before giving up
+        // — the record is a finished multi-second search, and losing it
+        // re-pays the whole search on the next miss. Lock-holding
+        // callers (the daemon's writer thread) use [`Self::try_append`]
+        // and sleep between their own lock acquisitions instead.
+        for attempt in 0..16 {
+            if attempt > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+            }
+            if self.try_append(rec.clone())? == AppendOutcome::Appended {
+                return Ok(());
+            }
+        }
+        anyhow::bail!("shard lease stayed busy; append of {} not attempted", record_key(&rec));
+    }
+
+    /// Non-blocking append: one short lease attempt, then
+    /// [`AppendOutcome::LeaseBusy`] instead of sleeping.
+    pub fn try_append(&mut self, rec: TuningRecord) -> anyhow::Result<AppendOutcome> {
         let key = record_key(&rec);
         let shard = self.shard_of(&key);
-        super::append_jsonl(&self.shards_dir.join(shard_file(shard)), &rec.to_json())?;
-        self.shards[shard].push(rec);
+        let guard = self.acquire_guard(&shard_lease_name(shard), 2)?;
+        if !guard.available() {
+            return Ok(AppendOutcome::LeaseBusy);
+        }
+        let res = self.append_locked(shard, rec);
+        guard.release();
+        res?;
         self.touch(&key)?;
+        Ok(AppendOutcome::Appended)
+    }
+
+    /// Epoch-fenced non-blocking append: the write-back path of a fleet
+    /// daemon whose in-flight claim on this key may have been reclaimed
+    /// (its lease expired mid-search).
+    pub fn try_append_claimed(
+        &mut self,
+        rec: TuningRecord,
+        claim: &Lease,
+    ) -> anyhow::Result<AppendOutcome> {
+        if !claim.is_current()? {
+            return Ok(AppendOutcome::FencedOut);
+        }
+        self.try_append(rec)
+    }
+
+    /// Epoch-fenced blocking append. Returns `Ok(false)` — record
+    /// **not** written — when `claim` is stale.
+    pub fn append_claimed(&mut self, rec: TuningRecord, claim: &Lease) -> anyhow::Result<bool> {
+        if !claim.is_current()? {
+            return Ok(false);
+        }
+        self.append(rec)?;
+        Ok(true)
+    }
+
+    fn append_locked(&mut self, shard: usize, rec: TuningRecord) -> anyhow::Result<()> {
+        let written =
+            super::append_jsonl(&self.shards_dir.join(shard_file(shard)), &rec.to_json())?;
+        if self.fleet.is_some() {
+            // Consume the file tail (our line plus any the fleet
+            // interleaved) so memory tracks the file exactly.
+            self.refresh_shard(shard)?;
+        } else {
+            self.shards[shard].push(Arc::new(rec));
+            self.offsets[shard] += written as u64;
+        }
         Ok(())
+    }
+
+    /// Ingest everything the other fleet members wrote since the last
+    /// look: appended tails are read incrementally, rewritten shards
+    /// (generation bump or truncation) are reloaded whole. Returns the
+    /// number of records touched (0 = nothing changed). No-op for a
+    /// single-owner store.
+    pub fn refresh(&mut self) -> anyhow::Result<usize> {
+        if self.fleet.is_none() {
+            return Ok(0);
+        }
+        let mut changed = 0;
+        for i in 0..self.n_shards {
+            changed += self.refresh_shard(i)?;
+        }
+        Ok(changed)
+    }
+
+    /// [`ShardedStore::refresh`] for the single shard `key` routes to —
+    /// the miss path's cheap "did another daemon already fill this?".
+    pub fn refresh_key(&mut self, key: &str) -> anyhow::Result<usize> {
+        if self.fleet.is_none() {
+            return Ok(0);
+        }
+        let shard = self.shard_of(key);
+        self.refresh_shard(shard)
+    }
+
+    fn refresh_shard(&mut self, shard: usize) -> anyhow::Result<usize> {
+        if self.fleet.is_none() {
+            return Ok(0);
+        }
+        use std::io::{Read as _, Seek as _};
+        let path = self.shards_dir.join(shard_file(shard));
+        let disk_gen = self.read_gen(shard);
+        let len = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        if disk_gen != self.gens[shard] || len < self.offsets[shard] {
+            return self.reload_shard(shard, disk_gen);
+        }
+        if len == self.offsets[shard] {
+            return Ok(0);
+        }
+        let mut f = std::fs::File::open(&path).with_context(|| format!("open shard {path:?}"))?;
+        f.seek(std::io::SeekFrom::Start(self.offsets[shard]))
+            .with_context(|| format!("seek shard {path:?}"))?;
+        let mut buf = String::new();
+        f.read_to_string(&mut buf).with_context(|| format!("read shard tail {path:?}"))?;
+        // Only complete lines: a concurrent append's not-yet-flushed
+        // tail stays unconsumed until the next refresh.
+        let Some(end) = buf.rfind('\n') else { return Ok(0) };
+        let complete = &buf[..=end];
+        let mut added = 0;
+        for line in complete.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match Json::parse(line).and_then(|v| TuningRecord::from_json(&v)) {
+                Ok(rec) => {
+                    self.shards[shard].push(Arc::new(rec));
+                    added += 1;
+                }
+                // Mid-tail garbage means we raced a rewrite around its
+                // generation bump: the whole file is self-consistent,
+                // so reload it.
+                Err(_) => return self.reload_shard(shard, disk_gen),
+            }
+        }
+        self.offsets[shard] += complete.len() as u64;
+        Ok(added)
+    }
+
+    fn reload_shard(&mut self, shard: usize, disk_gen: u64) -> anyhow::Result<usize> {
+        let load = load_shard_file(&self.shards_dir.join(shard_file(shard)))?;
+        let n = load.records.len().max(self.shards[shard].len());
+        self.shards[shard] = load.records;
+        self.offsets[shard] = load.consumed;
+        self.gens[shard] = disk_gen;
+        Ok(n)
     }
 
     /// Record that `key` was just served (bumps its LRU tick).
@@ -256,18 +596,28 @@ impl ShardedStore {
 
     /// Enforce the eviction policy: keep at most `per_gpu_quota`
     /// records per GPU and `max_records` records overall (0 disables
-    /// either bound), evicting least-recently-served keys whole.
-    /// Returns the number of records removed.
+    /// either bound), evicting least-recently-served keys whole. In
+    /// fleet mode every shard rewrite happens under that shard's lease;
+    /// shards whose lease another daemon holds are skipped and retried
+    /// on the next pass. Returns what was evicted, for the audit
+    /// stream.
     pub fn enforce_limits(
         &mut self,
         per_gpu_quota: usize,
         max_records: usize,
-    ) -> anyhow::Result<usize> {
+    ) -> anyhow::Result<EvictionReport> {
+        if self.fleet.is_some() {
+            // Count the whole fleet's records — and the whole fleet's
+            // serve traffic: LRU ranking over only our own ticks would
+            // evict the keys the *other* daemons serve hottest.
+            self.refresh()?;
+            self.merge_served_from_disk()?;
+        }
         // Aggregate per serve key: gpu, record count, last-served tick.
         let mut keys: BTreeMap<String, (String, usize, u64)> = BTreeMap::new();
         for r in self.iter() {
             let key = record_key(r);
-            let tick = self.last_served(&key);
+            let tick = self.served.get(&key).copied().unwrap_or(0);
             let e = keys.entry(key).or_insert_with(|| (r.gpu.clone(), 0, tick));
             e.1 += 1;
         }
@@ -282,20 +632,24 @@ impl ShardedStore {
         let mut order: Vec<(&String, &(String, usize, u64))> = keys.iter().collect();
         order.sort_by(|a, b| a.1 .2.cmp(&b.1 .2).then_with(|| a.0.cmp(b.0)));
 
-        let mut victims: Vec<&String> = Vec::new();
-        let mut evicted = 0usize;
+        let mut victims: Vec<EvictedKey> = Vec::new();
         for (key, (gpu, n, _)) in &order {
-            let gpu_over = per_gpu_quota > 0
-                && per_gpu.values().any(|&count| count > per_gpu_quota);
+            let gpu_over =
+                per_gpu_quota > 0 && per_gpu.values().any(|&count| count > per_gpu_quota);
             let total_over = max_records > 0 && total > max_records;
             if !gpu_over && !total_over {
                 break;
             }
-            let this_gpu_over =
-                per_gpu_quota > 0 && per_gpu.get(gpu.as_str()).copied().unwrap_or(0) > per_gpu_quota;
+            let this_gpu_over = per_gpu_quota > 0
+                && per_gpu.get(gpu.as_str()).copied().unwrap_or(0) > per_gpu_quota;
             if this_gpu_over || total_over {
-                victims.push(*key);
-                evicted += *n;
+                victims.push(EvictedKey {
+                    key: (*key).clone(),
+                    gpu: gpu.clone(),
+                    shard: self.shard_of(key),
+                    n_records: *n,
+                    reason: if this_gpu_over { "per_gpu_quota" } else { "max_records" },
+                });
                 total -= *n;
                 if let Some(count) = per_gpu.get_mut(gpu.as_str()) {
                     *count -= *n;
@@ -303,27 +657,57 @@ impl ShardedStore {
             }
         }
         if victims.is_empty() {
-            return Ok(0);
+            return Ok(EvictionReport::default());
         }
 
-        let victim_set: std::collections::HashSet<&str> =
-            victims.iter().map(|k| k.as_str()).collect();
-        let dirty: Vec<usize> = victims.iter().map(|k| self.shard_of(k)).collect();
-        for shard in &dirty {
-            self.shards[*shard].retain(|r| !victim_set.contains(record_key(r).as_str()));
+        let mut by_shard: BTreeMap<usize, Vec<EvictedKey>> = BTreeMap::new();
+        for v in victims {
+            by_shard.entry(v.shard).or_default().push(v);
         }
-        for shard in dirty {
-            self.rewrite_shard(shard)?;
+        let mut report = EvictionReport::default();
+        for (shard, shard_victims) in by_shard {
+            let guard = self.acquire_guard(&shard_lease_name(shard), 1)?;
+            if !guard.available() {
+                report.n_skipped_shards += 1;
+                continue;
+            }
+            let res = (|| -> anyhow::Result<usize> {
+                if self.fleet.is_some() {
+                    // See appends that landed after the count above;
+                    // retained keys must survive the rewrite.
+                    self.refresh_shard(shard)?;
+                }
+                let victim_set: HashSet<&str> =
+                    shard_victims.iter().map(|v| v.key.as_str()).collect();
+                let before = self.shards[shard].len();
+                self.shards[shard].retain(|r| !victim_set.contains(record_key(r).as_str()));
+                let removed = before - self.shards[shard].len();
+                self.rewrite_shard(shard)?;
+                Ok(removed)
+            })();
+            guard.release();
+            let removed = res?;
+            report.n_evicted += removed;
+            for v in shard_victims {
+                self.served.remove(&v.key);
+                report.victims.push(v);
+            }
         }
-        self.served.retain(|k, _| !victim_set.contains(k.as_str()));
-        self.rewrite_served()?;
-        Ok(evicted)
+        if !report.victims.is_empty() {
+            // No re-merge here: the fleet's history was folded in at
+            // the top of this pass, and re-reading the sidecar now
+            // would resurrect the victims' entries we just dropped.
+            self.compact_served_inner(false)?;
+        }
+        Ok(report)
     }
 
     /// Flatten into a plain [`TuningStore`] snapshot (what background
     /// search workers consult for exact hits and warm-start transfer).
+    /// Records are shared by `Arc`, so this is pointer clones, not a
+    /// deep copy.
     pub fn snapshot(&self) -> TuningStore {
-        TuningStore::from_records(&self.dir, self.iter().cloned().collect())
+        TuningStore::from_records(&self.dir, self.shards.iter().flatten().cloned().collect())
     }
 
     pub fn stats(&self) -> StoreStats {
@@ -331,22 +715,50 @@ impl ShardedStore {
     }
 
     fn touch(&mut self, key: &str) -> anyhow::Result<()> {
-        self.tick += 1;
+        // Wall-clock-ms ticks: fleet members append to one sidecar, so
+        // recency must be comparable across daemons — a per-daemon
+        // logical counter would make a quiet daemon's fresh serves look
+        // ancient to a busy one's eviction pass. The max() keeps ticks
+        // strictly increasing within this store against clock skew and
+        // multiple touches in one millisecond.
+        self.tick = super::lease::now_ms().max(self.tick + 1);
         self.served.insert(key.to_string(), self.tick);
         super::append_jsonl(
             &self.shards_dir.join(SERVED_FILE),
-            &crate::util::Json::obj(vec![
-                ("key", crate::util::Json::str(key)),
-                ("tick", crate::util::Json::num(self.tick as f64)),
+            &Json::obj(vec![
+                ("key", Json::str(key)),
+                ("tick", Json::num(self.tick as f64)),
             ]),
         )?;
         // Compact online so a long-running daemon's sidecar stays
         // bounded at ~2 lines per live key (+ slack for small stores).
         self.served_appends += 1;
         if self.served_appends > 2 * self.served.len() + 64 {
-            self.rewrite_served()?;
+            self.compact_served()?;
         }
         Ok(())
+    }
+
+    /// Acquire a named lease, or report it unneeded (single-owner) /
+    /// busy (held by a live fleet member).
+    fn acquire_guard(&self, name: &str, tries: usize) -> anyhow::Result<Guard> {
+        let Some(fleet) = &self.fleet else {
+            return Ok(Guard::Unneeded);
+        };
+        let path = self.leases_dir.join(format!("{name}.json"));
+        for attempt in 0..tries.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            if let Some(lease) = Lease::acquire(&path, &fleet.holder, fleet.lease_ttl_ms, None)? {
+                return Ok(Guard::Held(lease));
+            }
+        }
+        Ok(Guard::Busy)
+    }
+
+    fn read_gen(&self, shard: usize) -> u64 {
+        read_gen_at(&self.leases_dir, shard)
     }
 
     fn replay_served(&mut self, compact: bool) -> anyhow::Result<()> {
@@ -363,7 +775,7 @@ impl ShardedStore {
             if line.trim().is_empty() {
                 continue;
             }
-            let parsed = crate::util::Json::parse(line).and_then(|v| {
+            let parsed = Json::parse(line).and_then(|v| {
                 let key = v
                     .get("key")
                     .and_then(|k| k.as_str())
@@ -377,7 +789,13 @@ impl ShardedStore {
             });
             match parsed {
                 Ok((key, tick)) => {
-                    self.served.insert(key, tick);
+                    // Max per key, not last-line-wins: fleet members'
+                    // appends interleave and a lagging member's clock
+                    // may write an older tick after a newer one — the
+                    // same rule [`Self::merge_served_from_disk`] uses,
+                    // so a reopen and a running daemon agree.
+                    let entry = self.served.entry(key).or_insert(0);
+                    *entry = (*entry).max(tick);
                     self.tick = self.tick.max(tick);
                     lines += 1;
                 }
@@ -396,47 +814,115 @@ impl ShardedStore {
         // or whose tail is torn (a future append would concatenate onto
         // the partial line). Never in read-only opens.
         if compact && (torn || lines > 2 * self.served.len().max(1)) {
-            self.rewrite_served()?;
+            self.compact_served()?;
         }
         Ok(())
     }
 
     fn write_meta(&self) -> anyhow::Result<()> {
         let path = self.shards_dir.join(META_FILE);
-        let v = crate::util::Json::obj(vec![
-            ("v", crate::util::Json::num(LAYOUT_VERSION as f64)),
-            ("n_shards", crate::util::Json::num(self.n_shards as f64)),
+        let v = Json::obj(vec![
+            ("v", Json::num(LAYOUT_VERSION as f64)),
+            ("n_shards", Json::num(self.n_shards as f64)),
         ]);
         write_atomic(&path, &v.to_string())
     }
 
-    fn rewrite_shard(&self, shard: usize) -> anyhow::Result<()> {
+    /// Rewrite one shard file from memory. In fleet mode the caller
+    /// must hold the shard's lease; the per-shard generation is bumped
+    /// AFTER the atomic rename — a member refreshing inside the window
+    /// sees either old gen + shrunken file (caught by the `len <
+    /// offset` check: in-place rewrites only ever shrink) or the gen
+    /// bump (one redundant reload) — never a stale byte offset applied
+    /// to content it did not load.
+    fn rewrite_shard(&mut self, shard: usize) -> anyhow::Result<()> {
         let path = self.shards_dir.join(shard_file(shard));
         let mut text = String::new();
         for r in &self.shards[shard] {
             text.push_str(&r.to_json().to_string());
             text.push('\n');
         }
-        write_atomic(&path, &text)
+        write_atomic(&path, &text)?;
+        self.offsets[shard] = text.len() as u64;
+        if self.fleet.is_some() {
+            let g = self.gens[shard].max(self.read_gen(shard)) + 1;
+            write_atomic(&self.leases_dir.join(gen_file(shard)), &format!("{g}\n"))?;
+            self.gens[shard] = g;
+        }
+        Ok(())
     }
 
-    fn rewrite_all_shards(&self) -> anyhow::Result<()> {
+    fn rewrite_all_shards(&mut self) -> anyhow::Result<()> {
         for i in 0..self.n_shards {
             self.rewrite_shard(i)?;
         }
         Ok(())
     }
 
-    fn rewrite_served(&mut self) -> anyhow::Result<()> {
+    /// Compact `served.jsonl`, lease-guarded in fleet mode (skipped —
+    /// and retried later — while another member compacts).
+    fn compact_served(&mut self) -> anyhow::Result<()> {
+        self.compact_served_inner(true)
+    }
+
+    fn compact_served_inner(&mut self, merge: bool) -> anyhow::Result<()> {
+        if self.fleet.is_none() {
+            return self.rewrite_served(merge);
+        }
+        let guard = self.acquire_guard(SERVED_LEASE_NAME, 1)?;
+        if !guard.available() {
+            return Ok(());
+        }
+        let res = self.rewrite_served(merge);
+        guard.release();
+        res
+    }
+
+    /// Fold the on-disk `served.jsonl` into the in-memory LRU map: max
+    /// tick per key. Fleet members append their touches to the same
+    /// sidecar, so eviction ranking and compaction must see everyone's
+    /// serve history, not just ours. Malformed lines (including a torn
+    /// tail) are skipped — a lost bump is benign.
+    fn merge_served_from_disk(&mut self) -> anyhow::Result<()> {
+        let path = self.shards_dir.join(SERVED_FILE);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+            Err(e) => return Err(e).with_context(|| format!("read {path:?}")),
+        };
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let Ok(v) = Json::parse(line) else { continue };
+            let key = v.get("key").and_then(|k| k.as_str());
+            let tick = v.get("tick").and_then(|t| t.as_f64());
+            if let (Some(key), Some(tick)) = (key, tick) {
+                let tick = tick as u64;
+                let entry = self.served.entry(key.to_string()).or_insert(0);
+                *entry = (*entry).max(tick);
+                self.tick = self.tick.max(tick);
+            }
+        }
+        Ok(())
+    }
+
+    fn rewrite_served(&mut self, merge: bool) -> anyhow::Result<()> {
+        // Compaction must not discard the other members' LRU history:
+        // fold the on-disk state in first (touches they append between
+        // this merge and the rename lose one bump — benign).
+        if merge && self.fleet.is_some() {
+            self.merge_served_from_disk()?;
+        }
         let path = self.shards_dir.join(SERVED_FILE);
         let mut entries: Vec<(&String, &u64)> = self.served.iter().collect();
         entries.sort_by_key(|(_, tick)| **tick);
         let mut text = String::new();
         for (key, tick) in entries {
             text.push_str(
-                &crate::util::Json::obj(vec![
-                    ("key", crate::util::Json::str(key.clone())),
-                    ("tick", crate::util::Json::num(*tick as f64)),
+                &Json::obj(vec![
+                    ("key", Json::str(key.clone())),
+                    ("tick", Json::num(*tick as f64)),
                 ])
                 .to_string(),
             );
@@ -451,13 +937,30 @@ fn shard_file(i: usize) -> String {
     format!("shard_{i:03}.jsonl")
 }
 
+/// Name of the lease guarding shard `i`'s rewrites and appends.
+pub fn shard_lease_name(i: usize) -> String {
+    format!("shard_{i:03}")
+}
+
+fn gen_file(i: usize) -> String {
+    format!("gen_{i:03}")
+}
+
+/// Last rewrite generation recorded for a shard (0 = never rewritten).
+fn read_gen_at(leases_dir: &Path, shard: usize) -> u64 {
+    std::fs::read_to_string(leases_dir.join(gen_file(shard)))
+        .ok()
+        .and_then(|t| t.trim().parse::<u64>().ok())
+        .unwrap_or(0)
+}
+
 /// Parse `meta.json`: validate the layout version, return the shard
 /// count (shared by [`ShardedStore::open`] and
 /// [`ShardedStore::open_existing`]).
 fn read_meta(meta_path: &Path) -> anyhow::Result<usize> {
     let text =
         std::fs::read_to_string(meta_path).with_context(|| format!("read {meta_path:?}"))?;
-    let v = crate::util::Json::parse(&text).map_err(|e| anyhow!("{meta_path:?}: {e}"))?;
+    let v = Json::parse(&text).map_err(|e| anyhow!("{meta_path:?}: {e}"))?;
     let layout = v.get("v").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
     anyhow::ensure!(
         layout == LAYOUT_VERSION,
@@ -469,46 +972,48 @@ fn read_meta(meta_path: &Path) -> anyhow::Result<usize> {
         .ok_or_else(|| anyhow!("{meta_path:?}: missing 'n_shards'"))? as usize)
 }
 
-/// Load every record from `shard_000..shard_{n-1}` under `shards_dir`;
-/// also returns the indices of shard files whose tail was torn.
+/// Load one shard file: records, bytes consumed, torn-tail flag.
 ///
 /// A malformed FINAL line is dropped with a warning rather than failing
 /// the open: a daemon killed mid-append can tear at most the last line
 /// (see [`super::append_jsonl`]), and a torn tail must not leave the
 /// store unbootable. Corruption anywhere else is still a hard error.
-fn load_shard_files(
-    shards_dir: &Path,
-    n_shards: usize,
-) -> anyhow::Result<(Vec<TuningRecord>, Vec<usize>)> {
-    let mut loaded: Vec<TuningRecord> = Vec::new();
-    let mut torn: Vec<usize> = Vec::new();
-    for i in 0..n_shards {
-        let path = shards_dir.join(shard_file(i));
-        if !path.exists() {
+fn load_shard_file(path: &Path) -> anyhow::Result<ShardLoad> {
+    let mut out = ShardLoad { records: Vec::new(), consumed: 0, torn: false };
+    if !path.exists() {
+        return Ok(out);
+    }
+    let text = std::fs::read_to_string(path).with_context(|| format!("read shard {path:?}"))?;
+    let lines: Vec<&str> = text.lines().collect();
+    let last = lines.iter().rposition(|l| !l.trim().is_empty());
+    let mut pos = 0u64;
+    for (lineno, line) in lines.iter().enumerate() {
+        // `lines()` strips the newline; account for it when present.
+        let raw_len = line.len() as u64
+            + if text.len() as u64 > pos + line.len() as u64 { 1 } else { 0 };
+        if line.trim().is_empty() {
+            pos += raw_len;
+            out.consumed = pos;
             continue;
         }
-        let text =
-            std::fs::read_to_string(&path).with_context(|| format!("read shard {path:?}"))?;
-        let lines: Vec<&str> = text.lines().collect();
-        let last = lines.iter().rposition(|l| !l.trim().is_empty());
-        for (lineno, line) in lines.iter().enumerate() {
-            if line.trim().is_empty() {
-                continue;
+        match Json::parse(line).and_then(|v| TuningRecord::from_json(&v)) {
+            Ok(rec) => {
+                out.records.push(Arc::new(rec));
+                pos += raw_len;
+                out.consumed = pos;
             }
-            match crate::util::Json::parse(line).and_then(|v| TuningRecord::from_json(&v)) {
-                Ok(rec) => loaded.push(rec),
-                Err(e) if Some(lineno) == last => {
-                    eprintln!(
-                        "warning: {path:?} line {}: dropping torn trailing line ({e})",
-                        lineno + 1
-                    );
-                    torn.push(i);
-                }
-                Err(e) => return Err(anyhow!("{path:?} line {}: {e}", lineno + 1)),
+            Err(e) if Some(lineno) == last => {
+                eprintln!(
+                    "warning: {path:?} line {}: dropping torn trailing line ({e})",
+                    lineno + 1
+                );
+                out.torn = true;
+                break;
             }
+            Err(e) => return Err(anyhow!("{path:?} line {}: {e}", lineno + 1)),
         }
     }
-    Ok((loaded, torn))
+    Ok(out)
 }
 
 fn write_atomic(path: &Path, text: &str) -> anyhow::Result<()> {
@@ -627,8 +1132,12 @@ mod tests {
         store.mark_served(&record_key(&rec_a)).unwrap();
         store.append(rec_c.clone()).unwrap();
 
-        let evicted = store.enforce_limits(2, 0).unwrap();
-        assert_eq!(evicted, 1);
+        let report = store.enforce_limits(2, 0).unwrap();
+        assert_eq!(report.n_evicted, 1);
+        assert_eq!(report.victims.len(), 1);
+        assert_eq!(report.victims[0].key, record_key(&rec_b), "victim identity reported");
+        assert_eq!(report.victims[0].reason, "per_gpu_quota");
+        assert_eq!(report.victims[0].shard, store.shard_of(&record_key(&rec_b)));
         assert_eq!(store.len(), 2);
         assert!(store.get(suites::MV3, &cfg_b).is_none(), "LRU victim evicted");
         assert!(store.get(suites::MM1, &cfg_a).is_some(), "recently served key retained");
@@ -638,7 +1147,7 @@ mod tests {
         drop(store);
         let mut store = ShardedStore::open(&dir, 4).unwrap();
         assert_eq!(store.len(), 2);
-        assert_eq!(store.enforce_limits(2, 0).unwrap(), 0);
+        assert_eq!(store.enforce_limits(2, 0).unwrap(), EvictionReport::default());
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -651,11 +1160,13 @@ mod tests {
         store.append(rec_a100).unwrap();
         store.append(rec_v100).unwrap();
         // One record per GPU: a per-GPU quota of 1 evicts nothing.
-        assert_eq!(store.enforce_limits(1, 0).unwrap(), 0);
+        assert_eq!(store.enforce_limits(1, 0).unwrap().n_evicted, 0);
         assert!(store.get(suites::MM1, &cfg_a100).is_some());
         assert!(store.get(suites::MM1, &cfg_v100).is_some());
         // A global cap of 1 evicts the older key even across GPUs.
-        assert_eq!(store.enforce_limits(0, 1).unwrap(), 1);
+        let report = store.enforce_limits(0, 1).unwrap();
+        assert_eq!(report.n_evicted, 1);
+        assert_eq!(report.victims[0].reason, "max_records");
         assert_eq!(store.len(), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -706,6 +1217,78 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(store.shard_of(&key), shard, "routing must be deterministic");
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshots_share_record_allocations() {
+        let dir = tmp_dir("arcsnap");
+        let mut store = ShardedStore::open(&dir, 2).unwrap();
+        let (rec, _) = record_for(suites::MM1, 14, GpuArch::A100);
+        store.append(rec).unwrap();
+        let s1 = store.snapshot();
+        let s2 = store.snapshot();
+        assert_eq!(s1.len(), 1);
+        // The snapshot is pointer clones of the store's records, not a
+        // deep copy: two snapshots share the same allocation.
+        assert!(
+            Arc::ptr_eq(&s1.records()[0], &s2.records()[0]),
+            "snapshot must share the store's Arc allocations"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fleet_refresh_ingests_foreign_appends_and_rewrites() {
+        let dir = tmp_dir("refresh");
+        let mut s1 = ShardedStore::open_fleet(&dir, 2, "h1", 60_000).unwrap();
+        let mut s2 = ShardedStore::open_fleet(&dir, 2, "h2", 60_000).unwrap();
+
+        // s1's append becomes visible to s2 through refresh only.
+        let (rec_a, cfg_a) = record_for(suites::MM1, 15, GpuArch::A100);
+        s1.append(rec_a.clone()).unwrap();
+        assert!(s2.get(suites::MM1, &cfg_a).is_none(), "not yet refreshed");
+        assert!(s2.refresh().unwrap() > 0);
+        assert_eq!(s2.get(suites::MM1, &cfg_a), Some(&rec_a));
+
+        // A foreign eviction rewrite (generation bump) is picked up too.
+        let (rec_b, cfg_b) = record_for(suites::MV3, 16, GpuArch::A100);
+        s2.append(rec_b.clone()).unwrap();
+        s2.mark_served(&record_key(&rec_b)).unwrap();
+        let report = s2.enforce_limits(0, 1).unwrap();
+        assert_eq!(report.n_evicted, 1, "older key evicted under the global cap");
+        s1.refresh().unwrap();
+        assert!(s1.get(suites::MM1, &cfg_a).is_none(), "s1 sees the fleet eviction");
+        assert_eq!(s1.get(suites::MV3, &cfg_b), Some(&rec_b), "s1 sees the fleet append");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fleet_eviction_skips_shards_whose_lease_is_held() {
+        let dir = tmp_dir("leaseheld");
+        let mut store = ShardedStore::open_fleet(&dir, 1, "evictor", 60_000).unwrap();
+        let (rec_a, _) = record_for(suites::MM1, 17, GpuArch::A100);
+        let (rec_b, cfg_b) = record_for(suites::MV3, 18, GpuArch::A100);
+        store.append(rec_a.clone()).unwrap();
+        store.append(rec_b.clone()).unwrap();
+        store.mark_served(&record_key(&rec_b)).unwrap();
+
+        // A live foreign holder owns the only shard's lease.
+        let lease_path = dir.join(LEASES_DIR).join(format!("{}.json", shard_lease_name(0)));
+        let foreign = Lease::acquire(&lease_path, "other-daemon", 60_000, None)
+            .unwrap()
+            .expect("foreign daemon takes the shard lease");
+        let report = store.enforce_limits(0, 1).unwrap();
+        assert_eq!(report.n_evicted, 0, "lease held: nothing evicted");
+        assert_eq!(report.n_skipped_shards, 1);
+        assert_eq!(store.len(), 2);
+
+        // Once released, the next pass evicts normally.
+        foreign.release().unwrap();
+        let report = store.enforce_limits(0, 1).unwrap();
+        assert_eq!(report.n_evicted, 1);
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.get(suites::MV3, &cfg_b), Some(&rec_b), "served key survives");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

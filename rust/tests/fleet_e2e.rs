@@ -1,0 +1,314 @@
+//! Integration: fleet serving end to end (the ISSUE 3 acceptance
+//! criteria) — two daemons mounting one store, the same client bytes
+//! over `unix:` and `tcp:`, a duplicated miss searched exactly once
+//! fleet-wide, lease-fenced compaction racing and reclaiming after a
+//! crash, epoch-fenced write-backs from stale holders, and admission
+//! control shedding cold keys under queue saturation.
+#![cfg(unix)]
+
+use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
+use ecokernel::fleet::InflightTable;
+use ecokernel::serve::{Daemon, DaemonConfig, DaemonHandle, ServeAddr, ServeClient};
+use ecokernel::store::lease::Lease;
+use ecokernel::store::sharded::{shard_lease_name, LEASES_DIR};
+use ecokernel::store::{serve_key, ShardedStore, TuningRecord};
+use ecokernel::workload::{suites, Workload};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(180);
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("ecokernel_fleet_e2e_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn quick_search(seed: u64) -> SearchConfig {
+    let mut search = SearchConfig {
+        gpu: GpuArch::A100,
+        mode: SearchMode::EnergyAware,
+        population: 24,
+        m_latency_keep: 6,
+        rounds: 3,
+        patience: 0,
+        seed,
+        ..Default::default()
+    };
+    search.serve.n_workers = 1;
+    search.serve.n_shards = 4;
+    search
+}
+
+fn spawn_on(addr: ServeAddr, store_dir: &Path, search: SearchConfig) -> DaemonHandle {
+    let store_dir = store_dir.to_path_buf();
+    Daemon::spawn(DaemonConfig { addr, store_dir, search }, None).unwrap()
+}
+
+fn record_for(w: Workload, seed: u64) -> (TuningRecord, SearchConfig) {
+    let cfg = SearchConfig {
+        population: 24,
+        m_latency_keep: 6,
+        rounds: 3,
+        patience: 0,
+        seed,
+        ..Default::default()
+    };
+    let out = ecokernel::search::run_search(w, &cfg);
+    (TuningRecord::from_outcome(&out, &cfg), cfg)
+}
+
+fn key_of(rec: &TuningRecord) -> String {
+    serve_key(&rec.workload_id, &rec.gpu, &rec.mode, &rec.fingerprint)
+}
+
+/// The same client bytes produce byte-identical replies over `unix:`
+/// and `tcp:` — the frame protocol is transport-agnostic.
+#[test]
+fn same_client_bytes_work_over_unix_and_tcp() {
+    let dir_unix = tmp_dir("parity_unix");
+    let dir_tcp = tmp_dir("parity_tcp");
+    let unix_daemon = spawn_on(
+        ServeAddr::Unix(dir_unix.join("eco.sock")),
+        &dir_unix,
+        quick_search(7),
+    );
+    let tcp_daemon = spawn_on(
+        ServeAddr::Tcp("127.0.0.1:0".to_string()),
+        &dir_tcp,
+        quick_search(7),
+    );
+    assert!(matches!(tcp_daemon.addr, ServeAddr::Tcp(_)), "{}", tcp_daemon.addr);
+
+    let mut ca = ServeClient::connect(&unix_daemon.addr).unwrap();
+    let mut cb = ServeClient::connect(&tcp_daemon.addr).unwrap();
+    let frames = [
+        // A real kernel request against two identically-fresh stores…
+        r#"{"v":1,"op":"get_kernel","id":"parity1","workload":"MM1"}"#,
+        // …and the protocol's error surface.
+        r#"{"v":1,"op":"get_kernel","id":"parity2","workload":"MM99"}"#,
+        r#"{"v":9,"op":"stats","id":"parity3"}"#,
+    ];
+    for frame in frames {
+        let over_unix = ca.roundtrip_raw(frame).unwrap();
+        let over_tcp = cb.roundtrip_raw(frame).unwrap();
+        assert_eq!(over_unix, over_tcp, "reply bytes must not depend on the wire: {frame}");
+    }
+
+    for (mut client, handle) in [(ca, unix_daemon), (cb, tcp_daemon)] {
+        client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir_unix);
+    let _ = std::fs::remove_dir_all(&dir_tcp);
+}
+
+/// Two daemons, one store: a miss duplicated across daemons triggers
+/// exactly one search fleet-wide, the record propagates to both, and
+/// both then serve concurrent exact hits.
+#[test]
+fn two_daemons_one_store_search_once_fleet_wide() {
+    let dir = tmp_dir("fleet");
+    let a = spawn_on(ServeAddr::Unix(dir.join("a.sock")), &dir, quick_search(9));
+    let b = spawn_on(ServeAddr::Tcp("127.0.0.1:0".to_string()), &dir, quick_search(9));
+
+    let mut ca = ServeClient::connect(&a.addr).unwrap();
+    let mut cb = ServeClient::connect(&b.addr).unwrap();
+
+    // Duplicate the same miss across both daemons.
+    let on_a = ca.get_kernel(suites::MM1, None, None).unwrap();
+    assert!(!on_a.hit && on_a.enqueued, "first miss claims the key and searches");
+    let on_b = cb.get_kernel(suites::MM1, None, None).unwrap();
+    if !on_b.hit {
+        assert!(!on_b.enqueued, "duplicate miss coalesces into A's in-flight claim");
+    }
+
+    // A's background search lands; B sees it through store refresh.
+    ca.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    cb.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    let hit_b = cb.get_kernel_wait(suites::MM1, None, None, DRAIN_TIMEOUT).unwrap();
+    assert!(hit_b.hit, "B serves A's search result from the shared store");
+    let hit_a = ca.get_kernel(suites::MM1, None, None).unwrap();
+    assert!(hit_a.hit);
+    assert_eq!(hit_a.schedule, hit_b.schedule, "one record serves the whole fleet");
+
+    // Concurrent exact hits from both daemons.
+    for _ in 0..3 {
+        assert!(ca.get_kernel(suites::MM1, None, None).unwrap().hit);
+        assert!(cb.get_kernel(suites::MM1, None, None).unwrap().hit);
+    }
+
+    // Exactly one search ran fleet-wide, and both daemons agree on the
+    // store contents.
+    let sa = ca.stats().unwrap();
+    let sb = cb.stats().unwrap();
+    assert_eq!(
+        sa.n_searches_done + sb.n_searches_done,
+        1,
+        "a: {}, b: {}",
+        sa.n_searches_done,
+        sb.n_searches_done
+    );
+    assert_eq!(sa.n_records, 1);
+    assert_eq!(sb.n_records, 1);
+    assert_eq!(sa.shard_records.iter().sum::<usize>(), 1, "{:?}", sa.shard_records);
+
+    for (mut client, handle) in [(ca, a), (cb, b)] {
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Lease contention: two stores on one directory race the same
+/// eviction; leases serialize the rewrites and no retained record is
+/// lost, no matter who wins.
+#[test]
+fn two_stores_racing_eviction_lose_no_retained_records() {
+    let dir = tmp_dir("race");
+    let mut s1 = ShardedStore::open_fleet(&dir, 2, "h1", 60_000).unwrap();
+    let (rec_a, _) = record_for(suites::MM1, 20);
+    let (rec_b, cfg_b) = record_for(suites::MV3, 21);
+    let (rec_c, _) = record_for(suites::CONV2, 22);
+    s1.append(rec_a).unwrap();
+    s1.append(rec_b.clone()).unwrap();
+    s1.append(rec_c).unwrap();
+    s1.mark_served(&key_of(&rec_b)).unwrap();
+    let s2 = ShardedStore::open_fleet(&dir, 2, "h2", 60_000).unwrap();
+    assert_eq!(s2.len(), 3, "second member sees the appends at open");
+
+    let t1 = std::thread::spawn(move || {
+        let report = s1.enforce_limits(0, 1).unwrap();
+        (s1, report)
+    });
+    let t2 = std::thread::spawn(move || {
+        let mut s2 = s2;
+        let report = s2.enforce_limits(0, 1).unwrap();
+        (s2, report)
+    });
+    let (_, r1) = t1.join().unwrap();
+    let (_, r2) = t2.join().unwrap();
+    assert!(
+        r1.n_evicted + r2.n_evicted >= 2,
+        "the two cold keys were evicted between the racers: {r1:?} / {r2:?}"
+    );
+
+    // The survivor is the served key, intact, and the layout reopens.
+    let reopened = ShardedStore::open(&dir, 2).unwrap();
+    assert_eq!(reopened.len(), 1, "exactly the retained record survives");
+    assert_eq!(reopened.get(suites::MV3, &cfg_b), Some(&rec_b));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A crashed holder's shard lease expires and compaction is reclaimed
+/// by the surviving member without losing retained records.
+#[test]
+fn expired_lease_is_reclaimed_for_compaction() {
+    let dir = tmp_dir("reclaim");
+    let mut store = ShardedStore::open_fleet(&dir, 1, "alive", 60_000).unwrap();
+    let (rec_a, _) = record_for(suites::MM1, 23);
+    let (rec_b, cfg_b) = record_for(suites::MV3, 24);
+    store.append(rec_a).unwrap();
+    store.append(rec_b.clone()).unwrap();
+    store.mark_served(&key_of(&rec_b)).unwrap();
+
+    // A "daemon" takes the shard lease and crashes (never releases,
+    // never heartbeats) with a short TTL.
+    let lease_path = dir.join(LEASES_DIR).join(format!("{}.json", shard_lease_name(0)));
+    let crashed = Lease::acquire(&lease_path, "crashed", 150, None).unwrap().unwrap();
+
+    let blocked = store.enforce_limits(0, 1).unwrap();
+    assert_eq!(blocked.n_evicted, 0, "live lease blocks the rewrite");
+    assert_eq!(blocked.n_skipped_shards, 1);
+    assert_eq!(store.len(), 2);
+
+    std::thread::sleep(Duration::from_millis(300));
+    let reclaimed = store.enforce_limits(0, 1).unwrap();
+    assert_eq!(reclaimed.n_evicted, 1, "expired lease reclaimed, eviction proceeds");
+    assert_eq!(reclaimed.n_skipped_shards, 0);
+    assert!(!crashed.is_current().unwrap(), "the crashed holder is fenced out");
+    assert_eq!(store.get(suites::MV3, &cfg_b), Some(&rec_b), "retained record intact");
+
+    let reopened = ShardedStore::open(&dir, 1).unwrap();
+    assert_eq!(reopened.len(), 1, "compaction under a reclaimed lease is durable");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Epoch fencing: a write-back guarded by a claim that expired and was
+/// reclaimed by another daemon is rejected, and the new owner's
+/// write-back goes through.
+#[test]
+fn stale_claim_write_back_is_rejected() {
+    let dir = tmp_dir("fence");
+    let mut store = ShardedStore::open_fleet(&dir, 2, "daemon-a", 60_000).unwrap();
+    let (rec, cfg) = record_for(suites::MM1, 25);
+    let key = key_of(&rec);
+
+    let table_a = InflightTable::open(&dir, "daemon-a", 120).unwrap();
+    let stale = table_a.claim(&key).unwrap().expect("daemon-a claims the search");
+    // daemon-a stalls past its TTL (no heartbeat); daemon-b reclaims.
+    std::thread::sleep(Duration::from_millis(260));
+    let table_b = InflightTable::open(&dir, "daemon-b", 60_000).unwrap();
+    let fresh = table_b.claim(&key).unwrap().expect("expired claim reclaimed");
+    assert!(fresh.epoch() > stale.epoch());
+
+    // The stalled daemon's late write-back is fenced out…
+    assert!(!store.append_claimed(rec.clone(), &stale).unwrap());
+    assert!(store.get(suites::MM1, &cfg).is_none(), "rejected write-back left no record");
+    assert!(store.is_empty());
+    // …while the current owner's goes through.
+    assert!(store.append_claimed(rec.clone(), &fresh).unwrap());
+    assert_eq!(store.get(suites::MM1, &cfg), Some(&rec));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Admission under saturation: with one worker, a one-slot queue and a
+/// one-slot backlog, cold keys are shed in favor of hot ones, and the
+/// admitted set drains to completion.
+#[test]
+fn saturated_queue_sheds_cold_keys_and_keeps_hot_ones() {
+    let dir = tmp_dir("admission");
+    let mut search = quick_search(11);
+    // Beefier searches than the other tests: each must stay in flight
+    // across the whole request burst below for the slot arithmetic to
+    // be deterministic.
+    search.population = 256;
+    search.m_latency_keep = 16;
+    search.rounds = 12;
+    search.patience = 0;
+    search.serve.queue_cap = 1;
+    search.fleet.backlog_cap = 1;
+    let handle = spawn_on(ServeAddr::Unix(dir.join("eco.sock")), &dir, search);
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
+
+    // k1 -> worker, k2 -> queue, k3 -> backlog: all admitted. The
+    // pause lets the (seconds-long) k1 search leave the queue for its
+    // worker, so the slot arithmetic below is deterministic.
+    assert!(client.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    std::thread::sleep(Duration::from_millis(150));
+    assert!(client.get_kernel(suites::MM2, None, None).unwrap().enqueued);
+    assert!(client.get_kernel(suites::MM3, None, None).unwrap().enqueued);
+    // k4 arrives hotter (more recent) than the backlogged k3 under the
+    // decayed-rate sketch: it displaces k3, which is shed.
+    assert!(client.get_kernel(suites::MM4, None, None).unwrap().enqueued);
+    // Re-requesting k3 heats it past k4: k3 displaces k4 back out.
+    assert!(client.get_kernel(suites::MM3, None, None).unwrap().enqueued);
+
+    let s = client.stats().unwrap();
+    assert_eq!(s.n_shed, 2, "two displacement sheds under saturation");
+    assert_eq!(s.backlog_len, 1, "one key heat-queued behind the saturated queue");
+
+    // The admitted set (MM1, MM2, MM3) drains; shed keys never ran.
+    let drained = client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    assert_eq!(drained.n_searches_done, 3);
+    assert_eq!(drained.n_enqueued, 3, "admissions minus sheds");
+    assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+    assert!(client.get_kernel(suites::MM3, None, None).unwrap().hit, "hot key was kept");
+
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

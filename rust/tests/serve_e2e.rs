@@ -6,7 +6,9 @@
 #![cfg(unix)]
 
 use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
-use ecokernel::serve::{error_code, Daemon, DaemonConfig, DaemonHandle, ServeClient, ServeSource};
+use ecokernel::serve::{
+    error_code, Daemon, DaemonConfig, DaemonHandle, ServeAddr, ServeClient, ServeSource,
+};
 use ecokernel::util::Json;
 use ecokernel::workload::suites;
 use std::path::{Path, PathBuf};
@@ -40,7 +42,7 @@ fn spawn_daemon(tag: &str, tune: impl FnOnce(&mut SearchConfig)) -> (DaemonHandl
     tune(&mut search);
     let handle = Daemon::spawn(
         DaemonConfig {
-            socket_path: dir.join("ecokernel.sock"),
+            addr: ServeAddr::Unix(dir.join("ecokernel.sock")),
             store_dir: dir.clone(),
             search,
         },
@@ -51,7 +53,7 @@ fn spawn_daemon(tag: &str, tune: impl FnOnce(&mut SearchConfig)) -> (DaemonHandl
 }
 
 fn stop(handle: DaemonHandle, dir: &Path) {
-    let mut client = ServeClient::connect(&handle.socket_path).unwrap();
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
     client.shutdown().unwrap();
     handle.join().unwrap();
     let _ = std::fs::remove_dir_all(dir);
@@ -63,7 +65,7 @@ fn stop(handle: DaemonHandle, dir: &Path) {
 #[test]
 fn miss_then_background_search_then_hit_with_zero_measurements() {
     let (handle, dir) = spawn_daemon("hitmiss", |_| {});
-    let mut client = ServeClient::connect(&handle.socket_path).unwrap();
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
 
     let first = client.get_kernel(suites::MM1, None, None).unwrap();
     assert!(!first.hit, "a fresh store cannot hit");
@@ -106,7 +108,7 @@ fn miss_then_background_search_then_hit_with_zero_measurements() {
 #[test]
 fn duplicate_misses_enqueue_only_one_search() {
     let (handle, dir) = spawn_daemon("dup", |_| {});
-    let mut client = ServeClient::connect(&handle.socket_path).unwrap();
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
 
     let a = client.get_kernel(suites::MV3, None, None).unwrap();
     let b = client.get_kernel(suites::MV3, None, None).unwrap();
@@ -126,7 +128,7 @@ fn duplicate_misses_enqueue_only_one_search() {
 fn per_gpu_quota_evicts_lru_but_retained_keys_still_hit() {
     // Each quick search stores 1 record per key; quota 2 on the A100.
     let (handle, dir) = spawn_daemon("evict", |s| s.serve.per_gpu_quota = 2);
-    let mut client = ServeClient::connect(&handle.socket_path).unwrap();
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
 
     // Fill: MM1 then MV3, each searched and written back.
     client.get_kernel(suites::MM1, None, None).unwrap();
@@ -160,7 +162,7 @@ fn per_gpu_quota_evicts_lru_but_retained_keys_still_hit() {
 #[test]
 fn protocol_errors_over_the_socket() {
     let (handle, dir) = spawn_daemon("proto", |_| {});
-    let mut client = ServeClient::connect(&handle.socket_path).unwrap();
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
 
     let cases = [
         ("{definitely not json", error_code::BAD_REQUEST),
@@ -186,7 +188,7 @@ fn protocol_errors_over_the_socket() {
 #[test]
 fn serving_metrics_separate_served_from_searched() {
     let (handle, dir) = spawn_daemon("metrics", |_| {});
-    let mut client = ServeClient::connect(&handle.socket_path).unwrap();
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
 
     // 1 miss + search, then 4 hits.
     client.get_kernel(suites::MM1, None, None).unwrap();
@@ -212,7 +214,7 @@ fn serving_metrics_separate_served_from_searched() {
 #[test]
 fn gpu_and_mode_are_part_of_the_serve_key() {
     let (handle, dir) = spawn_daemon("keys", |_| {});
-    let mut client = ServeClient::connect(&handle.socket_path).unwrap();
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
 
     client.get_kernel(suites::MM1, None, None).unwrap();
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
