@@ -170,6 +170,12 @@ fn main() -> anyhow::Result<()> {
         shed as f64 / requests.max(1) as f64
     );
     println!(
+        "write-backs     : {} fenced, {} dropped (fleet lease contention; parked retries \
+         keep these near zero)",
+        sum(|s| s.n_writebacks_fenced),
+        sum(|s| s.n_writebacks_dropped)
+    );
+    println!(
         "store           : {} records in {} shards; shard sizes {:?}",
         sa.n_records, sa.n_shards, sa.shard_records
     );

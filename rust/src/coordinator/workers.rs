@@ -12,6 +12,7 @@ use crate::config::SearchConfig;
 use crate::search::{run_search, run_search_with_snapshot, SearchOutcome};
 use crate::store::TuningStore;
 use crate::workload::Workload;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -63,6 +64,9 @@ pub struct WorkerPool {
     results: Arc<Mutex<Vec<JobResult>>>,
     handles: Vec<JoinHandle<()>>,
     submitted: usize,
+    /// Jobs accepted (queued or running) and not yet completed — the
+    /// serving daemon's real `queue_depth` stat.
+    depth: Arc<AtomicUsize>,
 }
 
 impl WorkerPool {
@@ -85,11 +89,13 @@ impl WorkerPool {
         let (tx, rx) = sync_channel::<QueuedJob>(queue_cap.max(1));
         let rx = Arc::new(Mutex::new(rx));
         let results: Arc<Mutex<Vec<JobResult>>> = Arc::new(Mutex::new(Vec::new()));
+        let depth: Arc<AtomicUsize> = Arc::new(AtomicUsize::new(0));
         let mut handles = Vec::new();
         for worker in 0..n_workers.max(1) {
             let rx: Arc<Mutex<Receiver<QueuedJob>>> = rx.clone();
             let results = results.clone();
             let sink = sink.clone();
+            let depth = depth.clone();
             handles.push(std::thread::spawn(move || loop {
                 let job = {
                     let guard = rx.lock().expect("job queue");
@@ -127,6 +133,7 @@ impl WorkerPool {
                                     }
                                     None => results.lock().expect("results").push(result),
                                 }
+                                depth.fetch_sub(1, Ordering::SeqCst);
                             }
                             Err(panic) => match &sink {
                                 Some(tx) => {
@@ -141,6 +148,7 @@ impl WorkerPool {
                                         workload,
                                         error,
                                     });
+                                    depth.fetch_sub(1, Ordering::SeqCst);
                                 }
                                 // Batch mode keeps the old contract:
                                 // finish() panics on a worker panic.
@@ -152,7 +160,19 @@ impl WorkerPool {
                 }
             }));
         }
-        WorkerPool { tx: Some(tx), results, handles, submitted: 0 }
+        WorkerPool { tx: Some(tx), results, handles, submitted: 0, depth }
+    }
+
+    /// Jobs accepted by the pool (queued or running) and not yet
+    /// finished.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
+    }
+
+    /// The live counter behind [`WorkerPool::queue_depth`]: the serving
+    /// daemon reads it from its stats path without locking the pool.
+    pub fn depth_counter(&self) -> Arc<AtomicUsize> {
+        self.depth.clone()
     }
 
     /// Submit a job; blocks when the queue is full (backpressure).
@@ -176,6 +196,7 @@ impl WorkerPool {
         snapshot: Option<Arc<TuningStore>>,
     ) {
         self.submitted = self.submitted.max(index) + 1;
+        self.depth.fetch_add(1, Ordering::SeqCst);
         self.tx
             .as_ref()
             .expect("pool open")
@@ -199,12 +220,18 @@ impl WorkerPool {
     ) -> bool {
         let index = self.submitted;
         let tx = self.tx.as_ref().expect("pool open");
+        // Counted BEFORE the send: a worker that dequeues and finishes
+        // instantly must never decrement below zero.
+        self.depth.fetch_add(1, Ordering::SeqCst);
         match tx.try_send((index, job, snapshot)) {
             Ok(()) => {
                 self.submitted = index + 1;
                 true
             }
-            Err(_) => false, // queue full (or workers gone)
+            Err(_) => {
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+                false // queue full (or workers gone)
+            }
         }
     }
 
@@ -410,6 +437,23 @@ mod tests {
             PoolEvent::Done(r) => assert_eq!(r.name, "good"),
             PoolEvent::Failed { error, .. } => panic!("good job failed: {error}"),
         }
+    }
+
+    #[test]
+    fn queue_depth_returns_to_zero_when_all_jobs_finish() {
+        let mut pool = WorkerPool::new(2, 2);
+        assert_eq!(pool.queue_depth(), 0);
+        let depth = pool.depth_counter();
+        for seed in 0..3 {
+            pool.submit(SearchJob {
+                name: format!("d{seed}"),
+                workload: suites::MM1,
+                cfg: quick_cfg(seed, SearchMode::LatencyOnly),
+            });
+        }
+        let results = pool.finish();
+        assert_eq!(results.len(), 3);
+        assert_eq!(depth.load(Ordering::SeqCst), 0, "every accepted job was counted back out");
     }
 
     #[test]

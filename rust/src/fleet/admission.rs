@@ -38,7 +38,8 @@ pub struct HeatSketch {
 
 impl HeatSketch {
     /// `half_life`: requests after which an untouched key's heat
-    /// halves. `cap`: max tracked keys (prunes to the hottest half).
+    /// halves. `cap`: max tracked keys — outgrowing it prunes down to
+    /// the hottest `cap / 2` keys (never the key being credited).
     pub fn new(half_life: f64, cap: usize) -> HeatSketch {
         HeatSketch { half_life: half_life.max(1.0), cap: cap.max(2), t: 0, heat: HashMap::new() }
     }
@@ -64,7 +65,7 @@ impl HeatSketch {
         *entry = (decayed + 1.0, now);
         let updated = entry.0;
         if self.heat.len() > self.cap {
-            self.prune();
+            self.prune(key);
         }
         updated
     }
@@ -99,8 +100,12 @@ impl HeatSketch {
         out
     }
 
-    /// Drop the coldest half when the sketch outgrows its cap.
-    fn prune(&mut self) {
+    /// Prune down to the hottest `cap / 2` keys when the sketch
+    /// outgrows its cap. `protect` — the key that was just credited —
+    /// always survives: under heavy cold-key churn a fresh touch (heat
+    /// 1.0) can rank below the incumbents, and a sketch that evicts the
+    /// key it is crediting would never learn a new key's heat at all.
+    fn prune(&mut self, protect: &str) {
         let mut all: Vec<(String, f64)> = self
             .heat
             .iter()
@@ -112,7 +117,9 @@ impl HeatSketch {
                 .then_with(|| a.0.cmp(&b.0))
         });
         all.truncate(self.cap / 2);
-        let keep: std::collections::HashSet<String> = all.into_iter().map(|(k, _)| k).collect();
+        let mut keep: std::collections::HashSet<String> =
+            all.into_iter().map(|(k, _)| k).collect();
+        keep.insert(protect.to_string());
         self.heat.retain(|k, _| keep.contains(k));
     }
 }
@@ -187,9 +194,14 @@ impl<T> Backlog<T> {
         best.map(|i| self.entries.swap_remove(i))
     }
 
-    /// Put back an entry that could not be submitted after all.
-    pub fn restore(&mut self, key: String, item: T) {
-        self.entries.push((key, item));
+    /// Put back an entry that could not be submitted after all. The
+    /// backlog stays bounded: the queue may have refilled between the
+    /// pop and this restore, so the entry competes by heat exactly like
+    /// a fresh offer — when the backlog is full again, the coldest of
+    /// (backlog ∪ restored) is shed and returned for the caller to
+    /// release (claim + pending bookkeeping + `job_shed` event).
+    pub fn restore(&mut self, key: String, item: T, heat: &HeatSketch) -> Offer<T> {
+        self.offer(key, item, heat)
     }
 
     /// Take every entry (shutdown: release their fleet claims).
@@ -285,6 +297,54 @@ mod tests {
             .map(|(key, _)| key)
             .collect();
         assert_eq!(order, ["c", "a", "b"], "hottest first, then lexicographic");
+    }
+
+    #[test]
+    fn touch_never_prunes_the_key_being_credited() {
+        // Four entrenched hot keys, cap 4: a fresh key's own touch
+        // overflows the sketch, and its heat (1.0) ranks below every
+        // incumbent — it must survive the prune it triggered anyway.
+        let mut sketch = HeatSketch::new(1e6, 4);
+        for key in ["h1", "h2", "h3", "h4"] {
+            for _ in 0..10 {
+                sketch.touch(key);
+            }
+        }
+        let fresh = sketch.touch("fresh");
+        assert!((fresh - 1.0).abs() < 1e-9, "first touch credits 1.0: {fresh}");
+        assert!(sketch.heat("fresh") > 0.0, "just-credited key survives its own prune");
+        assert!(sketch.len() <= 4 / 2 + 1, "pruned to the hottest half + the credited key");
+    }
+
+    #[test]
+    fn restore_keeps_the_backlog_bounded_and_sheds_the_coldest() {
+        let mut sketch = HeatSketch::new(1e6, 1024);
+        for _ in 0..5 {
+            sketch.touch("hot");
+        }
+        sketch.touch("cold");
+
+        // A cold restore against a refilled backlog is shed, not
+        // stacked past the cap.
+        let mut backlog: Backlog<u32> = Backlog::new(1);
+        assert!(matches!(backlog.offer("hot".into(), 1, &sketch), Offer::Queued));
+        match backlog.restore("cold".into(), 2, &sketch) {
+            Offer::Rejected { key, item } => assert_eq!((key.as_str(), item), ("cold", 2)),
+            _ => panic!("cold restore into a full backlog must be shed"),
+        }
+        assert_eq!(backlog.len(), 1, "restore never grows the backlog past cap");
+
+        // A hot restore displaces a colder incumbent instead.
+        let mut backlog: Backlog<u32> = Backlog::new(1);
+        assert!(matches!(backlog.offer("cold".into(), 3, &sketch), Offer::Queued));
+        match backlog.restore("hot".into(), 4, &sketch) {
+            Offer::Displaced { key, item } => assert_eq!((key.as_str(), item), ("cold", 3)),
+            _ => panic!("hot restore must displace the cold incumbent"),
+        }
+        assert_eq!(backlog.len(), 1);
+        // An under-cap restore simply queues.
+        let mut backlog: Backlog<u32> = Backlog::new(2);
+        assert!(matches!(backlog.restore("hot".into(), 5, &sketch), Offer::Queued));
     }
 
     #[test]

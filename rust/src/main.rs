@@ -297,9 +297,16 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
                 s.p50_reply_s * 1e3,
                 s.p99_reply_s * 1e3
             );
-            println!("queue depth : {} ({} backlogged)", s.queue_depth, s.backlog_len);
+            println!(
+                "queue depth : {} in pool ({} backlogged, {} keys pending)",
+                s.queue_depth, s.backlog_len, s.pending_keys
+            );
             println!("searches    : {} done, {} enqueued total", s.n_searches_done, s.n_enqueued);
             println!("admission   : {} shed, {} fleet-coalesced", s.n_shed, s.n_fleet_coalesced);
+            println!(
+                "write-backs : {} fenced, {} dropped",
+                s.n_writebacks_fenced, s.n_writebacks_dropped
+            );
             println!(
                 "store       : {} records in {} shards ({} evicted)",
                 s.n_records, s.n_shards, s.n_evicted_records
@@ -426,15 +433,15 @@ fn cmd_cache(args: &[String]) -> anyhow::Result<()> {
                 println!("saved/hit : {:.1}s simulated search time", s.total_sim_time_s);
             }
             "list" => {
-                for rec in store.iter() {
-                    print_record(rec);
+                for rec in store.records() {
+                    print_record(&rec);
                 }
                 if store.is_empty() {
                     println!("(store is empty)");
                 }
             }
             "export" => {
-                for rec in store.iter() {
+                for rec in store.records() {
                     println!("{}", rec.to_json());
                 }
             }

@@ -101,19 +101,27 @@ impl ServeClient {
         }
     }
 
-    /// Poll `stats` until every enqueued search has been written back
-    /// (queue depth 0), or the timeout expires.
+    /// Poll `stats` until every admitted search has been written back
+    /// — no key queued, backlogged, running, or awaiting write-back
+    /// (`pending_keys == 0`) — or the timeout expires. `pending_keys`
+    /// subsumes the worker-queue depth on a current daemon (a key
+    /// leaves the pending set only after its record landed), but the
+    /// pool depth is checked too: a pre-split daemon's frames lack
+    /// `pending_keys` (parsed as 0) while their `queue_depth` carries
+    /// the old pending-key meaning, so this stays a real drain signal
+    /// against both generations.
     pub fn wait_for_drain(&mut self, timeout: Duration) -> anyhow::Result<StatsReply> {
         let start = Instant::now();
         loop {
             let s = self.stats()?;
-            if s.queue_depth == 0 {
+            if s.pending_keys == 0 && s.queue_depth == 0 {
                 return Ok(s);
             }
             if start.elapsed() > timeout {
                 return Err(anyhow!(
-                    "queue not drained within {:.0}s (depth {})",
+                    "searches not drained within {:.0}s ({} keys pending, pool depth {})",
                     timeout.as_secs_f64(),
+                    s.pending_keys,
                     s.queue_depth
                 ));
             }

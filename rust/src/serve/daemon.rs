@@ -11,6 +11,26 @@
 //!   [`WorkerPool`]. The finished search is written back into the
 //!   sharded store, so the next request for that key is a hit.
 //!
+//! # Locking: the hot path is not serialized
+//!
+//! The daemon keeps TWO pieces of shared state, neither of which is a
+//! request-wide lock:
+//!
+//! * the [`ShardedStore`] is internally synchronized **per shard**
+//!   (plus a small served-LRU mutex and an `RwLock` around the
+//!   neighbor index — see [`crate::store::sharded`]). An exact hit on
+//!   shard A never waits behind another connection's miss refreshing
+//!   shard B; an append or eviction rewrite takes only its shard;
+//! * everything else (metrics, heat sketch, admission backlog, pending
+//!   keys, fleet claims, the worker snapshot handle) lives behind one
+//!   SMALL mutex ([`ServeState`]) that is only ever held for
+//!   microseconds of bookkeeping — never across store I/O, claim I/O,
+//!   lease waits, or snapshot rebuilds.
+//!
+//! The miss path's warm guess queries the store's incremental neighbor
+//! index (candidate buckets, not an O(store) scan), so a cold-key
+//! burst stays cheap even on a large store.
+//!
 //! Fleet behavior (N daemons, one store — see [`crate::fleet`]):
 //!
 //! * the store opens in **fleet mode**: every miss first refreshes the
@@ -23,6 +43,9 @@
 //!   owner's claim expires and the key is reclaimed. Write-backs are
 //!   epoch-fenced: a daemon that lost its claim mid-search has its
 //!   late record rejected;
+//! * a write-back that hits a busy shard lease is **parked** and
+//!   retried on later writer wakeups instead of being dropped — the
+//!   record is a multi-second search the fleet already paid for;
 //! * when the search queue saturates, admission control
 //!   ([`crate::fleet::admission`]) backlogs hot keys (pumped into
 //!   freed slots in heat order) and sheds cold ones, instead of the
@@ -45,8 +68,8 @@ use crate::workload::Workload;
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead as _, BufReader, Write as _};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::Receiver;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -65,13 +88,19 @@ pub struct DaemonConfig {
 /// A queued-but-not-yet-submitted background search.
 type BacklogJob = (SearchJob, Arc<TuningStore>);
 
-/// Mutable daemon state behind one lock.
-struct Shared {
-    store: ShardedStore,
+/// The daemon's SMALL shared state: pure bookkeeping, held only for
+/// microseconds at a time. Store access never happens under this lock
+/// — the [`ShardedStore`] synchronizes itself per shard.
+struct ServeState {
     /// Parsed snapshot handed to background searches; rebuilt (pointer
     /// clones — records are `Arc`-shared) after every store change.
     snapshot: Arc<TuningStore>,
-    /// Serve keys with a search queued, backlogged, or running here.
+    /// Build ticket of the installed snapshot (see
+    /// [`refresh_snapshot`]): snapshots are built OUTSIDE this lock,
+    /// so an install must never roll a newer snapshot back.
+    snapshot_gen: u64,
+    /// Serve keys with a search queued, backlogged, running, or
+    /// awaiting write-back here.
     pending: HashSet<String>,
     /// Fleet in-flight claims this daemon holds, by serve key.
     claims: HashMap<String, Lease>,
@@ -84,9 +113,16 @@ struct Shared {
 
 /// Everything a connection handler needs, shared across threads.
 struct Ctx {
-    shared: Mutex<Shared>,
+    /// Internally synchronized per shard; no outer lock.
+    store: ShardedStore,
+    state: Mutex<ServeState>,
     /// `None` once shutdown has begun.
     pool: Mutex<Option<WorkerPool>>,
+    /// Live count of jobs in the worker pool (queued or running); the
+    /// stats path reads it without touching the pool mutex.
+    pool_depth: Arc<AtomicUsize>,
+    /// Monotonic snapshot build tickets (see [`refresh_snapshot`]).
+    snapshot_epoch: AtomicU64,
     /// Set by a `shutdown` request: stop accepting connections.
     shutting: AtomicBool,
     /// Set after the drain completes: stops the claim heartbeat.
@@ -169,13 +205,15 @@ impl Daemon {
         let (tx, rx) = std::sync::mpsc::channel::<PoolEvent>();
         let pool =
             WorkerPool::with_sink(cfg.search.serve.n_workers, cfg.search.serve.queue_cap, tx);
+        let pool_depth = pool.depth_counter();
 
         let (listener, addr) = Listener::bind(&cfg.addr)?;
 
         let ctx = Arc::new(Ctx {
-            shared: Mutex::new(Shared {
-                store,
+            store,
+            state: Mutex::new(ServeState {
                 snapshot,
+                snapshot_gen: 0,
                 pending: HashSet::new(),
                 claims: HashMap::new(),
                 backlog: Backlog::new(fleet.backlog_cap),
@@ -183,6 +221,8 @@ impl Daemon {
                 metrics: ServeMetrics::default(),
             }),
             pool: Mutex::new(Some(pool)),
+            pool_depth,
+            snapshot_epoch: AtomicU64::new(0),
             shutting: AtomicBool::new(false),
             stopped: AtomicBool::new(false),
             search: cfg.search,
@@ -247,8 +287,8 @@ impl Daemon {
         // Backlogged searches never ran: hand their keys back to the
         // fleet so another daemon's next miss claims them.
         {
-            let mut shared = self.ctx.shared.lock().expect("shared lock");
-            let Shared { backlog, claims, pending, .. } = &mut *shared;
+            let mut state = self.ctx.state.lock().expect("state lock");
+            let ServeState { backlog, claims, pending, .. } = &mut *state;
             for (key, _job) in backlog.drain() {
                 pending.remove(&key);
                 if let Some(lease) = claims.remove(&key) {
@@ -276,12 +316,12 @@ fn heartbeat_loop(ctx: &Ctx) {
         std::time::Duration::from_millis((ctx.search.fleet.lease_ttl_ms / 3).clamp(25, 2000));
     while !ctx.stopped.load(Ordering::SeqCst) {
         std::thread::sleep(interval);
-        // Renew outside the shared lock — each renew is several file
-        // ops and must not stall hit replies. A clone carries the same
-        // (holder, epoch) identity, which is all renewal needs.
+        // Renew outside the state lock — each renew is several file
+        // ops and must not stall reply bookkeeping. A clone carries the
+        // same (holder, epoch) identity, which is all renewal needs.
         let leases: Vec<Lease> = {
-            let shared = ctx.shared.lock().expect("shared lock");
-            shared.claims.values().cloned().collect()
+            let state = ctx.state.lock().expect("state lock");
+            state.claims.values().cloned().collect()
         };
         for lease in &leases {
             let _ = lease.renew();
@@ -289,17 +329,115 @@ fn heartbeat_loop(ctx: &Ctx) {
     }
 }
 
+/// Rebuild the worker snapshot (pointer clones) and install it —
+/// unless a NEWER build landed first. Builds run outside the state
+/// lock, so two concurrent rebuilders (a miss's refresh and the writer
+/// thread) can finish out of order; the ticket is taken BEFORE the
+/// store is read, so a build that began after another's store change
+/// always carries the higher ticket and an install can never roll the
+/// snapshot back to one missing a just-written record.
+fn refresh_snapshot(ctx: &Ctx) {
+    let gen = ctx.snapshot_epoch.fetch_add(1, Ordering::SeqCst) + 1;
+    let snapshot = Arc::new(ctx.store.snapshot());
+    let mut state = ctx.state.lock().expect("state lock");
+    if gen > state.snapshot_gen {
+        state.snapshot = snapshot;
+        state.snapshot_gen = gen;
+    }
+}
+
+/// How a finished search's write-back ended.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Landing {
+    /// Appended to the store.
+    Accepted,
+    /// Rejected by the epoch fence (another daemon owns the key now).
+    Fenced,
+    /// Given up for good (lease never freed, or an I/O error).
+    Dropped,
+}
+
+impl Landing {
+    fn name(self) -> &'static str {
+        match self {
+            Landing::Accepted => "accepted",
+            Landing::Fenced => "fenced",
+            Landing::Dropped => "dropped",
+        }
+    }
+}
+
+/// A finished search waiting to be written back. Parked (and retried
+/// on later writer wakeups) while its shard's lease is held by another
+/// fleet member — the old behavior of dropping the record after a few
+/// inline retries threw away a multi-second search the fleet had
+/// already paid for.
+struct PendingWriteback {
+    rec: TuningRecord,
+    key: String,
+    n_measurements: usize,
+    sim_time_s: f64,
+    attempts: usize,
+    /// When the first attempt ran. The drop budget is wall-clock, not
+    /// attempt-count: parked jobs are re-offered on EVERY writer wakeup
+    /// (each pool event included), so under a completion burst an
+    /// attempt counter would burn out in milliseconds.
+    first_attempt: Option<std::time::Instant>,
+}
+
+/// Park retry cadence, and the wall-clock budget after which a
+/// write-back is dropped for good (a foreign lease never freeing for
+/// this long = a wedged peer).
+const PARK_RETRY_MS: u64 = 250;
+const PARK_BUDGET: std::time::Duration = std::time::Duration::from_secs(30);
+
 /// Write-back thread: append every finished search to the sharded
 /// store (epoch-fenced by its fleet claim), emit the eviction audit,
 /// refresh the worker snapshot, and pump the admission backlog into
 /// the freed queue slot. A failed (panicked) search releases its
 /// reservations so the next request for that key can retry instead of
-/// coalescing into a dead search forever.
+/// coalescing into a dead search forever. Lease-busy write-backs are
+/// parked and retried; `n_searches_done` / `measurements_paid` count
+/// only write-backs that actually landed.
 fn writer_loop(ctx: &Ctx, rx: Receiver<PoolEvent>) {
-    for event in rx {
-        let result = match event {
-            PoolEvent::Done(result) => result,
-            PoolEvent::Failed { name, cfg, workload, error, .. } => {
+    let mut parked: Vec<PendingWriteback> = Vec::new();
+    loop {
+        // Block on the next finished search; with parked write-backs
+        // waiting, wake periodically to retry them.
+        let event = if parked.is_empty() {
+            match rx.recv() {
+                Ok(e) => Some(e),
+                Err(_) => break, // pool finished (shutdown drain)
+            }
+        } else {
+            match rx.recv_timeout(std::time::Duration::from_millis(PARK_RETRY_MS)) {
+                Ok(e) => Some(e),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        };
+        match event {
+            Some(PoolEvent::Done(result)) => {
+                let rec = TuningRecord::from_outcome(&result.outcome, &result.cfg);
+                let key = serve_key(&rec.workload_id, &rec.gpu, &rec.mode, &rec.fingerprint);
+                let job = PendingWriteback {
+                    key,
+                    n_measurements: result.outcome.n_energy_measurements(),
+                    sim_time_s: result.outcome.clock.total_s,
+                    attempts: 0,
+                    first_attempt: None,
+                    rec,
+                };
+                if let Some(job) = land_writeback(ctx, job) {
+                    // The worker that produced this result freed a
+                    // queue slot even though its write-back is parked:
+                    // refill the slot from the backlog now, not when
+                    // the parked record terminally lands.
+                    parked.push(job);
+                    pump_backlog(ctx);
+                }
+            }
+            Some(PoolEvent::Failed { name, cfg, workload, error, .. }) => {
                 let key = serve_key(
                     &workload.id(),
                     cfg.gpu.name(),
@@ -308,9 +446,9 @@ fn writer_loop(ctx: &Ctx, rx: Receiver<PoolEvent>) {
                 );
                 eprintln!("serve: background search '{name}' failed: {error}");
                 {
-                    let mut shared = ctx.shared.lock().expect("shared lock");
-                    shared.pending.remove(&key);
-                    if let Some(lease) = shared.claims.remove(&key) {
+                    let mut state = ctx.state.lock().expect("state lock");
+                    state.pending.remove(&key);
+                    if let Some(lease) = state.claims.remove(&key) {
                         let _ = lease.release();
                     }
                 }
@@ -321,104 +459,160 @@ fn writer_loop(ctx: &Ctx, rx: Receiver<PoolEvent>) {
                     );
                 }
                 pump_backlog(ctx);
-                continue;
             }
-        };
-        let rec = TuningRecord::from_outcome(&result.outcome, &result.cfg);
-        let key = serve_key(&rec.workload_id, &rec.gpu, &rec.mode, &rec.fingerprint);
-        let n_measurements = result.outcome.n_energy_measurements();
-        let sim_time_s = result.outcome.clock.total_s;
-        // Land the write-back without sleeping inside the shared lock:
-        // lease contention (another member mid-eviction on this shard)
-        // is waited out BETWEEN lock acquisitions, so hit replies keep
-        // flowing while we retry.
-        let mut accepted = false;
-        let mut fenced = false;
-        for attempt in 0..8 {
-            if attempt > 0 {
-                std::thread::sleep(std::time::Duration::from_millis(100));
+            None => {}
+        }
+        // Re-offer every parked write-back on each wakeup.
+        let waiting = std::mem::take(&mut parked);
+        for job in waiting {
+            if let Some(job) = land_writeback(ctx, job) {
+                parked.push(job);
             }
-            let outcome = {
-                let mut shared = ctx.shared.lock().expect("shared lock");
-                let Shared { store, claims, .. } = &mut *shared;
-                match claims.get(&key) {
-                    Some(lease) => store.try_append_claimed(rec.clone(), lease),
-                    None => store.try_append(rec.clone()),
-                }
-            };
-            match outcome {
-                Ok(AppendOutcome::Appended) => {
-                    accepted = true;
-                    break;
-                }
-                Ok(AppendOutcome::FencedOut) => {
-                    fenced = true;
-                    break;
-                }
-                Ok(AppendOutcome::LeaseBusy) => {}
+        }
+    }
+    // Shutdown drain: nothing submits anymore — give each parked
+    // record one final blocking attempt (waits out the lease ~0.5 s)
+    // before the daemon exits.
+    for job in parked {
+        let claim = ctx.state.lock().expect("state lock").claims.get(&job.key).cloned();
+        let landing = match &claim {
+            Some(lease) => match ctx.store.append_claimed(job.rec.clone(), lease) {
+                Ok(true) => Landing::Accepted,
+                Ok(false) => Landing::Fenced,
                 Err(e) => {
-                    eprintln!("serve: write-back failed for {key}: {e:#}");
-                    break;
+                    eprintln!("serve: final write-back for {} failed: {e:#}", job.key);
+                    Landing::Dropped
                 }
-            }
-        }
-        if fenced {
-            eprintln!(
-                "serve: write-back for {key} rejected (stale fleet claim — another daemon \
-                 reclaimed the key)"
-            );
-        } else if !accepted {
-            eprintln!("serve: write-back for {key} dropped (shard lease stayed busy)");
-        }
-        let mut evict = EvictionReport::default();
-        let claim = {
-            let mut shared = ctx.shared.lock().expect("shared lock");
-            if accepted {
-                match shared.store.enforce_limits(
-                    ctx.search.serve.per_gpu_quota,
-                    ctx.search.serve.max_records,
-                ) {
-                    Ok(report) => evict = report,
-                    Err(e) => eprintln!("serve: eviction failed: {e:#}"),
+            },
+            None => match ctx.store.append(job.rec.clone()) {
+                Ok(()) => Landing::Accepted,
+                Err(e) => {
+                    eprintln!("serve: final write-back for {} failed: {e:#}", job.key);
+                    Landing::Dropped
                 }
-            }
-            shared.metrics.n_searches_done += 1;
-            shared.metrics.measurements_paid += n_measurements;
-            shared.metrics.n_evicted_records += evict.n_evicted;
-            shared.pending.remove(&key);
-            shared.snapshot = Arc::new(shared.store.snapshot());
-            shared.claims.remove(&key)
+            },
         };
-        // Released only now — after the record is durably appended — so
-        // another daemon's claim can never race ahead of the data.
-        if let Some(lease) = claim {
-            let _ = lease.release();
+        finish_writeback(ctx, &job, landing);
+    }
+}
+
+/// One write-back attempt. Returns the job when it stays parked
+/// (lease busy, retry budget left); `None` once it reached a terminal
+/// landing. No daemon lock is held across the store call.
+fn land_writeback(ctx: &Ctx, mut job: PendingWriteback) -> Option<PendingWriteback> {
+    job.attempts += 1;
+    let first_attempt = *job.first_attempt.get_or_insert_with(std::time::Instant::now);
+    // The newest claim for this key fences the append; fetched fresh
+    // on every retry (a concurrent re-claim bumps the epoch).
+    let claim = ctx.state.lock().expect("state lock").claims.get(&job.key).cloned();
+    let outcome = match &claim {
+        Some(lease) => ctx.store.try_append_claimed(job.rec.clone(), lease),
+        None => ctx.store.try_append(job.rec.clone()),
+    };
+    match outcome {
+        Ok(AppendOutcome::Appended) => {
+            finish_writeback(ctx, &job, Landing::Accepted);
+            None
         }
-        if let Some(log) = &ctx.log {
+        Ok(AppendOutcome::FencedOut) => {
+            eprintln!(
+                "serve: write-back for {} rejected (stale fleet claim — another daemon \
+                 reclaimed the key)",
+                job.key
+            );
+            finish_writeback(ctx, &job, Landing::Fenced);
+            None
+        }
+        Ok(AppendOutcome::LeaseBusy) => {
+            if first_attempt.elapsed() >= PARK_BUDGET {
+                eprintln!(
+                    "serve: write-back for {} dropped after {} retries over {:?} (shard lease \
+                     never freed)",
+                    job.key,
+                    job.attempts,
+                    first_attempt.elapsed()
+                );
+                finish_writeback(ctx, &job, Landing::Dropped);
+                return None;
+            }
+            if job.attempts == 1 {
+                if let Some(log) = &ctx.log {
+                    log.emit("job_writeback_parked", vec![("key", Json::str(job.key.clone()))]);
+                }
+            }
+            Some(job)
+        }
+        Err(e) => {
+            eprintln!("serve: write-back failed for {}: {e:#}", job.key);
+            finish_writeback(ctx, &job, Landing::Dropped);
+            None
+        }
+    }
+}
+
+/// Terminal write-back bookkeeping: eviction (on an accepted append),
+/// metrics — counted as "done" ONLY when the record landed — snapshot
+/// refresh, pending/claim release, audit events, and a backlog pump
+/// for the freed worker slot.
+fn finish_writeback(ctx: &Ctx, job: &PendingWriteback, landing: Landing) {
+    let accepted = landing == Landing::Accepted;
+    let mut evict = EvictionReport::default();
+    if accepted {
+        let serve = &ctx.search.serve;
+        match ctx.store.enforce_limits(serve.per_gpu_quota, serve.max_records) {
+            Ok(report) => evict = report,
+            Err(e) => eprintln!("serve: eviction failed: {e:#}"),
+        }
+    }
+    // Rebuild the worker snapshot (pointer clones) BEFORE taking the
+    // small lock — never store work under it.
+    if accepted {
+        refresh_snapshot(ctx);
+    }
+    let claim = {
+        let mut state = ctx.state.lock().expect("state lock");
+        match landing {
+            Landing::Accepted => {
+                state.metrics.n_searches_done += 1;
+                state.metrics.measurements_paid += job.n_measurements;
+                state.metrics.n_evicted_records += evict.n_evicted;
+            }
+            Landing::Fenced => state.metrics.n_writebacks_fenced += 1,
+            Landing::Dropped => state.metrics.n_writebacks_dropped += 1,
+        }
+        state.pending.remove(&job.key);
+        state.claims.remove(&job.key)
+    };
+    // Released only now — after the record is durably appended — so
+    // another daemon's claim can never race ahead of the data.
+    if let Some(lease) = claim {
+        let _ = lease.release();
+    }
+    if let Some(log) = &ctx.log {
+        log.emit(
+            "job_search_done",
+            vec![
+                ("key", Json::str(job.key.clone())),
+                ("n_energy_measurements", Json::num(job.n_measurements as f64)),
+                ("sim_time_s", Json::num(job.sim_time_s)),
+                ("evicted_records", Json::num(evict.n_evicted as f64)),
+                ("accepted", Json::Bool(accepted)),
+                ("landing", Json::str(landing.name())),
+            ],
+        );
+        for victim in &evict.victims {
             log.emit(
-                "job_search_done",
+                "job_evicted",
                 vec![
-                    ("key", Json::str(key)),
-                    ("n_energy_measurements", Json::num(n_measurements as f64)),
-                    ("sim_time_s", Json::num(sim_time_s)),
-                    ("evicted_records", Json::num(evict.n_evicted as f64)),
-                    ("accepted", Json::Bool(accepted)),
+                    ("key", Json::str(victim.key.clone())),
+                    ("reason", Json::str(victim.reason)),
+                    ("shard", Json::num(victim.shard as f64)),
+                    ("records", Json::num(victim.n_records as f64)),
                 ],
             );
-            for victim in &evict.victims {
-                log.emit(
-                    "job_evicted",
-                    vec![
-                        ("key", Json::str(victim.key.clone())),
-                        ("reason", Json::str(victim.reason)),
-                        ("shard", Json::num(victim.shard as f64)),
-                        ("records", Json::num(victim.n_records as f64)),
-                    ],
-                );
-            }
         }
-        pump_backlog(ctx);
     }
+    pump_backlog(ctx);
 }
 
 /// Move backlogged searches into the worker queue, hottest first,
@@ -426,8 +620,8 @@ fn writer_loop(ctx: &Ctx, rx: Receiver<PoolEvent>) {
 fn pump_backlog(ctx: &Ctx) {
     loop {
         let popped = {
-            let mut shared = ctx.shared.lock().expect("shared lock");
-            let Shared { backlog, heat, .. } = &mut *shared;
+            let mut state = ctx.state.lock().expect("state lock");
+            let ServeState { backlog, heat, .. } = &mut *state;
             backlog.pop_hottest(heat)
         };
         let Some((key, (job, snapshot))) = popped else { return };
@@ -446,8 +640,37 @@ fn pump_backlog(ctx: &Ctx) {
                 );
             }
         } else {
-            let mut shared = ctx.shared.lock().expect("shared lock");
-            shared.backlog.restore(key, (job, snapshot));
+            // Hand the slot back. The backlog may have refilled while
+            // the submit was attempted: restore competes by heat and
+            // sheds the coldest entry instead of growing past its cap.
+            let shed: Option<String> = {
+                let mut state = ctx.state.lock().expect("state lock");
+                let ServeState { backlog, heat, pending, claims, metrics, .. } = &mut *state;
+                match backlog.restore(key, (job, snapshot), heat) {
+                    Offer::Queued => None,
+                    Offer::Displaced { key: shed_key, .. }
+                    | Offer::Rejected { key: shed_key, .. } => {
+                        pending.remove(&shed_key);
+                        metrics.n_enqueued -= 1;
+                        metrics.n_shed += 1;
+                        if let Some(lease) = claims.remove(&shed_key) {
+                            let _ = lease.release();
+                        }
+                        Some(shed_key)
+                    }
+                }
+            };
+            if let Some(shed_key) = shed {
+                if let Some(log) = &ctx.log {
+                    log.emit(
+                        "job_shed",
+                        vec![
+                            ("key", Json::str(shed_key)),
+                            ("reason", Json::str("restore_overflow")),
+                        ],
+                    );
+                }
+            }
             return;
         }
     }
@@ -499,32 +722,43 @@ fn handle_frame(ctx: &Ctx, line: &str) -> (Json, bool) {
 }
 
 fn stats_reply(ctx: &Ctx, id: String) -> StatsReply {
-    // Counts reflect what this daemon has ingested: the miss path's
-    // per-key refresh pulls foreign write-backs in as they are
+    // Store counters read through the per-shard locks (no daemon-wide
+    // lock). Counts reflect what this daemon has ingested: the miss
+    // path's per-key refresh pulls foreign write-backs in as they are
     // requested. No full-store refresh here — stats is polled in tight
-    // loops (wait_for_drain) and must not stall hit replies behind an
-    // all-shard disk scan under the shared lock.
-    let shared = ctx.shared.lock().expect("shared lock");
+    // loops (wait_for_drain) and must not stall on an all-shard scan.
+    let n_shards = ctx.store.n_shards();
+    let shard_records = ctx.store.shard_sizes();
+    // One shard-lock walk, not two: the total is the histogram's sum.
+    let n_records = shard_records.iter().sum();
+    // The REAL worker-queue depth (queued or running jobs). The old
+    // frames reported the pending-key count here, conflating the pool
+    // with backlogged and in-flight keys.
+    let queue_depth = ctx.pool_depth.load(Ordering::SeqCst);
+    let state = ctx.state.lock().expect("state lock");
     StatsReply {
         id,
-        n_requests: shared.metrics.n_requests,
-        n_hits: shared.metrics.n_hits,
-        n_misses: shared.metrics.n_misses,
-        n_enqueued: shared.metrics.n_enqueued,
-        n_searches_done: shared.metrics.n_searches_done,
-        n_evicted_records: shared.metrics.n_evicted_records,
-        queue_depth: shared.pending.len(),
-        n_records: shared.store.len(),
-        n_shards: shared.store.n_shards(),
-        hit_rate: shared.metrics.hit_rate(),
-        p50_reply_s: shared.metrics.p50_reply_s(),
-        p99_reply_s: shared.metrics.p99_reply_s(),
-        measurements_paid: shared.metrics.measurements_paid,
-        n_shed: shared.metrics.n_shed,
-        n_fleet_coalesced: shared.metrics.n_fleet_coalesced,
-        backlog_len: shared.backlog.len(),
-        shard_records: shared.store.shard_sizes(),
-        heat_histogram: shared.heat.histogram().to_vec(),
+        n_requests: state.metrics.n_requests,
+        n_hits: state.metrics.n_hits,
+        n_misses: state.metrics.n_misses,
+        n_enqueued: state.metrics.n_enqueued,
+        n_searches_done: state.metrics.n_searches_done,
+        n_evicted_records: state.metrics.n_evicted_records,
+        queue_depth,
+        n_records,
+        n_shards,
+        hit_rate: state.metrics.hit_rate(),
+        p50_reply_s: state.metrics.p50_reply_s(),
+        p99_reply_s: state.metrics.p99_reply_s(),
+        measurements_paid: state.metrics.measurements_paid,
+        n_shed: state.metrics.n_shed,
+        n_fleet_coalesced: state.metrics.n_fleet_coalesced,
+        backlog_len: state.backlog.len(),
+        pending_keys: state.pending.len(),
+        n_writebacks_fenced: state.metrics.n_writebacks_fenced,
+        n_writebacks_dropped: state.metrics.n_writebacks_dropped,
+        shard_records,
+        heat_histogram: state.heat.histogram().to_vec(),
     }
 }
 
@@ -548,50 +782,53 @@ fn serve_get_kernel(
     cfg.store.write_back = false;
     let key = serve_key(&workload.id(), cfg.gpu.name(), cfg.mode.name(), &config_fingerprint(&cfg));
 
-    let mut shared = ctx.shared.lock().expect("shared lock");
-    shared.heat.touch(&key);
+    // Heat credit under the small lock; released before any store I/O.
+    ctx.state.lock().expect("state lock").heat.touch(&key);
+
     // Fleet refresh: a search another daemon wrote back since we last
-    // looked at this shard turns this request into a plain hit.
-    match shared.store.refresh_key(&key) {
+    // looked at this shard turns this request into a plain hit. Takes
+    // only the key's shard lock — hits on other shards keep flowing
+    // even while this refresh waits on disk.
+    match ctx.store.refresh_key(&key) {
         Ok(0) => {}
-        Ok(_) => shared.snapshot = Arc::new(shared.store.snapshot()),
+        Ok(_) => refresh_snapshot(ctx),
         Err(e) => eprintln!("serve: shard refresh failed for {key}: {e:#}"),
     }
-    let shard_len = shared.store.shard_len_for(&key);
+    let shard_len = ctx.store.shard_len_for(&key);
 
     // Exact hit: reply with the recorded kernel, zero cost.
-    let hit = shared
-        .store
-        .get(workload, &cfg)
-        .map(|r| (r.best.schedule, r.best.latency_s, r.best.energy_j, r.best.avg_power_w));
-    if let Some((schedule, latency_s, energy_j, avg_power_w)) = hit {
-        if let Err(e) = shared.store.mark_served(&key) {
+    if let Some(rec) = ctx.store.get(workload, &cfg) {
+        if let Err(e) = ctx.store.mark_served(&key) {
             eprintln!("serve: LRU touch failed for {key}: {e:#}");
         }
         let t = reply_time_s(true, shard_len);
-        shared.metrics.record_reply(true, t);
-        let queue_depth = shared.pending.len();
-        drop(shared);
+        let queue_depth = {
+            let mut state = ctx.state.lock().expect("state lock");
+            state.metrics.record_reply(true, t);
+            state.pending.len()
+        };
         emit_served(ctx, &key, "hit", ServeSource::Store, t);
         return KernelReply {
             id,
             hit: true,
             source: ServeSource::Store,
-            schedule,
-            latency_s,
-            energy_j,
-            avg_power_w,
+            schedule: rec.best.schedule,
+            latency_s: rec.best.latency_s,
+            energy_j: rec.best.energy_j,
+            avg_power_w: rec.best.avg_power_w,
             enqueued: false,
             queue_depth,
             reply_time_s: t,
         };
     }
 
-    // Miss: best warm guess now, real search in the background.
+    // Miss: best warm guess now (the store's incremental neighbor
+    // index — candidate buckets, not a full scan), real search in the
+    // background.
     let spec = cfg.gpu.spec();
     let space = ScheduleSpace::new(workload, &spec);
     let guess = {
-        let neighbors = shared.store.neighbors(workload, cfg.gpu.name(), 1);
+        let neighbors = ctx.store.neighbors(workload, cfg.gpu.name(), 1);
         neighbors
             .first()
             .filter(|(_, dist)| *dist <= MAX_TRANSFER_DISTANCE)
@@ -612,14 +849,15 @@ fn serve_get_kernel(
     // Who searches this key? Local duplicates coalesce on `pending`;
     // fleet duplicates coalesce on the in-store claim. The claim is
     // several file ops plus a settle pause, so it runs OUTSIDE the
-    // shared lock — a burst of cold misses must not stall concurrent
-    // hit replies.
+    // state lock — a burst of cold misses must not stall concurrent
+    // reply bookkeeping.
+    let mut state = ctx.state.lock().expect("state lock");
     let mut reserve = false;
-    if !shared.pending.contains(&key) {
+    if !state.pending.contains(&key) {
         if ctx.search.fleet.coordinate {
-            drop(shared);
+            drop(state);
             let attempt = ctx.inflight.claim(&key);
-            shared = ctx.shared.lock().expect("shared lock");
+            state = ctx.state.lock().expect("state lock");
             match attempt {
                 Ok(Some(lease)) => {
                     // Concurrent requests for this key may both have
@@ -629,25 +867,25 @@ fn serve_get_kernel(
                     // lease the write-back fence must check — and
                     // map-insert order follows lock reacquisition
                     // order, not claim order, so compare explicitly.
-                    let raced = shared.pending.contains(&key);
-                    let newest = match shared.claims.get(&key) {
+                    let raced = state.pending.contains(&key);
+                    let newest = match state.claims.get(&key) {
                         Some(held) => lease.epoch() > held.epoch(),
                         None => true,
                     };
                     if newest {
-                        shared.claims.insert(key.clone(), lease);
+                        state.claims.insert(key.clone(), lease);
                     }
                     reserve = !raced;
                 }
                 Ok(None) => {
-                    if !shared.pending.contains(&key) {
+                    if !state.pending.contains(&key) {
                         // Another daemon is already searching this key:
                         // serve the warm guess, its write-back lands.
-                        shared.metrics.n_fleet_coalesced += 1;
+                        state.metrics.n_fleet_coalesced += 1;
                     }
                 }
                 Err(e) => {
-                    if !shared.pending.contains(&key) {
+                    if !state.pending.contains(&key) {
                         eprintln!(
                             "serve: in-flight claim failed for {key}: {e:#} (running unfenced)"
                         );
@@ -661,14 +899,14 @@ fn serve_get_kernel(
         }
     }
     if reserve {
-        shared.pending.insert(key.clone());
-        shared.metrics.n_enqueued += 1;
+        state.pending.insert(key.clone());
+        state.metrics.n_enqueued += 1;
     }
-    let snapshot = shared.snapshot.clone();
-    let queue_depth = shared.pending.len();
+    let snapshot = state.snapshot.clone();
+    let queue_depth = state.pending.len();
     let t = reply_time_s(false, shard_len);
-    shared.metrics.record_reply(false, t);
-    drop(shared);
+    state.metrics.record_reply(false, t);
+    drop(state);
 
     // The reply reports what actually happened: `enqueued` means the
     // search was admitted (worker queue or heat-ordered backlog). A
@@ -689,8 +927,8 @@ fn serve_get_kernel(
         if direct {
             enqueued = true;
         } else {
-            let mut shared = ctx.shared.lock().expect("shared lock");
-            let Shared { backlog, heat, pending, claims, metrics, .. } = &mut *shared;
+            let mut state = ctx.state.lock().expect("state lock");
+            let ServeState { backlog, heat, pending, claims, metrics, .. } = &mut *state;
             match backlog.offer(key.clone(), (job, snapshot), heat) {
                 Offer::Queued => {
                     enqueued = true;

@@ -38,7 +38,16 @@ pub struct ServeMetrics {
     pub n_shed: usize,
     /// Misses coalesced into another fleet member's in-flight search.
     pub n_fleet_coalesced: usize,
-    /// NVML measurements paid by completed background searches.
+    /// Finished searches whose write-back was rejected by the epoch
+    /// fence (another daemon reclaimed the key mid-search). NOT counted
+    /// in `n_searches_done` — this daemon's result went unused.
+    pub n_writebacks_fenced: usize,
+    /// Finished searches whose write-back was dropped for good (shard
+    /// lease never freed across every park retry, or an I/O error).
+    /// NOT counted in `n_searches_done`.
+    pub n_writebacks_dropped: usize,
+    /// NVML measurements paid by completed background searches whose
+    /// write-back landed.
     pub measurements_paid: usize,
     /// Ring buffer of the last [`REPLY_WINDOW`] reply times.
     reply_times_s: Vec<f64>,
@@ -86,8 +95,8 @@ impl ServeMetrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} hits={} misses={} hit_rate={:.2} enqueued={} searched={} \
-             shed={} fleet_coalesced={} evicted={} p50={:.2}ms p99={:.2}ms \
-             measurements_paid={}",
+             shed={} fleet_coalesced={} evicted={} wb_fenced={} wb_dropped={} \
+             p50={:.2}ms p99={:.2}ms measurements_paid={}",
             self.n_requests,
             self.n_hits,
             self.n_misses,
@@ -97,6 +106,8 @@ impl ServeMetrics {
             self.n_shed,
             self.n_fleet_coalesced,
             self.n_evicted_records,
+            self.n_writebacks_fenced,
+            self.n_writebacks_dropped,
             self.p50_reply_s() * 1e3,
             self.p99_reply_s() * 1e3,
             self.measurements_paid,
@@ -105,7 +116,10 @@ impl ServeMetrics {
 }
 
 /// Simulated reply time of one request against a shard holding
-/// `shard_len` records.
+/// `shard_len` records. The miss term models the warm-guess neighbor
+/// lookup — since the incremental [`crate::store::NeighborIndex`] it
+/// is a bounded candidate-bucket probe, not an O(store) scan, so the
+/// flat constant stays honest as the store grows.
 pub fn reply_time_s(hit: bool, shard_len: usize) -> f64 {
     let lookup = REPLY_LOOKUP_BASE_S + shard_len as f64 * REPLY_PER_RECORD_S;
     if hit {

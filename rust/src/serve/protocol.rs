@@ -292,6 +292,9 @@ pub struct StatsReply {
     pub n_enqueued: usize,
     pub n_searches_done: usize,
     pub n_evicted_records: usize,
+    /// Jobs in the worker pool (queued or running). Before protocol
+    /// frames gained `pending_keys`, this field conflated the pool
+    /// depth with backlogged and in-flight keys.
     pub queue_depth: usize,
     pub n_records: usize,
     pub n_shards: usize,
@@ -306,6 +309,16 @@ pub struct StatsReply {
     pub n_fleet_coalesced: usize,
     /// Keys currently heat-queued behind a saturated search queue.
     pub backlog_len: usize,
+    /// Serve keys with a search queued, backlogged, running, or
+    /// awaiting write-back on this daemon (the drain signal; absent in
+    /// pre-split frames = 0).
+    pub pending_keys: usize,
+    /// Finished searches fenced out by a reclaimed fleet claim (absent
+    /// in older frames = 0).
+    pub n_writebacks_fenced: usize,
+    /// Finished searches whose write-back was dropped for good (absent
+    /// in older frames = 0).
+    pub n_writebacks_dropped: usize,
     /// Records per shard (the store-size histogram).
     pub shard_records: Vec<usize>,
     /// Key counts per heat bucket (log2 buckets, coldest first — see
@@ -339,6 +352,9 @@ impl StatsReply {
                     ("n_shed", Json::num(self.n_shed as f64)),
                     ("n_fleet_coalesced", Json::num(self.n_fleet_coalesced as f64)),
                     ("backlog_len", Json::num(self.backlog_len as f64)),
+                    ("pending_keys", Json::num(self.pending_keys as f64)),
+                    ("n_writebacks_fenced", Json::num(self.n_writebacks_fenced as f64)),
+                    ("n_writebacks_dropped", Json::num(self.n_writebacks_dropped as f64)),
                     (
                         "shard_records",
                         Json::arr(self.shard_records.iter().map(|&n| Json::num(n as f64))),
@@ -375,6 +391,9 @@ impl StatsReply {
             n_shed: opt_usize(s, "n_shed"),
             n_fleet_coalesced: opt_usize(s, "n_fleet_coalesced"),
             backlog_len: opt_usize(s, "backlog_len"),
+            pending_keys: opt_usize(s, "pending_keys"),
+            n_writebacks_fenced: opt_usize(s, "n_writebacks_fenced"),
+            n_writebacks_dropped: opt_usize(s, "n_writebacks_dropped"),
             shard_records: opt_usize_arr(s, "shard_records"),
             heat_histogram: opt_usize_arr(s, "heat_histogram"),
         })
@@ -591,6 +610,9 @@ mod tests {
             n_shed: 4,
             n_fleet_coalesced: 2,
             backlog_len: 3,
+            pending_keys: 5,
+            n_writebacks_fenced: 1,
+            n_writebacks_dropped: 2,
             shard_records: vec![2, 0, 4, 3],
             heat_histogram: vec![1, 0, 2, 0, 0, 0, 0, 1],
         };
@@ -614,6 +636,9 @@ mod tests {
                 assert_eq!(back.n_requests, 1);
                 assert_eq!(back.n_shed, 0);
                 assert_eq!(back.backlog_len, 0);
+                assert_eq!(back.pending_keys, 0);
+                assert_eq!(back.n_writebacks_fenced, 0);
+                assert_eq!(back.n_writebacks_dropped, 0);
                 assert!(back.shard_records.is_empty());
                 assert!(back.heat_histogram.is_empty());
             }

@@ -17,17 +17,24 @@
 //!   its genetic population, GBDT dataset, and dynamic-k controller
 //!   from its nearest cached neighbors (log-shape similarity,
 //!   [`similarity`]), cutting on-device measurements from round 0.
+//! * **neighbor index** ([`neighbor_index`]) — an incremental
+//!   log-shape index maintained by the sharded store, so the serving
+//!   miss path's nearest-neighbor lookup (and transfer inside a
+//!   snapshot-driven search) visits candidate buckets, never the whole
+//!   store.
 //!
 //! Enabled via [`crate::config::StoreConfig`] (`--store DIR` on the
 //! CLI); the stateless path is untouched when no store is configured.
 
 pub mod lease;
+pub mod neighbor_index;
 pub mod record;
 pub mod sharded;
 pub mod similarity;
 pub mod transfer;
 
 pub use lease::{Lease, LeaseInfo};
+pub use neighbor_index::NeighborIndex;
 pub use record::{config_fingerprint, StoredKernel, TuningRecord, SCHEMA_VERSION};
 pub use sharded::{serve_key, AppendOutcome, EvictedKey, EvictionReport, ShardedStore};
 pub use similarity::gemm_distance;
@@ -75,7 +82,8 @@ pub fn append_record(dir: &Path, rec: &TuningRecord) -> anyhow::Result<()> {
 /// [`ShardedStore`]: the latest record per foreign workload id on
 /// `gpu` (with a non-empty measured pool), sorted by shape distance
 /// with a deterministic tie-break on workload id, truncated to `max_n`.
-/// "Latest" follows the iteration order of `records`.
+/// "Latest" follows the iteration order of `records`. This is the
+/// reference the [`NeighborIndex`] is parity-tested against.
 pub fn neighbors_among<'a, I>(
     records: I,
     workload: Workload,
@@ -85,22 +93,39 @@ pub fn neighbors_among<'a, I>(
 where
     I: IntoIterator<Item = &'a TuningRecord>,
 {
+    let records: Vec<&TuningRecord> = records.into_iter().collect();
+    neighbor_indices(&records, workload, gpu, max_n)
+        .into_iter()
+        .map(|(i, d)| (records[i], d))
+        .collect()
+}
+
+/// The selection core behind [`neighbors_among`] and the index-less
+/// [`TuningStore::neighbors`] path, on positions so either caller can
+/// map back to its own ownership (refs vs `Arc` clones) without
+/// duplicating the filter/sort/truncate rules.
+fn neighbor_indices(
+    records: &[&TuningRecord],
+    workload: Workload,
+    gpu: &str,
+    max_n: usize,
+) -> Vec<(usize, f64)> {
     let id = workload.id();
     let target = workload.gemm_view();
-    let mut latest: BTreeMap<&str, &TuningRecord> = BTreeMap::new();
-    for r in records {
+    let mut latest: BTreeMap<&str, usize> = BTreeMap::new();
+    for (i, r) in records.iter().enumerate() {
         if r.gpu == gpu && r.workload_id != id && !r.measured.is_empty() {
-            latest.insert(r.workload_id.as_str(), r);
+            latest.insert(r.workload_id.as_str(), i);
         }
     }
-    let mut out: Vec<(&TuningRecord, f64)> = latest
+    let mut out: Vec<(usize, f64)> = latest
         .into_values()
-        .map(|r| (r, gemm_distance(&target, &r.workload.gemm_view())))
+        .map(|i| (i, gemm_distance(&target, &records[i].workload.gemm_view())))
         .collect();
     out.sort_by(|a, b| {
         a.1.partial_cmp(&b.1)
             .unwrap_or(std::cmp::Ordering::Equal)
-            .then_with(|| a.0.workload_id.cmp(&b.0.workload_id))
+            .then_with(|| records[a.0].workload_id.cmp(&records[b.0].workload_id))
     });
     out.truncate(max_n);
     out
@@ -115,6 +140,11 @@ pub struct TuningStore {
     dir: PathBuf,
     path: PathBuf,
     records: Vec<Arc<TuningRecord>>,
+    /// Shape index frozen by the sharded store when it snapshots
+    /// itself, so warm-start transfer inside a background search pays
+    /// the same candidate-bucket lookup as the daemon's miss path.
+    /// `None` for flat CLI stores, which brute-force scan.
+    index: Option<Arc<NeighborIndex>>,
 }
 
 /// Aggregate store statistics (the `ecokernel cache stats` view).
@@ -155,7 +185,7 @@ impl TuningStore {
                 records.push(Arc::new(rec));
             }
         }
-        Ok(TuningStore { dir: dir.to_path_buf(), path, records })
+        Ok(TuningStore { dir: dir.to_path_buf(), path, records, index: None })
     }
 
     pub fn dir(&self) -> &Path {
@@ -179,6 +209,9 @@ impl TuningStore {
     pub fn append(&mut self, rec: TuningRecord) -> anyhow::Result<()> {
         append_jsonl(&self.path, &rec.to_json())?;
         self.records.push(Arc::new(rec));
+        // A frozen index no longer describes the records: drop back to
+        // the brute-force scan rather than serve stale neighbors.
+        self.index = None;
         Ok(())
     }
 
@@ -205,13 +238,23 @@ impl TuningStore {
     /// Nearest cached neighbors of `workload` on `gpu`: the latest
     /// record per foreign workload id, sorted by shape distance
     /// (deterministic tie-break on workload id), truncated to `max_n`.
+    /// Served from the attached [`NeighborIndex`] when one was frozen
+    /// in (sharded-store snapshots), by brute-force scan otherwise —
+    /// the two agree exactly (the index parity test pins it).
     pub fn neighbors(
         &self,
         workload: Workload,
         gpu: &str,
         max_n: usize,
-    ) -> Vec<(&TuningRecord, f64)> {
-        neighbors_among(self.records.iter().map(|r| r.as_ref()), workload, gpu, max_n)
+    ) -> Vec<(Arc<TuningRecord>, f64)> {
+        if let Some(index) = &self.index {
+            return index.neighbors(workload, gpu, max_n);
+        }
+        let refs: Vec<&TuningRecord> = self.records.iter().map(|r| r.as_ref()).collect();
+        neighbor_indices(&refs, workload, gpu, max_n)
+            .into_iter()
+            .map(|(i, d)| (self.records[i].clone(), d))
+            .collect()
     }
 
     /// Build an in-memory snapshot over externally-loaded records (the
@@ -219,7 +262,14 @@ impl TuningStore {
     /// snapshot reads like any other store; appending to it writes
     /// `dir/tuning_store.jsonl`.
     pub fn from_records(dir: &Path, records: Vec<Arc<TuningRecord>>) -> TuningStore {
-        TuningStore { dir: dir.to_path_buf(), path: dir.join(STORE_FILE), records }
+        TuningStore { dir: dir.to_path_buf(), path: dir.join(STORE_FILE), records, index: None }
+    }
+
+    /// Attach a frozen neighbor index describing `records` (see
+    /// [`ShardedStore::snapshot`]).
+    pub fn with_index(mut self, index: Arc<NeighborIndex>) -> TuningStore {
+        self.index = Some(index);
+        self
     }
 
     /// Compact the store: keep only the **latest** record per
@@ -254,6 +304,7 @@ impl TuningStore {
         std::fs::rename(&tmp, &self.path)
             .with_context(|| format!("replace store {:?}", self.path))?;
         self.records = kept;
+        self.index = None;
         Ok(removed)
     }
 

@@ -1,0 +1,431 @@
+//! An incremental nearest-neighbor index over the store's workload
+//! shapes — the structure that takes the miss path's warm-guess lookup
+//! from O(store) to O(candidate cells).
+//!
+//! [`super::neighbors_among`] is the reference semantics: the latest
+//! record per foreign workload id on the requested GPU (with a
+//! non-empty measured pool), ranked by [`super::similarity`]'s
+//! log-shape distance. Brute-forcing that scans every record on every
+//! miss; a serving daemon under zipf traffic pays it constantly. This
+//! index keeps the same answer reachable through two levels of
+//! narrowing, maintained incrementally on append, fleet refresh,
+//! eviction rewrite, rebalance, and legacy import:
+//!
+//! * **regime buckets** — per (GPU, im2col?, matrix-vector?) group,
+//!   mirroring the fixed structural penalties of
+//!   [`super::similarity::gemm_distance`]: a bucket whose regime
+//!   mismatch penalty alone exceeds the current worst kept candidate
+//!   is never opened;
+//! * **log-dim cells** — within a bucket, workload ids grouped by their
+//!   [`GemmView`] quantized to [`CELL_LN`]-wide cells in ln-space (one
+//!   doubling per axis per cell). Each occupied cell carries a provable
+//!   lower bound on the distance of anything inside it, so a query
+//!   visits cells in bound order and stops as soon as no remaining cell
+//!   can improve the running top-`max_n`.
+//!
+//! Queries are therefore **exactly** equal to the brute force (the
+//! sharded-store parity test pins this), while visiting only the
+//! occupied cells near the target — not every record.
+//!
+//! "Latest per workload id" follows the store's shard-major record
+//! order: the index keeps one slot per (shard → latest measured record
+//! in that shard) and serves the highest shard's slot, which is the
+//! record a shard-major scan would have kept last. Shard-local
+//! maintenance (a refresh or eviction rewrite of one shard) therefore
+//! touches only that shard's slots.
+
+use super::record::TuningRecord;
+use super::similarity::{gemm_distance, IM2COL_PENALTY, MV_REGIME_PENALTY};
+use crate::workload::{GemmView, Workload};
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::Arc;
+
+/// Cell width in ln-space: one doubling per axis per cell.
+pub const CELL_LN: f64 = std::f64::consts::LN_2;
+
+/// Slack subtracted from every cell's distance lower bound so that
+/// floating-point drift between the bound arithmetic and
+/// [`gemm_distance`] can never prune a cell holding a true candidate.
+const BOUND_SLACK: f64 = 1e-9;
+
+/// Identity of one indexed entry: neighbor selection is per
+/// (GPU, workload id).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct EntryKey {
+    gpu: String,
+    workload_id: String,
+}
+
+/// A quantized log-shape cell (floor of each ln-dimension / CELL_LN).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Cell {
+    b: i64,
+    m: i64,
+    n: i64,
+    k: i64,
+}
+
+fn ln_coords(view: &GemmView) -> [f64; 4] {
+    let ln = |x: usize| (x.max(1) as f64).ln();
+    [ln(view.batch), ln(view.m), ln(view.n), ln(view.k)]
+}
+
+impl Cell {
+    fn of(view: &GemmView) -> Cell {
+        let [b, m, n, k] = ln_coords(view).map(|x| (x / CELL_LN).floor() as i64);
+        Cell { b, m, n, k }
+    }
+
+    /// Lower bound on the log-space distance from the target's
+    /// ln-coordinates `t` to any shape quantizing into this cell
+    /// (distance from `t` to the cell's axis-aligned box).
+    fn min_distance(&self, t: &[f64; 4]) -> f64 {
+        let mut sum = 0.0;
+        for (c, ti) in [self.b, self.m, self.n, self.k].iter().zip(t) {
+            let lo = *c as f64 * CELL_LN;
+            let hi = lo + CELL_LN;
+            let d = if *ti < lo {
+                lo - *ti
+            } else if *ti > hi {
+                *ti - hi
+            } else {
+                0.0
+            };
+            sum += d * d;
+        }
+        sum.sqrt()
+    }
+}
+
+/// A regime bucket: workloads whose structural penalties against any
+/// target are identical.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct BucketKey {
+    gpu: String,
+    im2col: bool,
+    mv: bool,
+}
+
+fn bucket_of(gpu: &str, view: &GemmView) -> BucketKey {
+    BucketKey { gpu: gpu.to_string(), im2col: view.im2col, mv: view.m == 1 }
+}
+
+/// Per-shard slots of one entry: shard index → that shard's latest
+/// record with a measured pool. The entry served is the highest
+/// shard's slot (shard-major "latest").
+type ShardSlots = BTreeMap<usize, Arc<TuningRecord>>;
+
+/// Workload ids present per occupied cell of one bucket.
+type CellIds = HashMap<Cell, HashSet<String>>;
+
+/// The incremental neighbor index. Cloning is O(distinct workload
+/// ids), not O(records) — snapshots handed to background searches
+/// freeze a copy cheaply.
+#[derive(Debug, Clone, Default)]
+pub struct NeighborIndex {
+    entries: HashMap<EntryKey, ShardSlots>,
+    buckets: HashMap<BucketKey, CellIds>,
+    /// Entry keys holding a slot from each shard (rebuild bookkeeping).
+    by_shard: Vec<HashSet<EntryKey>>,
+}
+
+impl NeighborIndex {
+    /// Index one appended record. Records without a measured pool are
+    /// invisible to neighbor selection and are skipped — exactly as the
+    /// brute force skips them (they never shadow an earlier measured
+    /// record either).
+    pub fn insert(&mut self, shard: usize, rec: &Arc<TuningRecord>) {
+        if rec.measured.is_empty() {
+            return;
+        }
+        if self.by_shard.len() <= shard {
+            self.by_shard.resize_with(shard + 1, HashSet::new);
+        }
+        let view = rec.workload.gemm_view();
+        self.buckets
+            .entry(bucket_of(&rec.gpu, &view))
+            .or_default()
+            .entry(Cell::of(&view))
+            .or_default()
+            .insert(rec.workload_id.clone());
+        let key = EntryKey { gpu: rec.gpu.clone(), workload_id: rec.workload_id.clone() };
+        self.by_shard[shard].insert(key.clone());
+        self.entries.entry(key).or_default().insert(shard, rec.clone());
+    }
+
+    /// Drop every slot contributed by `shard` (the shard is about to be
+    /// reloaded or rewritten).
+    pub fn remove_shard(&mut self, shard: usize) {
+        if shard >= self.by_shard.len() {
+            return;
+        }
+        for key in std::mem::take(&mut self.by_shard[shard]) {
+            let Some(slots) = self.entries.get_mut(&key) else { continue };
+            let removed = slots.remove(&shard);
+            if !slots.is_empty() {
+                continue;
+            }
+            self.entries.remove(&key);
+            // Last slot gone: the workload id leaves its cell too.
+            let Some(rec) = removed else { continue };
+            let view = rec.workload.gemm_view();
+            let bucket = bucket_of(&rec.gpu, &view);
+            if let Some(cells) = self.buckets.get_mut(&bucket) {
+                let cell = Cell::of(&view);
+                if let Some(ids) = cells.get_mut(&cell) {
+                    ids.remove(&key.workload_id);
+                    if ids.is_empty() {
+                        cells.remove(&cell);
+                    }
+                }
+                if cells.is_empty() {
+                    self.buckets.remove(&bucket);
+                }
+            }
+        }
+    }
+
+    /// Re-index one shard from its current records (eviction rewrite,
+    /// generation-bump reload, rebalance).
+    pub fn rebuild_shard(&mut self, shard: usize, records: &[Arc<TuningRecord>]) {
+        self.remove_shard(shard);
+        for rec in records {
+            self.insert(shard, rec);
+        }
+    }
+
+    /// Distinct (GPU, workload id) entries currently indexed.
+    pub fn n_entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Nearest cached neighbors of `workload` on `gpu` — identical to
+    /// [`super::neighbors_among`] over the indexed records in
+    /// shard-major order, but visiting only candidate cells.
+    pub fn neighbors(
+        &self,
+        workload: Workload,
+        gpu: &str,
+        max_n: usize,
+    ) -> Vec<(Arc<TuningRecord>, f64)> {
+        if max_n == 0 {
+            return Vec::new();
+        }
+        let id = workload.id();
+        let target = workload.gemm_view();
+        let t = ln_coords(&target);
+
+        // Every occupied cell of this GPU's four regime buckets, with a
+        // provable lower bound on the distance of anything inside.
+        let mut cells: Vec<(f64, &HashSet<String>)> = Vec::new();
+        for im2col in [false, true] {
+            for mv in [false, true] {
+                let bucket = BucketKey { gpu: gpu.to_string(), im2col, mv };
+                let Some(cell_ids) = self.buckets.get(&bucket) else { continue };
+                let mut penalty = 0.0;
+                if im2col != target.im2col {
+                    penalty += IM2COL_PENALTY;
+                }
+                if mv != (target.m == 1) {
+                    penalty += MV_REGIME_PENALTY;
+                }
+                for (cell, ids) in cell_ids {
+                    cells.push((penalty + cell.min_distance(&t) - BOUND_SLACK, ids));
+                }
+            }
+        }
+        cells.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+
+        // Scan cells in bound order. Once max_n candidates are held, a
+        // cell whose bound exceeds the worst kept distance — and hence
+        // every later cell — can contain no candidate that would make
+        // the cut (the bound slack keeps exact ties scannable).
+        let mut out: Vec<(Arc<TuningRecord>, f64)> = Vec::new();
+        for (bound, ids) in cells {
+            if out.len() >= max_n {
+                let worst = out.last().map(|(_, d)| *d).unwrap_or(f64::INFINITY);
+                if bound > worst {
+                    break;
+                }
+            }
+            for wid in ids {
+                if *wid == id {
+                    continue;
+                }
+                let key = EntryKey { gpu: gpu.to_string(), workload_id: wid.clone() };
+                let Some(slots) = self.entries.get(&key) else { continue };
+                let Some((_, rec)) = slots.iter().next_back() else { continue };
+                let d = gemm_distance(&target, &rec.workload.gemm_view());
+                out.push((rec.clone(), d));
+            }
+            out.sort_by(|a, b| {
+                a.1.partial_cmp(&b.1)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| a.0.workload_id.cmp(&b.0.workload_id))
+            });
+            out.truncate(max_n);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+    use crate::store::neighbors_among;
+    use crate::util::Rng;
+    use crate::workload::suites;
+
+    /// A cheap handmade record (no search): enough structure for
+    /// neighbor selection.
+    fn rec(w: Workload, gpu: GpuArch, seed: u64, measured: bool) -> Arc<TuningRecord> {
+        let mut r = TuningRecord::synthetic(w, gpu, seed);
+        if !measured {
+            r.measured.clear();
+        }
+        Arc::new(r)
+    }
+
+    /// Identity capturing WHICH record was selected for a workload id.
+    fn picks<'a, I>(results: I) -> Vec<(String, u64, f64)>
+    where
+        I: IntoIterator<Item = (&'a TuningRecord, f64)>,
+    {
+        results.into_iter().map(|(r, d)| (r.workload_id.clone(), r.seed, d)).collect()
+    }
+
+    fn assert_parity(
+        index: &NeighborIndex,
+        shards: &[Vec<Arc<TuningRecord>>],
+        targets: &[Workload],
+        tag: &str,
+    ) {
+        for &target in targets {
+            for gpu in ["a100", "v100"] {
+                for max_n in [1, 3, 8] {
+                    let indexed = index.neighbors(target, gpu, max_n);
+                    let fast = picks(indexed.iter().map(|(r, d)| (r.as_ref(), *d)));
+                    let brute = picks(neighbors_among(
+                        shards.iter().flatten().map(|r| r.as_ref()),
+                        target,
+                        gpu,
+                        max_n,
+                    ));
+                    assert_eq!(fast, brute, "{tag}: target={target} gpu={gpu} max_n={max_n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn randomized_parity_with_brute_force() {
+        let mut rng = Rng::seed_from_u64(41);
+        let n_shards = 5;
+        let mut shards: Vec<Vec<Arc<TuningRecord>>> = vec![Vec::new(); n_shards];
+        let mut index = NeighborIndex::default();
+
+        fn dim(rng: &mut Rng, hi: usize) -> usize {
+            1usize << rng.gen_range(0, hi)
+        }
+        let mut workloads: Vec<Workload> = vec![suites::CONV1, suites::CONV2, suites::CONV3];
+        for _ in 0..24 {
+            let mv = rng.gen_f64() < 0.3;
+            workloads.push(if mv {
+                Workload::MatVec {
+                    batch: dim(&mut rng, 6),
+                    n: dim(&mut rng, 12),
+                    k: dim(&mut rng, 12),
+                }
+            } else {
+                Workload::MatMul {
+                    batch: dim(&mut rng, 4),
+                    m: dim(&mut rng, 12),
+                    n: dim(&mut rng, 12),
+                    k: dim(&mut rng, 12),
+                }
+            });
+        }
+        for (i, &w) in workloads.iter().enumerate() {
+            let gpu = if i % 3 == 0 { GpuArch::V100 } else { GpuArch::A100 };
+            // Every 5th record has no measured pool: invisible to
+            // neighbor selection, and it must not shadow anything.
+            let r = rec(w, gpu, i as u64, i % 5 != 0);
+            let shard = (i * 7 + 3) % n_shards;
+            shards[shard].push(r.clone());
+            index.insert(shard, &r);
+        }
+        let targets =
+            [suites::MM1, suites::MV3, suites::CONV2, workloads[3], workloads[10], workloads[20]];
+        assert_parity(&index, &shards, &targets, "after inserts");
+
+        // Duplicate workload ids across shards: the highest shard's
+        // latest measured record must win, exactly as a shard-major
+        // scan would pick it.
+        let dup = rec(workloads[4], GpuArch::A100, 900, true);
+        shards[1].push(dup.clone());
+        index.insert(1, &dup);
+        let dup2 = rec(workloads[4], GpuArch::A100, 901, true);
+        shards[4].push(dup2.clone());
+        index.insert(4, &dup2);
+        assert_parity(&index, &shards, &targets, "after cross-shard duplicates");
+
+        // Shard rewrite (eviction): drop half of shard 4's records and
+        // rebuild its slots.
+        let mut keep = Vec::new();
+        for (i, r) in shards[4].iter().enumerate() {
+            if i % 2 == 0 {
+                keep.push(r.clone());
+            }
+        }
+        shards[4] = keep;
+        index.rebuild_shard(4, &shards[4]);
+        assert_parity(&index, &shards, &targets, "after shard rewrite");
+
+        // Shard reload to empty (foreign truncation).
+        shards[2].clear();
+        index.rebuild_shard(2, &shards[2]);
+        assert_parity(&index, &shards, &targets, "after shard truncation");
+    }
+
+    #[test]
+    fn unmeasured_records_are_invisible_but_do_not_shadow() {
+        let mut index = NeighborIndex::default();
+        let measured = rec(suites::MM1, GpuArch::A100, 1, true);
+        let bare = rec(suites::MM1, GpuArch::A100, 2, false);
+        index.insert(0, &measured);
+        index.insert(0, &bare); // later, but unmeasured: ignored
+        let n = index.neighbors(suites::MM2, "a100", 4);
+        assert_eq!(n.len(), 1);
+        assert_eq!(n[0].0.seed, 1, "the measured record still serves");
+        assert_eq!(index.n_entries(), 1);
+    }
+
+    #[test]
+    fn query_excludes_self_and_respects_gpu() {
+        let mut index = NeighborIndex::default();
+        index.insert(0, &rec(suites::MM1, GpuArch::A100, 1, true));
+        index.insert(0, &rec(suites::MM2, GpuArch::V100, 2, true));
+        assert!(index.neighbors(suites::MM1, "a100", 4).is_empty(), "self excluded");
+        assert!(index.neighbors(suites::MM1, "h100", 4).is_empty(), "unknown gpu empty");
+        let n = index.neighbors(suites::MM1, "v100", 4);
+        assert_eq!(n.len(), 1);
+        assert_eq!(n[0].0.workload_id, suites::MM2.id());
+    }
+
+    #[test]
+    fn cell_bound_never_exceeds_true_distance() {
+        let mut rng = Rng::seed_from_u64(17);
+        for _ in 0..500 {
+            let mut dim = || 1 + (rng.gen_f64() * 4000.0) as usize;
+            let a = GemmView { batch: dim(), m: dim(), n: dim(), k: dim(), im2col: false };
+            let b = GemmView { batch: dim(), m: dim(), n: dim(), k: dim(), im2col: false };
+            let bound = Cell::of(&b).min_distance(&ln_coords(&a)) - BOUND_SLACK;
+            let true_d = gemm_distance(&a, &b);
+            assert!(
+                bound <= true_d,
+                "cell bound {bound} exceeds true distance {true_d} for {a:?} vs {b:?}"
+            );
+        }
+    }
+}

@@ -130,6 +130,44 @@ impl TuningRecord {
         }
     }
 
+    /// Minimal synthetic record: the workload's legal fallback schedule
+    /// with one measured sample and fixed metrics — enough structure
+    /// for routing, persistence roundtrips, and neighbor selection
+    /// without running a search. Test/bench support (all fields are
+    /// public; callers overwrite what they need, e.g. the fingerprint
+    /// to match a real config); hidden from docs — not a product
+    /// constructor.
+    #[doc(hidden)]
+    pub fn synthetic(
+        workload: Workload,
+        gpu: crate::config::GpuArch,
+        seed: u64,
+    ) -> TuningRecord {
+        let spec = gpu.spec();
+        let k = StoredKernel {
+            schedule: crate::schedule::space::ScheduleSpace::new(workload, &spec).fallback(),
+            latency_s: 1e-3,
+            energy_j: 0.5,
+            avg_power_w: 100.0,
+        };
+        TuningRecord {
+            workload_id: workload.id(),
+            workload,
+            gpu: gpu.name().to_string(),
+            mode: "energy_aware".to_string(),
+            seed,
+            fingerprint: format!("fp{seed}"),
+            best: k,
+            measured: vec![k],
+            n_energy_measurements: 1,
+            n_latency_evals: 1,
+            sim_time_s: 0.1,
+            rounds: 1,
+            final_k: None,
+            model: None,
+        }
+    }
+
     /// Reconstruct a zero-cost [`SearchOutcome`] from this record — the
     /// exact-hit short-circuit: the cached kernel with a fresh (all
     /// zeros) measurement clock.

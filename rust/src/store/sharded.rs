@@ -1,6 +1,7 @@
 //! The fleet-scale store layout behind the serving daemon: the tuning
 //! store sharded across N append-only JSONL files, with eviction,
-//! shared-ownership leases, and incremental refresh.
+//! shared-ownership leases, incremental refresh, and an incremental
+//! neighbor index.
 //!
 //! A single `tuning_store.jsonl` is fine for one experimenter; a daemon
 //! serving fleet traffic accumulates orders of magnitude more keys and
@@ -30,6 +31,24 @@
 //!   (`tuning_store.jsonl.imported`) so evicted records cannot
 //!   resurrect from it.
 //!
+//! # In-process locking
+//!
+//! The store is internally synchronized and every operation takes
+//! `&self` — a daemon shares one `ShardedStore` across all of its
+//! connection handlers with **no outer lock**:
+//!
+//! * each shard's records sit behind their own `RwLock`, so an exact
+//!   hit against shard A never waits behind another connection's miss
+//!   refreshing shard B, and an append or eviction rewrite takes only
+//!   its shard's lock;
+//! * the served-LRU sidecar state has its own small mutex;
+//! * the [`NeighborIndex`] has its own `RwLock`, maintained in lockstep
+//!   with shard changes (append, refresh, reload, eviction rewrite,
+//!   rebalance, import) and read without touching any shard.
+//!
+//! Lock order is `shard → index` (and the served mutex is never held
+//! while taking either), so the store cannot deadlock against itself.
+//!
 //! Records are held as `Arc<TuningRecord>`: a worker snapshot
 //! ([`ShardedStore::snapshot`]) is a vector of pointer clones, not an
 //! O(N) deep copy, so rebuilding it after every write-back no longer
@@ -39,14 +58,15 @@
 //! ([`crate::config::ServeConfig`], [`crate::config::FleetConfig`]).
 
 use super::lease::Lease;
-use super::{neighbors_among, StoreStats, TuningRecord, TuningStore, STORE_FILE};
+use super::neighbor_index::NeighborIndex;
+use super::{StoreStats, TuningRecord, TuningStore, STORE_FILE};
 use crate::config::SearchConfig;
 use crate::util::Json;
 use crate::workload::Workload;
 use anyhow::{anyhow, Context as _};
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock, RwLockWriteGuard};
 
 /// Subdirectory of the store dir holding the shard files.
 pub const SHARDS_DIR: &str = "shards";
@@ -154,23 +174,44 @@ struct ShardLoad {
     torn: bool,
 }
 
-/// A sharded tuning store rooted at a store directory.
+/// One shard's in-memory state, behind its own lock.
+#[derive(Debug)]
+struct ShardState {
+    records: Vec<Arc<TuningRecord>>,
+    /// Bytes of the shard file already ingested into memory.
+    offset: u64,
+    /// Last observed rewrite generation (fleet mode).
+    gen: u64,
+}
+
+/// The served-LRU sidecar state, behind its own small mutex.
+#[derive(Debug, Default)]
+struct ServedState {
+    /// Serve key -> last-served logical tick (0 = never served).
+    served: HashMap<String, u64>,
+    tick: u64,
+    /// Lines appended to `served.jsonl` since the last compaction.
+    appends: usize,
+}
+
+/// An exclusive in-process hold on one shard's lock — test
+/// instrumentation (see [`ShardedStore::hold_shard`]).
+pub struct ShardHold<'a> {
+    _guard: RwLockWriteGuard<'a, ShardState>,
+}
+
+/// A sharded tuning store rooted at a store directory. Internally
+/// synchronized (see the module docs); all operations take `&self`.
 #[derive(Debug)]
 pub struct ShardedStore {
     dir: PathBuf,
     shards_dir: PathBuf,
     leases_dir: PathBuf,
     n_shards: usize,
-    shards: Vec<Vec<Arc<TuningRecord>>>,
-    /// Bytes of each shard file already ingested into memory.
-    offsets: Vec<u64>,
-    /// Last observed per-shard rewrite generation (fleet mode).
-    gens: Vec<u64>,
-    /// Serve key -> last-served logical tick (0 = never served).
-    served: HashMap<String, u64>,
-    tick: u64,
-    /// Lines appended to `served.jsonl` since the last compaction.
-    served_appends: usize,
+    shards: Vec<RwLock<ShardState>>,
+    /// Incremental log-shape neighbor index over the shard records.
+    index: RwLock<NeighborIndex>,
+    served: Mutex<ServedState>,
     /// `Some` when this store is one member of a multi-daemon fleet.
     fleet: Option<FleetIdentity>,
 }
@@ -217,22 +258,24 @@ impl ShardedStore {
         let meta_path = shards_dir.join(META_FILE);
         let disk_shards = if meta_path.exists() { read_meta(&meta_path)? } else { n_shards };
 
-        let mut store = ShardedStore {
+        let gens: Vec<u64> = if fleet.is_some() {
+            (0..n_shards).map(|i| read_gen_at(&leases_dir, i)).collect()
+        } else {
+            vec![0; n_shards]
+        };
+        let store = ShardedStore {
             dir: dir.to_path_buf(),
             shards_dir,
             leases_dir,
             n_shards,
-            shards: vec![Vec::new(); n_shards],
-            offsets: vec![0; n_shards],
-            gens: vec![0; n_shards],
-            served: HashMap::new(),
-            tick: 0,
-            served_appends: 0,
+            shards: gens
+                .iter()
+                .map(|&gen| RwLock::new(ShardState { records: Vec::new(), offset: 0, gen }))
+                .collect(),
+            index: RwLock::new(NeighborIndex::default()),
+            served: Mutex::new(ServedState::default()),
             fleet,
         };
-        if store.fleet.is_some() {
-            store.gens = (0..n_shards).map(|i| read_gen_at(&store.leases_dir, i)).collect();
-        }
 
         let mut torn: Vec<usize> = Vec::new();
         let mut disk_loads: Vec<ShardLoad> = Vec::new();
@@ -272,21 +315,24 @@ impl ShardedStore {
                 );
             }
             // Route every record under the new layout, then rewrite.
+            let mut routed: Vec<Vec<Arc<TuningRecord>>> = vec![Vec::new(); n_shards];
             for load in &disk_loads {
                 for rec in &load.records {
-                    let s = store.shard_of(&record_key(rec.as_ref()));
-                    store.shards[s].push(rec.clone());
+                    routed[store.shard_of(&record_key(rec.as_ref()))].push(rec.clone());
                 }
             }
             if import_legacy {
                 let legacy = TuningStore::open(dir)?;
                 for rec in legacy.records() {
-                    let s = store.shard_of(&record_key(rec.as_ref()));
-                    store.shards[s].push(rec.clone());
+                    routed[store.shard_of(&record_key(rec.as_ref()))].push(rec.clone());
                 }
             }
             let res = (|| -> anyhow::Result<()> {
-                store.rewrite_all_shards()?;
+                for (i, records) in routed.into_iter().enumerate() {
+                    let mut state = store.shards[i].write().expect("shard lock");
+                    state.records = records;
+                    store.rewrite_shard_locked(i, &mut state)?;
+                }
                 for i in n_shards..disk_shards {
                     let _ = std::fs::remove_file(store.shards_dir.join(shard_file(i)));
                 }
@@ -308,8 +354,9 @@ impl ShardedStore {
             // any torn shard tail before a future append would
             // concatenate onto the partial line.
             for (i, load) in disk_loads.into_iter().enumerate() {
-                store.shards[i] = load.records;
-                store.offsets[i] = load.consumed;
+                let mut state = store.shards[i].write().expect("shard lock");
+                state.records = load.records;
+                state.offset = load.consumed;
             }
             for i in torn {
                 let guard = store.acquire_guard(&shard_lease_name(i), 4)?;
@@ -319,7 +366,10 @@ impl ShardedStore {
                          lease; retry the open once it finishes"
                     );
                 }
-                let res = store.rewrite_shard(i);
+                let res = {
+                    let mut state = store.shards[i].write().expect("shard lock");
+                    store.rewrite_shard_locked(i, &mut state)
+                };
                 guard.release();
                 res?;
             }
@@ -328,6 +378,7 @@ impl ShardedStore {
             }
         }
 
+        store.rebuild_index();
         store.replay_served(true)?;
         Ok(store)
     }
@@ -341,24 +392,25 @@ impl ShardedStore {
         let meta_path = shards_dir.join(META_FILE);
         anyhow::ensure!(meta_path.exists(), "no sharded store at {dir:?}");
         let n_shards = read_meta(&meta_path)?;
-        let mut store = ShardedStore {
+        let store = ShardedStore {
             dir: dir.to_path_buf(),
             shards_dir,
             leases_dir: dir.join(LEASES_DIR),
             n_shards,
-            shards: vec![Vec::new(); n_shards],
-            offsets: vec![0; n_shards],
-            gens: vec![0; n_shards],
-            served: HashMap::new(),
-            tick: 0,
-            served_appends: 0,
+            shards: (0..n_shards)
+                .map(|_| RwLock::new(ShardState { records: Vec::new(), offset: 0, gen: 0 }))
+                .collect(),
+            index: RwLock::new(NeighborIndex::default()),
+            served: Mutex::new(ServedState::default()),
             fleet: None,
         };
-        for i in 0..n_shards {
+        for (i, shard) in store.shards.iter().enumerate() {
             let load = load_shard_file(&store.shards_dir.join(shard_file(i)))?;
-            store.shards[i] = load.records;
-            store.offsets[i] = load.consumed;
+            let mut state = shard.write().expect("shard lock");
+            state.records = load.records;
+            state.offset = load.consumed;
         }
+        store.rebuild_index();
         store.replay_served(false)?;
         Ok(store)
     }
@@ -373,21 +425,28 @@ impl ShardedStore {
 
     /// Total records across all shards.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.len()).sum()
+        self.shards.iter().map(|s| s.read().expect("shard lock").records.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.shards.iter().all(|s| s.is_empty())
+        self.shards.iter().all(|s| s.read().expect("shard lock").records.is_empty())
     }
 
-    /// All records, shard-major (shard 0 first, append order within).
-    pub fn iter(&self) -> impl Iterator<Item = &TuningRecord> {
-        self.shards.iter().flatten().map(|r| r.as_ref())
+    /// All records, shard-major (shard 0 first, append order within),
+    /// as pointer clones. Shards are locked one at a time, so the view
+    /// may straddle a concurrent append — fine for stats, snapshots,
+    /// and the CLI; exact-hit reads use [`ShardedStore::get`].
+    pub fn records(&self) -> Vec<Arc<TuningRecord>> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            out.extend(shard.read().expect("shard lock").records.iter().cloned());
+        }
+        out
     }
 
     /// Records per shard (the `query --stats` size histogram).
     pub fn shard_sizes(&self) -> Vec<usize> {
-        self.shards.iter().map(|s| s.len()).collect()
+        self.shards.iter().map(|s| s.read().expect("shard lock").records.len()).collect()
     }
 
     /// Shard index a serve key routes to.
@@ -398,16 +457,27 @@ impl ShardedStore {
     /// Records currently in the shard a key routes to (the scan length
     /// a lookup pays — the serving daemon's simulated reply-time term).
     pub fn shard_len_for(&self, key: &str) -> usize {
-        self.shards[self.shard_of(key)].len()
+        self.shards[self.shard_of(key)].read().expect("shard lock").records.len()
+    }
+
+    /// Take one shard's in-process write lock and hold it until the
+    /// returned guard drops. Test instrumentation: concurrency tests
+    /// pin that a stalled operation on one shard (e.g. a refresh mid
+    /// disk read) never blocks requests against the others.
+    pub fn hold_shard(&self, shard: usize) -> ShardHold<'_> {
+        ShardHold { _guard: self.shards[shard].write().expect("shard lock") }
     }
 
     /// The latest record exactly matching `(workload, gpu, mode)` and
-    /// the config fingerprint — only the key's shard is scanned.
-    pub fn get(&self, workload: Workload, cfg: &SearchConfig) -> Option<&TuningRecord> {
+    /// the config fingerprint — only the key's shard is locked and
+    /// scanned.
+    pub fn get(&self, workload: Workload, cfg: &SearchConfig) -> Option<Arc<TuningRecord>> {
         let id = workload.id();
         let fp = super::config_fingerprint(cfg);
         let key = serve_key(&id, cfg.gpu.name(), cfg.mode.name(), &fp);
-        self.shards[self.shard_of(&key)]
+        let state = self.shards[self.shard_of(&key)].read().expect("shard lock");
+        state
+            .records
             .iter()
             .rev()
             .find(|r| {
@@ -416,31 +486,34 @@ impl ShardedStore {
                     && r.mode == cfg.mode.name()
                     && r.fingerprint == fp
             })
-            .map(|r| r.as_ref())
+            .cloned()
     }
 
-    /// Nearest cached neighbors (see [`neighbors_among`]); scans every
-    /// shard in index order.
+    /// Nearest cached neighbors, served from the incremental
+    /// [`NeighborIndex`] — candidate buckets only, never a full-store
+    /// scan, and no shard lock is touched. Exactly equal to
+    /// [`super::neighbors_among`] over [`ShardedStore::records`] (the
+    /// parity test pins it).
     pub fn neighbors(
         &self,
         workload: Workload,
         gpu: &str,
         max_n: usize,
-    ) -> Vec<(&TuningRecord, f64)> {
-        neighbors_among(self.iter(), workload, gpu, max_n)
+    ) -> Vec<(Arc<TuningRecord>, f64)> {
+        self.index.read().expect("index lock").neighbors(workload, gpu, max_n)
     }
 
     /// Append a record to its shard (memory + one O_APPEND line) and
     /// mark its key hot (a fresh record must not be the next eviction
     /// victim). In fleet mode the append holds the shard's lease so it
     /// cannot be lost under a concurrent eviction rewrite.
-    pub fn append(&mut self, rec: TuningRecord) -> anyhow::Result<()> {
+    pub fn append(&self, rec: TuningRecord) -> anyhow::Result<()> {
         // Blocking variant for callers that hold no locks of their own:
         // wait out transient lease contention (~0.5s) before giving up
         // — the record is a finished multi-second search, and losing it
-        // re-pays the whole search on the next miss. Lock-holding
-        // callers (the daemon's writer thread) use [`Self::try_append`]
-        // and sleep between their own lock acquisitions instead.
+        // re-pays the whole search on the next miss. The daemon's
+        // writer thread uses [`Self::try_append`] and parks the record
+        // for a later retry instead of sleeping here.
         for attempt in 0..16 {
             if attempt > 0 {
                 std::thread::sleep(std::time::Duration::from_millis(30));
@@ -454,14 +527,17 @@ impl ShardedStore {
 
     /// Non-blocking append: one short lease attempt, then
     /// [`AppendOutcome::LeaseBusy`] instead of sleeping.
-    pub fn try_append(&mut self, rec: TuningRecord) -> anyhow::Result<AppendOutcome> {
+    pub fn try_append(&self, rec: TuningRecord) -> anyhow::Result<AppendOutcome> {
         let key = record_key(&rec);
         let shard = self.shard_of(&key);
         let guard = self.acquire_guard(&shard_lease_name(shard), 2)?;
         if !guard.available() {
             return Ok(AppendOutcome::LeaseBusy);
         }
-        let res = self.append_locked(shard, rec);
+        let res = {
+            let mut state = self.shards[shard].write().expect("shard lock");
+            self.append_locked(shard, &mut state, rec)
+        };
         guard.release();
         res?;
         self.touch(&key)?;
@@ -472,7 +548,7 @@ impl ShardedStore {
     /// daemon whose in-flight claim on this key may have been reclaimed
     /// (its lease expired mid-search).
     pub fn try_append_claimed(
-        &mut self,
+        &self,
         rec: TuningRecord,
         claim: &Lease,
     ) -> anyhow::Result<AppendOutcome> {
@@ -484,7 +560,7 @@ impl ShardedStore {
 
     /// Epoch-fenced blocking append. Returns `Ok(false)` — record
     /// **not** written — when `claim` is stale.
-    pub fn append_claimed(&mut self, rec: TuningRecord, claim: &Lease) -> anyhow::Result<bool> {
+    pub fn append_claimed(&self, rec: TuningRecord, claim: &Lease) -> anyhow::Result<bool> {
         if !claim.is_current()? {
             return Ok(false);
         }
@@ -492,16 +568,24 @@ impl ShardedStore {
         Ok(true)
     }
 
-    fn append_locked(&mut self, shard: usize, rec: TuningRecord) -> anyhow::Result<()> {
+    fn append_locked(
+        &self,
+        shard: usize,
+        state: &mut ShardState,
+        rec: TuningRecord,
+    ) -> anyhow::Result<()> {
         let written =
             super::append_jsonl(&self.shards_dir.join(shard_file(shard)), &rec.to_json())?;
         if self.fleet.is_some() {
             // Consume the file tail (our line plus any the fleet
-            // interleaved) so memory tracks the file exactly.
-            self.refresh_shard(shard)?;
+            // interleaved) so memory tracks the file exactly; the
+            // refresh indexes every ingested record.
+            self.refresh_shard_locked(shard, state)?;
         } else {
-            self.shards[shard].push(Arc::new(rec));
-            self.offsets[shard] += written as u64;
+            let rec = Arc::new(rec);
+            self.index.write().expect("index lock").insert(shard, &rec);
+            state.records.push(rec);
+            state.offset += written as u64;
         }
         Ok(())
     }
@@ -510,29 +594,32 @@ impl ShardedStore {
     /// look: appended tails are read incrementally, rewritten shards
     /// (generation bump or truncation) are reloaded whole. Returns the
     /// number of records touched (0 = nothing changed). No-op for a
-    /// single-owner store.
-    pub fn refresh(&mut self) -> anyhow::Result<usize> {
+    /// single-owner store. Shards are locked one at a time.
+    pub fn refresh(&self) -> anyhow::Result<usize> {
         if self.fleet.is_none() {
             return Ok(0);
         }
         let mut changed = 0;
-        for i in 0..self.n_shards {
-            changed += self.refresh_shard(i)?;
+        for (i, shard) in self.shards.iter().enumerate() {
+            let mut state = shard.write().expect("shard lock");
+            changed += self.refresh_shard_locked(i, &mut state)?;
         }
         Ok(changed)
     }
 
     /// [`ShardedStore::refresh`] for the single shard `key` routes to —
     /// the miss path's cheap "did another daemon already fill this?".
-    pub fn refresh_key(&mut self, key: &str) -> anyhow::Result<usize> {
+    /// Only that shard's lock is taken.
+    pub fn refresh_key(&self, key: &str) -> anyhow::Result<usize> {
         if self.fleet.is_none() {
             return Ok(0);
         }
         let shard = self.shard_of(key);
-        self.refresh_shard(shard)
+        let mut state = self.shards[shard].write().expect("shard lock");
+        self.refresh_shard_locked(shard, &mut state)
     }
 
-    fn refresh_shard(&mut self, shard: usize) -> anyhow::Result<usize> {
+    fn refresh_shard_locked(&self, shard: usize, state: &mut ShardState) -> anyhow::Result<usize> {
         if self.fleet.is_none() {
             return Ok(0);
         }
@@ -540,14 +627,14 @@ impl ShardedStore {
         let path = self.shards_dir.join(shard_file(shard));
         let disk_gen = self.read_gen(shard);
         let len = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
-        if disk_gen != self.gens[shard] || len < self.offsets[shard] {
-            return self.reload_shard(shard, disk_gen);
+        if disk_gen != state.gen || len < state.offset {
+            return self.reload_shard_locked(shard, state, disk_gen);
         }
-        if len == self.offsets[shard] {
+        if len == state.offset {
             return Ok(0);
         }
         let mut f = std::fs::File::open(&path).with_context(|| format!("open shard {path:?}"))?;
-        f.seek(std::io::SeekFrom::Start(self.offsets[shard]))
+        f.seek(std::io::SeekFrom::Start(state.offset))
             .with_context(|| format!("seek shard {path:?}"))?;
         let mut buf = String::new();
         f.read_to_string(&mut buf).with_context(|| format!("read shard tail {path:?}"))?;
@@ -555,43 +642,54 @@ impl ShardedStore {
         // tail stays unconsumed until the next refresh.
         let Some(end) = buf.rfind('\n') else { return Ok(0) };
         let complete = &buf[..=end];
-        let mut added = 0;
+        let mut parsed: Vec<Arc<TuningRecord>> = Vec::new();
         for line in complete.lines() {
             if line.trim().is_empty() {
                 continue;
             }
             match Json::parse(line).and_then(|v| TuningRecord::from_json(&v)) {
-                Ok(rec) => {
-                    self.shards[shard].push(Arc::new(rec));
-                    added += 1;
-                }
+                Ok(rec) => parsed.push(Arc::new(rec)),
                 // Mid-tail garbage means we raced a rewrite around its
                 // generation bump: the whole file is self-consistent,
                 // so reload it.
-                Err(_) => return self.reload_shard(shard, disk_gen),
+                Err(_) => return self.reload_shard_locked(shard, state, disk_gen),
             }
         }
-        self.offsets[shard] += complete.len() as u64;
+        let added = parsed.len();
+        {
+            let mut index = self.index.write().expect("index lock");
+            for rec in &parsed {
+                index.insert(shard, rec);
+            }
+        }
+        state.records.extend(parsed);
+        state.offset += complete.len() as u64;
         Ok(added)
     }
 
-    fn reload_shard(&mut self, shard: usize, disk_gen: u64) -> anyhow::Result<usize> {
+    fn reload_shard_locked(
+        &self,
+        shard: usize,
+        state: &mut ShardState,
+        disk_gen: u64,
+    ) -> anyhow::Result<usize> {
         let load = load_shard_file(&self.shards_dir.join(shard_file(shard)))?;
-        let n = load.records.len().max(self.shards[shard].len());
-        self.shards[shard] = load.records;
-        self.offsets[shard] = load.consumed;
-        self.gens[shard] = disk_gen;
+        let n = load.records.len().max(state.records.len());
+        state.records = load.records;
+        state.offset = load.consumed;
+        state.gen = disk_gen;
+        self.index.write().expect("index lock").rebuild_shard(shard, &state.records);
         Ok(n)
     }
 
     /// Record that `key` was just served (bumps its LRU tick).
-    pub fn mark_served(&mut self, key: &str) -> anyhow::Result<()> {
+    pub fn mark_served(&self, key: &str) -> anyhow::Result<()> {
         self.touch(key)
     }
 
     /// Last-served tick of a key (0 = never).
     pub fn last_served(&self, key: &str) -> u64 {
-        self.served.get(key).copied().unwrap_or(0)
+        self.served.lock().expect("served lock").served.get(key).copied().unwrap_or(0)
     }
 
     /// Enforce the eviction policy: keep at most `per_gpu_quota`
@@ -599,10 +697,11 @@ impl ShardedStore {
     /// either bound), evicting least-recently-served keys whole. In
     /// fleet mode every shard rewrite happens under that shard's lease;
     /// shards whose lease another daemon holds are skipped and retried
-    /// on the next pass. Returns what was evicted, for the audit
-    /// stream.
+    /// on the next pass. Shards are locked one at a time, so requests
+    /// against other shards keep flowing while one is rewritten.
+    /// Returns what was evicted, for the audit stream.
     pub fn enforce_limits(
-        &mut self,
+        &self,
         per_gpu_quota: usize,
         max_records: usize,
     ) -> anyhow::Result<EvictionReport> {
@@ -611,15 +710,22 @@ impl ShardedStore {
             // serve traffic: LRU ranking over only our own ticks would
             // evict the keys the *other* daemons serve hottest.
             self.refresh()?;
-            self.merge_served_from_disk()?;
+            let mut st = self.served.lock().expect("served lock");
+            self.merge_served_from_disk_locked(&mut st)?;
         }
-        // Aggregate per serve key: gpu, record count, last-served tick.
+        // Aggregate per serve key: gpu, record count, last-served tick
+        // (a snapshot of the LRU map — the served mutex is not held
+        // across the shard scans).
+        let served: HashMap<String, u64> = self.served.lock().expect("served lock").served.clone();
         let mut keys: BTreeMap<String, (String, usize, u64)> = BTreeMap::new();
-        for r in self.iter() {
-            let key = record_key(r);
-            let tick = self.served.get(&key).copied().unwrap_or(0);
-            let e = keys.entry(key).or_insert_with(|| (r.gpu.clone(), 0, tick));
-            e.1 += 1;
+        for shard in &self.shards {
+            let state = shard.read().expect("shard lock");
+            for r in &state.records {
+                let key = record_key(r.as_ref());
+                let tick = served.get(&key).copied().unwrap_or(0);
+                let e = keys.entry(key).or_insert_with(|| (r.gpu.clone(), 0, tick));
+                e.1 += 1;
+            }
         }
         let mut per_gpu: HashMap<&str, usize> = HashMap::new();
         let mut total = 0usize;
@@ -672,69 +778,102 @@ impl ShardedStore {
                 continue;
             }
             let res = (|| -> anyhow::Result<usize> {
+                let mut state = self.shards[shard].write().expect("shard lock");
                 if self.fleet.is_some() {
                     // See appends that landed after the count above;
                     // retained keys must survive the rewrite.
-                    self.refresh_shard(shard)?;
+                    self.refresh_shard_locked(shard, &mut state)?;
                 }
                 let victim_set: HashSet<&str> =
                     shard_victims.iter().map(|v| v.key.as_str()).collect();
-                let before = self.shards[shard].len();
-                self.shards[shard].retain(|r| !victim_set.contains(record_key(r).as_str()));
-                let removed = before - self.shards[shard].len();
-                self.rewrite_shard(shard)?;
+                let before = state.records.len();
+                state.records.retain(|r| !victim_set.contains(record_key(r.as_ref()).as_str()));
+                let removed = before - state.records.len();
+                self.rewrite_shard_locked(shard, &mut state)?;
+                self.index.write().expect("index lock").rebuild_shard(shard, &state.records);
                 Ok(removed)
             })();
             guard.release();
             let removed = res?;
             report.n_evicted += removed;
-            for v in shard_victims {
-                self.served.remove(&v.key);
-                report.victims.push(v);
-            }
+            report.victims.extend(shard_victims);
         }
         if !report.victims.is_empty() {
+            let mut st = self.served.lock().expect("served lock");
+            for v in &report.victims {
+                st.served.remove(&v.key);
+            }
             // No re-merge here: the fleet's history was folded in at
             // the top of this pass, and re-reading the sidecar now
             // would resurrect the victims' entries we just dropped.
-            self.compact_served_inner(false)?;
+            self.compact_served_locked(&mut st, false)?;
         }
         Ok(report)
     }
 
     /// Flatten into a plain [`TuningStore`] snapshot (what background
     /// search workers consult for exact hits and warm-start transfer).
-    /// Records are shared by `Arc`, so this is pointer clones, not a
-    /// deep copy.
+    /// Records are shared by `Arc` and the neighbor index is frozen in
+    /// as an O(workload-ids) clone, so this never deep-copies records
+    /// and transfer inside the search pays the indexed lookup too.
     pub fn snapshot(&self) -> TuningStore {
-        TuningStore::from_records(&self.dir, self.shards.iter().flatten().cloned().collect())
+        let records = self.records();
+        let index = Arc::new(self.index.read().expect("index lock").clone());
+        TuningStore::from_records(&self.dir, records).with_index(index)
     }
 
     pub fn stats(&self) -> StoreStats {
-        super::stats_among(self.iter())
+        let records = self.records();
+        super::stats_among(records.iter().map(|r| r.as_ref()))
     }
 
-    fn touch(&mut self, key: &str) -> anyhow::Result<()> {
+    /// Rebuild the whole neighbor index from the current shard records
+    /// (open-time: rebalance, import, plain load).
+    fn rebuild_index(&self) {
+        let mut index = NeighborIndex::default();
+        for (i, shard) in self.shards.iter().enumerate() {
+            let state = shard.read().expect("shard lock");
+            for rec in &state.records {
+                index.insert(i, rec);
+            }
+        }
+        *self.index.write().expect("index lock") = index;
+    }
+
+    fn touch(&self, key: &str) -> anyhow::Result<()> {
         // Wall-clock-ms ticks: fleet members append to one sidecar, so
         // recency must be comparable across daemons — a per-daemon
         // logical counter would make a quiet daemon's fresh serves look
         // ancient to a busy one's eviction pass. The max() keeps ticks
         // strictly increasing within this store against clock skew and
         // multiple touches in one millisecond.
-        self.tick = super::lease::now_ms().max(self.tick + 1);
-        self.served.insert(key.to_string(), self.tick);
+        let (tick, want_compact) = {
+            let mut st = self.served.lock().expect("served lock");
+            st.tick = super::lease::now_ms().max(st.tick + 1);
+            let tick = st.tick;
+            st.served.insert(key.to_string(), tick);
+            st.appends += 1;
+            (tick, st.appends > 2 * st.served.len() + 64)
+        };
+        // The sidecar append runs OUTSIDE the served mutex: O_APPEND
+        // whole-line writes interleave safely, and the hit path must
+        // not serialize every request on one disk write. An append that
+        // lands between a concurrent compactor's merge and its rename
+        // loses one LRU bump from the file (not from memory) — benign,
+        // and the same window the fleet's cross-process compaction
+        // already tolerates.
         super::append_jsonl(
             &self.shards_dir.join(SERVED_FILE),
-            &Json::obj(vec![
-                ("key", Json::str(key)),
-                ("tick", Json::num(self.tick as f64)),
-            ]),
+            &Json::obj(vec![("key", Json::str(key)), ("tick", Json::num(tick as f64))]),
         )?;
         // Compact online so a long-running daemon's sidecar stays
         // bounded at ~2 lines per live key (+ slack for small stores).
-        self.served_appends += 1;
-        if self.served_appends > 2 * self.served.len() + 64 {
-            self.compact_served()?;
+        if want_compact {
+            let mut st = self.served.lock().expect("served lock");
+            // Re-check: another thread may have compacted meanwhile.
+            if st.appends > 2 * st.served.len() + 64 {
+                self.compact_served_locked(&mut st, true)?;
+            }
         }
         Ok(())
     }
@@ -761,7 +900,7 @@ impl ShardedStore {
         read_gen_at(&self.leases_dir, shard)
     }
 
-    fn replay_served(&mut self, compact: bool) -> anyhow::Result<()> {
+    fn replay_served(&self, compact: bool) -> anyhow::Result<()> {
         let path = self.shards_dir.join(SERVED_FILE);
         if !path.exists() {
             return Ok(());
@@ -769,6 +908,7 @@ impl ShardedStore {
         let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
         let all: Vec<&str> = text.lines().collect();
         let last = all.iter().rposition(|l| !l.trim().is_empty());
+        let mut st = self.served.lock().expect("served lock");
         let mut lines = 0usize;
         let mut torn = false;
         for (lineno, line) in all.iter().enumerate() {
@@ -792,11 +932,11 @@ impl ShardedStore {
                     // Max per key, not last-line-wins: fleet members'
                     // appends interleave and a lagging member's clock
                     // may write an older tick after a newer one — the
-                    // same rule [`Self::merge_served_from_disk`] uses,
-                    // so a reopen and a running daemon agree.
-                    let entry = self.served.entry(key).or_insert(0);
+                    // same rule the disk merge uses, so a reopen and a
+                    // running daemon agree.
+                    let entry = st.served.entry(key).or_insert(0);
                     *entry = (*entry).max(tick);
-                    self.tick = self.tick.max(tick);
+                    st.tick = st.tick.max(tick);
                     lines += 1;
                 }
                 // A torn trailing touch only loses one LRU bump.
@@ -813,8 +953,8 @@ impl ShardedStore {
         // Compact a sidecar that has grown past ~2 lines per live key,
         // or whose tail is torn (a future append would concatenate onto
         // the partial line). Never in read-only opens.
-        if compact && (torn || lines > 2 * self.served.len().max(1)) {
-            self.compact_served()?;
+        if compact && (torn || lines > 2 * st.served.len().max(1)) {
+            self.compact_served_locked(&mut st, true)?;
         }
         Ok(())
     }
@@ -828,52 +968,42 @@ impl ShardedStore {
         write_atomic(&path, &v.to_string())
     }
 
-    /// Rewrite one shard file from memory. In fleet mode the caller
-    /// must hold the shard's lease; the per-shard generation is bumped
-    /// AFTER the atomic rename — a member refreshing inside the window
-    /// sees either old gen + shrunken file (caught by the `len <
-    /// offset` check: in-place rewrites only ever shrink) or the gen
-    /// bump (one redundant reload) — never a stale byte offset applied
-    /// to content it did not load.
-    fn rewrite_shard(&mut self, shard: usize) -> anyhow::Result<()> {
+    /// Rewrite one shard file from memory (the caller holds the shard's
+    /// in-process lock, and its lease in fleet mode). The per-shard
+    /// generation is bumped AFTER the atomic rename — a member
+    /// refreshing inside the window sees either old gen + shrunken file
+    /// (caught by the `len < offset` check: in-place rewrites only ever
+    /// shrink) or the gen bump (one redundant reload) — never a stale
+    /// byte offset applied to content it did not load.
+    fn rewrite_shard_locked(&self, shard: usize, state: &mut ShardState) -> anyhow::Result<()> {
         let path = self.shards_dir.join(shard_file(shard));
         let mut text = String::new();
-        for r in &self.shards[shard] {
+        for r in &state.records {
             text.push_str(&r.to_json().to_string());
             text.push('\n');
         }
         write_atomic(&path, &text)?;
-        self.offsets[shard] = text.len() as u64;
+        state.offset = text.len() as u64;
         if self.fleet.is_some() {
-            let g = self.gens[shard].max(self.read_gen(shard)) + 1;
+            let g = state.gen.max(self.read_gen(shard)) + 1;
             write_atomic(&self.leases_dir.join(gen_file(shard)), &format!("{g}\n"))?;
-            self.gens[shard] = g;
-        }
-        Ok(())
-    }
-
-    fn rewrite_all_shards(&mut self) -> anyhow::Result<()> {
-        for i in 0..self.n_shards {
-            self.rewrite_shard(i)?;
+            state.gen = g;
         }
         Ok(())
     }
 
     /// Compact `served.jsonl`, lease-guarded in fleet mode (skipped —
-    /// and retried later — while another member compacts).
-    fn compact_served(&mut self) -> anyhow::Result<()> {
-        self.compact_served_inner(true)
-    }
-
-    fn compact_served_inner(&mut self, merge: bool) -> anyhow::Result<()> {
+    /// and retried later — while another member compacts). The caller
+    /// holds the served mutex, which serializes in-process compactors.
+    fn compact_served_locked(&self, st: &mut ServedState, merge: bool) -> anyhow::Result<()> {
         if self.fleet.is_none() {
-            return self.rewrite_served(merge);
+            return self.rewrite_served_locked(st, merge);
         }
         let guard = self.acquire_guard(SERVED_LEASE_NAME, 1)?;
         if !guard.available() {
             return Ok(());
         }
-        let res = self.rewrite_served(merge);
+        let res = self.rewrite_served_locked(st, merge);
         guard.release();
         res
     }
@@ -883,7 +1013,7 @@ impl ShardedStore {
     /// sidecar, so eviction ranking and compaction must see everyone's
     /// serve history, not just ours. Malformed lines (including a torn
     /// tail) are skipped — a lost bump is benign.
-    fn merge_served_from_disk(&mut self) -> anyhow::Result<()> {
+    fn merge_served_from_disk_locked(&self, st: &mut ServedState) -> anyhow::Result<()> {
         let path = self.shards_dir.join(SERVED_FILE);
         let text = match std::fs::read_to_string(&path) {
             Ok(t) => t,
@@ -899,23 +1029,23 @@ impl ShardedStore {
             let tick = v.get("tick").and_then(|t| t.as_f64());
             if let (Some(key), Some(tick)) = (key, tick) {
                 let tick = tick as u64;
-                let entry = self.served.entry(key.to_string()).or_insert(0);
+                let entry = st.served.entry(key.to_string()).or_insert(0);
                 *entry = (*entry).max(tick);
-                self.tick = self.tick.max(tick);
+                st.tick = st.tick.max(tick);
             }
         }
         Ok(())
     }
 
-    fn rewrite_served(&mut self, merge: bool) -> anyhow::Result<()> {
+    fn rewrite_served_locked(&self, st: &mut ServedState, merge: bool) -> anyhow::Result<()> {
         // Compaction must not discard the other members' LRU history:
         // fold the on-disk state in first (touches they append between
         // this merge and the rename lose one bump — benign).
         if merge && self.fleet.is_some() {
-            self.merge_served_from_disk()?;
+            self.merge_served_from_disk_locked(st)?;
         }
         let path = self.shards_dir.join(SERVED_FILE);
-        let mut entries: Vec<(&String, &u64)> = self.served.iter().collect();
+        let mut entries: Vec<(&String, &u64)> = st.served.iter().collect();
         entries.sort_by_key(|(_, tick)| **tick);
         let mut text = String::new();
         for (key, tick) in entries {
@@ -928,7 +1058,7 @@ impl ShardedStore {
             );
             text.push('\n');
         }
-        self.served_appends = 0;
+        st.appends = 0;
         write_atomic(&path, &text)
     }
 }
@@ -1027,6 +1157,8 @@ fn write_atomic(path: &Path, text: &str) -> anyhow::Result<()> {
 mod tests {
     use super::*;
     use crate::config::GpuArch;
+    use crate::store::neighbors_among;
+    use crate::util::Rng;
     use crate::workload::suites;
 
     fn tmp_dir(tag: &str) -> PathBuf {
@@ -1054,21 +1186,27 @@ mod tests {
         (TuningRecord::from_outcome(&out, &cfg), cfg)
     }
 
+    /// A cheap handmade record (no search): enough structure for
+    /// routing, persistence roundtrips, and neighbor selection.
+    fn quick_record(w: Workload, gpu: GpuArch, seed: u64) -> TuningRecord {
+        TuningRecord::synthetic(w, gpu, seed)
+    }
+
     #[test]
     fn append_get_and_reopen_roundtrip() {
         let dir = tmp_dir("roundtrip");
         let (rec1, cfg1) = record_for(suites::MM1, 1, GpuArch::A100);
         let (rec2, cfg2) = record_for(suites::MV3, 2, GpuArch::A100);
         {
-            let mut store = ShardedStore::open(&dir, 4).unwrap();
+            let store = ShardedStore::open(&dir, 4).unwrap();
             store.append(rec1.clone()).unwrap();
             store.append(rec2.clone()).unwrap();
             assert_eq!(store.len(), 2);
         }
         let store = ShardedStore::open(&dir, 4).unwrap();
         assert_eq!(store.len(), 2);
-        assert_eq!(store.get(suites::MM1, &cfg1), Some(&rec1));
-        assert_eq!(store.get(suites::MV3, &cfg2), Some(&rec2));
+        assert_eq!(store.get(suites::MM1, &cfg1).as_deref(), Some(&rec1));
+        assert_eq!(store.get(suites::MV3, &cfg2).as_deref(), Some(&rec2));
         assert_eq!(store.get(suites::MM2, &cfg1), None);
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -1078,7 +1216,7 @@ mod tests {
         let dir = tmp_dir("rebalance");
         let mut recs = Vec::new();
         {
-            let mut store = ShardedStore::open(&dir, 2).unwrap();
+            let store = ShardedStore::open(&dir, 2).unwrap();
             for (w, seed) in [(suites::MM1, 3), (suites::MM3, 4), (suites::MV3, 5)] {
                 let (rec, cfg) = record_for(w, seed, GpuArch::A100);
                 store.append(rec.clone()).unwrap();
@@ -1089,7 +1227,12 @@ mod tests {
         assert_eq!(store.n_shards(), 5);
         assert_eq!(store.len(), 3);
         for (w, rec, cfg) in &recs {
-            assert_eq!(store.get(*w, cfg), Some(rec), "{} survives rebalance", rec.workload_id);
+            assert_eq!(
+                store.get(*w, cfg).as_deref(),
+                Some(rec),
+                "{} survives rebalance",
+                rec.workload_id
+            );
         }
         // The new layout is durable: meta records 5 shards and a fresh
         // open at the same count does not rewrite anything.
@@ -1108,7 +1251,7 @@ mod tests {
             legacy.append(rec.clone()).unwrap();
         }
         let store = ShardedStore::open(&dir, 3).unwrap();
-        assert_eq!(store.get(suites::MM1, &cfg), Some(&rec));
+        assert_eq!(store.get(suites::MM1, &cfg).as_deref(), Some(&rec));
         // The legacy file is archived so evicted records can never
         // resurrect from it, and a second open cannot re-import.
         assert!(!dir.join(crate::store::STORE_FILE).exists());
@@ -1122,7 +1265,7 @@ mod tests {
     #[test]
     fn per_gpu_quota_evicts_least_recently_served() {
         let dir = tmp_dir("quota");
-        let mut store = ShardedStore::open(&dir, 4).unwrap();
+        let store = ShardedStore::open(&dir, 4).unwrap();
         let (rec_a, cfg_a) = record_for(suites::MM1, 7, GpuArch::A100);
         let (rec_b, cfg_b) = record_for(suites::MV3, 8, GpuArch::A100);
         let (rec_c, cfg_c) = record_for(suites::CONV2, 9, GpuArch::A100);
@@ -1145,7 +1288,7 @@ mod tests {
 
         // Eviction is durable and under quota no further eviction runs.
         drop(store);
-        let mut store = ShardedStore::open(&dir, 4).unwrap();
+        let store = ShardedStore::open(&dir, 4).unwrap();
         assert_eq!(store.len(), 2);
         assert_eq!(store.enforce_limits(2, 0).unwrap(), EvictionReport::default());
         let _ = std::fs::remove_dir_all(&dir);
@@ -1154,7 +1297,7 @@ mod tests {
     #[test]
     fn quota_is_per_gpu_and_global_cap_is_global() {
         let dir = tmp_dir("pergpu");
-        let mut store = ShardedStore::open(&dir, 2).unwrap();
+        let store = ShardedStore::open(&dir, 2).unwrap();
         let (rec_a100, cfg_a100) = record_for(suites::MM1, 10, GpuArch::A100);
         let (rec_v100, cfg_v100) = record_for(suites::MM1, 11, GpuArch::V100);
         store.append(rec_a100).unwrap();
@@ -1177,7 +1320,7 @@ mod tests {
         let (rec, cfg) = record_for(suites::MM1, 12, GpuArch::A100);
         let shard_path;
         {
-            let mut store = ShardedStore::open(&dir, 1).unwrap();
+            let store = ShardedStore::open(&dir, 1).unwrap();
             store.append(rec.clone()).unwrap();
             shard_path = dir.join(SHARDS_DIR).join(shard_file(0));
         }
@@ -1186,9 +1329,9 @@ mod tests {
         text.push_str(r#"{"v":1,"workload_id":"mm_torn"#);
         std::fs::write(&shard_path, &text).unwrap();
 
-        let mut store = ShardedStore::open(&dir, 1).unwrap();
+        let store = ShardedStore::open(&dir, 1).unwrap();
         assert_eq!(store.len(), 1, "torn tail dropped, intact record kept");
-        assert_eq!(store.get(suites::MM1, &cfg), Some(&rec));
+        assert_eq!(store.get(suites::MM1, &cfg).as_deref(), Some(&rec));
         // The open repaired the file: appending again and reopening
         // must not produce a corrupt middle line.
         let (rec2, cfg2) = record_for(suites::MV3, 13, GpuArch::A100);
@@ -1196,7 +1339,7 @@ mod tests {
         drop(store);
         let store = ShardedStore::open(&dir, 1).unwrap();
         assert_eq!(store.len(), 2);
-        assert_eq!(store.get(suites::MV3, &cfg2), Some(&rec2));
+        assert_eq!(store.get(suites::MV3, &cfg2).as_deref(), Some(&rec2));
 
         // Corruption in the MIDDLE of a shard is still a hard error.
         let mut lines: Vec<String> =
@@ -1223,7 +1366,7 @@ mod tests {
     #[test]
     fn snapshots_share_record_allocations() {
         let dir = tmp_dir("arcsnap");
-        let mut store = ShardedStore::open(&dir, 2).unwrap();
+        let store = ShardedStore::open(&dir, 2).unwrap();
         let (rec, _) = record_for(suites::MM1, 14, GpuArch::A100);
         store.append(rec).unwrap();
         let s1 = store.snapshot();
@@ -1241,15 +1384,15 @@ mod tests {
     #[test]
     fn fleet_refresh_ingests_foreign_appends_and_rewrites() {
         let dir = tmp_dir("refresh");
-        let mut s1 = ShardedStore::open_fleet(&dir, 2, "h1", 60_000).unwrap();
-        let mut s2 = ShardedStore::open_fleet(&dir, 2, "h2", 60_000).unwrap();
+        let s1 = ShardedStore::open_fleet(&dir, 2, "h1", 60_000).unwrap();
+        let s2 = ShardedStore::open_fleet(&dir, 2, "h2", 60_000).unwrap();
 
         // s1's append becomes visible to s2 through refresh only.
         let (rec_a, cfg_a) = record_for(suites::MM1, 15, GpuArch::A100);
         s1.append(rec_a.clone()).unwrap();
         assert!(s2.get(suites::MM1, &cfg_a).is_none(), "not yet refreshed");
         assert!(s2.refresh().unwrap() > 0);
-        assert_eq!(s2.get(suites::MM1, &cfg_a), Some(&rec_a));
+        assert_eq!(s2.get(suites::MM1, &cfg_a).as_deref(), Some(&rec_a));
 
         // A foreign eviction rewrite (generation bump) is picked up too.
         let (rec_b, cfg_b) = record_for(suites::MV3, 16, GpuArch::A100);
@@ -1259,14 +1402,14 @@ mod tests {
         assert_eq!(report.n_evicted, 1, "older key evicted under the global cap");
         s1.refresh().unwrap();
         assert!(s1.get(suites::MM1, &cfg_a).is_none(), "s1 sees the fleet eviction");
-        assert_eq!(s1.get(suites::MV3, &cfg_b), Some(&rec_b), "s1 sees the fleet append");
+        assert_eq!(s1.get(suites::MV3, &cfg_b).as_deref(), Some(&rec_b), "s1 sees the append");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
     fn fleet_eviction_skips_shards_whose_lease_is_held() {
         let dir = tmp_dir("leaseheld");
-        let mut store = ShardedStore::open_fleet(&dir, 1, "evictor", 60_000).unwrap();
+        let store = ShardedStore::open_fleet(&dir, 1, "evictor", 60_000).unwrap();
         let (rec_a, _) = record_for(suites::MM1, 17, GpuArch::A100);
         let (rec_b, cfg_b) = record_for(suites::MV3, 18, GpuArch::A100);
         store.append(rec_a.clone()).unwrap();
@@ -1288,7 +1431,164 @@ mod tests {
         let report = store.enforce_limits(0, 1).unwrap();
         assert_eq!(report.n_evicted, 1);
         assert_eq!(store.len(), 1);
-        assert_eq!(store.get(suites::MV3, &cfg_b), Some(&rec_b), "served key survives");
+        assert_eq!(store.get(suites::MV3, &cfg_b).as_deref(), Some(&rec_b), "served key kept");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The incremental neighbor index returns byte-identical results to
+    /// the brute-force scan through every maintenance path: appends,
+    /// eviction rewrites, fleet refresh of foreign appends, and a
+    /// rebalancing reopen.
+    #[test]
+    fn neighbor_index_matches_brute_force_through_store_ops() {
+        let dir = tmp_dir("nnparity");
+
+        fn check(store: &ShardedStore, targets: &[Workload], tag: &str) {
+            let all = store.records();
+            for &target in targets {
+                for gpu in ["a100", "v100"] {
+                    for max_n in [1, 3, 8] {
+                        let fast: Vec<(String, u64, f64)> = store
+                            .neighbors(target, gpu, max_n)
+                            .into_iter()
+                            .map(|(r, d)| (r.workload_id.clone(), r.seed, d))
+                            .collect();
+                        let brute: Vec<(String, u64, f64)> =
+                            neighbors_among(all.iter().map(|r| r.as_ref()), target, gpu, max_n)
+                                .into_iter()
+                                .map(|(r, d)| (r.workload_id.clone(), r.seed, d))
+                                .collect();
+                        assert_eq!(fast, brute, "{tag}: target={target} gpu={gpu} n={max_n}");
+                    }
+                }
+            }
+        }
+
+        // A randomized population: mixed families, two GPUs, duplicate
+        // workload ids under different fingerprints, some records
+        // without a measured pool (invisible to neighbor selection).
+        let mut rng = Rng::seed_from_u64(99);
+        let mut pool: Vec<Workload> = vec![suites::CONV1, suites::CONV2];
+        fn dim(rng: &mut Rng, hi: usize) -> usize {
+            1usize << rng.gen_range(0, hi)
+        }
+        for _ in 0..16 {
+            let mv = rng.gen_f64() < 0.3;
+            pool.push(if mv {
+                Workload::MatVec {
+                    batch: dim(&mut rng, 5),
+                    n: dim(&mut rng, 11),
+                    k: dim(&mut rng, 11),
+                }
+            } else {
+                Workload::MatMul {
+                    batch: 1,
+                    m: dim(&mut rng, 11),
+                    n: dim(&mut rng, 11),
+                    k: dim(&mut rng, 11),
+                }
+            });
+        }
+        let targets = [suites::MM1, suites::MV3, suites::CONV2, pool[3], pool[9]];
+
+        let store = ShardedStore::open(&dir, 4).unwrap();
+        for (i, &w) in pool.iter().enumerate() {
+            let gpu = if i % 3 == 0 { GpuArch::V100 } else { GpuArch::A100 };
+            let mut rec = quick_record(w, gpu, i as u64);
+            if i % 5 == 0 {
+                rec.measured.clear();
+            }
+            store.append(rec).unwrap();
+        }
+        // Duplicate ids under fresh fingerprints: "latest wins".
+        store.append(quick_record(pool[4], GpuArch::A100, 900)).unwrap();
+        store.append(quick_record(pool[4], GpuArch::A100, 901)).unwrap();
+        check(&store, &targets, "after appends");
+
+        // Eviction rewrites shards; the index follows.
+        let first_key = record_key(store.records()[0].as_ref());
+        store.mark_served(&first_key).unwrap();
+        store.enforce_limits(0, 9).unwrap();
+        check(&store, &targets, "after eviction");
+        drop(store);
+
+        // A foreign fleet append arrives through refresh.
+        let s1 = ShardedStore::open_fleet(&dir, 4, "h1", 60_000).unwrap();
+        let s2 = ShardedStore::open_fleet(&dir, 4, "h2", 60_000).unwrap();
+        s1.append(quick_record(suites::MM4, GpuArch::A100, 777)).unwrap();
+        s2.refresh().unwrap();
+        check(&s2, &targets, "after fleet refresh");
+        drop(s1);
+        drop(s2);
+
+        // A rebalancing reopen rebuilds the index over the new layout.
+        let store = ShardedStore::open(&dir, 7).unwrap();
+        check(&store, &targets, "after rebalance");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Per-shard locks: operations against one shard proceed while
+    /// another shard's lock is held (a stalled refresh, simulated with
+    /// [`ShardedStore::hold_shard`]).
+    #[test]
+    fn other_shards_stay_servable_while_one_shard_is_held() {
+        let dir = tmp_dir("shardhold");
+        let store = ShardedStore::open(&dir, 2).unwrap();
+        // Find two handmade records routing to different shards (seeds
+        // change the fingerprint, so candidates are unbounded).
+        let mut by_shard: [Option<(Workload, SearchConfig)>; 2] = [None, None];
+        'fill: for seed in 0..8u64 {
+            for (i, (_, w)) in suites::table2_suite().iter().enumerate() {
+                let cfg = quick_cfg(30 + seed * 31 + i as u64, GpuArch::A100);
+                let fp = crate::store::config_fingerprint(&cfg);
+                let key = serve_key(&w.id(), cfg.gpu.name(), cfg.mode.name(), &fp);
+                let shard = store.shard_of(&key);
+                if by_shard[shard].is_none() {
+                    let mut rec = quick_record(*w, GpuArch::A100, cfg.seed);
+                    rec.fingerprint = fp;
+                    store.append(rec).unwrap();
+                    by_shard[shard] = Some((*w, cfg));
+                }
+                if by_shard.iter().all(|s| s.is_some()) {
+                    break 'fill;
+                }
+            }
+        }
+        let (w_a, cfg_a) = by_shard[0].clone().expect("a key routing to shard 0");
+        let (w_b, cfg_b) = by_shard[1].clone().expect("a key routing to shard 1");
+
+        let store = Arc::new(store);
+        let hold = store.hold_shard(1);
+
+        // Shard 0 stays fully servable (lookup + LRU touch)...
+        let (tx, rx) = std::sync::mpsc::channel();
+        let s = store.clone();
+        std::thread::spawn(move || {
+            let hit = s.get(w_a, &cfg_a).is_some();
+            let key = serve_key(
+                &w_a.id(),
+                cfg_a.gpu.name(),
+                cfg_a.mode.name(),
+                &crate::store::config_fingerprint(&cfg_a),
+            );
+            s.mark_served(&key).unwrap();
+            tx.send(hit).unwrap();
+        });
+        let served = rx.recv_timeout(std::time::Duration::from_secs(20));
+        assert_eq!(served, Ok(true), "shard 0 must serve while shard 1 is held");
+
+        // ...while a lookup against the held shard waits for the hold.
+        let (tx, rx) = std::sync::mpsc::channel();
+        let s = store.clone();
+        std::thread::spawn(move || {
+            tx.send(s.get(w_b, &cfg_b).is_some()).unwrap();
+        });
+        assert!(
+            rx.recv_timeout(std::time::Duration::from_millis(300)).is_err(),
+            "a shard-1 lookup must block behind the held lock"
+        );
+        drop(hold);
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(20)), Ok(true));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -15,6 +15,11 @@
 //! The SNR guard of Algorithm 1 keeps the transfer honest: if the
 //! transferred model turns out wrong for the new shape, prediction SNR
 //! drops below `µ` and `k` climbs back toward full measurement.
+//!
+//! Neighbor selection goes through [`TuningStore::neighbors`]: on a
+//! sharded-store snapshot that is the frozen
+//! [`crate::store::NeighborIndex`] (candidate buckets, not a full
+//! scan) — the same index the serving daemon's miss path queries.
 
 use super::TuningStore;
 use crate::config::SearchConfig;

@@ -11,9 +11,10 @@ use ecokernel::fleet::InflightTable;
 use ecokernel::serve::{Daemon, DaemonConfig, DaemonHandle, ServeAddr, ServeClient};
 use ecokernel::store::lease::Lease;
 use ecokernel::store::sharded::{shard_lease_name, LEASES_DIR};
-use ecokernel::store::{serve_key, ShardedStore, TuningRecord};
+use ecokernel::store::{config_fingerprint, serve_key, ShardedStore, TuningRecord};
 use ecokernel::workload::{suites, Workload};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Duration;
 
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(180);
@@ -62,6 +63,15 @@ fn record_for(w: Workload, seed: u64) -> (TuningRecord, SearchConfig) {
 
 fn key_of(rec: &TuningRecord) -> String {
     serve_key(&rec.workload_id, &rec.gpu, &rec.mode, &rec.fingerprint)
+}
+
+/// A cheap handmade record (no search) whose serve key matches `cfg`:
+/// enough structure for routing, lookups, and neighbor selection.
+fn hand_record(w: Workload, cfg: &SearchConfig) -> TuningRecord {
+    let mut rec = TuningRecord::synthetic(w, cfg.gpu, cfg.seed);
+    rec.mode = cfg.mode.name().to_string();
+    rec.fingerprint = config_fingerprint(cfg);
+    rec
 }
 
 /// The same client bytes produce byte-identical replies over `unix:`
@@ -169,7 +179,7 @@ fn two_daemons_one_store_search_once_fleet_wide() {
 #[test]
 fn two_stores_racing_eviction_lose_no_retained_records() {
     let dir = tmp_dir("race");
-    let mut s1 = ShardedStore::open_fleet(&dir, 2, "h1", 60_000).unwrap();
+    let s1 = ShardedStore::open_fleet(&dir, 2, "h1", 60_000).unwrap();
     let (rec_a, _) = record_for(suites::MM1, 20);
     let (rec_b, cfg_b) = record_for(suites::MV3, 21);
     let (rec_c, _) = record_for(suites::CONV2, 22);
@@ -185,7 +195,6 @@ fn two_stores_racing_eviction_lose_no_retained_records() {
         (s1, report)
     });
     let t2 = std::thread::spawn(move || {
-        let mut s2 = s2;
         let report = s2.enforce_limits(0, 1).unwrap();
         (s2, report)
     });
@@ -199,7 +208,7 @@ fn two_stores_racing_eviction_lose_no_retained_records() {
     // The survivor is the served key, intact, and the layout reopens.
     let reopened = ShardedStore::open(&dir, 2).unwrap();
     assert_eq!(reopened.len(), 1, "exactly the retained record survives");
-    assert_eq!(reopened.get(suites::MV3, &cfg_b), Some(&rec_b));
+    assert_eq!(reopened.get(suites::MV3, &cfg_b).as_deref(), Some(&rec_b));
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -208,7 +217,7 @@ fn two_stores_racing_eviction_lose_no_retained_records() {
 #[test]
 fn expired_lease_is_reclaimed_for_compaction() {
     let dir = tmp_dir("reclaim");
-    let mut store = ShardedStore::open_fleet(&dir, 1, "alive", 60_000).unwrap();
+    let store = ShardedStore::open_fleet(&dir, 1, "alive", 60_000).unwrap();
     let (rec_a, _) = record_for(suites::MM1, 23);
     let (rec_b, cfg_b) = record_for(suites::MV3, 24);
     store.append(rec_a).unwrap();
@@ -230,7 +239,7 @@ fn expired_lease_is_reclaimed_for_compaction() {
     assert_eq!(reclaimed.n_evicted, 1, "expired lease reclaimed, eviction proceeds");
     assert_eq!(reclaimed.n_skipped_shards, 0);
     assert!(!crashed.is_current().unwrap(), "the crashed holder is fenced out");
-    assert_eq!(store.get(suites::MV3, &cfg_b), Some(&rec_b), "retained record intact");
+    assert_eq!(store.get(suites::MV3, &cfg_b).as_deref(), Some(&rec_b), "retained intact");
 
     let reopened = ShardedStore::open(&dir, 1).unwrap();
     assert_eq!(reopened.len(), 1, "compaction under a reclaimed lease is durable");
@@ -243,7 +252,7 @@ fn expired_lease_is_reclaimed_for_compaction() {
 #[test]
 fn stale_claim_write_back_is_rejected() {
     let dir = tmp_dir("fence");
-    let mut store = ShardedStore::open_fleet(&dir, 2, "daemon-a", 60_000).unwrap();
+    let store = ShardedStore::open_fleet(&dir, 2, "daemon-a", 60_000).unwrap();
     let (rec, cfg) = record_for(suites::MM1, 25);
     let key = key_of(&rec);
 
@@ -261,7 +270,77 @@ fn stale_claim_write_back_is_rejected() {
     assert!(store.is_empty());
     // …while the current owner's goes through.
     assert!(store.append_claimed(rec.clone(), &fresh).unwrap());
-    assert_eq!(store.get(suites::MM1, &cfg), Some(&rec));
+    assert_eq!(store.get(suites::MM1, &cfg).as_deref(), Some(&rec));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Per-shard locks end to end (ISSUE 4): with shard B's lock held —
+/// standing in for a miss's fleet refresh stalled mid disk read — the
+/// full hit path against shard A (per-key fleet refresh, exact
+/// lookup, LRU touch) completes, while a request against shard B
+/// itself waits for the hold to release.
+#[test]
+fn hit_on_shard_a_completes_while_shard_b_refresh_is_held() {
+    let dir = tmp_dir("shardhold");
+    let store = ShardedStore::open_fleet(&dir, 2, "h1", 60_000).unwrap();
+
+    // Find serve keys routing to each of the two shards (seeds change
+    // the fingerprint, so the candidate pool is effectively unbounded).
+    let mut on_shard: [Option<(Workload, SearchConfig)>; 2] = [None, None];
+    'fill: for seed in 0..8u64 {
+        for (i, (_, w)) in suites::table2_suite().iter().enumerate() {
+            let cfg = quick_search(100 + seed * 31 + i as u64);
+            let rec = hand_record(*w, &cfg);
+            let shard = store.shard_of(&key_of(&rec));
+            if on_shard[shard].is_none() {
+                store.append(rec).unwrap();
+                on_shard[shard] = Some((*w, cfg));
+            }
+            if on_shard.iter().all(|s| s.is_some()) {
+                break 'fill;
+            }
+        }
+    }
+    let (w_a, cfg_a) = on_shard[0].clone().expect("a key routing to shard 0");
+    let (w_b, cfg_b) = on_shard[1].clone().expect("a key routing to shard 1");
+    let store = Arc::new(store);
+
+    // Shard 1 stalls (lock held across "disk I/O").
+    let hold = store.hold_shard(1);
+
+    // The shard-0 hit path runs to completion regardless.
+    let (tx, rx) = std::sync::mpsc::channel();
+    let s = store.clone();
+    std::thread::spawn(move || {
+        let key = serve_key(
+            &w_a.id(),
+            cfg_a.gpu.name(),
+            cfg_a.mode.name(),
+            &config_fingerprint(&cfg_a),
+        );
+        s.refresh_key(&key).unwrap();
+        let hit = s.get(w_a, &cfg_a).is_some();
+        s.mark_served(&key).unwrap();
+        tx.send(hit).unwrap();
+    });
+    assert_eq!(
+        rx.recv_timeout(Duration::from_secs(20)),
+        Ok(true),
+        "the shard-0 hit path must complete while shard 1 is held"
+    );
+
+    // A shard-1 lookup waits for the hold, then completes.
+    let (tx, rx) = std::sync::mpsc::channel();
+    let s = store.clone();
+    std::thread::spawn(move || {
+        tx.send(s.get(w_b, &cfg_b).is_some()).unwrap();
+    });
+    assert!(
+        rx.recv_timeout(Duration::from_millis(300)).is_err(),
+        "a shard-1 lookup must wait behind the held refresh"
+    );
+    drop(hold);
+    assert_eq!(rx.recv_timeout(Duration::from_secs(20)), Ok(true));
     let _ = std::fs::remove_dir_all(&dir);
 }
 

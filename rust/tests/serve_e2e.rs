@@ -156,6 +156,39 @@ fn per_gpu_quota_evicts_lru_but_retained_keys_still_hit() {
     stop(handle, &dir);
 }
 
+/// The hot path is not serialized behind miss handling: while a slow
+/// background search is in flight for one key, exact hits for another
+/// key — on a separate connection — keep completing.
+#[test]
+fn hits_are_served_while_a_miss_search_is_in_flight() {
+    let (handle, dir) = spawn_daemon("parallel", |s| {
+        // Slow searches: each stays in flight long enough for the hit
+        // burst below to run against a busy daemon.
+        s.population = 256;
+        s.m_latency_keep = 16;
+        s.rounds = 12;
+    });
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
+
+    // Fill MM1, then start a second slow search (MM2) and leave it
+    // running.
+    client.get_kernel(suites::MM1, None, None).unwrap();
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    let miss = client.get_kernel(suites::MM2, None, None).unwrap();
+    assert!(!miss.hit && miss.enqueued);
+
+    // Hits on a second connection land while the MM2 search runs.
+    let mut other = ServeClient::connect(&handle.addr).unwrap();
+    for _ in 0..5 {
+        assert!(other.get_kernel(suites::MM1, None, None).unwrap().hit);
+    }
+    let stats = other.stats().unwrap();
+    assert!(stats.n_hits >= 5, "hits were served mid-search: {}", stats.n_hits);
+
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    stop(handle, &dir);
+}
+
 /// Protocol errors over a real socket: malformed frames, version
 /// mismatch, unknown workloads — each maps to its error code and the
 /// connection survives.
