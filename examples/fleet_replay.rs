@@ -17,7 +17,7 @@
 #[cfg(unix)]
 use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
 #[cfg(unix)]
-use ecokernel::serve::{Daemon, DaemonConfig, ServeAddr, ServeClient, StatsReply};
+use ecokernel::serve::{BatchRequest, Daemon, DaemonConfig, ServeAddr, ServeClient, StatsReply};
 #[cfg(unix)]
 use ecokernel::util::Rng;
 #[cfg(unix)]
@@ -119,15 +119,19 @@ fn main() -> anyhow::Result<()> {
     ca.wait_for_drain(Duration::from_secs(600))?;
     cb.wait_for_drain(Duration::from_secs(600))?;
 
-    // Second pass of the same stream: shed keys get another chance,
-    // everything searched in pass 1 is a fleet-wide hit on EITHER
-    // daemon regardless of who searched it.
+    // Second pass of the same stream, BATCHED: the pipelined client
+    // packs 8 requests per frame — one write syscall each — and the
+    // daemons answer with positionally-matched reply frames. Shed keys
+    // get another chance, everything searched in pass 1 is a
+    // fleet-wide hit on EITHER daemon regardless of who searched it.
     let mut second_hits = 0usize;
-    for (req, &i) in request_log.iter().enumerate() {
-        let (_, w) = suite[i];
-        let client = if req % 2 == 0 { &mut cb } else { &mut ca }; // swap daemons
-        if client.get_kernel(w, None, None)?.hit {
-            second_hits += 1;
+    for (chunk_idx, chunk) in request_log.chunks(8).enumerate() {
+        let client = if chunk_idx % 2 == 0 { &mut cb } else { &mut ca }; // swap daemons
+        let requests: Vec<BatchRequest> = chunk.iter().map(|&i| (suite[i].1, None, None)).collect();
+        for reply in client.get_kernel_batch(&requests)? {
+            if reply.map(|k| k.hit).unwrap_or(false) {
+                second_hits += 1;
+            }
         }
     }
     ca.wait_for_drain(Duration::from_secs(600))?;
@@ -152,10 +156,22 @@ fn main() -> anyhow::Result<()> {
         sa.n_requests, sb.n_requests
     );
     println!(
-        "fleet hit rate  : {:.1}% ({hits}/{requests}); swapped-daemon 2nd pass: {}/{}",
+        "fleet hit rate  : {:.1}% ({hits}/{requests}); swapped-daemon batched 2nd pass: {}/{}",
         100.0 * hits as f64 / requests.max(1) as f64,
         second_hits,
         request_log.len()
+    );
+    let batch_frames = sum(|s| s.n_batch_frames);
+    println!(
+        "batching        : {} requests over {} frames = {:.1} per syscall",
+        sum(|s| s.n_batch_requests),
+        batch_frames,
+        sum(|s| s.n_batch_requests) as f64 / batch_frames.max(1) as f64
+    );
+    println!(
+        "freshness       : {} notify (push) refreshes, {} poll-fallback refreshes",
+        sum(|s| s.n_notify_refresh),
+        sum(|s| s.n_poll_refresh)
     );
     println!(
         "searches run    : {searches} fleet-wide for {} distinct-key misses",

@@ -209,6 +209,9 @@ impl SearchConfig {
             "fleet.backlog_cap",
             "fleet.heat_half_life",
             "fleet.heat_keys_cap",
+            "fleet.notify",
+            "fleet.notify_interval_ms",
+            "fleet.poll_interval_ms",
         ];
         for key in doc.entries.keys() {
             if !known.contains(&key.as_str()) {
@@ -281,6 +284,10 @@ impl SearchConfig {
                 backlog_cap: doc.usize_or("fleet.backlog_cap", d.fleet.backlog_cap),
                 heat_half_life: doc.f64_or("fleet.heat_half_life", d.fleet.heat_half_life),
                 heat_keys_cap: doc.usize_or("fleet.heat_keys_cap", d.fleet.heat_keys_cap),
+                notify: doc.bool_or("fleet.notify", d.fleet.notify),
+                notify_interval_ms: doc
+                    .u64_or("fleet.notify_interval_ms", d.fleet.notify_interval_ms),
+                poll_interval_ms: doc.u64_or("fleet.poll_interval_ms", d.fleet.poll_interval_ms),
             },
         };
         cfg.validate()?;
@@ -349,12 +356,16 @@ impl SearchConfig {
         ));
         out.push_str(&format!(
             "\n[fleet]\ncoordinate = {}\nlease_ttl_ms = {}\nbacklog_cap = {}\n\
-             heat_half_life = {}\nheat_keys_cap = {}\n",
+             heat_half_life = {}\nheat_keys_cap = {}\nnotify = {}\n\
+             notify_interval_ms = {}\npoll_interval_ms = {}\n",
             self.fleet.coordinate,
             self.fleet.lease_ttl_ms,
             self.fleet.backlog_cap,
             fmt_f(self.fleet.heat_half_life),
-            self.fleet.heat_keys_cap
+            self.fleet.heat_keys_cap,
+            self.fleet.notify,
+            self.fleet.notify_interval_ms,
+            self.fleet.poll_interval_ms
         ));
         out
     }
@@ -582,6 +593,20 @@ pub struct FleetConfig {
     /// Max keys tracked by the heat sketch (prunes to the hottest
     /// half when exceeded).
     pub heat_keys_cap: usize,
+    /// Announce landed write-backs on the store's notify channel and
+    /// act on peers' announcements ([`crate::fleet::notify`]): the
+    /// refresh loop refreshes only the touched shard per announcement
+    /// instead of relying on the interval poll. Off = interval polling
+    /// alone (pre-notify behavior).
+    pub notify: bool,
+    /// Cadence (ms) at which the refresh loop checks the notify
+    /// channel for new announcements (one file-metadata stat when the
+    /// channel is idle).
+    pub notify_interval_ms: u64,
+    /// Interval (ms) of the full-store poll fallback: the safety net
+    /// that keeps a daemon fresh when announcements are lost (crashed
+    /// announcer, compaction race) or notify is off.
+    pub poll_interval_ms: u64,
 }
 
 impl Default for FleetConfig {
@@ -592,6 +617,9 @@ impl Default for FleetConfig {
             backlog_cap: 32,
             heat_half_life: 256.0,
             heat_keys_cap: 4096,
+            notify: true,
+            notify_interval_ms: 50,
+            poll_interval_ms: 5_000,
         }
     }
 }
@@ -609,6 +637,15 @@ impl FleetConfig {
         }
         if self.heat_keys_cap < 16 {
             return Err("fleet.heat_keys_cap must be >= 16".into());
+        }
+        if self.notify_interval_ms < 10 {
+            return Err("fleet.notify_interval_ms must be >= 10".into());
+        }
+        if self.poll_interval_ms < 100 {
+            return Err("fleet.poll_interval_ms must be >= 100".into());
+        }
+        if self.poll_interval_ms < self.notify_interval_ms {
+            return Err("fleet.poll_interval_ms must be >= fleet.notify_interval_ms".into());
         }
         Ok(())
     }
@@ -734,6 +771,9 @@ mod tests {
         c.fleet.backlog_cap = 8;
         c.fleet.heat_half_life = 64.0;
         c.fleet.heat_keys_cap = 512;
+        c.fleet.notify = false;
+        c.fleet.notify_interval_ms = 75;
+        c.fleet.poll_interval_ms = 1_234;
         let back = SearchConfig::from_toml_str(&c.to_toml()).unwrap();
         assert_eq!(back.fleet, c.fleet);
 
@@ -748,12 +788,17 @@ mod tests {
             (parsed.fleet.heat_half_life - FleetConfig::default().heat_half_life).abs() < 1e-12,
             "default kept"
         );
+        assert!(parsed.fleet.notify, "notify defaults on");
+        assert_eq!(parsed.fleet.poll_interval_ms, FleetConfig::default().poll_interval_ms);
 
         for bad_toml in [
             "[fleet]\nlease_ttl_ms = 10\n",
             "[fleet]\nbacklog_cap = 0\n",
             "[fleet]\nheat_half_life = 0.0\n",
             "[fleet]\nheat_keys_cap = 2\n",
+            "[fleet]\nnotify_interval_ms = 5\n",
+            "[fleet]\npoll_interval_ms = 50\n",
+            "[fleet]\nnotify_interval_ms = 400\npoll_interval_ms = 300\n",
         ] {
             assert!(SearchConfig::from_toml_str(bad_toml).is_err(), "{bad_toml}");
         }

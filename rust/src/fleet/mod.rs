@@ -22,6 +22,10 @@
 //! * [`admission`] — when the search queue saturates, a decayed
 //!   per-key request-rate sketch decides who gets the next slot: hot
 //!   keys are backlogged and pumped in heat order, cold keys are shed.
+//! * [`notify`] — the write-back push path: a landed search is
+//!   announced on an in-store channel, and peer daemons refresh only
+//!   the touched shard instead of interval-polling the whole store
+//!   (an interval poll remains as the fallback net).
 //!
 //! The serving daemon ([`crate::serve`], unix-gated for its socket
 //! support) wires these together; the store side lives in
@@ -30,8 +34,10 @@
 
 pub mod admission;
 pub mod inflight;
+pub mod notify;
 pub mod transport;
 
 pub use admission::{Backlog, HeatSketch, Offer, HEAT_BUCKETS};
 pub use inflight::InflightTable;
+pub use notify::{NotifyChannel, NotifyCursor, NotifyEvent};
 pub use transport::{Listener, ServeAddr, Stream};

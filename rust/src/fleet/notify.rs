@@ -1,0 +1,410 @@
+//! Write-back notify channel: push-path freshness for a daemon fleet.
+//!
+//! Before this channel existed, a daemon learned about other members'
+//! landed write-backs only by *polling* the shared store — either a
+//! per-request shard refresh (per-request disk I/O on the hot path) or
+//! an interval refresh of **all** shards (O(shards) stats per tick,
+//! regardless of what changed). The notify channel inverts that into a
+//! push path: the daemon whose search lands **announces** the
+//! write-back here, and every peer's refresh loop wakes up and
+//! refreshes *only the touched shard*.
+//!
+//! Mechanically the channel is one append-only sequence file under the
+//! store (`notify/events.jsonl`) plus a per-daemon in-memory cursor:
+//!
+//! ```text
+//! {"key":"mm1|a100|energy_aware|fp…","shard":3,"holder":"daemon-412-0-…","epoch":7}
+//! ```
+//!
+//! * **announce** — the writer loop appends one line per landed
+//!   write-back (O_APPEND whole-line writes interleave safely across
+//!   daemons, exactly like shard appends);
+//! * **cursor** — each daemon remembers the byte offset it has
+//!   consumed and tail-reads only complete new lines, skipping its own
+//!   announcements (its memory already holds what it wrote);
+//! * **epoch fencing** — announcements carry the in-flight claim epoch
+//!   the record landed under (same fencing discipline as
+//!   [`crate::store::lease`]); a stale epoch's announcement (a holder
+//!   that lost its claim to a reclaim) is dropped by the cursor rather
+//!   than triggering a refresh on behalf of a superseded writer;
+//! * **compaction** — an oversized events file is truncated under the
+//!   channel's lease and a generation file is bumped, so cursors reset
+//!   instead of mis-applying stale offsets (the same gen/shrink
+//!   discipline as shard rewrites).
+//!
+//! The channel is an *optimization*, never a correctness dependency:
+//! a torn line, a lost announcement (crashed announcer, compaction
+//! race), or a wedged notifier only delays freshness until the
+//! daemon's interval **poll fallback** does a full refresh. The
+//! serving daemon's miss path additionally keeps its own targeted
+//! refresh, so an exact key requested ahead of its notify still hits.
+
+use crate::store::lease::Lease;
+use crate::util::Json;
+use anyhow::Context as _;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Subdirectory of the store dir holding the notify channel.
+pub const NOTIFY_DIR: &str = "notify";
+/// The append-only announcement file.
+pub const EVENTS_FILE: &str = "events.jsonl";
+/// Compaction generation counter (cursors reset when it bumps).
+pub const GEN_FILE: &str = "gen";
+/// Lease name guarding events-file compaction.
+pub const NOTIFY_LEASE_NAME: &str = "compact";
+
+/// Compact (truncate + gen bump) once the events file passes this
+/// size. Generous: events are ~150 bytes, so this is thousands of
+/// announcements of slack for a slow cursor before any are dropped —
+/// and a dropped announcement only defers to the poll fallback.
+const COMPACT_BYTES: u64 = 1 << 20;
+
+/// Cursors fence stale epochs per key; bound the memory of that map on
+/// a long-running daemon (clearing it only re-admits a redundant
+/// refresh, never a wrong one).
+const SEEN_KEYS_CAP: usize = 8192;
+
+/// One announced write-back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NotifyEvent {
+    /// Serve key of the landed record.
+    pub key: String,
+    /// Shard the key routes to (what the receiver refreshes).
+    pub shard: usize,
+    /// Announcing daemon's holder id (receivers skip their own).
+    pub holder: String,
+    /// In-flight claim epoch the write-back landed under; 0 = the
+    /// record landed unclaimed (no fencing applies).
+    pub epoch: u64,
+}
+
+impl NotifyEvent {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("key", Json::str(self.key.clone())),
+            ("shard", Json::num(self.shard as f64)),
+            ("holder", Json::str(self.holder.clone())),
+            ("epoch", Json::num(self.epoch as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<NotifyEvent> {
+        Some(NotifyEvent {
+            key: v.get("key")?.as_str()?.to_string(),
+            shard: v.get("shard")?.as_f64()? as usize,
+            holder: v.get("holder")?.as_str()?.to_string(),
+            epoch: v.get("epoch")?.as_f64()? as u64,
+        })
+    }
+}
+
+/// One daemon's handle on the store's notify channel.
+#[derive(Debug)]
+pub struct NotifyChannel {
+    dir: PathBuf,
+    holder: String,
+    lease_ttl_ms: u64,
+}
+
+impl NotifyChannel {
+    pub fn open(
+        store_dir: &Path,
+        holder: &str,
+        lease_ttl_ms: u64,
+    ) -> anyhow::Result<NotifyChannel> {
+        let dir = store_dir.join(NOTIFY_DIR);
+        std::fs::create_dir_all(&dir).with_context(|| format!("create notify dir {dir:?}"))?;
+        Ok(NotifyChannel { dir, holder: holder.to_string(), lease_ttl_ms })
+    }
+
+    fn events_path(&self) -> PathBuf {
+        self.dir.join(EVENTS_FILE)
+    }
+
+    /// Announce one landed write-back (one O_APPEND line). Compacts the
+    /// channel opportunistically once it outgrows [`COMPACT_BYTES`].
+    pub fn announce(&self, key: &str, shard: usize, epoch: u64) -> anyhow::Result<()> {
+        let event = NotifyEvent {
+            key: key.to_string(),
+            shard,
+            holder: self.holder.clone(),
+            epoch,
+        };
+        crate::store::append_jsonl(&self.events_path(), &event.to_json())?;
+        let len = std::fs::metadata(self.events_path()).map(|m| m.len()).unwrap_or(0);
+        if len > COMPACT_BYTES {
+            self.compact()?;
+        }
+        Ok(())
+    }
+
+    /// Truncate the events file and bump the generation so cursors
+    /// reset. Lease-guarded: skipped (`Ok(false)`) while another member
+    /// compacts. Unread events are dropped — a cursor that lagged this
+    /// far behind is caught up by its daemon's poll fallback.
+    pub fn compact(&self) -> anyhow::Result<bool> {
+        let lease_path = self.dir.join(format!("{NOTIFY_LEASE_NAME}.json"));
+        let Some(lease) = Lease::acquire(&lease_path, &self.holder, self.lease_ttl_ms, None)?
+        else {
+            return Ok(false);
+        };
+        let res = (|| -> anyhow::Result<()> {
+            // Truncate first, then bump the gen: a cursor racing the
+            // window sees either old gen + shrunken file (caught by its
+            // `len < offset` check) or the bump — never a stale offset
+            // applied to content it did not read.
+            write_atomic(&self.events_path(), "")?;
+            let gen = read_gen(&self.dir) + 1;
+            write_atomic(&self.dir.join(GEN_FILE), &format!("{gen}\n"))
+        })();
+        let _ = lease.release();
+        res?;
+        Ok(true)
+    }
+
+    /// A cursor starting at the channel's current end: history from
+    /// before the open is already visible through the store open
+    /// itself, so only *new* announcements are delivered.
+    pub fn cursor(&self) -> anyhow::Result<NotifyCursor> {
+        let offset = std::fs::metadata(self.events_path()).map(|m| m.len()).unwrap_or(0);
+        Ok(NotifyCursor {
+            events_path: self.events_path(),
+            dir: self.dir.clone(),
+            holder: self.holder.clone(),
+            offset,
+            gen: read_gen(&self.dir),
+            seen: HashMap::new(),
+        })
+    }
+}
+
+/// One daemon's consumption state over the channel: byte offset of the
+/// consumed prefix, the compaction generation it was read under, and
+/// the per-key epoch fence.
+#[derive(Debug)]
+pub struct NotifyCursor {
+    events_path: PathBuf,
+    dir: PathBuf,
+    /// Own announcements are skipped — this daemon's memory already
+    /// holds everything it wrote.
+    holder: String,
+    offset: u64,
+    gen: u64,
+    /// Newest claim epoch delivered per key: a later announcement with
+    /// a LOWER epoch comes from a holder that lost the key to a
+    /// reclaim and is dropped (stale-epoch fencing).
+    seen: HashMap<String, u64>,
+}
+
+impl NotifyCursor {
+    /// Consume every new, foreign, unfenced announcement since the last
+    /// poll. Idle cost is one metadata stat (two with a gen file read);
+    /// malformed lines are skipped — garbage in the channel must never
+    /// wedge a daemon, the poll fallback is the correctness net.
+    pub fn poll(&mut self) -> anyhow::Result<Vec<NotifyEvent>> {
+        use std::io::{Read as _, Seek as _};
+        let disk_gen = read_gen(&self.dir);
+        let len = std::fs::metadata(&self.events_path).map(|m| m.len()).unwrap_or(0);
+        if disk_gen != self.gen || len < self.offset {
+            // Compacted (or replaced) under us: restart from the top of
+            // the new file. The epoch fence map survives the reset.
+            self.gen = disk_gen;
+            self.offset = 0;
+        }
+        if len == self.offset {
+            return Ok(Vec::new());
+        }
+        let mut f = std::fs::File::open(&self.events_path)
+            .with_context(|| format!("open notify events {:?}", self.events_path))?;
+        f.seek(std::io::SeekFrom::Start(self.offset))
+            .with_context(|| format!("seek notify events {:?}", self.events_path))?;
+        let mut buf = String::new();
+        f.read_to_string(&mut buf)
+            .with_context(|| format!("read notify tail {:?}", self.events_path))?;
+        // Complete lines only: a concurrent announce's unflushed tail
+        // stays unconsumed until the next poll.
+        let Some(end) = buf.rfind('\n') else { return Ok(Vec::new()) };
+        let complete = &buf[..=end];
+        let mut out = Vec::new();
+        for line in complete.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let Some(event) = Json::parse(line).ok().as_ref().and_then(NotifyEvent::from_json)
+            else {
+                continue;
+            };
+            if event.holder == self.holder {
+                continue;
+            }
+            if event.epoch > 0 {
+                if self.seen.len() >= SEEN_KEYS_CAP && !self.seen.contains_key(&event.key) {
+                    self.seen.clear();
+                }
+                match self.seen.get(&event.key) {
+                    Some(&newest) if event.epoch < newest => continue, // fenced
+                    _ => {
+                        self.seen.insert(event.key.clone(), event.epoch);
+                    }
+                }
+            }
+            out.push(event);
+        }
+        self.offset += complete.len() as u64;
+        Ok(out)
+    }
+}
+
+/// Last compaction generation of the channel (0 = never compacted).
+fn read_gen(dir: &Path) -> u64 {
+    std::fs::read_to_string(dir.join(GEN_FILE))
+        .ok()
+        .and_then(|t| t.trim().parse::<u64>().ok())
+        .unwrap_or(0)
+}
+
+fn write_atomic(path: &Path, text: &str) -> anyhow::Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, text).with_context(|| format!("write {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("replace {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ecokernel_notify_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn event_lines_roundtrip() {
+        let event = NotifyEvent {
+            key: "mm1|a100|energy_aware|fp".into(),
+            shard: 5,
+            holder: "daemon-1-0-abc".into(),
+            epoch: 7,
+        };
+        let line = event.to_json().to_string();
+        let back = NotifyEvent::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, event);
+        // Missing fields are unparseable, not a panic.
+        assert_eq!(NotifyEvent::from_json(&Json::parse(r#"{"key":"k"}"#).unwrap()), None);
+    }
+
+    #[test]
+    fn cursor_delivers_foreign_events_and_skips_own() {
+        let dir = tmp_dir("deliver");
+        let a = NotifyChannel::open(&dir, "daemon-a", 60_000).unwrap();
+        let b = NotifyChannel::open(&dir, "daemon-b", 60_000).unwrap();
+        let mut cur_b = b.cursor().unwrap();
+
+        a.announce("k1", 3, 1).unwrap();
+        b.announce("k2", 0, 1).unwrap(); // b's own: skipped by b's cursor
+        a.announce("k3", 7, 0).unwrap(); // unclaimed landing: epoch 0
+
+        let events = cur_b.poll().unwrap();
+        let keys: Vec<&str> = events.iter().map(|e| e.key.as_str()).collect();
+        assert_eq!(keys, ["k1", "k3"], "own announcements skipped");
+        assert_eq!(events[0].shard, 3);
+        assert_eq!(events[0].holder, "daemon-a");
+        assert!(cur_b.poll().unwrap().is_empty(), "consumed events are not re-delivered");
+
+        // A cursor opened NOW starts at the end: no history replay.
+        let mut late = b.cursor().unwrap();
+        assert!(late.poll().unwrap().is_empty());
+        a.announce("k4", 1, 2).unwrap();
+        assert_eq!(late.poll().unwrap().len(), 1, "only post-open events delivered");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The fencing pin: a stale epoch's announcement — a holder that
+    /// lost the key to a reclaim, announcing after the new owner — is
+    /// dropped; newer and equal epochs flow.
+    #[test]
+    fn stale_epoch_announcements_are_fenced() {
+        let dir = tmp_dir("fence");
+        let a = NotifyChannel::open(&dir, "daemon-a", 60_000).unwrap();
+        let b = NotifyChannel::open(&dir, "daemon-b", 60_000).unwrap();
+        let c = NotifyChannel::open(&dir, "daemon-c", 60_000).unwrap();
+        let mut cur = c.cursor().unwrap();
+
+        // b reclaimed the key (epoch 6) and landed first; a's write-back
+        // under its lost epoch-5 claim would have been fenced by the
+        // store — its announcement must be fenced here too.
+        b.announce("k", 2, 6).unwrap();
+        a.announce("k", 2, 5).unwrap();
+        let events = cur.poll().unwrap();
+        assert_eq!(events.len(), 1, "stale epoch dropped: {events:?}");
+        assert_eq!((events[0].holder.as_str(), events[0].epoch), ("daemon-b", 6));
+
+        // A newer reclaim's announcement still flows…
+        a.announce("k", 2, 7).unwrap();
+        assert_eq!(cur.poll().unwrap().len(), 1);
+        // …and epoch-0 (unclaimed) landings are never fenced.
+        a.announce("k", 2, 0).unwrap();
+        assert_eq!(cur.poll().unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_resets_cursors_without_wedging() {
+        let dir = tmp_dir("compact");
+        let a = NotifyChannel::open(&dir, "daemon-a", 60_000).unwrap();
+        let b = NotifyChannel::open(&dir, "daemon-b", 60_000).unwrap();
+        let mut cur = b.cursor().unwrap();
+        a.announce("k1", 0, 1).unwrap();
+        assert_eq!(cur.poll().unwrap().len(), 1);
+
+        // Compact: the file truncates and the generation bumps.
+        assert!(a.compact().unwrap());
+        a.announce("k2", 1, 1).unwrap();
+        let events = cur.poll().unwrap();
+        assert_eq!(events.len(), 1, "cursor reset to the new file: {events:?}");
+        assert_eq!(events[0].key, "k2");
+
+        // A second compaction while a foreign lease holds the channel
+        // is skipped, not an error.
+        let lease_path = dir.join(NOTIFY_DIR).join(format!("{NOTIFY_LEASE_NAME}.json"));
+        let foreign = Lease::acquire(&lease_path, "other", 60_000, None).unwrap().unwrap();
+        assert!(!a.compact().unwrap(), "foreign lease defers compaction");
+        foreign.release().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_left_unconsumed_and_garbage_is_skipped() {
+        let dir = tmp_dir("torn");
+        let a = NotifyChannel::open(&dir, "daemon-a", 60_000).unwrap();
+        let b = NotifyChannel::open(&dir, "daemon-b", 60_000).unwrap();
+        let mut cur = b.cursor().unwrap();
+        a.announce("k1", 0, 1).unwrap();
+
+        let events_path = dir.join(NOTIFY_DIR).join(EVENTS_FILE);
+        // Garbage whole line: skipped. Torn tail: left for the writer
+        // to finish.
+        let mut text = std::fs::read_to_string(&events_path).unwrap();
+        text.push_str("{not json}\n");
+        text.push_str(r#"{"key":"torn"#);
+        std::fs::write(&events_path, &text).unwrap();
+
+        let events = cur.poll().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].key, "k1");
+        // The writer finishes the torn line: it is delivered whole.
+        let mut text = std::fs::read_to_string(&events_path).unwrap();
+        text.push_str(r#"","shard":4,"holder":"daemon-a","epoch":2}"#);
+        text.push('\n');
+        std::fs::write(&events_path, &text).unwrap();
+        let events = cur.poll().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!((events[0].key.as_str(), events[0].shard), ("torn", 4));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

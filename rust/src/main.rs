@@ -67,7 +67,10 @@ USAGE:
                    [--shards N] [--quota N] [--max-records N] [--events out.jsonl]
                    (ADDR: unix:/path.sock or tcp:HOST:PORT; --socket PATH = unix)
   ecokernel query  --addr ADDR (--workload MM1 [--gpu a100] [--mode energy]
-                   [--wait] [--timeout S] | --stats | --shutdown) [--json]
+                   [--wait] [--timeout S] | --batch MM1,MV3,.. | --stats
+                   | --shutdown) [--json]
+                   (--batch sends every workload in ONE frame / one
+                   socket write; replies are positionally matched)
   ecokernel experiment <table1..table5|fig2..fig5|warmcold|all> [--paper]
   ecokernel cache <stats|list|prune|export> --store DIR
   ecokernel artifacts [--dir artifacts] [--list | --check | --run WORKLOAD_ID [--variant ID]]
@@ -307,6 +310,18 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
                 "write-backs : {} fenced, {} dropped",
                 s.n_writebacks_fenced, s.n_writebacks_dropped
             );
+            if s.n_batch_frames > 0 {
+                println!(
+                    "batching    : {} requests over {} frames ({:.1} per syscall)",
+                    s.n_batch_requests,
+                    s.n_batch_frames,
+                    s.n_batch_requests as f64 / s.n_batch_frames as f64
+                );
+            }
+            println!(
+                "freshness   : {} notify refreshes, {} poll-fallback refreshes",
+                s.n_notify_refresh, s.n_poll_refresh
+            );
             println!(
                 "store       : {} records in {} shards ({} evicted)",
                 s.n_records, s.n_shards, s.n_evicted_records
@@ -330,12 +345,6 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
         return Ok(());
     }
 
-    let wname = flags
-        .get("workload")
-        .ok_or_else(|| anyhow::anyhow!("--workload NAME (or --stats / --shutdown) is required"))?;
-    let workload = suites::by_name(wname).ok_or_else(|| {
-        anyhow::anyhow!("unknown workload '{wname}' (MM1..MM4, MV1..MV4, CONV1..CONV3)")
-    })?;
     let gpu = match flags.get("gpu") {
         Some(g) => Some(GpuArch::parse(g).ok_or_else(|| anyhow::anyhow!("unknown gpu '{g}'"))?),
         None => None,
@@ -346,6 +355,64 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
         }
         None => None,
     };
+
+    // Batched query: every listed workload in ONE frame (one socket
+    // write), replies positionally matched.
+    if let Some(spec) = flags.get("batch") {
+        let mut requests: Vec<ecokernel::serve::BatchRequest> = Vec::new();
+        for name in spec.split(',') {
+            let name = name.trim();
+            if name.is_empty() {
+                continue;
+            }
+            let w = suites::by_name(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown workload '{name}' (MM1..MM4, MV1..MV4, CONV1..CONV3)")
+            })?;
+            requests.push((w, gpu, mode));
+        }
+        anyhow::ensure!(!requests.is_empty(), "--batch needs a comma-separated workload list");
+        let replies = client.get_kernel_batch(&requests)?;
+        if flags.has("json") {
+            let entries = replies.iter().map(|r| match r {
+                Ok(k) => k.to_json(),
+                Err(e) => Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("code", Json::str(e.code.clone())),
+                    ("message", Json::str(e.message.clone())),
+                ]),
+            });
+            println!(
+                "{}",
+                Json::obj(vec![
+                    ("n", Json::num(replies.len() as f64)),
+                    ("replies", Json::arr(entries)),
+                ])
+            );
+        } else {
+            for ((w, _, _), reply) in requests.iter().zip(&replies) {
+                match reply {
+                    Ok(k) => println!(
+                        "{:<24} {:4} [{}]{}",
+                        w.to_string(),
+                        if k.hit { "hit" } else { "miss" },
+                        k.source.name(),
+                        if k.enqueued { " (search enqueued)" } else { "" }
+                    ),
+                    Err(e) => println!("{:<24} error {e}", w.to_string()),
+                }
+            }
+        }
+        return Ok(());
+    }
+
+    let wname = flags
+        .get("workload")
+        .ok_or_else(|| {
+            anyhow::anyhow!("--workload NAME (or --batch / --stats / --shutdown) is required")
+        })?;
+    let workload = suites::by_name(wname).ok_or_else(|| {
+        anyhow::anyhow!("unknown workload '{wname}' (MM1..MM4, MV1..MV4, CONV1..CONV3)")
+    })?;
     let reply = if flags.has("wait") {
         let timeout = flags.parse_num::<u64>("timeout")?.unwrap_or(300);
         client.get_kernel_wait(workload, gpu, mode, std::time::Duration::from_secs(timeout))?

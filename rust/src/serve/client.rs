@@ -1,8 +1,20 @@
 //! A small blocking client for the kernel-serving daemon (used by
 //! `ecokernel query` and the fleet examples). Transport-agnostic: the
 //! same frames flow over `unix:` and `tcp:` addresses.
+//!
+//! Two request shapes:
+//!
+//! * one frame per call ([`ServeClient::get_kernel`] etc.) — one write
+//!   syscall per request;
+//! * the pipelined batch path ([`ServeClient::queue_get_kernel`] +
+//!   [`ServeClient::flush_batch`], or [`ServeClient::get_kernel_batch`]
+//!   directly) — N queued requests packed into ONE `batch` frame and
+//!   ONE write syscall, answered by one positionally-matched
+//!   `batch` reply.
 
-use super::protocol::{KernelReply, Request, Response, StatsReply};
+use super::protocol::{
+    BatchItem, KernelReply, Reject, Request, Response, StatsReply, MAX_BATCH_ITEMS,
+};
 use crate::config::{GpuArch, SearchMode};
 use crate::fleet::{ServeAddr, Stream};
 use crate::workload::Workload;
@@ -10,19 +22,37 @@ use anyhow::{anyhow, Context as _};
 use std::io::{BufRead as _, BufReader, Write as _};
 use std::time::{Duration, Instant};
 
+/// One queued `get_kernel` for the batch path.
+pub type BatchRequest = (Workload, Option<GpuArch>, Option<SearchMode>);
+
+/// A positional failure inside a batch reply: the daemon rejected that
+/// entry (its siblings were still served).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchError {
+    pub code: String,
+    pub message: String,
+}
+
+impl std::fmt::Display for BatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.code, self.message)
+    }
+}
+
 /// One connection to a serving daemon. Requests are sequential
 /// (send a frame, read the reply line).
 pub struct ServeClient {
     stream: Stream,
     reader: BufReader<Stream>,
     next_id: u64,
+    queued: Vec<BatchRequest>,
 }
 
 impl ServeClient {
     pub fn connect(addr: &ServeAddr) -> anyhow::Result<ServeClient> {
         let stream = Stream::connect(addr)?;
         let reader = BufReader::new(stream.try_clone().context("clone daemon stream")?);
-        Ok(ServeClient { stream, reader, next_id: 0 })
+        Ok(ServeClient { stream, reader, next_id: 0, queued: Vec::new() })
     }
 
     fn fresh_id(&mut self) -> String {
@@ -30,11 +60,22 @@ impl ServeClient {
         format!("c{}", self.next_id)
     }
 
+    /// Send one frame line in ONE write syscall: the newline is packed
+    /// into the same buffer, never a second write (the whole point of
+    /// the batch path is frames-per-syscall, so the transport must not
+    /// quietly fragment).
+    fn send_line(&mut self, line: &str) -> anyhow::Result<()> {
+        let mut bytes = Vec::with_capacity(line.len() + 1);
+        bytes.extend_from_slice(line.as_bytes());
+        bytes.push(b'\n');
+        self.stream.write_all(&bytes).context("send frame")?;
+        self.stream.flush().context("flush frame")
+    }
+
     /// Send one raw line and read one raw reply line (tests use this to
     /// probe malformed / version-mismatched frames).
     pub fn roundtrip_raw(&mut self, line: &str) -> anyhow::Result<String> {
-        writeln!(self.stream, "{line}").context("send frame")?;
-        self.stream.flush().context("flush frame")?;
+        self.send_line(line)?;
         let mut reply = String::new();
         let n = self.reader.read_line(&mut reply).context("read reply")?;
         anyhow::ensure!(n > 0, "daemon closed the connection");
@@ -56,6 +97,92 @@ impl ServeClient {
         let id = self.fresh_id();
         match self.roundtrip(&Request::GetKernel { id, workload, gpu, mode })? {
             Response::Kernel(r) => Ok(r),
+            Response::Error { code, message, .. } => {
+                Err(anyhow!("daemon error [{code}]: {message}"))
+            }
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Queue one `get_kernel` for the next [`ServeClient::flush_batch`].
+    /// Nothing is written yet.
+    pub fn queue_get_kernel(
+        &mut self,
+        workload: Workload,
+        gpu: Option<GpuArch>,
+        mode: Option<SearchMode>,
+    ) {
+        self.queued.push((workload, gpu, mode));
+    }
+
+    /// Requests queued for the next flush.
+    pub fn queued_len(&self) -> usize {
+        self.queued.len()
+    }
+
+    /// Pack every queued request into ONE `batch` frame — one write
+    /// syscall — and return the positionally-matched replies (entry
+    /// *i* answers the *i*-th queued request). An empty queue is a
+    /// no-op; on a failed flush the queue is restored, so nothing a
+    /// caller queued is silently lost.
+    pub fn flush_batch(&mut self) -> anyhow::Result<Vec<Result<KernelReply, BatchError>>> {
+        if self.queued.is_empty() {
+            return Ok(Vec::new());
+        }
+        let requests = std::mem::take(&mut self.queued);
+        match self.get_kernel_batch(&requests) {
+            Ok(replies) => Ok(replies),
+            Err(e) => {
+                self.queued = requests;
+                Err(e)
+            }
+        }
+    }
+
+    /// N `get_kernel` requests in one frame over one socket write.
+    /// Batches are capped at [`MAX_BATCH_ITEMS`] — enforced here too,
+    /// so an oversized batch fails before any bytes hit the wire.
+    pub fn get_kernel_batch(
+        &mut self,
+        requests: &[BatchRequest],
+    ) -> anyhow::Result<Vec<Result<KernelReply, BatchError>>> {
+        anyhow::ensure!(!requests.is_empty(), "empty batch");
+        anyhow::ensure!(
+            requests.len() <= MAX_BATCH_ITEMS,
+            "batch of {} exceeds the {MAX_BATCH_ITEMS}-request cap (split it into chunks)",
+            requests.len()
+        );
+        let batch_id = self.fresh_id();
+        let items: Vec<Result<BatchItem, Reject>> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, &(workload, gpu, mode))| {
+                Ok(BatchItem { id: format!("{batch_id}.{i}"), workload, gpu, mode })
+            })
+            .collect();
+        match self.roundtrip(&Request::Batch { id: batch_id.clone(), items })? {
+            Response::Batch { id, replies } => {
+                anyhow::ensure!(
+                    id == batch_id,
+                    "batch reply id '{id}' does not echo request id '{batch_id}'"
+                );
+                anyhow::ensure!(
+                    replies.len() == requests.len(),
+                    "batch of {} requests got {} replies",
+                    requests.len(),
+                    replies.len()
+                );
+                replies
+                    .into_iter()
+                    .map(|reply| match reply {
+                        Response::Kernel(k) => Ok(Ok(k)),
+                        Response::Error { code, message, .. } => {
+                            Ok(Err(BatchError { code, message }))
+                        }
+                        other => Err(anyhow!("unexpected batch entry {other:?}")),
+                    })
+                    .collect()
+            }
             Response::Error { code, message, .. } => {
                 Err(anyhow!("daemon error [{code}]: {message}"))
             }

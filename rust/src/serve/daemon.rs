@@ -31,11 +31,28 @@
 //! index (candidate buckets, not an O(store) scan), so a cold-key
 //! burst stays cheap even on a large store.
 //!
+//! # Request batching
+//!
+//! A `batch` frame carries N `get_kernel` requests in one socket read
+//! and is answered with one positionally-matched reply frame in one
+//! socket write. The daemon answers a batch in two passes: first every
+//! position that needs no claim or refresh I/O (parse rejects and
+//! in-memory exact hits, per-shard read locks only), then the misses
+//! with their claim machinery — so an exact hit in a batch never
+//! waits on a sibling miss's in-store claim file ops.
+//!
 //! Fleet behavior (N daemons, one store — see [`crate::fleet`]):
 //!
-//! * the store opens in **fleet mode**: every miss first refreshes the
-//!   key's shard, so a search another daemon already wrote back is
-//!   served as a hit without ever searching here;
+//! * the store opens in **fleet mode**, and freshness is **push
+//!   first**: a landed write-back is announced on the store's notify
+//!   channel ([`crate::fleet::notify`]) and every peer's refresh loop
+//!   re-reads *only the touched shard*. An interval poll (full-store
+//!   refresh) remains as the fallback net — a crashed announcer can
+//!   delay freshness, never wedge it. The miss path still does one
+//!   targeted per-key shard refresh before claiming, so a request
+//!   racing ahead of its notify is served as a hit instead of
+//!   re-searched; exact hits already in memory pay NO per-request
+//!   refresh I/O at all;
 //! * duplicate misses coalesce at two levels — the in-memory `pending`
 //!   set within one daemon, and an in-store [`InflightTable`] claim
 //!   across daemons, so a key is searched **once fleet-wide**. Claims
@@ -52,10 +69,14 @@
 //!   old FIFO drop.
 
 use super::metrics::{reply_time_s, ServeMetrics};
-use super::protocol::{KernelReply, Request, Response, ServeSource, StatsReply, PROTOCOL_VERSION};
-use crate::config::SearchConfig;
+use super::protocol::{
+    BatchItem, KernelReply, Reject, Request, Response, ServeSource, StatsReply, PROTOCOL_VERSION,
+};
+use crate::config::{GpuArch, SearchConfig, SearchMode};
 use crate::coordinator::{EventLog, PoolEvent, SearchJob, WorkerPool};
-use crate::fleet::{Backlog, HeatSketch, InflightTable, Listener, Offer, ServeAddr, Stream};
+use crate::fleet::{
+    Backlog, HeatSketch, InflightTable, Listener, NotifyChannel, Offer, ServeAddr, Stream,
+};
 use crate::schedule::space::ScheduleSpace;
 use crate::store::lease::Lease;
 use crate::store::transfer::{relegalize, MAX_TRANSFER_DISTANCE};
@@ -65,7 +86,7 @@ use crate::store::{
 };
 use crate::util::Json;
 use crate::workload::Workload;
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::io::{BufRead as _, BufReader, Write as _};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -130,6 +151,9 @@ struct Ctx {
     search: SearchConfig,
     addr: ServeAddr,
     inflight: InflightTable,
+    /// The write-back push channel; `Some` in coordinated fleets with
+    /// `fleet.notify` on.
+    notify: Option<NotifyChannel>,
     log: Option<EventLog>,
 }
 
@@ -140,6 +164,9 @@ pub struct Daemon {
     ctx: Arc<Ctx>,
     writer: JoinHandle<()>,
     heartbeat: JoinHandle<()>,
+    /// Notify-driven targeted refresh + interval poll fallback; only
+    /// spawned for coordinated fleets.
+    refresher: Option<JoinHandle<()>>,
 }
 
 /// Handle to a daemon running on a background thread (in-process tests
@@ -201,6 +228,11 @@ impl Daemon {
         };
         let snapshot = Arc::new(store.snapshot());
         let inflight = InflightTable::open(&cfg.store_dir, &holder, fleet.lease_ttl_ms)?;
+        let notify = if fleet.coordinate && fleet.notify {
+            Some(NotifyChannel::open(&cfg.store_dir, &holder, fleet.lease_ttl_ms)?)
+        } else {
+            None
+        };
 
         let (tx, rx) = std::sync::mpsc::channel::<PoolEvent>();
         let pool =
@@ -228,6 +260,7 @@ impl Daemon {
             search: cfg.search,
             addr,
             inflight,
+            notify,
             log,
         });
         let writer = {
@@ -238,7 +271,13 @@ impl Daemon {
             let ctx = ctx.clone();
             std::thread::spawn(move || heartbeat_loop(&ctx))
         };
-        Ok(Daemon { listener, ctx, writer, heartbeat })
+        let refresher = if ctx.search.fleet.coordinate {
+            let ctx = ctx.clone();
+            Some(std::thread::spawn(move || refresh_loop(&ctx)))
+        } else {
+            None
+        };
+        Ok(Daemon { listener, ctx, writer, heartbeat, refresher })
     }
 
     /// Bind and serve on a background thread.
@@ -298,6 +337,9 @@ impl Daemon {
         }
         self.ctx.stopped.store(true, Ordering::SeqCst);
         let _ = self.heartbeat.join();
+        if let Some(refresher) = self.refresher {
+            let _ = refresher.join();
+        }
         #[cfg(unix)]
         if let ServeAddr::Unix(path) = &self.ctx.addr {
             let _ = std::fs::remove_file(path);
@@ -325,6 +367,85 @@ fn heartbeat_loop(ctx: &Ctx) {
         };
         for lease in &leases {
             let _ = lease.renew();
+        }
+    }
+}
+
+/// Fleet freshness loop: push first, poll as the net.
+///
+/// * **Notify path** — the cursor tail-reads the store's notify
+///   channel every `fleet.notify_interval_ms` (one metadata stat when
+///   idle) and, per delivered announcement, refreshes ONLY the touched
+///   shard — O(what changed), not O(shards). Own announcements and
+///   stale-epoch announcements never arrive (the cursor fences them).
+/// * **Poll fallback** — every `fleet.poll_interval_ms` a full
+///   [`ShardedStore::refresh`] catches anything the channel lost
+///   (crashed announcer, compaction race, notify disabled). A fallback
+///   pass that actually ingests changes counts as `n_poll_refresh`,
+///   so a healthy push path shows `n_poll_refresh == 0`.
+fn refresh_loop(ctx: &Ctx) {
+    let fleet = &ctx.search.fleet;
+    let mut cursor = match &ctx.notify {
+        Some(channel) => match channel.cursor() {
+            Ok(cursor) => Some(cursor),
+            Err(e) => {
+                eprintln!("serve: notify cursor failed ({e:#}); falling back to polling");
+                None
+            }
+        },
+        None => None,
+    };
+    // Clamp the tick so shutdown stays responsive even under a long
+    // notify interval; the poll fallback keeps its own schedule.
+    let tick = std::time::Duration::from_millis(fleet.notify_interval_ms.clamp(10, 1000));
+    let poll_every = std::time::Duration::from_millis(fleet.poll_interval_ms);
+    let mut last_poll = std::time::Instant::now();
+    while !ctx.stopped.load(Ordering::SeqCst) {
+        std::thread::sleep(tick);
+        if let Some(cursor) = cursor.as_mut() {
+            match cursor.poll() {
+                Ok(events) if !events.is_empty() => {
+                    // One refresh per touched shard, however many keys
+                    // landed in it.
+                    let shards: BTreeSet<usize> = events.iter().map(|e| e.shard).collect();
+                    let mut refreshed: BTreeSet<usize> = BTreeSet::new();
+                    let mut changed = 0usize;
+                    for &shard in &shards {
+                        match ctx.store.refresh_shard(shard) {
+                            Ok(n) => {
+                                changed += n;
+                                refreshed.insert(shard);
+                            }
+                            Err(e) => {
+                                eprintln!("serve: notify refresh of shard {shard} failed: {e:#}")
+                            }
+                        }
+                    }
+                    if changed > 0 {
+                        refresh_snapshot(ctx);
+                    }
+                    // Count only announcements whose shard refresh
+                    // SUCCEEDED — the stat is the push path's health
+                    // signal, and a daemon whose refreshes all fail is
+                    // not fresh no matter how many events it read.
+                    let acted = events.iter().filter(|e| refreshed.contains(&e.shard)).count();
+                    let mut state = ctx.state.lock().expect("state lock");
+                    state.metrics.n_notify_refresh += acted;
+                }
+                Ok(_) => {}
+                Err(e) => eprintln!("serve: notify poll failed: {e:#}"),
+            }
+        }
+        if last_poll.elapsed() >= poll_every {
+            last_poll = std::time::Instant::now();
+            match ctx.store.refresh() {
+                Ok(changed) if changed > 0 => {
+                    refresh_snapshot(ctx);
+                    ctx.state.lock().expect("state lock").metrics.n_poll_refresh += 1;
+                }
+                Ok(_) => {}
+                Err(e) => eprintln!("serve: poll refresh failed: {e:#}"),
+            }
         }
     }
 }
@@ -583,6 +704,18 @@ fn finish_writeback(ctx: &Ctx, job: &PendingWriteback, landing: Landing) {
         state.pending.remove(&job.key);
         state.claims.remove(&job.key)
     };
+    // Push path: announce the landed record (with the claim epoch it
+    // landed under, for the receivers' stale-epoch fence) BEFORE the
+    // claim is released — peers wake and refresh only this shard. A
+    // failed announce only defers to their poll fallback.
+    if accepted {
+        if let Some(notify) = &ctx.notify {
+            let epoch = claim.as_ref().map(|lease| lease.epoch()).unwrap_or(0);
+            if let Err(e) = notify.announce(&job.key, ctx.store.shard_of(&job.key), epoch) {
+                eprintln!("serve: notify announce failed for {}: {e:#}", job.key);
+            }
+        }
+    }
     // Released only now — after the record is durably appended — so
     // another daemon's claim can never race ahead of the data.
     if let Some(lease) = claim {
@@ -718,6 +851,7 @@ fn handle_frame(ctx: &Ctx, line: &str) -> (Json, bool) {
         Ok(Request::GetKernel { id, workload, gpu, mode }) => {
             (serve_get_kernel(ctx, id, workload, gpu, mode).to_json(), false)
         }
+        Ok(Request::Batch { id, items }) => (serve_batch(ctx, id, items).to_json(), false),
     }
 }
 
@@ -757,20 +891,19 @@ fn stats_reply(ctx: &Ctx, id: String) -> StatsReply {
         pending_keys: state.pending.len(),
         n_writebacks_fenced: state.metrics.n_writebacks_fenced,
         n_writebacks_dropped: state.metrics.n_writebacks_dropped,
+        n_batch_frames: state.metrics.n_batch_frames,
+        n_batch_requests: state.metrics.n_batch_requests,
+        n_notify_refresh: state.metrics.n_notify_refresh,
+        n_poll_refresh: state.metrics.n_poll_refresh,
         shard_records,
         heat_histogram: state.heat.histogram().to_vec(),
     }
 }
 
-fn serve_get_kernel(
-    ctx: &Ctx,
-    id: String,
-    workload: Workload,
-    gpu: Option<crate::config::GpuArch>,
-    mode: Option<crate::config::SearchMode>,
-) -> KernelReply {
-    // The effective search config of this request: template + overrides.
-    // Workers never write back themselves — the daemon owns the store.
+/// The effective search config of one request: daemon template +
+/// per-request overrides. Workers never write back themselves — the
+/// daemon owns the store.
+fn request_cfg(ctx: &Ctx, gpu: Option<GpuArch>, mode: Option<SearchMode>) -> SearchConfig {
     let mut cfg = ctx.search.clone();
     if let Some(g) = gpu {
         cfg.gpu = g;
@@ -780,51 +913,94 @@ fn serve_get_kernel(
     }
     cfg.store.dir = None;
     cfg.store.write_back = false;
+    cfg
+}
+
+fn serve_get_kernel(
+    ctx: &Ctx,
+    id: String,
+    workload: Workload,
+    gpu: Option<GpuArch>,
+    mode: Option<SearchMode>,
+) -> KernelReply {
+    let cfg = request_cfg(ctx, gpu, mode);
     let key = serve_key(&workload.id(), cfg.gpu.name(), cfg.mode.name(), &config_fingerprint(&cfg));
 
     // Heat credit under the small lock; released before any store I/O.
     ctx.state.lock().expect("state lock").heat.touch(&key);
 
-    // Fleet refresh: a search another daemon wrote back since we last
-    // looked at this shard turns this request into a plain hit. Takes
-    // only the key's shard lock — hits on other shards keep flowing
-    // even while this refresh waits on disk.
+    // Exact hit straight from memory: NO per-request refresh I/O — the
+    // notify/poll refresh loop streams foreign write-backs in off the
+    // request path. A request racing ahead of its notify falls through
+    // to the memory-miss path below, whose targeted refresh still
+    // finds the landed record.
+    if let Some(rec) = ctx.store.get(workload, &cfg) {
+        return serve_hit(ctx, id, &key, &rec);
+    }
+    serve_memory_miss(ctx, id, workload, cfg, key)
+}
+
+/// Serve an exact hit: the recorded, measured kernel, zero cost.
+fn serve_hit(ctx: &Ctx, id: String, key: &str, rec: &TuningRecord) -> KernelReply {
+    if let Err(e) = ctx.store.mark_served(key) {
+        eprintln!("serve: LRU touch failed for {key}: {e:#}");
+    }
+    let t = reply_time_s(true, ctx.store.shard_len_for(key));
+    let queue_depth = {
+        let mut state = ctx.state.lock().expect("state lock");
+        state.metrics.record_reply(true, t);
+        state.pending.len()
+    };
+    emit_served(ctx, key, "hit", ServeSource::Store, t);
+    KernelReply {
+        id,
+        hit: true,
+        source: ServeSource::Store,
+        schedule: rec.best.schedule,
+        latency_s: rec.best.latency_s,
+        energy_j: rec.best.energy_j,
+        avg_power_w: rec.best.avg_power_w,
+        enqueued: false,
+        queue_depth,
+        reply_time_s: t,
+    }
+}
+
+/// The key is not in memory: one targeted fleet refresh of its shard —
+/// did another daemon land this key since the notify loop last ran? —
+/// then the real miss machinery. Takes only the key's shard lock, so
+/// hits on other shards keep flowing while this waits on disk.
+fn serve_memory_miss(
+    ctx: &Ctx,
+    id: String,
+    workload: Workload,
+    cfg: SearchConfig,
+    key: String,
+) -> KernelReply {
     match ctx.store.refresh_key(&key) {
         Ok(0) => {}
-        Ok(_) => refresh_snapshot(ctx),
+        Ok(_) => {
+            refresh_snapshot(ctx);
+            if let Some(rec) = ctx.store.get(workload, &cfg) {
+                return serve_hit(ctx, id, &key, &rec);
+            }
+        }
         Err(e) => eprintln!("serve: shard refresh failed for {key}: {e:#}"),
     }
+    serve_miss(ctx, id, workload, cfg, key)
+}
+
+/// A true miss: best warm guess now (the store's incremental neighbor
+/// index — candidate buckets, not a full scan), real search in the
+/// background.
+fn serve_miss(
+    ctx: &Ctx,
+    id: String,
+    workload: Workload,
+    cfg: SearchConfig,
+    key: String,
+) -> KernelReply {
     let shard_len = ctx.store.shard_len_for(&key);
-
-    // Exact hit: reply with the recorded kernel, zero cost.
-    if let Some(rec) = ctx.store.get(workload, &cfg) {
-        if let Err(e) = ctx.store.mark_served(&key) {
-            eprintln!("serve: LRU touch failed for {key}: {e:#}");
-        }
-        let t = reply_time_s(true, shard_len);
-        let queue_depth = {
-            let mut state = ctx.state.lock().expect("state lock");
-            state.metrics.record_reply(true, t);
-            state.pending.len()
-        };
-        emit_served(ctx, &key, "hit", ServeSource::Store, t);
-        return KernelReply {
-            id,
-            hit: true,
-            source: ServeSource::Store,
-            schedule: rec.best.schedule,
-            latency_s: rec.best.latency_s,
-            energy_j: rec.best.energy_j,
-            avg_power_w: rec.best.avg_power_w,
-            enqueued: false,
-            queue_depth,
-            reply_time_s: t,
-        };
-    }
-
-    // Miss: best warm guess now (the store's incremental neighbor
-    // index — candidate buckets, not a full scan), real search in the
-    // background.
     let spec = cfg.gpu.spec();
     let space = ScheduleSpace::new(workload, &spec);
     let guess = {
@@ -988,6 +1164,74 @@ fn serve_get_kernel(
         queue_depth,
         reply_time_s: t,
     }
+}
+
+/// Answer one `batch` frame: N `get_kernel` requests in, N
+/// positionally-matched replies out, all in one socket write.
+///
+/// Two passes keep the cheap positions cheap. Pass 1 answers
+/// everything that needs no claim or refresh I/O — parse rejects
+/// become positional error frames and in-memory exact hits are served
+/// under per-shard read locks only — so a hit at position *k* never
+/// waits behind a sibling miss's in-store claim file ops. Pass 2 runs
+/// the misses through the normal machinery (targeted shard refresh,
+/// fleet claim, warm guess, admission); duplicates WITHIN the batch
+/// coalesce exactly like duplicates across frames (the first reserves
+/// `pending`, the rest ride along).
+fn serve_batch(ctx: &Ctx, id: String, items: Vec<Result<BatchItem, Reject>>) -> Response {
+    let n = items.len();
+    let mut replies: Vec<Option<Response>> = vec![None; n];
+    let mut misses: Vec<(usize, BatchItem, SearchConfig, String)> = Vec::new();
+    for (i, item) in items.into_iter().enumerate() {
+        match item {
+            Err(rej) => {
+                replies[i] = Some(Response::Error {
+                    id: rej.id,
+                    code: rej.code.to_string(),
+                    message: rej.message,
+                });
+            }
+            Ok(item) => {
+                let cfg = request_cfg(ctx, item.gpu, item.mode);
+                let key = serve_key(
+                    &item.workload.id(),
+                    cfg.gpu.name(),
+                    cfg.mode.name(),
+                    &config_fingerprint(&cfg),
+                );
+                ctx.state.lock().expect("state lock").heat.touch(&key);
+                if let Some(rec) = ctx.store.get(item.workload, &cfg) {
+                    let hit = serve_hit(ctx, item.id.clone(), &key, &rec);
+                    replies[i] = Some(Response::Kernel(hit));
+                } else {
+                    misses.push((i, item, cfg, key));
+                }
+            }
+        }
+    }
+    let mut refreshed_keys: HashSet<String> = HashSet::new();
+    for (i, item, cfg, key) in misses {
+        let reply = if refreshed_keys.insert(key.clone()) {
+            serve_memory_miss(ctx, item.id, item.workload, cfg, key)
+        } else if let Some(rec) = ctx.store.get(item.workload, &cfg) {
+            // An earlier duplicate's targeted refresh pulled the key in
+            // (another daemon had landed it): plain hit, no re-refresh.
+            serve_hit(ctx, item.id, &key, &rec)
+        } else {
+            // An earlier position already paid this key's targeted
+            // refresh within this frame — skip straight to the miss
+            // machinery, where `pending` coalesces the search.
+            serve_miss(ctx, item.id, item.workload, cfg, key)
+        };
+        replies[i] = Some(Response::Kernel(reply));
+    }
+    {
+        let mut state = ctx.state.lock().expect("state lock");
+        state.metrics.n_batch_frames += 1;
+        state.metrics.n_batch_requests += n;
+    }
+    let replies = replies.into_iter().map(|r| r.expect("every position answered")).collect();
+    Response::Batch { id, replies }
 }
 
 fn emit_served(ctx: &Ctx, key: &str, result: &str, source: ServeSource, reply_time: f64) {

@@ -49,6 +49,19 @@ pub struct ServeMetrics {
     /// NVML measurements paid by completed background searches whose
     /// write-back landed.
     pub measurements_paid: usize,
+    /// `batch` frames served — each one is a single socket write
+    /// carrying N `get_kernel` requests, so frames-per-syscall is
+    /// `n_batch_requests / n_batch_frames`.
+    pub n_batch_frames: usize,
+    /// `get_kernel` requests that arrived inside `batch` frames
+    /// (each also counted in `n_requests`/`n_hits`/`n_misses`).
+    pub n_batch_requests: usize,
+    /// Foreign write-back announcements the notify refresh loop acted
+    /// on — each one refreshed only the touched shard (the push path).
+    pub n_notify_refresh: usize,
+    /// Interval-poll fallback passes that actually ingested changes
+    /// the notify channel had missed (0 on a healthy push path).
+    pub n_poll_refresh: usize,
     /// Ring buffer of the last [`REPLY_WINDOW`] reply times.
     reply_times_s: Vec<f64>,
     reply_next: usize,
@@ -96,6 +109,7 @@ impl ServeMetrics {
         format!(
             "requests={} hits={} misses={} hit_rate={:.2} enqueued={} searched={} \
              shed={} fleet_coalesced={} evicted={} wb_fenced={} wb_dropped={} \
+             batches={}/{} notify_refresh={} poll_refresh={} \
              p50={:.2}ms p99={:.2}ms measurements_paid={}",
             self.n_requests,
             self.n_hits,
@@ -108,6 +122,10 @@ impl ServeMetrics {
             self.n_evicted_records,
             self.n_writebacks_fenced,
             self.n_writebacks_dropped,
+            self.n_batch_requests,
+            self.n_batch_frames,
+            self.n_notify_refresh,
+            self.n_poll_refresh,
             self.p50_reply_s() * 1e3,
             self.p99_reply_s() * 1e3,
             self.measurements_paid,

@@ -8,7 +8,8 @@
 //!
 //! * [`protocol`] — versioned, line-delimited JSON frames
 //!   (request/response/error, stable error codes), identical on both
-//!   wires;
+//!   wires; a `batch` frame carries N `get_kernel` requests per
+//!   socket write with positionally-matched replies;
 //! * [`daemon`] — the socket server: exact hits reply instantly from
 //!   the sharded store; misses reply with a warm-start guess and
 //!   enqueue a real search on a daemon-owned
@@ -34,9 +35,10 @@ pub mod metrics;
 pub mod protocol;
 
 pub use crate::fleet::ServeAddr;
-pub use client::ServeClient;
+pub use client::{BatchError, BatchRequest, ServeClient};
 pub use daemon::{Daemon, DaemonConfig, DaemonHandle};
 pub use metrics::ServeMetrics;
 pub use protocol::{
-    error_code, KernelReply, Request, Response, ServeSource, StatsReply, PROTOCOL_VERSION,
+    error_code, BatchItem, KernelReply, Reject, Request, Response, ServeSource, StatsReply,
+    MAX_BATCH_ITEMS, PROTOCOL_VERSION,
 };

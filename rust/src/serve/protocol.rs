@@ -10,9 +10,19 @@
 //!
 //! * `get_kernel` — workload (suite name like `"MM1"` or a workload
 //!   object), optional `gpu` and `mode` overrides;
+//! * `batch` — N `get_kernel` requests in ONE frame (`"requests"`
+//!   array), answered by one `batch` reply whose `"replies"` array is
+//!   positionally matched — request *i* gets reply *i*. A malformed
+//!   entry yields an error frame at its position; siblings are still
+//!   served. This is the pipelined path: a client packs its queue
+//!   into one write syscall instead of one frame per write;
 //! * `stats` — serving metrics + store counters;
 //! * `shutdown` — graceful daemon stop (acked before the socket
 //!   closes).
+//!
+//! Single `get_kernel` frames are untouched by batching — a v-current
+//! daemon answers them byte-identically to the pre-batch wire format
+//! (pinned by test), so old clients keep working unchanged.
 //!
 //! See README.md ("Serving daemon") for the full frame reference.
 
@@ -27,6 +37,10 @@ use crate::workload::{suites, Workload};
 /// Version of the wire protocol; a frame with any other `"v"` is
 /// rejected with [`error_code::VERSION_MISMATCH`].
 pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Hard cap on `batch` frame size: a runaway client must not make the
+/// daemon buffer an unbounded reply frame.
+pub const MAX_BATCH_ITEMS: usize = 1024;
 
 /// Stable error codes carried by error frames.
 pub mod error_code {
@@ -50,8 +64,27 @@ pub enum Request {
         gpu: Option<GpuArch>,
         mode: Option<SearchMode>,
     },
+    /// N `get_kernel` requests in one frame. Entries parse
+    /// independently: a malformed one carries its [`Reject`] (answered
+    /// as an error frame at that position) without failing siblings.
+    Batch {
+        id: String,
+        items: Vec<Result<BatchItem, Reject>>,
+    },
     Stats { id: String },
     Shutdown { id: String },
+}
+
+/// One `get_kernel` entry inside a `batch` frame: the same fields as a
+/// single request, with an optional per-entry `id` (defaulted to
+/// `<batch id>.<index>` — replies are matched by position, the ids are
+/// for the client's bookkeeping).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchItem {
+    pub id: String,
+    pub workload: Workload,
+    pub gpu: Option<GpuArch>,
+    pub mode: Option<SearchMode>,
 }
 
 /// A request the daemon refuses, with the code + message for the error
@@ -96,6 +129,26 @@ impl Request {
                     fields.push(("mode", Json::str(m.name())));
                 }
             }
+            Request::Batch { id, items } => {
+                fields.push(("op", Json::str("batch")));
+                fields.push(("id", Json::str(id.clone())));
+                // Only well-formed entries encode: `Err` items exist
+                // solely on the parse side (a client never builds one).
+                let entries = items.iter().filter_map(|item| item.as_ref().ok()).map(|item| {
+                    let mut f = vec![
+                        ("id", Json::str(item.id.clone())),
+                        ("workload", workload_to_json(&item.workload)),
+                    ];
+                    if let Some(g) = item.gpu {
+                        f.push(("gpu", Json::str(g.name())));
+                    }
+                    if let Some(m) = item.mode {
+                        f.push(("mode", Json::str(m.name())));
+                    }
+                    Json::obj(f)
+                });
+                fields.push(("requests", Json::arr(entries)));
+            }
             Request::Stats { id } => {
                 fields.push(("op", Json::str("stats")));
                 fields.push(("id", Json::str(id.clone())));
@@ -137,37 +190,40 @@ impl Request {
             "stats" => Ok(Request::Stats { id }),
             "shutdown" => Ok(Request::Shutdown { id }),
             "get_kernel" => {
-                let wv = v.get("workload").ok_or_else(|| {
+                let (workload, gpu, mode) = parse_get_kernel_fields(&v, &id)?;
+                Ok(Request::GetKernel { id, workload, gpu, mode })
+            }
+            "batch" => {
+                let entries = v.get("requests").and_then(|r| r.as_arr()).ok_or_else(|| {
                     Reject::new(
                         Some(id.clone()),
                         error_code::BAD_REQUEST,
-                        "get_kernel missing 'workload'",
+                        "batch missing 'requests' array",
                     )
                 })?;
-                let workload = parse_workload(wv).map_err(|msg| {
-                    Reject::new(Some(id.clone()), error_code::UNKNOWN_WORKLOAD, msg)
-                })?;
-                let gpu = match v.get("gpu").and_then(|x| x.as_str()) {
-                    None => None,
-                    Some(name) => Some(GpuArch::parse(name).ok_or_else(|| {
-                        Reject::new(
-                            Some(id.clone()),
-                            error_code::BAD_REQUEST,
-                            format!("unknown gpu '{name}'"),
-                        )
-                    })?),
-                };
-                let mode = match v.get("mode").and_then(|x| x.as_str()) {
-                    None => None,
-                    Some(name) => Some(SearchMode::parse(name).ok_or_else(|| {
-                        Reject::new(
-                            Some(id.clone()),
-                            error_code::BAD_REQUEST,
-                            format!("unknown mode '{name}'"),
-                        )
-                    })?),
-                };
-                Ok(Request::GetKernel { id, workload, gpu, mode })
+                if entries.is_empty() {
+                    return Err(Reject::new(
+                        Some(id),
+                        error_code::BAD_REQUEST,
+                        "batch 'requests' must not be empty",
+                    ));
+                }
+                if entries.len() > MAX_BATCH_ITEMS {
+                    return Err(Reject::new(
+                        Some(id),
+                        error_code::BAD_REQUEST,
+                        format!(
+                            "batch of {} exceeds the {MAX_BATCH_ITEMS}-request cap",
+                            entries.len()
+                        ),
+                    ));
+                }
+                let items = entries
+                    .iter()
+                    .enumerate()
+                    .map(|(i, entry)| parse_batch_item(entry, &id, i))
+                    .collect();
+                Ok(Request::Batch { id, items })
             }
             other => Err(Reject::new(
                 Some(id),
@@ -176,6 +232,65 @@ impl Request {
             )),
         }
     }
+}
+
+/// The `workload`/`gpu`/`mode` fields of a `get_kernel`-shaped object
+/// (a single request frame or one `batch` entry).
+fn parse_get_kernel_fields(
+    v: &Json,
+    id: &str,
+) -> Result<(Workload, Option<GpuArch>, Option<SearchMode>), Reject> {
+    let wv = v.get("workload").ok_or_else(|| {
+        Reject::new(
+            Some(id.to_string()),
+            error_code::BAD_REQUEST,
+            "get_kernel missing 'workload'",
+        )
+    })?;
+    let workload = parse_workload(wv)
+        .map_err(|msg| Reject::new(Some(id.to_string()), error_code::UNKNOWN_WORKLOAD, msg))?;
+    let gpu = match v.get("gpu").and_then(|x| x.as_str()) {
+        None => None,
+        Some(name) => Some(GpuArch::parse(name).ok_or_else(|| {
+            Reject::new(
+                Some(id.to_string()),
+                error_code::BAD_REQUEST,
+                format!("unknown gpu '{name}'"),
+            )
+        })?),
+    };
+    let mode = match v.get("mode").and_then(|x| x.as_str()) {
+        None => None,
+        Some(name) => Some(SearchMode::parse(name).ok_or_else(|| {
+            Reject::new(
+                Some(id.to_string()),
+                error_code::BAD_REQUEST,
+                format!("unknown mode '{name}'"),
+            )
+        })?),
+    };
+    Ok((workload, gpu, mode))
+}
+
+/// One `batch` entry. A malformed entry rejects only its own position
+/// (carrying its effective id for the error frame), never the batch.
+fn parse_batch_item(v: &Json, batch_id: &str, index: usize) -> Result<BatchItem, Reject> {
+    let id = v
+        .get("id")
+        .and_then(|x| x.as_str())
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| format!("{batch_id}.{index}"));
+    if let Some(op) = v.get("op").and_then(|x| x.as_str()) {
+        if op != "get_kernel" {
+            return Err(Reject::new(
+                Some(id),
+                error_code::BAD_REQUEST,
+                format!("batch entries must be get_kernel requests, not '{op}'"),
+            ));
+        }
+    }
+    let (workload, gpu, mode) = parse_get_kernel_fields(v, &id)?;
+    Ok(BatchItem { id, workload, gpu, mode })
 }
 
 /// A workload field: a suite name string (`"MM1"`) or a workload object.
@@ -319,6 +434,18 @@ pub struct StatsReply {
     /// Finished searches whose write-back was dropped for good (absent
     /// in older frames = 0).
     pub n_writebacks_dropped: usize,
+    /// `batch` frames served — one socket write each (absent in
+    /// pre-batch frames = 0).
+    pub n_batch_frames: usize,
+    /// `get_kernel` requests that arrived inside `batch` frames
+    /// (absent in pre-batch frames = 0).
+    pub n_batch_requests: usize,
+    /// Foreign write-back announcements acted on by the notify refresh
+    /// loop — the push path (absent in older frames = 0).
+    pub n_notify_refresh: usize,
+    /// Interval-poll fallback passes that ingested changes the notify
+    /// channel missed (absent in older frames = 0).
+    pub n_poll_refresh: usize,
     /// Records per shard (the store-size histogram).
     pub shard_records: Vec<usize>,
     /// Key counts per heat bucket (log2 buckets, coldest first — see
@@ -355,6 +482,10 @@ impl StatsReply {
                     ("pending_keys", Json::num(self.pending_keys as f64)),
                     ("n_writebacks_fenced", Json::num(self.n_writebacks_fenced as f64)),
                     ("n_writebacks_dropped", Json::num(self.n_writebacks_dropped as f64)),
+                    ("n_batch_frames", Json::num(self.n_batch_frames as f64)),
+                    ("n_batch_requests", Json::num(self.n_batch_requests as f64)),
+                    ("n_notify_refresh", Json::num(self.n_notify_refresh as f64)),
+                    ("n_poll_refresh", Json::num(self.n_poll_refresh as f64)),
                     (
                         "shard_records",
                         Json::arr(self.shard_records.iter().map(|&n| Json::num(n as f64))),
@@ -394,6 +525,10 @@ impl StatsReply {
             pending_keys: opt_usize(s, "pending_keys"),
             n_writebacks_fenced: opt_usize(s, "n_writebacks_fenced"),
             n_writebacks_dropped: opt_usize(s, "n_writebacks_dropped"),
+            n_batch_frames: opt_usize(s, "n_batch_frames"),
+            n_batch_requests: opt_usize(s, "n_batch_requests"),
+            n_notify_refresh: opt_usize(s, "n_notify_refresh"),
+            n_poll_refresh: opt_usize(s, "n_poll_refresh"),
             shard_records: opt_usize_arr(s, "shard_records"),
             heat_histogram: opt_usize_arr(s, "heat_histogram"),
         })
@@ -415,6 +550,9 @@ fn opt_usize_arr(v: &Json, key: &str) -> Vec<usize> {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
     Kernel(KernelReply),
+    /// Positionally-matched replies to a `batch` frame: entry *i*
+    /// answers request *i*, and is a `Kernel` or `Error` frame.
+    Batch { id: String, replies: Vec<Response> },
     Stats(StatsReply),
     ShutdownAck { id: String },
     Error { id: Option<String>, code: String, message: String },
@@ -424,6 +562,13 @@ impl Response {
     pub fn to_json(&self) -> Json {
         match self {
             Response::Kernel(r) => r.to_json(),
+            Response::Batch { id, replies } => Json::obj(vec![
+                ("v", Json::num(PROTOCOL_VERSION as f64)),
+                ("id", Json::str(id.clone())),
+                ("ok", Json::Bool(true)),
+                ("op", Json::str("batch")),
+                ("replies", Json::arr(replies.iter().map(|r| r.to_json()))),
+            ]),
             Response::Stats(r) => r.to_json(),
             Response::ShutdownAck { id } => Json::obj(vec![
                 ("v", Json::num(PROTOCOL_VERSION as f64)),
@@ -453,7 +598,13 @@ impl Response {
     }
 
     pub fn parse_line(line: &str) -> Result<Response, String> {
-        let v = Json::parse(line)?;
+        Response::from_json(&Json::parse(line)?)
+    }
+
+    /// Parse one response frame object — [`Response::parse_line`]
+    /// minus the text parse; `batch` replies nest full frames, so this
+    /// recurses one level into the `"replies"` array.
+    pub fn from_json(v: &Json) -> Result<Response, String> {
         let version = v.get("v").and_then(|x| x.as_f64()).ok_or("frame missing 'v'")? as u64;
         if version != PROTOCOL_VERSION {
             return Err(format!(
@@ -469,10 +620,23 @@ impl Response {
                 message: get_str(e, "message")?,
             });
         }
-        match get_str(&v, "op")?.as_str() {
-            "get_kernel" => Ok(Response::Kernel(KernelReply::from_json(&v)?)),
-            "stats" => Ok(Response::Stats(StatsReply::from_json(&v)?)),
-            "shutdown" => Ok(Response::ShutdownAck { id: get_str(&v, "id")? }),
+        match get_str(v, "op")?.as_str() {
+            "get_kernel" => Ok(Response::Kernel(KernelReply::from_json(v)?)),
+            "batch" => {
+                let arr =
+                    v.get("replies").and_then(|r| r.as_arr()).ok_or("batch missing 'replies'")?;
+                let mut replies = Vec::with_capacity(arr.len());
+                for entry in arr {
+                    let reply = Response::from_json(entry)?;
+                    if matches!(reply, Response::Batch { .. }) {
+                        return Err("batch replies cannot nest".to_string());
+                    }
+                    replies.push(reply);
+                }
+                Ok(Response::Batch { id: get_str(v, "id")?, replies })
+            }
+            "stats" => Ok(Response::Stats(StatsReply::from_json(v)?)),
+            "shutdown" => Ok(Response::ShutdownAck { id: get_str(v, "id")? }),
             other => Err(format!("unknown response op '{other}'")),
         }
     }
@@ -613,6 +777,10 @@ mod tests {
             pending_keys: 5,
             n_writebacks_fenced: 1,
             n_writebacks_dropped: 2,
+            n_batch_frames: 3,
+            n_batch_requests: 17,
+            n_notify_refresh: 6,
+            n_poll_refresh: 1,
             shard_records: vec![2, 0, 4, 3],
             heat_histogram: vec![1, 0, 2, 0, 0, 0, 0, 1],
         };
@@ -639,11 +807,166 @@ mod tests {
                 assert_eq!(back.pending_keys, 0);
                 assert_eq!(back.n_writebacks_fenced, 0);
                 assert_eq!(back.n_writebacks_dropped, 0);
+                assert_eq!(back.n_batch_frames, 0);
+                assert_eq!(back.n_batch_requests, 0);
+                assert_eq!(back.n_notify_refresh, 0);
+                assert_eq!(back.n_poll_refresh, 0);
                 assert!(back.shard_records.is_empty());
                 assert!(back.heat_histogram.is_empty());
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn batch_request_roundtrip() {
+        let req = Request::Batch {
+            id: "b1".into(),
+            items: vec![
+                Ok(BatchItem {
+                    id: "b1.0".into(),
+                    workload: suites::MM1,
+                    gpu: Some(GpuArch::A100),
+                    mode: Some(SearchMode::EnergyAware),
+                }),
+                Ok(BatchItem { id: "b1.1".into(), workload: suites::MV3, gpu: None, mode: None }),
+            ],
+        };
+        let line = req.to_json().to_string();
+        assert_eq!(Request::parse_line(&line), Ok(req), "{line}");
+    }
+
+    #[test]
+    fn batch_entries_default_positional_ids_and_reject_positionally() {
+        // Entry 0 is fine, entry 1 is an unknown workload, entry 2 is
+        // an unknown gpu: the good entry parses and each bad one
+        // carries its own positional reject — the batch never fails
+        // whole.
+        let line = r#"{"v":1,"op":"batch","id":"b7","requests":[
+            {"workload":"mm1"},
+            {"workload":"MM99"},
+            {"id":"mine","workload":"MM2","gpu":"tpu"}]}"#
+            .replace('\n', "");
+        match Request::parse_line(&line).unwrap() {
+            Request::Batch { id, items } => {
+                assert_eq!(id, "b7");
+                assert_eq!(items.len(), 3);
+                let ok = items[0].as_ref().unwrap();
+                assert_eq!(ok.id, "b7.0", "missing entry ids default positionally");
+                assert_eq!(ok.workload, suites::MM1);
+                let rej = items[1].as_ref().unwrap_err();
+                assert_eq!(rej.code, error_code::UNKNOWN_WORKLOAD);
+                assert_eq!(rej.id.as_deref(), Some("b7.1"));
+                let rej = items[2].as_ref().unwrap_err();
+                assert_eq!(rej.code, error_code::BAD_REQUEST);
+                assert_eq!(rej.id.as_deref(), Some("mine"), "explicit entry id echoed");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_frame_level_errors() {
+        for (line, needle) in [
+            (r#"{"v":1,"op":"batch","id":"b1"}"#.to_string(), "requests"),
+            (r#"{"v":1,"op":"batch","id":"b1","requests":[]}"#.to_string(), "empty"),
+            (
+                format!(
+                    r#"{{"v":1,"op":"batch","id":"b1","requests":[{}]}}"#,
+                    vec![r#"{"workload":"MM1"}"#; MAX_BATCH_ITEMS + 1].join(",")
+                ),
+                "cap",
+            ),
+        ] {
+            let rej = Request::parse_line(&line).unwrap_err();
+            assert_eq!(rej.code, error_code::BAD_REQUEST, "{needle}");
+            assert!(rej.message.contains(needle), "{}: {}", needle, rej.message);
+        }
+        // Non-get_kernel ops cannot hide inside a batch.
+        let parsed = Request::parse_line(
+            r#"{"v":1,"op":"batch","id":"b1","requests":[{"op":"shutdown"}]}"#,
+        )
+        .unwrap();
+        match parsed {
+            Request::Batch { items, .. } => {
+                assert_eq!(items[0].as_ref().unwrap_err().code, error_code::BAD_REQUEST);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_reply_roundtrip() {
+        let reply = Response::Batch {
+            id: "b2".into(),
+            replies: vec![
+                Response::Kernel(KernelReply {
+                    id: "b2.0".into(),
+                    hit: true,
+                    source: ServeSource::Store,
+                    schedule: sample_schedule(),
+                    latency_s: 1e-3,
+                    energy_j: 2e-3,
+                    avg_power_w: 120.0,
+                    enqueued: false,
+                    queue_depth: 0,
+                    reply_time_s: 5e-5,
+                }),
+                Response::Error {
+                    id: Some("b2.1".into()),
+                    code: error_code::UNKNOWN_WORKLOAD.into(),
+                    message: "nope".into(),
+                },
+            ],
+        };
+        let line = reply.to_json().to_string();
+        assert_eq!(Response::parse_line(&line), Ok(reply), "{line}");
+        // Nested batches are rejected rather than parsed.
+        let nested = r#"{"v":1,"id":"o","ok":true,"op":"batch","replies":[
+            {"v":1,"id":"i","ok":true,"op":"batch","replies":[]}]}"#
+            .replace('\n', "");
+        assert!(Response::parse_line(&nested).unwrap_err().contains("nest"));
+    }
+
+    /// The single-frame wire format is frozen: batching added NEW
+    /// frames, it must not disturb the bytes of a plain `get_kernel`
+    /// reply. Frames serialize with a deterministic (sorted) key
+    /// order, so pinning the exact top-level key SET pins the bytes
+    /// for given values — a field added, renamed, or dropped breaks
+    /// this test before it breaks an old client.
+    #[test]
+    fn single_kernel_reply_wire_fields_are_pinned() {
+        let reply = KernelReply {
+            id: "pin".into(),
+            hit: true,
+            source: ServeSource::Store,
+            schedule: sample_schedule(),
+            latency_s: 1e-3,
+            energy_j: 2e-3,
+            avg_power_w: 120.0,
+            enqueued: false,
+            queue_depth: 0,
+            reply_time_s: 5e-5,
+        };
+        let line = reply.to_json().to_string();
+        // Exactly the PR-4 field set, nothing added or dropped.
+        let parsed = Json::parse(&line).unwrap();
+        let keys: Vec<&str> = match &parsed {
+            Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(
+            keys,
+            vec![
+                "avg_power_w", "energy_j", "enqueued", "id", "latency_s", "ok", "op",
+                "queue_depth", "reply_time_s", "result", "schedule", "source", "v", "variant_id",
+            ],
+            "{line}"
+        );
+        // Serialization is canonical: encode → parse → encode is the
+        // identity, and repeated encodes are byte-identical.
+        assert_eq!(parsed.to_string(), line);
+        assert_eq!(reply.to_json().to_string(), line);
     }
 
     #[test]

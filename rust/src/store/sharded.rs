@@ -607,6 +607,23 @@ impl ShardedStore {
         Ok(changed)
     }
 
+    /// [`ShardedStore::refresh`] for one shard by index — the notify
+    /// loop's targeted entry point (a peer announced a write-back
+    /// landing in `shard`, so only that shard needs re-reading). Only
+    /// that shard's lock is taken.
+    pub fn refresh_shard(&self, shard: usize) -> anyhow::Result<usize> {
+        if self.fleet.is_none() {
+            return Ok(0);
+        }
+        anyhow::ensure!(
+            shard < self.n_shards,
+            "shard {shard} out of range (store has {} shards)",
+            self.n_shards
+        );
+        let mut state = self.shards[shard].write().expect("shard lock");
+        self.refresh_shard_locked(shard, &mut state)
+    }
+
     /// [`ShardedStore::refresh`] for the single shard `key` routes to —
     /// the miss path's cheap "did another daemon already fill this?".
     /// Only that shard's lock is taken.

@@ -173,6 +173,151 @@ fn two_daemons_one_store_search_once_fleet_wide() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The push path (ISSUE 5): daemon B serves daemon A's write-back as
+/// an exact hit through the notify channel alone — ZERO interval polls
+/// (the fallback is configured out of reach) and no request-path
+/// search on B.
+#[test]
+fn notify_delivers_foreign_writebacks_without_polling() {
+    let dir = tmp_dir("notify");
+    let mut search = quick_search(31);
+    search.fleet.notify_interval_ms = 25;
+    // Push the poll fallback out of reach: any freshness B gains must
+    // come from notify.
+    search.fleet.poll_interval_ms = 3_600_000;
+    let a = spawn_on(ServeAddr::Unix(dir.join("a.sock")), &dir, search.clone());
+    let b = spawn_on(ServeAddr::Unix(dir.join("b.sock")), &dir, search);
+    let mut ca = ServeClient::connect(&a.addr).unwrap();
+    let mut cb = ServeClient::connect(&b.addr).unwrap();
+
+    // A searches MM1 and lands the write-back; B never requests it.
+    assert!(ca.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    ca.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+
+    // B's refresh loop ingests A's announcement.
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        let s = cb.stats().unwrap();
+        if s.n_notify_refresh >= 1 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "B never saw A's notify announcement: {s:?}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // B's FIRST request for the key is a plain exact hit, served from
+    // memory the push path filled.
+    let hit = cb.get_kernel(suites::MM1, None, None).unwrap();
+    assert!(hit.hit, "B serves A's write-back via notify");
+    assert_eq!(hit.source.name(), "store");
+
+    let sb = cb.stats().unwrap();
+    assert_eq!(sb.n_poll_refresh, 0, "zero interval polls: freshness was pushed");
+    assert!(sb.n_notify_refresh >= 1);
+    assert_eq!(sb.n_searches_done, 0, "B never searched");
+    assert_eq!(sb.n_enqueued, 0);
+    let sa = ca.stats().unwrap();
+    assert_eq!(sa.n_notify_refresh, 0, "a daemon skips its own announcements");
+    assert_eq!(sa.n_poll_refresh, 0);
+
+    for (mut client, handle) in [(ca, a), (cb, b)] {
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Batched serving (ISSUE 5): a mixed batch of 8 requests over ONE
+/// socket write produces exactly 8 positionally-matched replies —
+/// hits at hit positions, misses at miss positions, an in-batch
+/// duplicate coalescing instead of double-enqueueing.
+#[test]
+fn batch_of_eight_mixed_requests_is_positionally_matched() {
+    let dir = tmp_dir("batch8");
+    let handle = spawn_on(ServeAddr::Unix(dir.join("eco.sock")), &dir, quick_search(33));
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
+
+    // Warm MM1 so the batch has real hits in it.
+    client.get_kernel(suites::MM1, None, None).unwrap();
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+
+    let requests: Vec<ecokernel::serve::BatchRequest> = vec![
+        (suites::MM1, None, None), // hit
+        (suites::MV3, None, None), // miss, enqueues
+        (suites::MM1, None, None), // hit
+        (suites::MV4, None, None), // miss, enqueues
+        (suites::MV3, None, None), // duplicate miss: coalesces
+        (suites::MM1, None, None), // hit
+        (suites::MM2, None, None), // miss, enqueues
+        (suites::MM1, None, None), // hit
+    ];
+    let replies = client.get_kernel_batch(&requests).unwrap();
+    assert_eq!(replies.len(), 8, "one reply per request");
+    let replies: Vec<_> = replies.into_iter().map(|r| r.unwrap()).collect();
+    // Positional matching: entry i answers request i (the client's
+    // positional ids echo back in order).
+    for (i, reply) in replies.iter().enumerate() {
+        assert!(reply.id.ends_with(&format!(".{i}")), "reply {i} has id {}", reply.id);
+    }
+    let hits: Vec<bool> = replies.iter().map(|r| r.hit).collect();
+    assert_eq!(hits, [true, false, true, false, false, true, false, true]);
+    assert!(replies[1].enqueued, "first MV3 miss searches");
+    assert!(!replies[4].enqueued, "duplicate MV3 within the batch coalesces");
+    assert!(replies[3].enqueued && replies[6].enqueued);
+
+    let s = client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    assert_eq!(s.n_batch_frames, 1, "one frame carried all eight");
+    assert_eq!(s.n_batch_requests, 8);
+    assert_eq!(s.n_searches_done, 4, "warm-up + 3 distinct batch misses");
+    assert_eq!((s.n_hits, s.n_misses), (4, 5), "batch entries count as requests");
+
+    // The pipelined queue/flush API is the same wire path.
+    client.queue_get_kernel(suites::MM1, None, None);
+    client.queue_get_kernel(suites::MV3, None, None);
+    assert_eq!(client.queued_len(), 2);
+    let flushed = client.flush_batch().unwrap();
+    assert_eq!(client.queued_len(), 0);
+    assert!(flushed.iter().all(|r| r.as_ref().unwrap().hit), "both landed earlier");
+
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Old clients are untouched by batching: a plain `get_kernel` frame
+/// is answered byte-identically across repeats (same id, same state)
+/// — the PR-4 single-frame wire format did not move.
+#[test]
+fn single_get_kernel_frames_are_byte_stable() {
+    let dir = tmp_dir("bytestable");
+    let handle = spawn_on(ServeAddr::Unix(dir.join("eco.sock")), &dir, quick_search(35));
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
+    client.get_kernel(suites::MM1, None, None).unwrap();
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+
+    let frame = r#"{"v":1,"op":"get_kernel","id":"pin1","workload":"MM1"}"#;
+    let first = client.roundtrip_raw(frame).unwrap();
+    let second = client.roundtrip_raw(frame).unwrap();
+    assert_eq!(first, second, "identical request, identical bytes");
+    assert!(first.contains(r#""result":"hit""#), "{first}");
+    assert!(first.contains(r#""source":"store""#), "{first}");
+    // A batch wrapping the same request carries the same payload per
+    // entry (only the ids differ — they are client-chosen).
+    let hit = client.get_kernel(suites::MM1, None, None).unwrap();
+    let batched =
+        client.get_kernel_batch(&[(suites::MM1, None, None)]).unwrap().remove(0).unwrap();
+    assert_eq!(batched.schedule, hit.schedule);
+    assert_eq!(batched.latency_s, hit.latency_s);
+    assert_eq!(batched.energy_j, hit.energy_j);
+
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Lease contention: two stores on one directory race the same
 /// eviction; leases serialize the rewrites and no retained record is
 /// lost, no matter who wins.

@@ -216,6 +216,64 @@ fn protocol_errors_over_the_socket() {
     stop(handle, &dir);
 }
 
+/// Batch frames over a real socket: a malformed entry maps to an error
+/// frame at ITS position while siblings are served, and frame-level
+/// batch errors reject the whole frame.
+#[test]
+fn batch_errors_are_positional_over_the_socket() {
+    let (handle, dir) = spawn_daemon("batcherr", |_| {});
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
+
+    // Warm MM1 so position 0 is an exact hit.
+    client.get_kernel(suites::MM1, None, None).unwrap();
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+
+    let frame = r#"{"v":1,"op":"batch","id":"bx","requests":[
+        {"workload":"MM1"},{"workload":"MM99"},{"workload":"MM2","gpu":"tpu"}]}"#
+        .replace('\n', "");
+    let reply = client.roundtrip_raw(&frame).unwrap();
+    let v = Json::parse(&reply).unwrap();
+    assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
+    assert_eq!(v.get("id").and_then(|x| x.as_str()), Some("bx"));
+    let replies = v.get("replies").and_then(|r| r.as_arr()).unwrap();
+    assert_eq!(replies.len(), 3, "one reply frame per request: {reply}");
+    assert_eq!(
+        replies[0].get("result").and_then(|x| x.as_str()),
+        Some("hit"),
+        "the good entry is served despite bad siblings"
+    );
+    let code = |i: usize| {
+        replies[i].get("error").and_then(|e| e.get("code")).and_then(|c| c.as_str())
+    };
+    assert_eq!(code(1), Some(error_code::UNKNOWN_WORKLOAD));
+    assert_eq!(code(2), Some(error_code::BAD_REQUEST));
+    assert_eq!(
+        replies[2].get("id").and_then(|x| x.as_str()),
+        Some("bx.2"),
+        "positional default id echoed on the error frame"
+    );
+
+    // Frame-level errors reject the whole batch with one error frame.
+    for bad in [
+        r#"{"v":1,"op":"batch","id":"b0","requests":[]}"#,
+        r#"{"v":1,"op":"batch","id":"b0"}"#,
+    ] {
+        let reply = client.roundtrip_raw(bad).unwrap();
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(false), "{bad}");
+    }
+
+    // Batch counters: the mixed frame above counted once, with three
+    // requests riding in it (error positions included in the frame's
+    // request count, not in hit/miss metrics).
+    let s = client.stats().unwrap();
+    assert_eq!(s.n_batch_frames, 1);
+    assert_eq!(s.n_batch_requests, 3);
+
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    stop(handle, &dir);
+}
+
 /// Driver-level serving metrics: hit rate, reply-time percentiles on
 /// the simulated clock, and the served-vs-searched split.
 #[test]
