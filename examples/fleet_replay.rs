@@ -17,7 +17,9 @@
 #[cfg(unix)]
 use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
 #[cfg(unix)]
-use ecokernel::serve::{BatchRequest, Daemon, DaemonConfig, ServeAddr, ServeClient, StatsReply};
+use ecokernel::serve::{
+    merged_metrics, BatchRequest, Daemon, DaemonConfig, ServeAddr, ServeClient, StatsReply,
+};
 #[cfg(unix)]
 use ecokernel::util::Rng;
 #[cfg(unix)]
@@ -139,6 +141,10 @@ fn main() -> anyhow::Result<()> {
 
     let sa = ca.stats()?;
     let sb = cb.stats()?;
+    // The fleet-merged telemetry view: ONE `metrics` op per daemon,
+    // histograms and counters folded client-side — the amortization
+    // and freshness figures below come from it, not hand-summed stats.
+    let fleet = merged_metrics(&[a.addr.clone(), b.addr.clone()])?;
     let sum = |f: fn(&StatsReply) -> usize| f(&sa) + f(&sb);
     let requests = sum(|s| s.n_requests);
     let hits = sum(|s| s.n_hits);
@@ -161,18 +167,34 @@ fn main() -> anyhow::Result<()> {
         second_hits,
         request_log.len()
     );
-    let batch_frames = sum(|s| s.n_batch_frames);
     println!(
         "batching        : {} requests over {} frames = {:.1} per syscall",
-        sum(|s| s.n_batch_requests),
-        batch_frames,
-        sum(|s| s.n_batch_requests) as f64 / batch_frames.max(1) as f64
+        fleet.counter("n_batch_requests"),
+        fleet.counter("n_batch_frames"),
+        fleet.frames_per_syscall()
     );
     println!(
         "freshness       : {} notify (push) refreshes, {} poll-fallback refreshes",
-        sum(|s| s.n_notify_refresh),
-        sum(|s| s.n_poll_refresh)
+        fleet.counter("n_notify_refresh"),
+        fleet.counter("n_poll_refresh")
     );
+    println!(
+        "reply (wall)    : p50 {:.3} ms, p99 {:.3} ms over {} replies fleet-wide",
+        fleet.reply_wall_s.quantile(50.0) * 1e3,
+        fleet.reply_wall_s.quantile(99.0) * 1e3,
+        fleet.reply_wall_s.count()
+    );
+    for (stage, h) in &fleet.stages {
+        if h.is_empty() {
+            continue;
+        }
+        println!(
+            "  stage {stage:<15}: n={:<5} p50={:.4} ms p99={:.4} ms",
+            h.count(),
+            h.quantile(50.0) * 1e3,
+            h.quantile(99.0) * 1e3
+        );
+    }
     println!(
         "searches run    : {searches} fleet-wide for {} distinct-key misses",
         misses

@@ -37,6 +37,18 @@ impl EventLog {
         let _ = writeln!(sink, "{line}");
         let _ = sink.flush();
     }
+
+    /// Append one event carrying a request-id correlator in `"req"` —
+    /// the serving path's end-to-end trace key: every `job_*` event a
+    /// request causes (served, enqueued, search done) shares the id of
+    /// the request that caused it, so one grep of the log reconstructs
+    /// the request's whole life. Empty when no originator is known
+    /// (e.g. a search completing after its requester was shed).
+    pub fn emit_traced(&self, event: &str, req: &str, fields: Vec<(&str, Json)>) {
+        let mut all = vec![("req", Json::str(req))];
+        all.extend(fields);
+        self.emit(event, all);
+    }
 }
 
 fn unix_now() -> f64 {
@@ -78,5 +90,16 @@ mod tests {
         }
         let second = Json::parse(text.lines().nth(1).unwrap()).unwrap();
         assert_eq!(second.get("k").unwrap().as_f64(), Some(0.8));
+    }
+
+    #[test]
+    fn traced_events_carry_the_request_id() {
+        let (log, buf) = EventLog::to_vec();
+        log.emit_traced("job_served", "req-42", vec![("key", Json::str("k1"))]);
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let v = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("req").unwrap().as_str(), Some("req-42"));
+        assert_eq!(v.get("key").unwrap().as_str(), Some("k1"));
+        assert_eq!(v.get("event").unwrap().as_str(), Some("job_served"));
     }
 }

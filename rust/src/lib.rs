@@ -66,3 +66,5 @@ pub mod runtime;
 /// Kernel-serving daemon (needs a Unix-ish socket runtime; unix-only).
 #[cfg(unix)]
 pub mod serve;
+/// Mergeable histograms + hot-path stage tracing (pure data, portable).
+pub mod telemetry;

@@ -4,7 +4,8 @@
 //! Subcommands:
 //!   search      run one kernel search (the paper's core loop)
 //!   serve       run the kernel-serving daemon on a Unix socket
-//!   query       ask a running daemon for a kernel / stats / shutdown
+//!   query       ask a running daemon for a kernel / stats / metrics / shutdown
+//!   bench       serving benchmark: zipf replay against live daemons
 //!   experiment  regenerate a paper table/figure (table1..5, fig2..5, all)
 //!   cache       inspect / maintain a persistent tuning store
 //!   artifacts   inspect / execute the AOT artifact registry
@@ -32,6 +33,7 @@ fn main() -> ExitCode {
         "search" => cmd_search(rest),
         "serve" => cmd_serve(rest),
         "query" => cmd_query(rest),
+        "bench" => cmd_bench(rest),
         "experiment" => cmd_experiment(rest),
         "cache" => cmd_cache(rest),
         "artifacts" => cmd_artifacts(rest),
@@ -68,9 +70,13 @@ USAGE:
                    (ADDR: unix:/path.sock or tcp:HOST:PORT; --socket PATH = unix)
   ecokernel query  --addr ADDR (--workload MM1 [--gpu a100] [--mode energy]
                    [--wait] [--timeout S] | --batch MM1,MV3,.. | --stats
-                   | --shutdown) [--json]
+                   | --metrics [--prom] | --shutdown) [--json]
                    (--batch sends every workload in ONE frame / one
-                   socket write; replies are positionally matched)
+                   socket write; replies are positionally matched.
+                   --metrics accepts --addr A,B,.. and merges the
+                   fleet's histograms; --prom prints Prometheus text)
+  ecokernel bench  serve [--quick] [--requests N] [--zipf S] [--batch N]
+                   [--no-fleet] [--out BENCH_serving.json]
   ecokernel experiment <table1..table5|fig2..fig5|warmcold|all> [--paper]
   ecokernel cache <stats|list|prune|export> --store DIR
   ecokernel artifacts [--dir artifacts] [--list | --check | --run WORKLOAD_ID [--variant ID]]
@@ -284,7 +290,12 @@ fn cmd_serve(_args: &[String]) -> anyhow::Result<()> {
 #[cfg(unix)]
 fn cmd_query(args: &[String]) -> anyhow::Result<()> {
     use ecokernel::serve::ServeClient;
-    let flags = Flags::parse(args, &["json", "wait", "stats", "shutdown"])?;
+    let flags = Flags::parse(args, &["json", "wait", "stats", "shutdown", "metrics", "prom"])?;
+    if flags.has("metrics") {
+        // Handled before the single connect: `--addr` may be a
+        // comma-separated fleet whose histograms merge client-side.
+        return query_metrics(&flags);
+    }
     let addr = parse_addr_flags(&flags, "addr")?;
     let mut client = ServeClient::connect(&addr)?;
 
@@ -450,6 +461,110 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
 #[cfg(not(unix))]
 fn cmd_query(_args: &[String]) -> anyhow::Result<()> {
     anyhow::bail!("`ecokernel query` needs a Unix socket runtime (unix-only)")
+}
+
+/// `query --metrics`: full telemetry (counters + reply-time and
+/// per-stage histograms) from one daemon, or merged across a
+/// comma-separated fleet.
+#[cfg(unix)]
+fn query_metrics(flags: &Flags) -> anyhow::Result<()> {
+    use ecokernel::serve::{merged_metrics, ServeAddr};
+    let raw = flags
+        .get("addr")
+        .or_else(|| flags.get("socket"))
+        .ok_or_else(|| anyhow::anyhow!("--addr ADDR[,ADDR..] is required"))?;
+    let addrs: Vec<ServeAddr> = raw
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| ServeAddr::parse(s).map_err(anyhow::Error::msg))
+        .collect::<anyhow::Result<_>>()?;
+    let m = merged_metrics(&addrs)?;
+    if flags.has("prom") {
+        print!("{}", m.to_prometheus());
+        return Ok(());
+    }
+    if flags.has("json") {
+        println!("{}", m.to_json());
+        return Ok(());
+    }
+    let total = m.counter("n_requests");
+    let hits = m.counter("n_hits");
+    let pct = if total > 0 { hits as f64 / total as f64 * 100.0 } else { 0.0 };
+    println!("daemons     : {}", addrs.len());
+    println!("requests    : {total} ({hits} hits, {pct:.1}%)");
+    println!(
+        "reply wall  : p50 {:.3} ms, p99 {:.3} ms ({} samples)",
+        m.reply_wall_s.quantile(50.0) * 1e3,
+        m.reply_wall_s.quantile(99.0) * 1e3,
+        m.reply_wall_s.count()
+    );
+    println!(
+        "reply sim   : p50 {:.3} ms, p99 {:.3} ms",
+        m.reply_sim_s.quantile(50.0) * 1e3,
+        m.reply_sim_s.quantile(99.0) * 1e3
+    );
+    if m.counter("n_batch_frames") > 0 {
+        println!("frames/write: {:.1}", m.frames_per_syscall());
+    }
+    println!("stages (wall-clock):");
+    for (name, h) in &m.stages {
+        if h.is_empty() {
+            continue;
+        }
+        println!(
+            "  {name:<16} n={:<8} p50={:.4} ms  p99={:.4} ms  mean={:.4} ms",
+            h.count(),
+            h.quantile(50.0) * 1e3,
+            h.quantile(99.0) * 1e3,
+            h.mean() * 1e3
+        );
+    }
+    Ok(())
+}
+
+/// `bench serve`: the serving benchmark harness behind
+/// `BENCH_serving.json` (spawns its own daemons; see
+/// [`ecokernel::serve::bench`]).
+#[cfg(unix)]
+fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
+    use ecokernel::serve::{run_bench_serve, BenchServeOpts};
+    let Some(what) = args.first() else {
+        anyhow::bail!("bench target required: serve");
+    };
+    anyhow::ensure!(what == "serve", "unknown bench target '{what}' (expected: serve)");
+    let flags = Flags::parse(&args[1..], &["quick", "no-fleet"])?;
+    let mut opts = BenchServeOpts::default();
+    if let Some(n) = flags.parse_num::<usize>("requests")? {
+        opts.requests = n;
+    }
+    if let Some(z) = flags.parse_num::<f64>("zipf")? {
+        opts.zipf_s = z;
+    }
+    if let Some(b) = flags.parse_num::<usize>("batch")? {
+        opts.batch = b;
+    }
+    if flags.has("no-fleet") {
+        opts.fleet = false;
+    }
+    opts.quick = flags.has("quick");
+    if let Some(o) = flags.get("out") {
+        opts.out = std::path::PathBuf::from(o);
+    }
+    let t0 = std::time::Instant::now();
+    let json = run_bench_serve(&opts)?;
+    println!("{json}");
+    eprintln!(
+        "bench serve: wrote {} in {:.1}s wall",
+        opts.out.display(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn cmd_bench(_args: &[String]) -> anyhow::Result<()> {
+    anyhow::bail!("`ecokernel bench` needs a Unix socket runtime (unix-only)")
 }
 
 fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {

@@ -1,0 +1,294 @@
+//! `ecokernel bench serve` — the serving benchmark harness behind
+//! `BENCH_serving.json`.
+//!
+//! Spawns a real daemon (and, unless disabled, a two-daemon TCP fleet
+//! sharing one store), warms a small working set, replays a
+//! zipf-skewed request stream mixing single `get_kernel` frames with
+//! pipelined `batch` frames, and reports what the **`metrics` wire
+//! op** measured: wall-clock reply p50/p99, per-stage histograms, hit
+//! rate, and frames-per-syscall. Client-side wall time gives req/s.
+//!
+//! Everything that can be deterministic is ([`crate::util::Rng`],
+//! fixed working set, fixed frame mix); the wall-clock numbers are of
+//! course machine-dependent — the JSON carries a `note` saying so.
+
+use super::client::{merged_metrics, ServeClient};
+use super::daemon::{Daemon, DaemonConfig, DaemonHandle};
+use super::protocol::MetricsReply;
+use crate::config::{GpuArch, SearchConfig, SearchMode};
+use crate::fleet::ServeAddr;
+use crate::telemetry::LogHistogram;
+use crate::util::{Json, Rng};
+use crate::workload::{suites, Workload};
+use anyhow::Context as _;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Knobs for one `bench serve` run.
+#[derive(Debug, Clone)]
+pub struct BenchServeOpts {
+    /// Requests in the measured single-daemon phase.
+    pub requests: usize,
+    /// Zipf skew exponent of the replayed key popularity.
+    pub zipf_s: f64,
+    /// Requests packed per `batch` frame (≈¼ of traffic is batched).
+    pub batch: usize,
+    /// Also run the two-daemon TCP fleet phase.
+    pub fleet: bool,
+    /// CI smoke mode: small request counts, small working set.
+    pub quick: bool,
+    /// Where the JSON baseline is written.
+    pub out: PathBuf,
+}
+
+impl Default for BenchServeOpts {
+    fn default() -> Self {
+        BenchServeOpts {
+            requests: 2000,
+            zipf_s: 1.1,
+            batch: 8,
+            fleet: true,
+            quick: false,
+            out: PathBuf::from("BENCH_serving.json"),
+        }
+    }
+}
+
+/// Zipf(s) over ranks 0..n via an inverse-CDF table.
+struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    fn new(n: usize, s: f64) -> Zipf {
+        let weights: Vec<f64> = (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(s)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        let cdf = weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        Zipf { cdf }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.gen_f64();
+        self.cdf.iter().position(|&c| u < c).unwrap_or(self.cdf.len() - 1)
+    }
+}
+
+/// Search knobs for the warm-up misses: the bench measures *serving*,
+/// so background searches just need to land fast.
+fn bench_search(seed: u64) -> SearchConfig {
+    let mut search = SearchConfig {
+        gpu: GpuArch::A100,
+        mode: SearchMode::EnergyAware,
+        population: 16,
+        m_latency_keep: 4,
+        rounds: 2,
+        patience: 0,
+        seed,
+        ..Default::default()
+    };
+    search.serve.n_workers = 1;
+    search.serve.n_shards = 4;
+    search
+}
+
+fn fresh_dir(tag: &str) -> anyhow::Result<PathBuf> {
+    let dir = std::env::temp_dir().join(format!("ecokernel_bench_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).with_context(|| format!("create {dir:?}"))?;
+    Ok(dir)
+}
+
+/// Warm `set` into the store through the daemon itself (miss → search
+/// → write-back → hit), so the measured phase replays a hot cache.
+fn warm(client: &mut ServeClient, set: &[Workload]) -> anyhow::Result<()> {
+    for &w in set {
+        client
+            .get_kernel_wait(w, None, None, Duration::from_secs(180))
+            .with_context(|| format!("warm {w}"))?;
+    }
+    Ok(())
+}
+
+/// Replay `requests` zipf-sampled requests on one connection, ~¼ of
+/// them packed into `batch`-sized frames. Returns the elapsed seconds.
+fn replay(
+    client: &mut ServeClient,
+    set: &[Workload],
+    zipf: &Zipf,
+    rng: &mut Rng,
+    requests: usize,
+    batch: usize,
+) -> anyhow::Result<f64> {
+    let t0 = Instant::now();
+    let mut issued = 0usize;
+    while issued < requests {
+        if issued % (4 * batch) < batch && requests - issued >= batch {
+            let reqs: Vec<_> =
+                (0..batch).map(|_| (set[zipf.sample(rng)], None, None)).collect();
+            for entry in client.get_kernel_batch(&reqs)? {
+                entry.map_err(|e| anyhow::anyhow!("batch entry rejected: {e}"))?;
+            }
+            issued += batch;
+        } else {
+            client.get_kernel(set[zipf.sample(rng)], None, None)?;
+            issued += 1;
+        }
+    }
+    Ok(t0.elapsed().as_secs_f64())
+}
+
+fn stage_json(h: &LogHistogram) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(h.count() as f64)),
+        ("p50_ms", Json::num(h.quantile(50.0) * 1e3)),
+        ("p99_ms", Json::num(h.quantile(99.0) * 1e3)),
+        ("mean_ms", Json::num(h.mean() * 1e3)),
+    ])
+}
+
+fn phase_json(m: &MetricsReply, requests: usize, elapsed_s: f64) -> Vec<(String, Json)> {
+    let hits = m.counter("n_hits") as f64;
+    let total = m.counter("n_requests") as f64;
+    vec![
+        ("req_per_s".to_string(), Json::num(requests as f64 / elapsed_s.max(1e-9))),
+        ("p50_ms".to_string(), Json::num(m.reply_wall_s.quantile(50.0) * 1e3)),
+        ("p99_ms".to_string(), Json::num(m.reply_wall_s.quantile(99.0) * 1e3)),
+        ("hit_rate".to_string(), Json::num(if total > 0.0 { hits / total } else { 0.0 })),
+        ("frames_per_syscall".to_string(), Json::num(m.frames_per_syscall())),
+        (
+            "stages".to_string(),
+            Json::Obj(
+                m.stages
+                    .iter()
+                    .filter(|(_, h)| !h.is_empty())
+                    .map(|(name, h)| (name.clone(), stage_json(h)))
+                    .collect(),
+            ),
+        ),
+    ]
+}
+
+fn shutdown(addr: &ServeAddr, handle: DaemonHandle) -> anyhow::Result<()> {
+    ServeClient::connect(addr)?.shutdown()?;
+    handle.join()
+}
+
+/// Run the benchmark and write `opts.out`. Returns the written JSON.
+pub fn run_bench_serve(opts: &BenchServeOpts) -> anyhow::Result<Json> {
+    let requests = if opts.quick { opts.requests.min(320) } else { opts.requests };
+    anyhow::ensure!(requests >= 4 * opts.batch, "need at least {} requests", 4 * opts.batch);
+    let set: &[Workload] = if opts.quick {
+        &[suites::MM1, suites::MV3, suites::CONV2]
+    } else {
+        &[suites::MM1, suites::MM3, suites::MV3, suites::MV4, suites::CONV2]
+    };
+    let zipf = Zipf::new(set.len(), opts.zipf_s);
+    let mut rng = Rng::seed_from_u64(0x6e_c0);
+
+    // ---- Phase 1: single daemon on a Unix socket. -----------------
+    eprintln!("bench serve: phase 1 — single daemon ({requests} requests)");
+    let dir = fresh_dir("single")?;
+    let addr = ServeAddr::Unix(dir.join("bench.sock"));
+    let handle = Daemon::spawn(
+        DaemonConfig { addr: addr.clone(), store_dir: dir.clone(), search: bench_search(11) },
+        None,
+    )?;
+    let single = {
+        let mut client = ServeClient::connect(&addr)?;
+        warm(&mut client, set)?;
+        let elapsed = replay(&mut client, set, &zipf, &mut rng, requests, opts.batch)?;
+        let m = client.metrics()?;
+        (m, elapsed)
+    };
+    shutdown(&addr, handle)?;
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut doc: Vec<(String, Json)> = phase_json(&single.0, requests, single.1);
+    doc.push(("requests".to_string(), Json::num(requests as f64)));
+    doc.push(("zipf_s".to_string(), Json::num(opts.zipf_s)));
+    doc.push((
+        "note".to_string(),
+        Json::str(
+            "measured by `ecokernel bench serve` against live daemons; wall-clock \
+             figures are machine-dependent (CI regenerates this file)",
+        ),
+    ));
+
+    // ---- Phase 2: two TCP daemons, one store. ---------------------
+    if opts.fleet {
+        eprintln!("bench serve: phase 2 — two-daemon TCP fleet");
+        let fdir = fresh_dir("fleet")?;
+        let store = fdir.join("store");
+        let ha = Daemon::spawn(
+            DaemonConfig {
+                addr: ServeAddr::Tcp("127.0.0.1:0".into()),
+                store_dir: store.clone(),
+                search: bench_search(12),
+            },
+            None,
+        )?;
+        let hb = Daemon::spawn(
+            DaemonConfig {
+                addr: ServeAddr::Tcp("127.0.0.1:0".into()),
+                store_dir: store,
+                search: bench_search(13),
+            },
+            None,
+        )?;
+        let (aa, ab) = (ha.addr.clone(), hb.addr.clone());
+        let fleet_requests = (requests / 2).max(2 * opts.batch);
+        let mut ca = ServeClient::connect(&aa)?;
+        let mut cb = ServeClient::connect(&ab)?;
+        // Warm through daemon A; daemon B ingests via notify refresh
+        // (its warm loop below then hits without re-searching).
+        warm(&mut ca, set)?;
+        warm(&mut cb, set)?;
+        let ea = replay(&mut ca, set, &zipf, &mut rng, fleet_requests, opts.batch)?;
+        let eb = replay(&mut cb, set, &zipf, &mut rng, fleet_requests, opts.batch)?;
+        let merged = merged_metrics(&[aa.clone(), ab.clone()])?;
+        let mut fleet = phase_json(&merged, 2 * fleet_requests, ea + eb);
+        fleet.push(("daemons".to_string(), Json::num(2.0)));
+        doc.push(("fleet".to_string(), Json::Obj(fleet.into_iter().collect())));
+        shutdown(&aa, ha)?;
+        shutdown(&ab, hb)?;
+        let _ = std::fs::remove_dir_all(&fdir);
+    }
+
+    let json = Json::Obj(doc.into_iter().collect());
+    std::fs::write(&opts.out, format!("{json}\n"))
+        .with_context(|| format!("write {:?}", opts.out))?;
+    Ok(json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_cdf_is_monotone_and_skewed() {
+        let z = Zipf::new(5, 1.1);
+        assert!(z.cdf.windows(2).all(|w| w[0] < w[1]));
+        assert!((z.cdf.last().unwrap() - 1.0).abs() < 1e-12);
+        // Rank 0 dominates: sampled far more often than rank 4.
+        let mut rng = Rng::seed_from_u64(7);
+        let mut counts = [0usize; 5];
+        for _ in 0..10_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > 3 * counts[4], "{counts:?}");
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+    }
+
+    #[test]
+    fn default_opts_satisfy_the_quick_floor() {
+        let opts = BenchServeOpts::default();
+        assert!(opts.requests.min(320) >= 4 * opts.batch);
+    }
+}

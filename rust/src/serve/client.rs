@@ -13,7 +13,7 @@
 //!   `batch` reply.
 
 use super::protocol::{
-    BatchItem, KernelReply, Reject, Request, Response, StatsReply, MAX_BATCH_ITEMS,
+    BatchItem, KernelReply, MetricsReply, Reject, Request, Response, StatsReply, MAX_BATCH_ITEMS,
 };
 use crate::config::{GpuArch, SearchMode};
 use crate::fleet::{ServeAddr, Stream};
@@ -256,6 +256,19 @@ impl ServeClient {
         }
     }
 
+    /// Full telemetry snapshot: counters plus the reply-time and
+    /// per-stage histograms (the `stats` op carries only scalars).
+    pub fn metrics(&mut self) -> anyhow::Result<MetricsReply> {
+        let id = self.fresh_id();
+        match self.roundtrip(&Request::Metrics { id })? {
+            Response::Metrics(r) => Ok(r),
+            Response::Error { code, message, .. } => {
+                Err(anyhow!("daemon error [{code}]: {message}"))
+            }
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
     /// Graceful daemon stop (acked before the daemon drains and exits).
     pub fn shutdown(&mut self) -> anyhow::Result<()> {
         let id = self.fresh_id();
@@ -267,4 +280,24 @@ impl ServeClient {
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }
+}
+
+/// Fleet-wide telemetry: query every daemon's `metrics` op and merge.
+/// Histogram merging is exact — the result equals the histogram a
+/// single daemon would have recorded over the union of all samples —
+/// so fleet-wide quantiles carry the same one-bucket error bound as a
+/// single daemon's.
+pub fn merged_metrics(addrs: &[ServeAddr]) -> anyhow::Result<MetricsReply> {
+    anyhow::ensure!(!addrs.is_empty(), "no daemon addresses to query");
+    let mut merged: Option<MetricsReply> = None;
+    for addr in addrs {
+        let m = ServeClient::connect(addr)
+            .and_then(|mut c| c.metrics())
+            .with_context(|| format!("metrics from {addr}"))?;
+        match &mut merged {
+            Some(acc) => acc.merge(&m),
+            None => merged = Some(m),
+        }
+    }
+    Ok(merged.expect("at least one address"))
 }

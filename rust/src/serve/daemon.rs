@@ -70,7 +70,8 @@
 
 use super::metrics::{reply_time_s, ServeMetrics};
 use super::protocol::{
-    BatchItem, KernelReply, Reject, Request, Response, ServeSource, StatsReply, PROTOCOL_VERSION,
+    BatchItem, KernelReply, MetricsReply, Reject, Request, Response, ServeSource, StatsReply,
+    PROTOCOL_VERSION,
 };
 use crate::config::{GpuArch, SearchConfig, SearchMode};
 use crate::coordinator::{EventLog, PoolEvent, SearchJob, WorkerPool};
@@ -84,6 +85,7 @@ use crate::store::{
     config_fingerprint, serve_key, AppendOutcome, EvictionReport, ShardedStore, TuningRecord,
     TuningStore,
 };
+use crate::telemetry::{Stage, StageTrace};
 use crate::util::Json;
 use crate::workload::Workload;
 use std::collections::{BTreeSet, HashMap, HashSet};
@@ -93,6 +95,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Daemon configuration: where to listen (`unix:`/`tcp:`), where the
 /// store lives, and the search template requests run under
@@ -121,8 +124,11 @@ struct ServeState {
     /// so an install must never roll a newer snapshot back.
     snapshot_gen: u64,
     /// Serve keys with a search queued, backlogged, running, or
-    /// awaiting write-back here.
-    pending: HashSet<String>,
+    /// awaiting write-back here, mapped to the request id of the miss
+    /// that reserved them — the correlator every `job_*` event for the
+    /// key carries, so one request id traces parse → enqueue →
+    /// write-back end to end in the event log.
+    pending: HashMap<String, String>,
     /// Fleet in-flight claims this daemon holds, by serve key.
     claims: HashMap<String, Lease>,
     /// Admission backlog behind a saturated search queue.
@@ -246,7 +252,7 @@ impl Daemon {
             state: Mutex::new(ServeState {
                 snapshot,
                 snapshot_gen: 0,
-                pending: HashSet::new(),
+                pending: HashMap::new(),
                 claims: HashMap::new(),
                 backlog: Backlog::new(fleet.backlog_cap),
                 heat: HeatSketch::new(fleet.heat_half_life, fleet.heat_keys_cap),
@@ -690,7 +696,7 @@ fn finish_writeback(ctx: &Ctx, job: &PendingWriteback, landing: Landing) {
     if accepted {
         refresh_snapshot(ctx);
     }
-    let claim = {
+    let (claim, req) = {
         let mut state = ctx.state.lock().expect("state lock");
         match landing {
             Landing::Accepted => {
@@ -701,8 +707,8 @@ fn finish_writeback(ctx: &Ctx, job: &PendingWriteback, landing: Landing) {
             Landing::Fenced => state.metrics.n_writebacks_fenced += 1,
             Landing::Dropped => state.metrics.n_writebacks_dropped += 1,
         }
-        state.pending.remove(&job.key);
-        state.claims.remove(&job.key)
+        let req = state.pending.remove(&job.key);
+        (state.claims.remove(&job.key), req)
     };
     // Push path: announce the landed record (with the claim epoch it
     // landed under, for the receivers' stale-epoch fence) BEFORE the
@@ -722,8 +728,9 @@ fn finish_writeback(ctx: &Ctx, job: &PendingWriteback, landing: Landing) {
         let _ = lease.release();
     }
     if let Some(log) = &ctx.log {
-        log.emit(
+        log.emit_traced(
             "job_search_done",
+            req.as_deref().unwrap_or(""),
             vec![
                 ("key", Json::str(job.key.clone())),
                 ("n_energy_measurements", Json::num(job.n_measurements as f64)),
@@ -754,10 +761,13 @@ fn pump_backlog(ctx: &Ctx) {
     loop {
         let popped = {
             let mut state = ctx.state.lock().expect("state lock");
-            let ServeState { backlog, heat, .. } = &mut *state;
-            backlog.pop_hottest(heat)
+            let ServeState { backlog, heat, pending, .. } = &mut *state;
+            backlog.pop_hottest(heat).map(|(key, job)| {
+                let req = pending.get(&key).cloned().unwrap_or_default();
+                (key, job, req)
+            })
         };
-        let Some((key, (job, snapshot))) = popped else { return };
+        let Some((key, (job, snapshot), req)) = popped else { return };
         let submitted = {
             let mut pool = ctx.pool.lock().expect("pool lock");
             match pool.as_mut() {
@@ -767,8 +777,9 @@ fn pump_backlog(ctx: &Ctx) {
         };
         if submitted {
             if let Some(log) = &ctx.log {
-                log.emit(
+                log.emit_traced(
                     "job_enqueued",
+                    &req,
                     vec![("key", Json::str(key)), ("via", Json::str("backlog"))],
                 );
             }
@@ -828,11 +839,18 @@ fn handle_connection(ctx: &Ctx, stream: Stream) {
         if line.trim().is_empty() {
             continue;
         }
-        let (frame, shutdown) = handle_frame(ctx, &line);
+        let (frame, shutdown, traced) = handle_frame(ctx, &line);
+        let t_write = Instant::now();
         if writeln!(out, "{frame}").is_err() {
             break;
         }
         let _ = out.flush();
+        if traced {
+            // Reply-write is only measurable after the bytes left; one
+            // short reacquisition of the state lock, nothing else.
+            let secs = t_write.elapsed().as_secs_f64();
+            ctx.state.lock().expect("state lock").metrics.record_stage(Stage::ReplyWrite, secs);
+        }
         if shutdown {
             ctx.shutting.store(true, Ordering::SeqCst);
             // Wake the accept loop with a throwaway connection.
@@ -842,16 +860,40 @@ fn handle_connection(ctx: &Ctx, stream: Stream) {
     }
 }
 
-/// Dispatch one request frame; returns (response frame, shutdown?).
-fn handle_frame(ctx: &Ctx, line: &str) -> (Json, bool) {
-    match Request::parse_line(line) {
-        Err(rej) => (rej.to_json(), false),
-        Ok(Request::Shutdown { id }) => (Response::ShutdownAck { id }.to_json(), true),
-        Ok(Request::Stats { id }) => (stats_reply(ctx, id).to_json(), false),
+/// Wall-clock context of one in-flight kernel request: the receipt
+/// instant plus its stage trace. Stack-only — `Copy` arrays, no heap —
+/// so threading it down the serve call chain costs nothing.
+#[derive(Clone, Copy)]
+struct ReqTrace {
+    start: Instant,
+    stages: StageTrace,
+}
+
+impl ReqTrace {
+    fn begin(start: Instant) -> ReqTrace {
+        ReqTrace { start, stages: StageTrace::new() }
+    }
+}
+
+/// Dispatch one request frame; returns (response frame, shutdown?,
+/// kernel-serving frame? — only those record the reply-write stage).
+fn handle_frame(ctx: &Ctx, line: &str) -> (Json, bool, bool) {
+    let t0 = Instant::now();
+    let parsed = Request::parse_line(line);
+    let parse_s = t0.elapsed().as_secs_f64();
+    match parsed {
+        Err(rej) => (rej.to_json(), false, false),
+        Ok(Request::Shutdown { id }) => (Response::ShutdownAck { id }.to_json(), true, false),
+        Ok(Request::Stats { id }) => (stats_reply(ctx, id).to_json(), false, false),
+        Ok(Request::Metrics { id }) => (metrics_reply(ctx, id).to_json(), false, false),
         Ok(Request::GetKernel { id, workload, gpu, mode }) => {
-            (serve_get_kernel(ctx, id, workload, gpu, mode).to_json(), false)
+            let mut trace = ReqTrace::begin(t0);
+            trace.stages.add(Stage::Parse, parse_s);
+            (serve_get_kernel(ctx, id, workload, gpu, mode, &mut trace).to_json(), false, true)
         }
-        Ok(Request::Batch { id, items }) => (serve_batch(ctx, id, items).to_json(), false),
+        Ok(Request::Batch { id, items }) => {
+            (serve_batch(ctx, id, items, parse_s).to_json(), false, true)
+        }
     }
 }
 
@@ -900,6 +942,21 @@ fn stats_reply(ctx: &Ctx, id: String) -> StatsReply {
     }
 }
 
+/// Answer a `metrics` frame: the full telemetry view — every counter
+/// plus the reply-time and per-stage histograms — cloned out under one
+/// state-lock acquisition. Clients merge these across a fleet.
+fn metrics_reply(ctx: &Ctx, id: String) -> MetricsReply {
+    let state = ctx.state.lock().expect("state lock");
+    let m = &state.metrics;
+    MetricsReply {
+        id,
+        counters: m.counter_pairs().iter().map(|&(k, v)| (k.to_string(), v)).collect(),
+        reply_sim_s: m.reply_sim().clone(),
+        reply_wall_s: m.reply_wall().clone(),
+        stages: Stage::ALL.iter().map(|&s| (s.name().to_string(), m.stage(s).clone())).collect(),
+    }
+}
+
 /// The effective search config of one request: daemon template +
 /// per-request overrides. Workers never write back themselves — the
 /// daemon owns the store.
@@ -922,6 +979,7 @@ fn serve_get_kernel(
     workload: Workload,
     gpu: Option<GpuArch>,
     mode: Option<SearchMode>,
+    trace: &mut ReqTrace,
 ) -> KernelReply {
     let cfg = request_cfg(ctx, gpu, mode);
     let key = serve_key(&workload.id(), cfg.gpu.name(), cfg.mode.name(), &config_fingerprint(&cfg));
@@ -934,24 +992,38 @@ fn serve_get_kernel(
     // request path. A request racing ahead of its notify falls through
     // to the memory-miss path below, whose targeted refresh still
     // finds the landed record.
-    if let Some(rec) = ctx.store.get(workload, &cfg) {
-        return serve_hit(ctx, id, &key, &rec);
+    let t = Instant::now();
+    let found = ctx.store.get(workload, &cfg);
+    trace.stages.add(Stage::ShardRead, t.elapsed().as_secs_f64());
+    if let Some(rec) = found {
+        return serve_hit(ctx, id, &key, &rec, trace);
     }
-    serve_memory_miss(ctx, id, workload, cfg, key)
+    serve_memory_miss(ctx, id, workload, cfg, key, trace)
 }
 
 /// Serve an exact hit: the recorded, measured kernel, zero cost.
-fn serve_hit(ctx: &Ctx, id: String, key: &str, rec: &TuningRecord) -> KernelReply {
+/// Telemetry here is deliberately free — `Instant` reads are vDSO
+/// calls and the histogram records fold under the state-lock
+/// acquisition the reply bookkeeping takes anyway, so tracing adds no
+/// allocation and no syscall to the hottest path in the daemon.
+fn serve_hit(
+    ctx: &Ctx,
+    id: String,
+    key: &str,
+    rec: &TuningRecord,
+    trace: &ReqTrace,
+) -> KernelReply {
     if let Err(e) = ctx.store.mark_served(key) {
         eprintln!("serve: LRU touch failed for {key}: {e:#}");
     }
     let t = reply_time_s(true, ctx.store.shard_len_for(key));
+    let wall_s = trace.start.elapsed().as_secs_f64();
     let queue_depth = {
         let mut state = ctx.state.lock().expect("state lock");
-        state.metrics.record_reply(true, t);
+        state.metrics.record_reply(true, t, wall_s, &trace.stages);
         state.pending.len()
     };
-    emit_served(ctx, key, "hit", ServeSource::Store, t);
+    emit_served(ctx, &id, key, "hit", ServeSource::Store, t);
     KernelReply {
         id,
         hit: true,
@@ -976,18 +1048,25 @@ fn serve_memory_miss(
     workload: Workload,
     cfg: SearchConfig,
     key: String,
+    trace: &mut ReqTrace,
 ) -> KernelReply {
-    match ctx.store.refresh_key(&key) {
+    let t = Instant::now();
+    let refreshed = ctx.store.refresh_key(&key);
+    trace.stages.add(Stage::ClaimIo, t.elapsed().as_secs_f64());
+    match refreshed {
         Ok(0) => {}
         Ok(_) => {
             refresh_snapshot(ctx);
-            if let Some(rec) = ctx.store.get(workload, &cfg) {
-                return serve_hit(ctx, id, &key, &rec);
+            let t = Instant::now();
+            let found = ctx.store.get(workload, &cfg);
+            trace.stages.add(Stage::ShardRead, t.elapsed().as_secs_f64());
+            if let Some(rec) = found {
+                return serve_hit(ctx, id, &key, &rec, trace);
             }
         }
         Err(e) => eprintln!("serve: shard refresh failed for {key}: {e:#}"),
     }
-    serve_miss(ctx, id, workload, cfg, key)
+    serve_miss(ctx, id, workload, cfg, key, trace)
 }
 
 /// A true miss: best warm guess now (the store's incremental neighbor
@@ -999,8 +1078,10 @@ fn serve_miss(
     workload: Workload,
     cfg: SearchConfig,
     key: String,
+    trace: &mut ReqTrace,
 ) -> KernelReply {
     let shard_len = ctx.store.shard_len_for(&key);
+    let t_lookup = Instant::now();
     let spec = cfg.gpu.spec();
     let space = ScheduleSpace::new(workload, &spec);
     let guess = {
@@ -1016,6 +1097,7 @@ fn serve_miss(
                 })
             })
     };
+    trace.stages.add(Stage::SnapshotLookup, t_lookup.elapsed().as_secs_f64());
     let (schedule, source, latency_s, energy_j, avg_power_w) = match guess {
         Some((s, lat, en, pw)) => (s, ServeSource::WarmGuess, lat, en, pw),
         // 0.0 = unknown: no neighbor close enough to estimate from.
@@ -1029,10 +1111,12 @@ fn serve_miss(
     // reply bookkeeping.
     let mut state = ctx.state.lock().expect("state lock");
     let mut reserve = false;
-    if !state.pending.contains(&key) {
+    if !state.pending.contains_key(&key) {
         if ctx.search.fleet.coordinate {
             drop(state);
+            let t_claim = Instant::now();
             let attempt = ctx.inflight.claim(&key);
+            trace.stages.add(Stage::ClaimIo, t_claim.elapsed().as_secs_f64());
             state = ctx.state.lock().expect("state lock");
             match attempt {
                 Ok(Some(lease)) => {
@@ -1043,7 +1127,7 @@ fn serve_miss(
                     // lease the write-back fence must check — and
                     // map-insert order follows lock reacquisition
                     // order, not claim order, so compare explicitly.
-                    let raced = state.pending.contains(&key);
+                    let raced = state.pending.contains_key(&key);
                     let newest = match state.claims.get(&key) {
                         Some(held) => lease.epoch() > held.epoch(),
                         None => true,
@@ -1054,14 +1138,14 @@ fn serve_miss(
                     reserve = !raced;
                 }
                 Ok(None) => {
-                    if !state.pending.contains(&key) {
+                    if !state.pending.contains_key(&key) {
                         // Another daemon is already searching this key:
                         // serve the warm guess, its write-back lands.
                         state.metrics.n_fleet_coalesced += 1;
                     }
                 }
                 Err(e) => {
-                    if !state.pending.contains(&key) {
+                    if !state.pending.contains_key(&key) {
                         eprintln!(
                             "serve: in-flight claim failed for {key}: {e:#} (running unfenced)"
                         );
@@ -1075,13 +1159,12 @@ fn serve_miss(
         }
     }
     if reserve {
-        state.pending.insert(key.clone());
+        state.pending.insert(key.clone(), id.clone());
         state.metrics.n_enqueued += 1;
     }
     let snapshot = state.snapshot.clone();
     let queue_depth = state.pending.len();
     let t = reply_time_s(false, shard_len);
-    state.metrics.record_reply(false, t);
     drop(state);
 
     // The reply reports what actually happened: `enqueued` means the
@@ -1091,6 +1174,7 @@ fn serve_miss(
     let mut enqueued = false;
     let mut shed_event: Option<(String, &'static str)> = None;
     let mut via = "queue";
+    let t_enqueue = Instant::now();
     if reserve {
         let job = SearchJob { name: key.clone(), workload, cfg };
         let direct = {
@@ -1132,11 +1216,18 @@ fn serve_miss(
                 }
             }
         }
+        trace.stages.add(Stage::Enqueue, t_enqueue.elapsed().as_secs_f64());
     }
+    // Reply bookkeeping runs AFTER the enqueue so the trace carries
+    // every stage this miss touched; the lock reacquisition is cold-
+    // path only (the hit path records under its one acquisition).
+    let wall_s = trace.start.elapsed().as_secs_f64();
+    ctx.state.lock().expect("state lock").metrics.record_reply(false, t, wall_s, &trace.stages);
     if let Some(log) = &ctx.log {
         if enqueued {
-            log.emit(
+            log.emit_traced(
                 "job_enqueued",
+                &id,
                 vec![
                     ("key", Json::str(key.clone())),
                     ("queue_depth", Json::num(queue_depth as f64)),
@@ -1151,7 +1242,7 @@ fn serve_miss(
             );
         }
     }
-    emit_served(ctx, &key, "miss", source, t);
+    emit_served(ctx, &id, &key, "miss", source, t);
     KernelReply {
         id,
         hit: false,
@@ -1178,10 +1269,15 @@ fn serve_miss(
 /// fleet claim, warm guess, admission); duplicates WITHIN the batch
 /// coalesce exactly like duplicates across frames (the first reserves
 /// `pending`, the rest ride along).
-fn serve_batch(ctx: &Ctx, id: String, items: Vec<Result<BatchItem, Reject>>) -> Response {
+fn serve_batch(
+    ctx: &Ctx,
+    id: String,
+    items: Vec<Result<BatchItem, Reject>>,
+    parse_s: f64,
+) -> Response {
     let n = items.len();
     let mut replies: Vec<Option<Response>> = vec![None; n];
-    let mut misses: Vec<(usize, BatchItem, SearchConfig, String)> = Vec::new();
+    let mut misses: Vec<(usize, BatchItem, SearchConfig, String, ReqTrace)> = Vec::new();
     for (i, item) in items.into_iter().enumerate() {
         match item {
             Err(rej) => {
@@ -1200,28 +1296,34 @@ fn serve_batch(ctx: &Ctx, id: String, items: Vec<Result<BatchItem, Reject>>) -> 
                     &config_fingerprint(&cfg),
                 );
                 ctx.state.lock().expect("state lock").heat.touch(&key);
-                if let Some(rec) = ctx.store.get(item.workload, &cfg) {
-                    let hit = serve_hit(ctx, item.id.clone(), &key, &rec);
+                // Per-item wall clock starts when the batch reaches the
+                // item; the frame-level parse is recorded once below.
+                let mut trace = ReqTrace::begin(Instant::now());
+                let t = Instant::now();
+                let found = ctx.store.get(item.workload, &cfg);
+                trace.stages.add(Stage::ShardRead, t.elapsed().as_secs_f64());
+                if let Some(rec) = found {
+                    let hit = serve_hit(ctx, item.id.clone(), &key, &rec, &trace);
                     replies[i] = Some(Response::Kernel(hit));
                 } else {
-                    misses.push((i, item, cfg, key));
+                    misses.push((i, item, cfg, key, trace));
                 }
             }
         }
     }
     let mut refreshed_keys: HashSet<String> = HashSet::new();
-    for (i, item, cfg, key) in misses {
+    for (i, item, cfg, key, mut trace) in misses {
         let reply = if refreshed_keys.insert(key.clone()) {
-            serve_memory_miss(ctx, item.id, item.workload, cfg, key)
+            serve_memory_miss(ctx, item.id, item.workload, cfg, key, &mut trace)
         } else if let Some(rec) = ctx.store.get(item.workload, &cfg) {
             // An earlier duplicate's targeted refresh pulled the key in
             // (another daemon had landed it): plain hit, no re-refresh.
-            serve_hit(ctx, item.id, &key, &rec)
+            serve_hit(ctx, item.id, &key, &rec, &trace)
         } else {
             // An earlier position already paid this key's targeted
             // refresh within this frame — skip straight to the miss
             // machinery, where `pending` coalesces the search.
-            serve_miss(ctx, item.id, item.workload, cfg, key)
+            serve_miss(ctx, item.id, item.workload, cfg, key, &mut trace)
         };
         replies[i] = Some(Response::Kernel(reply));
     }
@@ -1229,15 +1331,26 @@ fn serve_batch(ctx: &Ctx, id: String, items: Vec<Result<BatchItem, Reject>>) -> 
         let mut state = ctx.state.lock().expect("state lock");
         state.metrics.n_batch_frames += 1;
         state.metrics.n_batch_requests += n;
+        // The frame parse covered all N positions in one go — charge it
+        // once per frame, same as the wire charged one syscall.
+        state.metrics.record_stage(Stage::Parse, parse_s);
     }
     let replies = replies.into_iter().map(|r| r.expect("every position answered")).collect();
     Response::Batch { id, replies }
 }
 
-fn emit_served(ctx: &Ctx, key: &str, result: &str, source: ServeSource, reply_time: f64) {
+fn emit_served(
+    ctx: &Ctx,
+    req: &str,
+    key: &str,
+    result: &str,
+    source: ServeSource,
+    reply_time: f64,
+) {
     if let Some(log) = &ctx.log {
-        log.emit(
+        log.emit_traced(
             "job_served",
+            req,
             vec![
                 ("key", Json::str(key)),
                 ("result", Json::str(result)),

@@ -1,14 +1,21 @@
-//! Serving metrics: hit rate, reply-time percentiles (simulated
-//! clock), queue depth, and the measurement-cost ledger.
+//! Serving metrics: hit rate, reply-time histograms on both clocks,
+//! per-stage hot-path histograms, and the measurement-cost ledger.
 //!
-//! Reply times are charged on the same simulated clock as the search
-//! framework (the Fig. 5 currency): a store lookup costs a base term
-//! plus a per-record scan of the key's shard, and a miss additionally
-//! pays the nearest-neighbor scan that produces the warm guess. This
-//! keeps hits and misses distinguishable in p50/p99 without the noise
-//! of host wall-clock.
+//! Reply times are charged on two clocks at once. The **simulated**
+//! clock is the search framework's currency (Fig. 5): a store lookup
+//! costs a base term plus a per-record scan of the key's shard, and a
+//! miss additionally pays the nearest-neighbor scan that produces the
+//! warm guess — hits and misses stay distinguishable without host
+//! noise. The **wall clock** is what a client actually waits, recorded
+//! since ISSUE 6 so `BENCH_serving.json` and the `metrics` op report
+//! real latencies.
+//!
+//! All distributions live in fixed-size [`LogHistogram`]s: O(1)
+//! allocation-free record (folded under the state-lock acquisition the
+//! reply bookkeeping already pays), bounded memory for the lifetime of
+//! the daemon, and exact fleet-wide merging.
 
-use crate::util::stats;
+use crate::telemetry::{LogHistogram, Stage, StageTrace, N_STAGES};
 
 /// Simulated base cost of one store lookup.
 pub const REPLY_LOOKUP_BASE_S: f64 = 50e-6;
@@ -17,11 +24,6 @@ pub const REPLY_LOOKUP_BASE_S: f64 = 50e-6;
 pub const REPLY_PER_RECORD_S: f64 = 200e-9;
 /// Simulated cost of the neighbor scan + re-legalization on a miss.
 pub const REPLY_MISS_NEIGHBOR_S: f64 = 2e-3;
-
-/// Reply-time samples kept for the percentile window: a long-running
-/// daemon must not grow memory per request, so p50/p99 are computed
-/// over a sliding window of the most recent replies.
-pub const REPLY_WINDOW: usize = 4096;
 
 /// Aggregate serving counters for one daemon lifetime.
 #[derive(Debug, Clone, Default)]
@@ -62,26 +64,39 @@ pub struct ServeMetrics {
     /// Interval-poll fallback passes that actually ingested changes
     /// the notify channel had missed (0 on a healthy push path).
     pub n_poll_refresh: usize,
-    /// Ring buffer of the last [`REPLY_WINDOW`] reply times.
-    reply_times_s: Vec<f64>,
-    reply_next: usize,
+    /// Simulated-clock reply times (the Fig. 5 currency).
+    reply_sim: LogHistogram,
+    /// Wall-clock reply times: frame receipt → reply frame built.
+    reply_wall: LogHistogram,
+    /// Wall-clock per-stage histograms, indexed by `Stage as usize`.
+    stages: [LogHistogram; N_STAGES],
 }
 
 impl ServeMetrics {
-    /// Record one served request.
-    pub fn record_reply(&mut self, hit: bool, reply_time_s: f64) {
+    /// Record one served request: both clocks plus every stage the
+    /// request's trace touched. One call, already under the state
+    /// lock — no allocation, no syscalls.
+    pub fn record_reply(&mut self, hit: bool, sim_s: f64, wall_s: f64, trace: &StageTrace) {
         self.n_requests += 1;
         if hit {
             self.n_hits += 1;
         } else {
             self.n_misses += 1;
         }
-        if self.reply_times_s.len() < REPLY_WINDOW {
-            self.reply_times_s.push(reply_time_s);
-        } else {
-            self.reply_times_s[self.reply_next] = reply_time_s;
-            self.reply_next = (self.reply_next + 1) % REPLY_WINDOW;
+        self.reply_sim.record(sim_s);
+        self.reply_wall.record(wall_s);
+        for stage in Stage::ALL {
+            if let Some(secs) = trace.get(stage) {
+                self.stages[stage as usize].record(secs);
+            }
         }
+    }
+
+    /// Record a single stage outside a reply trace (frame-level parse
+    /// for batches; reply write, which is only measurable after the
+    /// reply has left the state lock).
+    pub fn record_stage(&mut self, stage: Stage, secs: f64) {
+        self.stages[stage as usize].record(secs);
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -92,17 +107,45 @@ impl ServeMetrics {
     }
 
     pub fn p50_reply_s(&self) -> f64 {
-        if self.reply_times_s.is_empty() {
-            return 0.0;
-        }
-        stats::percentile(&self.reply_times_s, 50.0)
+        self.reply_sim.quantile(50.0)
     }
 
     pub fn p99_reply_s(&self) -> f64 {
-        if self.reply_times_s.is_empty() {
-            return 0.0;
-        }
-        stats::percentile(&self.reply_times_s, 99.0)
+        self.reply_sim.quantile(99.0)
+    }
+
+    pub fn reply_sim(&self) -> &LogHistogram {
+        &self.reply_sim
+    }
+
+    pub fn reply_wall(&self) -> &LogHistogram {
+        &self.reply_wall
+    }
+
+    pub fn stage(&self, stage: Stage) -> &LogHistogram {
+        &self.stages[stage as usize]
+    }
+
+    /// Counter name/value pairs, names matching the `stats` wire
+    /// fields — the `metrics` op serves these as its counter map.
+    pub fn counter_pairs(&self) -> [(&'static str, u64); 15] {
+        [
+            ("n_requests", self.n_requests as u64),
+            ("n_hits", self.n_hits as u64),
+            ("n_misses", self.n_misses as u64),
+            ("n_enqueued", self.n_enqueued as u64),
+            ("n_searches_done", self.n_searches_done as u64),
+            ("n_evicted_records", self.n_evicted_records as u64),
+            ("n_shed", self.n_shed as u64),
+            ("n_fleet_coalesced", self.n_fleet_coalesced as u64),
+            ("n_writebacks_fenced", self.n_writebacks_fenced as u64),
+            ("n_writebacks_dropped", self.n_writebacks_dropped as u64),
+            ("measurements_paid", self.measurements_paid as u64),
+            ("n_batch_frames", self.n_batch_frames as u64),
+            ("n_batch_requests", self.n_batch_requests as u64),
+            ("n_notify_refresh", self.n_notify_refresh as u64),
+            ("n_poll_refresh", self.n_poll_refresh as u64),
+        ]
     }
 
     pub fn summary(&self) -> String {
@@ -110,7 +153,7 @@ impl ServeMetrics {
             "requests={} hits={} misses={} hit_rate={:.2} enqueued={} searched={} \
              shed={} fleet_coalesced={} evicted={} wb_fenced={} wb_dropped={} \
              batches={}/{} notify_refresh={} poll_refresh={} \
-             p50={:.2}ms p99={:.2}ms measurements_paid={}",
+             p50={:.2}ms p99={:.2}ms wall_p50={:.3}ms wall_p99={:.3}ms measurements_paid={}",
             self.n_requests,
             self.n_hits,
             self.n_misses,
@@ -128,6 +171,8 @@ impl ServeMetrics {
             self.n_poll_refresh,
             self.p50_reply_s() * 1e3,
             self.p99_reply_s() * 1e3,
+            self.reply_wall.quantile(50.0) * 1e3,
+            self.reply_wall.quantile(99.0) * 1e3,
             self.measurements_paid,
         )
     }
@@ -151,15 +196,26 @@ pub fn reply_time_s(hit: bool, shard_len: usize) -> f64 {
 mod tests {
     use super::*;
 
+    fn hit_trace() -> StageTrace {
+        let mut t = StageTrace::new();
+        t.add(Stage::Parse, 4e-6);
+        t.add(Stage::ShardRead, 9e-6);
+        t
+    }
+
     #[test]
     fn hit_rate_and_percentiles() {
         let mut m = ServeMetrics::default();
         assert_eq!(m.hit_rate(), 0.0);
         assert_eq!(m.p50_reply_s(), 0.0);
         for _ in 0..9 {
-            m.record_reply(true, reply_time_s(true, 100));
+            m.record_reply(true, reply_time_s(true, 100), 30e-6, &hit_trace());
         }
-        m.record_reply(false, reply_time_s(false, 100));
+        let mut miss = hit_trace();
+        miss.add(Stage::SnapshotLookup, 80e-6);
+        miss.add(Stage::ClaimIo, 120e-6);
+        miss.add(Stage::Enqueue, 15e-6);
+        m.record_reply(false, reply_time_s(false, 100), 400e-6, &miss);
         assert_eq!(m.n_requests, 10);
         assert!((m.hit_rate() - 0.9).abs() < 1e-12);
         // The single slow miss shows up at p99 but not p50.
@@ -167,20 +223,34 @@ mod tests {
         assert!(m.p99_reply_s() >= REPLY_MISS_NEIGHBOR_S);
         assert!(m.p50_reply_s() < REPLY_MISS_NEIGHBOR_S);
         assert!(m.summary().contains("hit_rate=0.90"));
+        // Stage histograms saw exactly what the traces carried.
+        assert_eq!(m.stage(Stage::Parse).count(), 10);
+        assert_eq!(m.stage(Stage::ShardRead).count(), 10);
+        assert_eq!(m.stage(Stage::SnapshotLookup).count(), 1);
+        assert_eq!(m.stage(Stage::ClaimIo).count(), 1);
+        assert_eq!(m.stage(Stage::ReplyWrite).count(), 0);
+        assert_eq!(m.reply_wall().count(), 10);
     }
 
     #[test]
-    fn reply_window_stays_bounded_under_load() {
+    fn memory_stays_fixed_under_load() {
         let mut m = ServeMetrics::default();
-        for i in 0..(REPLY_WINDOW + 100) {
-            m.record_reply(true, (i + 1) as f64 * 1e-6);
+        for i in 0..50_000usize {
+            m.record_reply(true, (i + 1) as f64 * 1e-6, 20e-6, &hit_trace());
         }
-        assert_eq!(m.n_requests, REPLY_WINDOW + 100);
-        assert_eq!(m.reply_times_s.len(), REPLY_WINDOW, "ring buffer capped");
-        // Old samples aged out: the minimum surviving sample is from
-        // after the first 100 replies.
-        assert!(m.reply_times_s.iter().all(|&t| t > 100.0 * 1e-6));
+        assert_eq!(m.n_requests, 50_000);
+        // Histograms are fixed arrays: no per-request growth anywhere.
+        assert!(std::mem::size_of::<ServeMetrics>() < 8192);
         assert!(m.p50_reply_s() > 0.0 && m.p99_reply_s() >= m.p50_reply_s());
+    }
+
+    #[test]
+    fn record_stage_feeds_the_out_of_trace_stages() {
+        let mut m = ServeMetrics::default();
+        m.record_stage(Stage::ReplyWrite, 6e-6);
+        m.record_stage(Stage::ReplyWrite, 8e-6);
+        assert_eq!(m.stage(Stage::ReplyWrite).count(), 2);
+        assert_eq!(m.n_requests, 0, "stage-only records are not requests");
     }
 
     #[test]

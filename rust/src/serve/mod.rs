@@ -20,25 +20,32 @@
 //!   sheds cold ones ([`crate::fleet`]);
 //! * [`client`] — a small blocking client (`ecokernel query`, the
 //!   fleet examples);
-//! * [`metrics`] — hit rate, p50/p99 reply time on the simulated
-//!   clock, queue depth, shed/coalesce counters, measurement-cost
-//!   ledger.
+//! * [`metrics`] — hit rate, p50/p99 reply time on the simulated AND
+//!   wall clocks, per-stage hot-path histograms
+//!   ([`crate::telemetry`]), queue depth, shed/coalesce counters,
+//!   measurement-cost ledger; served whole by the `metrics` wire op
+//!   and mergeable fleet-wide ([`client::merged_metrics`]);
+//! * [`bench`] — the `ecokernel bench serve` harness: zipf replay
+//!   against live daemons (single + two-daemon TCP fleet), producing
+//!   the `BENCH_serving.json` baseline.
 //!
 //! Storage is [`crate::store::ShardedStore`]: the tuning store split
 //! across N append-only shard files with last-served LRU eviction and
 //! per-GPU record quotas (the `[serve]` config section); fleet
 //! coordination knobs live in `[fleet]`.
 
+pub mod bench;
 pub mod client;
 pub mod daemon;
 pub mod metrics;
 pub mod protocol;
 
 pub use crate::fleet::ServeAddr;
-pub use client::{BatchError, BatchRequest, ServeClient};
+pub use bench::{run_bench_serve, BenchServeOpts};
+pub use client::{merged_metrics, BatchError, BatchRequest, ServeClient};
 pub use daemon::{Daemon, DaemonConfig, DaemonHandle};
 pub use metrics::ServeMetrics;
 pub use protocol::{
-    error_code, BatchItem, KernelReply, Reject, Request, Response, ServeSource, StatsReply,
-    MAX_BATCH_ITEMS, PROTOCOL_VERSION,
+    error_code, BatchItem, KernelReply, MetricsReply, Reject, Request, Response, ServeSource,
+    StatsReply, MAX_BATCH_ITEMS, METRICS_VERSION, PROTOCOL_VERSION,
 };

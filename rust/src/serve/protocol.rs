@@ -17,6 +17,12 @@
 //!   served. This is the pipelined path: a client packs its queue
 //!   into one write syscall instead of one frame per write;
 //! * `stats` — serving metrics + store counters;
+//! * `metrics` — the full telemetry view: every counter plus the
+//!   reply-time and per-stage wall-clock histograms, as mergeable
+//!   log2-bucket encodings (its payload carries its own
+//!   [`METRICS_VERSION`] so the histogram encoding can evolve without
+//!   a protocol bump). Clients merge N daemons' frames into one fleet
+//!   view; `query --metrics --prom` renders Prometheus text;
 //! * `shutdown` — graceful daemon stop (acked before the socket
 //!   closes).
 //!
@@ -31,12 +37,20 @@ use crate::schedule::Schedule;
 use crate::store::record::{
     schedule_from_json, schedule_to_json, workload_from_json, workload_to_json,
 };
+use crate::telemetry::{bucket_lower, LogHistogram, N_BUCKETS};
 use crate::util::Json;
 use crate::workload::{suites, Workload};
+use std::collections::BTreeMap;
 
 /// Version of the wire protocol; a frame with any other `"v"` is
 /// rejected with [`error_code::VERSION_MISMATCH`].
 pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Version of the `metrics` reply PAYLOAD (the histogram encoding),
+/// carried as `"metrics_v"` inside the frame — orthogonal to
+/// [`PROTOCOL_VERSION`] so richer telemetry never forces a protocol
+/// bump. A client rejects payloads newer than it understands.
+pub const METRICS_VERSION: u64 = 1;
 
 /// Hard cap on `batch` frame size: a runaway client must not make the
 /// daemon buffer an unbounded reply frame.
@@ -72,6 +86,7 @@ pub enum Request {
         items: Vec<Result<BatchItem, Reject>>,
     },
     Stats { id: String },
+    Metrics { id: String },
     Shutdown { id: String },
 }
 
@@ -153,6 +168,10 @@ impl Request {
                 fields.push(("op", Json::str("stats")));
                 fields.push(("id", Json::str(id.clone())));
             }
+            Request::Metrics { id } => {
+                fields.push(("op", Json::str("metrics")));
+                fields.push(("id", Json::str(id.clone())));
+            }
             Request::Shutdown { id } => {
                 fields.push(("op", Json::str("shutdown")));
                 fields.push(("id", Json::str(id.clone())));
@@ -188,6 +207,7 @@ impl Request {
             })?;
         match op {
             "stats" => Ok(Request::Stats { id }),
+            "metrics" => Ok(Request::Metrics { id }),
             "shutdown" => Ok(Request::Shutdown { id }),
             "get_kernel" => {
                 let (workload, gpu, mode) = parse_get_kernel_fields(&v, &id)?;
@@ -535,6 +555,175 @@ impl StatsReply {
     }
 }
 
+/// The `metrics` response frame: the full telemetry view of one daemon
+/// — every serving counter plus reply-time and per-stage wall-clock
+/// histograms — built to be MERGED: [`MetricsReply::merge`] folds N
+/// daemons' frames into one fleet view that is exactly the view a
+/// single daemon would report had it served every request itself
+/// (counters sum; log2-bucket histograms merge losslessly).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsReply {
+    pub id: String,
+    /// Serving counters by their `stats`-field names (`n_requests`,
+    /// `n_hits`, `n_batch_frames`, ...).
+    pub counters: BTreeMap<String, u64>,
+    /// Simulated-clock reply times (the Fig. 5 currency).
+    pub reply_sim_s: LogHistogram,
+    /// Wall-clock reply times: frame receipt → reply frame built.
+    pub reply_wall_s: LogHistogram,
+    /// Wall-clock per-stage histograms keyed by stage name (`parse`,
+    /// `shard_read`, `snapshot_lookup`, `claim_io`, `enqueue`,
+    /// `reply_write`).
+    pub stages: BTreeMap<String, LogHistogram>,
+}
+
+impl MetricsReply {
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> =
+            self.counters.iter().map(|(k, &v)| (k.clone(), Json::num(v as f64))).collect();
+        let stages: BTreeMap<String, Json> =
+            self.stages.iter().map(|(k, h)| (k.clone(), h.to_json())).collect();
+        Json::obj(vec![
+            ("v", Json::num(PROTOCOL_VERSION as f64)),
+            ("id", Json::str(self.id.clone())),
+            ("ok", Json::Bool(true)),
+            ("op", Json::str("metrics")),
+            ("metrics_v", Json::num(METRICS_VERSION as f64)),
+            ("counters", Json::Obj(counters)),
+            ("reply_sim_s", self.reply_sim_s.to_json()),
+            ("reply_wall_s", self.reply_wall_s.to_json()),
+            ("stages", Json::Obj(stages)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<MetricsReply, String> {
+        // Absent `metrics_v` reads as v1 (the first shipped payload);
+        // anything newer than this client is refused rather than
+        // silently mis-decoded.
+        let payload_v = v.get("metrics_v").and_then(|x| x.as_f64()).unwrap_or(1.0) as u64;
+        if payload_v > METRICS_VERSION {
+            return Err(format!(
+                "metrics payload is v{payload_v}, this client understands v{METRICS_VERSION}"
+            ));
+        }
+        let mut counters = BTreeMap::new();
+        if let Some(Json::Obj(m)) = v.get("counters") {
+            for (k, n) in m {
+                if let Some(n) = n.as_f64() {
+                    counters.insert(k.clone(), n as u64);
+                }
+            }
+        }
+        let mut stages = BTreeMap::new();
+        if let Some(Json::Obj(m)) = v.get("stages") {
+            for (k, h) in m {
+                stages.insert(k.clone(), LogHistogram::from_json(h));
+            }
+        }
+        let hist = |key: &str| v.get(key).map(LogHistogram::from_json).unwrap_or_default();
+        Ok(MetricsReply {
+            id: get_str(v, "id")?,
+            counters,
+            reply_sim_s: hist("reply_sim_s"),
+            reply_wall_s: hist("reply_wall_s"),
+            stages,
+        })
+    }
+
+    /// A counter by its `stats`-field name; 0 when absent.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Fold another daemon's metrics in (fleet aggregation): counters
+    /// sum, histograms merge bucket-wise. Associative and commutative,
+    /// so a fleet client can fold daemons in any order.
+    pub fn merge(&mut self, other: &MetricsReply) {
+        for (k, &v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        self.reply_sim_s.merge(&other.reply_sim_s);
+        self.reply_wall_s.merge(&other.reply_wall_s);
+        for (name, h) in &other.stages {
+            match self.stages.get_mut(name) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.stages.insert(name.clone(), h.clone());
+                }
+            }
+        }
+    }
+
+    /// Requests amortized per `batch` frame — how many `get_kernel`s
+    /// the batched path carried per socket write. 0.0 before any batch
+    /// frame was served.
+    pub fn frames_per_syscall(&self) -> f64 {
+        let frames = self.counter("n_batch_frames");
+        if frames == 0 {
+            return 0.0;
+        }
+        self.counter("n_batch_requests") as f64 / frames as f64
+    }
+
+    /// Prometheus text exposition (v0.0.4): counters as `_total`
+    /// counters, histograms as cumulative-`le` histograms with the
+    /// log2 bucket upper bounds, stages as one histogram family with a
+    /// `stage` label.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, value) in &self.counters {
+            let base = name.strip_prefix("n_").unwrap_or(name);
+            let _ = writeln!(out, "# TYPE ecokernel_{base}_total counter");
+            let _ = writeln!(out, "ecokernel_{base}_total {value}");
+        }
+        prom_histogram(&mut out, "ecokernel_reply_sim_seconds", None, &self.reply_sim_s);
+        prom_histogram(&mut out, "ecokernel_reply_wall_seconds", None, &self.reply_wall_s);
+        let _ = writeln!(out, "# TYPE ecokernel_stage_seconds histogram");
+        for (stage, h) in &self.stages {
+            prom_histogram(&mut out, "ecokernel_stage_seconds", Some(stage), h);
+        }
+        out
+    }
+}
+
+/// One Prometheus histogram family: cumulative `le` buckets (empty
+/// leading buckets elided, counts stay cumulative), then `_sum` and
+/// `_count`. With a label the `# TYPE` line is the caller's (one per
+/// family, not per label value).
+fn prom_histogram(out: &mut String, name: &str, label: Option<&str>, h: &LogHistogram) {
+    use std::fmt::Write as _;
+    let tag = |le: &str| match label {
+        Some(v) => format!("{{stage=\"{v}\",le=\"{le}\"}}"),
+        None => format!("{{le=\"{le}\"}}"),
+    };
+    let suffix = match label {
+        Some(v) => format!("{{stage=\"{v}\"}}"),
+        None => String::new(),
+    };
+    if label.is_none() {
+        let _ = writeln!(out, "# TYPE {name} histogram");
+    }
+    let total = h.count();
+    let mut cumulative = 0u64;
+    for i in 0..N_BUCKETS {
+        cumulative += h.bucket(i);
+        // Elide the all-zero head and the saturated tail; what prints
+        // keeps `le` and the cumulative counts monotone.
+        if cumulative == 0 {
+            continue;
+        }
+        let le = format!("{:e}", bucket_lower(i + 1));
+        let _ = writeln!(out, "{name}_bucket{} {cumulative}", tag(&le));
+        if cumulative == total {
+            break;
+        }
+    }
+    let _ = writeln!(out, "{name}_bucket{} {}", tag("+Inf"), h.count());
+    let _ = writeln!(out, "{name}_sum{suffix} {}", h.sum());
+    let _ = writeln!(out, "{name}_count{suffix} {}", h.count());
+}
+
 fn opt_usize(v: &Json, key: &str) -> usize {
     v.get(key).and_then(|x| x.as_f64()).unwrap_or(0.0) as usize
 }
@@ -554,6 +743,7 @@ pub enum Response {
     /// answers request *i*, and is a `Kernel` or `Error` frame.
     Batch { id: String, replies: Vec<Response> },
     Stats(StatsReply),
+    Metrics(MetricsReply),
     ShutdownAck { id: String },
     Error { id: Option<String>, code: String, message: String },
 }
@@ -570,6 +760,7 @@ impl Response {
                 ("replies", Json::arr(replies.iter().map(|r| r.to_json()))),
             ]),
             Response::Stats(r) => r.to_json(),
+            Response::Metrics(r) => r.to_json(),
             Response::ShutdownAck { id } => Json::obj(vec![
                 ("v", Json::num(PROTOCOL_VERSION as f64)),
                 ("id", Json::str(id.clone())),
@@ -636,6 +827,7 @@ impl Response {
                 Ok(Response::Batch { id: get_str(v, "id")?, replies })
             }
             "stats" => Ok(Response::Stats(StatsReply::from_json(v)?)),
+            "metrics" => Ok(Response::Metrics(MetricsReply::from_json(v)?)),
             "shutdown" => Ok(Response::ShutdownAck { id: get_str(v, "id")? }),
             other => Err(format!("unknown response op '{other}'")),
         }
@@ -675,6 +867,7 @@ mod tests {
             },
             Request::GetKernel { id: "c2".into(), workload: suites::CONV2, gpu: None, mode: None },
             Request::Stats { id: "c3".into() },
+            Request::Metrics { id: "c5".into() },
             Request::Shutdown { id: "c4".into() },
         ];
         for req in reqs {
@@ -967,6 +1160,214 @@ mod tests {
         // identity, and repeated encodes are byte-identical.
         assert_eq!(parsed.to_string(), line);
         assert_eq!(reply.to_json().to_string(), line);
+    }
+
+    /// The `stats` payload schema is byte-pinned the same way the
+    /// kernel reply is: deterministic sorted-key serialization means
+    /// pinning the exact key set (top level and inside `"stats"`) pins
+    /// the bytes for given values. New telemetry lives in the
+    /// `metrics` op — a field slipping into `stats` breaks this test
+    /// before it breaks an old client.
+    #[test]
+    fn stats_reply_wire_fields_are_pinned() {
+        let reply = full_stats_reply();
+        let line = reply.to_json().to_string();
+        let parsed = Json::parse(&line).unwrap();
+        let top: Vec<&str> = match &parsed {
+            Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(top, vec!["id", "ok", "op", "stats", "v"], "{line}");
+        let inner: Vec<&str> = match parsed.get("stats") {
+            Some(Json::Obj(m)) => m.keys().map(|k| k.as_str()).collect(),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(
+            inner,
+            vec![
+                "backlog_len",
+                "heat_histogram",
+                "hit_rate",
+                "measurements_paid",
+                "n_batch_frames",
+                "n_batch_requests",
+                "n_enqueued",
+                "n_evicted_records",
+                "n_fleet_coalesced",
+                "n_hits",
+                "n_misses",
+                "n_notify_refresh",
+                "n_poll_refresh",
+                "n_records",
+                "n_requests",
+                "n_searches_done",
+                "n_shards",
+                "n_shed",
+                "n_writebacks_dropped",
+                "n_writebacks_fenced",
+                "p50_reply_s",
+                "p99_reply_s",
+                "pending_keys",
+                "queue_depth",
+                "shard_records",
+            ],
+            "{line}"
+        );
+        // Canonical serialization: encode → parse → encode is identity.
+        assert_eq!(parsed.to_string(), line);
+        assert_eq!(reply.to_json().to_string(), line);
+    }
+
+    fn full_stats_reply() -> StatsReply {
+        StatsReply {
+            id: "pin".into(),
+            n_requests: 10,
+            n_hits: 7,
+            n_misses: 3,
+            n_enqueued: 3,
+            n_searches_done: 2,
+            n_evicted_records: 1,
+            queue_depth: 1,
+            n_records: 9,
+            n_shards: 8,
+            hit_rate: 0.7,
+            p50_reply_s: 5e-5,
+            p99_reply_s: 2.1e-3,
+            measurements_paid: 140,
+            n_shed: 4,
+            n_fleet_coalesced: 2,
+            backlog_len: 3,
+            pending_keys: 5,
+            n_writebacks_fenced: 1,
+            n_writebacks_dropped: 2,
+            n_batch_frames: 3,
+            n_batch_requests: 17,
+            n_notify_refresh: 6,
+            n_poll_refresh: 1,
+            shard_records: vec![2, 0, 4, 3],
+            heat_histogram: vec![1, 0, 2],
+        }
+    }
+
+    /// Absent-field = 0 across ALL frame generations: gen-1 (pre-fleet,
+    /// covered above), gen-2 (fleet counters but no batch/notify
+    /// fields), and gen-3 (current, covered by the roundtrip). Each
+    /// older frame must parse with its era's fields intact and every
+    /// later field zero/empty.
+    #[test]
+    fn stats_reply_back_compat_across_frame_generations() {
+        // Gen-2: a PR-3/PR-4-era daemon — shed/backlog/fence/shard
+        // data, but nothing from the batching or notify eras.
+        let line = r#"{"v":1,"id":"g2","ok":true,"op":"stats","stats":{
+            "n_requests":8,"n_hits":5,"n_misses":3,"n_enqueued":3,"n_searches_done":2,
+            "n_evicted_records":0,"queue_depth":1,"n_records":5,"n_shards":4,
+            "hit_rate":0.625,"p50_reply_s":6e-5,"p99_reply_s":2.2e-3,"measurements_paid":90,
+            "n_shed":1,"n_fleet_coalesced":1,"backlog_len":0,"pending_keys":2,
+            "n_writebacks_fenced":1,"n_writebacks_dropped":0,
+            "shard_records":[2,1,1,1],"heat_histogram":[3,1]}}"#
+            .replace('\n', "");
+        match Response::parse_line(&line).unwrap() {
+            Response::Stats(back) => {
+                assert_eq!(back.n_requests, 8);
+                assert_eq!(back.n_shed, 1, "gen-2 fields parse");
+                assert_eq!(back.n_writebacks_fenced, 1);
+                assert_eq!(back.shard_records, vec![2, 1, 1, 1]);
+                assert_eq!(back.n_batch_frames, 0, "gen-3 fields default to 0");
+                assert_eq!(back.n_batch_requests, 0);
+                assert_eq!(back.n_notify_refresh, 0);
+                assert_eq!(back.n_poll_refresh, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    fn sample_metrics_reply(id: &str, seed: &[f64]) -> MetricsReply {
+        let mut reply_sim_s = LogHistogram::new();
+        let mut reply_wall_s = LogHistogram::new();
+        let mut parse = LogHistogram::new();
+        for &v in seed {
+            reply_sim_s.record(v);
+            reply_wall_s.record(v * 0.5);
+            parse.record(v * 0.1);
+        }
+        MetricsReply {
+            id: id.into(),
+            counters: [
+                ("n_requests".to_string(), seed.len() as u64),
+                ("n_hits".to_string(), seed.len() as u64 / 2),
+                ("n_batch_frames".to_string(), 2),
+                ("n_batch_requests".to_string(), 16),
+            ]
+            .into_iter()
+            .collect(),
+            reply_sim_s,
+            reply_wall_s,
+            stages: [("parse".to_string(), parse)].into_iter().collect(),
+        }
+    }
+
+    #[test]
+    fn metrics_reply_roundtrip() {
+        let reply = sample_metrics_reply("m1", &[5e-5, 7e-5, 2.1e-3, 9e-4]);
+        let line = reply.to_json().to_string();
+        match Response::parse_line(&line).unwrap() {
+            Response::Metrics(back) => assert_eq!(back, reply),
+            other => panic!("{other:?}"),
+        }
+        // The payload carries its own version...
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("metrics_v").and_then(Json::as_f64), Some(1.0));
+        // ...and a payload newer than the client is refused.
+        let newer = line.replace(r#""metrics_v":1"#, r#""metrics_v":2"#);
+        assert!(Response::parse_line(&newer).unwrap_err().contains("metrics payload"));
+    }
+
+    /// The fleet property the merge client relies on: merging two
+    /// daemons' metrics equals the metrics of one daemon that served
+    /// both sample streams.
+    #[test]
+    fn metrics_merge_equals_union_and_commutes() {
+        let a_samples = [5e-5, 6e-5, 2.1e-3];
+        let b_samples = [7e-5, 9e-4];
+        let union: Vec<f64> = a_samples.iter().chain(&b_samples).copied().collect();
+        let a = sample_metrics_reply("a", &a_samples);
+        let b = sample_metrics_reply("b", &b_samples);
+        let expect = sample_metrics_reply("a", &union);
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab.reply_sim_s, expect.reply_sim_s);
+        assert_eq!(ab.reply_wall_s, expect.reply_wall_s);
+        assert_eq!(ab.stages, expect.stages);
+        assert_eq!(ab.counter("n_requests"), 5);
+        assert_eq!(ab.counter("n_batch_frames"), 4);
+        assert_eq!(ab.frames_per_syscall(), 8.0);
+
+        let mut ba = b;
+        ba.merge(&a);
+        assert_eq!(ba.reply_sim_s, ab.reply_sim_s, "merge commutes");
+        assert_eq!(ba.counters, ab.counters);
+    }
+
+    #[test]
+    fn metrics_prometheus_exposition() {
+        let reply = sample_metrics_reply("m2", &[5e-5, 7e-5, 2.1e-3]);
+        let prom = reply.to_prometheus();
+        assert!(prom.contains("# TYPE ecokernel_requests_total counter"), "{prom}");
+        assert!(prom.contains("ecokernel_requests_total 3"), "{prom}");
+        assert!(prom.contains("# TYPE ecokernel_reply_wall_seconds histogram"), "{prom}");
+        assert!(prom.contains("ecokernel_reply_sim_seconds_bucket{le=\"+Inf\"} 3"), "{prom}");
+        assert!(prom.contains("ecokernel_reply_sim_seconds_count 3"), "{prom}");
+        assert!(prom.contains("ecokernel_stage_seconds_bucket{stage=\"parse\",le="), "{prom}");
+        assert!(prom.contains("ecokernel_stage_seconds_count{stage=\"parse\"} 3"), "{prom}");
+        // Cumulative bucket counts are monotone non-decreasing.
+        let mut last = 0u64;
+        for line in prom.lines().filter(|l| l.starts_with("ecokernel_reply_sim_seconds_bucket")) {
+            let n: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(n >= last, "{line}");
+            last = n;
+        }
+        assert_eq!(last, 3);
     }
 
     #[test]

@@ -1,0 +1,313 @@
+//! Fixed-size mergeable log2-bucket histogram.
+//!
+//! The serving fleet needs percentiles that are cheap to record on the
+//! exact-hit path, bounded in memory no matter how long a daemon runs,
+//! and exactly mergeable across daemons. A log2-bucket histogram gives
+//! all three: `record` is a handful of integer ops on the f64 bit
+//! pattern (no `log2()` call, no allocation), the struct is a fixed
+//! array of counters, and `merge` is elementwise addition — the merged
+//! histogram is *identical* to the histogram of the concatenated sample
+//! streams, which is what lets a fleet client sum N daemons' views into
+//! one.
+//!
+//! Bucket `i` covers `[2^(MIN_LOG2+i), 2^(MIN_LOG2+i+1))` seconds, so a
+//! quantile is accurate to one power-of-two bucket width (a factor of
+//! `√2` either way from the geometric midpoint we report, before the
+//! clamp to the observed `[min, max]` tightens it further).
+
+use crate::util::Json;
+
+/// Number of buckets. With `MIN_LOG2 = -30` the span is
+/// `[2^-30 s, 2^34 s)` ≈ 1 ns … 500 years — every wall-clock or
+/// simulated duration the serving path can produce, with slack.
+pub const N_BUCKETS: usize = 64;
+
+/// log2 of the lower bound of bucket 0, in seconds (≈ 0.93 ns).
+/// Anything smaller (including zero) lands in bucket 0.
+pub const MIN_LOG2: i32 = -30;
+
+/// Fixed-size log2-bucket histogram of durations in seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    buckets: [u64; N_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            buckets: [0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+/// Bucket index for a duration: `clamp(floor(log2(v)) - MIN_LOG2)`.
+/// The exponent comes straight from the f64 bit pattern — no float
+/// math, no branches beyond the clamps — so recording is O(1) and
+/// allocation-free by construction.
+fn bucket_of(v: f64) -> usize {
+    if !(v.is_finite() && v > 0.0) {
+        return 0;
+    }
+    // IEEE-754 biased exponent; subnormals give -1023 and clamp to 0.
+    let e = ((v.to_bits() >> 52) & 0x7ff) as i32 - 1023;
+    (e - MIN_LOG2).clamp(0, N_BUCKETS as i32 - 1) as usize
+}
+
+/// Lower bound of bucket `i` in seconds.
+pub fn bucket_lower(i: usize) -> f64 {
+    ((MIN_LOG2 + i as i32) as f64).exp2()
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one duration (seconds). O(1), allocation-free.
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.buckets[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Fold another histogram in. The result equals the histogram of
+    /// the two sample streams concatenated — merge is associative and
+    /// commutative, so fleet aggregation order never matters.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded value (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Raw count of bucket `i` (for merge pinning and exposition).
+    pub fn bucket(&self, i: usize) -> u64 {
+        self.buckets[i]
+    }
+
+    /// Nearest-rank quantile, `p` in `0..=100`. Walks the cumulative
+    /// counts and reports the geometric midpoint of the winning bucket,
+    /// clamped to the observed `[min, max]` — so the error is at most
+    /// one bucket width and exact at the extremes. Allocation-free.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.count);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                let mid = ((MIN_LOG2 + i as i32) as f64 + 0.5).exp2();
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Wire encoding: counts keyed by bucket index, only non-zero
+    /// buckets present (sparse — a fresh daemon's histogram is tiny on
+    /// the wire).
+    pub fn to_json(&self) -> Json {
+        let sparse: std::collections::BTreeMap<String, Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(i, &n)| (i.to_string(), Json::num(n as f64)))
+            .collect();
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum)),
+            ("min", Json::num(self.min())),
+            ("max", Json::num(self.max())),
+            ("buckets", Json::Obj(sparse)),
+        ])
+    }
+
+    /// Decode the wire form. Tolerant: absent fields mean zero/empty,
+    /// unknown bucket indices are ignored (a newer daemon with more
+    /// buckets degrades gracefully against an older client).
+    pub fn from_json(v: &Json) -> LogHistogram {
+        let count = v.get("count").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let mut buckets = [0u64; N_BUCKETS];
+        if let Some(Json::Obj(m)) = v.get("buckets") {
+            for (k, n) in m {
+                if let (Ok(i), Some(n)) = (k.parse::<usize>(), n.as_f64()) {
+                    if i < N_BUCKETS {
+                        buckets[i] = n as u64;
+                    }
+                }
+            }
+        }
+        let (min, max) = if count > 0 {
+            (
+                v.get("min").and_then(Json::as_f64).unwrap_or(0.0),
+                v.get("max").and_then(Json::as_f64).unwrap_or(0.0),
+            )
+        } else {
+            (f64::INFINITY, f64::NEG_INFINITY)
+        };
+        LogHistogram {
+            buckets,
+            count,
+            sum: v.get("sum").and_then(Json::as_f64).unwrap_or(0.0),
+            min,
+            max,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_places_values_in_log2_buckets() {
+        let mut h = LogHistogram::new();
+        h.record(1.0); // 2^0 → bucket -MIN_LOG2 = 30
+        h.record(1.5); // same bucket
+        h.record(2.0); // bucket 31
+        assert_eq!(h.bucket(30), 2);
+        assert_eq!(h.bucket(31), 1);
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_values_clamp_to_bucket_zero() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(f64::NAN);
+        h.record(1e-300); // far below 2^MIN_LOG2
+        assert_eq!(h.bucket(0), 4);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), 0.0);
+    }
+
+    #[test]
+    fn huge_values_clamp_to_last_bucket() {
+        let mut h = LogHistogram::new();
+        h.record(1e300);
+        assert_eq!(h.bucket(N_BUCKETS - 1), 1);
+        assert_eq!(h.max(), 1e300);
+    }
+
+    #[test]
+    fn quantile_is_exact_at_extremes_and_bounded_between() {
+        let mut h = LogHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3); // 1ms..100ms
+        }
+        assert_eq!(h.quantile(0.0), 1e-3);
+        assert_eq!(h.quantile(100.0), 0.1);
+        // p50 of 1..=100 ms is 50ms; one bucket = factor 2 either way.
+        let p50 = h.quantile(50.0);
+        assert!((0.025..=0.1).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn empty_histogram_is_inert() {
+        let h = LogHistogram::new();
+        assert_eq!(h.quantile(50.0), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn merge_equals_histogram_of_concatenated_streams() {
+        let (mut a, mut b, mut union) =
+            (LogHistogram::new(), LogHistogram::new(), LogHistogram::new());
+        for v in [1e-6, 3e-5, 7e-4, 2e-3] {
+            a.record(v);
+            union.record(v);
+        }
+        for v in [9e-7, 4e-4, 0.5] {
+            b.record(v);
+            union.record(v);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged, union);
+        let mut other_order = b;
+        other_order.merge(&a);
+        assert_eq!(other_order, union);
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let mut h = LogHistogram::new();
+        for v in [1e-6, 5e-5, 5e-5, 2e-3, 40.0] {
+            h.record(v);
+        }
+        let back = LogHistogram::from_json(&h.to_json());
+        assert_eq!(back, h);
+        // Empty histogram roundtrips too.
+        let empty = LogHistogram::new();
+        assert_eq!(LogHistogram::from_json(&empty.to_json()), empty);
+    }
+}

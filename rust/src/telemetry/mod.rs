@@ -1,0 +1,19 @@
+//! Serving telemetry primitives (ISSUE 6).
+//!
+//! Pure data structures — no I/O, no unix gating — shared by the
+//! daemon's hot-path instrumentation, the `metrics` wire op, the fleet
+//! merge client, and the `bench serve` harness:
+//!
+//! - [`LogHistogram`]: fixed-size mergeable log2-bucket histogram.
+//!   O(1) allocation-free record, bounded memory forever, quantiles
+//!   accurate to one bucket width, and `merge` that exactly equals the
+//!   histogram of the concatenated sample streams.
+//! - [`Stage`] / [`StageTrace`]: the daemon hot-path stage taxonomy
+//!   (parse, shard read, snapshot lookup, claim I/O, enqueue, reply
+//!   write) and a stack-only per-request accumulator.
+
+mod histogram;
+mod stages;
+
+pub use histogram::{bucket_lower, LogHistogram, MIN_LOG2, N_BUCKETS};
+pub use stages::{Stage, StageTrace, N_STAGES};

@@ -1,0 +1,115 @@
+//! Stage taxonomy for the daemon hot path, plus a stack-only trace
+//! accumulator.
+//!
+//! A request's life inside the daemon decomposes into fixed stages;
+//! each request carries a [`StageTrace`] — two fixed arrays on the
+//! stack, no heap — and the durations fold into per-stage
+//! [`LogHistogram`](super::LogHistogram)s under the state lock the
+//! reply bookkeeping already takes. Telemetry therefore adds no
+//! allocation and no extra syscall to the exact-hit path
+//! (`Instant::now` is a vDSO `clock_gettime`, not a syscall).
+
+/// Number of traced stages — sized for fixed arrays.
+pub const N_STAGES: usize = 6;
+
+/// One stage of the daemon hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Frame parse: bytes → `Request`.
+    Parse = 0,
+    /// Shard read-lock + record lookup in the sharded store.
+    ShardRead = 1,
+    /// Neighbor/snapshot lookup for warm-guess replies on a miss.
+    SnapshotLookup = 2,
+    /// Claim I/O on the miss path: targeted shard refresh plus the
+    /// fleet in-flight claim (lease file create).
+    ClaimIo = 3,
+    /// Handing the search job to the worker pool or backlog.
+    Enqueue = 4,
+    /// Serializing + writing the reply frame back to the socket.
+    ReplyWrite = 5,
+}
+
+impl Stage {
+    /// All stages, in hot-path order.
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::Parse,
+        Stage::ShardRead,
+        Stage::SnapshotLookup,
+        Stage::ClaimIo,
+        Stage::Enqueue,
+        Stage::ReplyWrite,
+    ];
+
+    /// Stable wire/exposition name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::ShardRead => "shard_read",
+            Stage::SnapshotLookup => "snapshot_lookup",
+            Stage::ClaimIo => "claim_io",
+            Stage::Enqueue => "enqueue",
+            Stage::ReplyWrite => "reply_write",
+        }
+    }
+
+    /// Inverse of [`Stage::name`] (for decoding merged fleet views).
+    pub fn parse_name(name: &str) -> Option<Stage> {
+        Stage::ALL.into_iter().find(|s| s.name() == name)
+    }
+}
+
+/// Per-request stage durations: fixed arrays, stack-allocated, cheap
+/// to pass down the serve call chain by `&mut`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTrace {
+    secs: [f64; N_STAGES],
+    set: [bool; N_STAGES],
+}
+
+impl StageTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a duration to a stage. Accumulates — the miss path touches
+    /// claim I/O twice (refresh, then the in-flight claim).
+    pub fn add(&mut self, stage: Stage, secs: f64) {
+        self.secs[stage as usize] += secs;
+        self.set[stage as usize] = true;
+    }
+
+    /// The accumulated duration, if the stage ran for this request.
+    pub fn get(&self, stage: Stage) -> Option<f64> {
+        if self.set[stage as usize] {
+            Some(self.secs[stage as usize])
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for s in Stage::ALL {
+            assert_eq!(Stage::parse_name(s.name()), Some(s));
+        }
+        assert_eq!(Stage::parse_name("nope"), None);
+    }
+
+    #[test]
+    fn trace_accumulates_per_stage() {
+        let mut t = StageTrace::new();
+        assert_eq!(t.get(Stage::ClaimIo), None);
+        t.add(Stage::ClaimIo, 1e-4);
+        t.add(Stage::ClaimIo, 2e-4);
+        t.add(Stage::Parse, 5e-6);
+        assert!((t.get(Stage::ClaimIo).unwrap() - 3e-4).abs() < 1e-12);
+        assert!((t.get(Stage::Parse).unwrap() - 5e-6).abs() < 1e-12);
+        assert_eq!(t.get(Stage::Enqueue), None);
+    }
+}

@@ -8,7 +8,8 @@
 
 use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
 use ecokernel::fleet::InflightTable;
-use ecokernel::serve::{Daemon, DaemonConfig, DaemonHandle, ServeAddr, ServeClient};
+use ecokernel::serve::{merged_metrics, Daemon, DaemonConfig, DaemonHandle, ServeAddr, ServeClient};
+use ecokernel::telemetry::N_BUCKETS;
 use ecokernel::store::lease::Lease;
 use ecokernel::store::sharded::{shard_lease_name, LEASES_DIR};
 use ecokernel::store::{config_fingerprint, serve_key, ShardedStore, TuningRecord};
@@ -165,6 +166,84 @@ fn two_daemons_one_store_search_once_fleet_wide() {
     assert_eq!(sa.n_records, 1);
     assert_eq!(sb.n_records, 1);
     assert_eq!(sa.shard_records.iter().sum::<usize>(), 1, "{:?}", sa.shard_records);
+
+    for (mut client, handle) in [(ca, a), (cb, b)] {
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The fleet-telemetry pin (ISSUE 6): merging two TCP daemons'
+/// `metrics` replies equals the histogram of the UNION of their sample
+/// streams — asserted per bucket across all 64 buckets, plus
+/// count/sum/min/max and summed counters, in both merge orders.
+#[test]
+fn fleet_metrics_merge_equals_union_of_samples() {
+    let dir = tmp_dir("metrics_merge");
+    // Freeze the background refresh loops (both notify and the poll
+    // fallback out of reach): the only counter/histogram mutations are
+    // the requests this test sends, so the merge pin is exact. Misses
+    // still see peer write-backs through the on-miss targeted refresh.
+    let mut search = quick_search(17);
+    search.fleet.notify_interval_ms = 3_600_000;
+    search.fleet.poll_interval_ms = 3_600_000;
+    let a = spawn_on(ServeAddr::Tcp("127.0.0.1:0".to_string()), &dir, search.clone());
+    let b = spawn_on(ServeAddr::Tcp("127.0.0.1:0".to_string()), &dir, search);
+    let mut ca = ServeClient::connect(&a.addr).unwrap();
+    let mut cb = ServeClient::connect(&b.addr).unwrap();
+
+    // Distinct traffic shapes per daemon: A pays the miss + search,
+    // then both serve hits (B's first request ingests A's record via
+    // the targeted on-miss refresh).
+    assert!(ca.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    ca.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    for _ in 0..3 {
+        assert!(ca.get_kernel(suites::MM1, None, None).unwrap().hit);
+    }
+    assert!(cb.get_kernel_wait(suites::MM1, None, None, DRAIN_TIMEOUT).unwrap().hit);
+    assert!(cb.get_kernel(suites::MM1, None, None).unwrap().hit);
+
+    let ma = ca.metrics().unwrap();
+    let mb = cb.metrics().unwrap();
+    assert!(ma.reply_wall_s.count() >= 4);
+    assert!(mb.reply_wall_s.count() >= 2);
+
+    // The fleet client's merged view (fresh connections — the daemons
+    // are quiescent, so it sees exactly what `ma`/`mb` saw)...
+    let merged = merged_metrics(&[a.addr.clone(), b.addr.clone()]).unwrap();
+    // ...equals the histogram of the union of both daemons' samples:
+    // every one of the 64 buckets is the elementwise sum.
+    for hist in ["reply_wall_s", "reply_sim_s"] {
+        let (m, x, y) = match hist {
+            "reply_wall_s" => (&merged.reply_wall_s, &ma.reply_wall_s, &mb.reply_wall_s),
+            _ => (&merged.reply_sim_s, &ma.reply_sim_s, &mb.reply_sim_s),
+        };
+        for i in 0..N_BUCKETS {
+            assert_eq!(m.bucket(i), x.bucket(i) + y.bucket(i), "{hist} bucket {i}");
+        }
+        assert_eq!(m.count(), x.count() + y.count(), "{hist}");
+        assert_eq!(m.sum(), x.sum() + y.sum(), "{hist}");
+        assert_eq!(m.min(), x.min().min(y.min()), "{hist}");
+        assert_eq!(m.max(), x.max().max(y.max()), "{hist}");
+    }
+    // Stage histograms and counters merge the same way.
+    let mut expect = ma.clone();
+    expect.merge(&mb);
+    assert_eq!(merged.stages, expect.stages);
+    assert_eq!(merged.counters, expect.counters);
+    assert_eq!(
+        merged.counter("n_requests"),
+        ma.counter("n_requests") + mb.counter("n_requests")
+    );
+    assert_eq!(merged.counter("n_searches_done"), 1, "one search fleet-wide");
+
+    // Merge commutes: folding B into A equals folding A into B.
+    let mut other_order = mb.clone();
+    other_order.merge(&ma);
+    assert_eq!(other_order.reply_wall_s, expect.reply_wall_s);
+    assert_eq!(other_order.stages, expect.stages);
+    assert_eq!(other_order.counters, expect.counters);
 
     for (mut client, handle) in [(ca, a), (cb, b)] {
         client.shutdown().unwrap();

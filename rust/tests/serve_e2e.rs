@@ -301,6 +301,60 @@ fn serving_metrics_separate_served_from_searched() {
     stop(handle, &dir);
 }
 
+/// The `metrics` op end to end: per-stage wall-clock histograms with
+/// exact counts, both reply clocks, counters matching `stats`, and
+/// Prometheus exposition — all from a live daemon.
+#[test]
+fn metrics_op_reports_stage_histograms() {
+    let (handle, dir) = spawn_daemon("metricsop", |_| {});
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
+
+    // 1 miss (searched + drained) + 4 exact hits.
+    client.get_kernel(suites::MM1, None, None).unwrap();
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    for _ in 0..4 {
+        assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+    }
+
+    let m = client.metrics().unwrap();
+    assert_eq!(m.counter("n_requests"), 5);
+    assert_eq!(m.counter("n_hits"), 4);
+    assert_eq!(m.counter("n_misses"), 1);
+    assert_eq!(m.counter("n_searches_done"), 1);
+
+    // Both reply clocks saw every request; wall-clock values are real
+    // durations on this machine.
+    assert_eq!(m.reply_sim_s.count(), 5);
+    assert_eq!(m.reply_wall_s.count(), 5);
+    assert!(m.reply_wall_s.min() > 0.0);
+    assert!(m.reply_wall_s.quantile(99.0) >= m.reply_wall_s.quantile(50.0));
+
+    // Stage counts are exact: every request parses and reads a shard;
+    // only the miss pays snapshot lookup, claim I/O, and enqueue. The
+    // stats polls above are untraced frames, so they pollute nothing.
+    let stage = |name: &str| m.stages.get(name).unwrap();
+    assert_eq!(stage("parse").count(), 5);
+    assert_eq!(stage("shard_read").count(), 5);
+    assert_eq!(stage("snapshot_lookup").count(), 1);
+    assert_eq!(stage("claim_io").count(), 1);
+    assert_eq!(stage("enqueue").count(), 1);
+    // Reply writes are recorded post-flush, one per traced frame, and
+    // sequential handling on this connection means all 5 landed before
+    // the `metrics` frame was parsed.
+    assert_eq!(stage("reply_write").count(), 5);
+    assert!(stage("reply_write").min() > 0.0);
+
+    // The same snapshot as Prometheus text.
+    let prom = m.to_prometheus();
+    assert!(prom.contains("# TYPE ecokernel_requests_total counter"), "{prom}");
+    assert!(prom.contains("ecokernel_requests_total 5"), "{prom}");
+    assert!(prom.contains("ecokernel_hits_total 4"), "{prom}");
+    assert!(prom.contains("ecokernel_reply_wall_seconds_count 5"), "{prom}");
+    assert!(prom.contains("ecokernel_stage_seconds_count{stage=\"parse\"} 5"), "{prom}");
+
+    stop(handle, &dir);
+}
+
 /// Per-request gpu/mode overrides are separate serve keys.
 #[test]
 fn gpu_and_mode_are_part_of_the_serve_key() {

@@ -1,0 +1,98 @@
+//! Telemetry hot-path guard: recording a served request's metrics —
+//! stage trace accumulation, both reply-clock histograms, the
+//! per-stage histograms, and quantile reads — performs **zero heap
+//! allocations**. This is the contract that lets the daemon fold
+//! telemetry under the state-lock acquisition the exact-hit path
+//! already pays, without adding latency or allocator contention.
+//!
+//! Guarded by a counting `#[global_allocator]` with a const-init
+//! thread-local counter (no lazy TLS state, so counting itself cannot
+//! allocate). One test in this file on purpose: the counter is
+//! per-thread, so no other test can race it.
+
+use ecokernel::serve::ServeMetrics;
+use ecokernel::telemetry::{LogHistogram, Stage, StageTrace};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::hint::black_box;
+
+thread_local! {
+    static ALLOC_CALLS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOC_CALLS.with(|c| c.get())
+}
+
+#[test]
+fn hit_path_telemetry_performs_zero_heap_allocations() {
+    let mut m = ServeMetrics::default();
+
+    // Warm-up: touch every code path once so one-time lazy state
+    // (TLS registration, test-harness buffers) is paid outside the
+    // measured window.
+    let mut warm = StageTrace::new();
+    warm.add(Stage::Parse, 1e-6);
+    warm.add(Stage::ShardRead, 2e-6);
+    m.record_reply(true, 5e-5, 3e-5, &warm);
+    m.record_stage(Stage::ReplyWrite, 4e-6);
+    black_box(m.p99_reply_s());
+
+    let before = allocations();
+    for i in 0..10_000u64 {
+        // Exactly what the daemon does per exact hit: build the stack
+        // trace, accumulate stages, record both clocks + stages, and
+        // (as `stats` polls do) read quantiles back.
+        let mut trace = StageTrace::new();
+        trace.add(Stage::Parse, 1e-6 + i as f64 * 1e-12);
+        trace.add(Stage::ShardRead, 2e-6);
+        trace.add(Stage::ShardRead, 1e-6); // re-read, as a miss would
+        m.record_reply(true, 5e-5, 3e-5 + i as f64 * 1e-12, &trace);
+        m.record_stage(Stage::ReplyWrite, 4e-6);
+        black_box(m.p50_reply_s());
+        black_box(m.p99_reply_s());
+        black_box(m.hit_rate());
+    }
+    // Fleet aggregation primitives are allocation-free too: clone and
+    // merge are fixed-size array copies/adds.
+    let snapshot: LogHistogram = m.reply_wall().clone();
+    let mut merged = snapshot.clone();
+    merged.merge(m.reply_wall());
+    black_box(merged.quantile(99.0));
+    black_box(merged.mean());
+    let after = allocations();
+
+    assert_eq!(m.n_requests, 10_001);
+    assert_eq!(
+        after - before,
+        0,
+        "telemetry hot path allocated {} time(s) in 10k hit records",
+        after - before
+    );
+}

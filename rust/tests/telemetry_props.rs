@@ -1,0 +1,154 @@
+//! Property tests for the telemetry log2-bucket histogram — the
+//! guarantees the serving stack leans on:
+//!
+//! * merge is associative and commutative, and merging histograms of
+//!   two streams equals the histogram of the concatenated stream
+//!   (exactly — this is what makes fleet-wide quantiles honest);
+//! * quantiles track the true sample quantiles within one log2 bucket
+//!   (a factor of 2);
+//! * memory stays fixed no matter how many samples are recorded.
+
+use ecokernel::telemetry::{LogHistogram, N_BUCKETS};
+use ecokernel::util::rng::Rng;
+use ecokernel::util::stats::percentile;
+
+/// Latency-shaped positive samples spanning ~6 decades (ns to s).
+fn sample_stream(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            // Log-uniform base in [1e-9, 1e-3) with occasional slow
+            // outliers, mimicking a hit-dominated reply distribution.
+            let base = 10f64.powf(-9.0 + 6.0 * rng.gen_f64());
+            if rng.gen_bool(0.02) {
+                base * 1e4
+            } else {
+                base
+            }
+        })
+        .collect()
+}
+
+fn hist_of(samples: &[f64]) -> LogHistogram {
+    let mut h = LogHistogram::new();
+    for &v in samples {
+        h.record(v);
+    }
+    h
+}
+
+#[test]
+fn merge_is_commutative_and_associative() {
+    let a = hist_of(&sample_stream(1, 500));
+    let b = hist_of(&sample_stream(2, 300));
+    let c = hist_of(&sample_stream(3, 700));
+
+    let mut ab = a.clone();
+    ab.merge(&b);
+    let mut ba = b.clone();
+    ba.merge(&a);
+    assert_eq!(ab, ba, "a∪b == b∪a");
+
+    let mut ab_c = ab.clone();
+    ab_c.merge(&c);
+    let mut bc = b.clone();
+    bc.merge(&c);
+    let mut a_bc = a.clone();
+    a_bc.merge(&bc);
+    assert_eq!(ab_c, a_bc, "(a∪b)∪c == a∪(b∪c)");
+}
+
+#[test]
+fn merged_histogram_equals_histogram_of_concatenated_stream() {
+    let xs = sample_stream(10, 800);
+    let ys = sample_stream(11, 600);
+    let concat: Vec<f64> = xs.iter().chain(&ys).copied().collect();
+
+    let mut merged = hist_of(&xs);
+    merged.merge(&hist_of(&ys));
+    let direct = hist_of(&concat);
+
+    assert_eq!(merged, direct);
+    for p in [50.0, 90.0, 99.0] {
+        assert_eq!(merged.quantile(p), direct.quantile(p), "p{p}");
+    }
+}
+
+#[test]
+fn quantiles_track_true_quantiles_within_one_bucket() {
+    for seed in 0..8u64 {
+        let xs = sample_stream(100 + seed, 2000);
+        let h = hist_of(&xs);
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [50.0, 90.0, 99.0] {
+            let est = h.quantile(p);
+            // Against the sample at the histogram's own nearest rank
+            // (ceil(p·n/100)), the bound is tight: the estimate is the
+            // geometric midpoint of that sample's bucket, so at most
+            // √2 away in either direction — well inside a factor of 2.
+            let rank = ((p / 100.0) * xs.len() as f64).ceil().max(1.0) as usize;
+            let truth = sorted[rank.min(xs.len()) - 1];
+            assert!(
+                est >= truth / 2.0 && est <= truth * 2.0,
+                "seed {seed} p{p}: est {est:.3e} vs rank-true {truth:.3e}"
+            );
+            // Against the repo's `stats::percentile` (a slightly
+            // different rank convention) allow one extra bucket of
+            // slack for the rank difference in sparse tails.
+            let ref_truth = percentile(&xs, p);
+            assert!(
+                est >= ref_truth / 4.0 && est <= ref_truth * 4.0,
+                "seed {seed} p{p}: est {est:.3e} vs percentile {ref_truth:.3e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn quantile_is_bounded_by_observed_min_and_max() {
+    let xs = sample_stream(42, 1000);
+    let h = hist_of(&xs);
+    let (lo, hi) = (h.min(), h.max());
+    for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+        let q = h.quantile(p);
+        assert!(q >= lo && q <= hi, "p{p}: {q:.3e} outside [{lo:.3e}, {hi:.3e}]");
+    }
+    // Quantiles are monotone in p.
+    assert!(h.quantile(99.0) >= h.quantile(50.0));
+    assert!(h.quantile(50.0) >= h.quantile(1.0));
+}
+
+#[test]
+fn memory_stays_fixed_under_ten_million_records() {
+    // The histogram is a fixed-size value type: recording never
+    // allocates, so size_of is the whole footprint.
+    assert!(std::mem::size_of::<LogHistogram>() <= N_BUCKETS * 8 + 64);
+
+    let mut h = LogHistogram::new();
+    let mut rng = Rng::seed_from_u64(9);
+    let mut sum = 0.0f64;
+    for _ in 0..10_000_000u64 {
+        let v = 10f64.powf(-9.0 + 6.0 * rng.gen_f64());
+        h.record(v);
+        sum += v;
+    }
+    assert_eq!(h.count(), 10_000_000);
+    assert!((h.sum() - sum).abs() <= sum * 1e-9);
+    let p50 = h.quantile(50.0);
+    assert!(p50 > 0.0 && p50.is_finite());
+    assert!(h.quantile(99.0) >= p50);
+}
+
+#[test]
+fn degenerate_inputs_land_in_the_underflow_bucket() {
+    let mut h = LogHistogram::new();
+    h.record(0.0);
+    h.record(-3.0);
+    h.record(f64::NAN);
+    h.record(f64::INFINITY);
+    assert_eq!(h.count(), 4);
+    // Everything non-finite or ≤ 0 clamps into bucket 0 rather than
+    // poisoning the distribution; quantiles stay finite.
+    assert!(h.quantile(50.0).is_finite());
+}
