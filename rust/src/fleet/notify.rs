@@ -13,8 +13,14 @@
 //! store (`notify/events.jsonl`) plus a per-daemon in-memory cursor:
 //!
 //! ```text
-//! {"key":"mm1|a100|energy_aware|fp…","shard":3,"holder":"daemon-412-0-…","epoch":7}
+//! {"key":"mm1|a100|energy_aware|fp…","shard":3,"holder":"daemon-412-0-…","epoch":7,
+//!  "trace":"9f3c2a7b51e80d46"}
 //! ```
+//!
+//! The optional `trace` field carries the originating request's
+//! [`TraceId`] (hex) so the peer's refresh loop can close the causal
+//! chain: a miss traced on daemon A shows its notify-refresh ingest as
+//! a remote span on daemon B, under the same id.
 //!
 //! * **announce** — the writer loop appends one line per landed
 //!   write-back (O_APPEND whole-line writes interleave safely across
@@ -40,6 +46,7 @@
 //! refresh, so an exact key requested ahead of its notify still hits.
 
 use crate::store::lease::Lease;
+use crate::telemetry::TraceId;
 use crate::util::Json;
 use anyhow::Context as _;
 use std::collections::HashMap;
@@ -77,16 +84,25 @@ pub struct NotifyEvent {
     /// In-flight claim epoch the write-back landed under; 0 = the
     /// record landed unclaimed (no fencing applies).
     pub epoch: u64,
+    /// Originating request's trace id (hex), when the write-back came
+    /// from a traced miss. Absent on pre-trace announcements and on
+    /// landings with no trace — encoded only when present so old
+    /// cursors parse new lines and vice versa.
+    pub trace: Option<String>,
 }
 
 impl NotifyEvent {
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("key", Json::str(self.key.clone())),
             ("shard", Json::num(self.shard as f64)),
             ("holder", Json::str(self.holder.clone())),
             ("epoch", Json::num(self.epoch as f64)),
-        ])
+        ];
+        if let Some(t) = &self.trace {
+            fields.push(("trace", Json::str(t.clone())));
+        }
+        Json::obj(fields)
     }
 
     fn from_json(v: &Json) -> Option<NotifyEvent> {
@@ -95,7 +111,14 @@ impl NotifyEvent {
             shard: v.get("shard")?.as_f64()? as usize,
             holder: v.get("holder")?.as_str()?.to_string(),
             epoch: v.get("epoch")?.as_f64()? as u64,
+            trace: v.get("trace").and_then(|x| x.as_str()).map(|s| s.to_string()),
         })
+    }
+
+    /// The announcement's trace id, parsed; `None` when absent or
+    /// malformed (a garbage trace must not drop the refresh itself).
+    pub fn trace_id(&self) -> Option<TraceId> {
+        self.trace.as_deref().and_then(TraceId::from_hex)
     }
 }
 
@@ -122,14 +145,22 @@ impl NotifyChannel {
         self.dir.join(EVENTS_FILE)
     }
 
-    /// Announce one landed write-back (one O_APPEND line). Compacts the
+    /// Announce one landed write-back (one O_APPEND line), carrying
+    /// the originating trace id when the miss was traced. Compacts the
     /// channel opportunistically once it outgrows [`COMPACT_BYTES`].
-    pub fn announce(&self, key: &str, shard: usize, epoch: u64) -> anyhow::Result<()> {
+    pub fn announce(
+        &self,
+        key: &str,
+        shard: usize,
+        epoch: u64,
+        trace: Option<TraceId>,
+    ) -> anyhow::Result<()> {
         let event = NotifyEvent {
             key: key.to_string(),
             shard,
             holder: self.holder.clone(),
             epoch,
+            trace: trace.map(|t| t.to_hex()),
         };
         crate::store::append_jsonl(&self.events_path(), &event.to_json())?;
         let len = std::fs::metadata(self.events_path()).map(|m| m.len()).unwrap_or(0);
@@ -290,12 +321,28 @@ mod tests {
             shard: 5,
             holder: "daemon-1-0-abc".into(),
             epoch: 7,
+            trace: None,
         };
         let line = event.to_json().to_string();
+        assert!(!line.contains("trace"), "absent trace stays off the wire: {line}");
         let back = NotifyEvent::from_json(&Json::parse(&line).unwrap()).unwrap();
         assert_eq!(back, event);
         // Missing fields are unparseable, not a panic.
         assert_eq!(NotifyEvent::from_json(&Json::parse(r#"{"key":"k"}"#).unwrap()), None);
+
+        // A traced announcement roundtrips and parses back to an id;
+        // a garbage trace degrades to None instead of dropping the
+        // event.
+        let id = TraceId::from_hex("9f3c2a7b51e80d46").unwrap();
+        let traced = NotifyEvent { trace: Some(id.to_hex()), ..event.clone() };
+        let line = traced.to_json().to_string();
+        let back = NotifyEvent::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, traced);
+        assert_eq!(back.trace_id(), Some(id));
+        let garbage = NotifyEvent { trace: Some("not-hex".into()), ..event };
+        let back =
+            NotifyEvent::from_json(&Json::parse(&garbage.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.trace_id(), None, "malformed trace never drops the refresh");
     }
 
     #[test]
@@ -305,9 +352,9 @@ mod tests {
         let b = NotifyChannel::open(&dir, "daemon-b", 60_000).unwrap();
         let mut cur_b = b.cursor().unwrap();
 
-        a.announce("k1", 3, 1).unwrap();
-        b.announce("k2", 0, 1).unwrap(); // b's own: skipped by b's cursor
-        a.announce("k3", 7, 0).unwrap(); // unclaimed landing: epoch 0
+        a.announce("k1", 3, 1, None).unwrap();
+        b.announce("k2", 0, 1, None).unwrap(); // b's own: skipped by b's cursor
+        a.announce("k3", 7, 0, None).unwrap(); // unclaimed landing: epoch 0
 
         let events = cur_b.poll().unwrap();
         let keys: Vec<&str> = events.iter().map(|e| e.key.as_str()).collect();
@@ -319,7 +366,7 @@ mod tests {
         // A cursor opened NOW starts at the end: no history replay.
         let mut late = b.cursor().unwrap();
         assert!(late.poll().unwrap().is_empty());
-        a.announce("k4", 1, 2).unwrap();
+        a.announce("k4", 1, 2, None).unwrap();
         assert_eq!(late.poll().unwrap().len(), 1, "only post-open events delivered");
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -338,17 +385,17 @@ mod tests {
         // b reclaimed the key (epoch 6) and landed first; a's write-back
         // under its lost epoch-5 claim would have been fenced by the
         // store — its announcement must be fenced here too.
-        b.announce("k", 2, 6).unwrap();
-        a.announce("k", 2, 5).unwrap();
+        b.announce("k", 2, 6, None).unwrap();
+        a.announce("k", 2, 5, None).unwrap();
         let events = cur.poll().unwrap();
         assert_eq!(events.len(), 1, "stale epoch dropped: {events:?}");
         assert_eq!((events[0].holder.as_str(), events[0].epoch), ("daemon-b", 6));
 
         // A newer reclaim's announcement still flows…
-        a.announce("k", 2, 7).unwrap();
+        a.announce("k", 2, 7, None).unwrap();
         assert_eq!(cur.poll().unwrap().len(), 1);
         // …and epoch-0 (unclaimed) landings are never fenced.
-        a.announce("k", 2, 0).unwrap();
+        a.announce("k", 2, 0, None).unwrap();
         assert_eq!(cur.poll().unwrap().len(), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -359,12 +406,12 @@ mod tests {
         let a = NotifyChannel::open(&dir, "daemon-a", 60_000).unwrap();
         let b = NotifyChannel::open(&dir, "daemon-b", 60_000).unwrap();
         let mut cur = b.cursor().unwrap();
-        a.announce("k1", 0, 1).unwrap();
+        a.announce("k1", 0, 1, None).unwrap();
         assert_eq!(cur.poll().unwrap().len(), 1);
 
         // Compact: the file truncates and the generation bumps.
         assert!(a.compact().unwrap());
-        a.announce("k2", 1, 1).unwrap();
+        a.announce("k2", 1, 1, None).unwrap();
         let events = cur.poll().unwrap();
         assert_eq!(events.len(), 1, "cursor reset to the new file: {events:?}");
         assert_eq!(events[0].key, "k2");
@@ -384,7 +431,7 @@ mod tests {
         let a = NotifyChannel::open(&dir, "daemon-a", 60_000).unwrap();
         let b = NotifyChannel::open(&dir, "daemon-b", 60_000).unwrap();
         let mut cur = b.cursor().unwrap();
-        a.announce("k1", 0, 1).unwrap();
+        a.announce("k1", 0, 1, None).unwrap();
 
         let events_path = dir.join(NOTIFY_DIR).join(EVENTS_FILE);
         // Garbage whole line: skipped. Torn tail: left for the writer

@@ -4,7 +4,7 @@
 //! Subcommands:
 //!   search      run one kernel search (the paper's core loop)
 //!   serve       run the kernel-serving daemon on a Unix socket
-//!   query       ask a running daemon for a kernel / stats / metrics / shutdown
+//!   query       ask a running daemon for a kernel / stats / metrics / traces / shutdown
 //!   bench       serving benchmark: zipf replay against live daemons
 //!   experiment  regenerate a paper table/figure (table1..5, fig2..5, all)
 //!   cache       inspect / maintain a persistent tuning store
@@ -70,11 +70,14 @@ USAGE:
                    (ADDR: unix:/path.sock or tcp:HOST:PORT; --socket PATH = unix)
   ecokernel query  --addr ADDR (--workload MM1 [--gpu a100] [--mode energy]
                    [--wait] [--timeout S] | --batch MM1,MV3,.. | --stats
-                   | --metrics [--prom] | --shutdown) [--json]
+                   | --metrics [--prom] | --trace [--slowest N]
+                   | --shutdown) [--json]
                    (--batch sends every workload in ONE frame / one
                    socket write; replies are positionally matched.
                    --metrics accepts --addr A,B,.. and merges the
-                   fleet's histograms; --prom prints Prometheus text)
+                   fleet's histograms; --prom prints Prometheus text.
+                   --trace prints the daemon's retained request traces,
+                   slowest first; --slowest N keeps the top N)
   ecokernel bench  serve [--quick] [--requests N] [--zipf S] [--batch N]
                    [--no-fleet] [--out BENCH_serving.json]
   ecokernel experiment <table1..table5|fig2..fig5|warmcold|all> [--paper]
@@ -290,7 +293,8 @@ fn cmd_serve(_args: &[String]) -> anyhow::Result<()> {
 #[cfg(unix)]
 fn cmd_query(args: &[String]) -> anyhow::Result<()> {
     use ecokernel::serve::ServeClient;
-    let flags = Flags::parse(args, &["json", "wait", "stats", "shutdown", "metrics", "prom"])?;
+    let flags =
+        Flags::parse(args, &["json", "wait", "stats", "shutdown", "metrics", "prom", "trace"])?;
     if flags.has("metrics") {
         // Handled before the single connect: `--addr` may be a
         // comma-separated fleet whose histograms merge client-side.
@@ -299,6 +303,56 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
     let addr = parse_addr_flags(&flags, "addr")?;
     let mut client = ServeClient::connect(&addr)?;
 
+    if flags.has("trace") {
+        let slowest = flags.parse_num::<usize>("slowest")?.unwrap_or(0);
+        let tr = client.traces(slowest)?;
+        if flags.has("json") {
+            println!("{}", tr.to_json());
+            return Ok(());
+        }
+        if tr.traces.is_empty() {
+            println!("no completed traces retained (the ring holds miss chains only)");
+        }
+        for t in &tr.traces {
+            println!(
+                "trace {} key={} req={}{}{} total {:.3} ms",
+                t.id.to_hex(),
+                t.key,
+                if t.req.is_empty() { "-" } else { t.req.as_str() },
+                if t.remote { " [remote]" } else { "" },
+                if t.error { " [error]" } else { "" },
+                t.total_s * 1e3,
+            );
+            for s in &t.spans {
+                let mut attrs = String::new();
+                if let Some(r) = s.round {
+                    attrs.push_str(&format!(" round={r}"));
+                }
+                if let Some(v) = s.snr_db {
+                    attrs.push_str(&format!(" snr={v:.1}dB"));
+                }
+                if let Some(v) = s.relerr {
+                    attrs.push_str(&format!(" relerr={v:.3}"));
+                }
+                if let Some(v) = s.k {
+                    attrs.push_str(&format!(" k={v:.1}"));
+                }
+                if let Some(v) = s.n_measured {
+                    attrs.push_str(&format!(" measured={v}"));
+                }
+                if let Some(n) = &s.note {
+                    attrs.push_str(&format!(" ({n})"));
+                }
+                println!(
+                    "  {:<16} +{:9.3} ms  {:9.3} ms{attrs}",
+                    s.name,
+                    s.start_s * 1e3,
+                    s.dur_s * 1e3
+                );
+            }
+        }
+        return Ok(());
+    }
     if flags.has("stats") {
         let s = client.stats()?;
         if flags.has("json") {
@@ -479,7 +533,14 @@ fn query_metrics(flags: &Flags) -> anyhow::Result<()> {
         .filter(|s| !s.is_empty())
         .map(|s| ServeAddr::parse(s).map_err(anyhow::Error::msg))
         .collect::<anyhow::Result<_>>()?;
-    let m = merged_metrics(&addrs)?;
+    let fm = merged_metrics(&addrs)?;
+    // A partial merge is still a merge: warn about every daemon that
+    // did not answer (stderr, so --json/--prom output stays parseable)
+    // instead of aborting the whole fleet view.
+    for (a, e) in &fm.errors {
+        eprintln!("warning: daemon {a} unreachable: {e}");
+    }
+    let m = &fm.merged;
     if flags.has("prom") {
         print!("{}", m.to_prometheus());
         return Ok(());
@@ -491,7 +552,12 @@ fn query_metrics(flags: &Flags) -> anyhow::Result<()> {
     let total = m.counter("n_requests");
     let hits = m.counter("n_hits");
     let pct = if total > 0 { hits as f64 / total as f64 * 100.0 } else { 0.0 };
-    println!("daemons     : {}", addrs.len());
+    println!(
+        "daemons     : {} ({} answered, {} unreachable)",
+        addrs.len(),
+        addrs.len() - fm.errors.len(),
+        fm.errors.len()
+    );
     println!("requests    : {total} ({hits} hits, {pct:.1}%)");
     println!(
         "reply wall  : p50 {:.3} ms, p99 {:.3} ms ({} samples)",
@@ -519,6 +585,18 @@ fn query_metrics(flags: &Flags) -> anyhow::Result<()> {
             h.quantile(99.0) * 1e3,
             h.mean() * 1e3
         );
+    }
+    if !m.model.is_empty() {
+        println!("cost model accuracy (family/regime):");
+        for (key, h) in &m.model {
+            println!(
+                "  {key:<28} n={:<8} p50={:.3}  p99={:.3}  mean={:.3}",
+                h.count(),
+                h.quantile(50.0),
+                h.quantile(99.0),
+                h.mean()
+            );
+        }
     }
     Ok(())
 }

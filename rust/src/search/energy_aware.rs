@@ -163,6 +163,7 @@ pub fn run_warm(
             best_latency_s: top[0].1,
             best_energy_j: best_energy,
             snr_db: r.snr,
+            relerr: r.relerr,
             k: kctrl.k,
             n_measured,
             elapsed_s: meter.clock.total_s,
@@ -207,6 +208,7 @@ pub fn run_warm(
             best_latency_s: top[0].1,
             best_energy_j: best_energy,
             snr_db: None,
+            relerr: None,
             k: kctrl.k,
             n_measured: top.len(),
             elapsed_s: meter.clock.total_s,
@@ -257,6 +259,7 @@ pub fn run_warm(
             best_latency_s: kernel_m.first().map(|k| k.1).unwrap_or(f64::NAN),
             best_energy_j: best_energy,
             snr_db: r.snr,
+            relerr: r.relerr,
             k: kctrl.k,
             n_measured: r.n_measured,
             elapsed_s: meter.clock.total_s,
@@ -307,6 +310,9 @@ struct ModelRound {
     measured: Vec<EvaluatedKernel>,
     /// SNR of this round's prediction check, when computed.
     snr: Option<f64>,
+    /// Mean relative energy prediction error of the same check set,
+    /// computed whenever `snr` is.
+    relerr: Option<f64>,
     /// Measured-count to report in [`RoundStats`].
     n_measured: usize,
 }
@@ -386,6 +392,7 @@ fn model_guided_round(
     // Update the cost model with the measured kernels; compute SNR and
     // adjust k.
     let mut snr = None;
+    let mut relerr = None;
     if use_model {
         if !samples.is_empty() {
             model.update(&samples, rng);
@@ -397,6 +404,17 @@ fn model_guided_round(
             let s = EnergyCostModel::snr_error_db(&measured_pred, &measured_vals);
             kctrl.update(s);
             snr = Some(s);
+            // Accuracy telemetry (ISSUE 7): the same pred/measured
+            // pairs the SNR check uses, as a unitless relative error
+            // operators can alert on without knowing the SNR scale.
+            let (sum, n) = measured_pred
+                .iter()
+                .zip(&measured_vals)
+                .filter(|(_, &v)| v > 0.0 && v.is_finite())
+                .fold((0.0f64, 0usize), |(sum, n), (&p, &v)| (sum + (p - v).abs() / v, n + 1));
+            if n > 0 {
+                relerr = Some(sum / n as f64);
+            }
         }
     }
 
@@ -446,7 +464,7 @@ fn model_guided_round(
         measured.push(*c);
     }
     measured.extend(round_measured);
-    ModelRound { parents, measured, snr, n_measured }
+    ModelRound { parents, measured, snr, relerr, n_measured }
 }
 
 /// Merge transferred seed schedules into the head of the initial

@@ -52,6 +52,7 @@ pub fn run(workload: Workload, cfg: &SearchConfig) -> SearchOutcome {
             best_latency_s: best.expect("set").1,
             best_energy_j: f64::NAN,
             snr_db: None,
+            relerr: None,
             k: 0.0,
             n_measured: 0,
             elapsed_s: meter.clock.total_s,

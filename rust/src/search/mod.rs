@@ -52,6 +52,12 @@ pub struct RoundStats {
     pub best_energy_j: f64,
     /// SNR prediction error of this round's model check (dB).
     pub snr_db: Option<f64>,
+    /// Mean relative error |predicted − measured| / measured of the
+    /// round's energy predictions over the measured check set —
+    /// computed alongside `snr_db` from the same pairs, so both are
+    /// `Some`/`None` together (model-guided rounds with ≥ 2 finite
+    /// check pairs).
+    pub relerr: Option<f64>,
     /// k value *after* this round's update.
     pub k: f64,
     pub n_measured: usize,

@@ -205,12 +205,21 @@ pub fn run_bench_serve(opts: &BenchServeOpts) -> anyhow::Result<Json> {
         warm(&mut client, set)?;
         let elapsed = replay(&mut client, set, &zipf, &mut rng, requests, opts.batch)?;
         let m = client.metrics()?;
-        (m, elapsed)
+        // The warm-up misses are this phase's only traces — every one
+        // complete by now (get_kernel_wait polled until its write-back
+        // landed). The top-5 with per-span breakdowns go in the
+        // baseline so a regression shows WHERE the time moved.
+        let traces = client.traces(5)?;
+        (m, elapsed, traces)
     };
     shutdown(&addr, handle)?;
     let _ = std::fs::remove_dir_all(&dir);
 
     let mut doc: Vec<(String, Json)> = phase_json(&single.0, requests, single.1);
+    doc.push((
+        "slowest_traces".to_string(),
+        Json::arr(single.2.traces.iter().map(|t| t.to_json())),
+    ));
     doc.push(("requests".to_string(), Json::num(requests as f64)));
     doc.push(("zipf_s".to_string(), Json::num(opts.zipf_s)));
     doc.push((
@@ -252,8 +261,9 @@ pub fn run_bench_serve(opts: &BenchServeOpts) -> anyhow::Result<Json> {
         warm(&mut cb, set)?;
         let ea = replay(&mut ca, set, &zipf, &mut rng, fleet_requests, opts.batch)?;
         let eb = replay(&mut cb, set, &zipf, &mut rng, fleet_requests, opts.batch)?;
-        let merged = merged_metrics(&[aa.clone(), ab.clone()])?;
-        let mut fleet = phase_json(&merged, 2 * fleet_requests, ea + eb);
+        let fm = merged_metrics(&[aa.clone(), ab.clone()])?;
+        anyhow::ensure!(fm.errors.is_empty(), "bench fleet daemon unreachable: {:?}", fm.errors);
+        let mut fleet = phase_json(&fm.merged, 2 * fleet_requests, ea + eb);
         fleet.push(("daemons".to_string(), Json::num(2.0)));
         doc.push(("fleet".to_string(), Json::Obj(fleet.into_iter().collect())));
         shutdown(&aa, ha)?;

@@ -13,7 +13,8 @@
 //!   `batch` reply.
 
 use super::protocol::{
-    BatchItem, KernelReply, MetricsReply, Reject, Request, Response, StatsReply, MAX_BATCH_ITEMS,
+    BatchItem, KernelReply, MetricsReply, Reject, Request, Response, StatsReply, TraceReply,
+    MAX_BATCH_ITEMS,
 };
 use crate::config::{GpuArch, SearchMode};
 use crate::fleet::{ServeAddr, Stream};
@@ -94,8 +95,23 @@ impl ServeClient {
         gpu: Option<GpuArch>,
         mode: Option<SearchMode>,
     ) -> anyhow::Result<KernelReply> {
+        self.get_kernel_traced(workload, gpu, mode, None)
+    }
+
+    /// One `get_kernel` carrying a caller-chosen trace id (hex). A
+    /// reserving miss adopts it as the distributed trace's id, so a
+    /// client can correlate its own request log with `query --trace`
+    /// output fleet-wide; `None` lets the daemon mint one.
+    pub fn get_kernel_traced(
+        &mut self,
+        workload: Workload,
+        gpu: Option<GpuArch>,
+        mode: Option<SearchMode>,
+        trace: Option<&str>,
+    ) -> anyhow::Result<KernelReply> {
         let id = self.fresh_id();
-        match self.roundtrip(&Request::GetKernel { id, workload, gpu, mode })? {
+        let trace = trace.map(|t| t.to_string());
+        match self.roundtrip(&Request::GetKernel { id, workload, gpu, mode, trace })? {
             Response::Kernel(r) => Ok(r),
             Response::Error { code, message, .. } => {
                 Err(anyhow!("daemon error [{code}]: {message}"))
@@ -269,6 +285,19 @@ impl ServeClient {
         }
     }
 
+    /// The daemon's retained request traces, slowest first
+    /// (`slowest == 0` asks for every completed trace the ring holds).
+    pub fn traces(&mut self, slowest: usize) -> anyhow::Result<TraceReply> {
+        let id = self.fresh_id();
+        match self.roundtrip(&Request::Traces { id, slowest })? {
+            Response::Trace(r) => Ok(r),
+            Response::Error { code, message, .. } => {
+                Err(anyhow!("daemon error [{code}]: {message}"))
+            }
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
     /// Graceful daemon stop (acked before the daemon drains and exits).
     pub fn shutdown(&mut self) -> anyhow::Result<()> {
         let id = self.fresh_id();
@@ -282,22 +311,44 @@ impl ServeClient {
     }
 }
 
+/// A fleet-wide metrics merge plus the daemons that could not answer.
+/// Partial by design: one dead daemon must not blind the operator to
+/// the rest of the fleet (the old all-or-nothing merge aborted on the
+/// first unreachable address).
+#[derive(Debug)]
+pub struct FleetMetrics {
+    /// Exact merge over every daemon that answered.
+    pub merged: MetricsReply,
+    /// `(address, error)` per daemon that did NOT answer.
+    pub errors: Vec<(String, String)>,
+}
+
 /// Fleet-wide telemetry: query every daemon's `metrics` op and merge.
 /// Histogram merging is exact — the result equals the histogram a
 /// single daemon would have recorded over the union of all samples —
 /// so fleet-wide quantiles carry the same one-bucket error bound as a
-/// single daemon's.
-pub fn merged_metrics(addrs: &[ServeAddr]) -> anyhow::Result<MetricsReply> {
+/// single daemon's. Unreachable daemons are reported alongside the
+/// merge, not turned into a whole-fleet failure; only an empty address
+/// list or a fleet with NO reachable daemon is an `Err`.
+pub fn merged_metrics(addrs: &[ServeAddr]) -> anyhow::Result<FleetMetrics> {
     anyhow::ensure!(!addrs.is_empty(), "no daemon addresses to query");
     let mut merged: Option<MetricsReply> = None;
+    let mut errors: Vec<(String, String)> = Vec::new();
     for addr in addrs {
-        let m = ServeClient::connect(addr)
-            .and_then(|mut c| c.metrics())
-            .with_context(|| format!("metrics from {addr}"))?;
-        match &mut merged {
-            Some(acc) => acc.merge(&m),
-            None => merged = Some(m),
+        match ServeClient::connect(addr).and_then(|mut c| c.metrics()) {
+            Ok(m) => match &mut merged {
+                Some(acc) => acc.merge(&m),
+                None => merged = Some(m),
+            },
+            Err(e) => errors.push((addr.to_string(), format!("{e:#}"))),
         }
     }
-    Ok(merged.expect("at least one address"))
+    match merged {
+        Some(merged) => Ok(FleetMetrics { merged, errors }),
+        None => {
+            let detail: Vec<String> =
+                errors.iter().map(|(a, e)| format!("{a}: {e}")).collect();
+            Err(anyhow!("no daemon reachable ({})", detail.join("; ")))
+        }
+    }
 }

@@ -71,7 +71,7 @@
 use super::metrics::{reply_time_s, ServeMetrics};
 use super::protocol::{
     BatchItem, KernelReply, MetricsReply, Reject, Request, Response, ServeSource, StatsReply,
-    PROTOCOL_VERSION,
+    TraceReply, PROTOCOL_VERSION,
 };
 use crate::config::{GpuArch, SearchConfig, SearchMode};
 use crate::coordinator::{EventLog, PoolEvent, SearchJob, WorkerPool};
@@ -79,16 +79,17 @@ use crate::fleet::{
     Backlog, HeatSketch, InflightTable, Listener, NotifyChannel, Offer, ServeAddr, Stream,
 };
 use crate::schedule::space::ScheduleSpace;
+use crate::search::RoundStats;
 use crate::store::lease::Lease;
 use crate::store::transfer::{relegalize, MAX_TRANSFER_DISTANCE};
 use crate::store::{
     config_fingerprint, serve_key, AppendOutcome, EvictionReport, ShardedStore, TuningRecord,
     TuningStore,
 };
-use crate::telemetry::{Stage, StageTrace};
+use crate::telemetry::{Span, Stage, StageTrace, TraceId, TraceLog};
 use crate::util::Json;
 use crate::workload::Workload;
-use std::collections::{BTreeSet, HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 use std::io::{BufRead as _, BufReader, Write as _};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -112,6 +113,24 @@ pub struct DaemonConfig {
 /// A queued-but-not-yet-submitted background search.
 type BacklogJob = (SearchJob, Arc<TuningStore>);
 
+/// What reserved a pending key: the wire request id (the correlator
+/// every `job_*` event for the key carries) plus the distributed trace
+/// the reserving miss opened — duplicate misses coalesce onto it, so a
+/// key searched once fleet-wide yields exactly one trace.
+#[derive(Clone)]
+struct PendingMiss {
+    req: String,
+    trace: TraceId,
+}
+
+/// Wall-clock "now" as Unix seconds (trace timestamps).
+fn unix_now_s() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
 /// The daemon's SMALL shared state: pure bookkeeping, held only for
 /// microseconds at a time. Store access never happens under this lock
 /// — the [`ShardedStore`] synchronizes itself per shard.
@@ -124,11 +143,10 @@ struct ServeState {
     /// so an install must never roll a newer snapshot back.
     snapshot_gen: u64,
     /// Serve keys with a search queued, backlogged, running, or
-    /// awaiting write-back here, mapped to the request id of the miss
-    /// that reserved them — the correlator every `job_*` event for the
-    /// key carries, so one request id traces parse → enqueue →
-    /// write-back end to end in the event log.
-    pending: HashMap<String, String>,
+    /// awaiting write-back here, mapped to the reserving miss's request
+    /// id and trace id, so one request traces parse → enqueue →
+    /// write-back end to end in both the event log and the trace ring.
+    pending: HashMap<String, PendingMiss>,
     /// Fleet in-flight claims this daemon holds, by serve key.
     claims: HashMap<String, Lease>,
     /// Admission backlog behind a saturated search queue.
@@ -160,6 +178,11 @@ struct Ctx {
     /// The write-back push channel; `Some` in coordinated fleets with
     /// `fleet.notify` on.
     notify: Option<NotifyChannel>,
+    /// Tail-sampled ring of request traces (miss chains + foreign
+    /// notify-refresh continuations). Its own small mutex — NEVER
+    /// locked while `state` is held, so trace bookkeeping can't extend
+    /// a state-lock hold.
+    traces: Mutex<TraceLog>,
     log: Option<EventLog>,
 }
 
@@ -267,6 +290,7 @@ impl Daemon {
             addr,
             inflight,
             notify,
+            traces: Mutex::new(TraceLog::default()),
             log,
         });
         let writer = {
@@ -414,13 +438,14 @@ fn refresh_loop(ctx: &Ctx) {
                     // One refresh per touched shard, however many keys
                     // landed in it.
                     let shards: BTreeSet<usize> = events.iter().map(|e| e.shard).collect();
-                    let mut refreshed: BTreeSet<usize> = BTreeSet::new();
+                    let mut refreshed: BTreeMap<usize, f64> = BTreeMap::new();
                     let mut changed = 0usize;
                     for &shard in &shards {
+                        let t = Instant::now();
                         match ctx.store.refresh_shard(shard) {
                             Ok(n) => {
                                 changed += n;
-                                refreshed.insert(shard);
+                                refreshed.insert(shard, t.elapsed().as_secs_f64());
                             }
                             Err(e) => {
                                 eprintln!("serve: notify refresh of shard {shard} failed: {e:#}")
@@ -434,9 +459,28 @@ fn refresh_loop(ctx: &Ctx) {
                     // SUCCEEDED — the stat is the push path's health
                     // signal, and a daemon whose refreshes all fail is
                     // not fresh no matter how many events it read.
-                    let acted = events.iter().filter(|e| refreshed.contains(&e.shard)).count();
-                    let mut state = ctx.state.lock().expect("state lock");
-                    state.metrics.n_notify_refresh += acted;
+                    let acted =
+                        events.iter().filter(|e| refreshed.contains_key(&e.shard)).count();
+                    {
+                        let mut state = ctx.state.lock().expect("state lock");
+                        state.metrics.n_notify_refresh += acted;
+                    }
+                    // Close the fleet-wide chain: an announcement that
+                    // carries its originating miss's trace id lands a
+                    // `notify_refresh` continuation here, under the
+                    // SAME id — `query --trace` on this peer shows the
+                    // foreign search's write-back reaching it.
+                    let mut traces = ctx.traces.lock().expect("traces lock");
+                    for e in &events {
+                        let Some(tid) = e.trace_id() else { continue };
+                        let Some(&secs) = refreshed.get(&e.shard) else { continue };
+                        traces.record_remote(
+                            tid,
+                            &e.key,
+                            unix_now_s() - secs,
+                            Span::new("notify_refresh", 0.0, secs).with_note(&e.holder),
+                        );
+                    }
                 }
                 Ok(_) => {}
                 Err(e) => eprintln!("serve: notify poll failed: {e:#}"),
@@ -504,6 +548,11 @@ struct PendingWriteback {
     key: String,
     n_measurements: usize,
     sim_time_s: f64,
+    /// Per-round search stats, carried through to the terminal landing:
+    /// each round becomes a `search_round` span on the miss's trace
+    /// (snr/k/relerr attrs riding along) and feeds the model-accuracy
+    /// histograms exactly once.
+    rounds: Vec<RoundStats>,
     attempts: usize,
     /// When the first attempt ran. The drop budget is wall-clock, not
     /// attempt-count: parked jobs are re-offered on EVERY writer wakeup
@@ -551,6 +600,7 @@ fn writer_loop(ctx: &Ctx, rx: Receiver<PoolEvent>) {
                     key,
                     n_measurements: result.outcome.n_energy_measurements(),
                     sim_time_s: result.outcome.clock.total_s,
+                    rounds: result.outcome.rounds.clone(),
                     attempts: 0,
                     first_attempt: None,
                     rec,
@@ -572,12 +622,24 @@ fn writer_loop(ctx: &Ctx, rx: Receiver<PoolEvent>) {
                     &config_fingerprint(&cfg),
                 );
                 eprintln!("serve: background search '{name}' failed: {error}");
-                {
+                let pending = {
                     let mut state = ctx.state.lock().expect("state lock");
-                    state.pending.remove(&key);
+                    let p = state.pending.remove(&key);
                     if let Some(lease) = state.claims.remove(&key) {
                         let _ = lease.release();
                     }
+                    p
+                };
+                // A failed search is exactly what tail-sampling must
+                // keep: terminal error span, errored close.
+                if let Some(p) = pending {
+                    let mut traces = ctx.traces.lock().expect("traces lock");
+                    if let Some(start) = traces.start_unix_s(p.trace) {
+                        let off = (unix_now_s() - start).max(0.0);
+                        let span = Span::new("search_failed", off, 0.0).with_note(&error);
+                        traces.span(p.trace, span);
+                    }
+                    traces.close(p.trace, true);
                 }
                 if let Some(log) = &ctx.log {
                     log.emit(
@@ -696,7 +758,7 @@ fn finish_writeback(ctx: &Ctx, job: &PendingWriteback, landing: Landing) {
     if accepted {
         refresh_snapshot(ctx);
     }
-    let (claim, req) = {
+    let (claim, pending) = {
         let mut state = ctx.state.lock().expect("state lock");
         match landing {
             Landing::Accepted => {
@@ -707,17 +769,58 @@ fn finish_writeback(ctx: &Ctx, job: &PendingWriteback, landing: Landing) {
             Landing::Fenced => state.metrics.n_writebacks_fenced += 1,
             Landing::Dropped => state.metrics.n_writebacks_dropped += 1,
         }
-        let req = state.pending.remove(&job.key);
-        (state.claims.remove(&job.key), req)
+        // Model-accuracy telemetry: every search this daemon ran paid
+        // its rounds, whatever the landing — record snr/relerr/k per
+        // regime exactly once, at the terminal landing.
+        for r in &job.rounds {
+            state.metrics.record_model_round(r);
+        }
+        let pending = state.pending.remove(&job.key);
+        (state.claims.remove(&job.key), pending)
     };
+    // Close the trace: one span per search round (model attrs riding
+    // along), then the write-back with its landing. The write-back
+    // span covers first attempt → terminal landing (parked time
+    // included — that wait is exactly what the trace should surface);
+    // rounds are laid out to END where the write-back begins, their
+    // relative durations from the search's own clock.
+    if let Some(p) = &pending {
+        let mut traces = ctx.traces.lock().expect("traces lock");
+        if let Some(start) = traces.start_unix_s(p.trace) {
+            let wb_dur = job.first_attempt.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+            let now = (unix_now_s() - start).max(0.0);
+            let wb_start = (now - wb_dur).max(0.0);
+            let search_s = job.rounds.last().map(|r| r.elapsed_s).unwrap_or(0.0);
+            let search_start = (wb_start - search_s).max(0.0);
+            let mut cum = 0.0;
+            for r in &job.rounds {
+                let dur = (r.elapsed_s - cum).max(0.0);
+                let mut span = Span::new("search_round", search_start + cum, dur);
+                span.round = Some(r.round);
+                span.snr_db = r.snr_db;
+                span.relerr = r.relerr;
+                span.k = (r.k > 0.0).then_some(r.k);
+                span.n_measured = Some(r.n_measured);
+                traces.span(p.trace, span);
+                cum = r.elapsed_s;
+            }
+            let wb = Span::new("writeback", wb_start, wb_dur).with_note(landing.name());
+            traces.span(p.trace, wb);
+        }
+        traces.close(p.trace, landing == Landing::Dropped);
+    }
     // Push path: announce the landed record (with the claim epoch it
     // landed under, for the receivers' stale-epoch fence) BEFORE the
     // claim is released — peers wake and refresh only this shard. A
-    // failed announce only defers to their poll fallback.
+    // failed announce only defers to their poll fallback. The
+    // originating trace id rides along, so the receivers' refresh
+    // continues the chain under the same id.
     if accepted {
         if let Some(notify) = &ctx.notify {
             let epoch = claim.as_ref().map(|lease| lease.epoch()).unwrap_or(0);
-            if let Err(e) = notify.announce(&job.key, ctx.store.shard_of(&job.key), epoch) {
+            let shard = ctx.store.shard_of(&job.key);
+            let trace = pending.as_ref().map(|p| p.trace);
+            if let Err(e) = notify.announce(&job.key, shard, epoch, trace) {
                 eprintln!("serve: notify announce failed for {}: {e:#}", job.key);
             }
         }
@@ -730,7 +833,7 @@ fn finish_writeback(ctx: &Ctx, job: &PendingWriteback, landing: Landing) {
     if let Some(log) = &ctx.log {
         log.emit_traced(
             "job_search_done",
-            req.as_deref().unwrap_or(""),
+            pending.as_ref().map(|p| p.req.as_str()).unwrap_or(""),
             vec![
                 ("key", Json::str(job.key.clone())),
                 ("n_energy_measurements", Json::num(job.n_measurements as f64)),
@@ -763,7 +866,7 @@ fn pump_backlog(ctx: &Ctx) {
             let mut state = ctx.state.lock().expect("state lock");
             let ServeState { backlog, heat, pending, .. } = &mut *state;
             backlog.pop_hottest(heat).map(|(key, job)| {
-                let req = pending.get(&key).cloned().unwrap_or_default();
+                let req = pending.get(&key).map(|p| p.req.clone()).unwrap_or_default();
                 (key, job, req)
             })
         };
@@ -787,24 +890,25 @@ fn pump_backlog(ctx: &Ctx) {
             // Hand the slot back. The backlog may have refilled while
             // the submit was attempted: restore competes by heat and
             // sheds the coldest entry instead of growing past its cap.
-            let shed: Option<String> = {
+            let shed: Option<(String, Option<PendingMiss>)> = {
                 let mut state = ctx.state.lock().expect("state lock");
                 let ServeState { backlog, heat, pending, claims, metrics, .. } = &mut *state;
                 match backlog.restore(key, (job, snapshot), heat) {
                     Offer::Queued => None,
                     Offer::Displaced { key: shed_key, .. }
                     | Offer::Rejected { key: shed_key, .. } => {
-                        pending.remove(&shed_key);
+                        let p = pending.remove(&shed_key);
                         metrics.n_enqueued -= 1;
                         metrics.n_shed += 1;
                         if let Some(lease) = claims.remove(&shed_key) {
                             let _ = lease.release();
                         }
-                        Some(shed_key)
+                        Some((shed_key, p))
                     }
                 }
             };
-            if let Some(shed_key) = shed {
+            if let Some((shed_key, p)) = shed {
+                close_shed_trace(ctx, p.as_ref(), "restore_overflow");
                 if let Some(log) = &ctx.log {
                     log.emit(
                         "job_shed",
@@ -818,6 +922,19 @@ fn pump_backlog(ctx: &Ctx) {
             return;
         }
     }
+}
+
+/// Close a shed key's trace: admission dropped its search, which is a
+/// terminal (non-error) outcome — one `shed` span carrying the reason.
+/// Called AFTER the state lock is released, never under it.
+fn close_shed_trace(ctx: &Ctx, pending: Option<&PendingMiss>, reason: &str) {
+    let Some(p) = pending else { return };
+    let mut traces = ctx.traces.lock().expect("traces lock");
+    if let Some(start) = traces.start_unix_s(p.trace) {
+        let off = (unix_now_s() - start).max(0.0);
+        traces.span(p.trace, Span::new("shed", off, 0.0).with_note(reason));
+    }
+    traces.close(p.trace, false);
 }
 
 /// One connection: serve frames until the client disconnects (or asks
@@ -839,7 +956,7 @@ fn handle_connection(ctx: &Ctx, stream: Stream) {
         if line.trim().is_empty() {
             continue;
         }
-        let (frame, shutdown, traced) = handle_frame(ctx, &line);
+        let (frame, shutdown, traced, opened) = handle_frame(ctx, &line);
         let t_write = Instant::now();
         if writeln!(out, "{frame}").is_err() {
             break;
@@ -850,6 +967,16 @@ fn handle_connection(ctx: &Ctx, stream: Stream) {
             // short reacquisition of the state lock, nothing else.
             let secs = t_write.elapsed().as_secs_f64();
             ctx.state.lock().expect("state lock").metrics.record_stage(Stage::ReplyWrite, secs);
+            // A miss that opened a trace this frame gets the same
+            // measurement as a span — the warm-guess reply leaving the
+            // socket while the real search runs in the background.
+            if let Some(tid) = opened {
+                let mut traces = ctx.traces.lock().expect("traces lock");
+                if let Some(start) = traces.start_unix_s(tid) {
+                    let off = (unix_now_s() - start - secs).max(0.0);
+                    traces.span(tid, Span::new("reply_write", off, secs));
+                }
+            }
         }
         if shutdown {
             ctx.shutting.store(true, Ordering::SeqCst);
@@ -867,34 +994,57 @@ fn handle_connection(ctx: &Ctx, stream: Stream) {
 struct ReqTrace {
     start: Instant,
     stages: StageTrace,
+    /// Client-supplied trace id from the wire, when the frame carried
+    /// one; the reserve point mints a fresh id when absent.
+    wire: Option<TraceId>,
+    /// Set once this request opened a distributed trace (it was the
+    /// RESERVING miss) — the connection loop attaches the reply-write
+    /// span to it after the bytes leave.
+    opened: Option<TraceId>,
 }
 
 impl ReqTrace {
     fn begin(start: Instant) -> ReqTrace {
-        ReqTrace { start, stages: StageTrace::new() }
+        ReqTrace { start, stages: StageTrace::new(), wire: None, opened: None }
     }
 }
 
 /// Dispatch one request frame; returns (response frame, shutdown?,
-/// kernel-serving frame? — only those record the reply-write stage).
-fn handle_frame(ctx: &Ctx, line: &str) -> (Json, bool, bool) {
+/// kernel-serving frame? — only those record the reply-write stage,
+/// trace opened by this frame — it gets the reply-write span too).
+fn handle_frame(ctx: &Ctx, line: &str) -> (Json, bool, bool, Option<TraceId>) {
     let t0 = Instant::now();
     let parsed = Request::parse_line(line);
     let parse_s = t0.elapsed().as_secs_f64();
     match parsed {
-        Err(rej) => (rej.to_json(), false, false),
-        Ok(Request::Shutdown { id }) => (Response::ShutdownAck { id }.to_json(), true, false),
-        Ok(Request::Stats { id }) => (stats_reply(ctx, id).to_json(), false, false),
-        Ok(Request::Metrics { id }) => (metrics_reply(ctx, id).to_json(), false, false),
-        Ok(Request::GetKernel { id, workload, gpu, mode }) => {
+        Err(rej) => (rej.to_json(), false, false, None),
+        Ok(Request::Shutdown { id }) => {
+            (Response::ShutdownAck { id }.to_json(), true, false, None)
+        }
+        Ok(Request::Stats { id }) => (stats_reply(ctx, id).to_json(), false, false, None),
+        Ok(Request::Metrics { id }) => (metrics_reply(ctx, id).to_json(), false, false, None),
+        Ok(Request::Traces { id, slowest }) => {
+            (traces_reply(ctx, id, slowest).to_json(), false, false, None)
+        }
+        Ok(Request::GetKernel { id, workload, gpu, mode, trace: wire }) => {
             let mut trace = ReqTrace::begin(t0);
+            trace.wire = wire.as_deref().and_then(TraceId::from_hex);
             trace.stages.add(Stage::Parse, parse_s);
-            (serve_get_kernel(ctx, id, workload, gpu, mode, &mut trace).to_json(), false, true)
+            let reply = serve_get_kernel(ctx, id, workload, gpu, mode, &mut trace);
+            (reply.to_json(), false, true, trace.opened)
         }
         Ok(Request::Batch { id, items }) => {
-            (serve_batch(ctx, id, items, parse_s).to_json(), false, true)
+            (serve_batch(ctx, id, items, parse_s).to_json(), false, true, None)
         }
     }
+}
+
+/// Answer a `trace` frame: the ring's retained traces, slowest first
+/// (`slowest == 0` returns every completed trace), cloned out under
+/// the trace lock only.
+fn traces_reply(ctx: &Ctx, id: String, slowest: usize) -> TraceReply {
+    let traces = ctx.traces.lock().expect("traces lock");
+    TraceReply { id, traces: traces.slowest(slowest).into_iter().cloned().collect() }
 }
 
 fn stats_reply(ctx: &Ctx, id: String) -> StatsReply {
@@ -954,6 +1104,7 @@ fn metrics_reply(ctx: &Ctx, id: String) -> MetricsReply {
         reply_sim_s: m.reply_sim().clone(),
         reply_wall_s: m.reply_wall().clone(),
         stages: Stage::ALL.iter().map(|&s| (s.name().to_string(), m.stage(s).clone())).collect(),
+        model: m.model_pairs().into_iter().map(|(k, h)| (k, h.clone())).collect(),
     }
 }
 
@@ -1158,8 +1309,14 @@ fn serve_miss(
             reserve = true;
         }
     }
+    let mut opened: Option<TraceId> = None;
     if reserve {
-        state.pending.insert(key.clone(), id.clone());
+        // The reserving miss mints (or adopts the client's) trace id;
+        // duplicates coalescing on `pending` ride the same trace, so a
+        // key searched once fleet-wide yields exactly one trace.
+        let tid = trace.wire.unwrap_or_else(TraceId::mint);
+        opened = Some(tid);
+        state.pending.insert(key.clone(), PendingMiss { req: id.clone(), trace: tid });
         state.metrics.n_enqueued += 1;
     }
     let snapshot = state.snapshot.clone();
@@ -1172,7 +1329,7 @@ fn serve_miss(
     // saturated daemon sheds the coldest key instead — a shed key's
     // claim is released so any daemon's next request for it retries.
     let mut enqueued = false;
-    let mut shed_event: Option<(String, &'static str)> = None;
+    let mut shed_event: Option<(String, &'static str, Option<PendingMiss>)> = None;
     let mut via = "queue";
     let t_enqueue = Instant::now();
     if reserve {
@@ -1197,22 +1354,22 @@ fn serve_miss(
                 Offer::Displaced { key: shed_key, .. } => {
                     enqueued = true;
                     via = "backlog";
-                    pending.remove(&shed_key);
+                    let p = pending.remove(&shed_key);
                     metrics.n_enqueued -= 1;
                     metrics.n_shed += 1;
                     if let Some(lease) = claims.remove(&shed_key) {
                         let _ = lease.release();
                     }
-                    shed_event = Some((shed_key, "displaced_by_hotter_key"));
+                    shed_event = Some((shed_key, "displaced_by_hotter_key", p));
                 }
                 Offer::Rejected { key: cold_key, .. } => {
-                    pending.remove(&cold_key);
+                    let p = pending.remove(&cold_key);
                     metrics.n_enqueued -= 1;
                     metrics.n_shed += 1;
                     if let Some(lease) = claims.remove(&cold_key) {
                         let _ = lease.release();
                     }
-                    shed_event = Some((cold_key, "colder_than_backlog"));
+                    shed_event = Some((cold_key, "colder_than_backlog", p));
                 }
             }
         }
@@ -1223,6 +1380,30 @@ fn serve_miss(
     // path only (the hit path records under its one acquisition).
     let wall_s = trace.start.elapsed().as_secs_f64();
     ctx.state.lock().expect("state lock").metrics.record_reply(false, t, wall_s, &trace.stages);
+    // The reserving miss opens the distributed trace — the hot-path
+    // stages become its first spans (cumulative offsets, hot-path
+    // order). Search rounds and the write-back attach at the terminal
+    // landing; reply-write after the bytes actually leave the socket.
+    if let Some(tid) = opened {
+        trace.opened = Some(tid);
+        let mut traces = ctx.traces.lock().expect("traces lock");
+        traces.open(tid, &key, &id, unix_now_s() - wall_s);
+        let mut off = 0.0;
+        for stage in Stage::ALL {
+            if stage == Stage::ReplyWrite {
+                continue; // measured by the connection loop post-flush
+            }
+            if let Some(secs) = trace.stages.get(stage) {
+                traces.span(tid, Span::new(stage.name(), off, secs));
+                off += secs;
+            }
+        }
+    }
+    // A shed key's trace terminates here (possibly the one just
+    // opened, when this very miss was the coldest offer).
+    if let Some((_, reason, p)) = &shed_event {
+        close_shed_trace(ctx, p.as_ref(), reason);
+    }
     if let Some(log) = &ctx.log {
         if enqueued {
             log.emit_traced(
@@ -1235,7 +1416,7 @@ fn serve_miss(
                 ],
             );
         }
-        if let Some((shed_key, reason)) = shed_event {
+        if let Some((shed_key, reason, _)) = shed_event {
             log.emit(
                 "job_shed",
                 vec![("key", Json::str(shed_key)), ("reason", Json::str(reason))],

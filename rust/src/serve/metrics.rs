@@ -17,6 +17,16 @@
 
 use crate::telemetry::{LogHistogram, Stage, StageTrace, N_STAGES};
 
+/// Cost-model accuracy regimes (ISSUE 7): `round0` isolates the warm-
+/// start transfer round (where a poisoned seed model shows up first),
+/// `steady` aggregates every later round. Index = `regime_of(round)`.
+pub const MODEL_REGIMES: [&str; 2] = ["round0", "steady"];
+
+/// Regime bucket index for a search-round number.
+pub fn regime_of(round: usize) -> usize {
+    usize::from(round != 0)
+}
+
 /// Simulated base cost of one store lookup.
 pub const REPLY_LOOKUP_BASE_S: f64 = 50e-6;
 /// Simulated per-record scan cost within the key's shard (the term
@@ -70,6 +80,17 @@ pub struct ServeMetrics {
     reply_wall: LogHistogram,
     /// Wall-clock per-stage histograms, indexed by `Stage as usize`.
     stages: [LogHistogram; N_STAGES],
+    /// Cost-model SNR prediction error per round (dB), per regime.
+    /// Recorded off the hot path (write-back landing, writer thread).
+    /// Non-positive dB values clamp into bucket 0 — a histogram count
+    /// piling up there IS the drift signal.
+    model_snr_db: [LogHistogram; MODEL_REGIMES.len()],
+    /// Predicted-vs-measured relative energy error per round, per
+    /// regime (unitless; 0.1 = 10% off).
+    model_energy_relerr: [LogHistogram; MODEL_REGIMES.len()],
+    /// Dynamic-k trajectory per regime: the fraction of each round's
+    /// candidates paid for with NVML measurements.
+    model_dynamic_k: [LogHistogram; MODEL_REGIMES.len()],
 }
 
 impl ServeMetrics {
@@ -124,6 +145,57 @@ impl ServeMetrics {
 
     pub fn stage(&self, stage: Stage) -> &LogHistogram {
         &self.stages[stage as usize]
+    }
+
+    /// Record one search round's cost-model accuracy telemetry
+    /// (ISSUE 7). Called at write-back landing — the writer thread,
+    /// never the request hot path. `snr_db`/`relerr` are recorded when
+    /// the round computed them; `k` whenever the round ran the dynamic
+    /// controller (k > 0 — latency-only rounds report 0 and carry no
+    /// model).
+    pub fn record_model_round(&mut self, round: &crate::search::RoundStats) {
+        let regime = regime_of(round.round);
+        if let Some(snr) = round.snr_db {
+            self.model_snr_db[regime].record(snr);
+        }
+        if let Some(e) = round.relerr {
+            self.model_energy_relerr[regime].record(e);
+        }
+        if round.k > 0.0 {
+            self.model_dynamic_k[regime].record(round.k);
+        }
+    }
+
+    pub fn model_snr_db(&self, regime: usize) -> &LogHistogram {
+        &self.model_snr_db[regime]
+    }
+
+    pub fn model_energy_relerr(&self, regime: usize) -> &LogHistogram {
+        &self.model_energy_relerr[regime]
+    }
+
+    pub fn model_dynamic_k(&self, regime: usize) -> &LogHistogram {
+        &self.model_dynamic_k[regime]
+    }
+
+    /// Every non-empty model-accuracy histogram as
+    /// `("family/regime", histogram)` pairs — the `metrics` op's
+    /// `model` map keys (family is the Prometheus base name minus the
+    /// `ecokernel_` prefix). Cold path only; allocates the Vec.
+    pub fn model_pairs(&self) -> Vec<(String, &LogHistogram)> {
+        let mut out = Vec::new();
+        for (regime, name) in MODEL_REGIMES.iter().enumerate() {
+            for (family, hist) in [
+                ("model_snr_db", &self.model_snr_db[regime]),
+                ("model_energy_relerr", &self.model_energy_relerr[regime]),
+                ("model_dynamic_k", &self.model_dynamic_k[regime]),
+            ] {
+                if !hist.is_empty() {
+                    out.push((format!("{family}/{name}"), hist));
+                }
+            }
+        }
+        out
     }
 
     /// Counter name/value pairs, names matching the `stats` wire
@@ -257,5 +329,61 @@ mod tests {
     fn misses_cost_more_and_sharding_cuts_scan_cost() {
         assert!(reply_time_s(false, 10) > reply_time_s(true, 10));
         assert!(reply_time_s(true, 10_000) > reply_time_s(true, 10_000 / 8));
+    }
+
+    #[test]
+    fn model_rounds_land_in_the_right_regime_bucket() {
+        use crate::search::RoundStats;
+        let mut m = ServeMetrics::default();
+        assert!(m.model_pairs().is_empty(), "no rounds, no model families");
+        // Cold round 0: no SNR check yet, but k is live.
+        m.record_model_round(&RoundStats {
+            round: 0,
+            best_latency_s: 1e-3,
+            best_energy_j: 0.5,
+            snr_db: None,
+            relerr: None,
+            k: 0.5,
+            n_measured: 16,
+            elapsed_s: 1.0,
+        });
+        // Steady round with a model check.
+        m.record_model_round(&RoundStats {
+            round: 3,
+            best_latency_s: 0.9e-3,
+            best_energy_j: 0.4,
+            snr_db: Some(17.2),
+            relerr: Some(0.12),
+            k: 0.25,
+            n_measured: 8,
+            elapsed_s: 2.0,
+        });
+        // Latency-only round: k == 0 records nothing.
+        m.record_model_round(&RoundStats {
+            round: 1,
+            best_latency_s: 1e-3,
+            best_energy_j: f64::NAN,
+            snr_db: None,
+            relerr: None,
+            k: 0.0,
+            n_measured: 0,
+            elapsed_s: 0.1,
+        });
+        assert_eq!(m.model_dynamic_k(regime_of(0)).count(), 1);
+        assert_eq!(m.model_dynamic_k(regime_of(3)).count(), 1);
+        assert_eq!(m.model_snr_db(0).count(), 0);
+        assert_eq!(m.model_snr_db(1).count(), 1);
+        assert!((m.model_snr_db(1).mean() - 17.2).abs() < 1e-12);
+        assert_eq!(m.model_energy_relerr(1).count(), 1);
+        let keys: Vec<String> = m.model_pairs().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(
+            keys,
+            [
+                "model_dynamic_k/round0",
+                "model_snr_db/steady",
+                "model_energy_relerr/steady",
+                "model_dynamic_k/steady"
+            ]
+        );
     }
 }

@@ -23,8 +23,13 @@
 //! * [`metrics`] — hit rate, p50/p99 reply time on the simulated AND
 //!   wall clocks, per-stage hot-path histograms
 //!   ([`crate::telemetry`]), queue depth, shed/coalesce counters,
-//!   measurement-cost ledger; served whole by the `metrics` wire op
-//!   and mergeable fleet-wide ([`client::merged_metrics`]);
+//!   measurement-cost ledger, and per-regime cost-model accuracy
+//!   histograms; served whole by the `metrics` wire op and mergeable
+//!   fleet-wide ([`client::merged_metrics`]). The `trace` wire op
+//!   returns the daemon's tail-sampled distributed traces
+//!   ([`crate::telemetry::TraceLog`]) — one miss followed from wire
+//!   parse through search rounds, write-back, and the peers'
+//!   notify-refresh ingest;
 //! * [`bench`] — the `ecokernel bench serve` harness: zipf replay
 //!   against live daemons (single + two-daemon TCP fleet), producing
 //!   the `BENCH_serving.json` baseline.
@@ -42,10 +47,10 @@ pub mod protocol;
 
 pub use crate::fleet::ServeAddr;
 pub use bench::{run_bench_serve, BenchServeOpts};
-pub use client::{merged_metrics, BatchError, BatchRequest, ServeClient};
+pub use client::{merged_metrics, BatchError, BatchRequest, FleetMetrics, ServeClient};
 pub use daemon::{Daemon, DaemonConfig, DaemonHandle};
-pub use metrics::ServeMetrics;
+pub use metrics::{ServeMetrics, MODEL_REGIMES};
 pub use protocol::{
     error_code, BatchItem, KernelReply, MetricsReply, Reject, Request, Response, ServeSource,
-    StatsReply, MAX_BATCH_ITEMS, METRICS_VERSION, PROTOCOL_VERSION,
+    StatsReply, TraceReply, MAX_BATCH_ITEMS, METRICS_VERSION, PROTOCOL_VERSION, TRACE_VERSION,
 };

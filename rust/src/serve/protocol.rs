@@ -23,6 +23,11 @@
 //!   [`METRICS_VERSION`] so the histogram encoding can evolve without
 //!   a protocol bump). Clients merge N daemons' frames into one fleet
 //!   view; `query --metrics --prom` renders Prometheus text;
+//! * `trace` — completed request traces from the daemon's
+//!   tail-sampled ring, slowest first (optional `"slowest"` cap); the
+//!   payload carries its own [`TRACE_VERSION`]. A `get_kernel` frame
+//!   may carry an optional `"trace"` id (hex) the miss path threads
+//!   through its spans; absent, the daemon mints one;
 //! * `shutdown` — graceful daemon stop (acked before the socket
 //!   closes).
 //!
@@ -52,6 +57,12 @@ pub const PROTOCOL_VERSION: u64 = 1;
 /// bump. A client rejects payloads newer than it understands.
 pub const METRICS_VERSION: u64 = 1;
 
+/// Version of the `trace` reply PAYLOAD (the span encoding), carried
+/// as `"trace_v"` inside the frame — same contract as
+/// [`METRICS_VERSION`]: absent reads as v1, newer than the client is
+/// refused.
+pub const TRACE_VERSION: u64 = 1;
+
 /// Hard cap on `batch` frame size: a runaway client must not make the
 /// daemon buffer an unbounded reply frame.
 pub const MAX_BATCH_ITEMS: usize = 1024;
@@ -77,6 +88,11 @@ pub enum Request {
         workload: Workload,
         gpu: Option<GpuArch>,
         mode: Option<SearchMode>,
+        /// Client-chosen trace id (hex), threaded through the miss
+        /// path's spans end-to-end; absent → the daemon mints one.
+        /// Only encoded when present, so single-hit frames stay
+        /// byte-identical to the pre-trace wire format.
+        trace: Option<String>,
     },
     /// N `get_kernel` requests in one frame. Entries parse
     /// independently: a malformed one carries its [`Reject`] (answered
@@ -87,6 +103,11 @@ pub enum Request {
     },
     Stats { id: String },
     Metrics { id: String },
+    /// Completed traces from the daemon's [`TraceLog`] ring, slowest
+    /// first, at most `slowest` of them (0 = every retained trace).
+    ///
+    /// [`TraceLog`]: crate::telemetry::TraceLog
+    Traces { id: String, slowest: usize },
     Shutdown { id: String },
 }
 
@@ -133,7 +154,7 @@ impl Request {
     pub fn to_json(&self) -> Json {
         let mut fields = vec![("v", Json::num(PROTOCOL_VERSION as f64))];
         match self {
-            Request::GetKernel { id, workload, gpu, mode } => {
+            Request::GetKernel { id, workload, gpu, mode, trace } => {
                 fields.push(("op", Json::str("get_kernel")));
                 fields.push(("id", Json::str(id.clone())));
                 fields.push(("workload", workload_to_json(workload)));
@@ -142,6 +163,9 @@ impl Request {
                 }
                 if let Some(m) = mode {
                     fields.push(("mode", Json::str(m.name())));
+                }
+                if let Some(t) = trace {
+                    fields.push(("trace", Json::str(t.clone())));
                 }
             }
             Request::Batch { id, items } => {
@@ -171,6 +195,13 @@ impl Request {
             Request::Metrics { id } => {
                 fields.push(("op", Json::str("metrics")));
                 fields.push(("id", Json::str(id.clone())));
+            }
+            Request::Traces { id, slowest } => {
+                fields.push(("op", Json::str("trace")));
+                fields.push(("id", Json::str(id.clone())));
+                if *slowest > 0 {
+                    fields.push(("slowest", Json::num(*slowest as f64)));
+                }
             }
             Request::Shutdown { id } => {
                 fields.push(("op", Json::str("shutdown")));
@@ -208,10 +239,17 @@ impl Request {
         match op {
             "stats" => Ok(Request::Stats { id }),
             "metrics" => Ok(Request::Metrics { id }),
+            "trace" => {
+                let slowest =
+                    v.get("slowest").and_then(|x| x.as_f64()).unwrap_or(0.0).max(0.0) as usize;
+                Ok(Request::Traces { id, slowest })
+            }
             "shutdown" => Ok(Request::Shutdown { id }),
             "get_kernel" => {
                 let (workload, gpu, mode) = parse_get_kernel_fields(&v, &id)?;
-                Ok(Request::GetKernel { id, workload, gpu, mode })
+                let trace =
+                    v.get("trace").and_then(|x| x.as_str()).map(|s| s.to_string());
+                Ok(Request::GetKernel { id, workload, gpu, mode, trace })
             }
             "batch" => {
                 let entries = v.get("requests").and_then(|r| r.as_arr()).ok_or_else(|| {
@@ -575,6 +613,12 @@ pub struct MetricsReply {
     /// `shard_read`, `snapshot_lookup`, `claim_io`, `enqueue`,
     /// `reply_write`).
     pub stages: BTreeMap<String, LogHistogram>,
+    /// Cost-model accuracy histograms keyed `family/regime`
+    /// (`model_snr_db/round0`, `model_energy_relerr/steady`,
+    /// `model_dynamic_k/steady`, ...) — the ISSUE 7 drift telemetry.
+    /// Absent in pre-trace frames (reads as empty), so no
+    /// `metrics_v` bump.
+    pub model: BTreeMap<String, LogHistogram>,
 }
 
 impl MetricsReply {
@@ -583,6 +627,8 @@ impl MetricsReply {
             self.counters.iter().map(|(k, &v)| (k.clone(), Json::num(v as f64))).collect();
         let stages: BTreeMap<String, Json> =
             self.stages.iter().map(|(k, h)| (k.clone(), h.to_json())).collect();
+        let model: BTreeMap<String, Json> =
+            self.model.iter().map(|(k, h)| (k.clone(), h.to_json())).collect();
         Json::obj(vec![
             ("v", Json::num(PROTOCOL_VERSION as f64)),
             ("id", Json::str(self.id.clone())),
@@ -593,6 +639,7 @@ impl MetricsReply {
             ("reply_sim_s", self.reply_sim_s.to_json()),
             ("reply_wall_s", self.reply_wall_s.to_json()),
             ("stages", Json::Obj(stages)),
+            ("model", Json::Obj(model)),
         ])
     }
 
@@ -620,6 +667,14 @@ impl MetricsReply {
                 stages.insert(k.clone(), LogHistogram::from_json(h));
             }
         }
+        // Absent in pre-trace frames: an empty model map merges as a
+        // no-op, so old daemons mix into a fleet view cleanly.
+        let mut model = BTreeMap::new();
+        if let Some(Json::Obj(m)) = v.get("model") {
+            for (k, h) in m {
+                model.insert(k.clone(), LogHistogram::from_json(h));
+            }
+        }
         let hist = |key: &str| v.get(key).map(LogHistogram::from_json).unwrap_or_default();
         Ok(MetricsReply {
             id: get_str(v, "id")?,
@@ -627,6 +682,7 @@ impl MetricsReply {
             reply_sim_s: hist("reply_sim_s"),
             reply_wall_s: hist("reply_wall_s"),
             stages,
+            model,
         })
     }
 
@@ -652,6 +708,14 @@ impl MetricsReply {
                 }
             }
         }
+        for (name, h) in &other.model {
+            match self.model.get_mut(name) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.model.insert(name.clone(), h.clone());
+                }
+            }
+        }
     }
 
     /// Requests amortized per `batch` frame — how many `get_kernel`s
@@ -668,7 +732,9 @@ impl MetricsReply {
     /// Prometheus text exposition (v0.0.4): counters as `_total`
     /// counters, histograms as cumulative-`le` histograms with the
     /// log2 bucket upper bounds, stages as one histogram family with a
-    /// `stage` label.
+    /// `stage` label, model-accuracy families with a `regime` label
+    /// (`ecokernel_model_snr_db`, `ecokernel_model_energy_relerr`,
+    /// `ecokernel_model_dynamic_k`).
     pub fn to_prometheus(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::new();
@@ -681,24 +747,54 @@ impl MetricsReply {
         prom_histogram(&mut out, "ecokernel_reply_wall_seconds", None, &self.reply_wall_s);
         let _ = writeln!(out, "# TYPE ecokernel_stage_seconds histogram");
         for (stage, h) in &self.stages {
-            prom_histogram(&mut out, "ecokernel_stage_seconds", Some(stage), h);
+            prom_histogram(&mut out, "ecokernel_stage_seconds", Some(("stage", stage)), h);
+        }
+        // Model keys are `family/regime`; each family becomes one
+        // histogram family labelled by regime. Keys sort family-major
+        // (BTreeMap), so the `# TYPE` line precedes its label values.
+        let mut last_family = "";
+        for (key, h) in &self.model {
+            let (family, regime) = key.split_once('/').unwrap_or((key.as_str(), "all"));
+            if family != last_family {
+                let _ = writeln!(out, "# TYPE ecokernel_{family} histogram");
+                last_family = family;
+            }
+            let name = format!("ecokernel_{family}");
+            prom_histogram(&mut out, &name, Some(("regime", regime)), h);
         }
         out
     }
 }
 
+/// Escape a Prometheus label VALUE (text exposition v0.0.4):
+/// backslash, double-quote, and newline.
+fn prom_escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// One Prometheus histogram family: cumulative `le` buckets (empty
 /// leading buckets elided, counts stay cumulative), then `_sum` and
-/// `_count`. With a label the `# TYPE` line is the caller's (one per
-/// family, not per label value).
-fn prom_histogram(out: &mut String, name: &str, label: Option<&str>, h: &LogHistogram) {
+/// `_count`. With a `(key, value)` label the `# TYPE` line is the
+/// caller's (one per family, not per label value); the label value is
+/// escaped per the exposition format.
+fn prom_histogram(out: &mut String, name: &str, label: Option<(&str, &str)>, h: &LogHistogram) {
     use std::fmt::Write as _;
-    let tag = |le: &str| match label {
-        Some(v) => format!("{{stage=\"{v}\",le=\"{le}\"}}"),
+    let label = label.map(|(k, v)| (k, prom_escape(v)));
+    let tag = |le: &str| match &label {
+        Some((k, v)) => format!("{{{k}=\"{v}\",le=\"{le}\"}}"),
         None => format!("{{le=\"{le}\"}}"),
     };
-    let suffix = match label {
-        Some(v) => format!("{{stage=\"{v}\"}}"),
+    let suffix = match &label {
+        Some((k, v)) => format!("{{{k}=\"{v}\"}}"),
         None => String::new(),
     };
     if label.is_none() {
@@ -724,6 +820,44 @@ fn prom_histogram(out: &mut String, name: &str, label: Option<&str>, h: &LogHist
     let _ = writeln!(out, "{name}_count{suffix} {}", h.count());
 }
 
+/// The `trace` response frame: completed traces from the daemon's
+/// tail-sampled ring, slowest first. Carries its own payload version
+/// (`"trace_v"`, like `metrics_v`) so the span encoding can evolve
+/// without a protocol bump.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceReply {
+    pub id: String,
+    pub traces: Vec<crate::telemetry::Trace>,
+}
+
+impl TraceReply {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("v", Json::num(PROTOCOL_VERSION as f64)),
+            ("id", Json::str(self.id.clone())),
+            ("ok", Json::Bool(true)),
+            ("op", Json::str("trace")),
+            ("trace_v", Json::num(TRACE_VERSION as f64)),
+            ("traces", Json::arr(self.traces.iter().map(|t| t.to_json()))),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<TraceReply, String> {
+        let payload_v = v.get("trace_v").and_then(|x| x.as_f64()).unwrap_or(1.0) as u64;
+        if payload_v > TRACE_VERSION {
+            return Err(format!(
+                "trace payload is v{payload_v}, this client understands v{TRACE_VERSION}"
+            ));
+        }
+        let traces = v
+            .get("traces")
+            .and_then(|a| a.as_arr())
+            .map(|a| a.iter().filter_map(crate::telemetry::Trace::from_json).collect())
+            .unwrap_or_default();
+        Ok(TraceReply { id: get_str(v, "id")?, traces })
+    }
+}
+
 fn opt_usize(v: &Json, key: &str) -> usize {
     v.get(key).and_then(|x| x.as_f64()).unwrap_or(0.0) as usize
 }
@@ -744,6 +878,7 @@ pub enum Response {
     Batch { id: String, replies: Vec<Response> },
     Stats(StatsReply),
     Metrics(MetricsReply),
+    Trace(TraceReply),
     ShutdownAck { id: String },
     Error { id: Option<String>, code: String, message: String },
 }
@@ -761,6 +896,7 @@ impl Response {
             ]),
             Response::Stats(r) => r.to_json(),
             Response::Metrics(r) => r.to_json(),
+            Response::Trace(r) => r.to_json(),
             Response::ShutdownAck { id } => Json::obj(vec![
                 ("v", Json::num(PROTOCOL_VERSION as f64)),
                 ("id", Json::str(id.clone())),
@@ -828,6 +964,7 @@ impl Response {
             }
             "stats" => Ok(Response::Stats(StatsReply::from_json(v)?)),
             "metrics" => Ok(Response::Metrics(MetricsReply::from_json(v)?)),
+            "trace" => Ok(Response::Trace(TraceReply::from_json(v)?)),
             "shutdown" => Ok(Response::ShutdownAck { id: get_str(v, "id")? }),
             other => Err(format!("unknown response op '{other}'")),
         }
@@ -864,10 +1001,19 @@ mod tests {
                 workload: suites::MM1,
                 gpu: Some(GpuArch::A100),
                 mode: Some(SearchMode::EnergyAware),
+                trace: Some("deadbeefcafef00d".into()),
             },
-            Request::GetKernel { id: "c2".into(), workload: suites::CONV2, gpu: None, mode: None },
+            Request::GetKernel {
+                id: "c2".into(),
+                workload: suites::CONV2,
+                gpu: None,
+                mode: None,
+                trace: None,
+            },
             Request::Stats { id: "c3".into() },
             Request::Metrics { id: "c5".into() },
+            Request::Traces { id: "c6".into(), slowest: 5 },
+            Request::Traces { id: "c7".into(), slowest: 0 },
             Request::Shutdown { id: "c4".into() },
         ];
         for req in reqs {
@@ -1285,10 +1431,14 @@ mod tests {
         let mut reply_sim_s = LogHistogram::new();
         let mut reply_wall_s = LogHistogram::new();
         let mut parse = LogHistogram::new();
+        let mut snr = LogHistogram::new();
+        let mut k = LogHistogram::new();
         for &v in seed {
             reply_sim_s.record(v);
             reply_wall_s.record(v * 0.5);
             parse.record(v * 0.1);
+            snr.record(v * 1e5);
+            k.record(0.5);
         }
         MetricsReply {
             id: id.into(),
@@ -1303,6 +1453,12 @@ mod tests {
             reply_sim_s,
             reply_wall_s,
             stages: [("parse".to_string(), parse)].into_iter().collect(),
+            model: [
+                ("model_snr_db/steady".to_string(), snr),
+                ("model_dynamic_k/steady".to_string(), k),
+            ]
+            .into_iter()
+            .collect(),
         }
     }
 
@@ -1339,6 +1495,7 @@ mod tests {
         assert_eq!(ab.reply_sim_s, expect.reply_sim_s);
         assert_eq!(ab.reply_wall_s, expect.reply_wall_s);
         assert_eq!(ab.stages, expect.stages);
+        assert_eq!(ab.model, expect.model, "model families merge per key");
         assert_eq!(ab.counter("n_requests"), 5);
         assert_eq!(ab.counter("n_batch_frames"), 4);
         assert_eq!(ab.frames_per_syscall(), 8.0);
@@ -1379,6 +1536,125 @@ mod tests {
                 assert_eq!(code, error_code::INTERNAL);
                 assert_eq!(message, "boom");
             }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// GOLDEN exposition: one counter, one single-sample histogram
+    /// (0.5 s lands in the 2^-1..2^0 bucket, so exactly one finite
+    /// `le` line survives head+tail elision), empty histograms, and a
+    /// model regime whose label value needs every escape the text
+    /// format defines. Pinned line-for-line: any drift in escaping,
+    /// elision, or family ordering breaks here before it breaks a
+    /// scraper.
+    #[test]
+    fn prometheus_exposition_is_golden() {
+        let mut h = LogHistogram::new();
+        h.record(0.5);
+        let reply = MetricsReply {
+            id: "g".into(),
+            counters: [("n_requests".to_string(), 7)].into_iter().collect(),
+            reply_sim_s: h.clone(),
+            reply_wall_s: LogHistogram::new(),
+            stages: BTreeMap::new(),
+            model: [("model_snr_db/we\"ird\\regime\n".to_string(), h)].into_iter().collect(),
+        };
+        let expect = concat!(
+            "# TYPE ecokernel_requests_total counter\n",
+            "ecokernel_requests_total 7\n",
+            "# TYPE ecokernel_reply_sim_seconds histogram\n",
+            "ecokernel_reply_sim_seconds_bucket{le=\"1e0\"} 1\n",
+            "ecokernel_reply_sim_seconds_bucket{le=\"+Inf\"} 1\n",
+            "ecokernel_reply_sim_seconds_sum 0.5\n",
+            "ecokernel_reply_sim_seconds_count 1\n",
+            "# TYPE ecokernel_reply_wall_seconds histogram\n",
+            "ecokernel_reply_wall_seconds_bucket{le=\"+Inf\"} 0\n",
+            "ecokernel_reply_wall_seconds_sum 0\n",
+            "ecokernel_reply_wall_seconds_count 0\n",
+            "# TYPE ecokernel_stage_seconds histogram\n",
+            "# TYPE ecokernel_model_snr_db histogram\n",
+            "ecokernel_model_snr_db_bucket{regime=\"we\\\"ird\\\\regime\\n\",le=\"1e0\"} 1\n",
+            "ecokernel_model_snr_db_bucket{regime=\"we\\\"ird\\\\regime\\n\",le=\"+Inf\"} 1\n",
+            "ecokernel_model_snr_db_sum{regime=\"we\\\"ird\\\\regime\\n\"} 0.5\n",
+            "ecokernel_model_snr_db_count{regime=\"we\\\"ird\\\\regime\\n\"} 1\n",
+        );
+        assert_eq!(reply.to_prometheus(), expect);
+    }
+
+    /// Model families share one `# TYPE` line across regimes, and the
+    /// fleet-merged view exposes per-regime model histograms — the
+    /// ISSUE 7 acceptance shape.
+    #[test]
+    fn prometheus_model_families_are_labelled_per_regime() {
+        let mut a = sample_metrics_reply("a", &[5e-5, 2.1e-3]);
+        let mut round0 = LogHistogram::new();
+        round0.record(9.0);
+        a.model.insert("model_snr_db/round0".to_string(), round0);
+        let b = sample_metrics_reply("b", &[7e-5]);
+        a.merge(&b);
+        let prom = a.to_prometheus();
+        assert_eq!(prom.matches("# TYPE ecokernel_model_snr_db histogram").count(), 1, "{prom}");
+        assert!(prom.contains("ecokernel_model_snr_db_bucket{regime=\"round0\",le="), "{prom}");
+        assert!(prom.contains("ecokernel_model_snr_db_count{regime=\"steady\"} 3"), "{prom}");
+        assert!(prom.contains("ecokernel_model_dynamic_k_count{regime=\"steady\"} 3"), "{prom}");
+        assert!(prom.contains("# TYPE ecokernel_model_dynamic_k histogram"), "{prom}");
+    }
+
+    #[test]
+    fn trace_reply_roundtrip_and_version_gate() {
+        use crate::telemetry::{Span, Trace, TraceId};
+        let mut span = Span::new("search_round", 0.2, 1.5);
+        span.round = Some(1);
+        span.snr_db = Some(14.0);
+        span.k = Some(0.5);
+        span.n_measured = Some(8);
+        span.relerr = Some(0.2);
+        let trace = Trace {
+            id: TraceId::from_hex("deadbeefcafef00d").unwrap(),
+            key: "mm1|a100|energy_aware|fp".into(),
+            req: "c9".into(),
+            start_unix_s: 1700000000.25,
+            total_s: 1.7,
+            error: false,
+            complete: true,
+            remote: false,
+            spans: vec![Span::new("claim_io", 0.0, 0.01), span],
+        };
+        let reply = TraceReply { id: "t1".into(), traces: vec![trace] };
+        let line = reply.to_json().to_string();
+        match Response::parse_line(&line).unwrap() {
+            Response::Trace(back) => assert_eq!(back, reply),
+            other => panic!("{other:?}"),
+        }
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("trace_v").and_then(Json::as_f64), Some(1.0));
+        let newer = line.replace(r#""trace_v":1"#, r#""trace_v":2"#);
+        assert!(Response::parse_line(&newer).unwrap_err().contains("trace payload"));
+        // An empty ring answers an empty-but-well-formed reply.
+        let empty = TraceReply { id: "t2".into(), traces: vec![] };
+        let line = empty.to_json().to_string();
+        assert_eq!(Response::parse_line(&line), Ok(Response::Trace(empty)));
+    }
+
+    /// A trace-less `get_kernel` frame is byte-identical to the
+    /// pre-trace wire format (the `trace` field encodes only when
+    /// present), so old daemons and clients interoperate unchanged.
+    #[test]
+    fn traceless_get_kernel_frames_are_unchanged() {
+        let req = Request::GetKernel {
+            id: "c1".into(),
+            workload: suites::MM1,
+            gpu: None,
+            mode: None,
+            trace: None,
+        };
+        let line = req.to_json().to_string();
+        assert!(!line.contains("trace"), "{line}");
+        // And a foreign field named `trace` on the wire parses into
+        // the id slot without disturbing the rest.
+        let with = r#"{"v":1,"op":"get_kernel","id":"x","workload":"MM1","trace":"a3f9"}"#;
+        match Request::parse_line(with).unwrap() {
+            Request::GetKernel { trace, .. } => assert_eq!(trace.as_deref(), Some("a3f9")),
             other => panic!("{other:?}"),
         }
     }

@@ -11,9 +11,16 @@
 //! - [`Stage`] / [`StageTrace`]: the daemon hot-path stage taxonomy
 //!   (parse, shard read, snapshot lookup, claim I/O, enqueue, reply
 //!   write) and a stack-only per-request accumulator.
+//! - [`TraceId`] / [`Span`] / [`Trace`] / [`TraceLog`] (ISSUE 7):
+//!   span-based request tracing — a `Copy` trace id that crosses
+//!   daemon boundaries through the notify channel, and a bounded
+//!   in-daemon ring with tail-sampling (slowest-N + errored traces
+//!   always retained).
 
 mod histogram;
 mod stages;
+mod trace;
 
 pub use histogram::{bucket_lower, LogHistogram, MIN_LOG2, N_BUCKETS};
 pub use stages::{Stage, StageTrace, N_STAGES};
+pub use trace::{Span, Trace, TraceId, TraceLog, TRACE_KEEP_SLOWEST, TRACE_LOG_CAP};

@@ -1,0 +1,553 @@
+//! Span-based request tracing (ISSUE 7): follow ONE miss from the wire
+//! frame through claim I/O, enqueue, every search round, the write-back
+//! landing, and a peer's notify-refresh ingest — as a single causal
+//! chain keyed by a [`TraceId`] that crosses daemon boundaries.
+//!
+//! Design constraints, in order:
+//!
+//! * **the exact-hit path stays allocation-free** — [`TraceId`] is a
+//!   `Copy` `u64` minted from an atomic counter mixed with a clock
+//!   nonce; minting, copying, and comparing ids never touch the heap.
+//!   Only the MISS path (which already pays claim file I/O) opens a
+//!   trace, and only there do span strings get allocated;
+//! * **bounded memory forever** — completed traces live in a
+//!   [`TraceLog`] ring with a hard capacity. Eviction is
+//!   *tail-sampling*: the slowest-N completed traces and every errored
+//!   trace are preferentially retained, because the slow and the broken
+//!   are exactly the traces an operator pages through `query --trace`
+//!   for. When protected traces alone exceed the cap, the oldest of
+//!   them goes too — the bound always wins;
+//! * **pure data** — no I/O and no platform gating here; the daemon
+//!   owns the clock and the mutex, this module owns the shapes and the
+//!   retention policy.
+//!
+//! A span records a `start_s` offset from the trace's start plus a
+//! duration; spans appended after the fact (search rounds are
+//! synthesized at write-back landing from [`RoundStats`] deltas)
+//! simply extend the trace's `total_s`. A trace that travels to a peer
+//! daemon via the notify channel shows up there as a single-span
+//! *remote* trace under the SAME id — `query --trace` against each
+//! fleet member reassembles the chain.
+//!
+//! [`RoundStats`]: crate::search::RoundStats
+
+use crate::util::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A fleet-unique trace id: `Copy`, 8 bytes, allocation-free to mint
+/// and compare. Rendered as 16 lowercase hex chars on the wire and in
+/// notify announcements; parsed back tolerantly (any 1–16 hex chars).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TraceId(u64);
+
+/// Process-wide mint counter; mixed with a clock nonce so two daemons
+/// (or two restarts of one) never collide on low counter values.
+static TRACE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// SplitMix64 finalizer: one multiply-xor round is enough to spread
+/// (pid, seq, nanos) into all 64 bits.
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+impl TraceId {
+    /// Mint a fresh id. No heap, no syscalls beyond the vDSO clock
+    /// read — safe on the exact-hit path (pinned by the counting-
+    /// allocator test in `tests/telemetry_alloc.rs`).
+    pub fn mint() -> TraceId {
+        let seq = TRACE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let pid = std::process::id() as u64;
+        let id = mix64(nanos ^ (pid << 40) ^ seq.wrapping_mul(0x9e3779b97f4a7c15));
+        // 0 is reserved as "no trace" in a couple of packed contexts;
+        // remap the 1-in-2^64 collision instead of branching callers.
+        TraceId(if id == 0 { 1 } else { id })
+    }
+
+    /// The wire rendering: 16 lowercase hex chars. Allocates — cold
+    /// paths only (miss bookkeeping, notify announcements, replies).
+    pub fn to_hex(self) -> String {
+        format!("{:016x}", self.0)
+    }
+
+    /// Parse a wire rendering. Tolerant: any 1–16 hex chars (clients
+    /// may mint shorter ids). Allocation-free.
+    pub fn from_hex(s: &str) -> Option<TraceId> {
+        if s.is_empty() || s.len() > 16 {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok().map(|v| TraceId(if v == 0 { 1 } else { v }))
+    }
+}
+
+impl std::fmt::Display for TraceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// One timed operation inside a trace. `start_s` is the offset from
+/// the trace's start on the recording daemon's clock; spans recorded
+/// on a peer (notify-refresh ingest) start their own remote trace, so
+/// offsets never mix clocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Span name: `parse`, `shard_read`, `snapshot_lookup`, `claim_io`,
+    /// `enqueue`, `reply_write`, `search_round`, `writeback`,
+    /// `notify_refresh`.
+    pub name: String,
+    /// Offset from the trace start (seconds).
+    pub start_s: f64,
+    /// Duration (seconds).
+    pub dur_s: f64,
+    /// Search-round index (search_round spans only).
+    pub round: Option<usize>,
+    /// Model SNR prediction error for the round (dB), when computed.
+    pub snr_db: Option<f64>,
+    /// Dynamic-k value after the round's update.
+    pub k: Option<f64>,
+    /// NVML measurements paid by the round.
+    pub n_measured: Option<usize>,
+    /// Mean relative error |predicted − measured| / measured of the
+    /// round's energy predictions, when computed.
+    pub relerr: Option<f64>,
+    /// Free-form annotation: write-back landing (`accepted` / `fenced`
+    /// / `dropped`), shed reason, the refreshing peer's holder id.
+    pub note: Option<String>,
+}
+
+impl Span {
+    pub fn new(name: &str, start_s: f64, dur_s: f64) -> Span {
+        Span {
+            name: name.to_string(),
+            start_s,
+            dur_s,
+            round: None,
+            snr_db: None,
+            k: None,
+            n_measured: None,
+            relerr: None,
+            note: None,
+        }
+    }
+
+    pub fn with_note(mut self, note: &str) -> Span {
+        self.note = Some(note.to_string());
+        self
+    }
+
+    /// Optional fields encode only when present, so span lines stay
+    /// short and old readers parse new spans unchanged.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::str(self.name.clone())),
+            ("start_s", Json::num(self.start_s)),
+            ("dur_s", Json::num(self.dur_s)),
+        ];
+        if let Some(r) = self.round {
+            fields.push(("round", Json::num(r as f64)));
+        }
+        if let Some(s) = self.snr_db {
+            fields.push(("snr_db", Json::num(s)));
+        }
+        if let Some(k) = self.k {
+            fields.push(("k", Json::num(k)));
+        }
+        if let Some(n) = self.n_measured {
+            fields.push(("n_measured", Json::num(n as f64)));
+        }
+        if let Some(e) = self.relerr {
+            fields.push(("relerr", Json::num(e)));
+        }
+        if let Some(note) = &self.note {
+            fields.push(("note", Json::str(note.clone())));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Option<Span> {
+        Some(Span {
+            name: v.get("name")?.as_str()?.to_string(),
+            start_s: v.get("start_s")?.as_f64()?,
+            dur_s: v.get("dur_s")?.as_f64()?,
+            round: v.get("round").and_then(|x| x.as_f64()).map(|x| x as usize),
+            snr_db: v.get("snr_db").and_then(|x| x.as_f64()),
+            k: v.get("k").and_then(|x| x.as_f64()),
+            n_measured: v.get("n_measured").and_then(|x| x.as_f64()).map(|x| x as usize),
+            relerr: v.get("relerr").and_then(|x| x.as_f64()),
+            note: v.get("note").and_then(|x| x.as_str()).map(|s| s.to_string()),
+        })
+    }
+}
+
+/// One request's causal chain on one daemon. Under the same id a peer
+/// daemon holds its own `remote: true` continuation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub id: TraceId,
+    /// Serve key of the miss that opened the trace.
+    pub key: String,
+    /// Wire request id of the originating frame ("" on remote traces).
+    pub req: String,
+    /// Unix timestamp of the trace start on the recording daemon.
+    pub start_unix_s: f64,
+    /// End offset of the furthest span (seconds since `start_unix_s`).
+    pub total_s: f64,
+    /// True once a terminal failure was recorded (search failed,
+    /// write-back dropped) — errored traces are always tail-sampled in.
+    pub error: bool,
+    /// True once the chain closed (write-back landed / shed / failed).
+    pub complete: bool,
+    /// True for a foreign trace continued here via the notify channel.
+    pub remote: bool,
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.to_hex())),
+            ("key", Json::str(self.key.clone())),
+            ("req", Json::str(self.req.clone())),
+            ("start_unix_s", Json::num(self.start_unix_s)),
+            ("total_s", Json::num(self.total_s)),
+            ("error", Json::Bool(self.error)),
+            ("complete", Json::Bool(self.complete)),
+            ("remote", Json::Bool(self.remote)),
+            ("spans", Json::arr(self.spans.iter().map(|s| s.to_json()))),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Trace> {
+        Some(Trace {
+            id: TraceId::from_hex(v.get("id")?.as_str()?)?,
+            key: v.get("key")?.as_str()?.to_string(),
+            req: v.get("req").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+            start_unix_s: v.get("start_unix_s").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            total_s: v.get("total_s").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            error: v.get("error").and_then(|x| x.as_bool()).unwrap_or(false),
+            complete: v.get("complete").and_then(|x| x.as_bool()).unwrap_or(false),
+            remote: v.get("remote").and_then(|x| x.as_bool()).unwrap_or(false),
+            spans: v
+                .get("spans")
+                .and_then(|a| a.as_arr())
+                .map(|a| a.iter().filter_map(Span::from_json).collect())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// Default retained-trace capacity of a daemon's ring.
+pub const TRACE_LOG_CAP: usize = 128;
+/// Default slowest-N protection under tail-sampling.
+pub const TRACE_KEEP_SLOWEST: usize = 8;
+
+/// Bounded in-daemon trace ring with tail-sampling eviction.
+///
+/// Open traces (miss admitted, write-back not yet landed) and
+/// completed traces share one store, bounded by `cap` together.
+/// Eviction prefers victims in this order: completed traces that are
+/// neither errored nor among the slowest-`keep_slowest`, then open
+/// traces (oldest first — a trace held open past a full ring of churn
+/// is presumed leaked), then errored/slow traces oldest-first. Memory
+/// is therefore bounded by `cap` no matter the error rate or how
+/// skewed the latency tail is.
+#[derive(Debug)]
+pub struct TraceLog {
+    cap: usize,
+    keep_slowest: usize,
+    traces: Vec<Trace>,
+}
+
+impl TraceLog {
+    pub fn new(cap: usize, keep_slowest: usize) -> TraceLog {
+        TraceLog { cap: cap.max(1), keep_slowest, traces: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.traces.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.traces.is_empty()
+    }
+
+    /// Begin a trace (the miss path, at the point it reserves the
+    /// search). Re-opening a live id is a no-op so a client retrying
+    /// with the same trace id cannot wipe the original chain.
+    pub fn open(&mut self, id: TraceId, key: &str, req: &str, start_unix_s: f64) {
+        if self.traces.iter().any(|t| t.id == id) {
+            return;
+        }
+        self.traces.push(Trace {
+            id,
+            key: key.to_string(),
+            req: req.to_string(),
+            start_unix_s,
+            total_s: 0.0,
+            error: false,
+            complete: false,
+            remote: false,
+            spans: Vec::new(),
+        });
+        self.enforce_cap();
+    }
+
+    /// Append a span to a trace (open or completed — write-back spans
+    /// land after the reply did). Returns false if the id is unknown
+    /// (evicted or never opened here).
+    pub fn span(&mut self, id: TraceId, span: Span) -> bool {
+        match self.traces.iter_mut().find(|t| t.id == id) {
+            Some(t) => {
+                t.total_s = t.total_s.max(span.start_s + span.dur_s);
+                t.spans.push(span);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The trace's start as a unix timestamp, for computing span
+    /// offsets from wall-clock "now".
+    pub fn start_unix_s(&self, id: TraceId) -> Option<f64> {
+        self.traces.iter().find(|t| t.id == id).map(|t| t.start_unix_s)
+    }
+
+    /// Close a trace; `error` marks it for unconditional retention
+    /// under tail-sampling. Unknown ids are ignored.
+    pub fn close(&mut self, id: TraceId, error: bool) {
+        if let Some(t) = self.traces.iter_mut().find(|t| t.id == id) {
+            t.complete = true;
+            t.error = t.error || error;
+        }
+        self.enforce_cap();
+    }
+
+    /// Record a FOREIGN trace's continuation on this daemon (the peer
+    /// side of a notify announcement): one completed single-span remote
+    /// trace under the foreign id.
+    pub fn record_remote(&mut self, id: TraceId, key: &str, start_unix_s: f64, span: Span) {
+        if self.span(id, span.clone()) {
+            return;
+        }
+        self.traces.push(Trace {
+            id,
+            key: key.to_string(),
+            req: String::new(),
+            start_unix_s,
+            total_s: span.start_s + span.dur_s,
+            error: false,
+            complete: true,
+            remote: true,
+            spans: vec![span],
+        });
+        self.enforce_cap();
+    }
+
+    pub fn get(&self, id: TraceId) -> Option<&Trace> {
+        self.traces.iter().find(|t| t.id == id)
+    }
+
+    /// Completed traces, slowest first, at most `n`. With `n == 0`,
+    /// every completed trace (still bounded by the ring cap).
+    pub fn slowest(&self, n: usize) -> Vec<&Trace> {
+        let mut done: Vec<&Trace> = self.traces.iter().filter(|t| t.complete).collect();
+        done.sort_by(|a, b| b.total_s.partial_cmp(&a.total_s).unwrap_or(std::cmp::Ordering::Equal));
+        if n > 0 {
+            done.truncate(n);
+        }
+        done
+    }
+
+    /// Ids of the slowest-`keep_slowest` completed traces (the
+    /// tail-sampling protection set).
+    fn protected_slowest(&self) -> Vec<TraceId> {
+        self.slowest(self.keep_slowest).iter().map(|t| t.id).collect()
+    }
+
+    /// Tail-sampling eviction down to `cap`. See the type docs for the
+    /// victim order.
+    fn enforce_cap(&mut self) {
+        while self.traces.len() > self.cap {
+            let slow = self.protected_slowest();
+            let unprotected = self
+                .traces
+                .iter()
+                .position(|t| t.complete && !t.error && !slow.contains(&t.id));
+            let victim = unprotected
+                .or_else(|| self.traces.iter().position(|t| !t.complete))
+                .unwrap_or(0);
+            self.traces.remove(victim);
+        }
+    }
+}
+
+impl Default for TraceLog {
+    fn default() -> Self {
+        TraceLog::new(TRACE_LOG_CAP, TRACE_KEEP_SLOWEST)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &str, start_s: f64, dur_s: f64) -> Span {
+        Span::new(name, start_s, dur_s)
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_roundtrip_hex() {
+        let ids: Vec<TraceId> = (0..1000).map(|_| TraceId::mint()).collect();
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "minted ids collide");
+        for id in ids.iter().take(16) {
+            let hex = id.to_hex();
+            assert_eq!(hex.len(), 16);
+            assert_eq!(TraceId::from_hex(&hex), Some(*id));
+        }
+        assert_eq!(TraceId::from_hex(""), None);
+        assert_eq!(TraceId::from_hex("zz"), None);
+        assert_eq!(TraceId::from_hex("deadbeefdeadbeef00"), None, "17+ chars rejected");
+        // Short client-minted ids parse.
+        assert!(TraceId::from_hex("a3f").is_some());
+    }
+
+    #[test]
+    fn spans_and_traces_roundtrip_json_with_optional_fields() {
+        let mut s = span("search_round", 0.5, 1.25);
+        s.round = Some(2);
+        s.snr_db = Some(18.4);
+        s.k = Some(0.5);
+        s.n_measured = Some(4);
+        s.relerr = Some(0.07);
+        s.note = Some(r#"peer "a""#.to_string());
+        let back = Span::from_json(&Json::parse(&s.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, s);
+        // A minimal span omits every optional field on the wire.
+        let lean = span("claim_io", 0.0, 0.001);
+        let line = lean.to_json().to_string();
+        assert!(!line.contains("snr_db") && !line.contains("note"), "{line}");
+        assert_eq!(Span::from_json(&Json::parse(&line).unwrap()).unwrap(), lean);
+
+        let mut log = TraceLog::new(8, 2);
+        let id = TraceId::mint();
+        log.open(id, "mm1|a100|energy_aware|fp", "c7", 1234.5);
+        log.span(id, s);
+        log.close(id, false);
+        let t = log.get(id).unwrap();
+        let back = Trace::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(&back, t);
+    }
+
+    #[test]
+    fn spans_extend_total_and_close_marks_complete() {
+        let mut log = TraceLog::new(8, 2);
+        let id = TraceId::mint();
+        log.open(id, "k", "c1", 0.0);
+        assert!(log.span(id, span("claim_io", 0.001, 0.002)));
+        assert!(log.span(id, span("writeback", 3.0, 0.5)));
+        assert!(!log.span(TraceId::mint(), span("claim_io", 0.0, 0.1)), "unknown id");
+        let t = log.get(id).unwrap();
+        assert!(!t.complete);
+        assert!((t.total_s - 3.5).abs() < 1e-12);
+        log.close(id, false);
+        assert!(log.get(id).unwrap().complete);
+        // Spans may still land after close (write-back after reply).
+        assert!(log.span(id, span("notify_refresh", 4.0, 0.1)));
+        assert!((log.get(id).unwrap().total_s - 4.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_sampling_keeps_slowest_and_errored_under_churn() {
+        let mut log = TraceLog::new(10, 3);
+        // Two errored traces early on, then heavy churn of fast traces.
+        let mut errored = Vec::new();
+        for i in 0..2 {
+            let id = TraceId::mint();
+            log.open(id, &format!("err{i}"), "c", i as f64);
+            log.span(id, span("claim_io", 0.0, 0.001));
+            log.close(id, true);
+            errored.push(id);
+        }
+        // Three slow traces (the slowest-N protection set).
+        let mut slow = Vec::new();
+        for i in 0..3 {
+            let id = TraceId::mint();
+            log.open(id, &format!("slow{i}"), "c", 10.0 + i as f64);
+            log.span(id, span("writeback", 0.0, 100.0 + i as f64));
+            log.close(id, false);
+            slow.push(id);
+        }
+        // 200 fast completed traces churn through.
+        for i in 0..200 {
+            let id = TraceId::mint();
+            log.open(id, &format!("fast{i}"), "c", 100.0 + i as f64);
+            log.span(id, span("claim_io", 0.0, 1e-4));
+            log.close(id, false);
+            assert!(log.len() <= 10, "cap violated at churn {i}");
+        }
+        for id in &errored {
+            assert!(log.get(*id).is_some(), "errored trace evicted");
+        }
+        for id in &slow {
+            assert!(log.get(*id).is_some(), "slow trace evicted");
+        }
+        // slowest() orders by duration, slowest first.
+        let top = log.slowest(3);
+        assert_eq!(top.len(), 3);
+        assert!(top[0].total_s >= top[1].total_s && top[1].total_s >= top[2].total_s);
+        assert!(top[0].key.starts_with("slow"));
+    }
+
+    #[test]
+    fn bounded_even_when_every_trace_is_protected() {
+        // All errored: protection cannot override the hard cap.
+        let mut log = TraceLog::new(5, 2);
+        for i in 0..50 {
+            let id = TraceId::mint();
+            log.open(id, &format!("e{i}"), "c", i as f64);
+            log.close(id, true);
+            assert!(log.len() <= 5);
+        }
+        // All open (leaked): still bounded.
+        let mut log = TraceLog::new(5, 2);
+        for i in 0..50 {
+            log.open(TraceId::mint(), &format!("o{i}"), "c", i as f64);
+            assert!(log.len() <= 5);
+        }
+    }
+
+    #[test]
+    fn remote_traces_complete_immediately_under_the_foreign_id() {
+        let mut log = TraceLog::default();
+        let foreign = TraceId::mint();
+        let s = span("notify_refresh", 0.0, 0.004).with_note("daemon-a");
+        log.record_remote(foreign, "k", 50.0, s);
+        let t = log.get(foreign).unwrap();
+        assert!(t.remote && t.complete && t.req.is_empty());
+        assert_eq!(t.spans.len(), 1);
+        // A second ingest for the same id appends, not duplicates.
+        log.record_remote(foreign, "k", 51.0, span("notify_refresh", 0.1, 0.002));
+        assert_eq!(log.get(foreign).unwrap().spans.len(), 2);
+    }
+
+    #[test]
+    fn reopening_a_live_id_is_a_noop() {
+        let mut log = TraceLog::default();
+        let id = TraceId::mint();
+        log.open(id, "k", "c1", 1.0);
+        log.span(id, span("claim_io", 0.0, 0.5));
+        log.open(id, "other", "c2", 2.0);
+        let t = log.get(id).unwrap();
+        assert_eq!(t.key, "k");
+        assert_eq!(t.spans.len(), 1);
+    }
+}

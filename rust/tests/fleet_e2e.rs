@@ -9,10 +9,10 @@
 use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
 use ecokernel::fleet::InflightTable;
 use ecokernel::serve::{merged_metrics, Daemon, DaemonConfig, DaemonHandle, ServeAddr, ServeClient};
-use ecokernel::telemetry::N_BUCKETS;
 use ecokernel::store::lease::Lease;
 use ecokernel::store::sharded::{shard_lease_name, LEASES_DIR};
 use ecokernel::store::{config_fingerprint, serve_key, ShardedStore, TuningRecord};
+use ecokernel::telemetry::N_BUCKETS;
 use ecokernel::workload::{suites, Workload};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -211,7 +211,9 @@ fn fleet_metrics_merge_equals_union_of_samples() {
 
     // The fleet client's merged view (fresh connections — the daemons
     // are quiescent, so it sees exactly what `ma`/`mb` saw)...
-    let merged = merged_metrics(&[a.addr.clone(), b.addr.clone()]).unwrap();
+    let fm = merged_metrics(&[a.addr.clone(), b.addr.clone()]).unwrap();
+    assert!(fm.errors.is_empty(), "both daemons reachable: {:?}", fm.errors);
+    let merged = fm.merged;
     // ...equals the histogram of the union of both daemons' samples:
     // every one of the 64 buckets is the elementwise sum.
     for hist in ["reply_wall_s", "reply_sim_s"] {
@@ -232,6 +234,12 @@ fn fleet_metrics_merge_equals_union_of_samples() {
     expect.merge(&mb);
     assert_eq!(merged.stages, expect.stages);
     assert_eq!(merged.counters, expect.counters);
+    assert_eq!(merged.model, expect.model);
+    assert!(
+        merged.model.keys().any(|k| k.starts_with("model_dynamic_k/")),
+        "A's search recorded per-regime model telemetry: {:?}",
+        merged.model.keys().collect::<Vec<_>>()
+    );
     assert_eq!(
         merged.counter("n_requests"),
         ma.counter("n_requests") + mb.counter("n_requests")
@@ -565,6 +573,118 @@ fn hit_on_shard_a_completes_while_shard_b_refresh_is_held() {
     );
     drop(hold);
     assert_eq!(rx.recv_timeout(Duration::from_secs(20)), Ok(true));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Partial fleet telemetry (ISSUE 7): one live daemon + one dead
+/// address merges to the live daemon's metrics plus an error entry —
+/// the old behavior aborted the whole merge on the first unreachable
+/// daemon, blinding the operator to the surviving fleet.
+#[test]
+fn merged_metrics_survives_a_dead_daemon() {
+    let dir = tmp_dir("partial_merge");
+    let a = spawn_on(ServeAddr::Unix(dir.join("a.sock")), &dir, quick_search(41));
+    let mut ca = ServeClient::connect(&a.addr).unwrap();
+    assert!(ca.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    ca.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    let solo = ca.metrics().unwrap();
+
+    // A socket path nothing listens on stands in for a crashed daemon.
+    let dead = ServeAddr::Unix(dir.join("dead.sock"));
+    let fm = merged_metrics(&[a.addr.clone(), dead.clone()]).unwrap();
+    assert_eq!(fm.errors.len(), 1, "exactly the dead daemon errored: {:?}", fm.errors);
+    assert!(fm.errors[0].0.contains("dead.sock"), "{:?}", fm.errors);
+    assert_eq!(fm.merged.counters, solo.counters, "merge equals the live daemon alone");
+    assert_eq!(fm.merged.reply_wall_s, solo.reply_wall_s);
+
+    // Dead-daemon order must not matter either.
+    let fm2 = merged_metrics(&[dead.clone(), a.addr.clone()]).unwrap();
+    assert_eq!(fm2.errors.len(), 1);
+    assert_eq!(fm2.merged.counters, solo.counters);
+
+    // A fleet with NO reachable daemon is still an error.
+    assert!(merged_metrics(&[dead]).is_err());
+
+    ca.shutdown().unwrap();
+    a.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The tentpole acceptance path (ISSUE 7): a miss duplicated across
+/// two daemons yields ONE distributed trace fleet-wide — on the
+/// searching daemon it carries the hot-path stages, per-round model
+/// telemetry, and the write-back landing; on the peer the SAME id
+/// continues as a remote `notify_refresh` span once the announcement
+/// is ingested.
+#[test]
+fn duplicated_miss_yields_one_trace_across_the_fleet() {
+    let dir = tmp_dir("trace_chain");
+    let mut search = quick_search(43);
+    search.fleet.notify_interval_ms = 25;
+    search.fleet.poll_interval_ms = 3_600_000;
+    let a = spawn_on(ServeAddr::Unix(dir.join("a.sock")), &dir, search.clone());
+    let b = spawn_on(ServeAddr::Unix(dir.join("b.sock")), &dir, search);
+    let mut ca = ServeClient::connect(&a.addr).unwrap();
+    let mut cb = ServeClient::connect(&b.addr).unwrap();
+
+    // The reserving miss adopts the client-chosen trace id; the
+    // duplicate (whether it coalesces locally or fleet-wide) must NOT
+    // open a second trace.
+    let wire_id = "feedc0dedeadbeef";
+    let first = ca.get_kernel_traced(suites::MM1, None, None, Some(wire_id)).unwrap();
+    assert!(!first.hit && first.enqueued);
+    ca.get_kernel(suites::MM1, None, None).unwrap(); // duplicate on A
+    cb.get_kernel(suites::MM1, None, None).unwrap(); // duplicate on B
+    ca.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+
+    // A: exactly one trace, complete, under the client's id, with the
+    // whole story attached.
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let trace_a = loop {
+        let tr = ca.traces(0).unwrap();
+        if let Some(t) = tr.traces.iter().find(|t| t.complete && !t.remote) {
+            assert_eq!(tr.traces.len(), 1, "duplicates opened no extra trace: {tr:?}");
+            break t.clone();
+        }
+        assert!(std::time::Instant::now() < deadline, "A never completed its trace: {tr:?}");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert_eq!(trace_a.id.to_hex(), wire_id, "reserving miss adopted the wire trace id");
+    assert!(!trace_a.error);
+    let names: Vec<&str> = trace_a.spans.iter().map(|s| s.name.as_str()).collect();
+    for expected in ["parse", "enqueue", "reply_write", "search_round", "writeback"] {
+        assert!(names.contains(&expected), "missing span '{expected}' in {names:?}");
+    }
+    let rounds: Vec<_> = trace_a.spans.iter().filter(|s| s.name == "search_round").collect();
+    assert_eq!(rounds.len(), 3, "one span per search round");
+    assert!(rounds.iter().all(|s| s.round.is_some() && s.n_measured.is_some()));
+    assert!(rounds.iter().any(|s| s.k.is_some()), "dynamic-k telemetry rode along");
+    let wb = trace_a.spans.iter().find(|s| s.name == "writeback").unwrap();
+    assert_eq!(wb.note.as_deref(), Some("accepted"));
+
+    // B: the SAME id continues as a completed remote trace whose
+    // notify_refresh span names the announcing holder.
+    let trace_b = loop {
+        let tr = cb.traces(0).unwrap();
+        if let Some(t) = tr.traces.iter().find(|t| t.remote) {
+            break t.clone();
+        }
+        assert!(std::time::Instant::now() < deadline, "B never ingested the trace: {tr:?}");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert_eq!(trace_b.id, trace_a.id, "one trace id spans the fleet");
+    assert_eq!(trace_b.key, trace_a.key);
+    assert!(trace_b.complete);
+    let refresh = trace_b.spans.iter().find(|s| s.name == "notify_refresh").unwrap();
+    assert!(refresh.note.is_some(), "the span names the announcing holder");
+
+    // And the chain ends in B serving A's record as an exact hit.
+    assert!(cb.get_kernel_wait(suites::MM1, None, None, DRAIN_TIMEOUT).unwrap().hit);
+
+    for (mut client, handle) in [(ca, a), (cb, b)] {
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -344,6 +344,15 @@ fn metrics_op_reports_stage_histograms() {
     assert_eq!(stage("reply_write").count(), 5);
     assert!(stage("reply_write").min() > 0.0);
 
+    // Cost-model accuracy histograms rode along: the drained search's
+    // rounds landed per regime, keyed `family/regime`.
+    assert!(!m.model.is_empty(), "model telemetry after one search");
+    assert!(
+        m.model.keys().any(|k| k.starts_with("model_dynamic_k/")),
+        "{:?}",
+        m.model.keys().collect::<Vec<_>>()
+    );
+
     // The same snapshot as Prometheus text.
     let prom = m.to_prometheus();
     assert!(prom.contains("# TYPE ecokernel_requests_total counter"), "{prom}");
@@ -351,6 +360,47 @@ fn metrics_op_reports_stage_histograms() {
     assert!(prom.contains("ecokernel_hits_total 4"), "{prom}");
     assert!(prom.contains("ecokernel_reply_wall_seconds_count 5"), "{prom}");
     assert!(prom.contains("ecokernel_stage_seconds_count{stage=\"parse\"} 5"), "{prom}");
+    assert!(prom.contains("# TYPE ecokernel_model_dynamic_k histogram"), "{prom}");
+    assert!(prom.contains("regime="), "{prom}");
+
+    stop(handle, &dir);
+}
+
+/// The `trace` op end to end on one daemon: a miss opens exactly one
+/// trace; once drained it is complete, carries the hot-path stages and
+/// the search/write-back story, and hits never add traces.
+#[test]
+fn trace_op_returns_the_completed_miss_chain() {
+    let (handle, dir) = spawn_daemon("traceop", |_| {});
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
+
+    assert!(client.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    for _ in 0..3 {
+        assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+    }
+
+    // The trace closes moments after the drain (the write-back's
+    // bookkeeping finishes outside the lock the drain poll reads).
+    let deadline = std::time::Instant::now() + DRAIN_TIMEOUT;
+    let t = loop {
+        let tr = client.traces(0).unwrap();
+        if let Some(t) = tr.traces.first().filter(|t| t.complete) {
+            assert_eq!(tr.traces.len(), 1, "the 3 hits added no traces: {tr:?}");
+            break t.clone();
+        }
+        assert!(std::time::Instant::now() < deadline, "trace never completed");
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    };
+    assert!(!t.error && !t.remote);
+    assert!(t.total_s > 0.0);
+    assert!(t.start_unix_s > 0.0);
+    let names: Vec<&str> = t.spans.iter().map(|s| s.name.as_str()).collect();
+    for expected in ["parse", "shard_read", "enqueue", "reply_write", "writeback"] {
+        assert!(names.contains(&expected), "missing '{expected}' in {names:?}");
+    }
+    // `--slowest 1` caps the reply; the lone trace survives the cap.
+    assert_eq!(client.traces(1).unwrap().traces.len(), 1);
 
     stop(handle, &dir);
 }

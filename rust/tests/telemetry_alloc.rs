@@ -1,9 +1,10 @@
 //! Telemetry hot-path guard: recording a served request's metrics —
 //! stage trace accumulation, both reply-clock histograms, the
-//! per-stage histograms, and quantile reads — performs **zero heap
-//! allocations**. This is the contract that lets the daemon fold
-//! telemetry under the state-lock acquisition the exact-hit path
-//! already pays, without adding latency or allocator contention.
+//! per-stage histograms, quantile reads, and distributed-trace id
+//! handling (parse/mint/compare) — performs **zero heap allocations**.
+//! This is the contract that lets the daemon fold telemetry under the
+//! state-lock acquisition the exact-hit path already pays, without
+//! adding latency or allocator contention.
 //!
 //! Guarded by a counting `#[global_allocator]` with a const-init
 //! thread-local counter (no lazy TLS state, so counting itself cannot
@@ -11,7 +12,7 @@
 //! per-thread, so no other test can race it.
 
 use ecokernel::serve::ServeMetrics;
-use ecokernel::telemetry::{LogHistogram, Stage, StageTrace};
+use ecokernel::telemetry::{LogHistogram, Stage, StageTrace, TraceId};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 use std::hint::black_box;
@@ -63,6 +64,8 @@ fn hit_path_telemetry_performs_zero_heap_allocations() {
     m.record_reply(true, 5e-5, 3e-5, &warm);
     m.record_stage(Stage::ReplyWrite, 4e-6);
     black_box(m.p99_reply_s());
+    black_box(TraceId::mint());
+    black_box(TraceId::from_hex("feedc0de"));
 
     let before = allocations();
     for i in 0..10_000u64 {
@@ -78,6 +81,14 @@ fn hit_path_telemetry_performs_zero_heap_allocations() {
         black_box(m.p50_reply_s());
         black_box(m.p99_reply_s());
         black_box(m.hit_rate());
+        // Distributed-tracing id handling an exact hit pays: parse a
+        // wire-supplied id, mint a fallback, copy + compare. (Only the
+        // MISS path renders `to_hex` or opens a trace — those allocate
+        // and are deliberately NOT in this loop.)
+        let wire = black_box(TraceId::from_hex("feedc0dedeadbeef")).unwrap();
+        let minted = black_box(TraceId::mint());
+        black_box(wire == minted);
+        black_box(wire.min(minted));
     }
     // Fleet aggregation primitives are allocation-free too: clone and
     // merge are fixed-size array copies/adds.
