@@ -88,6 +88,8 @@ pub struct SearchConfig {
     pub serve: ServeConfig,
     /// Fleet-serving settings (multi-daemon shared store).
     pub fleet: FleetConfig,
+    /// Serving SLO targets + drift-watchdog settings (`health` op).
+    pub slo: SloConfig,
 }
 
 impl Default for SearchConfig {
@@ -112,6 +114,7 @@ impl Default for SearchConfig {
             store: StoreConfig::default(),
             serve: ServeConfig::default(),
             fleet: FleetConfig::default(),
+            slo: SloConfig::default(),
         }
     }
 }
@@ -151,6 +154,7 @@ impl SearchConfig {
         self.store.validate()?;
         self.serve.validate()?;
         self.fleet.validate()?;
+        self.slo.validate()?;
         Ok(())
     }
 
@@ -212,6 +216,13 @@ impl SearchConfig {
             "fleet.notify",
             "fleet.notify_interval_ms",
             "fleet.poll_interval_ms",
+            "slo.p99_reply_wall_s",
+            "slo.hit_rate_floor",
+            "slo.relerr_ceiling",
+            "slo.backlog_ceiling",
+            "slo.min_window",
+            "slo.drift_interval_ms",
+            "slo.drift_budget",
         ];
         for key in doc.entries.keys() {
             if !known.contains(&key.as_str()) {
@@ -288,6 +299,15 @@ impl SearchConfig {
                 notify_interval_ms: doc
                     .u64_or("fleet.notify_interval_ms", d.fleet.notify_interval_ms),
                 poll_interval_ms: doc.u64_or("fleet.poll_interval_ms", d.fleet.poll_interval_ms),
+            },
+            slo: SloConfig {
+                p99_reply_wall_s: doc.f64_or("slo.p99_reply_wall_s", d.slo.p99_reply_wall_s),
+                hit_rate_floor: doc.f64_or("slo.hit_rate_floor", d.slo.hit_rate_floor),
+                relerr_ceiling: doc.f64_or("slo.relerr_ceiling", d.slo.relerr_ceiling),
+                backlog_ceiling: doc.usize_or("slo.backlog_ceiling", d.slo.backlog_ceiling),
+                min_window: doc.u64_or("slo.min_window", d.slo.min_window),
+                drift_interval_ms: doc.u64_or("slo.drift_interval_ms", d.slo.drift_interval_ms),
+                drift_budget: doc.usize_or("slo.drift_budget", d.slo.drift_budget),
             },
         };
         cfg.validate()?;
@@ -366,6 +386,18 @@ impl SearchConfig {
             self.fleet.notify,
             self.fleet.notify_interval_ms,
             self.fleet.poll_interval_ms
+        ));
+        out.push_str(&format!(
+            "\n[slo]\np99_reply_wall_s = {}\nhit_rate_floor = {}\n\
+             relerr_ceiling = {}\nbacklog_ceiling = {}\nmin_window = {}\n\
+             drift_interval_ms = {}\ndrift_budget = {}\n",
+            fmt_f(self.slo.p99_reply_wall_s),
+            fmt_f(self.slo.hit_rate_floor),
+            fmt_f(self.slo.relerr_ceiling),
+            self.slo.backlog_ceiling,
+            self.slo.min_window,
+            self.slo.drift_interval_ms,
+            self.slo.drift_budget
         ));
         out
     }
@@ -651,6 +683,72 @@ impl FleetConfig {
     }
 }
 
+/// Serving SLO targets + cost-model drift-watchdog settings (`[slo]`,
+/// evaluated by the daemon's `health` wire op; see [`crate::serve`]).
+/// A threshold of `0`/`0.0` disables its target (it always reports
+/// `ok`). Like `[serve]` and `[fleet]`, none of these knobs shape a
+/// search trajectory, so they stay out of the store's config
+/// fingerprint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloConfig {
+    /// Ceiling on the p99 wall-clock reply time, seconds (0 disables).
+    pub p99_reply_wall_s: f64,
+    /// Floor on the hit rate, 0..=1 (0 disables).
+    pub hit_rate_floor: f64,
+    /// Ceiling on the steady-regime mean energy relative error of the
+    /// cost model (0 disables). Doubles as the drift watchdog's
+    /// re-search trigger.
+    pub relerr_ceiling: f64,
+    /// Ceiling on the admission-backlog depth (0 disables). Warns at
+    /// half the ceiling.
+    pub backlog_ceiling: usize,
+    /// Minimum samples a window needs before its target can breach —
+    /// keeps cold daemons from paging on noise.
+    pub min_window: u64,
+    /// Cadence (ms) of the drift watchdog, which also snapshots the
+    /// fast (burn-rate) window the `health` op evaluates.
+    pub drift_interval_ms: u64,
+    /// Max drift re-searches admitted per watchdog interval, so a
+    /// drifting model cannot starve real misses (0 disables the
+    /// watchdog's re-search side; drift is still reported).
+    pub drift_budget: usize,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            p99_reply_wall_s: 0.25,
+            hit_rate_floor: 0.0,
+            relerr_ceiling: 0.35,
+            backlog_ceiling: 16,
+            min_window: 16,
+            drift_interval_ms: 1_000,
+            drift_budget: 2,
+        }
+    }
+}
+
+impl SloConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.p99_reply_wall_s >= 0.0) {
+            return Err("slo.p99_reply_wall_s must be >= 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.hit_rate_floor) {
+            return Err("slo.hit_rate_floor must be in [0, 1]".into());
+        }
+        if !(self.relerr_ceiling >= 0.0) {
+            return Err("slo.relerr_ceiling must be >= 0".into());
+        }
+        if self.min_window == 0 {
+            return Err("slo.min_window must be >= 1".into());
+        }
+        if self.drift_interval_ms < 50 {
+            return Err("slo.drift_interval_ms must be >= 50".into());
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -803,6 +901,43 @@ mod tests {
             assert!(SearchConfig::from_toml_str(bad_toml).is_err(), "{bad_toml}");
         }
         assert!(SearchConfig::from_toml_str("[fleet]\ntypo = 1\n").is_err());
+    }
+
+    #[test]
+    fn slo_config_roundtrips_and_validates() {
+        let mut c = SearchConfig::default();
+        c.slo.p99_reply_wall_s = 0.5;
+        c.slo.hit_rate_floor = 0.9;
+        c.slo.relerr_ceiling = 0.2;
+        c.slo.backlog_ceiling = 8;
+        c.slo.min_window = 32;
+        c.slo.drift_interval_ms = 250;
+        c.slo.drift_budget = 4;
+        let back = SearchConfig::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(back.slo, c.slo);
+
+        let parsed = SearchConfig::from_toml_str(
+            "[slo]\nhit_rate_floor = 0.75\nbacklog_ceiling = 0\n",
+        )
+        .unwrap();
+        assert!((parsed.slo.hit_rate_floor - 0.75).abs() < 1e-12);
+        assert_eq!(parsed.slo.backlog_ceiling, 0, "0 = disabled is valid");
+        assert!(
+            (parsed.slo.p99_reply_wall_s - SloConfig::default().p99_reply_wall_s).abs() < 1e-12,
+            "default kept"
+        );
+        assert_eq!(parsed.slo.drift_budget, SloConfig::default().drift_budget);
+
+        for bad_toml in [
+            "[slo]\np99_reply_wall_s = -1.0\n",
+            "[slo]\nhit_rate_floor = 1.5\n",
+            "[slo]\nrelerr_ceiling = -0.1\n",
+            "[slo]\nmin_window = 0\n",
+            "[slo]\ndrift_interval_ms = 10\n",
+        ] {
+            assert!(SearchConfig::from_toml_str(bad_toml).is_err(), "{bad_toml}");
+        }
+        assert!(SearchConfig::from_toml_str("[slo]\ntypo = 1\n").is_err());
     }
 
     #[test]

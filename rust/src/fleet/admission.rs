@@ -83,6 +83,25 @@ impl HeatSketch {
         self.heat.is_empty()
     }
 
+    /// The `n` hottest keys with their current heat, hottest first
+    /// (ties break toward the smaller key, matching
+    /// [`Backlog::pop_hottest`]). Cold path — clones and sorts; the
+    /// drift watchdog calls it once per interval, never per request.
+    pub fn hottest(&self, n: usize) -> Vec<(String, f64)> {
+        let mut all: Vec<(String, f64)> = self
+            .heat
+            .iter()
+            .map(|(k, (rate, last))| (k.clone(), self.decayed(*rate, *last, self.t)))
+            .collect();
+        all.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.0.cmp(&b.0))
+        });
+        all.truncate(n);
+        all
+    }
+
     /// Histogram of current key heats in log2 buckets:
     /// `[0,0.5) [0.5,1) [1,2) [2,4) [4,8) [8,16) [16,32) [32,∞)`.
     pub fn histogram(&self) -> [usize; HEAT_BUCKETS] {
@@ -345,6 +364,20 @@ mod tests {
         // An under-cap restore simply queues.
         let mut backlog: Backlog<u32> = Backlog::new(2);
         assert!(matches!(backlog.restore("hot".into(), 5, &sketch), Offer::Queued));
+    }
+
+    #[test]
+    fn hottest_ranks_by_heat_then_key() {
+        let mut sketch = HeatSketch::new(1e6, 1024);
+        sketch.touch("b");
+        sketch.touch("a");
+        for _ in 0..3 {
+            sketch.touch("c");
+        }
+        let top: Vec<String> = sketch.hottest(2).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(top, ["c", "a"], "hottest first, lexicographic tie-break");
+        assert_eq!(sketch.hottest(10).len(), 3, "n past the population returns everything");
+        assert!(sketch.hottest(0).is_empty());
     }
 
     #[test]

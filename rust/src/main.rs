@@ -70,12 +70,15 @@ USAGE:
                    (ADDR: unix:/path.sock or tcp:HOST:PORT; --socket PATH = unix)
   ecokernel query  --addr ADDR (--workload MM1 [--gpu a100] [--mode energy]
                    [--wait] [--timeout S] | --batch MM1,MV3,.. | --stats
-                   | --metrics [--prom] | --trace [--slowest N]
+                   | --metrics [--prom] | --health | --trace [--slowest N]
                    | --shutdown) [--json]
                    (--batch sends every workload in ONE frame / one
                    socket write; replies are positionally matched.
                    --metrics accepts --addr A,B,.. and merges the
                    fleet's histograms; --prom prints Prometheus text.
+                   --health evaluates the [slo] targets (also fleet-
+                   merged worst-of over --addr A,B,..) and prints the
+                   drift watchdog's state.
                    --trace prints the daemon's retained request traces,
                    slowest first; --slowest N keeps the top N)
   ecokernel bench  serve [--quick] [--requests N] [--zipf S] [--batch N]
@@ -293,12 +296,18 @@ fn cmd_serve(_args: &[String]) -> anyhow::Result<()> {
 #[cfg(unix)]
 fn cmd_query(args: &[String]) -> anyhow::Result<()> {
     use ecokernel::serve::ServeClient;
-    let flags =
-        Flags::parse(args, &["json", "wait", "stats", "shutdown", "metrics", "prom", "trace"])?;
+    let flags = Flags::parse(
+        args,
+        &["json", "wait", "stats", "shutdown", "metrics", "prom", "trace", "health"],
+    )?;
     if flags.has("metrics") {
         // Handled before the single connect: `--addr` may be a
         // comma-separated fleet whose histograms merge client-side.
         return query_metrics(&flags);
+    }
+    if flags.has("health") {
+        // Same fleet-address contract as --metrics: worst-of merge.
+        return query_health(&flags);
     }
     let addr = parse_addr_flags(&flags, "addr")?;
     let mut client = ServeClient::connect(&addr)?;
@@ -598,6 +607,49 @@ fn query_metrics(flags: &Flags) -> anyhow::Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// `query --health`: SLO verdicts + drift-watchdog state from one
+/// daemon, or the worst-of-per-target merge across a comma-separated
+/// fleet (plus a synthesized `fleet_reachability` target that goes
+/// critical naming every unreachable address).
+#[cfg(unix)]
+fn query_health(flags: &Flags) -> anyhow::Result<()> {
+    use ecokernel::serve::{merged_health, ServeAddr};
+    let raw = flags
+        .get("addr")
+        .or_else(|| flags.get("socket"))
+        .ok_or_else(|| anyhow::anyhow!("--addr ADDR[,ADDR..] is required"))?;
+    let addrs: Vec<ServeAddr> = raw
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| ServeAddr::parse(s).map_err(anyhow::Error::msg))
+        .collect::<anyhow::Result<_>>()?;
+    let fh = merged_health(&addrs)?;
+    for (a, e) in &fh.errors {
+        eprintln!("warning: daemon {a} unreachable: {e}");
+    }
+    let h = &fh.merged;
+    if flags.has("json") {
+        println!("{}", h.to_json());
+        return Ok(());
+    }
+    println!("status      : {}", h.status.name());
+    for t in &h.targets {
+        let value = format!("{:.4}", t.value);
+        println!("  {:<18} {:<8} {value:<10} {}", t.name, t.status.name(), t.reason);
+    }
+    let d = &h.drift;
+    println!(
+        "drift       : {} ({} re-searches, steady relerr {:.4}, fast {:.4}, budget {}/interval)",
+        if d.drifting { "DRIFTING" } else { "stable" },
+        d.n_drift_researches,
+        d.relerr_steady_mean,
+        d.relerr_fast_mean,
+        d.budget
+    );
     Ok(())
 }
 

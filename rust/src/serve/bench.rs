@@ -17,7 +17,7 @@ use super::daemon::{Daemon, DaemonConfig, DaemonHandle};
 use super::protocol::MetricsReply;
 use crate::config::{GpuArch, SearchConfig, SearchMode};
 use crate::fleet::ServeAddr;
-use crate::telemetry::LogHistogram;
+use crate::telemetry::{LogHistogram, LEDGER_FAMILIES, LEDGER_GPUS};
 use crate::util::{Json, Rng};
 use crate::workload::{suites, Workload};
 use anyhow::Context as _;
@@ -153,6 +153,33 @@ fn stage_json(h: &LogHistogram) -> Json {
     ])
 }
 
+/// The energy-accounting ledger (ISSUE 8) as a baseline block:
+/// totals plus every non-empty `gpu/family` cell, so a regression in
+/// savings attribution (e.g. hits landing unattributed) is visible in
+/// the diff of `BENCH_serving.json`.
+fn ledger_json(m: &MetricsReply) -> Json {
+    let l = &m.energy;
+    let cells: std::collections::BTreeMap<String, Json> = l
+        .cells()
+        .map(|(g, f)| {
+            let key = format!("{}/{}", LEDGER_GPUS[g], LEDGER_FAMILIES[f]);
+            let cell = Json::obj(vec![
+                ("saved_j", Json::num(l.saved_j(g, f))),
+                ("paid_j", Json::num(l.paid_j(g, f))),
+                ("n_hits", Json::num(l.n_hits(g, f) as f64)),
+                ("n_searches", Json::num(l.n_searches(g, f) as f64)),
+            ]);
+            (key, cell)
+        })
+        .collect();
+    Json::obj(vec![
+        ("total_saved_j", Json::num(l.total_saved_j())),
+        ("total_paid_j", Json::num(l.total_paid_j())),
+        ("unattributed_hits", Json::num(l.total_unattributed() as f64)),
+        ("cells", Json::Obj(cells)),
+    ])
+}
+
 fn phase_json(m: &MetricsReply, requests: usize, elapsed_s: f64) -> Vec<(String, Json)> {
     let hits = m.counter("n_hits") as f64;
     let total = m.counter("n_requests") as f64;
@@ -162,6 +189,7 @@ fn phase_json(m: &MetricsReply, requests: usize, elapsed_s: f64) -> Vec<(String,
         ("p99_ms".to_string(), Json::num(m.reply_wall_s.quantile(99.0) * 1e3)),
         ("hit_rate".to_string(), Json::num(if total > 0.0 { hits / total } else { 0.0 })),
         ("frames_per_syscall".to_string(), Json::num(m.frames_per_syscall())),
+        ("energy_ledger".to_string(), ledger_json(m)),
         (
             "stages".to_string(),
             Json::Obj(

@@ -13,8 +13,8 @@
 //!   `batch` reply.
 
 use super::protocol::{
-    BatchItem, KernelReply, MetricsReply, Reject, Request, Response, StatsReply, TraceReply,
-    MAX_BATCH_ITEMS,
+    BatchItem, HealthReply, HealthStatus, HealthTarget, KernelReply, MetricsReply, Reject,
+    Request, Response, StatsReply, TraceReply, MAX_BATCH_ITEMS,
 };
 use crate::config::{GpuArch, SearchMode};
 use crate::fleet::{ServeAddr, Stream};
@@ -298,6 +298,19 @@ impl ServeClient {
         }
     }
 
+    /// The daemon's SLO verdicts + drift-watchdog state (the `health`
+    /// wire op).
+    pub fn health(&mut self) -> anyhow::Result<HealthReply> {
+        let id = self.fresh_id();
+        match self.roundtrip(&Request::Health { id })? {
+            Response::Health(r) => Ok(r),
+            Response::Error { code, message, .. } => {
+                Err(anyhow!("daemon error [{code}]: {message}"))
+            }
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
     /// Graceful daemon stop (acked before the daemon drains and exits).
     pub fn shutdown(&mut self) -> anyhow::Result<()> {
         let id = self.fresh_id();
@@ -351,4 +364,66 @@ pub fn merged_metrics(addrs: &[ServeAddr]) -> anyhow::Result<FleetMetrics> {
             Err(anyhow!("no daemon reachable ({})", detail.join("; ")))
         }
     }
+}
+
+/// A fleet-wide health merge plus the daemons that could not answer —
+/// same partial-merge contract as [`FleetMetrics`].
+#[derive(Debug)]
+pub struct FleetHealth {
+    /// Worst-of-per-target merge over every daemon that answered,
+    /// including a synthesized `fleet_reachability` target that goes
+    /// critical naming each dead address.
+    pub merged: HealthReply,
+    /// `(address, error)` per daemon that did NOT answer.
+    pub errors: Vec<(String, String)>,
+}
+
+/// Fleet-wide health: query every daemon's `health` op and fold the
+/// verdicts worst-of per target ([`HealthReply::merge_worst`]) — the
+/// fleet is exactly as healthy as its least healthy member. A daemon
+/// that cannot answer does not abort the merge; instead the
+/// synthesized `fleet_reachability` target goes `critical` and its
+/// reason names every dead address, so a half-dead fleet pages loudly
+/// while the surviving members' verdicts stay visible. Only an empty
+/// address list or a fleet with NO reachable daemon is an `Err`.
+pub fn merged_health(addrs: &[ServeAddr]) -> anyhow::Result<FleetHealth> {
+    anyhow::ensure!(!addrs.is_empty(), "no daemon addresses to query");
+    let mut merged: Option<HealthReply> = None;
+    let mut errors: Vec<(String, String)> = Vec::new();
+    for addr in addrs {
+        match ServeClient::connect(addr).and_then(|mut c| c.health()) {
+            Ok(h) => match &mut merged {
+                Some(acc) => acc.merge_worst(&h),
+                None => merged = Some(h),
+            },
+            Err(e) => errors.push((addr.to_string(), format!("{e:#}"))),
+        }
+    }
+    let Some(mut merged) = merged else {
+        let detail: Vec<String> = errors.iter().map(|(a, e)| format!("{a}: {e}")).collect();
+        return Err(anyhow!("no daemon reachable ({})", detail.join("; ")));
+    };
+    let reachability = if errors.is_empty() {
+        HealthTarget {
+            name: "fleet_reachability".into(),
+            status: HealthStatus::Ok,
+            reason: format!("all {} daemon(s) answered", addrs.len()),
+            value: addrs.len() as f64,
+            fast_value: addrs.len() as f64,
+            threshold: addrs.len() as f64,
+        }
+    } else {
+        let dead: Vec<&str> = errors.iter().map(|(a, _)| a.as_str()).collect();
+        HealthTarget {
+            name: "fleet_reachability".into(),
+            status: HealthStatus::Critical,
+            reason: format!("unreachable: {}", dead.join(", ")),
+            value: (addrs.len() - errors.len()) as f64,
+            fast_value: (addrs.len() - errors.len()) as f64,
+            threshold: addrs.len() as f64,
+        }
+    };
+    merged.status = merged.status.worst(reachability.status);
+    merged.targets.push(reachability);
+    Ok(FleetHealth { merged, errors })
 }

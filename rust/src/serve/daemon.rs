@@ -70,8 +70,8 @@
 
 use super::metrics::{reply_time_s, ServeMetrics};
 use super::protocol::{
-    BatchItem, KernelReply, MetricsReply, Reject, Request, Response, ServeSource, StatsReply,
-    TraceReply, PROTOCOL_VERSION,
+    BatchItem, DriftHealth, HealthReply, HealthStatus, HealthTarget, KernelReply, MetricsReply,
+    Reject, Request, Response, ServeSource, StatsReply, TraceReply, PROTOCOL_VERSION,
 };
 use crate::config::{GpuArch, SearchConfig, SearchMode};
 use crate::coordinator::{EventLog, PoolEvent, SearchJob, WorkerPool};
@@ -86,7 +86,10 @@ use crate::store::{
     config_fingerprint, serve_key, AppendOutcome, EvictionReport, ShardedStore, TuningRecord,
     TuningStore,
 };
-use crate::telemetry::{Span, Stage, StageTrace, TraceId, TraceLog};
+use crate::telemetry::{
+    ledger_family_index, ledger_gpu_index, LogHistogram, Span, Stage, StageTrace, TraceId,
+    TraceLog, UNATTRIBUTED,
+};
 use crate::util::Json;
 use crate::workload::Workload;
 use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
@@ -129,6 +132,44 @@ fn unix_now_s() -> f64 {
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs_f64())
         .unwrap_or(0.0)
+}
+
+/// Build identity the `stats` op reports: crate version, plus the git
+/// hash when the build environment exported `ECOKERNEL_GIT_HASH`.
+fn build_info() -> String {
+    match option_env!("ECOKERNEL_GIT_HASH") {
+        Some(hash) => format!("ecokernel {} ({hash})", env!("CARGO_PKG_VERSION")),
+        None => format!("ecokernel {}", env!("CARGO_PKG_VERSION")),
+    }
+}
+
+/// Fast-window (burn-rate) observations computed by the drift watchdog
+/// at its last tick: the delta of each lifetime distribution since the
+/// tick before ([`LogHistogram::delta`]). The `health` op compares
+/// every `[slo]` target on BOTH windows — the lifetime (slow) window
+/// catches sustained degradation, the fast window catches a fresh burn
+/// the lifetime average still hides.
+#[derive(Default)]
+struct FastWindows {
+    reply_wall: LogHistogram,
+    relerr_steady: LogHistogram,
+    n_requests: u64,
+    n_hits: u64,
+}
+
+/// The drift watchdog's snapshot state: lifetime observations captured
+/// at the previous tick (the subtrahends of the next delta) plus the
+/// fast windows served to `health` until the next tick. Behind its own
+/// small mutex — NEVER locked while `state` is held.
+#[derive(Default)]
+struct SloWindows {
+    prev_reply_wall: LogHistogram,
+    prev_relerr_steady: LogHistogram,
+    prev_requests: usize,
+    prev_hits: usize,
+    /// `None` until the first watchdog tick: the fast window then
+    /// equals the lifetime window (a cold daemon has no burn history).
+    fast: Option<FastWindows>,
 }
 
 /// The daemon's SMALL shared state: pure bookkeeping, held only for
@@ -184,6 +225,10 @@ struct Ctx {
     /// a state-lock hold.
     traces: Mutex<TraceLog>,
     log: Option<EventLog>,
+    /// When the daemon bound its socket (`stats.uptime_s`).
+    started: Instant,
+    /// Drift-watchdog window state (see [`SloWindows`]).
+    slo: Mutex<SloWindows>,
 }
 
 /// A bound, running daemon (listener open, workers + writer started).
@@ -196,6 +241,10 @@ pub struct Daemon {
     /// Notify-driven targeted refresh + interval poll fallback; only
     /// spawned for coordinated fleets.
     refresher: Option<JoinHandle<()>>,
+    /// Cost-model drift watchdog + fast-window snapshotter; always
+    /// spawned (the `health` op's burn rates need the snapshots even
+    /// when re-searching is disabled).
+    watchdog: JoinHandle<()>,
 }
 
 /// Handle to a daemon running on a background thread (in-process tests
@@ -292,6 +341,8 @@ impl Daemon {
             notify,
             traces: Mutex::new(TraceLog::default()),
             log,
+            started: Instant::now(),
+            slo: Mutex::new(SloWindows::default()),
         });
         let writer = {
             let ctx = ctx.clone();
@@ -307,7 +358,11 @@ impl Daemon {
         } else {
             None
         };
-        Ok(Daemon { listener, ctx, writer, heartbeat, refresher })
+        let watchdog = {
+            let ctx = ctx.clone();
+            std::thread::spawn(move || watchdog_loop(&ctx))
+        };
+        Ok(Daemon { listener, ctx, writer, heartbeat, refresher, watchdog })
     }
 
     /// Bind and serve on a background thread.
@@ -370,6 +425,7 @@ impl Daemon {
         if let Some(refresher) = self.refresher {
             let _ = refresher.join();
         }
+        let _ = self.watchdog.join();
         #[cfg(unix)]
         if let ServeAddr::Unix(path) = &self.ctx.addr {
             let _ = std::fs::remove_file(path);
@@ -517,6 +573,347 @@ fn refresh_snapshot(ctx: &Ctx) {
     }
 }
 
+/// [`crate::serve::MODEL_REGIMES`] index of the steady regime (every
+/// round after round 0) — the window the drift verdict watches.
+const STEADY_REGIME: usize = 1;
+
+/// Cost-model drift watchdog, on the `slo.drift_interval_ms` cadence.
+/// Each tick:
+///
+/// 1. snapshots the lifetime reply-wall / hit-rate / steady-relerr
+///    observations and installs their deltas ([`LogHistogram::delta`])
+///    as the fast (burn-rate) windows the `health` op evaluates;
+/// 2. when the steady-regime mean relative energy error sits past
+///    `slo.relerr_ceiling` (with `slo.min_window` samples behind it),
+///    emits a `model_drift` event and admits up to `slo.drift_budget`
+///    re-searches of the hottest stored keys — through the normal
+///    pending/claim reservation, into FREE worker-queue slots only, so
+///    a drifting model can never starve real misses.
+fn watchdog_loop(ctx: &Ctx) {
+    let slo = &ctx.search.slo;
+    let interval = std::time::Duration::from_millis(slo.drift_interval_ms);
+    // Short sleep tick so shutdown stays responsive under a long
+    // watchdog interval (same pattern as the refresh loop).
+    let tick = std::time::Duration::from_millis(slo.drift_interval_ms.clamp(10, 250));
+    let mut last = Instant::now();
+    while !ctx.stopped.load(Ordering::SeqCst) {
+        std::thread::sleep(tick);
+        if last.elapsed() < interval {
+            continue;
+        }
+        last = Instant::now();
+        watchdog_tick(ctx);
+    }
+}
+
+/// One watchdog pass: fast-window snapshot, then the drift verdict.
+fn watchdog_tick(ctx: &Ctx) {
+    let slo_cfg = &ctx.search.slo;
+    // Lifetime observations under one short state-lock hold. The
+    // clones are fixed arrays — memcpy, no heap.
+    let (reply_wall, relerr_steady, n_requests, n_hits) = {
+        let state = ctx.state.lock().expect("state lock");
+        (
+            state.metrics.reply_wall().clone(),
+            state.metrics.model_energy_relerr(STEADY_REGIME).clone(),
+            state.metrics.n_requests,
+            state.metrics.n_hits,
+        )
+    };
+    {
+        let mut slo = ctx.slo.lock().expect("slo lock");
+        slo.fast = Some(FastWindows {
+            reply_wall: reply_wall.delta(&slo.prev_reply_wall),
+            relerr_steady: relerr_steady.delta(&slo.prev_relerr_steady),
+            n_requests: n_requests.saturating_sub(slo.prev_requests) as u64,
+            n_hits: n_hits.saturating_sub(slo.prev_hits) as u64,
+        });
+        slo.prev_reply_wall = reply_wall;
+        slo.prev_relerr_steady = relerr_steady.clone();
+        slo.prev_requests = n_requests;
+        slo.prev_hits = n_hits;
+    }
+    let drifting = slo_cfg.relerr_ceiling > 0.0
+        && relerr_steady.count() >= slo_cfg.min_window
+        && relerr_steady.mean() > slo_cfg.relerr_ceiling;
+    if !drifting {
+        return;
+    }
+    let admitted = if slo_cfg.drift_budget > 0 { admit_drift_researches(ctx) } else { 0 };
+    if let Some(log) = &ctx.log {
+        log.emit(
+            "model_drift",
+            vec![
+                ("relerr_steady_mean", Json::num(relerr_steady.mean())),
+                ("ceiling", Json::num(slo_cfg.relerr_ceiling)),
+                ("admitted", Json::num(admitted as f64)),
+                ("budget", Json::num(slo_cfg.drift_budget as f64)),
+            ],
+        );
+    }
+}
+
+/// Re-search the hottest stored keys after a drift verdict: up to
+/// `slo.drift_budget` jobs per interval, each reserved through the
+/// normal pending/claim machinery so local duplicates and fleet peers
+/// coalesce on it. Jobs are submitted WITHOUT a store snapshot — an
+/// exact-hit replay would hand back the very record whose model
+/// drifted — and only into free worker-queue slots; the heat-ordered
+/// backlog stays reserved for real misses.
+fn admit_drift_researches(ctx: &Ctx) -> usize {
+    let budget = ctx.search.slo.drift_budget;
+    // Over-fetch the heat ranking so pending and foreign-claimed keys
+    // don't exhaust the shortlist before the budget is met.
+    let (hottest, snapshot) = {
+        let state = ctx.state.lock().expect("state lock");
+        (state.heat.hottest(budget * 4 + 16), state.snapshot.clone())
+    };
+    // A re-search needs a workload to run: index the snapshot's
+    // records by serve key (cold path, once per drifting interval).
+    let by_key: HashMap<String, &Arc<TuningRecord>> = snapshot
+        .records()
+        .iter()
+        .map(|rec| (serve_key(&rec.workload_id, &rec.gpu, &rec.mode, &rec.fingerprint), rec))
+        .collect();
+    let mut admitted = 0usize;
+    for (key, _heat) in &hottest {
+        if admitted >= budget {
+            break;
+        }
+        let Some(rec) = by_key.get(key) else { continue };
+        let cfg = request_cfg(ctx, GpuArch::parse(&rec.gpu), SearchMode::parse(&rec.mode));
+        let mut state = ctx.state.lock().expect("state lock");
+        if state.pending.contains_key(key) {
+            continue;
+        }
+        if ctx.search.fleet.coordinate {
+            // Fleet claim outside the state lock, mirroring the miss
+            // path — claim I/O must not stall reply bookkeeping.
+            drop(state);
+            let attempt = ctx.inflight.claim(key);
+            state = ctx.state.lock().expect("state lock");
+            match attempt {
+                Ok(Some(lease)) => {
+                    let raced = state.pending.contains_key(key);
+                    let newest = match state.claims.get(key) {
+                        Some(held) => lease.epoch() > held.epoch(),
+                        None => true,
+                    };
+                    if newest {
+                        state.claims.insert(key.clone(), lease);
+                    }
+                    if raced {
+                        continue; // a real miss reserved it meanwhile
+                    }
+                }
+                Ok(None) => continue, // a peer is already searching it
+                Err(_) => continue,   // claim I/O failed: retry next tick
+            }
+        }
+        let tid = TraceId::mint();
+        let req = format!("drift-{}", tid.to_hex());
+        state.pending.insert(key.clone(), PendingMiss { req: req.clone(), trace: tid });
+        state.metrics.n_enqueued += 1;
+        drop(state);
+        let job = SearchJob { name: key.clone(), workload: rec.workload, cfg };
+        let submitted = {
+            let mut pool = ctx.pool.lock().expect("pool lock");
+            match pool.as_mut() {
+                Some(p) => p.try_submit_with_snapshot(job, None),
+                None => false, // shutting down
+            }
+        };
+        if submitted {
+            admitted += 1;
+            {
+                let mut state = ctx.state.lock().expect("state lock");
+                state.metrics.n_drift_researches += 1;
+            }
+            {
+                let mut traces = ctx.traces.lock().expect("traces lock");
+                traces.open(tid, key, &req, unix_now_s());
+            }
+            if let Some(log) = &ctx.log {
+                log.emit_traced(
+                    "job_enqueued",
+                    &req,
+                    vec![("key", Json::str(key.clone())), ("via", Json::str("drift"))],
+                );
+            }
+        } else {
+            // Queue full (or shutting down): undo the reservation —
+            // drift work never takes backlog slots from real misses —
+            // and stop; later keys won't fit either.
+            let released = {
+                let mut state = ctx.state.lock().expect("state lock");
+                state.pending.remove(key);
+                state.metrics.n_enqueued -= 1;
+                state.claims.remove(key)
+            };
+            if let Some(lease) = released {
+                let _ = lease.release();
+            }
+            break;
+        }
+    }
+    admitted
+}
+
+/// Which direction breaches a threshold.
+#[derive(Clone, Copy)]
+enum Breach {
+    /// Observations above the threshold breach (ceilings).
+    Above,
+    /// Observations below the threshold breach (floors).
+    Below,
+}
+
+/// Evaluate one windowed target: `(value, samples)` on the slow
+/// (lifetime) and fast (burn-rate) windows against a threshold. Both
+/// windows breached = `critical`; one = `warn`; a window under
+/// `min_window` samples never breaches, and a zero threshold disables
+/// the target.
+fn windowed_target(
+    name: &str,
+    threshold: f64,
+    dir: Breach,
+    slow: (f64, u64),
+    fast: (f64, u64),
+    min_window: u64,
+) -> HealthTarget {
+    let (value, slow_n) = slow;
+    let (fast_value, fast_n) = fast;
+    let breached = |v: f64| match dir {
+        Breach::Above => v > threshold,
+        Breach::Below => v < threshold,
+    };
+    let word = match dir {
+        Breach::Above => "over",
+        Breach::Below => "under",
+    };
+    let (status, reason) = if threshold == 0.0 {
+        (HealthStatus::Ok, "disabled (threshold 0)".to_string())
+    } else {
+        let slow_breach = slow_n >= min_window && breached(value);
+        let fast_breach = fast_n >= min_window && breached(fast_value);
+        match (slow_breach, fast_breach) {
+            (true, true) => (
+                HealthStatus::Critical,
+                format!(
+                    "fast and slow windows {word} {threshold}: {fast_value:.4} / {value:.4}"
+                ),
+            ),
+            (true, false) => {
+                (HealthStatus::Warn, format!("slow window {word} {threshold}: {value:.4}"))
+            }
+            (false, true) => {
+                (HealthStatus::Warn, format!("fast window {word} {threshold}: {fast_value:.4}"))
+            }
+            (false, false) if slow_n < min_window && fast_n < min_window => {
+                (HealthStatus::Ok, format!("warming up ({slow_n}/{min_window} samples)"))
+            }
+            (false, false) => (HealthStatus::Ok, "within target".to_string()),
+        }
+    };
+    HealthTarget { name: name.to_string(), status, reason, value, fast_value, threshold }
+}
+
+/// The backlog gauge: instantaneous depth vs its ceiling — `critical`
+/// past the ceiling, `warn` past half of it, disabled at 0. No
+/// windows: a deep backlog is actionable the moment it exists.
+fn backlog_target(len: usize, ceiling: usize) -> HealthTarget {
+    let (status, reason) = if ceiling == 0 {
+        (HealthStatus::Ok, "disabled (threshold 0)".to_string())
+    } else if len > ceiling {
+        (HealthStatus::Critical, format!("backlog {len} over ceiling {ceiling}"))
+    } else if len > ceiling / 2 {
+        (HealthStatus::Warn, format!("backlog {len} over half the ceiling {ceiling}"))
+    } else {
+        (HealthStatus::Ok, "within target".to_string())
+    };
+    HealthTarget {
+        name: "backlog".to_string(),
+        status,
+        reason,
+        value: len as f64,
+        fast_value: len as f64,
+        threshold: ceiling as f64,
+    }
+}
+
+/// Answer a `health` frame: every `[slo]` target evaluated on the
+/// lifetime (slow) window and the watchdog's fast window, plus the
+/// drift watchdog's state. Before the first watchdog tick the fast
+/// window IS the lifetime window (a cold daemon has no burn history).
+fn health_reply(ctx: &Ctx, id: String) -> HealthReply {
+    let slo = &ctx.search.slo;
+    let (reply_wall, relerr_steady, n_requests, n_hits, backlog_len, n_drift) = {
+        let state = ctx.state.lock().expect("state lock");
+        (
+            state.metrics.reply_wall().clone(),
+            state.metrics.model_energy_relerr(STEADY_REGIME).clone(),
+            state.metrics.n_requests,
+            state.metrics.n_hits,
+            state.backlog.len(),
+            state.metrics.n_drift_researches,
+        )
+    };
+    let (fast_wall, fast_relerr, fast_requests, fast_hits) = {
+        let windows = ctx.slo.lock().expect("slo lock");
+        match &windows.fast {
+            Some(f) => (f.reply_wall.clone(), f.relerr_steady.clone(), f.n_requests, f.n_hits),
+            None => {
+                (reply_wall.clone(), relerr_steady.clone(), n_requests as u64, n_hits as u64)
+            }
+        }
+    };
+    let rate = |hits: u64, reqs: u64| if reqs == 0 { 0.0 } else { hits as f64 / reqs as f64 };
+    let min = slo.min_window;
+    let targets = vec![
+        windowed_target(
+            "p99_reply_wall_s",
+            slo.p99_reply_wall_s,
+            Breach::Above,
+            (reply_wall.quantile(99.0), reply_wall.count()),
+            (fast_wall.quantile(99.0), fast_wall.count()),
+            min,
+        ),
+        windowed_target(
+            "hit_rate",
+            slo.hit_rate_floor,
+            Breach::Below,
+            (rate(n_hits as u64, n_requests as u64), n_requests as u64),
+            (rate(fast_hits, fast_requests), fast_requests),
+            min,
+        ),
+        windowed_target(
+            "relerr_steady",
+            slo.relerr_ceiling,
+            Breach::Above,
+            (relerr_steady.mean(), relerr_steady.count()),
+            (fast_relerr.mean(), fast_relerr.count()),
+            min,
+        ),
+        backlog_target(backlog_len, slo.backlog_ceiling),
+    ];
+    let status = targets.iter().fold(HealthStatus::Ok, |acc, t| acc.worst(t.status));
+    let drifting = slo.relerr_ceiling > 0.0
+        && relerr_steady.count() >= min
+        && relerr_steady.mean() > slo.relerr_ceiling;
+    HealthReply {
+        id,
+        status,
+        targets,
+        drift: DriftHealth {
+            n_drift_researches: n_drift as u64,
+            relerr_steady_mean: relerr_steady.mean(),
+            relerr_fast_mean: fast_relerr.mean(),
+            budget: slo.drift_budget,
+            drifting,
+        },
+    }
+}
+
 /// How a finished search's write-back ended.
 #[derive(Clone, Copy, PartialEq, Eq)]
 enum Landing {
@@ -547,6 +944,9 @@ struct PendingWriteback {
     rec: TuningRecord,
     key: String,
     n_measurements: usize,
+    /// NVML joules the search burned across its measured pool — the
+    /// ledger's `paid` side, debited when the write-back lands.
+    measurement_joules: f64,
     sim_time_s: f64,
     /// Per-round search stats, carried through to the terminal landing:
     /// each round becomes a `search_round` span on the miss's trace
@@ -599,6 +999,13 @@ fn writer_loop(ctx: &Ctx, rx: Receiver<PoolEvent>) {
                 let job = PendingWriteback {
                     key,
                     n_measurements: result.outcome.n_energy_measurements(),
+                    measurement_joules: result
+                        .outcome
+                        .measured_pool
+                        .iter()
+                        .filter(|e| e.energy_measured)
+                        .map(|e| e.energy_j)
+                        .sum(),
                     sim_time_s: result.outcome.clock.total_s,
                     rounds: result.outcome.rounds.clone(),
                     attempts: 0,
@@ -758,6 +1165,10 @@ fn finish_writeback(ctx: &Ctx, job: &PendingWriteback, landing: Landing) {
     if accepted {
         refresh_snapshot(ctx);
     }
+    // Ledger debit indices for an accepted landing (cold path, but the
+    // lookups are plain `&str` compares anyway).
+    let paid_cell = ledger_gpu_index(&job.rec.gpu)
+        .map(|gpu| (gpu, ledger_family_index(job.rec.workload.family())));
     let (claim, pending) = {
         let mut state = ctx.state.lock().expect("state lock");
         match landing {
@@ -765,6 +1176,9 @@ fn finish_writeback(ctx: &Ctx, job: &PendingWriteback, landing: Landing) {
                 state.metrics.n_searches_done += 1;
                 state.metrics.measurements_paid += job.n_measurements;
                 state.metrics.n_evicted_records += evict.n_evicted;
+                if let Some((gpu, family)) = paid_cell {
+                    state.metrics.ledger.record_paid(gpu, family, job.measurement_joules);
+                }
             }
             Landing::Fenced => state.metrics.n_writebacks_fenced += 1,
             Landing::Dropped => state.metrics.n_writebacks_dropped += 1,
@@ -1023,6 +1437,7 @@ fn handle_frame(ctx: &Ctx, line: &str) -> (Json, bool, bool, Option<TraceId>) {
         }
         Ok(Request::Stats { id }) => (stats_reply(ctx, id).to_json(), false, false, None),
         Ok(Request::Metrics { id }) => (metrics_reply(ctx, id).to_json(), false, false, None),
+        Ok(Request::Health { id }) => (health_reply(ctx, id).to_json(), false, false, None),
         Ok(Request::Traces { id, slowest }) => {
             (traces_reply(ctx, id, slowest).to_json(), false, false, None)
         }
@@ -1087,6 +1502,8 @@ fn stats_reply(ctx: &Ctx, id: String) -> StatsReply {
         n_batch_requests: state.metrics.n_batch_requests,
         n_notify_refresh: state.metrics.n_notify_refresh,
         n_poll_refresh: state.metrics.n_poll_refresh,
+        uptime_s: ctx.started.elapsed().as_secs_f64(),
+        build_info: build_info(),
         shard_records,
         heat_histogram: state.heat.histogram().to_vec(),
     }
@@ -1105,6 +1522,7 @@ fn metrics_reply(ctx: &Ctx, id: String) -> MetricsReply {
         reply_wall_s: m.reply_wall().clone(),
         stages: Stage::ALL.iter().map(|&s| (s.name().to_string(), m.stage(s).clone())).collect(),
         model: m.model_pairs().into_iter().map(|(k, h)| (k, h.clone())).collect(),
+        energy: m.ledger.clone(),
     }
 }
 
@@ -1169,9 +1587,20 @@ fn serve_hit(
     }
     let t = reply_time_s(true, ctx.store.shard_len_for(key));
     let wall_s = trace.start.elapsed().as_secs_f64();
+    // Ledger indices resolved BEFORE the lock (`&str` compares, no
+    // allocation); records with no persisted baseline credit 0 J into
+    // the `unattributed` family — counted, never guessed.
+    let gpu_idx = ledger_gpu_index(&rec.gpu);
+    let (family, saved_j) = match rec.baseline_energy_j {
+        Some(base) => (ledger_family_index(rec.workload.family()), base - rec.best.energy_j),
+        None => (UNATTRIBUTED, 0.0),
+    };
     let queue_depth = {
         let mut state = ctx.state.lock().expect("state lock");
         state.metrics.record_reply(true, t, wall_s, &trace.stages);
+        if let Some(gpu) = gpu_idx {
+            state.metrics.ledger.record_saved(gpu, family, saved_j);
+        }
         state.pending.len()
     };
     emit_served(ctx, &id, key, "hit", ServeSource::Store, t);

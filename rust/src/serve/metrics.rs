@@ -15,7 +15,7 @@
 //! reply bookkeeping already pays), bounded memory for the lifetime of
 //! the daemon, and exact fleet-wide merging.
 
-use crate::telemetry::{LogHistogram, Stage, StageTrace, N_STAGES};
+use crate::telemetry::{EnergyLedger, LogHistogram, Stage, StageTrace, N_STAGES};
 
 /// Cost-model accuracy regimes (ISSUE 7): `round0` isolates the warm-
 /// start transfer round (where a poisoned seed model shows up first),
@@ -74,6 +74,15 @@ pub struct ServeMetrics {
     /// Interval-poll fallback passes that actually ingested changes
     /// the notify channel had missed (0 on a healthy push path).
     pub n_poll_refresh: usize,
+    /// Re-searches the drift watchdog admitted after the steady-regime
+    /// relerr crossed the `[slo]` ceiling (ISSUE 8). Bounded per
+    /// interval by `slo.drift_budget`.
+    pub n_drift_researches: usize,
+    /// Energy-savings ledger (ISSUE 8): joules saved vs the latency-only
+    /// baseline per served hit, measurement joules paid per landed
+    /// search, both per (gpu, workload-family). Fixed arrays — recording
+    /// rides the same state-lock acquisition as the reply histograms.
+    pub ledger: EnergyLedger,
     /// Simulated-clock reply times (the Fig. 5 currency).
     reply_sim: LogHistogram,
     /// Wall-clock reply times: frame receipt → reply frame built.
@@ -198,9 +207,27 @@ impl ServeMetrics {
         out
     }
 
+    /// Samples across every histogram that arrived non-finite or
+    /// non-positive and were clamped into bucket 0 (ISSUE 8) — a
+    /// NaN-producing measurement bug surfaces here as a counter instead
+    /// of silently skewing the smallest bucket. Cold path (the
+    /// `metrics` op); the per-histogram tallies it sums are O(1) reads.
+    pub fn n_invalid_samples(&self) -> u64 {
+        let mut n = self.reply_sim.invalid() + self.reply_wall.invalid();
+        for h in &self.stages {
+            n += h.invalid();
+        }
+        for regime in 0..MODEL_REGIMES.len() {
+            n += self.model_snr_db[regime].invalid()
+                + self.model_energy_relerr[regime].invalid()
+                + self.model_dynamic_k[regime].invalid();
+        }
+        n
+    }
+
     /// Counter name/value pairs, names matching the `stats` wire
     /// fields — the `metrics` op serves these as its counter map.
-    pub fn counter_pairs(&self) -> [(&'static str, u64); 15] {
+    pub fn counter_pairs(&self) -> [(&'static str, u64); 17] {
         [
             ("n_requests", self.n_requests as u64),
             ("n_hits", self.n_hits as u64),
@@ -217,6 +244,8 @@ impl ServeMetrics {
             ("n_batch_requests", self.n_batch_requests as u64),
             ("n_notify_refresh", self.n_notify_refresh as u64),
             ("n_poll_refresh", self.n_poll_refresh as u64),
+            ("n_drift_researches", self.n_drift_researches as u64),
+            ("n_invalid_samples", self.n_invalid_samples()),
         ]
     }
 
@@ -311,8 +340,9 @@ mod tests {
             m.record_reply(true, (i + 1) as f64 * 1e-6, 20e-6, &hit_trace());
         }
         assert_eq!(m.n_requests, 50_000);
-        // Histograms are fixed arrays: no per-request growth anywhere.
-        assert!(std::mem::size_of::<ServeMetrics>() < 8192);
+        // Histograms and the ledger are fixed arrays: no per-request
+        // growth anywhere (14 × ~552 B histograms + 512 B ledger).
+        assert!(std::mem::size_of::<ServeMetrics>() < 12288);
         assert!(m.p50_reply_s() > 0.0 && m.p99_reply_s() >= m.p50_reply_s());
     }
 
@@ -329,6 +359,27 @@ mod tests {
     fn misses_cost_more_and_sharding_cuts_scan_cost() {
         assert!(reply_time_s(false, 10) > reply_time_s(true, 10));
         assert!(reply_time_s(true, 10_000) > reply_time_s(true, 10_000 / 8));
+    }
+
+    #[test]
+    fn invalid_samples_roll_up_across_every_histogram() {
+        let mut m = ServeMetrics::default();
+        assert_eq!(m.n_invalid_samples(), 0);
+        m.record_reply(true, f64::NAN, 30e-6, &hit_trace());
+        m.record_stage(Stage::ReplyWrite, -1.0);
+        assert_eq!(m.n_invalid_samples(), 2);
+        assert!(m.counter_pairs().iter().any(|&(k, v)| k == "n_invalid_samples" && v == 2));
+        assert!(m.counter_pairs().iter().any(|&(k, v)| k == "n_drift_researches" && v == 0));
+    }
+
+    #[test]
+    fn ledger_rides_the_metrics_struct() {
+        let mut m = ServeMetrics::default();
+        assert!(m.ledger.is_empty());
+        m.ledger.record_saved(0, 0, 2.5);
+        m.ledger.record_paid(0, 0, 1.0);
+        assert_eq!(m.ledger.total_saved_j(), 2.5);
+        assert_eq!(m.ledger.total_paid_j(), 1.0);
     }
 
     #[test]

@@ -29,7 +29,12 @@
 //!   returns the daemon's tail-sampled distributed traces
 //!   ([`crate::telemetry::TraceLog`]) — one miss followed from wire
 //!   parse through search rounds, write-back, and the peers'
-//!   notify-refresh ingest;
+//!   notify-refresh ingest. The `health` wire op (ISSUE 8) evaluates
+//!   the `[slo]` targets in-daemon over fast/slow windows and reports
+//!   `ok|warn|critical` per target plus the cost-model drift
+//!   watchdog's state; [`client::merged_health`] folds a fleet's
+//!   verdicts worst-of per target. The energy-savings ledger
+//!   ([`crate::telemetry::EnergyLedger`]) rides the `metrics` op;
 //! * [`bench`] — the `ecokernel bench serve` harness: zipf replay
 //!   against live daemons (single + two-daemon TCP fleet), producing
 //!   the `BENCH_serving.json` baseline.
@@ -47,10 +52,14 @@ pub mod protocol;
 
 pub use crate::fleet::ServeAddr;
 pub use bench::{run_bench_serve, BenchServeOpts};
-pub use client::{merged_metrics, BatchError, BatchRequest, FleetMetrics, ServeClient};
+pub use client::{
+    merged_health, merged_metrics, BatchError, BatchRequest, FleetHealth, FleetMetrics,
+    ServeClient,
+};
 pub use daemon::{Daemon, DaemonConfig, DaemonHandle};
 pub use metrics::{ServeMetrics, MODEL_REGIMES};
 pub use protocol::{
-    error_code, BatchItem, KernelReply, MetricsReply, Reject, Request, Response, ServeSource,
-    StatsReply, TraceReply, MAX_BATCH_ITEMS, METRICS_VERSION, PROTOCOL_VERSION, TRACE_VERSION,
+    error_code, BatchItem, DriftHealth, HealthReply, HealthStatus, HealthTarget, KernelReply,
+    MetricsReply, Reject, Request, Response, ServeSource, StatsReply, TraceReply,
+    HEALTH_VERSION, MAX_BATCH_ITEMS, METRICS_VERSION, PROTOCOL_VERSION, TRACE_VERSION,
 };

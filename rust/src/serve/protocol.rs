@@ -27,7 +27,16 @@
 //!   tail-sampled ring, slowest first (optional `"slowest"` cap); the
 //!   payload carries its own [`TRACE_VERSION`]. A `get_kernel` frame
 //!   may carry an optional `"trace"` id (hex) the miss path threads
-//!   through its spans; absent, the daemon mints one;
+//!   through its spans; absent, the daemon mints one; a `trace` value
+//!   that is not 1–16 hex chars is refused with `bad_request` naming
+//!   the field rather than silently dropped;
+//! * `health` — per-target SLO verdicts (`ok|warn|critical`) against
+//!   the `[slo]` config section, evaluated in-daemon over fast
+//!   (burn-rate) and slow (lifetime) windows, plus the drift
+//!   watchdog's state; the payload carries its own
+//!   [`HEALTH_VERSION`]. Fleet clients fold N daemons' frames with
+//!   [`HealthReply::merge_worst`] — the fleet is as healthy as its
+//!   least healthy member;
 //! * `shutdown` — graceful daemon stop (acked before the socket
 //!   closes).
 //!
@@ -42,7 +51,9 @@ use crate::schedule::Schedule;
 use crate::store::record::{
     schedule_from_json, schedule_to_json, workload_from_json, workload_to_json,
 };
-use crate::telemetry::{bucket_lower, LogHistogram, N_BUCKETS};
+use crate::telemetry::{
+    bucket_lower, EnergyLedger, LogHistogram, TraceId, LEDGER_FAMILIES, LEDGER_GPUS, N_BUCKETS,
+};
 use crate::util::Json;
 use crate::workload::{suites, Workload};
 use std::collections::BTreeMap;
@@ -62,6 +73,12 @@ pub const METRICS_VERSION: u64 = 1;
 /// [`METRICS_VERSION`]: absent reads as v1, newer than the client is
 /// refused.
 pub const TRACE_VERSION: u64 = 1;
+
+/// Version of the `health` reply PAYLOAD (the SLO-verdict encoding),
+/// carried as `"health_v"` inside the frame — same contract as
+/// [`METRICS_VERSION`]: absent reads as v1, newer than the client is
+/// refused.
+pub const HEALTH_VERSION: u64 = 1;
 
 /// Hard cap on `batch` frame size: a runaway client must not make the
 /// daemon buffer an unbounded reply frame.
@@ -108,6 +125,8 @@ pub enum Request {
     ///
     /// [`TraceLog`]: crate::telemetry::TraceLog
     Traces { id: String, slowest: usize },
+    /// SLO verdicts + drift-watchdog state against the `[slo]` section.
+    Health { id: String },
     Shutdown { id: String },
 }
 
@@ -203,6 +222,10 @@ impl Request {
                     fields.push(("slowest", Json::num(*slowest as f64)));
                 }
             }
+            Request::Health { id } => {
+                fields.push(("op", Json::str("health")));
+                fields.push(("id", Json::str(id.clone())));
+            }
             Request::Shutdown { id } => {
                 fields.push(("op", Json::str("shutdown")));
                 fields.push(("id", Json::str(id.clone())));
@@ -244,11 +267,27 @@ impl Request {
                     v.get("slowest").and_then(|x| x.as_f64()).unwrap_or(0.0).max(0.0) as usize;
                 Ok(Request::Traces { id, slowest })
             }
+            "health" => Ok(Request::Health { id }),
             "shutdown" => Ok(Request::Shutdown { id }),
             "get_kernel" => {
                 let (workload, gpu, mode) = parse_get_kernel_fields(&v, &id)?;
-                let trace =
-                    v.get("trace").and_then(|x| x.as_str()).map(|s| s.to_string());
+                // A present-but-unparseable trace id is the client's
+                // bug: refuse it loudly (naming the field) instead of
+                // silently minting a fresh id and orphaning the
+                // client's correlation.
+                let trace = match v.get("trace") {
+                    None => None,
+                    Some(t) => match t.as_str().filter(|s| TraceId::from_hex(s).is_some()) {
+                        Some(s) => Some(s.to_string()),
+                        None => {
+                            return Err(Reject::new(
+                                Some(id),
+                                error_code::BAD_REQUEST,
+                                "bad 'trace': want 1-16 hex chars",
+                            ))
+                        }
+                    },
+                };
                 Ok(Request::GetKernel { id, workload, gpu, mode, trace })
             }
             "batch" => {
@@ -504,6 +543,13 @@ pub struct StatsReply {
     /// Interval-poll fallback passes that ingested changes the notify
     /// channel missed (absent in older frames = 0).
     pub n_poll_refresh: usize,
+    /// Seconds since the daemon bound its socket (absent in older
+    /// frames = 0).
+    pub uptime_s: f64,
+    /// Build identity of the serving daemon: crate version, plus the
+    /// git hash when one was baked in at compile time (absent in older
+    /// frames = empty).
+    pub build_info: String,
     /// Records per shard (the store-size histogram).
     pub shard_records: Vec<usize>,
     /// Key counts per heat bucket (log2 buckets, coldest first — see
@@ -544,6 +590,8 @@ impl StatsReply {
                     ("n_batch_requests", Json::num(self.n_batch_requests as f64)),
                     ("n_notify_refresh", Json::num(self.n_notify_refresh as f64)),
                     ("n_poll_refresh", Json::num(self.n_poll_refresh as f64)),
+                    ("uptime_s", Json::num(self.uptime_s)),
+                    ("build_info", Json::str(self.build_info.clone())),
                     (
                         "shard_records",
                         Json::arr(self.shard_records.iter().map(|&n| Json::num(n as f64))),
@@ -587,6 +635,12 @@ impl StatsReply {
             n_batch_requests: opt_usize(s, "n_batch_requests"),
             n_notify_refresh: opt_usize(s, "n_notify_refresh"),
             n_poll_refresh: opt_usize(s, "n_poll_refresh"),
+            uptime_s: s.get("uptime_s").and_then(Json::as_f64).unwrap_or(0.0),
+            build_info: s
+                .get("build_info")
+                .and_then(|x| x.as_str())
+                .unwrap_or_default()
+                .to_string(),
             shard_records: opt_usize_arr(s, "shard_records"),
             heat_histogram: opt_usize_arr(s, "heat_histogram"),
         })
@@ -619,6 +673,12 @@ pub struct MetricsReply {
     /// Absent in pre-trace frames (reads as empty), so no
     /// `metrics_v` bump.
     pub model: BTreeMap<String, LogHistogram>,
+    /// The energy-savings ledger (ISSUE 8): joules saved vs the
+    /// latency-only baseline and measurement joules paid, per
+    /// (gpu, workload-family). Sparse on the wire and absent in older
+    /// frames (reads as empty), so no `metrics_v` bump — same
+    /// precedent as `model`.
+    pub energy: EnergyLedger,
 }
 
 impl MetricsReply {
@@ -640,6 +700,7 @@ impl MetricsReply {
             ("reply_wall_s", self.reply_wall_s.to_json()),
             ("stages", Json::Obj(stages)),
             ("model", Json::Obj(model)),
+            ("energy", self.energy.to_json()),
         ])
     }
 
@@ -683,6 +744,7 @@ impl MetricsReply {
             reply_wall_s: hist("reply_wall_s"),
             stages,
             model,
+            energy: v.get("energy").map(EnergyLedger::from_json).unwrap_or_default(),
         })
     }
 
@@ -716,6 +778,7 @@ impl MetricsReply {
                 }
             }
         }
+        self.energy.merge(&other.energy);
     }
 
     /// Requests amortized per `batch` frame — how many `get_kernel`s
@@ -734,7 +797,10 @@ impl MetricsReply {
     /// log2 bucket upper bounds, stages as one histogram family with a
     /// `stage` label, model-accuracy families with a `regime` label
     /// (`ecokernel_model_snr_db`, `ecokernel_model_energy_relerr`,
-    /// `ecokernel_model_dynamic_k`).
+    /// `ecokernel_model_dynamic_k`), and the energy ledger as two
+    /// `gpu`/`family`-labelled counter families
+    /// (`ecokernel_energy_{saved,paid}_joules_total`) — nothing is
+    /// emitted for an empty ledger.
     pub fn to_prometheus(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::new();
@@ -742,6 +808,28 @@ impl MetricsReply {
             let base = name.strip_prefix("n_").unwrap_or(name);
             let _ = writeln!(out, "# TYPE ecokernel_{base}_total counter");
             let _ = writeln!(out, "ecokernel_{base}_total {value}");
+        }
+        if !self.energy.is_empty() {
+            let _ = writeln!(out, "# TYPE ecokernel_energy_saved_joules_total counter");
+            for (g, f) in self.energy.cells() {
+                let _ = writeln!(
+                    out,
+                    "ecokernel_energy_saved_joules_total{{gpu=\"{}\",family=\"{}\"}} {}",
+                    LEDGER_GPUS[g],
+                    LEDGER_FAMILIES[f],
+                    self.energy.saved_j(g, f),
+                );
+            }
+            let _ = writeln!(out, "# TYPE ecokernel_energy_paid_joules_total counter");
+            for (g, f) in self.energy.cells() {
+                let _ = writeln!(
+                    out,
+                    "ecokernel_energy_paid_joules_total{{gpu=\"{}\",family=\"{}\"}} {}",
+                    LEDGER_GPUS[g],
+                    LEDGER_FAMILIES[f],
+                    self.energy.paid_j(g, f),
+                );
+            }
         }
         prom_histogram(&mut out, "ecokernel_reply_sim_seconds", None, &self.reply_sim_s);
         prom_histogram(&mut out, "ecokernel_reply_wall_seconds", None, &self.reply_wall_s);
@@ -858,6 +946,210 @@ impl TraceReply {
     }
 }
 
+/// One SLO verdict: `ok`, `warn`, or `critical`, ordered by severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthStatus {
+    Ok,
+    Warn,
+    Critical,
+}
+
+impl HealthStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthStatus::Ok => "ok",
+            HealthStatus::Warn => "warn",
+            HealthStatus::Critical => "critical",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<HealthStatus> {
+        match s {
+            "ok" => Some(HealthStatus::Ok),
+            "warn" => Some(HealthStatus::Warn),
+            "critical" => Some(HealthStatus::Critical),
+            _ => None,
+        }
+    }
+
+    /// Severity rank: `ok` < `warn` < `critical`.
+    pub fn rank(self) -> u8 {
+        match self {
+            HealthStatus::Ok => 0,
+            HealthStatus::Warn => 1,
+            HealthStatus::Critical => 2,
+        }
+    }
+
+    /// The more severe of the two.
+    pub fn worst(self, other: HealthStatus) -> HealthStatus {
+        if other.rank() > self.rank() {
+            other
+        } else {
+            self
+        }
+    }
+}
+
+/// One `[slo]` target's verdict inside a `health` reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthTarget {
+    /// Stable target name (`p99_reply_wall_s`, `hit_rate`,
+    /// `relerr_steady`, `backlog`; fleet clients may synthesize
+    /// `fleet_reachability`).
+    pub name: String,
+    pub status: HealthStatus,
+    /// Human-readable cause — names the breached window(s) or says why
+    /// the target is inert (`disabled`, `warming up`).
+    pub reason: String,
+    /// Slow-window (lifetime) observation the verdict compared.
+    pub value: f64,
+    /// Fast-window (burn-rate) observation since the last watchdog
+    /// tick; equals `value` until the first tick.
+    pub fast_value: f64,
+    /// The `[slo]` threshold in force.
+    pub threshold: f64,
+}
+
+impl HealthTarget {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("status", Json::str(self.status.name())),
+            ("reason", Json::str(self.reason.clone())),
+            ("value", Json::num(self.value)),
+            ("fast_value", Json::num(self.fast_value)),
+            ("threshold", Json::num(self.threshold)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<HealthTarget> {
+        Some(HealthTarget {
+            name: v.get("name")?.as_str()?.to_string(),
+            status: HealthStatus::parse(v.get("status")?.as_str()?)?,
+            reason: v.get("reason").and_then(|x| x.as_str()).unwrap_or_default().to_string(),
+            value: v.get("value").and_then(Json::as_f64).unwrap_or(0.0),
+            fast_value: v.get("fast_value").and_then(Json::as_f64).unwrap_or(0.0),
+            threshold: v.get("threshold").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+}
+
+/// The drift watchdog's state inside a `health` reply.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DriftHealth {
+    /// Re-searches the watchdog has admitted over the daemon lifetime.
+    pub n_drift_researches: u64,
+    /// Lifetime steady-regime mean energy relative error.
+    pub relerr_steady_mean: f64,
+    /// Fast-window steady-regime mean relerr (since the last tick).
+    pub relerr_fast_mean: f64,
+    /// `slo.drift_budget` in force (max re-searches per interval).
+    pub budget: usize,
+    /// True while the steady relerr sits past the `[slo]` ceiling.
+    pub drifting: bool,
+}
+
+impl DriftHealth {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_drift_researches", Json::num(self.n_drift_researches as f64)),
+            ("relerr_steady_mean", Json::num(self.relerr_steady_mean)),
+            ("relerr_fast_mean", Json::num(self.relerr_fast_mean)),
+            ("budget", Json::num(self.budget as f64)),
+            ("drifting", Json::Bool(self.drifting)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> DriftHealth {
+        DriftHealth {
+            n_drift_researches: v.get("n_drift_researches").and_then(Json::as_f64).unwrap_or(0.0)
+                as u64,
+            relerr_steady_mean: v.get("relerr_steady_mean").and_then(Json::as_f64).unwrap_or(0.0),
+            relerr_fast_mean: v.get("relerr_fast_mean").and_then(Json::as_f64).unwrap_or(0.0),
+            budget: v.get("budget").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+            drifting: v.get("drifting").and_then(|b| b.as_bool()).unwrap_or(false),
+        }
+    }
+}
+
+/// The `health` response frame: the overall verdict, one
+/// [`HealthTarget`] per `[slo]` target, and the drift watchdog's
+/// state. Carries its own payload version (`"health_v"`, like
+/// `metrics_v`) so the verdict encoding can evolve without a protocol
+/// bump.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthReply {
+    pub id: String,
+    /// Worst status across `targets`.
+    pub status: HealthStatus,
+    pub targets: Vec<HealthTarget>,
+    pub drift: DriftHealth,
+}
+
+impl HealthReply {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("v", Json::num(PROTOCOL_VERSION as f64)),
+            ("id", Json::str(self.id.clone())),
+            ("ok", Json::Bool(true)),
+            ("op", Json::str("health")),
+            ("health_v", Json::num(HEALTH_VERSION as f64)),
+            ("status", Json::str(self.status.name())),
+            ("targets", Json::arr(self.targets.iter().map(|t| t.to_json()))),
+            ("drift", self.drift.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<HealthReply, String> {
+        let payload_v = v.get("health_v").and_then(Json::as_f64).unwrap_or(1.0) as u64;
+        if payload_v > HEALTH_VERSION {
+            return Err(format!(
+                "health payload is v{payload_v}, this client understands v{HEALTH_VERSION}"
+            ));
+        }
+        let status =
+            HealthStatus::parse(&get_str(v, "status")?).ok_or("bad 'status' value")?;
+        let targets = v
+            .get("targets")
+            .and_then(|a| a.as_arr())
+            .map(|a| a.iter().filter_map(HealthTarget::from_json).collect())
+            .unwrap_or_default();
+        let drift = v.get("drift").map(DriftHealth::from_json).unwrap_or_default();
+        Ok(HealthReply { id: get_str(v, "id")?, status, targets, drift })
+    }
+
+    /// Fold another daemon's health in: the fleet is exactly as
+    /// healthy as its least healthy member. Targets merge by name —
+    /// the worse status wins, and on a tie the larger fast-window
+    /// value (the daemon burning hotter) carries the reason. Targets
+    /// only one side reports survive, so partial fleets keep their
+    /// verdicts. Drift counters sum; means take the worst; `drifting`
+    /// is sticky.
+    pub fn merge_worst(&mut self, other: &HealthReply) {
+        self.status = self.status.worst(other.status);
+        for t in &other.targets {
+            match self.targets.iter_mut().find(|mine| mine.name == t.name) {
+                None => self.targets.push(t.clone()),
+                Some(mine) => {
+                    let replace = t.status.rank() > mine.status.rank()
+                        || (t.status == mine.status && t.fast_value > mine.fast_value);
+                    if replace {
+                        *mine = t.clone();
+                    }
+                }
+            }
+        }
+        self.drift.n_drift_researches += other.drift.n_drift_researches;
+        self.drift.relerr_steady_mean =
+            self.drift.relerr_steady_mean.max(other.drift.relerr_steady_mean);
+        self.drift.relerr_fast_mean =
+            self.drift.relerr_fast_mean.max(other.drift.relerr_fast_mean);
+        self.drift.budget = self.drift.budget.max(other.drift.budget);
+        self.drift.drifting |= other.drift.drifting;
+    }
+}
+
 fn opt_usize(v: &Json, key: &str) -> usize {
     v.get(key).and_then(|x| x.as_f64()).unwrap_or(0.0) as usize
 }
@@ -879,6 +1171,7 @@ pub enum Response {
     Stats(StatsReply),
     Metrics(MetricsReply),
     Trace(TraceReply),
+    Health(HealthReply),
     ShutdownAck { id: String },
     Error { id: Option<String>, code: String, message: String },
 }
@@ -897,6 +1190,7 @@ impl Response {
             Response::Stats(r) => r.to_json(),
             Response::Metrics(r) => r.to_json(),
             Response::Trace(r) => r.to_json(),
+            Response::Health(r) => r.to_json(),
             Response::ShutdownAck { id } => Json::obj(vec![
                 ("v", Json::num(PROTOCOL_VERSION as f64)),
                 ("id", Json::str(id.clone())),
@@ -965,6 +1259,7 @@ impl Response {
             "stats" => Ok(Response::Stats(StatsReply::from_json(v)?)),
             "metrics" => Ok(Response::Metrics(MetricsReply::from_json(v)?)),
             "trace" => Ok(Response::Trace(TraceReply::from_json(v)?)),
+            "health" => Ok(Response::Health(HealthReply::from_json(v)?)),
             "shutdown" => Ok(Response::ShutdownAck { id: get_str(v, "id")? }),
             other => Err(format!("unknown response op '{other}'")),
         }
@@ -1014,6 +1309,7 @@ mod tests {
             Request::Metrics { id: "c5".into() },
             Request::Traces { id: "c6".into(), slowest: 5 },
             Request::Traces { id: "c7".into(), slowest: 0 },
+            Request::Health { id: "c8".into() },
             Request::Shutdown { id: "c4".into() },
         ];
         for req in reqs {
@@ -1062,6 +1358,27 @@ mod tests {
         assert_eq!(rej.id.as_deref(), Some("c9"));
         let frame = rej.to_json();
         assert_eq!(frame.get("id").and_then(|x| x.as_str()), Some("c9"));
+    }
+
+    /// A `trace` value that is not valid hex is the client's bug: the
+    /// daemon must answer `bad_request` naming the field, never
+    /// silently re-mint the id (which would orphan the client's
+    /// correlation). Valid short hex like `"a3f9"` stays accepted.
+    #[test]
+    fn bad_trace_hex_is_rejected_naming_the_field() {
+        for line in [
+            r#"{"v":1,"op":"get_kernel","id":"x","workload":"MM1","trace":"nothex!"}"#,
+            r#"{"v":1,"op":"get_kernel","id":"x","workload":"MM1","trace":""}"#,
+            r#"{"v":1,"op":"get_kernel","id":"x","workload":"MM1","trace":"0123456789abcdef0"}"#,
+            r#"{"v":1,"op":"get_kernel","id":"x","workload":"MM1","trace":7}"#,
+        ] {
+            let rej = Request::parse_line(line).unwrap_err();
+            assert_eq!(rej.code, error_code::BAD_REQUEST, "{line}");
+            assert_eq!(rej.id.as_deref(), Some("x"), "{line}");
+            assert!(rej.message.contains("trace"), "{line}: {}", rej.message);
+        }
+        let ok = r#"{"v":1,"op":"get_kernel","id":"x","workload":"MM1","trace":"a3f9"}"#;
+        assert!(Request::parse_line(ok).is_ok());
     }
 
     #[test]
@@ -1120,6 +1437,8 @@ mod tests {
             n_batch_requests: 17,
             n_notify_refresh: 6,
             n_poll_refresh: 1,
+            uptime_s: 12.5,
+            build_info: "ecokernel 0.1.0 (abc1234)".into(),
             shard_records: vec![2, 0, 4, 3],
             heat_histogram: vec![1, 0, 2, 0, 0, 0, 0, 1],
         };
@@ -1150,6 +1469,8 @@ mod tests {
                 assert_eq!(back.n_batch_requests, 0);
                 assert_eq!(back.n_notify_refresh, 0);
                 assert_eq!(back.n_poll_refresh, 0);
+                assert_eq!(back.uptime_s, 0.0);
+                assert_eq!(back.build_info, "");
                 assert!(back.shard_records.is_empty());
                 assert!(back.heat_histogram.is_empty());
             }
@@ -1332,6 +1653,7 @@ mod tests {
             inner,
             vec![
                 "backlog_len",
+                "build_info",
                 "heat_histogram",
                 "hit_rate",
                 "measurements_paid",
@@ -1356,6 +1678,7 @@ mod tests {
                 "pending_keys",
                 "queue_depth",
                 "shard_records",
+                "uptime_s",
             ],
             "{line}"
         );
@@ -1390,6 +1713,8 @@ mod tests {
             n_batch_requests: 17,
             n_notify_refresh: 6,
             n_poll_refresh: 1,
+            uptime_s: 42.0,
+            build_info: "ecokernel 0.1.0".into(),
             shard_records: vec![2, 0, 4, 3],
             heat_histogram: vec![1, 0, 2],
         }
@@ -1422,6 +1747,8 @@ mod tests {
                 assert_eq!(back.n_batch_requests, 0);
                 assert_eq!(back.n_notify_refresh, 0);
                 assert_eq!(back.n_poll_refresh, 0);
+                assert_eq!(back.uptime_s, 0.0, "gen-4 fields default too");
+                assert_eq!(back.build_info, "");
             }
             other => panic!("{other:?}"),
         }
@@ -1433,12 +1760,15 @@ mod tests {
         let mut parse = LogHistogram::new();
         let mut snr = LogHistogram::new();
         let mut k = LogHistogram::new();
+        let mut energy = EnergyLedger::new();
         for &v in seed {
             reply_sim_s.record(v);
             reply_wall_s.record(v * 0.5);
             parse.record(v * 0.1);
             snr.record(v * 1e5);
             k.record(0.5);
+            energy.record_saved(0, 0, v * 100.0);
+            energy.record_paid(0, 1, v * 200.0);
         }
         MetricsReply {
             id: id.into(),
@@ -1459,6 +1789,7 @@ mod tests {
             ]
             .into_iter()
             .collect(),
+            energy,
         }
     }
 
@@ -1496,6 +1827,7 @@ mod tests {
         assert_eq!(ab.reply_wall_s, expect.reply_wall_s);
         assert_eq!(ab.stages, expect.stages);
         assert_eq!(ab.model, expect.model, "model families merge per key");
+        assert_eq!(ab.energy, expect.energy, "ledger merge equals the union ledger");
         assert_eq!(ab.counter("n_requests"), 5);
         assert_eq!(ab.counter("n_batch_frames"), 4);
         assert_eq!(ab.frames_per_syscall(), 8.0);
@@ -1558,6 +1890,7 @@ mod tests {
             reply_wall_s: LogHistogram::new(),
             stages: BTreeMap::new(),
             model: [("model_snr_db/we\"ird\\regime\n".to_string(), h)].into_iter().collect(),
+            energy: EnergyLedger::new(),
         };
         let expect = concat!(
             "# TYPE ecokernel_requests_total counter\n",
@@ -1598,6 +1931,143 @@ mod tests {
         assert!(prom.contains("ecokernel_model_snr_db_count{regime=\"steady\"} 3"), "{prom}");
         assert!(prom.contains("ecokernel_model_dynamic_k_count{regime=\"steady\"} 3"), "{prom}");
         assert!(prom.contains("# TYPE ecokernel_model_dynamic_k histogram"), "{prom}");
+    }
+
+    /// The energy ledger exposes as two-label counter families, one
+    /// `# TYPE` line per family, gpu-major cell order — and an empty
+    /// ledger emits NOTHING (pinned by the golden test above, whose
+    /// ledger is empty).
+    #[test]
+    fn prometheus_energy_ledger_lines_are_exact() {
+        let mut energy = EnergyLedger::new();
+        energy.record_saved(0, 0, 2.5);
+        energy.record_paid(0, 0, 1.0);
+        energy.record_saved(3, 1, 0.25);
+        let reply = MetricsReply {
+            id: "e".into(),
+            counters: BTreeMap::new(),
+            reply_sim_s: LogHistogram::new(),
+            reply_wall_s: LogHistogram::new(),
+            stages: BTreeMap::new(),
+            model: BTreeMap::new(),
+            energy,
+        };
+        let prom = reply.to_prometheus();
+        let expect_head = concat!(
+            "# TYPE ecokernel_energy_saved_joules_total counter\n",
+            "ecokernel_energy_saved_joules_total{gpu=\"a100\",family=\"mm\"} 2.5\n",
+            "ecokernel_energy_saved_joules_total{gpu=\"v100\",family=\"mv\"} 0.25\n",
+            "# TYPE ecokernel_energy_paid_joules_total counter\n",
+            "ecokernel_energy_paid_joules_total{gpu=\"a100\",family=\"mm\"} 1\n",
+            "ecokernel_energy_paid_joules_total{gpu=\"v100\",family=\"mv\"} 0\n",
+        );
+        assert!(prom.starts_with(expect_head), "{prom}");
+    }
+
+    #[test]
+    fn metrics_reply_tolerates_an_absent_energy_field() {
+        // A pre-ledger daemon's frame: no `energy` key at all.
+        let line = r#"{"v":1,"id":"m9","ok":true,"op":"metrics","metrics_v":1,
+            "counters":{"n_requests":1}}"#
+            .replace('\n', "");
+        match Response::parse_line(&line).unwrap() {
+            Response::Metrics(back) => assert!(back.energy.is_empty()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    fn sample_health_reply(id: &str, status: HealthStatus) -> HealthReply {
+        HealthReply {
+            id: id.into(),
+            status,
+            targets: vec![
+                HealthTarget {
+                    name: "p99_reply_wall_s".into(),
+                    status,
+                    reason: if status == HealthStatus::Ok {
+                        "within target".into()
+                    } else {
+                        "fast and slow windows past 0.25s".into()
+                    },
+                    value: 0.12,
+                    fast_value: 0.30,
+                    threshold: 0.25,
+                },
+                HealthTarget {
+                    name: "backlog".into(),
+                    status: HealthStatus::Ok,
+                    reason: "depth 0 of 16".into(),
+                    value: 0.0,
+                    fast_value: 0.0,
+                    threshold: 16.0,
+                },
+            ],
+            drift: DriftHealth {
+                n_drift_researches: 2,
+                relerr_steady_mean: 0.4,
+                relerr_fast_mean: 0.6,
+                budget: 2,
+                drifting: true,
+            },
+        }
+    }
+
+    #[test]
+    fn health_reply_roundtrip_and_version_gate() {
+        let reply = sample_health_reply("h1", HealthStatus::Warn);
+        let line = reply.to_json().to_string();
+        match Response::parse_line(&line).unwrap() {
+            Response::Health(back) => assert_eq!(back, reply),
+            other => panic!("{other:?}"),
+        }
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("health_v").and_then(Json::as_f64), Some(1.0));
+        let newer = line.replace(r#""health_v":1"#, r#""health_v":2"#);
+        assert!(Response::parse_line(&newer).unwrap_err().contains("health payload"));
+        // An empty-target reply is well-formed; absent drift defaults.
+        let bare = r#"{"v":1,"id":"h2","ok":true,"op":"health","status":"ok"}"#;
+        match Response::parse_line(bare).unwrap() {
+            Response::Health(back) => {
+                assert_eq!(back.status, HealthStatus::Ok);
+                assert!(back.targets.is_empty());
+                assert_eq!(back.drift, DriftHealth::default());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// The fleet merge is worst-of per target: a critical member makes
+    /// the fleet critical and its reason survives; targets only one
+    /// side reports are kept (partial merges over dead daemons).
+    #[test]
+    fn health_merge_takes_the_worst_per_target() {
+        let a = sample_health_reply("a", HealthStatus::Ok);
+        let mut b = sample_health_reply("b", HealthStatus::Critical);
+        b.targets[0].reason = "fast and slow windows past 0.25s".into();
+        b.targets.push(HealthTarget {
+            name: "hit_rate".into(),
+            status: HealthStatus::Warn,
+            reason: "fast window under floor".into(),
+            value: 0.9,
+            fast_value: 0.4,
+            threshold: 0.5,
+        });
+        let mut ab = a.clone();
+        ab.merge_worst(&b);
+        assert_eq!(ab.status, HealthStatus::Critical);
+        let p99 = ab.targets.iter().find(|t| t.name == "p99_reply_wall_s").unwrap();
+        assert_eq!(p99.status, HealthStatus::Critical);
+        assert!(p99.reason.contains("past"));
+        assert!(ab.targets.iter().any(|t| t.name == "hit_rate"), "one-sided targets survive");
+        assert_eq!(ab.drift.n_drift_researches, 4, "drift counters sum");
+        assert!(ab.drift.drifting);
+        // Merge is symmetric on the verdicts.
+        b.merge_worst(&a);
+        assert_eq!(b.status, HealthStatus::Critical);
+        assert_eq!(
+            b.targets.iter().find(|t| t.name == "backlog").unwrap().status,
+            HealthStatus::Ok
+        );
     }
 
     #[test]

@@ -103,6 +103,12 @@ pub struct TuningRecord {
     /// field existed — and records whose snapshot version this build
     /// does not understand — still load, just without a model.
     pub model: Option<CostModelSnapshot>,
+    /// Energy (J) of the latency-only baseline: what a latency-first
+    /// selection over the same measured pool would have picked. The
+    /// energy ledger credits `baseline_energy_j − best.energy_j` per
+    /// served hit. `None` on records written before the field existed
+    /// — such hits are counted as *unattributed*, never guessed.
+    pub baseline_energy_j: Option<f64>,
 }
 
 impl TuningRecord {
@@ -127,6 +133,18 @@ impl TuningRecord {
             rounds: out.rounds.len(),
             final_k: out.k_trace.last().copied(),
             model: out.model.clone(),
+            // The latency-minimal measured kernel is what latency-only
+            // tuning would deploy; `select_final` restricts the energy
+            // pick to its latency tolerance band, so the credit
+            // (baseline − best) is never negative.
+            baseline_energy_j: out
+                .measured_pool
+                .iter()
+                .filter(|e| e.energy_measured)
+                .min_by(|a, b| {
+                    a.latency_s.partial_cmp(&b.latency_s).expect("finite latency")
+                })
+                .map(|e| e.energy_j),
         }
     }
 
@@ -165,6 +183,7 @@ impl TuningRecord {
             rounds: 1,
             final_k: None,
             model: None,
+            baseline_energy_j: None,
         }
     }
 
@@ -214,6 +233,13 @@ impl TuningRecord {
                     None => Json::Null,
                 },
             ),
+            (
+                "baseline_energy_j",
+                match self.baseline_energy_j {
+                    Some(e) => Json::num(e),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -254,6 +280,12 @@ impl TuningRecord {
             model: match v.get("cost_model") {
                 None | Some(Json::Null) => None,
                 Some(m) => CostModelSnapshot::from_json(m).ok(),
+            },
+            // Tolerant like `final_k`/`cost_model`: pre-ledger records
+            // load without a baseline and serve as unattributed hits.
+            baseline_energy_j: match v.get("baseline_energy_j") {
+                None | Some(Json::Null) => None,
+                Some(x) => Some(x.as_f64().ok_or("bad 'baseline_energy_j'")?),
             },
         })
     }
@@ -516,6 +548,33 @@ mod tests {
         let future = TuningRecord::from_json(&v).unwrap();
         assert_eq!(future.model, None);
         assert_eq!(future.best, rec.best);
+    }
+
+    #[test]
+    fn baseline_energy_is_persisted_and_optional() {
+        let rec = sample_record();
+        let baseline = rec.baseline_energy_j.expect("measured searches persist a baseline");
+        assert!(
+            baseline >= rec.best.energy_j,
+            "latency-only baseline ({baseline} J) cannot beat the energy-aware pick ({} J)",
+            rec.best.energy_j
+        );
+        // It is the energy of the latency-minimal measured kernel.
+        let fastest = rec
+            .measured
+            .iter()
+            .min_by(|a, b| a.latency_s.partial_cmp(&b.latency_s).unwrap())
+            .unwrap();
+        assert_eq!(baseline, fastest.energy_j);
+
+        // Pre-ledger records (no field) still parse — as unattributed.
+        let mut v = rec.to_json();
+        if let Json::Obj(m) = &mut v {
+            m.remove("baseline_energy_j");
+        }
+        let old = TuningRecord::from_json(&v).unwrap();
+        assert_eq!(old.baseline_energy_j, None);
+        assert_eq!(old.best, rec.best, "kernel data intact without a baseline");
     }
 
     #[test]

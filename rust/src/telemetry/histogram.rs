@@ -34,6 +34,7 @@ pub struct LogHistogram {
     sum: f64,
     min: f64,
     max: f64,
+    invalid: u64,
 }
 
 impl Default for LogHistogram {
@@ -44,6 +45,7 @@ impl Default for LogHistogram {
             sum: 0.0,
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
+            invalid: 0,
         }
     }
 }
@@ -72,8 +74,17 @@ impl LogHistogram {
     }
 
     /// Record one duration (seconds). O(1), allocation-free.
+    /// Non-finite or non-positive values still clamp into bucket 0 so
+    /// `count` stays an honest sample count, but they are tallied in
+    /// [`Self::invalid`] — a NaN-producing measurement bug surfaces as
+    /// a counter instead of hiding in the smallest bucket.
     pub fn record(&mut self, v: f64) {
-        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        let v = if v.is_finite() && v > 0.0 {
+            v
+        } else {
+            self.invalid += 1;
+            0.0
+        };
         self.buckets[bucket_of(v)] += 1;
         self.count += 1;
         self.sum += v;
@@ -94,6 +105,7 @@ impl LogHistogram {
         }
         self.count += other.count;
         self.sum += other.sum;
+        self.invalid += other.invalid;
         if other.min < self.min {
             self.min = other.min;
         }
@@ -112,6 +124,12 @@ impl LogHistogram {
 
     pub fn is_empty(&self) -> bool {
         self.count == 0
+    }
+
+    /// How many recorded samples were non-finite or non-positive
+    /// (clamped into bucket 0).
+    pub fn invalid(&self) -> u64 {
+        self.invalid
     }
 
     /// Smallest recorded value (0 when empty).
@@ -166,6 +184,29 @@ impl LogHistogram {
         self.max
     }
 
+    /// Samples recorded since `earlier` was snapshotted — the fast
+    /// window behind the `health` op's burn-rate evaluation. Bucket and
+    /// sample counts subtract exactly (saturating, so a restarted or
+    /// unrelated snapshot degrades to `self` instead of underflowing);
+    /// `min`/`max` are copied from `self` as a documented approximation
+    /// since extremes cannot be un-merged. Quantiles of the delta are
+    /// exact to the usual one-bucket width.
+    pub fn delta(&self, earlier: &LogHistogram) -> LogHistogram {
+        let mut buckets = [0u64; N_BUCKETS];
+        for (i, b) in buckets.iter_mut().enumerate() {
+            *b = self.buckets[i].saturating_sub(earlier.buckets[i]);
+        }
+        let count = self.count.saturating_sub(earlier.count);
+        LogHistogram {
+            buckets,
+            count,
+            sum: (self.sum - earlier.sum).max(0.0),
+            min: if count > 0 { self.min } else { f64::INFINITY },
+            max: if count > 0 { self.max } else { f64::NEG_INFINITY },
+            invalid: self.invalid.saturating_sub(earlier.invalid),
+        }
+    }
+
     /// Wire encoding: counts keyed by bucket index, only non-zero
     /// buckets present (sparse — a fresh daemon's histogram is tiny on
     /// the wire).
@@ -177,13 +218,19 @@ impl LogHistogram {
             .filter(|(_, &n)| n > 0)
             .map(|(i, &n)| (i.to_string(), Json::num(n as f64)))
             .collect();
-        Json::obj(vec![
+        let mut fields = vec![
             ("count", Json::num(self.count as f64)),
             ("sum", Json::num(self.sum)),
             ("min", Json::num(self.min())),
             ("max", Json::num(self.max())),
             ("buckets", Json::Obj(sparse)),
-        ])
+        ];
+        // Sparse like the buckets: only present when something was
+        // actually invalid, so healthy frames don't grow.
+        if self.invalid > 0 {
+            fields.push(("invalid", Json::num(self.invalid as f64)));
+        }
+        Json::obj(fields)
     }
 
     /// Decode the wire form. Tolerant: absent fields mean zero/empty,
@@ -215,6 +262,7 @@ impl LogHistogram {
             sum: v.get("sum").and_then(Json::as_f64).unwrap_or(0.0),
             min,
             max,
+            invalid: v.get("invalid").and_then(Json::as_f64).unwrap_or(0.0) as u64,
         }
     }
 }
@@ -245,6 +293,24 @@ mod tests {
         assert_eq!(h.bucket(0), 4);
         assert_eq!(h.count(), 4);
         assert_eq!(h.min(), 0.0);
+        // 0.0, -1.0 and NaN count as invalid; 1e-300 is a legitimate
+        // (if tiny) duration and is not.
+        assert_eq!(h.invalid(), 3);
+        h.record(f64::INFINITY);
+        assert_eq!(h.invalid(), 4);
+    }
+
+    #[test]
+    fn invalid_counter_merges_and_stays_out_of_clean_histograms() {
+        let mut a = LogHistogram::new();
+        a.record(1e-3);
+        assert_eq!(a.invalid(), 0);
+        let mut b = LogHistogram::new();
+        b.record(f64::NAN);
+        b.record(-2.0);
+        a.merge(&b);
+        assert_eq!(a.invalid(), 2);
+        assert_eq!(a.count(), 3);
     }
 
     #[test]
@@ -299,6 +365,33 @@ mod tests {
     }
 
     #[test]
+    fn delta_recovers_the_samples_since_a_snapshot() {
+        let mut h = LogHistogram::new();
+        for v in [1e-3, 2e-3] {
+            h.record(v);
+        }
+        let snap = h.clone();
+        for v in [4e-3, 8e-3, 8e-3] {
+            h.record(v);
+        }
+        h.record(f64::NAN);
+        let d = h.delta(&snap);
+        assert_eq!(d.count(), 4);
+        assert_eq!(d.invalid(), 1);
+        assert!((d.sum() - 0.020).abs() < 1e-12);
+        assert_eq!(d.bucket(bucket_of(8e-3)), 2);
+        assert_eq!(d.bucket(bucket_of(1e-3)), 0, "pre-snapshot samples subtract out");
+        // Nothing new since the snapshot → an empty, inert window.
+        let empty = h.delta(&h.clone());
+        assert!(empty.is_empty());
+        assert_eq!(empty.quantile(99.0), 0.0);
+        // A snapshot from a different (larger) stream saturates instead
+        // of underflowing.
+        let weird = snap.delta(&h);
+        assert_eq!(weird.count(), 0);
+    }
+
+    #[test]
     fn json_roundtrip_is_lossless() {
         let mut h = LogHistogram::new();
         for v in [1e-6, 5e-5, 5e-5, 2e-3, 40.0] {
@@ -309,5 +402,11 @@ mod tests {
         // Empty histogram roundtrips too.
         let empty = LogHistogram::new();
         assert_eq!(LogHistogram::from_json(&empty.to_json()), empty);
+        // The invalid tally survives the wire; absent parses as 0 so
+        // old frames (no `invalid` key) still decode.
+        h.record(f64::NAN);
+        let back = LogHistogram::from_json(&h.to_json());
+        assert_eq!(back, h);
+        assert_eq!(back.invalid(), 1);
     }
 }

@@ -1,0 +1,292 @@
+//! Fleet-wide energy-accounting ledger (ISSUE 8).
+//!
+//! The paper's headline claim is *joules saved*; this ledger is the
+//! serving-time bookkeeping that backs it. Two sides of the account:
+//!
+//! - **saved**: every exact hit credits `baseline_energy_j −
+//!   energy_j` — what the latency-only schedule would have burned
+//!   minus what the energy-aware schedule burns. Records written
+//!   before the baseline existed are **never guessed at**: their hits
+//!   land in the `unattributed` family with 0 J, visible as a count.
+//! - **paid**: every landed search debits the NVML measurement joules
+//!   it spent, so the net (saved − paid) is honest about tuning cost.
+//!
+//! Like [`LogHistogram`](super::LogHistogram), the ledger is a fixed
+//! array of counters: recording is O(1) and allocation-free (the
+//! exact-hit zero-allocation pin covers it), and `merge` is elementwise
+//! addition — a fleet's merged ledger is *exactly* the ledger of the
+//! union of its requests.
+
+use crate::util::Json;
+
+/// GPU axis — mirrors `GpuArch::ALL` order.
+pub const LEDGER_GPUS: [&str; 4] = ["a100", "rtx4090", "p100", "v100"];
+
+/// Workload-family axis. The last slot is the `unattributed` bucket:
+/// hits on records with no persisted baseline (and anything a newer
+/// peer sends that this build doesn't know) land there, never guessed.
+pub const LEDGER_FAMILIES: [&str; 4] = ["mm", "mv", "conv", "unattributed"];
+
+/// Family index of the `unattributed` bucket.
+pub const UNATTRIBUTED: usize = LEDGER_FAMILIES.len() - 1;
+
+const N_GPUS: usize = LEDGER_GPUS.len();
+const N_FAMILIES: usize = LEDGER_FAMILIES.len();
+
+/// Mergeable per-(gpu, workload-family) energy counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyLedger {
+    saved_j: [[f64; N_FAMILIES]; N_GPUS],
+    paid_j: [[f64; N_FAMILIES]; N_GPUS],
+    n_hits: [[u64; N_FAMILIES]; N_GPUS],
+    n_searches: [[u64; N_FAMILIES]; N_GPUS],
+}
+
+impl Default for EnergyLedger {
+    fn default() -> Self {
+        EnergyLedger {
+            saved_j: [[0.0; N_FAMILIES]; N_GPUS],
+            paid_j: [[0.0; N_FAMILIES]; N_GPUS],
+            n_hits: [[0; N_FAMILIES]; N_GPUS],
+            n_searches: [[0; N_FAMILIES]; N_GPUS],
+        }
+    }
+}
+
+/// Index of a GPU name on the ledger's GPU axis. Allocation-free
+/// (short `&str` compares), `None` for names this build doesn't know.
+pub fn ledger_gpu_index(name: &str) -> Option<usize> {
+    LEDGER_GPUS.iter().position(|g| *g == name)
+}
+
+/// Index of a workload family on the family axis; unknown families
+/// fold into `unattributed` rather than being dropped.
+pub fn ledger_family_index(family: &str) -> usize {
+    LEDGER_FAMILIES
+        .iter()
+        .position(|f| *f == family)
+        .unwrap_or(UNATTRIBUTED)
+}
+
+impl EnergyLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Credit one served hit. O(1), allocation-free. `joules` is 0 for
+    /// unattributed hits (`family == UNATTRIBUTED`) — the hit count
+    /// still moves, so baseline-less records are visible, not silent.
+    pub fn record_saved(&mut self, gpu: usize, family: usize, joules: f64) {
+        let joules = if joules.is_finite() && joules > 0.0 { joules } else { 0.0 };
+        self.saved_j[gpu][family] += joules;
+        self.n_hits[gpu][family] += 1;
+    }
+
+    /// Debit one landed search's measurement joules. O(1),
+    /// allocation-free.
+    pub fn record_paid(&mut self, gpu: usize, family: usize, joules: f64) {
+        let joules = if joules.is_finite() && joules > 0.0 { joules } else { 0.0 };
+        self.paid_j[gpu][family] += joules;
+        self.n_searches[gpu][family] += 1;
+    }
+
+    /// Fold another ledger in — elementwise addition, so the merged
+    /// ledger equals the ledger of the union of both request streams
+    /// (associative + commutative, like the histograms).
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        for g in 0..N_GPUS {
+            for f in 0..N_FAMILIES {
+                self.saved_j[g][f] += other.saved_j[g][f];
+                self.paid_j[g][f] += other.paid_j[g][f];
+                self.n_hits[g][f] += other.n_hits[g][f];
+                self.n_searches[g][f] += other.n_searches[g][f];
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_hits.iter().flatten().all(|&n| n == 0)
+            && self.n_searches.iter().flatten().all(|&n| n == 0)
+    }
+
+    pub fn saved_j(&self, gpu: usize, family: usize) -> f64 {
+        self.saved_j[gpu][family]
+    }
+
+    pub fn paid_j(&self, gpu: usize, family: usize) -> f64 {
+        self.paid_j[gpu][family]
+    }
+
+    pub fn n_hits(&self, gpu: usize, family: usize) -> u64 {
+        self.n_hits[gpu][family]
+    }
+
+    pub fn n_searches(&self, gpu: usize, family: usize) -> u64 {
+        self.n_searches[gpu][family]
+    }
+
+    /// Total joules credited across every cell.
+    pub fn total_saved_j(&self) -> f64 {
+        self.saved_j.iter().flatten().sum()
+    }
+
+    /// Total measurement joules debited across every cell.
+    pub fn total_paid_j(&self) -> f64 {
+        self.paid_j.iter().flatten().sum()
+    }
+
+    /// Served hits whose record carried no baseline (credited 0 J).
+    pub fn total_unattributed(&self) -> u64 {
+        self.n_hits.iter().map(|row| row[UNATTRIBUTED]).sum()
+    }
+
+    /// Visit every non-empty cell as `(gpu, family)` indices — the
+    /// iteration order (gpu-major, then family) is what the Prometheus
+    /// exposition and the bench block rely on.
+    pub fn cells(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        (0..N_GPUS).flat_map(move |g| (0..N_FAMILIES).map(move |f| (g, f))).filter(
+            move |&(g, f)| {
+                self.n_hits[g][f] > 0
+                    || self.n_searches[g][f] > 0
+                    || self.saved_j[g][f] != 0.0
+                    || self.paid_j[g][f] != 0.0
+            },
+        )
+    }
+
+    /// Wire encoding: sparse map keyed `"<gpu>/<family>"`, only
+    /// non-empty cells present — an idle daemon's ledger costs nothing
+    /// on the wire, and an absent field parses back as empty.
+    pub fn to_json(&self) -> Json {
+        let cells: std::collections::BTreeMap<String, Json> = self
+            .cells()
+            .map(|(g, f)| {
+                let key = format!("{}/{}", LEDGER_GPUS[g], LEDGER_FAMILIES[f]);
+                let cell = Json::obj(vec![
+                    ("saved_j", Json::num(self.saved_j[g][f])),
+                    ("paid_j", Json::num(self.paid_j[g][f])),
+                    ("n_hits", Json::num(self.n_hits[g][f] as f64)),
+                    ("n_searches", Json::num(self.n_searches[g][f] as f64)),
+                ]);
+                (key, cell)
+            })
+            .collect();
+        Json::Obj(cells)
+    }
+
+    /// Decode the wire form. Tolerant: unknown GPUs are dropped,
+    /// unknown families fold into `unattributed`, absent fields are 0.
+    pub fn from_json(v: &Json) -> EnergyLedger {
+        let mut ledger = EnergyLedger::default();
+        let Json::Obj(cells) = v else {
+            return ledger;
+        };
+        for (key, cell) in cells {
+            let Some((gpu_name, family_name)) = key.split_once('/') else {
+                continue;
+            };
+            let Some(g) = ledger_gpu_index(gpu_name) else {
+                continue;
+            };
+            let f = ledger_family_index(family_name);
+            let num = |name: &str| cell.get(name).and_then(Json::as_f64).unwrap_or(0.0);
+            ledger.saved_j[g][f] += num("saved_j");
+            ledger.paid_j[g][f] += num("paid_j");
+            ledger.n_hits[g][f] += num("n_hits") as u64;
+            ledger.n_searches[g][f] += num("n_searches") as u64;
+        }
+        ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axes_match_the_arch_and_family_enums() {
+        for (i, arch) in crate::config::GpuArch::ALL.iter().enumerate() {
+            assert_eq!(LEDGER_GPUS[i], arch.name());
+            assert_eq!(ledger_gpu_index(arch.name()), Some(i));
+        }
+        assert_eq!(ledger_gpu_index("tpu"), None);
+        assert_eq!(ledger_family_index("mm"), 0);
+        assert_eq!(ledger_family_index("conv"), 2);
+        assert_eq!(ledger_family_index("unattributed"), UNATTRIBUTED);
+        assert_eq!(ledger_family_index("something_new"), UNATTRIBUTED);
+    }
+
+    #[test]
+    fn saved_and_paid_accumulate_per_cell() {
+        let mut l = EnergyLedger::new();
+        l.record_saved(0, 0, 1.5);
+        l.record_saved(0, 0, 0.5);
+        l.record_saved(1, 2, 3.0);
+        l.record_paid(0, 0, 10.0);
+        assert_eq!(l.saved_j(0, 0), 2.0);
+        assert_eq!(l.n_hits(0, 0), 2);
+        assert_eq!(l.saved_j(1, 2), 3.0);
+        assert_eq!(l.paid_j(0, 0), 10.0);
+        assert_eq!(l.n_searches(0, 0), 1);
+        assert_eq!(l.total_saved_j(), 5.0);
+        assert_eq!(l.total_paid_j(), 10.0);
+        assert!(!l.is_empty());
+    }
+
+    #[test]
+    fn unattributed_hits_count_but_credit_nothing() {
+        let mut l = EnergyLedger::new();
+        l.record_saved(2, UNATTRIBUTED, 0.0);
+        // Negative/NaN credits clamp to 0 instead of corrupting sums.
+        l.record_saved(2, UNATTRIBUTED, -4.0);
+        l.record_saved(2, UNATTRIBUTED, f64::NAN);
+        assert_eq!(l.total_saved_j(), 0.0);
+        assert_eq!(l.total_unattributed(), 3);
+    }
+
+    #[test]
+    fn merge_equals_ledger_of_the_union() {
+        let (mut a, mut b, mut union) =
+            (EnergyLedger::new(), EnergyLedger::new(), EnergyLedger::new());
+        for (g, f, j) in [(0, 0, 1.0), (0, 1, 2.0), (3, 2, 0.25)] {
+            a.record_saved(g, f, j);
+            union.record_saved(g, f, j);
+        }
+        for (g, f, j) in [(0, 0, 4.0), (2, UNATTRIBUTED, 0.0)] {
+            b.record_saved(g, f, j);
+            union.record_saved(g, f, j);
+        }
+        a.record_paid(0, 0, 7.0);
+        union.record_paid(0, 0, 7.0);
+        b.record_paid(1, 1, 3.0);
+        union.record_paid(1, 1, 3.0);
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged, union);
+        let mut other_order = b;
+        other_order.merge(&a);
+        assert_eq!(other_order, union);
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless_and_sparse() {
+        let mut l = EnergyLedger::new();
+        l.record_saved(0, 0, 1.25);
+        l.record_paid(3, 1, 0.5);
+        l.record_saved(1, UNATTRIBUTED, 0.0);
+        let j = l.to_json();
+        if let Json::Obj(cells) = &j {
+            assert_eq!(cells.len(), 3, "only non-empty cells on the wire: {j}");
+            assert!(cells.contains_key("a100/mm"));
+            assert!(cells.contains_key("v100/mv"));
+            assert!(cells.contains_key("rtx4090/unattributed"));
+        } else {
+            panic!("ledger encodes as an object: {j}");
+        }
+        assert_eq!(EnergyLedger::from_json(&j), l);
+        // Empty ledger: empty object, roundtrips, absent parses empty.
+        let empty = EnergyLedger::new();
+        assert_eq!(EnergyLedger::from_json(&empty.to_json()), empty);
+        assert_eq!(EnergyLedger::from_json(&Json::Null), empty);
+    }
+}

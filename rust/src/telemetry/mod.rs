@@ -11,6 +11,10 @@
 //! - [`Stage`] / [`StageTrace`]: the daemon hot-path stage taxonomy
 //!   (parse, shard read, snapshot lookup, claim I/O, enqueue, reply
 //!   write) and a stack-only per-request accumulator.
+//! - [`EnergyLedger`] (ISSUE 8): mergeable per-(gpu, workload-family)
+//!   counters of joules saved vs the latency-only baseline and
+//!   measurement joules paid — the serving-time account behind the
+//!   paper's energy-savings claim.
 //! - [`TraceId`] / [`Span`] / [`Trace`] / [`TraceLog`] (ISSUE 7):
 //!   span-based request tracing — a `Copy` trace id that crosses
 //!   daemon boundaries through the notify channel, and a bounded
@@ -18,9 +22,14 @@
 //!   always retained).
 
 mod histogram;
+mod ledger;
 mod stages;
 mod trace;
 
 pub use histogram::{bucket_lower, LogHistogram, MIN_LOG2, N_BUCKETS};
+pub use ledger::{
+    ledger_family_index, ledger_gpu_index, EnergyLedger, LEDGER_FAMILIES, LEDGER_GPUS,
+    UNATTRIBUTED,
+};
 pub use stages::{Stage, StageTrace, N_STAGES};
 pub use trace::{Span, Trace, TraceId, TraceLog, TRACE_KEEP_SLOWEST, TRACE_LOG_CAP};

@@ -8,11 +8,16 @@
 
 use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
 use ecokernel::fleet::InflightTable;
-use ecokernel::serve::{merged_metrics, Daemon, DaemonConfig, DaemonHandle, ServeAddr, ServeClient};
+use ecokernel::serve::{
+    merged_health, merged_metrics, Daemon, DaemonConfig, DaemonHandle, HealthStatus, ServeAddr,
+    ServeClient,
+};
 use ecokernel::store::lease::Lease;
 use ecokernel::store::sharded::{shard_lease_name, LEASES_DIR};
 use ecokernel::store::{config_fingerprint, serve_key, ShardedStore, TuningRecord};
-use ecokernel::telemetry::N_BUCKETS;
+use ecokernel::telemetry::{
+    ledger_family_index, ledger_gpu_index, LEDGER_FAMILIES, LEDGER_GPUS, N_BUCKETS,
+};
 use ecokernel::workload::{suites, Workload};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -685,6 +690,217 @@ fn duplicated_miss_yields_one_trace_across_the_fleet() {
         client.shutdown().unwrap();
         handle.join().unwrap();
     }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The energy-accounting pin (ISSUE 8): two TCP daemons on one store
+/// — A pays the only search's measurement joules, both serve
+/// attributed hits, and the fleet-merged ledger is the elementwise
+/// union of the members' cells, riding the Prometheus exposition with
+/// stable `gpu`/`family` labels.
+#[test]
+fn fleet_energy_ledger_merges_as_union_over_tcp() {
+    let dir = tmp_dir("ledger_union");
+    // Freeze the background refresh loops so the only ledger mutations
+    // are this test's requests (same setup as the metrics-merge pin).
+    let mut search = quick_search(51);
+    search.fleet.notify_interval_ms = 3_600_000;
+    search.fleet.poll_interval_ms = 3_600_000;
+    let a = spawn_on(ServeAddr::Tcp("127.0.0.1:0".to_string()), &dir, search.clone());
+    let b = spawn_on(ServeAddr::Tcp("127.0.0.1:0".to_string()), &dir, search);
+    let mut ca = ServeClient::connect(&a.addr).unwrap();
+    let mut cb = ServeClient::connect(&b.addr).unwrap();
+
+    // A pays the fleet's one search; both daemons then serve hits off
+    // the landed record (B ingests it via the on-miss refresh).
+    assert!(ca.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    ca.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    for _ in 0..3 {
+        assert!(ca.get_kernel(suites::MM1, None, None).unwrap().hit);
+    }
+    assert!(cb.get_kernel_wait(suites::MM1, None, None, DRAIN_TIMEOUT).unwrap().hit);
+    assert!(cb.get_kernel(suites::MM1, None, None).unwrap().hit);
+
+    let ma = ca.metrics().unwrap();
+    let mb = cb.metrics().unwrap();
+    let (gpu, mm) = (ledger_gpu_index("a100").unwrap(), ledger_family_index("mm"));
+
+    // The searching daemon debited real measurement joules into the
+    // record's cell; the peer never searched. Every hit was served off
+    // a freshly written record, which carries its baseline — so every
+    // hit landed ATTRIBUTED, none in the unattributed column.
+    assert_eq!(ma.energy.n_searches(gpu, mm), 1);
+    assert!(ma.energy.paid_j(gpu, mm) > 0.0, "{}", ma.energy.paid_j(gpu, mm));
+    assert_eq!(ma.energy.n_hits(gpu, mm), 3);
+    assert_eq!(mb.energy.n_searches(gpu, mm), 0, "B never searched");
+    assert!(mb.energy.n_hits(gpu, mm) >= 2, "{}", mb.energy.n_hits(gpu, mm));
+    assert_eq!(ma.energy.total_unattributed() + mb.energy.total_unattributed(), 0);
+    assert!(ma.energy.saved_j(gpu, mm) >= 0.0);
+
+    // The fleet merge equals the elementwise union of both ledgers,
+    // cell by cell across the full gpu x family grid.
+    let fm = merged_metrics(&[a.addr.clone(), b.addr.clone()]).unwrap();
+    assert!(fm.errors.is_empty(), "{:?}", fm.errors);
+    let merged = &fm.merged.energy;
+    for g in 0..LEDGER_GPUS.len() {
+        for f in 0..LEDGER_FAMILIES.len() {
+            assert_eq!(
+                merged.n_hits(g, f),
+                ma.energy.n_hits(g, f) + mb.energy.n_hits(g, f),
+                "n_hits[{g}][{f}]"
+            );
+            assert_eq!(
+                merged.n_searches(g, f),
+                ma.energy.n_searches(g, f) + mb.energy.n_searches(g, f),
+                "n_searches[{g}][{f}]"
+            );
+            let saved = ma.energy.saved_j(g, f) + mb.energy.saved_j(g, f);
+            assert!((merged.saved_j(g, f) - saved).abs() < 1e-12, "saved_j[{g}][{f}]");
+            let paid = ma.energy.paid_j(g, f) + mb.energy.paid_j(g, f);
+            assert!((merged.paid_j(g, f) - paid).abs() < 1e-12, "paid_j[{g}][{f}]");
+        }
+    }
+    assert_eq!(merged.cells().collect::<Vec<_>>(), vec![(gpu, mm)], "one populated cell");
+    // Merge commutes, like every other metrics family.
+    let mut expect = ma.clone();
+    expect.merge(&mb);
+    let mut other_order = mb.clone();
+    other_order.merge(&ma);
+    assert_eq!(merged, &expect.energy);
+    assert_eq!(other_order.energy, expect.energy);
+    // And the ledger rides the Prometheus exposition with stable
+    // labels (nothing emitted for empty cells).
+    let prom = fm.merged.to_prometheus();
+    assert!(
+        prom.contains("ecokernel_energy_saved_joules_total{gpu=\"a100\",family=\"mm\"}"),
+        "{prom}"
+    );
+    assert!(
+        prom.contains("ecokernel_energy_paid_joules_total{gpu=\"a100\",family=\"mm\"}"),
+        "{prom}"
+    );
+    assert!(!prom.contains("family=\"unattributed\""), "{prom}");
+
+    for (mut client, handle) in [(ca, a), (cb, b)] {
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Fleet health (ISSUE 8): a healthy singleton merges to `ok` with
+/// every `[slo]` target present; adding a dead address keeps the merge
+/// alive but flips the synthesized `fleet_reachability` target to
+/// critical, NAMING the unreachable socket.
+#[test]
+fn merged_health_survives_a_dead_daemon_and_names_it() {
+    let dir = tmp_dir("health_partial");
+    let a = spawn_on(ServeAddr::Unix(dir.join("a.sock")), &dir, quick_search(53));
+    let mut ca = ServeClient::connect(&a.addr).unwrap();
+    assert!(ca.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    ca.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+
+    // Healthy fleet-of-one: the default [slo] targets are lenient and
+    // the windows are below min_window, so everything reports ok.
+    let solo = merged_health(&[a.addr.clone()]).unwrap();
+    assert!(solo.errors.is_empty(), "{:?}", solo.errors);
+    assert_eq!(solo.merged.status, HealthStatus::Ok, "{:?}", solo.merged);
+    let names: Vec<&str> = solo.merged.targets.iter().map(|t| t.name.as_str()).collect();
+    for expected in
+        ["p99_reply_wall_s", "hit_rate", "relerr_steady", "backlog", "fleet_reachability"]
+    {
+        assert!(names.contains(&expected), "missing target '{expected}' in {names:?}");
+    }
+
+    // One live daemon + one dead address: the merge survives, goes
+    // critical, and the reachability reason names the dead socket.
+    let dead = ServeAddr::Unix(dir.join("dead.sock"));
+    let fh = merged_health(&[a.addr.clone(), dead.clone()]).unwrap();
+    assert_eq!(fh.errors.len(), 1, "{:?}", fh.errors);
+    assert_eq!(fh.merged.status, HealthStatus::Critical);
+    let reach = fh.merged.targets.iter().find(|t| t.name == "fleet_reachability").unwrap();
+    assert_eq!(reach.status, HealthStatus::Critical);
+    assert!(reach.reason.contains("dead.sock"), "{}", reach.reason);
+    // The survivor's own verdicts stay visible next to the page.
+    let hit_rate = fh.merged.targets.iter().find(|t| t.name == "hit_rate").unwrap();
+    assert_eq!(hit_rate.status, HealthStatus::Ok);
+
+    assert!(merged_health(&[dead]).is_err(), "a fleet with NO reachable daemon is an error");
+
+    ca.shutdown().unwrap();
+    a.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The drift watchdog end to end (ISSUE 8): with the steady-regime
+/// relerr ceiling set below what the simulated measurements produce,
+/// the watchdog flags the model as drifting, re-searches the hottest
+/// stored key within its per-interval budget, and reports all of it
+/// through the `health` op.
+#[test]
+fn drift_watchdog_researches_hottest_key_within_budget() {
+    let dir = tmp_dir("drift");
+    let mut search = quick_search(57);
+    // Any real relerr sample breaches this ceiling, and one sample is
+    // window enough — the first watchdog tick after the seed search
+    // lands must see the model as drifting.
+    search.slo.relerr_ceiling = 1e-9;
+    search.slo.min_window = 1;
+    search.slo.drift_interval_ms = 300;
+    search.slo.drift_budget = 1;
+    let t0 = std::time::Instant::now();
+    let handle = spawn_on(ServeAddr::Unix(dir.join("eco.sock")), &dir, search);
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
+
+    // Seed: one miss pays a search, whose rounds record the steady
+    // relerr samples the watchdog judges; the request also heats MM1
+    // in the admission sketch, making it the re-search candidate.
+    assert!(client.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+
+    // The watchdog notices the breach and admits a re-search.
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let health = loop {
+        let h = client.health().unwrap();
+        if h.drift.n_drift_researches >= 1 {
+            break h;
+        }
+        assert!(std::time::Instant::now() < deadline, "watchdog never re-searched: {h:?}");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(health.drift.drifting, "{:?}", health.drift);
+    assert_eq!(health.drift.budget, 1);
+    assert!(health.drift.relerr_steady_mean > 1e-9, "{:?}", health.drift);
+    let relerr = health.targets.iter().find(|t| t.name == "relerr_steady").unwrap();
+    assert!(
+        matches!(relerr.status, HealthStatus::Warn | HealthStatus::Critical),
+        "a drifting model must not report ok: {relerr:?}"
+    );
+    let worst = health.targets.iter().fold(HealthStatus::Ok, |acc, t| acc.worst(t.status));
+    assert_eq!(health.status, worst, "overall status is the worst per-target verdict");
+
+    // Budget: at most one admission per elapsed watchdog interval
+    // (the single stored key also serializes re-searches through the
+    // pending table, so this bound is far from tight).
+    let intervals = t0.elapsed().as_millis() as u64 / 300 + 1;
+    assert!(
+        health.drift.n_drift_researches <= intervals,
+        "{} re-searches in {} intervals",
+        health.drift.n_drift_researches,
+        intervals
+    );
+    // The same counter rides the metrics op for dashboards.
+    assert!(client.metrics().unwrap().counter("n_drift_researches") >= 1);
+
+    // The re-searched record supersedes in place and keeps serving.
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    let hit = client.get_kernel(suites::MM1, None, None).unwrap();
+    assert!(hit.hit, "re-search kept the key servable");
+    assert_eq!(client.stats().unwrap().n_records, 1, "superseded, not duplicated");
+
+    client.shutdown().unwrap();
+    handle.join().unwrap();
     let _ = std::fs::remove_dir_all(&dir);
 }
 

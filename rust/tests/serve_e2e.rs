@@ -7,8 +7,10 @@
 
 use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
 use ecokernel::serve::{
-    error_code, Daemon, DaemonConfig, DaemonHandle, ServeAddr, ServeClient, ServeSource,
+    error_code, Daemon, DaemonConfig, DaemonHandle, HealthStatus, ServeAddr, ServeClient,
+    ServeSource, HEALTH_VERSION,
 };
+use ecokernel::telemetry::{ledger_family_index, ledger_gpu_index};
 use ecokernel::util::Json;
 use ecokernel::workload::suites;
 use std::path::{Path, PathBuf};
@@ -202,6 +204,12 @@ fn protocol_errors_over_the_socket() {
         (r#"{"v":99,"op":"stats","id":"x"}"#, error_code::VERSION_MISMATCH),
         (r#"{"v":1,"op":"get_kernel","id":"x","workload":"MM99"}"#, error_code::UNKNOWN_WORKLOAD),
         (r#"{"v":1,"op":"frobnicate","id":"x"}"#, error_code::BAD_REQUEST),
+        // A present-but-unparseable trace id is refused loudly instead
+        // of silently minting a fresh id (orphaning the correlation).
+        (
+            r#"{"v":1,"op":"get_kernel","id":"x","workload":"MM1","trace":"nothex!"}"#,
+            error_code::BAD_REQUEST,
+        ),
     ];
     for (line, expect) in cases {
         let reply = client.roundtrip_raw(line).unwrap();
@@ -209,6 +217,14 @@ fn protocol_errors_over_the_socket() {
         assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(false), "{line}");
         let code = v.get("error").and_then(|e| e.get("code")).and_then(|c| c.as_str());
         assert_eq!(code, Some(expect), "{line}");
+        if line.contains("nothex!") {
+            let msg = v
+                .get("error")
+                .and_then(|e| e.get("message"))
+                .and_then(|m| m.as_str())
+                .unwrap_or_default();
+            assert!(msg.contains("trace"), "the error names the bad field: {reply}");
+        }
     }
     // The connection still serves valid requests afterwards.
     assert!(client.stats().is_ok());
@@ -297,6 +313,10 @@ fn serving_metrics_separate_served_from_searched() {
     // scan) dominates p99.
     assert!(s.p50_reply_s > 0.0);
     assert!(s.p99_reply_s >= s.p50_reply_s);
+    // Operational identity (ISSUE 8): a live daemon reports a real
+    // uptime and names the build serving the socket.
+    assert!(s.uptime_s > 0.0, "{}", s.uptime_s);
+    assert!(s.build_info.starts_with("ecokernel "), "{}", s.build_info);
 
     stop(handle, &dir);
 }
@@ -353,6 +373,16 @@ fn metrics_op_reports_stage_histograms() {
         m.model.keys().collect::<Vec<_>>()
     );
 
+    // The energy ledger rode along (ISSUE 8): the search debited real
+    // measurement joules, and all 4 hits were credited to the a100/mm
+    // cell — attributed, because the fresh record carries a baseline.
+    let (gpu, mm) = (ledger_gpu_index("a100").unwrap(), ledger_family_index("mm"));
+    assert_eq!(m.energy.n_hits(gpu, mm), 4);
+    assert_eq!(m.energy.n_searches(gpu, mm), 1);
+    assert!(m.energy.paid_j(gpu, mm) > 0.0, "{}", m.energy.paid_j(gpu, mm));
+    assert!(m.energy.saved_j(gpu, mm) >= 0.0);
+    assert_eq!(m.energy.total_unattributed(), 0);
+
     // The same snapshot as Prometheus text.
     let prom = m.to_prometheus();
     assert!(prom.contains("# TYPE ecokernel_requests_total counter"), "{prom}");
@@ -362,6 +392,51 @@ fn metrics_op_reports_stage_histograms() {
     assert!(prom.contains("ecokernel_stage_seconds_count{stage=\"parse\"} 5"), "{prom}");
     assert!(prom.contains("# TYPE ecokernel_model_dynamic_k histogram"), "{prom}");
     assert!(prom.contains("regime="), "{prom}");
+    assert!(
+        prom.contains("ecokernel_energy_saved_joules_total{gpu=\"a100\",family=\"mm\"}"),
+        "{prom}"
+    );
+
+    stop(handle, &dir);
+}
+
+/// The `health` op end to end on one daemon: the raw wire shape is
+/// versioned and carries every `[slo]` target, and the typed client
+/// agrees with it.
+#[test]
+fn health_op_reports_slo_targets_over_the_socket() {
+    let (handle, dir) = spawn_daemon("healthop", |_| {});
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
+
+    client.get_kernel(suites::MM1, None, None).unwrap();
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+
+    // Raw frame: versioned, ok, one entry per [slo] target.
+    let reply = client.roundtrip_raw(r#"{"v":1,"op":"health","id":"h1"}"#).unwrap();
+    let v = Json::parse(&reply).unwrap();
+    assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true), "{reply}");
+    assert_eq!(v.get("op").and_then(|x| x.as_str()), Some("health"), "{reply}");
+    assert_eq!(
+        v.get("health_v").and_then(|x| x.as_f64()),
+        Some(HEALTH_VERSION as f64),
+        "{reply}"
+    );
+    let targets = v.get("targets").and_then(|t| t.as_arr()).unwrap();
+    let names: Vec<&str> =
+        targets.iter().filter_map(|t| t.get("name").and_then(|n| n.as_str())).collect();
+    assert_eq!(names, ["p99_reply_wall_s", "hit_rate", "relerr_steady", "backlog"], "{reply}");
+    assert!(v.get("drift").and_then(|d| d.get("budget")).is_some(), "{reply}");
+
+    // Typed client: a barely-used daemon under default [slo] targets
+    // is healthy (windows below min_window never breach), each target
+    // says WHY it holds, and the reply parses losslessly.
+    let h = client.health().unwrap();
+    assert_eq!(h.status, HealthStatus::Ok, "{h:?}");
+    assert_eq!(h.targets.len(), 4);
+    assert!(h.targets.iter().all(|t| !t.reason.is_empty()), "{h:?}");
+    assert!(!h.drift.drifting, "default ceiling (0.35) holds: {:?}", h.drift);
+    assert_eq!(h.drift.n_drift_researches, 0);
 
     stop(handle, &dir);
 }

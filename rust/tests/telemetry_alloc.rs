@@ -12,7 +12,9 @@
 //! per-thread, so no other test can race it.
 
 use ecokernel::serve::ServeMetrics;
-use ecokernel::telemetry::{LogHistogram, Stage, StageTrace, TraceId};
+use ecokernel::telemetry::{
+    ledger_family_index, ledger_gpu_index, LogHistogram, Stage, StageTrace, TraceId, UNATTRIBUTED,
+};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 use std::hint::black_box;
@@ -66,6 +68,8 @@ fn hit_path_telemetry_performs_zero_heap_allocations() {
     black_box(m.p99_reply_s());
     black_box(TraceId::mint());
     black_box(TraceId::from_hex("feedc0de"));
+    m.ledger.record_saved(0, 0, 1e-3);
+    m.ledger.record_paid(0, 0, 1e-3);
 
     let before = allocations();
     for i in 0..10_000u64 {
@@ -89,6 +93,16 @@ fn hit_path_telemetry_performs_zero_heap_allocations() {
         let minted = black_box(TraceId::mint());
         black_box(wire == minted);
         black_box(wire.min(minted));
+        // Energy-ledger accounting on the same hit: label lookups are
+        // &str compares over static tables, recording is fixed-array
+        // adds. An unattributed hit (no stored baseline) stays free
+        // too — it must never fall back to a String key.
+        let gpu = black_box(ledger_gpu_index(black_box("a100"))).unwrap();
+        let family = black_box(ledger_family_index(black_box("mm")));
+        m.ledger.record_saved(gpu, family, 2.5e-3 + i as f64 * 1e-12);
+        m.ledger.record_saved(gpu, UNATTRIBUTED, 0.0);
+        m.ledger.record_paid(gpu, family, 7.0e-2);
+        black_box(m.ledger.total_saved_j());
     }
     // Fleet aggregation primitives are allocation-free too: clone and
     // merge are fixed-size array copies/adds.
@@ -100,6 +114,9 @@ fn hit_path_telemetry_performs_zero_heap_allocations() {
     let after = allocations();
 
     assert_eq!(m.n_requests, 10_001);
+    assert_eq!(m.ledger.n_hits(0, 0), 10_001);
+    assert_eq!(m.ledger.n_hits(0, UNATTRIBUTED), 10_000);
+    assert_eq!(m.ledger.n_searches(0, 0), 10_001);
     assert_eq!(
         after - before,
         0,
