@@ -1,0 +1,368 @@
+//! Static schedule analysis: zero-measurement energy priors.
+//!
+//! Walks a legalized [`Schedule`] + [`Workload`] and derives a
+//! deterministic [`StaticProfile`] — modeled memory traffic per level,
+//! arithmetic intensity, occupancy geometry, tile-reuse factor, a
+//! predicted-stall fraction, and a **closed-form** static energy /
+//! latency estimate per [`GpuSpec`]. No simulator run, no NVML
+//! measurement: everything here is the arithmetic a compiler can do
+//! from the schedule alone (FlipFlop-style static analysis), which is
+//! why the serving daemon can answer never-seen keys from it at wire
+//! speed and the cost model can use it as a prior before it has a
+//! single sample (DSO-style static+dynamic fusion).
+//!
+//! The pass deliberately reuses only the *static* substrates of the
+//! simulator — [`MemoryTraffic::compute`] (blocked-GEMM byte counting)
+//! and [`occupancy`] (resource-limit arithmetic) — and never the
+//! latency/power models themselves (`sim::latency::latency`,
+//! `sim::power::energy`): no ILP pipeline model, no TDP throttling, no
+//! DVFS, no thermal state. The estimate is a roofline, not a
+//! simulation, and it is **structurally monotone** in modeled DRAM
+//! traffic (pinned by a property test below).
+//!
+//! Three consumers:
+//!
+//! 1. [`crate::features`] folds four profile-derived features into the
+//!    GBDT input vector (geometry/bandwidth only — never the energy
+//!    coefficients, so the "features do not leak energy" invariant
+//!    holds);
+//! 2. [`crate::costmodel::EnergyCostModel::predict_energy_batch_with_prior`]
+//!    falls back to `static_energy_j` when it has zero samples, and
+//!    [`crate::store::transfer`] rescales neighbor samples by the
+//!    static-energy ratio instead of the cruder MAC ratio;
+//! 3. the serve daemon's **static tier** answers a never-seen key with
+//!    the best-of-N statically-ranked legal schedule ([`rank_static`])
+//!    while the real search runs in the background; the `analyze` CLI
+//!    subcommand dumps the same profile as JSON for inspection and CI
+//!    golden pins.
+
+use crate::config::GpuSpec;
+use crate::schedule::space::ScheduleSpace;
+use crate::schedule::Schedule;
+use crate::sim::latency::int_ops;
+use crate::sim::{occupancy, MemoryTraffic, Occupancy};
+use crate::util::Json;
+use crate::workload::Workload;
+
+/// Enumeration cap for [`rank_static`]: bounds the static ranking to a
+/// deterministic prefix of the schedule space so the serving daemon's
+/// miss path stays at wire speed (the full space can be ~10^4).
+pub const STATIC_RANK_CAP: usize = 512;
+
+/// Deterministic zero-measurement profile of one (workload, schedule)
+/// pair on one GPU spec. All fields are finite for legal schedules.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StaticProfile {
+    /// Floating-point operations (2 per MAC, GEMM view).
+    pub flops: f64,
+    /// Modeled integer/address ops (loop + addressing overhead).
+    pub int_ops: f64,
+    /// Modeled DRAM bytes (compulsory + L2-spill re-reads + split-k).
+    pub dram_bytes: f64,
+    /// Modeled L2 bytes (all global traffic passes L2).
+    pub l2_bytes: f64,
+    /// Modeled shared-memory bytes (staging stores + fragment loads).
+    pub shared_bytes: f64,
+    /// Modeled register-file bytes (operand reads + accumulator RMW).
+    pub reg_bytes: f64,
+    /// FLOPs per DRAM byte — the roofline x-axis.
+    pub arithmetic_intensity: f64,
+    /// FLOPs per global element loaded: how much arithmetic each
+    /// global load feeds (bigger tiles => more reuse, the §8 lever).
+    pub tile_reuse_factor: f64,
+    /// Achieved occupancy (resident threads / max threads per SM).
+    pub occupancy: f64,
+    /// Fraction of SMs with at least one block at launch.
+    pub active_sm_frac: f64,
+    /// Scheduling waves of the launch grid.
+    pub waves: f64,
+    /// Wave-schedule efficiency (1.0 = all slots busy all waves).
+    pub tail_efficiency: f64,
+    /// Predicted fraction of time stalled on memory:
+    /// `mem / (compute + mem)` on the roofline terms, in `[0, 1]`.
+    pub predicted_stall_frac: f64,
+    /// Closed-form latency estimate: roofline max of compute time and
+    /// the slowest memory level, plus launch latency. No ILP model, no
+    /// throttling.
+    pub static_latency_s: f64,
+    /// Closed-form energy estimate: per-byte transfer energy per level
+    /// + per-op compute energy + transaction issue energy + launch
+    /// energy + background (constant + utilization-scaled static)
+    /// power over the static latency. Strictly increasing in
+    /// `dram_bytes`.
+    pub static_energy_j: f64,
+    /// `static_energy_j / static_latency_s`.
+    pub static_avg_power_w: f64,
+}
+
+impl StaticProfile {
+    /// JSON encoding (sorted keys — byte-stable for golden pins).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("flops", Json::num(self.flops)),
+            ("int_ops", Json::num(self.int_ops)),
+            ("dram_bytes", Json::num(self.dram_bytes)),
+            ("l2_bytes", Json::num(self.l2_bytes)),
+            ("shared_bytes", Json::num(self.shared_bytes)),
+            ("reg_bytes", Json::num(self.reg_bytes)),
+            ("arithmetic_intensity", Json::num(self.arithmetic_intensity)),
+            ("tile_reuse_factor", Json::num(self.tile_reuse_factor)),
+            ("occupancy", Json::num(self.occupancy)),
+            ("active_sm_frac", Json::num(self.active_sm_frac)),
+            ("waves", Json::num(self.waves)),
+            ("tail_efficiency", Json::num(self.tail_efficiency)),
+            ("predicted_stall_frac", Json::num(self.predicted_stall_frac)),
+            ("static_latency_s", Json::num(self.static_latency_s)),
+            ("static_energy_j", Json::num(self.static_energy_j)),
+            ("static_avg_power_w", Json::num(self.static_avg_power_w)),
+        ])
+    }
+}
+
+/// Analyze one (workload, schedule) pair on `spec`.
+pub fn analyze(workload: &Workload, sched: &Schedule, spec: &GpuSpec) -> StaticProfile {
+    let g = workload.gemm_view();
+    let traffic = MemoryTraffic::compute(sched, &g, spec);
+    let occ = occupancy(sched, sched.grid(&g), spec);
+    let flops = 2.0 * g.macs() as f64;
+    let iops = int_ops(sched, &g);
+    profile_from_parts(flops, iops, &traffic, &occ, spec)
+}
+
+/// Assemble the profile from its statically-derived parts. Split out so
+/// the monotonicity property test can vary one traffic term in
+/// isolation.
+fn profile_from_parts(
+    flops: f64,
+    iops: f64,
+    t: &MemoryTraffic,
+    occ: &Occupancy,
+    spec: &GpuSpec,
+) -> StaticProfile {
+    // --- roofline latency -------------------------------------------
+    // Compute time at the achieved-parallelism-derated peak; memory
+    // time is the slowest level at its full bandwidth. Overlap is
+    // modeled as a hard max (perfect overlap) — deliberately simpler
+    // than sim::latency's partial-overlap ILP model.
+    let compute_s = flops / (spec.peak_gflops() * 1e9 * occ.sm_efficiency.max(1e-3));
+    let dram_s = t.dram_bytes / (spec.dram_bw_gbs * 1e9);
+    let l2_s = t.l2_bytes / (spec.l2_bw_gbs * 1e9);
+    let shared_bw = spec.shared_bw_per_sm_gbs * 1e9 * occ.active_sms.max(1) as f64;
+    let shared_s = t.shared_bytes / shared_bw;
+    let mem_s = dram_s.max(l2_s).max(shared_s);
+    let static_latency_s = compute_s.max(mem_s) + spec.launch_latency_us * 1e-6;
+    let predicted_stall_frac =
+        if compute_s + mem_s > 0.0 { (mem_s / (compute_s + mem_s)).clamp(0.0, 1.0) } else { 0.0 };
+
+    // --- closed-form energy -----------------------------------------
+    let transfer_j = (t.dram_bytes * spec.energy_per_dram_byte_pj
+        + t.l2_bytes * spec.energy_per_l2_byte_pj
+        + t.shared_bytes * spec.energy_per_shared_byte_pj
+        + t.reg_bytes * spec.energy_per_reg_byte_pj)
+        * 1e-12;
+    let compute_j = (flops * spec.energy_per_flop_pj + iops * spec.energy_per_intop_pj) * 1e-12;
+    let issue_txn = t.glb_ld_txn + t.glb_st_txn + t.shared_ld_txn + t.shared_st_txn;
+    let issue_j = issue_txn * spec.energy_per_mem_issue_pj * 1e-12;
+    // Background draw: board constant power plus chip static power
+    // scaled between its idle floor and full value by occupancy — idle
+    // SMs still leak, busy SMs leak fully. No thermal slope, no DVFS.
+    let util = spec.static_floor_frac + (1.0 - spec.static_floor_frac) * occ.occupancy;
+    let background_w = spec.constant_power_w + spec.static_power_full_w * util;
+    let static_energy_j = transfer_j
+        + compute_j
+        + issue_j
+        + spec.launch_energy_uj * 1e-6
+        + background_w * static_latency_s;
+
+    StaticProfile {
+        flops,
+        int_ops: iops,
+        dram_bytes: t.dram_bytes,
+        l2_bytes: t.l2_bytes,
+        shared_bytes: t.shared_bytes,
+        reg_bytes: t.reg_bytes,
+        arithmetic_intensity: flops / t.dram_bytes.max(1.0),
+        tile_reuse_factor: flops / t.glb_ld_elems.max(1.0),
+        occupancy: occ.occupancy,
+        active_sm_frac: occ.active_sms as f64 / spec.num_sms as f64,
+        waves: occ.waves as f64,
+        tail_efficiency: occ.tail_efficiency,
+        predicted_stall_frac,
+        static_latency_s,
+        static_energy_j,
+        static_avg_power_w: static_energy_j / static_latency_s.max(1e-12),
+    }
+}
+
+/// Statically rank up to [`STATIC_RANK_CAP`] legal schedules for
+/// `workload` by ascending `static_energy_j` and return the best
+/// `top`. Deterministic: the enumeration order is a fixed grid walk
+/// and the sort is stable, so ties keep enumeration order. Never
+/// empty — falls back to the space's always-legal fallback schedule.
+pub fn rank_static(
+    workload: Workload,
+    spec: &GpuSpec,
+    top: usize,
+) -> Vec<(Schedule, StaticProfile)> {
+    let space = ScheduleSpace::new(workload, spec);
+    let mut ranked: Vec<(Schedule, StaticProfile)> = space
+        .enumerate(STATIC_RANK_CAP)
+        .into_iter()
+        .map(|s| (s, analyze(&workload, &s, spec)))
+        .collect();
+    if ranked.is_empty() {
+        let s = space.fallback();
+        ranked.push((s, analyze(&workload, &s, spec)));
+    }
+    ranked.sort_by(|a, b| {
+        a.1.static_energy_j
+            .partial_cmp(&b.1.static_energy_j)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    ranked.truncate(top.max(1));
+    ranked
+}
+
+/// The single statically-best schedule for `workload` — what the serve
+/// daemon's search-free tier replies with on a never-seen key.
+pub fn best_static(workload: Workload, spec: &GpuSpec) -> (Schedule, StaticProfile) {
+    rank_static(workload, spec, 1).swap_remove(0)
+}
+
+/// Static energy estimates for a batch of schedules — the zero-sample
+/// prior handed to
+/// [`crate::costmodel::EnergyCostModel::predict_energy_batch_with_prior`].
+pub fn static_energy_priors(workload: &Workload, scheds: &[Schedule], spec: &GpuSpec) -> Vec<f64> {
+    scheds.iter().map(|s| analyze(workload, s, spec).static_energy_j).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuArch;
+    use crate::util::Rng;
+    use crate::workload::suites;
+
+    #[test]
+    fn profile_is_bytewise_deterministic() {
+        for arch in GpuArch::ALL {
+            let spec = arch.spec();
+            for (_, w) in suites::all_named() {
+                let s = ScheduleSpace::new(w, &spec).fallback();
+                let a = analyze(&w, &s, &spec).to_json().to_string();
+                let b = analyze(&w, &s, &spec).to_json().to_string();
+                assert_eq!(a, b, "{arch:?}/{w}");
+            }
+        }
+    }
+
+    #[test]
+    fn profile_finite_and_positive_for_all_suites() {
+        let mut rng = Rng::seed_from_u64(23);
+        for arch in [GpuArch::A100, GpuArch::Rtx4090, GpuArch::P100, GpuArch::V100] {
+            let spec = arch.spec();
+            for (_, w) in suites::all_named() {
+                let space = ScheduleSpace::new(w, &spec);
+                for s in space.sample_n(&mut rng, 8) {
+                    let p = analyze(&w, &s, &spec);
+                    assert!(p.static_energy_j > 0.0, "{w}: {p:?}");
+                    assert!(p.static_latency_s > 0.0, "{w}: {p:?}");
+                    assert!(p.static_avg_power_w > 0.0, "{w}: {p:?}");
+                    assert!((0.0..=1.0).contains(&p.predicted_stall_frac), "{w}: {p:?}");
+                    let v = p.to_json();
+                    if let Json::Obj(m) = &v {
+                        for (k, x) in m {
+                            let f = x.as_f64().unwrap();
+                            assert!(f.is_finite(), "{w}: field {k} not finite");
+                        }
+                    } else {
+                        panic!("profile JSON must be an object");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Property test (ISSUE 9): the static energy estimate is monotone
+    /// — in fact strictly increasing — in modeled global-memory
+    /// traffic, holding every other input fixed. Checked across all
+    /// GPU specs, all workload families, and a spread of sampled
+    /// schedules.
+    #[test]
+    fn static_energy_is_monotone_in_dram_traffic() {
+        let mut rng = Rng::seed_from_u64(41);
+        for arch in GpuArch::ALL {
+            let spec = arch.spec();
+            for w in [suites::MM1, suites::MV3, suites::CONV2] {
+                let g = w.gemm_view();
+                let space = ScheduleSpace::new(w, &spec);
+                for s in space.sample_n(&mut rng, 6) {
+                    let base = MemoryTraffic::compute(&s, &g, &spec);
+                    let occ = occupancy(&s, s.grid(&g), &spec);
+                    let flops = 2.0 * g.macs() as f64;
+                    let iops = int_ops(&s, &g);
+                    let mut last = f64::NEG_INFINITY;
+                    for mult in [1.0, 1.5, 2.0, 4.0, 8.0, 16.0] {
+                        let mut t = base;
+                        t.dram_bytes = base.dram_bytes * mult;
+                        let p = profile_from_parts(flops, iops, &t, &occ, &spec);
+                        assert!(
+                            p.static_energy_j > last,
+                            "{arch:?}/{w}: energy not monotone in dram_bytes \
+                             (x{mult}: {} <= {last})",
+                            p.static_energy_j
+                        );
+                        last = p.static_energy_j;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rank_static_is_deterministic_sorted_and_nonempty() {
+        let spec = GpuArch::A100.spec();
+        for (_, w) in suites::all_named() {
+            let a = rank_static(w, &spec, 8);
+            let b = rank_static(w, &spec, 8);
+            assert_eq!(a, b, "{w}: ranking must be deterministic");
+            assert!(!a.is_empty());
+            for pair in a.windows(2) {
+                assert!(pair[0].1.static_energy_j <= pair[1].1.static_energy_j, "{w}");
+            }
+            let space = ScheduleSpace::new(w, &spec);
+            for (s, _) in &a {
+                assert!(space.is_legal(s), "{w}: ranked schedule must be legal: {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn best_static_no_worse_than_fallback() {
+        let spec = GpuArch::A100.spec();
+        for (_, w) in suites::all_named() {
+            let fallback = ScheduleSpace::new(w, &spec).fallback();
+            let fb = analyze(&w, &fallback, &spec);
+            let (_, best) = best_static(w, &spec);
+            assert!(
+                best.static_energy_j <= fb.static_energy_j,
+                "{w}: best-of-N ({}) worse than fallback ({})",
+                best.static_energy_j,
+                fb.static_energy_j
+            );
+        }
+    }
+
+    #[test]
+    fn priors_align_with_individual_analysis() {
+        let spec = GpuArch::V100.spec();
+        let w = suites::MM2;
+        let space = ScheduleSpace::new(w, &spec);
+        let scheds = space.enumerate(16);
+        let priors = static_energy_priors(&w, &scheds, &spec);
+        assert_eq!(priors.len(), scheds.len());
+        for (s, p) in scheds.iter().zip(&priors) {
+            assert_eq!(*p, analyze(&w, s, &spec).static_energy_j);
+        }
+    }
+}

@@ -264,6 +264,36 @@ impl EnergyCostModel {
     pub fn snr_error_db(predicted_j: &[f64], measured_j: &[f64]) -> f64 {
         stats::snr_db(predicted_j, measured_j)
     }
+
+    /// [`Self::predict_energy_j`] with a static-analysis prior
+    /// (DSO-style static+dynamic fusion, ISSUE 9): a trained model
+    /// predicts as usual; a model with **zero samples** returns the
+    /// caller's closed-form static estimate instead of the flat
+    /// `scale_j` guess, so ranking is informative before the first
+    /// measurement lands.
+    pub fn predict_energy_with_prior(&self, fv: &FeatureVector, prior_j: f64) -> f64 {
+        if self.is_trained() {
+            self.predict_energy_j(fv)
+        } else {
+            prior_j
+        }
+    }
+
+    /// Batch form of [`Self::predict_energy_with_prior`]: `priors` is
+    /// index-aligned with `fvs` (typically
+    /// [`crate::analysis::static_energy_priors`]).
+    pub fn predict_energy_batch_with_prior(
+        &self,
+        fvs: &[FeatureVector],
+        priors: &[f64],
+    ) -> Vec<f64> {
+        debug_assert_eq!(fvs.len(), priors.len());
+        if self.is_trained() {
+            self.predict_energy_batch(fvs)
+        } else {
+            priors.to_vec()
+        }
+    }
 }
 
 #[cfg(test)]
@@ -316,6 +346,39 @@ mod tests {
         let model = EnergyCostModel::new(Default::default());
         let c = Candidate::new(suites::MM1, space.fallback());
         assert_eq!(model.predict_score(&featurize(&c, &spec)), 1.0);
+    }
+
+    #[test]
+    fn prior_fallback_only_applies_until_first_fit() {
+        let spec = GpuArch::A100.spec();
+        let space = ScheduleSpace::new(suites::MM1, &spec);
+        let mut rng = Rng::seed_from_u64(51);
+        let scheds = space.sample_n(&mut rng, 12);
+        let cands: Vec<Candidate> =
+            scheds.iter().map(|s| Candidate::new(suites::MM1, *s)).collect();
+        let fvs: Vec<crate::features::FeatureVector> =
+            cands.iter().map(|c| featurize(c, &spec)).collect();
+        let priors = crate::analysis::static_energy_priors(&suites::MM1, &scheds, &spec);
+
+        // Zero samples: the batch IS the static prior, not flat scale_j.
+        let mut model = EnergyCostModel::new(Default::default());
+        assert_eq!(model.predict_energy_batch_with_prior(&fvs, &priors), priors);
+        assert_eq!(model.predict_energy_with_prior(&fvs[0], priors[0]), priors[0]);
+
+        // Trained: the prior is ignored, predictions match the GBDT.
+        let samples: Vec<(crate::features::FeatureVector, f64)> = cands
+            .iter()
+            .map(|c| (featurize(c, &spec), sim::evaluate_candidate(c, &spec).energy_j))
+            .collect();
+        model.update(&samples, &mut rng);
+        assert_eq!(
+            model.predict_energy_batch_with_prior(&fvs, &priors),
+            model.predict_energy_batch(&fvs)
+        );
+        assert_eq!(
+            model.predict_energy_with_prior(&fvs[0], priors[0]),
+            model.predict_energy_j(&fvs[0])
+        );
     }
 
     #[test]

@@ -1,11 +1,18 @@
 //! The concrete feature map (§5.4).
 //!
-//! 36 features in five groups, mirroring the paper's taxonomy:
+//! 40 features in six groups, mirroring the paper's taxonomy:
 //! arithmetic (float/int op counts and densities), vectorization, loop
-//! structure, cache/memory-access counts per level, and launch/occupancy
-//! geometry. All *count* features are `log1p`-compressed so the GBDT
-//! splits behave across the 6-order-of-magnitude range between MV3 and
-//! MM4 kernels.
+//! structure, cache/memory-access counts per level, launch/occupancy
+//! geometry, and the static-analysis group (ISSUE 9) — roofline terms
+//! from [`crate::analysis`] (arithmetic intensity, tile reuse,
+//! predicted stall fraction, static latency). All *count* features are
+//! `log1p`-compressed so the GBDT splits behave across the
+//! 6-order-of-magnitude range between MV3 and MM4 kernels.
+//!
+//! The static group derives from geometry and bandwidth/peak-rate spec
+//! fields only — never the energy coefficients — so the
+//! `features_do_not_leak_energy` invariant below still holds: the
+//! *target* must stay out of the inputs.
 
 use super::FeatureVector;
 use crate::config::GpuSpec;
@@ -13,7 +20,7 @@ use crate::schedule::Candidate;
 use crate::sim::{occupancy, MemoryTraffic};
 
 /// Number of features produced by [`featurize`].
-pub const FEATURE_DIM: usize = 36;
+pub const FEATURE_DIM: usize = 40;
 
 /// Human-readable names, index-aligned with the vector.
 pub fn feature_names() -> [&'static str; FEATURE_DIM] {
@@ -60,6 +67,11 @@ pub fn feature_names() -> [&'static str; FEATURE_DIM] {
         "waves",
         "tail_efficiency",
         "uses_shared",
+        // static analysis (roofline terms; no energy coefficients)
+        "log_arith_intensity",
+        "log_tile_reuse",
+        "predicted_stall_frac",
+        "log_static_latency_us",
     ]
 }
 
@@ -74,6 +86,7 @@ pub fn featurize(c: &Candidate, spec: &GpuSpec) -> FeatureVector {
     let t = MemoryTraffic::compute(s, &g, spec);
     let grid = s.grid(&g);
     let occ = occupancy(s, grid, spec);
+    let prof = crate::analysis::analyze(&c.workload, s, spec);
 
     let macs = g.macs() as f64;
     let flops = 2.0 * macs;
@@ -128,6 +141,11 @@ pub fn featurize(c: &Candidate, spec: &GpuSpec) -> FeatureVector {
         occ.waves as f64,
         occ.tail_efficiency,
         if s.use_shared { 1.0 } else { 0.0 },
+        // static analysis (roofline terms; no energy coefficients)
+        prof.arithmetic_intensity.ln_1p(),
+        prof.tile_reuse_factor.ln_1p(),
+        prof.predicted_stall_frac,
+        (prof.static_latency_s * 1e6).ln_1p(),
     ];
     FeatureVector(f)
 }

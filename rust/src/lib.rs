@@ -47,6 +47,7 @@
 //!          outcome.best.energy_j * 1e3);
 //! ```
 
+pub mod analysis;
 pub mod baselines;
 pub mod config;
 pub mod costmodel;

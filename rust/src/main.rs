@@ -3,6 +3,8 @@
 //!
 //! Subcommands:
 //!   search      run one kernel search (the paper's core loop)
+//!   analyze     static schedule analysis: rank a workload's space by
+//!               closed-form energy, dump the profiles as JSON
 //!   serve       run the kernel-serving daemon on a Unix socket
 //!   query       ask a running daemon for a kernel / stats / metrics / traces / shutdown
 //!   bench       serving benchmark: zipf replay against live daemons
@@ -31,6 +33,7 @@ fn main() -> ExitCode {
     let rest = &args[1..];
     let result = match cmd.as_str() {
         "search" => cmd_search(rest),
+        "analyze" => cmd_analyze(rest),
         "serve" => cmd_serve(rest),
         "query" => cmd_query(rest),
         "bench" => cmd_bench(rest),
@@ -65,6 +68,9 @@ USAGE:
                    [--rounds N] [--population P] [--m M] [--mu DB] [--seed S]
                    [--store DIR] [--no-transfer]
                    [--config file.toml] [--events out.jsonl] [--json]
+  ecokernel analyze --workload <MM1|..|CONV3> [--gpu a100] [--top N]
+                   (no search, no measurements: deterministic static
+                   profiles — the serve daemon's static-tier ranking)
   ecokernel serve  --store DIR --listen ADDR [--config file.toml] [--workers N]
                    [--shards N] [--quota N] [--max-records N] [--events out.jsonl]
                    (ADDR: unix:/path.sock or tcp:HOST:PORT; --socket PATH = unix)
@@ -227,6 +233,43 @@ fn cmd_search(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `ecokernel analyze`: the static analyzer standalone. Ranks the
+/// workload's legal schedule space by closed-form static energy
+/// ([`ecokernel::analysis`]) and prints the top-N profiles as one
+/// deterministic JSON object — no search, no simulator run, no
+/// measurements, so two invocations are byte-identical (CI pins this).
+fn cmd_analyze(args: &[String]) -> anyhow::Result<()> {
+    let flags = Flags::parse(args, &[])?;
+    let wname = flags
+        .get("workload")
+        .ok_or_else(|| anyhow::anyhow!("--workload is required (e.g. MM1)"))?;
+    let workload = suites::by_name(wname).ok_or_else(|| {
+        anyhow::anyhow!("unknown workload '{wname}' (MM1..MM4, MV1..MV4, CONV1..CONV3)")
+    })?;
+    let gpu = match flags.get("gpu") {
+        Some(g) => GpuArch::parse(g).ok_or_else(|| anyhow::anyhow!("unknown gpu '{g}'"))?,
+        None => GpuArch::A100,
+    };
+    let top = flags.parse_num::<usize>("top")?.unwrap_or(1);
+    let spec = gpu.spec();
+    let ranked = ecokernel::analysis::rank_static(workload, &spec, top);
+    let entries = ranked.iter().map(|(s, p)| {
+        Json::obj(vec![
+            ("schedule", ecokernel::store::record::schedule_to_json(s)),
+            ("variant_id", Json::str(s.variant_id())),
+            ("profile", p.to_json()),
+        ])
+    });
+    let obj = Json::obj(vec![
+        ("workload", Json::str(workload.id())),
+        ("gpu", Json::str(gpu.name())),
+        ("n_ranked", Json::num(ranked.len() as f64)),
+        ("ranked", Json::arr(entries)),
+    ]);
+    println!("{obj}");
+    Ok(())
+}
+
 /// The daemon address from `--listen`/`--addr` (`unix:`/`tcp:` syntax)
 /// or the backward-compatible `--socket PATH`.
 #[cfg(unix)]
@@ -380,6 +423,7 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
             );
             println!("searches    : {} done, {} enqueued total", s.n_searches_done, s.n_enqueued);
             println!("admission   : {} shed, {} fleet-coalesced", s.n_shed, s.n_fleet_coalesced);
+            println!("static tier : {} misses answered search-free", s.n_static_tier);
             println!(
                 "write-backs : {} fenced, {} dropped",
                 s.n_writebacks_fenced, s.n_writebacks_dropped
@@ -466,10 +510,11 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
             for ((w, _, _), reply) in requests.iter().zip(&replies) {
                 match reply {
                     Ok(k) => println!(
-                        "{:<24} {:4} [{}]{}",
+                        "{:<24} {:4} [{}/{}]{}",
                         w.to_string(),
                         if k.hit { "hit" } else { "miss" },
                         k.source.name(),
+                        k.tier.name(),
                         if k.enqueued { " (search enqueued)" } else { "" }
                     ),
                     Err(e) => println!("{:<24} error {e}", w.to_string()),
@@ -498,9 +543,10 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
     } else {
         println!("workload  : {workload}");
         println!(
-            "result    : {} (source: {})",
+            "result    : {} (source: {}, tier: {})",
             if reply.hit { "hit" } else { "miss" },
-            reply.source.name()
+            reply.source.name(),
+            reply.tier.name()
         );
         println!("schedule  : {}", reply.schedule);
         println!("variant   : {}", reply.schedule.variant_id());

@@ -346,11 +346,16 @@ fn model_guided_round(
         .iter()
         .map(|(s, _)| featurize(&Candidate::new(workload, *s), spec))
         .collect();
+    // Static prior (ISSUE 9): closed-form energy estimates that stand
+    // in for the model until its first fit — a trained model ignores
+    // them, so the cold-path fold stays byte-identical.
+    let scheds: Vec<Schedule> = kernel_m.iter().map(|(s, _)| *s).collect();
+    let priors = crate::analysis::static_energy_priors(&workload, &scheds, spec);
 
     // Evaluate the M kernels with the cost model; pick the most
     // energy-efficient k*M and their predicted energy.
     let (order, predicted): (Vec<usize>, Vec<f64>) = if use_model {
-        let pred = model.predict_energy_batch(&feats);
+        let pred = model.predict_energy_batch_with_prior(&feats, &priors);
         meter.clock.charge_model_predict(
             MODEL_PREDICT_BASE_S + MODEL_PREDICT_PER_KERNEL_S * feats.len() as f64,
         );
@@ -430,7 +435,7 @@ fn model_guided_round(
             e
         }
         None if use_model => {
-            let pred = model.predict_energy_batch(&feats);
+            let pred = model.predict_energy_batch_with_prior(&feats, &priors);
             meter.clock.charge_model_predict(
                 MODEL_PREDICT_BASE_S + MODEL_PREDICT_PER_KERNEL_S * feats.len() as f64,
             );

@@ -183,11 +183,23 @@ fn ledger_json(m: &MetricsReply) -> Json {
 fn phase_json(m: &MetricsReply, requests: usize, elapsed_s: f64) -> Vec<(String, Json)> {
     let hits = m.counter("n_hits") as f64;
     let total = m.counter("n_requests") as f64;
+    let misses = m.counter("n_misses") as f64;
+    // Per-tier reply counts (ISSUE 9): every exact hit is the `exact`
+    // tier; a miss is `static` when it was answered search-free from
+    // the static ranking, `warm` otherwise. Pre-tier daemons report no
+    // `n_static_tier` counter (merged as 0): all misses count as warm.
+    let n_static = m.counter("n_static_tier") as f64;
+    let tiers = Json::obj(vec![
+        ("exact", Json::num(hits)),
+        ("warm", Json::num((misses - n_static).max(0.0))),
+        ("static", Json::num(n_static)),
+    ]);
     vec![
         ("req_per_s".to_string(), Json::num(requests as f64 / elapsed_s.max(1e-9))),
         ("p50_ms".to_string(), Json::num(m.reply_wall_s.quantile(50.0) * 1e3)),
         ("p99_ms".to_string(), Json::num(m.reply_wall_s.quantile(99.0) * 1e3)),
         ("hit_rate".to_string(), Json::num(if total > 0.0 { hits / total } else { 0.0 })),
+        ("tiers".to_string(), tiers),
         ("frames_per_syscall".to_string(), Json::num(m.frames_per_syscall())),
         ("energy_ledger".to_string(), ledger_json(m)),
         (

@@ -6,10 +6,14 @@
 //! * **exact store hit** — reply immediately with the cached,
 //!   NVML-measured kernel (zero measurements, zero search time);
 //! * **miss** — reply immediately with the best warm guess (nearest
-//!   neighbor's schedule re-legalized for the requested shape, or the
-//!   space's fallback), and enqueue a real search on a daemon-owned
-//!   [`WorkerPool`]. The finished search is written back into the
-//!   sharded store, so the next request for that key is a hit.
+//!   neighbor's schedule re-legalized for the requested shape), or —
+//!   when no neighbor is close enough — the **static tier**: the best
+//!   of a capped, statically-ranked enumeration of the schedule space
+//!   ([`crate::analysis`]), with closed-form latency/energy estimates
+//!   and zero measurements. Either way a real search is enqueued on a
+//!   daemon-owned [`WorkerPool`]; the finished search is written back
+//!   into the sharded store, so the next request for that key is a
+//!   hit. Every reply carries its `tier` (`exact`/`warm`/`static`).
 //!
 //! # Locking: the hot path is not serialized
 //!
@@ -70,8 +74,9 @@
 
 use super::metrics::{reply_time_s, ServeMetrics};
 use super::protocol::{
-    BatchItem, DriftHealth, HealthReply, HealthStatus, HealthTarget, KernelReply, MetricsReply,
-    Reject, Request, Response, ServeSource, StatsReply, TraceReply, PROTOCOL_VERSION,
+    error_code, BatchItem, DriftHealth, HealthReply, HealthStatus, HealthTarget, KernelReply,
+    MetricsReply, Reject, Request, Response, ServeSource, ServeTier, StatsReply, TraceReply,
+    PROTOCOL_VERSION,
 };
 use crate::config::{GpuArch, SearchConfig, SearchMode};
 use crate::coordinator::{EventLog, PoolEvent, SearchJob, WorkerPool};
@@ -83,8 +88,8 @@ use crate::search::RoundStats;
 use crate::store::lease::Lease;
 use crate::store::transfer::{relegalize, MAX_TRANSFER_DISTANCE};
 use crate::store::{
-    config_fingerprint, serve_key, AppendOutcome, EvictionReport, ShardedStore, TuningRecord,
-    TuningStore,
+    config_fingerprint, serve_key, AppendOutcome, EvictionReport, ShardedStore, StoredKernel,
+    TuningRecord, TuningStore,
 };
 use crate::telemetry::{
     ledger_family_index, ledger_gpu_index, LogHistogram, Span, Stage, StageTrace, TraceId,
@@ -1494,6 +1499,7 @@ fn stats_reply(ctx: &Ctx, id: String) -> StatsReply {
         measurements_paid: state.metrics.measurements_paid,
         n_shed: state.metrics.n_shed,
         n_fleet_coalesced: state.metrics.n_fleet_coalesced,
+        n_static_tier: state.metrics.n_static_tier,
         backlog_len: state.backlog.len(),
         pending_keys: state.pending.len(),
         n_writebacks_fenced: state.metrics.n_writebacks_fenced,
@@ -1603,11 +1609,12 @@ fn serve_hit(
         }
         state.pending.len()
     };
-    emit_served(ctx, &id, key, "hit", ServeSource::Store, t);
+    emit_served(ctx, &id, key, "hit", ServeSource::Store, ServeTier::Exact, t);
     KernelReply {
         id,
         hit: true,
         source: ServeSource::Store,
+        tier: ServeTier::Exact,
         schedule: rec.best.schedule,
         latency_s: rec.best.latency_s,
         energy_j: rec.best.energy_j,
@@ -1651,7 +1658,9 @@ fn serve_memory_miss(
 
 /// A true miss: best warm guess now (the store's incremental neighbor
 /// index — candidate buckets, not a full scan), real search in the
-/// background.
+/// background. With no neighbor in range the reply falls to the
+/// search-free static tier: the space's best statically-ranked
+/// schedule with closed-form estimates — zero measurements paid.
 fn serve_miss(
     ctx: &Ctx,
     id: String,
@@ -1678,10 +1687,19 @@ fn serve_miss(
             })
     };
     trace.stages.add(Stage::SnapshotLookup, t_lookup.elapsed().as_secs_f64());
-    let (schedule, source, latency_s, energy_j, avg_power_w) = match guess {
-        Some((s, lat, en, pw)) => (s, ServeSource::WarmGuess, lat, en, pw),
-        // 0.0 = unknown: no neighbor close enough to estimate from.
-        None => (space.fallback(), ServeSource::Fallback, 0.0, 0.0, 0.0),
+    let (served, source, tier) = match guess {
+        Some((s, lat, en, pw)) => (
+            StoredKernel { schedule: s, latency_s: lat, energy_j: en, avg_power_w: pw },
+            ServeSource::WarmGuess,
+            ServeTier::Warm,
+        ),
+        // No neighbor close enough to estimate from: static tier — the
+        // best of a capped, statically-ranked enumeration, with the
+        // analyzer's closed-form estimates instead of 0.0 "unknown".
+        None => {
+            let (s, prof) = crate::analysis::best_static(workload, &spec);
+            (StoredKernel::from_static(s, &prof), ServeSource::Fallback, ServeTier::Static)
+        }
     };
 
     // Who searches this key? Local duplicates coalesce on `pending`;
@@ -1808,7 +1826,13 @@ fn serve_miss(
     // every stage this miss touched; the lock reacquisition is cold-
     // path only (the hit path records under its one acquisition).
     let wall_s = trace.start.elapsed().as_secs_f64();
-    ctx.state.lock().expect("state lock").metrics.record_reply(false, t, wall_s, &trace.stages);
+    {
+        let mut state = ctx.state.lock().expect("state lock");
+        state.metrics.record_reply(false, t, wall_s, &trace.stages);
+        if tier == ServeTier::Static {
+            state.metrics.n_static_tier += 1;
+        }
+    }
     // The reserving miss opens the distributed trace — the hot-path
     // stages become its first spans (cumulative offsets, hot-path
     // order). Search rounds and the write-back attach at the terminal
@@ -1852,15 +1876,16 @@ fn serve_miss(
             );
         }
     }
-    emit_served(ctx, &id, &key, "miss", source, t);
+    emit_served(ctx, &id, &key, "miss", source, tier, t);
     KernelReply {
         id,
         hit: false,
         source,
-        schedule,
-        latency_s,
-        energy_j,
-        avg_power_w,
+        tier,
+        schedule: served.schedule,
+        latency_s: served.latency_s,
+        energy_j: served.energy_j,
+        avg_power_w: served.avg_power_w,
         enqueued,
         queue_depth,
         reply_time_s: t,
@@ -1945,7 +1970,20 @@ fn serve_batch(
         // once per frame, same as the wire charged one syscall.
         state.metrics.record_stage(Stage::Parse, parse_s);
     }
-    let replies = replies.into_iter().map(|r| r.expect("every position answered")).collect();
+    // Defensive: both passes above answer every position. Should a gap
+    // ever appear, the client gets a positional internal-error frame —
+    // the daemon's request path never panics (see
+    // scripts/check_invariants.py).
+    let replies = replies
+        .into_iter()
+        .map(|r| {
+            r.unwrap_or_else(|| Response::Error {
+                id: None,
+                code: error_code::INTERNAL.to_string(),
+                message: "batch position left unanswered".to_string(),
+            })
+        })
+        .collect();
     Response::Batch { id, replies }
 }
 
@@ -1955,6 +1993,7 @@ fn emit_served(
     key: &str,
     result: &str,
     source: ServeSource,
+    tier: ServeTier,
     reply_time: f64,
 ) {
     if let Some(log) = &ctx.log {
@@ -1965,6 +2004,7 @@ fn emit_served(
                 ("key", Json::str(key)),
                 ("result", Json::str(result)),
                 ("source", Json::str(source.name())),
+                ("tier", Json::str(tier.name())),
                 ("reply_time_s", Json::num(reply_time)),
                 ("protocol_v", Json::num(PROTOCOL_VERSION as f64)),
             ],

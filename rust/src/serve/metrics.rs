@@ -50,6 +50,10 @@ pub struct ServeMetrics {
     pub n_shed: usize,
     /// Misses coalesced into another fleet member's in-flight search.
     pub n_fleet_coalesced: usize,
+    /// Misses answered from the search-free static tier (ISSUE 9): no
+    /// neighbor in range, so the reply carried the best statically-
+    /// ranked schedule with closed-form estimates — zero measurements.
+    pub n_static_tier: usize,
     /// Finished searches whose write-back was rejected by the epoch
     /// fence (another daemon reclaimed the key mid-search). NOT counted
     /// in `n_searches_done` — this daemon's result went unused.
@@ -227,7 +231,7 @@ impl ServeMetrics {
 
     /// Counter name/value pairs, names matching the `stats` wire
     /// fields — the `metrics` op serves these as its counter map.
-    pub fn counter_pairs(&self) -> [(&'static str, u64); 17] {
+    pub fn counter_pairs(&self) -> [(&'static str, u64); 18] {
         [
             ("n_requests", self.n_requests as u64),
             ("n_hits", self.n_hits as u64),
@@ -237,6 +241,7 @@ impl ServeMetrics {
             ("n_evicted_records", self.n_evicted_records as u64),
             ("n_shed", self.n_shed as u64),
             ("n_fleet_coalesced", self.n_fleet_coalesced as u64),
+            ("n_static_tier", self.n_static_tier as u64),
             ("n_writebacks_fenced", self.n_writebacks_fenced as u64),
             ("n_writebacks_dropped", self.n_writebacks_dropped as u64),
             ("measurements_paid", self.measurements_paid as u64),
@@ -252,7 +257,7 @@ impl ServeMetrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} hits={} misses={} hit_rate={:.2} enqueued={} searched={} \
-             shed={} fleet_coalesced={} evicted={} wb_fenced={} wb_dropped={} \
+             shed={} fleet_coalesced={} static_tier={} evicted={} wb_fenced={} wb_dropped={} \
              batches={}/{} notify_refresh={} poll_refresh={} \
              p50={:.2}ms p99={:.2}ms wall_p50={:.3}ms wall_p99={:.3}ms measurements_paid={}",
             self.n_requests,
@@ -263,6 +268,7 @@ impl ServeMetrics {
             self.n_searches_done,
             self.n_shed,
             self.n_fleet_coalesced,
+            self.n_static_tier,
             self.n_evicted_records,
             self.n_writebacks_fenced,
             self.n_writebacks_dropped,

@@ -11,8 +11,9 @@
 //!   wires; a `batch` frame carries N `get_kernel` requests per
 //!   socket write with positionally-matched replies;
 //! * [`daemon`] — the socket server: exact hits reply instantly from
-//!   the sharded store; misses reply with a warm-start guess and
-//!   enqueue a real search on a daemon-owned
+//!   the sharded store; misses reply with a warm-start guess — or,
+//!   with no neighbor in range, the search-free **static tier**
+//!   ([`crate::analysis`]) — and enqueue a real search on a daemon-owned
 //!   [`crate::coordinator::WorkerPool`], whose outcome is written back
 //!   so the next request hits. N daemons can mount one store: misses
 //!   coalesce fleet-wide through in-store claims, shard maintenance is
@@ -60,6 +61,6 @@ pub use daemon::{Daemon, DaemonConfig, DaemonHandle};
 pub use metrics::{ServeMetrics, MODEL_REGIMES};
 pub use protocol::{
     error_code, BatchItem, DriftHealth, HealthReply, HealthStatus, HealthTarget, KernelReply,
-    MetricsReply, Reject, Request, Response, ServeSource, StatsReply, TraceReply,
+    MetricsReply, Reject, Request, Response, ServeSource, ServeTier, StatsReply, TraceReply,
     HEALTH_VERSION, MAX_BATCH_ITEMS, METRICS_VERSION, PROTOCOL_VERSION, TRACE_VERSION,
 };

@@ -430,6 +430,54 @@ impl ServeSource {
     }
 }
 
+/// Serving tier of a `get_kernel` reply (ISSUE 9): how much evidence
+/// stands behind the returned schedule. Orthogonal to `source` (which
+/// names the mechanism); the tier names the guarantee.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeTier {
+    /// Exact store hit: NVML-measured metrics for this very key.
+    Exact,
+    /// Warm transfer: a neighbor's measured kernel re-legalized for
+    /// this shape, metrics rescaled estimates.
+    Warm,
+    /// Search-free static tier: no usable neighbor — the best-of-N
+    /// statically-ranked legal schedule with closed-form
+    /// [`crate::analysis::StaticProfile`] estimates and **zero**
+    /// measurements. The background search still runs; the next
+    /// request upgrades to `exact` once its write-back lands.
+    Static,
+}
+
+impl ServeTier {
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeTier::Exact => "exact",
+            ServeTier::Warm => "warm",
+            ServeTier::Static => "static",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ServeTier> {
+        match s {
+            "exact" => Some(ServeTier::Exact),
+            "warm" => Some(ServeTier::Warm),
+            "static" => Some(ServeTier::Static),
+            _ => None,
+        }
+    }
+
+    /// The tier a pre-tier frame implies: sources mapped 1:1 (older
+    /// daemons' fallback replies carried no static profile, but they
+    /// made the same zero-measurement promise).
+    pub fn from_source(source: ServeSource) -> ServeTier {
+        match source {
+            ServeSource::Store => ServeTier::Exact,
+            ServeSource::WarmGuess => ServeTier::Warm,
+            ServeSource::Fallback => ServeTier::Static,
+        }
+    }
+}
+
 /// The `get_kernel` response frame.
 #[derive(Debug, Clone, PartialEq)]
 pub struct KernelReply {
@@ -437,6 +485,9 @@ pub struct KernelReply {
     /// True for an exact store hit.
     pub hit: bool,
     pub source: ServeSource,
+    /// Serving tier: `exact` / `warm` / `static` (absent in pre-tier
+    /// frames — derived from `source` on parse).
+    pub tier: ServeTier,
     pub schedule: Schedule,
     /// Measured metrics on a hit; MAC-rescaled estimates (or 0.0 =
     /// unknown, for fallback schedules) on a miss.
@@ -460,6 +511,7 @@ impl KernelReply {
             ("op", Json::str("get_kernel")),
             ("result", Json::str(if self.hit { "hit" } else { "miss" })),
             ("source", Json::str(self.source.name())),
+            ("tier", Json::str(self.tier.name())),
             ("schedule", schedule_to_json(&self.schedule)),
             ("variant_id", Json::str(self.schedule.variant_id())),
             ("latency_s", Json::num(self.latency_s)),
@@ -478,11 +530,17 @@ impl KernelReply {
             "miss" => false,
             other => return Err(format!("bad 'result' value '{other}'")),
         };
+        let source = ServeSource::parse(&get_str(v, "source")?).ok_or("bad 'source' value")?;
+        // Pre-tier frames carry no 'tier': derive it from the source.
+        let tier = match v.get("tier").and_then(|t| t.as_str()) {
+            Some(t) => ServeTier::parse(t).ok_or("bad 'tier' value")?,
+            None => ServeTier::from_source(source),
+        };
         Ok(KernelReply {
             id: get_str(v, "id")?,
             hit,
-            source: ServeSource::parse(&get_str(v, "source")?)
-                .ok_or("bad 'source' value")?,
+            source,
+            tier,
             schedule: schedule_from_json(v.get("schedule").ok_or("reply missing 'schedule'")?)?,
             latency_s: get_f64(v, "latency_s")?,
             energy_j: get_f64(v, "energy_j")?,
@@ -519,6 +577,10 @@ pub struct StatsReply {
     pub n_shed: usize,
     /// Misses coalesced into another fleet member's in-flight search.
     pub n_fleet_coalesced: usize,
+    /// Misses answered by the search-free static tier — best-of-N
+    /// statically-ranked schedules, zero measurements (absent in
+    /// pre-tier frames = 0).
+    pub n_static_tier: usize,
     /// Keys currently heat-queued behind a saturated search queue.
     pub backlog_len: usize,
     /// Serve keys with a search queued, backlogged, running, or
@@ -582,6 +644,7 @@ impl StatsReply {
                     ("measurements_paid", Json::num(self.measurements_paid as f64)),
                     ("n_shed", Json::num(self.n_shed as f64)),
                     ("n_fleet_coalesced", Json::num(self.n_fleet_coalesced as f64)),
+                    ("n_static_tier", Json::num(self.n_static_tier as f64)),
                     ("backlog_len", Json::num(self.backlog_len as f64)),
                     ("pending_keys", Json::num(self.pending_keys as f64)),
                     ("n_writebacks_fenced", Json::num(self.n_writebacks_fenced as f64)),
@@ -627,6 +690,7 @@ impl StatsReply {
             // pre-fleet daemon still parse.
             n_shed: opt_usize(s, "n_shed"),
             n_fleet_coalesced: opt_usize(s, "n_fleet_coalesced"),
+            n_static_tier: opt_usize(s, "n_static_tier"),
             backlog_len: opt_usize(s, "backlog_len"),
             pending_keys: opt_usize(s, "pending_keys"),
             n_writebacks_fenced: opt_usize(s, "n_writebacks_fenced"),
@@ -1391,22 +1455,61 @@ mod tests {
 
     #[test]
     fn kernel_reply_roundtrip() {
-        let reply = KernelReply {
-            id: "c1".into(),
-            hit: true,
-            source: ServeSource::Store,
-            schedule: sample_schedule(),
-            latency_s: 1.5e-3,
-            energy_j: 2.5e-3,
-            avg_power_w: 123.0,
-            enqueued: false,
-            queue_depth: 2,
-            reply_time_s: 6.4e-5,
-        };
-        let line = reply.to_json().to_string();
-        match Response::parse_line(&line).unwrap() {
-            Response::Kernel(back) => assert_eq!(back, reply),
-            other => panic!("{other:?}"),
+        for (hit, source, tier) in [
+            (true, ServeSource::Store, ServeTier::Exact),
+            (false, ServeSource::WarmGuess, ServeTier::Warm),
+            (false, ServeSource::Fallback, ServeTier::Static),
+        ] {
+            let reply = KernelReply {
+                id: "c1".into(),
+                hit,
+                source,
+                tier,
+                schedule: sample_schedule(),
+                latency_s: 1.5e-3,
+                energy_j: 2.5e-3,
+                avg_power_w: 123.0,
+                enqueued: false,
+                queue_depth: 2,
+                reply_time_s: 6.4e-5,
+            };
+            let line = reply.to_json().to_string();
+            match Response::parse_line(&line).unwrap() {
+                Response::Kernel(back) => assert_eq!(back, reply),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn pre_tier_kernel_reply_derives_tier_from_source() {
+        // A frame from a pre-tier daemon carries no 'tier' field: the
+        // parse derives it from the source 1:1.
+        for (source, want) in [
+            (ServeSource::Store, ServeTier::Exact),
+            (ServeSource::WarmGuess, ServeTier::Warm),
+            (ServeSource::Fallback, ServeTier::Static),
+        ] {
+            let reply = KernelReply {
+                id: "c1".into(),
+                hit: source == ServeSource::Store,
+                source,
+                tier: want,
+                schedule: sample_schedule(),
+                latency_s: 0.0,
+                energy_j: 0.0,
+                avg_power_w: 0.0,
+                enqueued: false,
+                queue_depth: 0,
+                reply_time_s: 0.0,
+            };
+            let mut v = reply.to_json();
+            if let Json::Obj(m) = &mut v {
+                m.remove("tier");
+            }
+            let back = KernelReply::from_json(&v).unwrap();
+            assert_eq!(back.tier, want, "{source:?}");
+            assert_eq!(back, reply);
         }
     }
 
@@ -1429,6 +1532,7 @@ mod tests {
             measurements_paid: 140,
             n_shed: 4,
             n_fleet_coalesced: 2,
+            n_static_tier: 1,
             backlog_len: 3,
             pending_keys: 5,
             n_writebacks_fenced: 1,
@@ -1461,6 +1565,7 @@ mod tests {
             Response::Stats(back) => {
                 assert_eq!(back.n_requests, 1);
                 assert_eq!(back.n_shed, 0);
+                assert_eq!(back.n_static_tier, 0);
                 assert_eq!(back.backlog_len, 0);
                 assert_eq!(back.pending_keys, 0);
                 assert_eq!(back.n_writebacks_fenced, 0);
@@ -1564,6 +1669,7 @@ mod tests {
                     id: "b2.0".into(),
                     hit: true,
                     source: ServeSource::Store,
+                    tier: ServeTier::Exact,
                     schedule: sample_schedule(),
                     latency_s: 1e-3,
                     energy_j: 2e-3,
@@ -1600,6 +1706,7 @@ mod tests {
             id: "pin".into(),
             hit: true,
             source: ServeSource::Store,
+            tier: ServeTier::Exact,
             schedule: sample_schedule(),
             latency_s: 1e-3,
             energy_j: 2e-3,
@@ -1609,7 +1716,8 @@ mod tests {
             reply_time_s: 5e-5,
         };
         let line = reply.to_json().to_string();
-        // Exactly the PR-4 field set, nothing added or dropped.
+        // Exactly the PR-4 field set plus the ISSUE-9 'tier' field,
+        // nothing else added or dropped.
         let parsed = Json::parse(&line).unwrap();
         let keys: Vec<&str> = match &parsed {
             Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
@@ -1619,7 +1727,8 @@ mod tests {
             keys,
             vec![
                 "avg_power_w", "energy_j", "enqueued", "id", "latency_s", "ok", "op",
-                "queue_depth", "reply_time_s", "result", "schedule", "source", "v", "variant_id",
+                "queue_depth", "reply_time_s", "result", "schedule", "source", "tier", "v",
+                "variant_id",
             ],
             "{line}"
         );
@@ -1671,6 +1780,7 @@ mod tests {
                 "n_searches_done",
                 "n_shards",
                 "n_shed",
+                "n_static_tier",
                 "n_writebacks_dropped",
                 "n_writebacks_fenced",
                 "p50_reply_s",
@@ -1705,6 +1815,7 @@ mod tests {
             measurements_paid: 140,
             n_shed: 4,
             n_fleet_coalesced: 2,
+            n_static_tier: 1,
             backlog_len: 3,
             pending_keys: 5,
             n_writebacks_fenced: 1,
@@ -1747,6 +1858,7 @@ mod tests {
                 assert_eq!(back.n_batch_requests, 0);
                 assert_eq!(back.n_notify_refresh, 0);
                 assert_eq!(back.n_poll_refresh, 0);
+                assert_eq!(back.n_static_tier, 0, "ISSUE-9 field defaults to 0");
                 assert_eq!(back.uptime_s, 0.0, "gen-4 fields default too");
                 assert_eq!(back.build_info, "");
             }

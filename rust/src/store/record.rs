@@ -40,6 +40,22 @@ impl StoredKernel {
         }
     }
 
+    /// A zero-measurement kernel from static analysis — the serve
+    /// daemon's search-free tier. The closed-form estimates stand in
+    /// for NVML metrics until the background search's write-back lands;
+    /// such kernels are served, never persisted to the store.
+    pub fn from_static(
+        schedule: Schedule,
+        profile: &crate::analysis::StaticProfile,
+    ) -> StoredKernel {
+        StoredKernel {
+            schedule,
+            latency_s: profile.static_latency_s,
+            energy_j: profile.static_energy_j,
+            avg_power_w: profile.static_avg_power_w,
+        }
+    }
+
     pub fn to_evaluated(&self) -> EvaluatedKernel {
         EvaluatedKernel {
             schedule: self.schedule,
@@ -586,6 +602,17 @@ mod tests {
         assert_eq!(out.best.schedule, rec.best.schedule);
         assert_eq!(out.measured_pool.len(), rec.measured.len());
         assert!(out.best.energy_measured);
+    }
+
+    #[test]
+    fn from_static_mirrors_profile_estimates() {
+        let spec = GpuArch::A100.spec();
+        let (s, prof) = crate::analysis::best_static(suites::MM1, &spec);
+        let k = StoredKernel::from_static(s, &prof);
+        assert_eq!(k.schedule, s);
+        assert_eq!(k.latency_s, prof.static_latency_s);
+        assert_eq!(k.energy_j, prof.static_energy_j);
+        assert_eq!(k.avg_power_w, prof.static_avg_power_w);
     }
 
     #[test]

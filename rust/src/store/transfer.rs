@@ -22,7 +22,8 @@
 //! scan) — the same index the serving daemon's miss path queries.
 
 use super::TuningStore;
-use crate::config::SearchConfig;
+use crate::analysis;
+use crate::config::{GpuSpec, SearchConfig};
 use crate::costmodel::CostModelSnapshot;
 use crate::features::{featurize, FeatureVector};
 use crate::schedule::space::ScheduleSpace;
@@ -100,15 +101,21 @@ pub fn build(store: &TuningStore, workload: Workload, cfg: &SearchConfig) -> Opt
         // Model seeds: approximate training points for the TARGET —
         // each measured neighbor schedule is re-legalized into the
         // target space, featurized against the target workload, and its
-        // measured energy rescaled by the MAC ratio (within a family,
-        // energy-per-MAC is comparable). Keeping predictions in the
+        // measured energy rescaled per schedule by the static-energy
+        // ratio (ISSUE 9): `static(target, s') / static(neighbor, s)`
+        // captures the shape-dependent traffic/occupancy shift the old
+        // MAC ratio ignored. The MAC ratio stays as the fallback when
+        // the static estimate degenerates. Keeping predictions in the
         // target's energy range is what lets round 0's SNR check pass
         // and the dynamic-k controller trust the transferred model.
         let neighbor_macs = rec.workload.gemm_view().macs() as f64;
-        let scale = target_macs / neighbor_macs.max(1.0);
+        let mac_scale = target_macs / neighbor_macs.max(1.0);
         for sk in rec.measured.iter().take(SAMPLES_PER_NEIGHBOR) {
             if let Some(s) = relegalize(&sk.schedule, &space) {
                 let c = Candidate::new(workload, s);
+                let scale =
+                    static_scale(&rec.workload, &sk.schedule, &workload, &s, &spec)
+                        .unwrap_or(mac_scale);
                 seed_samples.push((featurize(&c, &spec), sk.energy_j * scale));
             }
         }
@@ -122,15 +129,38 @@ pub fn build(store: &TuningStore, workload: Workload, cfg: &SearchConfig) -> Opt
     }
     let k_hint = neighbors[0].0.final_k.map(|k| k.clamp(K_HINT_FLOOR, K_HINT_CEIL));
     // The nearest neighbor's persisted model transfers directly; its
-    // energy scale is rescaled by the same MAC ratio as the samples so
+    // energy scale is rescaled like the samples — static-energy ratio
+    // on the neighbor's best schedule, MAC ratio as fallback — so
     // round 0's calibration sees a sane starting point.
     let model = neighbors[0].0.model.as_ref().map(|snap| {
-        let neighbor_macs = neighbors[0].0.workload.gemm_view().macs() as f64;
+        let nearest = &neighbors[0].0;
+        let neighbor_macs = nearest.workload.gemm_view().macs() as f64;
         let mut snap = snap.clone();
-        snap.scale_j *= target_macs / neighbor_macs.max(1.0);
+        let best = &nearest.best.schedule;
+        snap.scale_j *= relegalize(best, &space)
+            .and_then(|s| static_scale(&nearest.workload, best, &workload, &s, &spec))
+            .unwrap_or(target_macs / neighbor_macs.max(1.0));
         snap
     });
     Some(WarmStart { seed_schedules, seed_samples, k_hint, n_neighbors: neighbors.len(), model })
+}
+
+/// Energy-transfer ratio from static analysis: how much more (or less)
+/// energy the TARGET shape should cost than the anchor, for one
+/// transferred schedule. `None` when either closed-form estimate
+/// degenerates (non-finite or non-positive) — callers fall back to the
+/// MAC ratio.
+fn static_scale(
+    anchor: &Workload,
+    anchor_sched: &Schedule,
+    target: &Workload,
+    target_sched: &Schedule,
+    spec: &GpuSpec,
+) -> Option<f64> {
+    let from = analysis::analyze(anchor, anchor_sched, spec).static_energy_j;
+    let to = analysis::analyze(target, target_sched, spec).static_energy_j;
+    let ratio = to / from;
+    (from > 0.0 && ratio.is_finite() && ratio > 0.0).then_some(ratio)
 }
 
 /// Map a schedule from another workload's space into `space`: snap each
@@ -220,6 +250,50 @@ mod tests {
                 assert!(to.is_legal(&t));
             }
         }
+    }
+
+    /// ISSUE 9 acceptance: on the warm/cold experiment family pairs,
+    /// rescaling a neighbor's measured energies by the static-energy
+    /// ratio tracks the target's true (simulated) energies at least as
+    /// well as the old MAC-only ratio — this is what cuts round-0
+    /// relerr for warm-start transfer.
+    #[test]
+    fn static_ratio_beats_mac_ratio_on_warmcold_pairs() {
+        let spec = GpuArch::A100.spec();
+        let pairs = [
+            (suites::MM3, suites::MM1),
+            (suites::MV4, suites::MV3),
+            (suites::CONV3, suites::CONV2),
+        ];
+        let mut err_static = 0.0;
+        let mut err_mac = 0.0;
+        let mut n = 0usize;
+        for (anchor, target) in pairs {
+            let from = ScheduleSpace::new(anchor, &spec);
+            let to = ScheduleSpace::new(target, &spec);
+            let mac_scale = target.gemm_view().macs() as f64
+                / anchor.gemm_view().macs().max(1) as f64;
+            let mut rng = Rng::seed_from_u64(7);
+            for s in from.sample_n(&mut rng, 40) {
+                let Some(t) = relegalize(&s, &to) else { continue };
+                let e_anchor =
+                    crate::sim::evaluate_candidate(&Candidate::new(anchor, s), &spec).energy_j;
+                let truth =
+                    crate::sim::evaluate_candidate(&Candidate::new(target, t), &spec).energy_j;
+                let st = static_scale(&anchor, &s, &target, &t, &spec).unwrap_or(mac_scale);
+                err_static += ((e_anchor * st - truth) / truth).abs();
+                err_mac += ((e_anchor * mac_scale - truth) / truth).abs();
+                n += 1;
+            }
+        }
+        assert!(n >= 60, "too few transferable samples across the pairs: {n}");
+        assert!(
+            err_static <= err_mac,
+            "static-ratio transfer must not be worse than the MAC ratio: \
+             mean relerr {:.4} vs {:.4} over {n} samples",
+            err_static / n as f64,
+            err_mac / n as f64
+        );
     }
 
     #[test]

@@ -134,12 +134,18 @@ fn two_daemons_one_store_search_once_fleet_wide() {
     let mut ca = ServeClient::connect(&a.addr).unwrap();
     let mut cb = ServeClient::connect(&b.addr).unwrap();
 
-    // Duplicate the same miss across both daemons.
+    // Duplicate the same miss across both daemons. On a fresh store
+    // both replies are the search-free static tier (ISSUE 9): no
+    // neighbor exists, so each daemon answers from the static ranking
+    // — yet the key is still searched only once fleet-wide.
     let on_a = ca.get_kernel(suites::MM1, None, None).unwrap();
     assert!(!on_a.hit && on_a.enqueued, "first miss claims the key and searches");
+    assert_eq!(on_a.tier.name(), "static", "fresh store: static-tier reply");
     let on_b = cb.get_kernel(suites::MM1, None, None).unwrap();
     if !on_b.hit {
         assert!(!on_b.enqueued, "duplicate miss coalesces into A's in-flight claim");
+        assert_eq!(on_b.tier.name(), "static");
+        assert_eq!(on_b.schedule, on_a.schedule, "static ranking is deterministic fleet-wide");
     }
 
     // A's background search lands; B sees it through store refresh.

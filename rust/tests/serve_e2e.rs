@@ -8,7 +8,7 @@
 use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
 use ecokernel::serve::{
     error_code, Daemon, DaemonConfig, DaemonHandle, HealthStatus, ServeAddr, ServeClient,
-    ServeSource, HEALTH_VERSION,
+    ServeSource, ServeTier, HEALTH_VERSION,
 };
 use ecokernel::telemetry::{ledger_family_index, ledger_gpu_index};
 use ecokernel::util::Json;
@@ -102,6 +102,72 @@ fn miss_then_background_search_then_hit_with_zero_measurements() {
     assert_eq!(neighbor.source, ServeSource::WarmGuess);
     assert!(neighbor.energy_j > 0.0, "warm guesses carry MAC-rescaled estimates");
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+
+    stop(handle, &dir);
+}
+
+/// The search-free static tier (ISSUE 9 acceptance): a never-seen key
+/// on a fresh store is answered from the static ranking with
+/// closed-form estimates and ZERO NVML measurements; duplicates of the
+/// static-tier miss coalesce into the one background search; once it
+/// lands, the same request upgrades to the exact tier.
+#[test]
+fn never_seen_key_is_served_static_then_exact() {
+    let (handle, dir) = spawn_daemon("statictier", |s| {
+        // Slow search: the in-flight window below is long enough to
+        // read stats and send a duplicate before any write-back lands.
+        s.population = 256;
+        s.m_latency_keep = 16;
+        s.rounds = 12;
+    });
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
+
+    let first = client.get_kernel(suites::CONV2, None, None).unwrap();
+    assert!(!first.hit, "fresh store cannot hit");
+    assert_eq!(first.source, ServeSource::Fallback, "no neighbor on an empty store");
+    assert_eq!(first.tier, ServeTier::Static, "the fallback is the static tier");
+    assert!(first.enqueued, "the real search still runs in the background");
+    // The static tier carries real closed-form estimates, not 0.0
+    // "unknown" — and exactly the analyzer's numbers for exactly the
+    // analyzer's best-ranked schedule.
+    let spec = GpuArch::A100.spec();
+    let (best, prof) = ecokernel::analysis::best_static(suites::CONV2, &spec);
+    assert_eq!(first.schedule, best, "the best statically-ranked schedule is served");
+    assert_eq!(first.energy_j, prof.static_energy_j);
+    assert_eq!(first.latency_s, prof.static_latency_s);
+    assert_eq!(first.avg_power_w, prof.static_avg_power_w);
+    assert!(first.energy_j > 0.0 && first.latency_s > 0.0 && first.avg_power_w > 0.0);
+
+    // Zero measurements paid while the reply is already in hand (the
+    // search is still in flight), and the tier counter saw the miss.
+    let s = client.stats().unwrap();
+    assert_eq!(s.measurements_paid, 0, "the static tier pays 0 NVML measurements");
+    assert_eq!(s.n_static_tier, 1);
+    assert_eq!(s.n_searches_done, 0, "search still in flight");
+
+    // A duplicate of the static-tier miss — raw frame, so the wire
+    // bytes are pinned too — coalesces instead of re-enqueueing.
+    let raw = client
+        .roundtrip_raw(r#"{"v":1,"op":"get_kernel","id":"dup","workload":"CONV2"}"#)
+        .unwrap();
+    assert!(raw.contains(r#""tier":"static""#), "{raw}");
+    assert!(raw.contains(r#""source":"fallback""#), "{raw}");
+    assert!(raw.contains(r#""enqueued":false"#), "duplicate coalesces: {raw}");
+    let s = client.stats().unwrap();
+    assert_eq!(s.n_enqueued, 1, "one search for both static-tier misses");
+    assert_eq!(s.n_static_tier, 2);
+
+    // The background search lands; the same key is now the exact tier
+    // with measured metrics, and no further static-tier replies.
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    let second = client.get_kernel(suites::CONV2, None, None).unwrap();
+    assert!(second.hit);
+    assert_eq!(second.tier, ServeTier::Exact);
+    assert_eq!(second.source, ServeSource::Store);
+    let s = client.stats().unwrap();
+    assert_eq!(s.n_searches_done, 1);
+    assert!(s.measurements_paid > 0, "the background search paid the measurements");
+    assert_eq!(s.n_static_tier, 2, "the exact hit added no static-tier reply");
 
     stop(handle, &dir);
 }

@@ -1,0 +1,236 @@
+#!/usr/bin/env python3
+"""Grep-level invariant checks on the serve daemon's hot path (ISSUE 9).
+
+Two contracts that code review keeps re-litigating, enforced in CI
+instead (stdlib python only, no build needed):
+
+1. **Lock ordering** — the `traces` and `slo` mutexes must never be
+   acquired while a `state`-guard binding is live in
+   `rust/src/serve/daemon.rs`. The `state` mutex is the daemon's
+   microseconds-only bookkeeping lock; nesting a trace-ring or
+   SLO-window lock under it would let trace pressure extend every
+   reply's critical section (and is one cycle away from a deadlock if
+   any path ever locks the other way around).
+
+2. **No panics on the request path** — the functions a client frame
+   flows through must not call `.unwrap()` or `.expect(...)`, except
+   the idiomatic poisoned-mutex forms `.lock().expect(...)` /
+   `.read().expect(...)` / `.write().expect(...)` (a poisoned lock
+   means another thread already panicked; propagating is correct).
+
+The scanner is lexical, not a parser, with exactly the precision the
+daemon's style needs:
+
+* a guard is a statement that *ends* at the lock acquisition —
+  `let [mut] name = <...>.state.lock().expect("...");` — and stays
+  live until `drop(name)`, a bare re-`lock` assignment re-arms it
+  (`name = <...>.state.lock().expect("...");`), and the scope that
+  opened the binding closes it;
+* one-liner statement temporaries
+  (`ctx.state.lock().expect("...").metrics.x += 1;`) release at the
+  end of the statement and are exempt;
+* strings and `//` comments are stripped before any matching, so prose
+  about locks never trips the checker.
+
+Exit 0 = clean; exit 1 = violations listed on stderr.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DAEMON = REPO / "rust" / "src" / "serve" / "daemon.rs"
+
+# The request path: every function a `get_kernel`/`batch` frame flows
+# through between socket read and socket write.
+REQUEST_PATH_FNS = [
+    "handle_frame",
+    "serve_get_kernel",
+    "serve_hit",
+    "serve_memory_miss",
+    "serve_miss",
+    "serve_batch",
+    "emit_served",
+]
+
+CHAR_LIT = re.compile(r"'(\\.|[^'\\])'")
+
+
+def strip_code(line: str) -> str:
+    """Blank out string/char literals and drop `//` comments so only
+    code shapes remain (lifetimes like `&'static` are left alone)."""
+    out = []
+    i, n = 0, len(line)
+    while i < n:
+        c = line[i]
+        if c == '"':
+            j = i + 1
+            while j < n:
+                if line[j] == "\\":
+                    j += 2
+                    continue
+                if line[j] == '"':
+                    break
+                j += 1
+            out.append('""')
+            i = j + 1
+        elif c == "'":
+            m = CHAR_LIT.match(line, i)
+            if m:
+                out.append("' '")
+                i = m.end()
+            else:  # lifetime marker
+                out.append(c)
+                i += 1
+        elif c == "/" and i + 1 < n and line[i + 1] == "/":
+            break
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
+GUARD_BIND = re.compile(
+    r'(?:^|[({\s])(?:let\s+(?:mut\s+)?)?(\w+)\s*=\s*[\w.\s]*'
+    r'\.state\s*\.lock\(\)\s*\.expect\(\s*""\s*\)\s*;\s*$'
+)
+GUARD_LET = re.compile(r"let\s+(?:mut\s+)?(\w+)\s*=")
+DROP = re.compile(r"\bdrop\(\s*(\w+)\s*\)")
+FORBIDDEN_UNDER_STATE = re.compile(r"\.(traces|slo)\s*\.lock\(\)")
+
+
+def check_lock_order(lines: list[str]) -> list[str]:
+    """No traces/slo lock while a state-guard binding is live."""
+    errors: list[str] = []
+    depth = 0
+    # name -> depth the binding's scope opened at (first `let`).
+    live: dict[str, int] = {}
+    known_depth: dict[str, int] = {}
+    for lineno, raw in enumerate(lines, 1):
+        code = strip_code(raw)
+        m = GUARD_BIND.search(code)
+        if m:
+            name = m.group(1)
+            if GUARD_LET.search(code):
+                known_depth[name] = depth
+            # A re-assignment re-arms the guard at its original
+            # binding depth (the `let` scope still owns the slot).
+            live[name] = known_depth.get(name, depth)
+        if live and FORBIDDEN_UNDER_STATE.search(code) and not m:
+            held = ", ".join(sorted(live))
+            errors.append(
+                f"daemon.rs:{lineno}: traces/slo mutex acquired while state "
+                f"guard(s) [{held}] are live: {raw.strip()}"
+            )
+        for d in DROP.finditer(code):
+            live.pop(d.group(1), None)
+        # Brace tracking AFTER the line's checks: a `}` on this line
+        # closes scopes for the NEXT line.
+        for c in code:
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+                dead = [n for n, d in live.items() if d >= depth]
+                for n in dead:
+                    del live[n]
+    return errors
+
+
+FN_DEF = re.compile(r"^\s*(?:pub\s+)?fn\s+(\w+)\s*[(<]")
+ALLOWED_EXPECT = re.compile(r"\.\s*(?:lock|read|write)\(\)\s*\.\s*expect\(")
+ANY_EXPECT = re.compile(r"\.\s*expect\(")
+ANY_UNWRAP = re.compile(r"\.\s*unwrap\(\)")
+
+
+def function_bodies(lines: list[str]) -> dict[str, list[tuple[int, str]]]:
+    """Map fn name -> [(lineno, stripped-code)] of its body."""
+    bodies: dict[str, list[tuple[int, str]]] = {}
+    current: str | None = None
+    depth = 0
+    entered = False
+    for lineno, raw in enumerate(lines, 1):
+        code = strip_code(raw)
+        if current is None:
+            m = FN_DEF.match(code)
+            if m and m.group(1) in REQUEST_PATH_FNS:
+                current = m.group(1)
+                depth = 0
+                entered = False
+                bodies[current] = []
+        if current is not None:
+            bodies[current].append((lineno, code))
+            for c in code:
+                if c == "{":
+                    depth += 1
+                    entered = True
+                elif c == "}":
+                    depth -= 1
+            if entered and depth <= 0:
+                current = None
+    return bodies
+
+
+def check_no_panics(lines: list[str]) -> list[str]:
+    errors: list[str] = []
+    bodies = function_bodies(lines)
+    missing = [f for f in REQUEST_PATH_FNS if f not in bodies]
+    for f in missing:
+        errors.append(
+            f"daemon.rs: request-path function `{f}` not found — update "
+            "REQUEST_PATH_FNS in scripts/check_invariants.py"
+        )
+    for name, body in bodies.items():
+        # Join so `.lock()\n.expect(` chains split across lines still
+        # count as the allowed form.
+        text = "\n".join(code for _, code in body)
+        allowed_spans = [m.span() for m in ALLOWED_EXPECT.finditer(text)]
+
+        def allowed(pos: int) -> bool:
+            return any(a <= pos < b for a, b in allowed_spans)
+
+        for m in ANY_UNWRAP.finditer(text):
+            lineno = body[text.count("\n", 0, m.start())][0]
+            errors.append(
+                f"daemon.rs:{lineno}: `.unwrap()` in request-path fn "
+                f"`{name}` — return a positional error frame instead"
+            )
+        for m in ANY_EXPECT.finditer(text):
+            # The allowed regex starts at `.lock`, so the `.expect` it
+            # covers begins inside its span.
+            if allowed(m.start()):
+                continue
+            lineno = body[text.count("\n", 0, m.start())][0]
+            errors.append(
+                f"daemon.rs:{lineno}: non-lock `.expect(` in request-path "
+                f"fn `{name}` — request handling must not panic"
+            )
+    return errors
+
+
+def main() -> int:
+    if not DAEMON.is_file():
+        print(f"check_invariants: {DAEMON} missing", file=sys.stderr)
+        return 1
+    lines = DAEMON.read_text().splitlines()
+    errors = check_lock_order(lines) + check_no_panics(lines)
+    if errors:
+        print("serve-daemon invariant violations:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    n_guards = sum(
+        1 for raw in lines if GUARD_BIND.search(strip_code(raw))
+    )
+    print(
+        f"check_invariants: OK ({n_guards} state-guard sites, "
+        f"{len(REQUEST_PATH_FNS)} request-path fns panic-free)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
