@@ -40,4 +40,4 @@ pub mod transport;
 pub use admission::{Backlog, HeatSketch, Offer, HEAT_BUCKETS};
 pub use inflight::InflightTable;
 pub use notify::{NotifyChannel, NotifyCursor, NotifyEvent};
-pub use transport::{Listener, ServeAddr, Stream};
+pub use transport::{AddrList, Listener, ServeAddr, Stream};

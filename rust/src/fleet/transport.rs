@@ -24,6 +24,69 @@ use std::os::unix::net::{UnixListener, UnixStream};
 #[cfg(unix)]
 use std::path::PathBuf;
 
+/// A parsed address list: one or more [`ServeAddr`]s from a
+/// comma-separated CLI value. This is THE address parser for every
+/// entry point (`serve`, `query`, `bench serve`) — `--socket` (legacy
+/// alias), `--addr`, and fleet lists all funnel through it, so a
+/// malformed entry produces the same error everywhere, naming the
+/// offending entry and its position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AddrList {
+    pub addrs: Vec<ServeAddr>,
+}
+
+impl AddrList {
+    /// Parse a comma-separated address list. Every entry must parse as
+    /// a [`ServeAddr`]; the error names the malformed entry and its
+    /// 1-based position.
+    pub fn parse(s: &str) -> Result<AddrList, String> {
+        if s.trim().is_empty() {
+            return Err("empty address list".to_string());
+        }
+        let mut addrs = Vec::new();
+        for (i, raw) in s.split(',').enumerate() {
+            let entry = raw.trim();
+            if entry.is_empty() {
+                return Err(format!("address list entry {} is empty in '{s}'", i + 1));
+            }
+            let addr = ServeAddr::parse(entry)
+                .map_err(|e| format!("address list entry {} ('{entry}'): {e}", i + 1))?;
+            addrs.push(addr);
+        }
+        Ok(AddrList { addrs })
+    }
+
+    /// The single address this list must hold (contexts like `serve`
+    /// that listen on exactly one endpoint).
+    pub fn single(self) -> Result<ServeAddr, String> {
+        match self.addrs.len() {
+            1 => Ok(self.addrs.into_iter().next().expect("len checked")),
+            n => Err(format!("expected one address, got {n}")),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.addrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.addrs.is_empty()
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, ServeAddr> {
+        self.addrs.iter()
+    }
+}
+
+impl IntoIterator for AddrList {
+    type Item = ServeAddr;
+    type IntoIter = std::vec::IntoIter<ServeAddr>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.addrs.into_iter()
+    }
+}
+
 /// Where a serving daemon listens (or a client connects).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeAddr {
@@ -108,7 +171,8 @@ impl Listener {
         }
     }
 
-    /// Accept one connection (blocking).
+    /// Accept one connection (blocking, unless the listener was put in
+    /// nonblocking mode — then `WouldBlock` means "no one waiting").
     pub fn accept(&self) -> std::io::Result<Stream> {
         match self {
             #[cfg(unix)]
@@ -117,6 +181,26 @@ impl Listener {
                 let _ = s.set_nodelay(true); // one frame per write: don't batch
                 Stream::Tcp(s)
             }),
+        }
+    }
+
+    /// Switch blocking mode (the evented accept loop polls instead of
+    /// parking in `accept`).
+    pub fn set_nonblocking(&self, nonblocking: bool) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix(listener) => listener.set_nonblocking(nonblocking),
+            Listener::Tcp(listener) => listener.set_nonblocking(nonblocking),
+        }
+    }
+
+    /// The raw fd, for registering with `poll(2)`.
+    #[cfg(unix)]
+    pub fn as_raw_fd(&self) -> std::os::unix::io::RawFd {
+        use std::os::unix::io::AsRawFd as _;
+        match self {
+            Listener::Unix(listener) => listener.as_raw_fd(),
+            Listener::Tcp(listener) => listener.as_raw_fd(),
         }
     }
 }
@@ -151,6 +235,26 @@ impl Stream {
             #[cfg(unix)]
             Stream::Unix(s) => s.try_clone().map(Stream::Unix),
             Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+        }
+    }
+
+    /// Switch blocking mode (reactor connections read/write
+    /// nonblocking; `WouldBlock` re-arms the poll interest).
+    pub fn set_nonblocking(&self, nonblocking: bool) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_nonblocking(nonblocking),
+            Stream::Tcp(s) => s.set_nonblocking(nonblocking),
+        }
+    }
+
+    /// The raw fd, for registering with `poll(2)`.
+    #[cfg(unix)]
+    pub fn as_raw_fd(&self) -> std::os::unix::io::RawFd {
+        use std::os::unix::io::AsRawFd as _;
+        match self {
+            Stream::Unix(s) => s.as_raw_fd(),
+            Stream::Tcp(s) => s.as_raw_fd(),
         }
     }
 }
@@ -212,6 +316,29 @@ mod tests {
         );
         assert!(ServeAddr::parse("").is_err());
         assert_eq!(ServeAddr::parse("unix:/a/b").unwrap().to_string(), "unix:/a/b");
+    }
+
+    #[test]
+    fn addr_list_parses_commas_and_names_the_bad_entry() {
+        let list = AddrList::parse("tcp:127.0.0.1:7461, tcp:127.0.0.1:7462").unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list.addrs[1], ServeAddr::Tcp("127.0.0.1:7462".to_string()));
+        // The error names the malformed entry and its position.
+        let err = AddrList::parse("tcp:127.0.0.1:7461,tcp:no-port").unwrap_err();
+        assert!(err.contains("entry 2"), "{err}");
+        assert!(err.contains("tcp:no-port") || err.contains("no-port"), "{err}");
+        let err = AddrList::parse("tcp:127.0.0.1:7461,,tcp:127.0.0.1:7462").unwrap_err();
+        assert!(err.contains("entry 2"), "{err}");
+        assert!(AddrList::parse("").is_err());
+        assert!(AddrList::parse("  ").is_err());
+    }
+
+    #[test]
+    fn addr_list_single_rejects_fleets() {
+        let one = AddrList::parse("tcp:127.0.0.1:7461").unwrap();
+        assert_eq!(one.single().unwrap(), ServeAddr::Tcp("127.0.0.1:7461".to_string()));
+        let two = AddrList::parse("tcp:127.0.0.1:1,tcp:127.0.0.1:2").unwrap();
+        assert!(two.single().is_err());
     }
 
     #[test]

@@ -88,7 +88,10 @@ USAGE:
                    --trace prints the daemon's retained request traces,
                    slowest first; --slowest N keeps the top N)
   ecokernel bench  serve [--quick] [--requests N] [--zipf S] [--batch N]
-                   [--no-fleet] [--out BENCH_serving.json]
+                   [--no-fleet] [--wire line|binary|both] [--out BENCH_serving.json]
+                   (--wire picks the replay wire: the forever-compat
+                   line-JSON framing, the hello-negotiated binary
+                   framing, or both back-to-back for comparison)
   ecokernel experiment <table1..table5|fig2..fig5|warmcold|all> [--paper]
   ecokernel cache <stats|list|prune|export> --store DIR
   ecokernel artifacts [--dir artifacts] [--list | --check | --run WORKLOAD_ID [--variant ID]]
@@ -270,15 +273,33 @@ fn cmd_analyze(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The daemon address from `--listen`/`--addr` (`unix:`/`tcp:` syntax)
-/// or the backward-compatible `--socket PATH`.
+/// Exactly one daemon address from `--listen`/`--addr` (`unix:`/`tcp:`
+/// syntax) or the backward-compatible `--socket PATH` alias. Routed
+/// through the shared [`ecokernel::serve::AddrList`] parser so a
+/// malformed entry (or an accidental fleet list where one address is
+/// expected) is named precisely.
 #[cfg(unix)]
 fn parse_addr_flags(flags: &Flags, primary: &str) -> anyhow::Result<ecokernel::serve::ServeAddr> {
     let raw = flags
         .get(primary)
         .or_else(|| flags.get("socket"))
         .ok_or_else(|| anyhow::anyhow!("--{primary} ADDR (or --socket PATH) is required"))?;
-    ecokernel::serve::ServeAddr::parse(raw).map_err(anyhow::Error::msg)
+    ecokernel::serve::AddrList::parse(raw)
+        .and_then(ecokernel::serve::AddrList::single)
+        .map_err(anyhow::Error::msg)
+}
+
+/// A comma-separated fleet list from `--addr` (or the `--socket`
+/// alias), via the same shared parser — parse errors name the
+/// malformed entry by position.
+#[cfg(unix)]
+fn parse_fleet_flags(flags: &Flags) -> anyhow::Result<Vec<ecokernel::serve::ServeAddr>> {
+    let raw = flags
+        .get("addr")
+        .or_else(|| flags.get("socket"))
+        .ok_or_else(|| anyhow::anyhow!("--addr ADDR[,ADDR..] is required"))?;
+    let list = ecokernel::serve::AddrList::parse(raw).map_err(anyhow::Error::msg)?;
+    Ok(list.addrs)
 }
 
 /// Run the kernel-serving daemon (blocking until a `shutdown` request).
@@ -338,7 +359,7 @@ fn cmd_serve(_args: &[String]) -> anyhow::Result<()> {
 /// Talk to a running daemon: get a kernel, read stats, or shut it down.
 #[cfg(unix)]
 fn cmd_query(args: &[String]) -> anyhow::Result<()> {
-    use ecokernel::serve::ServeClient;
+    use ecokernel::serve::{Op, ServeClient};
     let flags = Flags::parse(
         args,
         &["json", "wait", "stats", "shutdown", "metrics", "prom", "trace", "health"],
@@ -357,7 +378,7 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
 
     if flags.has("trace") {
         let slowest = flags.parse_num::<usize>("slowest")?.unwrap_or(0);
-        let tr = client.traces(slowest)?;
+        let tr = client.call(Op::Traces { slowest })?.into_traces()?;
         if flags.has("json") {
             println!("{}", tr.to_json());
             return Ok(());
@@ -406,7 +427,7 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
         return Ok(());
     }
     if flags.has("stats") {
-        let s = client.stats()?;
+        let s = client.call(Op::Stats)?.into_stats()?;
         if flags.has("json") {
             println!("{}", s.to_json());
         } else {
@@ -489,7 +510,8 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
             requests.push((w, gpu, mode));
         }
         anyhow::ensure!(!requests.is_empty(), "--batch needs a comma-separated workload list");
-        let replies = client.get_kernel_batch(&requests)?;
+        let n = requests.len();
+        let replies = client.call(Op::Batch(requests.clone()))?.into_batch(n)?;
         if flags.has("json") {
             let entries = replies.iter().map(|r| match r {
                 Ok(k) => k.to_json(),
@@ -536,7 +558,7 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
         let timeout = flags.parse_num::<u64>("timeout")?.unwrap_or(300);
         client.get_kernel_wait(workload, gpu, mode, std::time::Duration::from_secs(timeout))?
     } else {
-        client.get_kernel(workload, gpu, mode)?
+        client.call(Op::GetKernel { workload, gpu, mode, trace: None })?.into_kernel()?
     };
     if flags.has("json") {
         println!("{}", reply.to_json());
@@ -577,17 +599,8 @@ fn cmd_query(_args: &[String]) -> anyhow::Result<()> {
 /// comma-separated fleet.
 #[cfg(unix)]
 fn query_metrics(flags: &Flags) -> anyhow::Result<()> {
-    use ecokernel::serve::{merged_metrics, ServeAddr};
-    let raw = flags
-        .get("addr")
-        .or_else(|| flags.get("socket"))
-        .ok_or_else(|| anyhow::anyhow!("--addr ADDR[,ADDR..] is required"))?;
-    let addrs: Vec<ServeAddr> = raw
-        .split(',')
-        .map(str::trim)
-        .filter(|s| !s.is_empty())
-        .map(|s| ServeAddr::parse(s).map_err(anyhow::Error::msg))
-        .collect::<anyhow::Result<_>>()?;
+    use ecokernel::serve::merged_metrics;
+    let addrs = parse_fleet_flags(flags)?;
     let fm = merged_metrics(&addrs)?;
     // A partial merge is still a merge: warn about every daemon that
     // did not answer (stderr, so --json/--prom output stays parseable)
@@ -662,17 +675,8 @@ fn query_metrics(flags: &Flags) -> anyhow::Result<()> {
 /// critical naming every unreachable address).
 #[cfg(unix)]
 fn query_health(flags: &Flags) -> anyhow::Result<()> {
-    use ecokernel::serve::{merged_health, ServeAddr};
-    let raw = flags
-        .get("addr")
-        .or_else(|| flags.get("socket"))
-        .ok_or_else(|| anyhow::anyhow!("--addr ADDR[,ADDR..] is required"))?;
-    let addrs: Vec<ServeAddr> = raw
-        .split(',')
-        .map(str::trim)
-        .filter(|s| !s.is_empty())
-        .map(|s| ServeAddr::parse(s).map_err(anyhow::Error::msg))
-        .collect::<anyhow::Result<_>>()?;
+    use ecokernel::serve::merged_health;
+    let addrs = parse_fleet_flags(flags)?;
     let fh = merged_health(&addrs)?;
     for (a, e) in &fh.errors {
         eprintln!("warning: daemon {a} unreachable: {e}");
@@ -722,6 +726,13 @@ fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
     }
     if flags.has("no-fleet") {
         opts.fleet = false;
+    }
+    if let Some(w) = flags.get("wire") {
+        anyhow::ensure!(
+            matches!(w, "line" | "binary" | "both"),
+            "--wire must be line, binary, or both (got '{w}')"
+        );
+        opts.wire = w.to_string();
     }
     opts.quick = flags.has("quick");
     if let Some(o) = flags.get("out") {

@@ -8,13 +8,21 @@
 //! op** measured: wall-clock reply p50/p99, per-stage histograms, hit
 //! rate, and frames-per-syscall. Client-side wall time gives req/s.
 //!
+//! The single-daemon phase replays per wire mode (`--wire`): once on
+//! the forever-compat line-JSON framing and once on the
+//! hello-negotiated binary framing, against the same hot daemon. The
+//! per-mode `wire` block in the baseline (req/s, client-side p50/p99,
+//! `negotiated`) is how CI pins that the binary wire actually pays —
+//! requests per second at or above line-JSON, with the parse stage
+//! histogram visibly shrinking.
+//!
 //! Everything that can be deterministic is ([`crate::util::Rng`],
 //! fixed working set, fixed frame mix); the wall-clock numbers are of
 //! course machine-dependent — the JSON carries a `note` saying so.
 
-use super::client::{merged_metrics, ServeClient};
+use super::client::{merged_metrics, BatchRequest, Op, ServeClient};
 use super::daemon::{Daemon, DaemonConfig, DaemonHandle};
-use super::protocol::MetricsReply;
+use super::protocol::{wire_name, MetricsReply};
 use crate::config::{GpuArch, SearchConfig, SearchMode};
 use crate::fleet::ServeAddr;
 use crate::telemetry::{LogHistogram, LEDGER_FAMILIES, LEDGER_GPUS};
@@ -35,6 +43,11 @@ pub struct BenchServeOpts {
     pub batch: usize,
     /// Also run the two-daemon TCP fleet phase.
     pub fleet: bool,
+    /// Which wire(s) the single-daemon phase replays over:
+    /// `"line"`, `"binary"` (hello-negotiated), or `"both"` — both
+    /// runs back-to-back against the same hot daemon so the per-mode
+    /// `wire` block in the baseline is an apples-to-apples comparison.
+    pub wire: String,
     /// CI smoke mode: small request counts, small working set.
     pub quick: bool,
     /// Where the JSON baseline is written.
@@ -48,6 +61,7 @@ impl Default for BenchServeOpts {
             zipf_s: 1.1,
             batch: 8,
             fleet: true,
+            wire: "both".to_string(),
             quick: false,
             out: PathBuf::from("BENCH_serving.json"),
         }
@@ -117,7 +131,10 @@ fn warm(client: &mut ServeClient, set: &[Workload]) -> anyhow::Result<()> {
 }
 
 /// Replay `requests` zipf-sampled requests on one connection, ~¼ of
-/// them packed into `batch`-sized frames. Returns the elapsed seconds.
+/// them packed into `batch`-sized frames. The op mix is identical on
+/// both wires (negotiation is the caller's job), so per-wire numbers
+/// compare like for like. Returns the elapsed seconds plus a
+/// client-side histogram of per-frame reply wall time.
 fn replay(
     client: &mut ServeClient,
     set: &[Workload],
@@ -125,23 +142,30 @@ fn replay(
     rng: &mut Rng,
     requests: usize,
     batch: usize,
-) -> anyhow::Result<f64> {
+) -> anyhow::Result<(f64, LogHistogram)> {
+    let mut lat = LogHistogram::new();
     let t0 = Instant::now();
     let mut issued = 0usize;
     while issued < requests {
         if issued % (4 * batch) < batch && requests - issued >= batch {
-            let reqs: Vec<_> =
+            let reqs: Vec<BatchRequest> =
                 (0..batch).map(|_| (set[zipf.sample(rng)], None, None)).collect();
-            for entry in client.get_kernel_batch(&reqs)? {
+            let t = Instant::now();
+            for entry in client.call(Op::Batch(reqs))?.into_batch(batch)? {
                 entry.map_err(|e| anyhow::anyhow!("batch entry rejected: {e}"))?;
             }
+            lat.record(t.elapsed().as_secs_f64());
             issued += batch;
         } else {
-            client.get_kernel(set[zipf.sample(rng)], None, None)?;
+            let workload = set[zipf.sample(rng)];
+            let t = Instant::now();
+            client.call(Op::GetKernel { workload, gpu: None, mode: None, trace: None })?
+                .into_kernel()?;
+            lat.record(t.elapsed().as_secs_f64());
             issued += 1;
         }
     }
-    Ok(t0.elapsed().as_secs_f64())
+    Ok((t0.elapsed().as_secs_f64(), lat))
 }
 
 fn stage_json(h: &LogHistogram) -> Json {
@@ -232,35 +256,65 @@ pub fn run_bench_serve(opts: &BenchServeOpts) -> anyhow::Result<Json> {
     let zipf = Zipf::new(set.len(), opts.zipf_s);
     let mut rng = Rng::seed_from_u64(0x6e_c0);
 
-    // ---- Phase 1: single daemon on a Unix socket. -----------------
-    eprintln!("bench serve: phase 1 — single daemon ({requests} requests)");
+    // ---- Phase 1: single daemon on a Unix socket, replayed per
+    // wire mode (line-JSON first, then hello-negotiated binary), so
+    // the `wire` block compares the framings on the same hot store. --
+    let wire_modes: &[&str] = match opts.wire.as_str() {
+        "line" => &[wire_name::LINE],
+        "binary" => &[wire_name::BINARY],
+        _ => &[wire_name::LINE, wire_name::BINARY],
+    };
     let dir = fresh_dir("single")?;
     let addr = ServeAddr::Unix(dir.join("bench.sock"));
     let handle = Daemon::spawn(
         DaemonConfig { addr: addr.clone(), store_dir: dir.clone(), search: bench_search(11) },
         None,
     )?;
-    let single = {
+    let (single_metrics, single_traces, wire_blocks, total_issued, total_elapsed) = {
+        let mut warm_client = ServeClient::connect(&addr)?;
+        warm(&mut warm_client, set)?;
+        let mut blocks: Vec<(String, Json)> = Vec::new();
+        let mut total_elapsed = 0.0f64;
+        for &mode in wire_modes {
+            eprintln!("bench serve: phase 1 — {mode} wire replay ({requests} requests)");
+            let mut client = ServeClient::connect(&addr)?;
+            let negotiated = mode == wire_name::BINARY && client.negotiate_binary()?;
+            anyhow::ensure!(
+                mode != wire_name::BINARY || negotiated,
+                "daemon declined binary wire negotiation"
+            );
+            let (elapsed, lat) = replay(&mut client, set, &zipf, &mut rng, requests, opts.batch)?;
+            total_elapsed += elapsed;
+            blocks.push((
+                mode.to_string(),
+                Json::obj(vec![
+                    ("requests", Json::num(requests as f64)),
+                    ("req_per_s", Json::num(requests as f64 / elapsed.max(1e-9))),
+                    ("p50_ms", Json::num(lat.quantile(50.0) * 1e3)),
+                    ("p99_ms", Json::num(lat.quantile(99.0) * 1e3)),
+                    ("negotiated", Json::Bool(negotiated)),
+                ]),
+            ));
+        }
         let mut client = ServeClient::connect(&addr)?;
-        warm(&mut client, set)?;
-        let elapsed = replay(&mut client, set, &zipf, &mut rng, requests, opts.batch)?;
-        let m = client.metrics()?;
+        let m = client.call(Op::Metrics)?.into_metrics()?;
         // The warm-up misses are this phase's only traces — every one
         // complete by now (get_kernel_wait polled until its write-back
         // landed). The top-5 with per-span breakdowns go in the
         // baseline so a regression shows WHERE the time moved.
-        let traces = client.traces(5)?;
-        (m, elapsed, traces)
+        let traces = client.call(Op::Traces { slowest: 5 })?.into_traces()?;
+        (m, traces, blocks, requests * wire_modes.len(), total_elapsed)
     };
     shutdown(&addr, handle)?;
     let _ = std::fs::remove_dir_all(&dir);
 
-    let mut doc: Vec<(String, Json)> = phase_json(&single.0, requests, single.1);
+    let mut doc: Vec<(String, Json)> = phase_json(&single_metrics, total_issued, total_elapsed);
+    doc.push(("wire".to_string(), Json::Obj(wire_blocks.into_iter().collect())));
     doc.push((
         "slowest_traces".to_string(),
-        Json::arr(single.2.traces.iter().map(|t| t.to_json())),
+        Json::arr(single_traces.traces.iter().map(|t| t.to_json())),
     ));
-    doc.push(("requests".to_string(), Json::num(requests as f64)));
+    doc.push(("requests".to_string(), Json::num(total_issued as f64)));
     doc.push(("zipf_s".to_string(), Json::num(opts.zipf_s)));
     doc.push((
         "note".to_string(),
@@ -299,8 +353,8 @@ pub fn run_bench_serve(opts: &BenchServeOpts) -> anyhow::Result<Json> {
         // (its warm loop below then hits without re-searching).
         warm(&mut ca, set)?;
         warm(&mut cb, set)?;
-        let ea = replay(&mut ca, set, &zipf, &mut rng, fleet_requests, opts.batch)?;
-        let eb = replay(&mut cb, set, &zipf, &mut rng, fleet_requests, opts.batch)?;
+        let (ea, _) = replay(&mut ca, set, &zipf, &mut rng, fleet_requests, opts.batch)?;
+        let (eb, _) = replay(&mut cb, set, &zipf, &mut rng, fleet_requests, opts.batch)?;
         let fm = merged_metrics(&[aa.clone(), ab.clone()])?;
         anyhow::ensure!(fm.errors.is_empty(), "bench fleet daemon unreachable: {:?}", fm.errors);
         let mut fleet = phase_json(&fm.merged, 2 * fleet_requests, ea + eb);

@@ -2,25 +2,43 @@
 //! `ecokernel query` and the fleet examples). Transport-agnostic: the
 //! same frames flow over `unix:` and `tcp:` addresses.
 //!
-//! Two request shapes:
+//! # The op API
 //!
-//! * one frame per call ([`ServeClient::get_kernel`] etc.) — one write
-//!   syscall per request;
-//! * the pipelined batch path ([`ServeClient::queue_get_kernel`] +
-//!   [`ServeClient::flush_batch`], or [`ServeClient::get_kernel_batch`]
-//!   directly) — N queued requests packed into ONE `batch` frame and
-//!   ONE write syscall, answered by one positionally-matched
-//!   `batch` reply.
+//! Every wire operation is one [`Op`] variant; [`ServeClient::call`]
+//! sends it and returns the typed [`Reply`]. [`ServeClient::call_many`]
+//! pipelines a whole slice of ops — on the line-JSON wire that is N
+//! frames in one write syscall answered strictly in order; on the
+//! negotiated binary wire it is N **tagged** frames whose replies may
+//! arrive out of order (a hit overtakes a slow miss) and are matched
+//! back to their ops by tag, so the returned vector is always
+//! positionally correct.
+//!
+//! # Wire negotiation
+//!
+//! A client starts on line-JSON (the forever-compat wire). Calling
+//! [`ServeClient::negotiate_binary`] (or connecting via
+//! [`ServeClient::connect_negotiated`]) sends a `hello` frame asking
+//! for the binary wire; a current daemon acks and both sides switch
+//! framing, an old daemon rejects the unknown op and the client
+//! simply stays on line-JSON — downgrade is silent and loss-free.
+//! The codec behind the connection is an internal detail: every `Op`
+//! works identically on both wires.
+//!
+//! The old per-op method zoo (`get_kernel`, `get_kernel_batch`,
+//! `queue_get_kernel`/`flush_batch`, `stats`, `metrics`, `traces`,
+//! `health`) survives one release as thin deprecated wrappers over
+//! [`ServeClient::call`].
 
 use super::protocol::{
-    BatchItem, HealthReply, HealthStatus, HealthTarget, KernelReply, MetricsReply, Reject,
-    Request, Response, StatsReply, TraceReply, MAX_BATCH_ITEMS,
+    wire, wire_name, BatchItem, HealthReply, HealthStatus, HealthTarget, KernelReply,
+    MetricsReply, Reject, Request, Response, StatsReply, TraceReply, MAX_BATCH_ITEMS,
 };
 use crate::config::{GpuArch, SearchMode};
 use crate::fleet::{ServeAddr, Stream};
 use crate::workload::Workload;
 use anyhow::{anyhow, Context as _};
-use std::io::{BufRead as _, BufReader, Write as _};
+use std::collections::HashMap;
+use std::io::{BufRead as _, BufReader, Read as _, Write as _};
 use std::time::{Duration, Instant};
 
 /// One queued `get_kernel` for the batch path.
@@ -40,152 +58,73 @@ impl std::fmt::Display for BatchError {
     }
 }
 
-/// One connection to a serving daemon. Requests are sequential
-/// (send a frame, read the reply line).
-pub struct ServeClient {
-    stream: Stream,
-    reader: BufReader<Stream>,
-    next_id: u64,
-    queued: Vec<BatchRequest>,
+/// One wire operation. [`ServeClient::call`] sends it; the matching
+/// [`Reply`] variant comes back (`Reply::Error` on daemon rejection).
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// One kernel request. `trace` is an optional caller-chosen trace
+    /// id (hex): a reserving miss adopts it as the distributed trace's
+    /// id so the caller can correlate its own log with `query --trace`
+    /// output fleet-wide; `None` lets the daemon mint one.
+    GetKernel {
+        workload: Workload,
+        gpu: Option<GpuArch>,
+        mode: Option<SearchMode>,
+        trace: Option<String>,
+    },
+    /// N kernel requests in ONE `batch` frame (one write syscall),
+    /// answered by one positionally-matched reply. Capped at
+    /// [`MAX_BATCH_ITEMS`]; enforced client-side before any bytes hit
+    /// the wire.
+    Batch(Vec<BatchRequest>),
+    /// Scalar serving counters.
+    Stats,
+    /// Full telemetry snapshot: counters plus reply-time and
+    /// per-stage histograms.
+    Metrics,
+    /// Retained request traces, slowest first (`slowest == 0` asks
+    /// for every completed trace the ring holds).
+    Traces { slowest: usize },
+    /// In-daemon SLO verdicts + drift-watchdog state.
+    Health,
+    /// Graceful daemon stop (acked before the daemon drains).
+    Shutdown,
 }
 
-impl ServeClient {
-    pub fn connect(addr: &ServeAddr) -> anyhow::Result<ServeClient> {
-        let stream = Stream::connect(addr)?;
-        let reader = BufReader::new(stream.try_clone().context("clone daemon stream")?);
-        Ok(ServeClient { stream, reader, next_id: 0, queued: Vec::new() })
+/// What an [`Op`] returns. This IS the wire response enum: a typed
+/// reply for every op, plus `Reply::Error` carrying the daemon's
+/// stable error code. The `into_*` accessors convert to the payload
+/// type, turning a daemon error into a descriptive `anyhow` error.
+pub type Reply = Response;
+
+impl Reply {
+    fn daemon_err(self) -> anyhow::Error {
+        match self {
+            Response::Error { code, message, .. } => anyhow!("daemon error [{code}]: {message}"),
+            other => anyhow!("unexpected response {other:?}"),
+        }
     }
 
-    fn fresh_id(&mut self) -> String {
-        self.next_id += 1;
-        format!("c{}", self.next_id)
-    }
-
-    /// Send one frame line in ONE write syscall: the newline is packed
-    /// into the same buffer, never a second write (the whole point of
-    /// the batch path is frames-per-syscall, so the transport must not
-    /// quietly fragment).
-    fn send_line(&mut self, line: &str) -> anyhow::Result<()> {
-        let mut bytes = Vec::with_capacity(line.len() + 1);
-        bytes.extend_from_slice(line.as_bytes());
-        bytes.push(b'\n');
-        self.stream.write_all(&bytes).context("send frame")?;
-        self.stream.flush().context("flush frame")
-    }
-
-    /// Send one raw line and read one raw reply line (tests use this to
-    /// probe malformed / version-mismatched frames).
-    pub fn roundtrip_raw(&mut self, line: &str) -> anyhow::Result<String> {
-        self.send_line(line)?;
-        let mut reply = String::new();
-        let n = self.reader.read_line(&mut reply).context("read reply")?;
-        anyhow::ensure!(n > 0, "daemon closed the connection");
-        Ok(reply.trim_end().to_string())
-    }
-
-    fn roundtrip(&mut self, req: &Request) -> anyhow::Result<Response> {
-        let line = self.roundtrip_raw(&req.to_json().to_string())?;
-        Response::parse_line(&line).map_err(|e| anyhow!("bad response frame: {e} ({line})"))
-    }
-
-    /// One `get_kernel` request.
-    pub fn get_kernel(
-        &mut self,
-        workload: Workload,
-        gpu: Option<GpuArch>,
-        mode: Option<SearchMode>,
-    ) -> anyhow::Result<KernelReply> {
-        self.get_kernel_traced(workload, gpu, mode, None)
-    }
-
-    /// One `get_kernel` carrying a caller-chosen trace id (hex). A
-    /// reserving miss adopts it as the distributed trace's id, so a
-    /// client can correlate its own request log with `query --trace`
-    /// output fleet-wide; `None` lets the daemon mint one.
-    pub fn get_kernel_traced(
-        &mut self,
-        workload: Workload,
-        gpu: Option<GpuArch>,
-        mode: Option<SearchMode>,
-        trace: Option<&str>,
-    ) -> anyhow::Result<KernelReply> {
-        let id = self.fresh_id();
-        let trace = trace.map(|t| t.to_string());
-        match self.roundtrip(&Request::GetKernel { id, workload, gpu, mode, trace })? {
+    /// The kernel reply, or a descriptive error.
+    pub fn into_kernel(self) -> anyhow::Result<KernelReply> {
+        match self {
             Response::Kernel(r) => Ok(r),
-            Response::Error { code, message, .. } => {
-                Err(anyhow!("daemon error [{code}]: {message}"))
-            }
-            other => Err(anyhow!("unexpected response {other:?}")),
+            other => Err(other.daemon_err()),
         }
     }
 
-    /// Queue one `get_kernel` for the next [`ServeClient::flush_batch`].
-    /// Nothing is written yet.
-    pub fn queue_get_kernel(
-        &mut self,
-        workload: Workload,
-        gpu: Option<GpuArch>,
-        mode: Option<SearchMode>,
-    ) {
-        self.queued.push((workload, gpu, mode));
-    }
-
-    /// Requests queued for the next flush.
-    pub fn queued_len(&self) -> usize {
-        self.queued.len()
-    }
-
-    /// Pack every queued request into ONE `batch` frame — one write
-    /// syscall — and return the positionally-matched replies (entry
-    /// *i* answers the *i*-th queued request). An empty queue is a
-    /// no-op; on a failed flush the queue is restored, so nothing a
-    /// caller queued is silently lost.
-    pub fn flush_batch(&mut self) -> anyhow::Result<Vec<Result<KernelReply, BatchError>>> {
-        if self.queued.is_empty() {
-            return Ok(Vec::new());
-        }
-        let requests = std::mem::take(&mut self.queued);
-        match self.get_kernel_batch(&requests) {
-            Ok(replies) => Ok(replies),
-            Err(e) => {
-                self.queued = requests;
-                Err(e)
-            }
-        }
-    }
-
-    /// N `get_kernel` requests in one frame over one socket write.
-    /// Batches are capped at [`MAX_BATCH_ITEMS`] — enforced here too,
-    /// so an oversized batch fails before any bytes hit the wire.
-    pub fn get_kernel_batch(
-        &mut self,
-        requests: &[BatchRequest],
+    /// The positionally-matched batch results. `expected` is the
+    /// request count — a daemon answering with a different arity is
+    /// an error, never a silent truncation.
+    pub fn into_batch(
+        self,
+        expected: usize,
     ) -> anyhow::Result<Vec<Result<KernelReply, BatchError>>> {
-        anyhow::ensure!(!requests.is_empty(), "empty batch");
-        anyhow::ensure!(
-            requests.len() <= MAX_BATCH_ITEMS,
-            "batch of {} exceeds the {MAX_BATCH_ITEMS}-request cap (split it into chunks)",
-            requests.len()
-        );
-        let batch_id = self.fresh_id();
-        let items: Vec<Result<BatchItem, Reject>> = requests
-            .iter()
-            .enumerate()
-            .map(|(i, &(workload, gpu, mode))| {
-                Ok(BatchItem { id: format!("{batch_id}.{i}"), workload, gpu, mode })
-            })
-            .collect();
-        match self.roundtrip(&Request::Batch { id: batch_id.clone(), items })? {
-            Response::Batch { id, replies } => {
+        match self {
+            Response::Batch { replies, .. } => {
                 anyhow::ensure!(
-                    id == batch_id,
-                    "batch reply id '{id}' does not echo request id '{batch_id}'"
-                );
-                anyhow::ensure!(
-                    replies.len() == requests.len(),
-                    "batch of {} requests got {} replies",
-                    requests.len(),
+                    replies.len() == expected,
+                    "batch of {expected} requests got {} replies",
                     replies.len()
                 );
                 replies
@@ -199,11 +138,281 @@ impl ServeClient {
                     })
                     .collect()
             }
-            Response::Error { code, message, .. } => {
-                Err(anyhow!("daemon error [{code}]: {message}"))
-            }
-            other => Err(anyhow!("unexpected response {other:?}")),
+            other => Err(other.daemon_err()),
         }
+    }
+
+    pub fn into_stats(self) -> anyhow::Result<StatsReply> {
+        match self {
+            Response::Stats(r) => Ok(r),
+            other => Err(other.daemon_err()),
+        }
+    }
+
+    pub fn into_metrics(self) -> anyhow::Result<MetricsReply> {
+        match self {
+            Response::Metrics(r) => Ok(r),
+            other => Err(other.daemon_err()),
+        }
+    }
+
+    pub fn into_traces(self) -> anyhow::Result<TraceReply> {
+        match self {
+            Response::Trace(r) => Ok(r),
+            other => Err(other.daemon_err()),
+        }
+    }
+
+    pub fn into_health(self) -> anyhow::Result<HealthReply> {
+        match self {
+            Response::Health(r) => Ok(r),
+            other => Err(other.daemon_err()),
+        }
+    }
+
+    pub fn into_shutdown_ack(self) -> anyhow::Result<()> {
+        match self {
+            Response::ShutdownAck { .. } => Ok(()),
+            other => Err(other.daemon_err()),
+        }
+    }
+}
+
+/// The framing a connection speaks. Chosen at `hello` negotiation;
+/// internal — every [`Op`] works identically over either.
+enum WireCodec {
+    /// Line-delimited JSON (wire v1, the forever-compat default).
+    Line,
+    /// Length-prefixed tagged frames (wire v2). `rbuf` holds inbound
+    /// bytes straddling frame boundaries.
+    Binary { rbuf: Vec<u8> },
+}
+
+/// One connection to a serving daemon.
+pub struct ServeClient {
+    stream: Stream,
+    reader: BufReader<Stream>,
+    codec: WireCodec,
+    next_id: u64,
+    queued: Vec<BatchRequest>,
+}
+
+impl ServeClient {
+    /// Connect on the line-JSON wire (works against every daemon
+    /// generation). Use [`ServeClient::negotiate_binary`] or
+    /// [`ServeClient::connect_negotiated`] to upgrade.
+    pub fn connect(addr: &ServeAddr) -> anyhow::Result<ServeClient> {
+        let stream = Stream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone().context("clone daemon stream")?);
+        Ok(ServeClient { stream, reader, codec: WireCodec::Line, next_id: 0, queued: Vec::new() })
+    }
+
+    /// Connect and try to negotiate the binary wire, silently staying
+    /// on line-JSON against a daemon that does not speak it. Check
+    /// [`ServeClient::wire`] for the outcome.
+    pub fn connect_negotiated(addr: &ServeAddr) -> anyhow::Result<ServeClient> {
+        let mut client = ServeClient::connect(addr)?;
+        client.negotiate_binary()?;
+        Ok(client)
+    }
+
+    /// The wire this connection currently speaks
+    /// ([`wire_name::LINE`] or [`wire_name::BINARY`]).
+    pub fn wire(&self) -> &'static str {
+        match self.codec {
+            WireCodec::Line => wire_name::LINE,
+            WireCodec::Binary { .. } => wire_name::BINARY,
+        }
+    }
+
+    /// Ask the daemon to switch this connection to the binary wire.
+    /// Returns whether binary was granted. An old daemon rejects the
+    /// unknown `hello` op — that is a clean `Ok(false)` downgrade, not
+    /// an error; the connection keeps working on line-JSON. Safe to
+    /// call repeatedly (idempotent once granted). Must not race other
+    /// in-flight requests — the framing switches right after the ack.
+    pub fn negotiate_binary(&mut self) -> anyhow::Result<bool> {
+        if matches!(self.codec, WireCodec::Binary { .. }) {
+            return Ok(true);
+        }
+        let id = self.fresh_id();
+        let req = Request::Hello { id, wire: wire_name::BINARY.to_string() };
+        let line = self.roundtrip_raw(&req.to_json().to_string())?;
+        match Response::parse_line(&line) {
+            Ok(Response::HelloAck { wire, .. }) if wire == wire_name::BINARY => {
+                self.codec = WireCodec::Binary { rbuf: Vec::new() };
+                Ok(true)
+            }
+            // Daemon granted something other than binary: stay on line.
+            Ok(Response::HelloAck { .. }) => Ok(false),
+            // Old daemon: `hello` is an unknown op. Downgrade cleanly.
+            Ok(Response::Error { .. }) => Ok(false),
+            Ok(other) => Err(anyhow!("unexpected hello response {other:?}")),
+            Err(e) => Err(anyhow!("bad hello response frame: {e} ({line})")),
+        }
+    }
+
+    /// Send one op, return its reply.
+    pub fn call(&mut self, op: Op) -> anyhow::Result<Reply> {
+        self.call_many(vec![op])?
+            .pop()
+            .ok_or_else(|| anyhow!("no reply for op"))
+    }
+
+    /// Pipeline N ops: all requests are written up front (one buffer,
+    /// one write syscall), then all replies are collected. The
+    /// returned vector matches `ops` positionally on BOTH wires —
+    /// on the binary wire replies may physically arrive out of order
+    /// (that is the point) and are reordered by tag here.
+    pub fn call_many(&mut self, ops: Vec<Op>) -> anyhow::Result<Vec<Reply>> {
+        if ops.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut buf = Vec::new();
+        let mut tags = Vec::with_capacity(ops.len());
+        for op in ops {
+            let tag = self.next_id + 1;
+            let req = self.build_request(op)?;
+            match &self.codec {
+                WireCodec::Line => {
+                    buf.extend_from_slice(req.to_json().to_string().as_bytes());
+                    buf.push(b'\n');
+                }
+                WireCodec::Binary { .. } => encode_binary_request(&req, tag, &mut buf),
+            }
+            tags.push(tag);
+        }
+        self.stream.write_all(&buf).context("send frames")?;
+        self.stream.flush().context("flush frames")?;
+        match self.codec {
+            WireCodec::Line => {
+                // Line wire: replies are strictly in-order.
+                let mut replies = Vec::with_capacity(tags.len());
+                for _ in 0..tags.len() {
+                    replies.push(self.read_line_reply()?);
+                }
+                Ok(replies)
+            }
+            WireCodec::Binary { .. } => {
+                // Binary wire: replies arrive in completion order,
+                // tagged; reorder to request order.
+                let mut by_tag: HashMap<u64, Reply> = HashMap::with_capacity(tags.len());
+                while by_tag.len() < tags.len() {
+                    let frame = self.read_binary_frame()?;
+                    let tag = frame.tag;
+                    anyhow::ensure!(
+                        tags.contains(&tag),
+                        "daemon replied with unknown tag {tag}"
+                    );
+                    by_tag.insert(tag, decode_binary_reply(frame)?);
+                }
+                tags.iter()
+                    .map(|t| by_tag.remove(t).ok_or_else(|| anyhow!("no reply for tag {t}")))
+                    .collect()
+            }
+        }
+    }
+
+    fn fresh_id(&mut self) -> String {
+        self.next_id += 1;
+        match self.codec {
+            WireCodec::Line => format!("c{}", self.next_id),
+            // Binary frames address replies by numeric tag; the JSON
+            // id inside kind-0 frames is its canonical rendering.
+            WireCodec::Binary { .. } => wire::tag_id(self.next_id),
+        }
+    }
+
+    /// Turn one op into a wire request (allocating its id — and, on
+    /// the binary wire, its tag `next_id`).
+    fn build_request(&mut self, op: Op) -> anyhow::Result<Request> {
+        Ok(match op {
+            Op::GetKernel { workload, gpu, mode, trace } => {
+                Request::GetKernel { id: self.fresh_id(), workload, gpu, mode, trace }
+            }
+            Op::Batch(requests) => {
+                anyhow::ensure!(!requests.is_empty(), "empty batch");
+                anyhow::ensure!(
+                    requests.len() <= MAX_BATCH_ITEMS,
+                    "batch of {} exceeds the {MAX_BATCH_ITEMS}-request cap (split it into chunks)",
+                    requests.len()
+                );
+                let batch_id = self.fresh_id();
+                let items: Vec<Result<BatchItem, Reject>> = requests
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(workload, gpu, mode))| {
+                        Ok(BatchItem { id: format!("{batch_id}.{i}"), workload, gpu, mode })
+                    })
+                    .collect();
+                Request::Batch { id: batch_id, items }
+            }
+            Op::Stats => Request::Stats { id: self.fresh_id() },
+            Op::Metrics => Request::Metrics { id: self.fresh_id() },
+            Op::Traces { slowest } => Request::Traces { id: self.fresh_id(), slowest },
+            Op::Health => Request::Health { id: self.fresh_id() },
+            Op::Shutdown => Request::Shutdown { id: self.fresh_id() },
+        })
+    }
+
+    fn read_line_reply(&mut self) -> anyhow::Result<Reply> {
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply).context("read reply")?;
+        anyhow::ensure!(n > 0, "daemon closed the connection");
+        let line = reply.trim_end();
+        Response::parse_line(line).map_err(|e| anyhow!("bad response frame: {e} ({line})"))
+    }
+
+    /// Read one whole binary frame (reads straddle frame boundaries;
+    /// leftover bytes stay in the codec's buffer for the next frame).
+    fn read_binary_frame(&mut self) -> anyhow::Result<wire::Frame> {
+        let Self { reader, codec, .. } = self;
+        let WireCodec::Binary { rbuf } = codec else {
+            return Err(anyhow!("connection is not on the binary wire"));
+        };
+        loop {
+            match wire::Frame::decode(rbuf).map_err(|e| anyhow!("bad binary frame: {e}"))? {
+                Some((frame, used)) => {
+                    rbuf.drain(..used);
+                    return Ok(frame);
+                }
+                None => {
+                    let mut chunk = [0u8; 8192];
+                    let n = reader.read(&mut chunk).context("read binary frame")?;
+                    anyhow::ensure!(n > 0, "daemon closed the connection");
+                    rbuf.extend_from_slice(&chunk[..n]);
+                }
+            }
+        }
+    }
+
+    /// Send one raw line and read one raw reply line (tests use this to
+    /// probe malformed / version-mismatched frames). Line wire only.
+    pub fn roundtrip_raw(&mut self, line: &str) -> anyhow::Result<String> {
+        let mut bytes = Vec::with_capacity(line.len() + 1);
+        bytes.extend_from_slice(line.as_bytes());
+        bytes.push(b'\n');
+        self.stream.write_all(&bytes).context("send frame")?;
+        self.stream.flush().context("flush frame")?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply).context("read reply")?;
+        anyhow::ensure!(n > 0, "daemon closed the connection");
+        Ok(reply.trim_end().to_string())
+    }
+
+    // -- conveniences over `call` ------------------------------------
+
+    /// One `get_kernel` carrying a caller-chosen trace id (hex); see
+    /// [`Op::GetKernel`]. `None` lets the daemon mint one.
+    pub fn get_kernel_traced(
+        &mut self,
+        workload: Workload,
+        gpu: Option<GpuArch>,
+        mode: Option<SearchMode>,
+        trace: Option<&str>,
+    ) -> anyhow::Result<KernelReply> {
+        let trace = trace.map(|t| t.to_string());
+        self.call(Op::GetKernel { workload, gpu, mode, trace })?.into_kernel()
     }
 
     /// Poll `get_kernel` until the store serves an exact hit (the
@@ -218,7 +427,9 @@ impl ServeClient {
     ) -> anyhow::Result<KernelReply> {
         let start = Instant::now();
         loop {
-            let reply = self.get_kernel(workload, gpu, mode)?;
+            let reply = self
+                .call(Op::GetKernel { workload, gpu, mode, trace: None })?
+                .into_kernel()?;
             if reply.hit {
                 return Ok(reply);
             }
@@ -230,17 +441,6 @@ impl ServeClient {
                 ));
             }
             std::thread::sleep(Duration::from_millis(100));
-        }
-    }
-
-    pub fn stats(&mut self) -> anyhow::Result<StatsReply> {
-        let id = self.fresh_id();
-        match self.roundtrip(&Request::Stats { id })? {
-            Response::Stats(r) => Ok(r),
-            Response::Error { code, message, .. } => {
-                Err(anyhow!("daemon error [{code}]: {message}"))
-            }
-            other => Err(anyhow!("unexpected response {other:?}")),
         }
     }
 
@@ -256,7 +456,7 @@ impl ServeClient {
     pub fn wait_for_drain(&mut self, timeout: Duration) -> anyhow::Result<StatsReply> {
         let start = Instant::now();
         loop {
-            let s = self.stats()?;
+            let s = self.call(Op::Stats)?.into_stats()?;
             if s.pending_keys == 0 && s.queue_depth == 0 {
                 return Ok(s);
             }
@@ -272,55 +472,126 @@ impl ServeClient {
         }
     }
 
-    /// Full telemetry snapshot: counters plus the reply-time and
-    /// per-stage histograms (the `stats` op carries only scalars).
-    pub fn metrics(&mut self) -> anyhow::Result<MetricsReply> {
-        let id = self.fresh_id();
-        match self.roundtrip(&Request::Metrics { id })? {
-            Response::Metrics(r) => Ok(r),
-            Response::Error { code, message, .. } => {
-                Err(anyhow!("daemon error [{code}]: {message}"))
-            }
-            other => Err(anyhow!("unexpected response {other:?}")),
-        }
-    }
-
-    /// The daemon's retained request traces, slowest first
-    /// (`slowest == 0` asks for every completed trace the ring holds).
-    pub fn traces(&mut self, slowest: usize) -> anyhow::Result<TraceReply> {
-        let id = self.fresh_id();
-        match self.roundtrip(&Request::Traces { id, slowest })? {
-            Response::Trace(r) => Ok(r),
-            Response::Error { code, message, .. } => {
-                Err(anyhow!("daemon error [{code}]: {message}"))
-            }
-            other => Err(anyhow!("unexpected response {other:?}")),
-        }
-    }
-
-    /// The daemon's SLO verdicts + drift-watchdog state (the `health`
-    /// wire op).
-    pub fn health(&mut self) -> anyhow::Result<HealthReply> {
-        let id = self.fresh_id();
-        match self.roundtrip(&Request::Health { id })? {
-            Response::Health(r) => Ok(r),
-            Response::Error { code, message, .. } => {
-                Err(anyhow!("daemon error [{code}]: {message}"))
-            }
-            other => Err(anyhow!("unexpected response {other:?}")),
-        }
-    }
-
     /// Graceful daemon stop (acked before the daemon drains and exits).
     pub fn shutdown(&mut self) -> anyhow::Result<()> {
-        let id = self.fresh_id();
-        match self.roundtrip(&Request::Shutdown { id })? {
-            Response::ShutdownAck { .. } => Ok(()),
-            Response::Error { code, message, .. } => {
-                Err(anyhow!("daemon error [{code}]: {message}"))
-            }
-            other => Err(anyhow!("unexpected response {other:?}")),
+        self.call(Op::Shutdown)?.into_shutdown_ack()
+    }
+
+    // -- the deprecated method zoo (one release of grace) ------------
+
+    /// One `get_kernel` request.
+    #[deprecated(note = "use `call(Op::GetKernel { .. })?.into_kernel()`")]
+    pub fn get_kernel(
+        &mut self,
+        workload: Workload,
+        gpu: Option<GpuArch>,
+        mode: Option<SearchMode>,
+    ) -> anyhow::Result<KernelReply> {
+        self.call(Op::GetKernel { workload, gpu, mode, trace: None })?.into_kernel()
+    }
+
+    /// Queue one `get_kernel` for the next `flush_batch`.
+    #[deprecated(note = "collect `BatchRequest`s and use `call(Op::Batch(..))`")]
+    pub fn queue_get_kernel(
+        &mut self,
+        workload: Workload,
+        gpu: Option<GpuArch>,
+        mode: Option<SearchMode>,
+    ) {
+        self.queued.push((workload, gpu, mode));
+    }
+
+    /// Requests queued for the next flush.
+    #[deprecated(note = "collect `BatchRequest`s and use `call(Op::Batch(..))`")]
+    pub fn queued_len(&self) -> usize {
+        self.queued.len()
+    }
+
+    /// Flush every queued request as ONE `batch` frame. On a failed
+    /// flush the queue is restored, so nothing queued is silently
+    /// lost.
+    #[deprecated(note = "collect `BatchRequest`s and use `call(Op::Batch(..))`")]
+    pub fn flush_batch(&mut self) -> anyhow::Result<Vec<Result<KernelReply, BatchError>>> {
+        if self.queued.is_empty() {
+            return Ok(Vec::new());
         }
+        let requests = std::mem::take(&mut self.queued);
+        let n = requests.len();
+        match self.call(Op::Batch(requests.clone())).and_then(|r| r.into_batch(n)) {
+            Ok(replies) => Ok(replies),
+            Err(e) => {
+                self.queued = requests;
+                Err(e)
+            }
+        }
+    }
+
+    /// N `get_kernel` requests in one frame over one socket write.
+    #[deprecated(note = "use `call(Op::Batch(requests.to_vec()))?.into_batch(n)`")]
+    pub fn get_kernel_batch(
+        &mut self,
+        requests: &[BatchRequest],
+    ) -> anyhow::Result<Vec<Result<KernelReply, BatchError>>> {
+        let n = requests.len();
+        self.call(Op::Batch(requests.to_vec()))?.into_batch(n)
+    }
+
+    /// Scalar serving counters.
+    #[deprecated(note = "use `call(Op::Stats)?.into_stats()`")]
+    pub fn stats(&mut self) -> anyhow::Result<StatsReply> {
+        self.call(Op::Stats)?.into_stats()
+    }
+
+    /// Full telemetry snapshot: counters plus the reply-time and
+    /// per-stage histograms (the `stats` op carries only scalars).
+    #[deprecated(note = "use `call(Op::Metrics)?.into_metrics()`")]
+    pub fn metrics(&mut self) -> anyhow::Result<MetricsReply> {
+        self.call(Op::Metrics)?.into_metrics()
+    }
+
+    /// The daemon's retained request traces, slowest first.
+    #[deprecated(note = "use `call(Op::Traces { slowest })?.into_traces()`")]
+    pub fn traces(&mut self, slowest: usize) -> anyhow::Result<TraceReply> {
+        self.call(Op::Traces { slowest })?.into_traces()
+    }
+
+    /// The daemon's SLO verdicts + drift-watchdog state.
+    #[deprecated(note = "use `call(Op::Health)?.into_health()`")]
+    pub fn health(&mut self) -> anyhow::Result<HealthReply> {
+        self.call(Op::Health)?.into_health()
+    }
+}
+
+/// Frame one request for the binary wire: a trace-less `get_kernel`
+/// rides the fixed-layout kind-1 encoding (no JSON on the hot path);
+/// everything else — including a traced `get_kernel`, whose trace id
+/// the compact layout deliberately does not carry — rides a kind-0
+/// JSON frame. Same bytes either way as far as the daemon's reply
+/// contract is concerned.
+fn encode_binary_request(req: &Request, tag: u64, buf: &mut Vec<u8>) {
+    if let Request::GetKernel { workload, gpu, mode, trace: None, .. } = req {
+        wire::Frame {
+            tag,
+            kind: wire::KIND_GET_KERNEL,
+            payload: wire::encode_get_kernel(workload, *gpu, *mode),
+        }
+        .encode_into(buf);
+    } else {
+        wire::Frame::json(tag, &req.to_json()).encode_into(buf);
+    }
+}
+
+fn decode_binary_reply(frame: wire::Frame) -> anyhow::Result<Reply> {
+    match frame.kind {
+        wire::KIND_KERNEL_REPLY => wire::decode_kernel_reply(frame.tag, &frame.payload)
+            .map(Response::Kernel)
+            .map_err(|e| anyhow!("bad kernel reply frame: {e}")),
+        wire::KIND_JSON => {
+            let text =
+                std::str::from_utf8(&frame.payload).context("reply frame payload utf-8")?;
+            Response::parse_line(text).map_err(|e| anyhow!("bad response frame: {e} ({text})"))
+        }
+        other => Err(anyhow!("unknown reply frame kind {other}")),
     }
 }
 
@@ -348,7 +619,10 @@ pub fn merged_metrics(addrs: &[ServeAddr]) -> anyhow::Result<FleetMetrics> {
     let mut merged: Option<MetricsReply> = None;
     let mut errors: Vec<(String, String)> = Vec::new();
     for addr in addrs {
-        match ServeClient::connect(addr).and_then(|mut c| c.metrics()) {
+        let answer = ServeClient::connect(addr)
+            .and_then(|mut c| c.call(Op::Metrics))
+            .and_then(Reply::into_metrics);
+        match answer {
             Ok(m) => match &mut merged {
                 Some(acc) => acc.merge(&m),
                 None => merged = Some(m),
@@ -391,7 +665,10 @@ pub fn merged_health(addrs: &[ServeAddr]) -> anyhow::Result<FleetHealth> {
     let mut merged: Option<HealthReply> = None;
     let mut errors: Vec<(String, String)> = Vec::new();
     for addr in addrs {
-        match ServeClient::connect(addr).and_then(|mut c| c.health()) {
+        let answer = ServeClient::connect(addr)
+            .and_then(|mut c| c.call(Op::Health))
+            .and_then(Reply::into_health);
+        match answer {
             Ok(h) => match &mut merged {
                 Some(acc) => acc.merge_worst(&h),
                 None => merged = Some(h),

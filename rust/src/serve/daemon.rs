@@ -73,6 +73,8 @@
 //!   old FIFO drop.
 
 use super::metrics::{reply_time_s, ServeMetrics};
+#[cfg(not(unix))]
+use super::protocol::wire_name;
 use super::protocol::{
     error_code, BatchItem, DriftHealth, HealthReply, HealthStatus, HealthTarget, KernelReply,
     MetricsReply, Reject, Request, Response, ServeSource, ServeTier, StatsReply, TraceReply,
@@ -80,8 +82,10 @@ use super::protocol::{
 };
 use crate::config::{GpuArch, SearchConfig, SearchMode};
 use crate::coordinator::{EventLog, PoolEvent, SearchJob, WorkerPool};
+#[cfg(not(unix))]
+use crate::fleet::Stream;
 use crate::fleet::{
-    Backlog, HeatSketch, InflightTable, Listener, NotifyChannel, Offer, ServeAddr, Stream,
+    Backlog, HeatSketch, InflightTable, Listener, NotifyChannel, Offer, ServeAddr,
 };
 use crate::schedule::space::ScheduleSpace;
 use crate::search::RoundStats;
@@ -98,6 +102,7 @@ use crate::telemetry::{
 use crate::util::Json;
 use crate::workload::Workload;
 use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+#[cfg(not(unix))]
 use std::io::{BufRead as _, BufReader, Write as _};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -203,7 +208,7 @@ struct ServeState {
 }
 
 /// Everything a connection handler needs, shared across threads.
-struct Ctx {
+pub(super) struct Ctx {
     /// Internally synchronized per shard; no outer lock.
     store: ShardedStore,
     state: Mutex<ServeState>,
@@ -234,6 +239,32 @@ struct Ctx {
     started: Instant,
     /// Drift-watchdog window state (see [`SloWindows`]).
     slo: Mutex<SloWindows>,
+}
+
+impl Ctx {
+    pub(super) fn is_shutting(&self) -> bool {
+        self.shutting.load(Ordering::SeqCst)
+    }
+
+    pub(super) fn begin_shutdown(&self) {
+        self.shutting.store(true, Ordering::SeqCst);
+    }
+
+    /// Count one `hello` negotiation (whatever was granted).
+    pub(super) fn note_hello(&self) {
+        self.state.lock().expect("state lock").metrics.n_hello += 1;
+    }
+
+    /// Count binary frames received on a wire-v2 connection.
+    pub(super) fn note_binary_frames(&self, n: usize) {
+        self.state.lock().expect("state lock").metrics.n_binary_frames += n;
+    }
+
+    /// Count one reply written out of arrival order (a fast reply that
+    /// overtook an earlier slow sibling on the same connection).
+    pub(super) fn note_ooo_reply(&self) {
+        self.state.lock().expect("state lock").metrics.n_ooo_replies += 1;
+    }
 }
 
 /// A bound, running daemon (listener open, workers + writer started).
@@ -387,6 +418,13 @@ impl Daemon {
     /// the worker pool, flush write-backs, release fleet claims, and
     /// remove a Unix socket file.
     pub fn run(self) -> anyhow::Result<()> {
+        // The evented data plane: nonblocking accept + `poll(2)`
+        // reactors sized to cores, per-connection buffers, and a slow
+        // lane for miss/batch work (see [`super::reactor`]). Platforms
+        // without `poll` keep the blocking thread-per-connection loop.
+        #[cfg(unix)]
+        super::reactor::serve(self.listener, Arc::clone(&self.ctx));
+        #[cfg(not(unix))]
         loop {
             match self.listener.accept() {
                 Ok(stream) => {
@@ -1358,6 +1396,10 @@ fn close_shed_trace(ctx: &Ctx, pending: Option<&PendingMiss>, reason: &str) {
 
 /// One connection: serve frames until the client disconnects (or asks
 /// for shutdown).
+/// The blocking fallback connection handler (non-unix platforms,
+/// where the `poll(2)` reactor is unavailable): line-JSON only, one
+/// thread per connection, strictly in-order replies.
+#[cfg(not(unix))]
 fn handle_connection(ctx: &Ctx, stream: Stream) {
     let reader = match stream.try_clone() {
         Ok(s) => BufReader::new(s),
@@ -1382,26 +1424,30 @@ fn handle_connection(ctx: &Ctx, stream: Stream) {
         }
         let _ = out.flush();
         if traced {
-            // Reply-write is only measurable after the bytes left; one
-            // short reacquisition of the state lock, nothing else.
-            let secs = t_write.elapsed().as_secs_f64();
-            ctx.state.lock().expect("state lock").metrics.record_stage(Stage::ReplyWrite, secs);
-            // A miss that opened a trace this frame gets the same
-            // measurement as a span — the warm-guess reply leaving the
-            // socket while the real search runs in the background.
-            if let Some(tid) = opened {
-                let mut traces = ctx.traces.lock().expect("traces lock");
-                if let Some(start) = traces.start_unix_s(tid) {
-                    let off = (unix_now_s() - start - secs).max(0.0);
-                    traces.span(tid, Span::new("reply_write", off, secs));
-                }
-            }
+            note_reply_write(ctx, opened, t_write.elapsed().as_secs_f64());
         }
         if shutdown {
             ctx.shutting.store(true, Ordering::SeqCst);
             // Wake the accept loop with a throwaway connection.
             let _ = Stream::connect(&ctx.addr);
             break;
+        }
+    }
+}
+
+/// Record the reply-write stage for one traced reply, after its bytes
+/// left (or at least entered the socket buffer): the stage-histogram
+/// record, plus — when this frame opened a distributed trace (it was
+/// the RESERVING miss) — the same measurement as a `reply_write` span
+/// on that trace. One short state-lock reacquisition, then the trace
+/// lock, never both at once.
+pub(super) fn note_reply_write(ctx: &Ctx, opened: Option<TraceId>, secs: f64) {
+    ctx.state.lock().expect("state lock").metrics.record_stage(Stage::ReplyWrite, secs);
+    if let Some(tid) = opened {
+        let mut traces = ctx.traces.lock().expect("traces lock");
+        if let Some(start) = traces.start_unix_s(tid) {
+            let off = (unix_now_s() - start - secs).max(0.0);
+            traces.span(tid, Span::new("reply_write", off, secs));
         }
     }
 }
@@ -1431,32 +1477,139 @@ impl ReqTrace {
 /// Dispatch one request frame; returns (response frame, shutdown?,
 /// kernel-serving frame? — only those record the reply-write stage,
 /// trace opened by this frame — it gets the reply-write span too).
+/// Only the blocking non-unix loop uses this; the reactor drives
+/// [`dispatch_fast`]/[`run_slow`] directly so it can interleave.
+#[cfg(not(unix))]
 fn handle_frame(ctx: &Ctx, line: &str) -> (Json, bool, bool, Option<TraceId>) {
+    match dispatch_fast(ctx, line) {
+        FrameAction::Reply(frame, shutdown, traced, opened) => (frame, shutdown, traced, opened),
+        // This strictly-in-order entry point cannot switch framing
+        // mid-stream, so it declines binary by acking `line` — the
+        // negotiation contract explicitly allows the daemon to grant
+        // less than was asked.
+        FrameAction::Hello { id, .. } => (
+            Response::HelloAck { id, wire: wire_name::LINE.to_string() }.to_json(),
+            false,
+            false,
+            None,
+        ),
+        FrameAction::Slow(job) => {
+            let (body, opened) = run_slow(ctx, job);
+            (body.into_json(), false, true, opened)
+        }
+    }
+}
+
+/// What one parsed frame needs from the transport loop. The fast path
+/// — rejects, admin ops, and `get_kernel` whose per-shard memory probe
+/// hits — is answered inline on the calling (reactor) thread in
+/// microseconds. Claim/refresh I/O and batch fan-out go to the slow
+/// lane so they can never stall a sibling connection's hits.
+pub(super) enum FrameAction {
+    /// Reply computed inline: `(frame, shutdown, traced, opened)`.
+    Reply(Json, bool, bool, Option<TraceId>),
+    /// A `hello` negotiation. The transport loop owns the framing
+    /// state, so IT builds the ack and flips (or declines).
+    Hello { id: String, wire: String },
+    /// Run on the slow lane ([`run_slow`]), off the reactor thread.
+    Slow(SlowJob),
+}
+
+/// A unit of slow-lane work: a `get_kernel` memory miss (refresh +
+/// claim + enqueue I/O) or a whole `batch` frame.
+pub(super) enum SlowJob {
+    Miss(MissJob),
+    Batch { id: String, items: Vec<Result<BatchItem, Reject>>, parse_s: f64 },
+}
+
+/// A memory miss, probed but unanswered: everything
+/// [`serve_memory_miss`] needs, detached from the reactor thread.
+pub(super) struct MissJob {
+    id: String,
+    workload: Workload,
+    cfg: SearchConfig,
+    key: String,
+    trace: ReqTrace,
+}
+
+/// A slow-lane reply body. Kernel replies keep their typed form so the
+/// binary wire can encode them parse-free (kind 2); everything else is
+/// already a JSON frame.
+pub(super) enum SlowReplyBody {
+    Kernel(KernelReply),
+    Frame(Json),
+}
+
+impl SlowReplyBody {
+    pub(super) fn into_json(self) -> Json {
+        match self {
+            SlowReplyBody::Kernel(reply) => reply.to_json(),
+            SlowReplyBody::Frame(frame) => frame,
+        }
+    }
+}
+
+/// Parse one line-JSON frame and answer as much of it as the fast
+/// path can: everything except memory misses and batches, which come
+/// back as [`FrameAction::Slow`] for the slow lane.
+pub(super) fn dispatch_fast(ctx: &Ctx, line: &str) -> FrameAction {
     let t0 = Instant::now();
     let parsed = Request::parse_line(line);
     let parse_s = t0.elapsed().as_secs_f64();
     match parsed {
-        Err(rej) => (rej.to_json(), false, false, None),
+        Err(rej) => FrameAction::Reply(rej.to_json(), false, false, None),
         Ok(Request::Shutdown { id }) => {
-            (Response::ShutdownAck { id }.to_json(), true, false, None)
+            FrameAction::Reply(Response::ShutdownAck { id }.to_json(), true, false, None)
         }
-        Ok(Request::Stats { id }) => (stats_reply(ctx, id).to_json(), false, false, None),
-        Ok(Request::Metrics { id }) => (metrics_reply(ctx, id).to_json(), false, false, None),
-        Ok(Request::Health { id }) => (health_reply(ctx, id).to_json(), false, false, None),
+        Ok(Request::Stats { id }) => {
+            FrameAction::Reply(stats_reply(ctx, id).to_json(), false, false, None)
+        }
+        Ok(Request::Metrics { id }) => {
+            FrameAction::Reply(metrics_reply(ctx, id).to_json(), false, false, None)
+        }
+        Ok(Request::Health { id }) => {
+            FrameAction::Reply(health_reply(ctx, id).to_json(), false, false, None)
+        }
         Ok(Request::Traces { id, slowest }) => {
-            (traces_reply(ctx, id, slowest).to_json(), false, false, None)
+            FrameAction::Reply(traces_reply(ctx, id, slowest).to_json(), false, false, None)
+        }
+        Ok(Request::Hello { id, wire }) => {
+            ctx.note_hello();
+            FrameAction::Hello { id, wire }
         }
         Ok(Request::GetKernel { id, workload, gpu, mode, trace: wire }) => {
-            let mut trace = ReqTrace::begin(t0);
-            trace.wire = wire.as_deref().and_then(TraceId::from_hex);
-            trace.stages.add(Stage::Parse, parse_s);
-            let reply = serve_get_kernel(ctx, id, workload, gpu, mode, &mut trace);
-            (reply.to_json(), false, true, trace.opened)
+            let wire = wire.as_deref().and_then(TraceId::from_hex);
+            match serve_get_kernel(ctx, id, workload, gpu, mode, t0, parse_s, wire) {
+                Ok((reply, opened)) => FrameAction::Reply(reply.to_json(), false, true, opened),
+                Err(job) => FrameAction::Slow(SlowJob::Miss(job)),
+            }
         }
         Ok(Request::Batch { id, items }) => {
-            (serve_batch(ctx, id, items, parse_s).to_json(), false, true, None)
+            FrameAction::Slow(SlowJob::Batch { id, items, parse_s })
         }
     }
+}
+
+/// Finish one slow-lane job (blocking I/O allowed here).
+pub(super) fn run_slow(ctx: &Ctx, job: SlowJob) -> (SlowReplyBody, Option<TraceId>) {
+    match job {
+        SlowJob::Miss(job) => {
+            let (reply, opened) = finish_miss(ctx, job);
+            (SlowReplyBody::Kernel(reply), opened)
+        }
+        SlowJob::Batch { id, items, parse_s } => {
+            (SlowReplyBody::Frame(serve_batch(ctx, id, items, parse_s).to_json()), None)
+        }
+    }
+}
+
+/// The miss continuation: targeted shard refresh, fleet claim, search
+/// enqueue — every blocking step the probe deferred.
+pub(super) fn finish_miss(ctx: &Ctx, job: MissJob) -> (KernelReply, Option<TraceId>) {
+    let MissJob { id, workload, cfg, key, mut trace } = job;
+    let reply = serve_memory_miss(ctx, id, workload, cfg, key, &mut trace);
+    let opened = trace.opened;
+    (reply, opened)
 }
 
 /// Answer a `trace` frame: the ring's retained traces, slowest first
@@ -1548,14 +1701,27 @@ fn request_cfg(ctx: &Ctx, gpu: Option<GpuArch>, mode: Option<SearchMode>) -> Sea
     cfg
 }
 
-fn serve_get_kernel(
+/// The probe half of `get_kernel`, shared by the line and binary
+/// wires: config + key resolution, heat credit, and the per-shard
+/// memory probe. A hit is answered right here (the entire fast path —
+/// microseconds, no blocking I/O beyond the shard read, safe on a
+/// reactor thread); a memory miss comes back as the [`MissJob`] that
+/// [`finish_miss`] completes, inline on the blocking path or on the
+/// slow lane on the evented one.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn serve_get_kernel(
     ctx: &Ctx,
     id: String,
     workload: Workload,
     gpu: Option<GpuArch>,
     mode: Option<SearchMode>,
-    trace: &mut ReqTrace,
-) -> KernelReply {
+    t0: Instant,
+    parse_s: f64,
+    wire_trace: Option<TraceId>,
+) -> Result<(KernelReply, Option<TraceId>), MissJob> {
+    let mut trace = ReqTrace::begin(t0);
+    trace.wire = wire_trace;
+    trace.stages.add(Stage::Parse, parse_s);
     let cfg = request_cfg(ctx, gpu, mode);
     let key = serve_key(&workload.id(), cfg.gpu.name(), cfg.mode.name(), &config_fingerprint(&cfg));
 
@@ -1565,15 +1731,16 @@ fn serve_get_kernel(
     // Exact hit straight from memory: NO per-request refresh I/O — the
     // notify/poll refresh loop streams foreign write-backs in off the
     // request path. A request racing ahead of its notify falls through
-    // to the memory-miss path below, whose targeted refresh still
+    // to the memory-miss job below, whose targeted refresh still
     // finds the landed record.
     let t = Instant::now();
     let found = ctx.store.get(workload, &cfg);
     trace.stages.add(Stage::ShardRead, t.elapsed().as_secs_f64());
     if let Some(rec) = found {
-        return serve_hit(ctx, id, &key, &rec, trace);
+        let reply = serve_hit(ctx, id, &key, &rec, &trace);
+        return Ok((reply, trace.opened));
     }
-    serve_memory_miss(ctx, id, workload, cfg, key, trace)
+    Err(MissJob { id, workload, cfg, key, trace })
 }
 
 /// Serve an exact hit: the recorded, measured kernel, zero cost.

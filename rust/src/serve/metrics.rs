@@ -82,6 +82,16 @@ pub struct ServeMetrics {
     /// relerr crossed the `[slo]` ceiling (ISSUE 8). Bounded per
     /// interval by `slo.drift_budget`.
     pub n_drift_researches: usize,
+    /// `hello` negotiations handled (whatever the outcome — the ack's
+    /// `wire` field says what was granted).
+    pub n_hello: usize,
+    /// Frames received on the wire-v2 binary framing (kinds 0–2;
+    /// line-JSON frames are `n_requests`-adjacent but uncounted here).
+    pub n_binary_frames: usize,
+    /// Replies written out of arrival order on a binary connection —
+    /// each one is a hit (or other fast reply) that did NOT wait
+    /// behind an earlier slow sibling. The multiplexing win, counted.
+    pub n_ooo_replies: usize,
     /// Energy-savings ledger (ISSUE 8): joules saved vs the latency-only
     /// baseline per served hit, measurement joules paid per landed
     /// search, both per (gpu, workload-family). Fixed arrays — recording
@@ -231,7 +241,7 @@ impl ServeMetrics {
 
     /// Counter name/value pairs, names matching the `stats` wire
     /// fields — the `metrics` op serves these as its counter map.
-    pub fn counter_pairs(&self) -> [(&'static str, u64); 18] {
+    pub fn counter_pairs(&self) -> [(&'static str, u64); 21] {
         [
             ("n_requests", self.n_requests as u64),
             ("n_hits", self.n_hits as u64),
@@ -250,6 +260,9 @@ impl ServeMetrics {
             ("n_notify_refresh", self.n_notify_refresh as u64),
             ("n_poll_refresh", self.n_poll_refresh as u64),
             ("n_drift_researches", self.n_drift_researches as u64),
+            ("n_hello", self.n_hello as u64),
+            ("n_binary_frames", self.n_binary_frames as u64),
+            ("n_ooo_replies", self.n_ooo_replies as u64),
             ("n_invalid_samples", self.n_invalid_samples()),
         ]
     }

@@ -9,8 +9,19 @@
 //! * [`protocol`] — versioned, line-delimited JSON frames
 //!   (request/response/error, stable error codes), identical on both
 //!   wires; a `batch` frame carries N `get_kernel` requests per
-//!   socket write with positionally-matched replies;
-//! * [`daemon`] — the socket server: exact hits reply instantly from
+//!   socket write with positionally-matched replies. A `hello` frame
+//!   can negotiate the length-prefixed **binary wire v2**
+//!   ([`protocol::wire`]): tagged frames, out-of-order replies, a
+//!   fixed-layout `get_kernel`/kernel-reply encoding that skips JSON
+//!   entirely on the hot path. Line-JSON stays the compat wire
+//!   forever — a connection that never says `hello` is served
+//!   byte-identically to every prior release;
+//! * [`daemon`] — the socket server: an evented `poll(2)` reactor
+//!   accept loop sized to cores (no thread-per-connection), a fast
+//!   lane that answers hits and admin ops inline, and a slow lane for
+//!   misses and batches so one miss never head-of-line-blocks a
+//!   sibling hit on a multiplexed binary connection. Exact hits reply
+//!   instantly from
 //!   the sharded store; misses reply with a warm-start guess — or,
 //!   with no neighbor in range, the search-free **static tier**
 //!   ([`crate::analysis`]) — and enqueue a real search on a daemon-owned
@@ -50,17 +61,20 @@ pub mod client;
 pub mod daemon;
 pub mod metrics;
 pub mod protocol;
+#[cfg(unix)]
+mod reactor;
 
-pub use crate::fleet::ServeAddr;
+pub use crate::fleet::{AddrList, ServeAddr};
 pub use bench::{run_bench_serve, BenchServeOpts};
 pub use client::{
-    merged_health, merged_metrics, BatchError, BatchRequest, FleetHealth, FleetMetrics,
+    merged_health, merged_metrics, BatchError, BatchRequest, FleetHealth, FleetMetrics, Op, Reply,
     ServeClient,
 };
 pub use daemon::{Daemon, DaemonConfig, DaemonHandle};
 pub use metrics::{ServeMetrics, MODEL_REGIMES};
 pub use protocol::{
-    error_code, BatchItem, DriftHealth, HealthReply, HealthStatus, HealthTarget, KernelReply,
-    MetricsReply, Reject, Request, Response, ServeSource, ServeTier, StatsReply, TraceReply,
-    HEALTH_VERSION, MAX_BATCH_ITEMS, METRICS_VERSION, PROTOCOL_VERSION, TRACE_VERSION,
+    error_code, wire, wire_name, BatchItem, DriftHealth, HealthReply, HealthStatus, HealthTarget,
+    KernelReply, MetricsReply, Reject, Request, Response, ServeSource, ServeTier, StatsReply,
+    TraceReply, HEALTH_VERSION, MAX_BATCH_ITEMS, METRICS_VERSION, PROTOCOL_VERSION, TRACE_VERSION,
+    WIRE_VERSION,
 };

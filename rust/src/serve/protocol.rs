@@ -37,6 +37,12 @@
 //!   [`HEALTH_VERSION`]. Fleet clients fold N daemons' frames with
 //!   [`HealthReply::merge_worst`] — the fleet is as healthy as its
 //!   least healthy member;
+//! * `hello` — wire negotiation: the client proposes `"wire":
+//!   "binary"` and, when the daemon acks it, both directions switch
+//!   to the length-prefixed tagged binary framing ([`wire`], wire
+//!   v2) with out-of-order replies. A connection that never sends
+//!   `hello` speaks line-JSON forever, byte-identical to the
+//!   pre-negotiation daemon;
 //! * `shutdown` — graceful daemon stop (acked before the socket
 //!   closes).
 //!
@@ -84,6 +90,21 @@ pub const HEALTH_VERSION: u64 = 1;
 /// daemon buffer an unbounded reply frame.
 pub const MAX_BATCH_ITEMS: usize = 1024;
 
+/// Wire-format revision negotiated by the `hello` op. Wire v1 is the
+/// line-JSON framing every connection starts in (and stays in forever
+/// unless it negotiates up — the compat guarantee); wire v2 is the
+/// length-prefixed binary framing with client-assigned reply tags
+/// (see [`wire`]).
+pub const WIRE_VERSION: u64 = 2;
+
+/// The `wire` field values a `hello` frame can carry / an ack echoes.
+pub mod wire_name {
+    /// Line-delimited JSON (wire v1, the default and compat wire).
+    pub const LINE: &str = "line";
+    /// Length-prefixed binary frames with reply tags (wire v2).
+    pub const BINARY: &str = "binary";
+}
+
 /// Stable error codes carried by error frames.
 pub mod error_code {
     /// Unparseable frame, unknown op, or malformed fields.
@@ -120,6 +141,13 @@ pub enum Request {
     },
     Stats { id: String },
     Metrics { id: String },
+    /// Wire negotiation: the client proposes a framing (`"binary"` /
+    /// `"line"`); the daemon acks with the framing it will actually
+    /// speak from the next frame on. Always sent line-JSON (it is the
+    /// first frame on a fresh connection), so an old daemon answers
+    /// `bad_request` ("unknown op 'hello'") and the client cleanly
+    /// stays on line-JSON.
+    Hello { id: String, wire: String },
     /// Completed traces from the daemon's [`TraceLog`] ring, slowest
     /// first, at most `slowest` of them (0 = every retained trace).
     ///
@@ -215,6 +243,11 @@ impl Request {
                 fields.push(("op", Json::str("metrics")));
                 fields.push(("id", Json::str(id.clone())));
             }
+            Request::Hello { id, wire } => {
+                fields.push(("op", Json::str("hello")));
+                fields.push(("id", Json::str(id.clone())));
+                fields.push(("wire", Json::str(wire.clone())));
+            }
             Request::Traces { id, slowest } => {
                 fields.push(("op", Json::str("trace")));
                 fields.push(("id", Json::str(id.clone())));
@@ -268,6 +301,17 @@ impl Request {
                 Ok(Request::Traces { id, slowest })
             }
             "health" => Ok(Request::Health { id }),
+            "hello" => {
+                // An absent/unknown `wire` is NOT an error: the ack
+                // simply names the framing the daemon will speak
+                // (line), so future wire names degrade gracefully.
+                let wire = v
+                    .get("wire")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or(wire_name::LINE)
+                    .to_string();
+                Ok(Request::Hello { id, wire })
+            }
             "shutdown" => Ok(Request::Shutdown { id }),
             "get_kernel" => {
                 let (workload, gpu, mode) = parse_get_kernel_fields(&v, &id)?;
@@ -1236,6 +1280,10 @@ pub enum Response {
     Metrics(MetricsReply),
     Trace(TraceReply),
     Health(HealthReply),
+    /// Ack of a `hello` negotiation: `wire` names the framing the
+    /// daemon speaks from the next frame on (it may decline binary by
+    /// acking `"line"`); `wire_v` is 2 for binary, 1 for line.
+    HelloAck { id: String, wire: String },
     ShutdownAck { id: String },
     Error { id: Option<String>, code: String, message: String },
 }
@@ -1255,6 +1303,17 @@ impl Response {
             Response::Metrics(r) => r.to_json(),
             Response::Trace(r) => r.to_json(),
             Response::Health(r) => r.to_json(),
+            Response::HelloAck { id, wire } => {
+                let wire_v = if wire == wire_name::BINARY { WIRE_VERSION } else { 1 };
+                Json::obj(vec![
+                    ("v", Json::num(PROTOCOL_VERSION as f64)),
+                    ("id", Json::str(id.clone())),
+                    ("ok", Json::Bool(true)),
+                    ("op", Json::str("hello")),
+                    ("wire", Json::str(wire.clone())),
+                    ("wire_v", Json::num(wire_v as f64)),
+                ])
+            }
             Response::ShutdownAck { id } => Json::obj(vec![
                 ("v", Json::num(PROTOCOL_VERSION as f64)),
                 ("id", Json::str(id.clone())),
@@ -1324,9 +1383,332 @@ impl Response {
             "metrics" => Ok(Response::Metrics(MetricsReply::from_json(v)?)),
             "trace" => Ok(Response::Trace(TraceReply::from_json(v)?)),
             "health" => Ok(Response::Health(HealthReply::from_json(v)?)),
+            "hello" => {
+                Ok(Response::HelloAck { id: get_str(v, "id")?, wire: get_str(v, "wire")? })
+            }
             "shutdown" => Ok(Response::ShutdownAck { id: get_str(v, "id")? }),
             other => Err(format!("unknown response op '{other}'")),
         }
+    }
+}
+
+/// The wire-v2 binary framing: length-prefixed frames with
+/// client-assigned reply tags, negotiated per connection by `hello`.
+///
+/// Frame layout (all integers little-endian):
+///
+/// ```text
+/// [len: u32][tag: u64][kind: u8][payload: len-9 bytes]
+/// ```
+///
+/// `len` counts every byte after the length field (tag + kind +
+/// payload), so a reader needs 4 bytes to size the frame and `4+len`
+/// to have it whole. `tag` is chosen by the client and echoed verbatim
+/// on the reply — replies may arrive **out of order**, the tag is the
+/// only correlation. Kinds:
+///
+/// * `0` — the payload is one line-JSON frame object (any op). Every
+///   logical op rides on the binary wire this way; errors always come
+///   back as kind-0 JSON error frames so new failure modes never need
+///   new binary encodings.
+/// * `1` — a binary `get_kernel` request (the hot op, parse-free):
+///   workload family + dims as `u32`s, then length-prefixed optional
+///   `gpu`/`mode` names. The request id is implied: `t{tag}`.
+/// * `2` — a binary `get_kernel` reply (fixed layout, parse-free).
+pub mod wire {
+    use super::*;
+
+    /// Payload is one line-JSON frame object (request or response).
+    pub const KIND_JSON: u8 = 0;
+    /// Payload is a binary `get_kernel` request.
+    pub const KIND_GET_KERNEL: u8 = 1;
+    /// Payload is a binary `get_kernel` reply.
+    pub const KIND_KERNEL_REPLY: u8 = 2;
+
+    /// Bytes of tag + kind — the minimum (and fixed) overhead `len`
+    /// counts beyond the payload.
+    pub const FRAME_OVERHEAD: usize = 8 + 1;
+
+    /// Upper bound on `len`: a full `metrics` reply is ~100 KiB and a
+    /// max batch a few MiB; anything beyond this is a desynced or
+    /// hostile peer and the connection is dropped.
+    pub const MAX_FRAME_LEN: u32 = 16 << 20;
+
+    /// One decoded binary frame.
+    #[derive(Debug, Clone, PartialEq, Eq)]
+    pub struct Frame {
+        pub tag: u64,
+        pub kind: u8,
+        pub payload: Vec<u8>,
+    }
+
+    impl Frame {
+        pub fn json(tag: u64, obj: &Json) -> Frame {
+            Frame { tag, kind: KIND_JSON, payload: obj.to_string().into_bytes() }
+        }
+
+        /// Append the encoded frame to `out` (a connection write
+        /// buffer — no intermediate allocation).
+        pub fn encode_into(&self, out: &mut Vec<u8>) {
+            let len = (FRAME_OVERHEAD + self.payload.len()) as u32;
+            out.extend_from_slice(&len.to_le_bytes());
+            out.extend_from_slice(&self.tag.to_le_bytes());
+            out.push(self.kind);
+            out.extend_from_slice(&self.payload);
+        }
+
+        pub fn encode(&self) -> Vec<u8> {
+            let mut out = Vec::with_capacity(4 + FRAME_OVERHEAD + self.payload.len());
+            self.encode_into(&mut out);
+            out
+        }
+
+        /// Decode one frame from the front of `buf`: `Ok(Some((frame,
+        /// consumed)))` when a whole frame is buffered, `Ok(None)` when
+        /// more bytes are needed, `Err` on a malformed length (the
+        /// caller must drop the connection — framing is lost).
+        pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, String> {
+            if buf.len() < 4 {
+                return Ok(None);
+            }
+            let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+            if (len as usize) < FRAME_OVERHEAD {
+                return Err(format!("binary frame length {len} shorter than its header"));
+            }
+            if len > MAX_FRAME_LEN {
+                return Err(format!("binary frame length {len} exceeds {MAX_FRAME_LEN}"));
+            }
+            let total = 4 + len as usize;
+            if buf.len() < total {
+                return Ok(None);
+            }
+            let mut tag_bytes = [0u8; 8];
+            tag_bytes.copy_from_slice(&buf[4..12]);
+            Ok(Some((
+                Frame {
+                    tag: u64::from_le_bytes(tag_bytes),
+                    kind: buf[12],
+                    payload: buf[13..total].to_vec(),
+                },
+                total,
+            )))
+        }
+    }
+
+    /// The request id implied by a tagged binary frame (kinds 1/2
+    /// carry no id bytes; JSON frames riding kind 0 keep their own).
+    pub fn tag_id(tag: u64) -> String {
+        format!("t{tag}")
+    }
+
+    fn push_u32(out: &mut Vec<u8>, x: usize) {
+        out.extend_from_slice(&(x as u32).to_le_bytes());
+    }
+
+    fn push_name(out: &mut Vec<u8>, name: Option<&str>) {
+        let bytes = name.unwrap_or("").as_bytes();
+        out.push(bytes.len() as u8);
+        out.extend_from_slice(bytes);
+    }
+
+    struct Cursor<'a> {
+        buf: &'a [u8],
+        at: usize,
+    }
+
+    impl<'a> Cursor<'a> {
+        fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+            let end = self.at.checked_add(n).filter(|&e| e <= self.buf.len());
+            match end {
+                Some(end) => {
+                    let s = &self.buf[self.at..end];
+                    self.at = end;
+                    Ok(s)
+                }
+                None => Err("binary payload truncated".to_string()),
+            }
+        }
+
+        fn u8(&mut self) -> Result<u8, String> {
+            Ok(self.take(1)?[0])
+        }
+
+        fn u32(&mut self) -> Result<usize, String> {
+            let s = self.take(4)?;
+            Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]) as usize)
+        }
+
+        fn f64(&mut self) -> Result<f64, String> {
+            let s = self.take(8)?;
+            let mut b = [0u8; 8];
+            b.copy_from_slice(s);
+            Ok(f64::from_le_bytes(b))
+        }
+
+        fn name(&mut self) -> Result<Option<String>, String> {
+            let n = self.u8()? as usize;
+            if n == 0 {
+                return Ok(None);
+            }
+            let s = self.take(n)?;
+            String::from_utf8(s.to_vec()).map(Some).map_err(|_| "bad name bytes".to_string())
+        }
+    }
+
+    /// Encode a kind-1 `get_kernel` request payload.
+    pub fn encode_get_kernel(
+        workload: &Workload,
+        gpu: Option<GpuArch>,
+        mode: Option<SearchMode>,
+    ) -> Vec<u8> {
+        let mut out = Vec::with_capacity(48);
+        match *workload {
+            Workload::MatMul { batch, m, n, k } => {
+                out.push(1);
+                for d in [batch, m, n, k] {
+                    push_u32(&mut out, d);
+                }
+            }
+            Workload::MatVec { batch, n, k } => {
+                out.push(2);
+                for d in [batch, n, k] {
+                    push_u32(&mut out, d);
+                }
+            }
+            Workload::Conv2d { batch, h, w, cin, cout, ksize, stride, pad } => {
+                out.push(3);
+                for d in [batch, h, w, cin, cout, ksize, stride, pad] {
+                    push_u32(&mut out, d);
+                }
+            }
+        }
+        push_name(&mut out, gpu.map(|g| g.name()));
+        push_name(&mut out, mode.map(|m| m.name()));
+        out
+    }
+
+    /// Decode a kind-1 `get_kernel` request payload.
+    #[allow(clippy::type_complexity)]
+    pub fn decode_get_kernel(
+        payload: &[u8],
+    ) -> Result<(Workload, Option<GpuArch>, Option<SearchMode>), String> {
+        let mut c = Cursor { buf: payload, at: 0 };
+        let workload = match c.u8()? {
+            1 => Workload::MatMul { batch: c.u32()?, m: c.u32()?, n: c.u32()?, k: c.u32()? },
+            2 => Workload::MatVec { batch: c.u32()?, n: c.u32()?, k: c.u32()? },
+            3 => Workload::Conv2d {
+                batch: c.u32()?,
+                h: c.u32()?,
+                w: c.u32()?,
+                cin: c.u32()?,
+                cout: c.u32()?,
+                ksize: c.u32()?,
+                stride: c.u32()?,
+                pad: c.u32()?,
+            },
+            other => return Err(format!("unknown workload family byte {other}")),
+        };
+        let gpu = match c.name()? {
+            None => None,
+            Some(name) => {
+                Some(GpuArch::parse(&name).ok_or_else(|| format!("unknown gpu '{name}'"))?)
+            }
+        };
+        let mode = match c.name()? {
+            None => None,
+            Some(name) => {
+                Some(SearchMode::parse(&name).ok_or_else(|| format!("unknown mode '{name}'"))?)
+            }
+        };
+        Ok((workload, gpu, mode))
+    }
+
+    fn source_byte(s: ServeSource) -> u8 {
+        match s {
+            ServeSource::Store => 0,
+            ServeSource::WarmGuess => 1,
+            ServeSource::Fallback => 2,
+        }
+    }
+
+    fn tier_byte(t: ServeTier) -> u8 {
+        match t {
+            ServeTier::Exact => 0,
+            ServeTier::Warm => 1,
+            ServeTier::Static => 2,
+        }
+    }
+
+    /// Encode a kind-2 `get_kernel` reply payload (the id is implied
+    /// by the frame tag).
+    pub fn encode_kernel_reply(r: &KernelReply) -> Vec<u8> {
+        let mut out = Vec::with_capacity(96);
+        let flags = u8::from(r.hit) | (u8::from(r.enqueued) << 1);
+        out.push(flags);
+        out.push(source_byte(r.source));
+        out.push(tier_byte(r.tier));
+        let s = &r.schedule;
+        for d in [
+            s.threads_m,
+            s.threads_n,
+            s.reg_m,
+            s.reg_n,
+            s.tile_k,
+            s.unroll_k,
+            s.vector_width,
+            s.split_k,
+        ] {
+            push_u32(&mut out, d);
+        }
+        out.push(u8::from(s.use_shared));
+        for x in [r.latency_s, r.energy_j, r.avg_power_w] {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        push_u32(&mut out, r.queue_depth);
+        out.extend_from_slice(&r.reply_time_s.to_le_bytes());
+        out
+    }
+
+    /// Decode a kind-2 `get_kernel` reply payload.
+    pub fn decode_kernel_reply(tag: u64, payload: &[u8]) -> Result<KernelReply, String> {
+        let mut c = Cursor { buf: payload, at: 0 };
+        let flags = c.u8()?;
+        let source = match c.u8()? {
+            0 => ServeSource::Store,
+            1 => ServeSource::WarmGuess,
+            2 => ServeSource::Fallback,
+            other => return Err(format!("unknown source byte {other}")),
+        };
+        let tier = match c.u8()? {
+            0 => ServeTier::Exact,
+            1 => ServeTier::Warm,
+            2 => ServeTier::Static,
+            other => return Err(format!("unknown tier byte {other}")),
+        };
+        let schedule = Schedule {
+            threads_m: c.u32()?,
+            threads_n: c.u32()?,
+            reg_m: c.u32()?,
+            reg_n: c.u32()?,
+            tile_k: c.u32()?,
+            unroll_k: c.u32()?,
+            vector_width: c.u32()?,
+            split_k: c.u32()?,
+            use_shared: c.u8()? != 0,
+        };
+        Ok(KernelReply {
+            id: tag_id(tag),
+            hit: flags & 1 != 0,
+            source,
+            tier,
+            schedule,
+            latency_s: c.f64()?,
+            energy_j: c.f64()?,
+            avg_power_w: c.f64()?,
+            enqueued: flags & 2 != 0,
+            queue_depth: c.u32()?,
+            reply_time_s: c.f64()?,
+        })
     }
 }
 
@@ -2239,5 +2621,111 @@ mod tests {
             Request::GetKernel { trace, .. } => assert_eq!(trace.as_deref(), Some("a3f9")),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn hello_frames_roundtrip_and_default_to_line() {
+        let req = Request::Hello { id: "h1".into(), wire: wire_name::BINARY.into() };
+        let line = req.to_json().to_string();
+        assert_eq!(Request::parse_line(&line), Ok(req));
+        // Absent `wire` degrades to line, never errors.
+        match Request::parse_line(r#"{"v":1,"op":"hello","id":"h2"}"#).unwrap() {
+            Request::Hello { wire, .. } => assert_eq!(wire, wire_name::LINE),
+            other => panic!("{other:?}"),
+        }
+        let ack = Response::HelloAck { id: "h1".into(), wire: wire_name::BINARY.into() };
+        let line = ack.to_json().to_string();
+        assert!(line.contains(r#""wire_v":2"#), "{line}");
+        assert_eq!(Response::parse_line(&line), Ok(ack));
+        let ack = Response::HelloAck { id: "h1".into(), wire: wire_name::LINE.into() };
+        assert!(ack.to_json().to_string().contains(r#""wire_v":1"#));
+    }
+
+    #[test]
+    fn binary_frames_roundtrip_and_split_reads_wait() {
+        let frame = wire::Frame { tag: 7, kind: wire::KIND_JSON, payload: b"{}".to_vec() };
+        let bytes = frame.encode();
+        let (back, used) = wire::Frame::decode(&bytes).unwrap().unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(back, frame);
+        // Every strict prefix is "need more bytes", never an error.
+        for cut in 0..bytes.len() {
+            assert_eq!(wire::Frame::decode(&bytes[..cut]).unwrap(), None, "cut={cut}");
+        }
+        // Two frames back-to-back decode one at a time.
+        let mut two = bytes.clone();
+        wire::Frame { tag: 8, kind: wire::KIND_JSON, payload: vec![] }.encode_into(&mut two);
+        let (first, used) = wire::Frame::decode(&two).unwrap().unwrap();
+        assert_eq!(first.tag, 7);
+        let (second, _) = wire::Frame::decode(&two[used..]).unwrap().unwrap();
+        assert_eq!(second.tag, 8);
+        // A desynced length field is an error, not a stall.
+        assert!(wire::Frame::decode(&[0, 0, 0, 0]).is_err());
+        assert!(wire::Frame::decode(&u32::MAX.to_le_bytes()).is_err());
+    }
+
+    #[test]
+    fn binary_get_kernel_payloads_roundtrip() {
+        for w in [
+            suites::MM1,
+            suites::MV3,
+            Workload::Conv2d {
+                batch: 8,
+                h: 56,
+                w: 56,
+                cin: 64,
+                cout: 128,
+                ksize: 3,
+                stride: 2,
+                pad: 1,
+            },
+        ] {
+            let payload = wire::encode_get_kernel(&w, None, None);
+            let (back, gpu, mode) = wire::decode_get_kernel(&payload).unwrap();
+            assert_eq!(back, w);
+            assert_eq!(gpu, None);
+            assert_eq!(mode, None);
+        }
+        let payload = wire::encode_get_kernel(
+            &suites::MM1,
+            Some(GpuArch::A100),
+            Some(SearchMode::EnergyAware),
+        );
+        let (_, gpu, mode) = wire::decode_get_kernel(&payload).unwrap();
+        assert_eq!(gpu, Some(GpuArch::A100));
+        assert_eq!(mode, Some(SearchMode::EnergyAware));
+        // Truncated payloads refuse instead of panicking.
+        assert!(wire::decode_get_kernel(&payload[..3]).is_err());
+        assert!(wire::decode_get_kernel(&[9]).is_err());
+    }
+
+    #[test]
+    fn binary_kernel_reply_payloads_roundtrip() {
+        let reply = KernelReply {
+            id: wire::tag_id(42),
+            hit: true,
+            source: ServeSource::Store,
+            tier: ServeTier::Exact,
+            schedule: sample_schedule(),
+            latency_s: 1.5e-3,
+            energy_j: 0.25,
+            avg_power_w: 166.6,
+            enqueued: false,
+            queue_depth: 3,
+            reply_time_s: 2.0e-4,
+        };
+        let payload = wire::encode_kernel_reply(&reply);
+        assert_eq!(wire::decode_kernel_reply(42, &payload).unwrap(), reply);
+        let miss = KernelReply {
+            id: wire::tag_id(9),
+            hit: false,
+            source: ServeSource::WarmGuess,
+            tier: ServeTier::Warm,
+            enqueued: true,
+            ..reply
+        };
+        let payload = wire::encode_kernel_reply(&miss);
+        assert_eq!(wire::decode_kernel_reply(9, &payload).unwrap(), miss);
+        assert!(wire::decode_kernel_reply(9, &payload[..10]).is_err());
     }
 }

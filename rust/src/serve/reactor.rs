@@ -1,0 +1,834 @@
+//! The evented data plane: nonblocking accept + `poll(2)` reactors
+//! sized to cores, replacing thread-per-connection (ISSUE 10).
+//!
+//! # Shape
+//!
+//! N reactor threads (`available_parallelism`, clamped 1..=8) each own
+//! a set of connections and a `poll(2)` loop over them, with
+//! per-connection read/write buffers. Reactor 0 also owns the
+//! listener (nonblocking): accepted connections are handed round-robin
+//! to the other reactors over a channel, each paired with a
+//! `socketpair` wake pipe so a sleeping reactor notices the handoff
+//! (and slow-lane completions) immediately instead of at the next
+//! poll tick.
+//!
+//! # Fast lane / slow lane
+//!
+//! Frame dispatch reuses the daemon's seam
+//! ([`dispatch_fast`]/[`run_slow`]): parse rejects, admin ops, and
+//! `get_kernel` requests whose per-shard memory probe hits are
+//! answered INLINE on the reactor thread — microseconds, no blocking
+//! I/O beyond the shard read. Memory misses (targeted refresh, fleet
+//! claim, search enqueue — file I/O) and whole `batch` frames go to a
+//! small slow-lane executor pool; the finished reply lands in the
+//! connection's outbox and the owning reactor is woken to write it.
+//! The worker pool and write-back path are untouched — the slow lane
+//! sits in front of them exactly where the per-connection thread used
+//! to.
+//!
+//! # Ordering: the two wires differ on purpose
+//!
+//! * **line-JSON** (wire v1): replies are strictly in-order — frame
+//!   extraction stalls while a slow reply is outstanding, so the
+//!   connection behaves byte-identically to the blocking
+//!   thread-per-connection daemon (pinned by e2e).
+//! * **binary** (wire v2, negotiated via `hello`): frames carry
+//!   client-assigned tags and extraction NEVER stalls — a hit behind
+//!   a slow miss is answered the moment its shard read completes, out
+//!   of order, tagged. This is the head-of-line-blocking fix the
+//!   `n_ooo_replies` counter measures.
+//!
+//! # Lock discipline
+//!
+//! Reactor threads never bind a `state` guard at all — all state
+//! access happens inside the daemon's serve functions or one-liner
+//! counter helpers, and NO socket write ever happens with a state
+//! guard live (`scripts/check_invariants.py` scans this file too).
+
+use super::daemon::{
+    dispatch_fast, note_reply_write, run_slow, serve_get_kernel, Ctx, FrameAction, SlowJob,
+    SlowReplyBody,
+};
+use super::protocol::{error_code, wire, wire_name, Response};
+use crate::fleet::{Listener, Stream};
+use crate::telemetry::TraceId;
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read as _, Write as _};
+use std::os::unix::io::AsRawFd as _;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// poll(2), hand-rolled on std (no libc crate in this tree): the one
+// syscall the reactor needs, declared directly.
+
+#[repr(C)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+#[cfg(target_os = "linux")]
+type Nfds = std::os::raw::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type Nfds = std::os::raw::c_uint;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: Nfds, timeout: i32) -> i32;
+}
+
+fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> i32 {
+    // SAFETY: `fds` is an exclusive slice of repr(C) pollfd structs,
+    // valid for the duration of the call; the kernel only writes the
+    // `revents` fields.
+    unsafe { poll(fds.as_mut_ptr(), fds.len() as Nfds, timeout_ms) }
+}
+
+/// Poll tick: the backstop latency for noticing `shutting` without a
+/// wake byte. Every hot transition (new conn, slow reply, shutdown)
+/// also writes a wake byte, so this is never on the request path.
+const POLL_TICK_MS: i32 = 250;
+/// Per-`read` chunk; also the partial-read heuristic boundary.
+const READ_CHUNK: usize = 16 * 1024;
+/// Soft cap on either per-connection buffer: past it the reactor stops
+/// reading (backpressure) rather than buffering a hostile peer to OOM.
+const MAX_BUFFER: usize = 32 << 20;
+
+/// Entry point: serve until shutdown, then return so [`Daemon::run`]
+/// can drain the worker pool and writer exactly as before.
+///
+/// [`Daemon::run`]: super::daemon::Daemon::run
+pub(super) fn serve(listener: Listener, ctx: Arc<Ctx>) {
+    if let Err(e) = listener.set_nonblocking(true) {
+        eprintln!("serve: nonblocking listener unavailable ({e}); accepts may stall briefly");
+    }
+    let n_reactors =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(1, 8);
+    let n_slow = (n_reactors * 2).clamp(2, 16);
+
+    let (slow_tx, slow_rx) = channel::<SlowTask>();
+    let slow_rx = Arc::new(Mutex::new(slow_rx));
+    let slow_threads: Vec<_> = (0..n_slow)
+        .map(|_| {
+            let ctx = Arc::clone(&ctx);
+            let rx = Arc::clone(&slow_rx);
+            std::thread::spawn(move || slow_loop(&ctx, &rx))
+        })
+        .collect();
+
+    let mut mailboxes = Vec::with_capacity(n_reactors);
+    let mut inboxes = Vec::with_capacity(n_reactors);
+    for _ in 0..n_reactors {
+        let (conn_tx, conn_rx) = channel::<Stream>();
+        // A daemon that cannot open a socketpair at startup cannot
+        // serve sockets either; failing loudly here is correct.
+        let (wake_rx, wake_tx) = UnixStream::pair().expect("reactor wake pipe");
+        let _ = wake_rx.set_nonblocking(true);
+        let _ = wake_tx.set_nonblocking(true);
+        mailboxes.push(Mailbox { conn_tx, wake: Arc::new(wake_tx) });
+        inboxes.push((conn_rx, wake_rx));
+    }
+    let mailboxes = Arc::new(mailboxes);
+
+    let mut reactors: Vec<Reactor> = inboxes
+        .into_iter()
+        .enumerate()
+        .map(|(idx, (conn_rx, wake_rx))| Reactor {
+            idx,
+            ctx: Arc::clone(&ctx),
+            conns: HashMap::new(),
+            next_token: 0,
+            next_rr: 0,
+            conn_rx,
+            wake_rx,
+            wake_tx: Arc::clone(&mailboxes[idx].wake),
+            mailboxes: Arc::clone(&mailboxes),
+            slow_tx: slow_tx.clone(),
+            listener: None,
+        })
+        .collect();
+    drop(slow_tx);
+
+    let mut first = reactors.remove(0);
+    first.listener = Some(listener);
+    let handles: Vec<_> =
+        reactors.into_iter().map(|r| std::thread::spawn(move || r.run())).collect();
+    first.run();
+    for h in handles {
+        let _ = h.join();
+    }
+    // Every reactor's slow_tx clone is dropped now: the channel closes
+    // and the executor threads drain out.
+    for h in slow_threads {
+        let _ = h.join();
+    }
+}
+
+/// How a slow-lane reply must be framed when it comes back.
+enum ReplyEncoding {
+    /// Line-JSON + `\n`; delivery also unblocks frame extraction
+    /// (line mode is strictly in-order).
+    Line,
+    /// Kind-0 JSON frame echoing the request's tag.
+    BinaryJson { tag: u64 },
+    /// Kind-2 fixed-layout kernel reply (errors fall back to kind-0).
+    BinaryKernel { tag: u64 },
+}
+
+struct SlowTask {
+    job: SlowJob,
+    shared: Arc<ConnShared>,
+    encoding: ReplyEncoding,
+}
+
+/// Slow-lane executor body: finish jobs, drop replies into the owning
+/// connection's outbox, wake its reactor. Exits when every reactor
+/// (every sender) is gone.
+fn slow_loop(ctx: &Arc<Ctx>, rx: &Mutex<Receiver<SlowTask>>) {
+    loop {
+        let task = {
+            let rx = rx.lock().expect("slow-lane queue lock");
+            rx.recv()
+        };
+        let Ok(task) = task else { break };
+        let (body, opened) = run_slow(ctx, task.job);
+        task.shared.push(encode_slow_reply(body, opened, &task.encoding));
+    }
+}
+
+/// Frame one finished slow-lane reply for its wire.
+fn encode_slow_reply(
+    body: SlowReplyBody,
+    opened: Option<TraceId>,
+    encoding: &ReplyEncoding,
+) -> OutMsg {
+    let (bytes, tag, unblock_line) = match encoding {
+        ReplyEncoding::Line => {
+            let mut bytes = body.into_json().to_string().into_bytes();
+            bytes.push(b'\n');
+            (bytes, None, true)
+        }
+        ReplyEncoding::BinaryJson { tag } => {
+            (wire::Frame::json(*tag, &body.into_json()).encode(), Some(*tag), false)
+        }
+        ReplyEncoding::BinaryKernel { tag } => {
+            let frame = match body {
+                SlowReplyBody::Kernel(reply) => wire::Frame {
+                    tag: *tag,
+                    kind: wire::KIND_KERNEL_REPLY,
+                    payload: wire::encode_kernel_reply(&reply),
+                },
+                other => wire::Frame::json(*tag, &other.into_json()),
+            };
+            (frame.encode(), Some(*tag), false)
+        }
+    };
+    OutMsg { bytes, traced: true, opened, tag, shutdown: false, unblock_line }
+}
+
+/// The cross-thread half of one connection: where the slow lane parks
+/// finished replies, and how it wakes the owning reactor.
+struct ConnShared {
+    outbox: Mutex<Vec<OutMsg>>,
+    /// Slow jobs submitted and not yet parked in the outbox.
+    inflight: AtomicUsize,
+    /// Write end of the owning reactor's wake pipe.
+    wake: Arc<UnixStream>,
+}
+
+impl ConnShared {
+    fn push(&self, msg: OutMsg) {
+        self.outbox.lock().expect("outbox lock").push(msg);
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        let _ = (&*self.wake).write(&[1u8]);
+    }
+}
+
+/// One reply's bytes plus its post-write bookkeeping.
+struct OutMsg {
+    bytes: Vec<u8>,
+    /// Kernel-serving replies record the reply-write stage.
+    traced: bool,
+    /// Trace opened by this frame — it gets the reply-write span.
+    opened: Option<TraceId>,
+    /// Binary reply tag, for arrival-order (OOO) bookkeeping.
+    tag: Option<u64>,
+    /// This reply acked a `shutdown` request.
+    shutdown: bool,
+    /// Line mode: resume frame extraction (the slow reply the
+    /// connection was waiting on, in-order contract satisfied).
+    unblock_line: bool,
+}
+
+impl OutMsg {
+    fn plain(bytes: Vec<u8>) -> OutMsg {
+        OutMsg {
+            bytes,
+            traced: false,
+            opened: None,
+            tag: None,
+            shutdown: false,
+            unblock_line: false,
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum WireMode {
+    Line,
+    Binary,
+}
+
+struct Conn {
+    stream: Stream,
+    /// Unconsumed inbound bytes (partial frames span reads).
+    rbuf: Vec<u8>,
+    /// Outbound bytes not yet accepted by the socket; `wstart` is the
+    /// write cursor (drained lazily to avoid per-write memmoves).
+    wbuf: Vec<u8>,
+    wstart: usize,
+    mode: WireMode,
+    /// Line mode only: a slow reply is outstanding — extraction is
+    /// stalled to keep replies strictly in-order.
+    line_blocked: bool,
+    /// Close once the write buffer drains (post-shutdown-ack).
+    closing: bool,
+    /// Binary mode: tags in arrival order, not yet answered. A reply
+    /// leaving from position > 0 is an out-of-order reply (a fast
+    /// reply that overtook a slow sibling).
+    pending_order: Vec<u64>,
+    shared: Arc<ConnShared>,
+}
+
+impl Conn {
+    fn new(stream: Stream, wake: Arc<UnixStream>) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wstart: 0,
+            mode: WireMode::Line,
+            line_blocked: false,
+            closing: false,
+            pending_order: Vec::new(),
+            shared: Arc::new(ConnShared {
+                outbox: Mutex::new(Vec::new()),
+                inflight: AtomicUsize::new(0),
+                wake,
+            }),
+        }
+    }
+
+    fn has_pending_write(&self) -> bool {
+        self.wstart < self.wbuf.len()
+    }
+
+    fn pending_slow(&self) -> usize {
+        self.shared.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Push buffered output as far as the socket will take it without
+    /// blocking. Returns false when the connection is dead.
+    fn try_flush(&mut self) -> bool {
+        while self.wstart < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wstart..]) {
+                Ok(0) => return false,
+                Ok(n) => self.wstart += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        if self.wstart == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wstart = 0;
+        } else if self.wstart > 64 * 1024 {
+            self.wbuf.drain(..self.wstart);
+            self.wstart = 0;
+        }
+        true
+    }
+}
+
+/// Conn handoff + wakeup for one reactor.
+struct Mailbox {
+    conn_tx: Sender<Stream>,
+    wake: Arc<UnixStream>,
+}
+
+impl Mailbox {
+    fn wake(&self) {
+        // A full pipe already has wakeups pending; dropping the byte
+        // is fine.
+        let _ = (&*self.wake).write(&[1u8]);
+    }
+}
+
+struct Reactor {
+    idx: usize,
+    ctx: Arc<Ctx>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    /// Round-robin cursor for conn placement (reactor 0 only).
+    next_rr: usize,
+    conn_rx: Receiver<Stream>,
+    wake_rx: UnixStream,
+    wake_tx: Arc<UnixStream>,
+    mailboxes: Arc<Vec<Mailbox>>,
+    slow_tx: Sender<SlowTask>,
+    /// Reactor 0 owns the listener.
+    listener: Option<Listener>,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        loop {
+            self.maintain();
+            let shutting = self.ctx.is_shutting();
+            if shutting && self.drained() {
+                break;
+            }
+            let mut fds: Vec<PollFd> = Vec::with_capacity(2 + self.conns.len());
+            let mut tokens: Vec<u64> = Vec::with_capacity(self.conns.len());
+            fds.push(PollFd { fd: self.wake_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+            let mut base = 1;
+            let mut poll_listener = false;
+            if !shutting {
+                if let Some(listener) = &self.listener {
+                    fds.push(PollFd { fd: listener.as_raw_fd(), events: POLLIN, revents: 0 });
+                    poll_listener = true;
+                    base = 2;
+                }
+            }
+            for (&tok, conn) in &self.conns {
+                let mut events = 0i16;
+                if !conn.closing && conn.rbuf.len() < MAX_BUFFER {
+                    events |= POLLIN;
+                }
+                if conn.has_pending_write() {
+                    events |= POLLOUT;
+                }
+                // events == 0 still surfaces HUP/ERR.
+                fds.push(PollFd { fd: conn.stream.as_raw_fd(), events, revents: 0 });
+                tokens.push(tok);
+            }
+            let n = poll_fds(&mut fds, POLL_TICK_MS);
+            if n < 0 {
+                // EINTR or transient failure: back off one breath and
+                // re-poll (the tick bounds the damage either way).
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                continue;
+            }
+            if fds[0].revents != 0 {
+                self.drain_wake();
+            }
+            if poll_listener && fds[1].revents != 0 {
+                self.accept_ready();
+            }
+            self.adopt_new_conns();
+            for (i, tok) in tokens.iter().enumerate() {
+                let revents = fds[base + i].revents;
+                if revents != 0 {
+                    self.service(*tok, revents);
+                }
+            }
+        }
+    }
+
+    /// Drop-box maintenance: deliver slow-lane replies parked in each
+    /// connection's outbox, resume unblocked line connections, retire
+    /// finished ones.
+    fn maintain(&mut self) {
+        let toks: Vec<u64> = self.conns.keys().copied().collect();
+        for tok in toks {
+            let Some(mut conn) = self.conns.remove(&tok) else { continue };
+            let msgs = {
+                let mut outbox = conn.shared.outbox.lock().expect("outbox lock");
+                std::mem::take(&mut *outbox)
+            };
+            let had_msgs = !msgs.is_empty();
+            let mut keep = true;
+            for msg in msgs {
+                if !self.deliver(&mut conn, msg) {
+                    keep = false;
+                    break;
+                }
+            }
+            // A line conn freed by its slow reply may have whole
+            // frames already buffered: extract them now, not at the
+            // next socket read.
+            if keep && had_msgs && !conn.rbuf.is_empty() {
+                keep = self.extract_frames(&mut conn);
+            }
+            if keep
+                && conn.closing
+                && !conn.has_pending_write()
+                && conn.pending_slow() == 0
+            {
+                keep = false;
+            }
+            if keep {
+                self.conns.insert(tok, conn);
+            }
+        }
+    }
+
+    /// True when nothing remains to write or wait for (shutdown exit
+    /// gate: in-flight slow replies still get written first).
+    fn drained(&self) -> bool {
+        self.conns.values().all(|c| {
+            c.pending_slow() == 0
+                && !c.has_pending_write()
+                && c.shared.outbox.lock().expect("outbox lock").is_empty()
+        })
+    }
+
+    fn drain_wake(&mut self) {
+        let mut scratch = [0u8; 256];
+        while let Ok(n) = (&self.wake_rx).read(&mut scratch) {
+            if n < scratch.len() {
+                break;
+            }
+        }
+    }
+
+    /// Accept every waiting connection and place it round-robin
+    /// across the reactors (reactor 0 only).
+    fn accept_ready(&mut self) {
+        loop {
+            let accepted = match &self.listener {
+                Some(listener) => listener.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok(stream) => {
+                    let target = self.next_rr % self.mailboxes.len();
+                    self.next_rr = self.next_rr.wrapping_add(1);
+                    if target == self.idx {
+                        self.register(stream);
+                    } else if self.mailboxes[target].conn_tx.send(stream).is_ok() {
+                        self.mailboxes[target].wake();
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    if self.ctx.is_shutting() {
+                        break;
+                    }
+                    eprintln!("serve: accept failed: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    fn adopt_new_conns(&mut self) {
+        while let Ok(stream) = self.conn_rx.try_recv() {
+            self.register(stream);
+        }
+    }
+
+    fn register(&mut self, stream: Stream) {
+        if stream.set_nonblocking(true).is_err() {
+            return; // dead on arrival
+        }
+        let tok = self.next_token;
+        self.next_token += 1;
+        self.conns.insert(tok, Conn::new(stream, Arc::clone(&self.wake_tx)));
+    }
+
+    fn service(&mut self, tok: u64, revents: i16) {
+        let Some(mut conn) = self.conns.remove(&tok) else { return };
+        let mut keep = revents & (POLLERR | POLLNVAL) == 0;
+        if keep && revents & POLLOUT != 0 {
+            keep = conn.try_flush();
+        }
+        if keep && revents & (POLLIN | POLLHUP) != 0 && !conn.closing {
+            keep = self.service_read(&mut conn);
+        }
+        if keep {
+            self.conns.insert(tok, conn);
+        }
+    }
+
+    fn service_read(&mut self, conn: &mut Conn) -> bool {
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            match conn.stream.read(&mut chunk) {
+                // EOF: the client is gone, replies have nowhere to go.
+                Ok(0) => return false,
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&chunk[..n]);
+                    if conn.rbuf.len() >= MAX_BUFFER || n < chunk.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        self.extract_frames(conn)
+    }
+
+    /// Pull every complete frame out of the read buffer and process
+    /// it. Line mode stalls at a slow frame (strict in-order replies);
+    /// binary mode never stalls — that is the multiplexing.
+    fn extract_frames(&mut self, conn: &mut Conn) -> bool {
+        let mut consumed = 0usize;
+        let keep = loop {
+            match conn.mode {
+                WireMode::Line => {
+                    if conn.line_blocked {
+                        break true;
+                    }
+                    let rest = &conn.rbuf[consumed..];
+                    let Some(nl) = rest.iter().position(|&b| b == b'\n') else { break true };
+                    let line = match std::str::from_utf8(&rest[..nl]) {
+                        Ok(s) => s.trim_end_matches('\r').to_string(),
+                        Err(_) => break false, // not our protocol
+                    };
+                    consumed += nl + 1;
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    if !self.process_line(conn, &line) {
+                        break false;
+                    }
+                }
+                WireMode::Binary => match wire::Frame::decode(&conn.rbuf[consumed..]) {
+                    Ok(None) => break true,
+                    Ok(Some((frame, used))) => {
+                        consumed += used;
+                        self.ctx.note_binary_frames(1);
+                        if !self.process_binary(conn, frame) {
+                            break false;
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("serve: dropping desynced binary connection: {e}");
+                        break false;
+                    }
+                },
+            }
+        };
+        if consumed > 0 {
+            conn.rbuf.drain(..consumed);
+        }
+        keep
+    }
+
+    /// One line-JSON frame. Returns false to drop the connection.
+    fn process_line(&mut self, conn: &mut Conn, line: &str) -> bool {
+        match dispatch_fast(&self.ctx, line) {
+            FrameAction::Reply(frame, shutdown, traced, opened) => {
+                let mut bytes = frame.to_string().into_bytes();
+                bytes.push(b'\n');
+                self.deliver(
+                    conn,
+                    OutMsg { bytes, traced, opened, tag: None, shutdown, unblock_line: false },
+                )
+            }
+            FrameAction::Hello { id, wire } => {
+                let grant = if wire == wire_name::BINARY {
+                    wire_name::BINARY
+                } else {
+                    wire_name::LINE
+                };
+                let ack = Response::HelloAck { id, wire: grant.to_string() }.to_json();
+                let mut bytes = ack.to_string().into_bytes();
+                bytes.push(b'\n');
+                let keep = self.deliver(conn, OutMsg::plain(bytes));
+                // The ack is framed line-JSON (queued above); every
+                // frame after it — both directions — is binary.
+                if grant == wire_name::BINARY {
+                    conn.mode = WireMode::Binary;
+                }
+                keep
+            }
+            FrameAction::Slow(job) => {
+                conn.line_blocked = true;
+                self.submit_slow(conn, job, ReplyEncoding::Line);
+                true
+            }
+        }
+    }
+
+    /// One binary frame. Returns false to drop the connection.
+    fn process_binary(&mut self, conn: &mut Conn, frame: wire::Frame) -> bool {
+        let t0 = Instant::now();
+        let tag = frame.tag;
+        conn.pending_order.push(tag);
+        match frame.kind {
+            wire::KIND_GET_KERNEL => match wire::decode_get_kernel(&frame.payload) {
+                Ok((workload, gpu, mode)) => {
+                    let parse_s = t0.elapsed().as_secs_f64();
+                    let id = wire::tag_id(tag);
+                    match serve_get_kernel(&self.ctx, id, workload, gpu, mode, t0, parse_s, None)
+                    {
+                        Ok((reply, opened)) => {
+                            let out = wire::Frame {
+                                tag,
+                                kind: wire::KIND_KERNEL_REPLY,
+                                payload: wire::encode_kernel_reply(&reply),
+                            };
+                            self.deliver(
+                                conn,
+                                OutMsg {
+                                    bytes: out.encode(),
+                                    traced: true,
+                                    opened,
+                                    tag: Some(tag),
+                                    shutdown: false,
+                                    unblock_line: false,
+                                },
+                            )
+                        }
+                        Err(job) => {
+                            self.submit_slow(
+                                conn,
+                                SlowJob::Miss(job),
+                                ReplyEncoding::BinaryKernel { tag },
+                            );
+                            true
+                        }
+                    }
+                }
+                Err(msg) => self.deliver_binary_error(conn, tag, msg),
+            },
+            wire::KIND_JSON => {
+                let line = match std::str::from_utf8(&frame.payload) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        return self.deliver_binary_error(
+                            conn,
+                            tag,
+                            "frame payload is not UTF-8 JSON".to_string(),
+                        )
+                    }
+                };
+                match dispatch_fast(&self.ctx, line) {
+                    FrameAction::Reply(obj, shutdown, traced, opened) => {
+                        let bytes = wire::Frame::json(tag, &obj).encode();
+                        self.deliver(
+                            conn,
+                            OutMsg {
+                                bytes,
+                                traced,
+                                opened,
+                                tag: Some(tag),
+                                shutdown,
+                                unblock_line: false,
+                            },
+                        )
+                    }
+                    FrameAction::Hello { id, .. } => {
+                        // Already binary; re-ack binary, stay put.
+                        let ack =
+                            Response::HelloAck { id, wire: wire_name::BINARY.to_string() }
+                                .to_json();
+                        let bytes = wire::Frame::json(tag, &ack).encode();
+                        self.deliver(
+                            conn,
+                            OutMsg {
+                                bytes,
+                                traced: false,
+                                opened: None,
+                                tag: Some(tag),
+                                shutdown: false,
+                                unblock_line: false,
+                            },
+                        )
+                    }
+                    FrameAction::Slow(job) => {
+                        self.submit_slow(conn, job, ReplyEncoding::BinaryJson { tag });
+                        true
+                    }
+                }
+            }
+            other => {
+                self.deliver_binary_error(conn, tag, format!("unknown frame kind {other}"))
+            }
+        }
+    }
+
+    fn deliver_binary_error(&mut self, conn: &mut Conn, tag: u64, message: String) -> bool {
+        let err = Response::Error {
+            id: Some(wire::tag_id(tag)),
+            code: error_code::BAD_REQUEST.to_string(),
+            message,
+        }
+        .to_json();
+        let bytes = wire::Frame::json(tag, &err).encode();
+        self.deliver(
+            conn,
+            OutMsg {
+                bytes,
+                traced: false,
+                opened: None,
+                tag: Some(tag),
+                shutdown: false,
+                unblock_line: false,
+            },
+        )
+    }
+
+    /// Queue one reply's bytes and push them as far toward the socket
+    /// as it will take without blocking. All post-write bookkeeping
+    /// (reply-write stage, OOO accounting, shutdown, line unblock)
+    /// happens here — with NO state guard held anywhere near the
+    /// write. Returns false when the connection died mid-write.
+    fn deliver(&mut self, conn: &mut Conn, msg: OutMsg) -> bool {
+        if let Some(tag) = msg.tag {
+            if let Some(pos) = conn.pending_order.iter().position(|&t| t == tag) {
+                if pos > 0 {
+                    self.ctx.note_ooo_reply();
+                }
+                conn.pending_order.remove(pos);
+            }
+        }
+        if msg.unblock_line {
+            conn.line_blocked = false;
+        }
+        let t = Instant::now();
+        conn.wbuf.extend_from_slice(&msg.bytes);
+        let alive = conn.try_flush();
+        if msg.traced {
+            note_reply_write(&self.ctx, msg.opened, t.elapsed().as_secs_f64());
+        }
+        if msg.shutdown {
+            self.ctx.begin_shutdown();
+            self.wake_all();
+            conn.closing = true;
+        }
+        alive
+    }
+
+    fn submit_slow(&mut self, conn: &mut Conn, job: SlowJob, encoding: ReplyEncoding) {
+        conn.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        let task = SlowTask { job, shared: Arc::clone(&conn.shared), encoding };
+        if self.slow_tx.send(task).is_err() {
+            // Slow lane gone (shutdown drain): count the job back so
+            // the conn isn't waited on forever.
+            conn.shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            conn.line_blocked = false;
+        }
+    }
+
+    fn wake_all(&self) {
+        for mb in self.mailboxes.iter() {
+            mb.wake();
+        }
+    }
+}

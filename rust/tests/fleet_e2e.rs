@@ -9,8 +9,9 @@
 use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
 use ecokernel::fleet::InflightTable;
 use ecokernel::serve::{
-    merged_health, merged_metrics, Daemon, DaemonConfig, DaemonHandle, HealthStatus, ServeAddr,
-    ServeClient,
+    merged_health, merged_metrics, BatchError, BatchRequest, Daemon, DaemonConfig, DaemonHandle,
+    HealthReply, HealthStatus, KernelReply, MetricsReply, Op, ServeAddr, ServeClient, StatsReply,
+    TraceReply,
 };
 use ecokernel::store::lease::Lease;
 use ecokernel::store::sharded::{shard_lease_name, LEASES_DIR};
@@ -24,6 +25,42 @@ use std::sync::Arc;
 use std::time::Duration;
 
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(180);
+
+// Thin shims over the typed op API, so every test reads as one call
+// per wire operation.
+
+fn get_kernel(
+    client: &mut ServeClient,
+    workload: Workload,
+    gpu: Option<GpuArch>,
+    mode: Option<SearchMode>,
+) -> anyhow::Result<KernelReply> {
+    client.call(Op::GetKernel { workload, gpu, mode, trace: None })?.into_kernel()
+}
+
+fn get_kernel_batch(
+    client: &mut ServeClient,
+    requests: &[BatchRequest],
+) -> anyhow::Result<Vec<Result<KernelReply, BatchError>>> {
+    let n = requests.len();
+    client.call(Op::Batch(requests.to_vec()))?.into_batch(n)
+}
+
+fn stats(client: &mut ServeClient) -> anyhow::Result<StatsReply> {
+    client.call(Op::Stats)?.into_stats()
+}
+
+fn metrics(client: &mut ServeClient) -> anyhow::Result<MetricsReply> {
+    client.call(Op::Metrics)?.into_metrics()
+}
+
+fn traces(client: &mut ServeClient, slowest: usize) -> anyhow::Result<TraceReply> {
+    client.call(Op::Traces { slowest })?.into_traces()
+}
+
+fn health(client: &mut ServeClient) -> anyhow::Result<HealthReply> {
+    client.call(Op::Health)?.into_health()
+}
 
 fn tmp_dir(tag: &str) -> PathBuf {
     let dir =
@@ -138,10 +175,10 @@ fn two_daemons_one_store_search_once_fleet_wide() {
     // both replies are the search-free static tier (ISSUE 9): no
     // neighbor exists, so each daemon answers from the static ranking
     // — yet the key is still searched only once fleet-wide.
-    let on_a = ca.get_kernel(suites::MM1, None, None).unwrap();
+    let on_a = get_kernel(&mut ca, suites::MM1, None, None).unwrap();
     assert!(!on_a.hit && on_a.enqueued, "first miss claims the key and searches");
     assert_eq!(on_a.tier.name(), "static", "fresh store: static-tier reply");
-    let on_b = cb.get_kernel(suites::MM1, None, None).unwrap();
+    let on_b = get_kernel(&mut cb, suites::MM1, None, None).unwrap();
     if !on_b.hit {
         assert!(!on_b.enqueued, "duplicate miss coalesces into A's in-flight claim");
         assert_eq!(on_b.tier.name(), "static");
@@ -153,20 +190,20 @@ fn two_daemons_one_store_search_once_fleet_wide() {
     cb.wait_for_drain(DRAIN_TIMEOUT).unwrap();
     let hit_b = cb.get_kernel_wait(suites::MM1, None, None, DRAIN_TIMEOUT).unwrap();
     assert!(hit_b.hit, "B serves A's search result from the shared store");
-    let hit_a = ca.get_kernel(suites::MM1, None, None).unwrap();
+    let hit_a = get_kernel(&mut ca, suites::MM1, None, None).unwrap();
     assert!(hit_a.hit);
     assert_eq!(hit_a.schedule, hit_b.schedule, "one record serves the whole fleet");
 
     // Concurrent exact hits from both daemons.
     for _ in 0..3 {
-        assert!(ca.get_kernel(suites::MM1, None, None).unwrap().hit);
-        assert!(cb.get_kernel(suites::MM1, None, None).unwrap().hit);
+        assert!(get_kernel(&mut ca, suites::MM1, None, None).unwrap().hit);
+        assert!(get_kernel(&mut cb, suites::MM1, None, None).unwrap().hit);
     }
 
     // Exactly one search ran fleet-wide, and both daemons agree on the
     // store contents.
-    let sa = ca.stats().unwrap();
-    let sb = cb.stats().unwrap();
+    let sa = stats(&mut ca).unwrap();
+    let sb = stats(&mut cb).unwrap();
     assert_eq!(
         sa.n_searches_done + sb.n_searches_done,
         1,
@@ -207,16 +244,16 @@ fn fleet_metrics_merge_equals_union_of_samples() {
     // Distinct traffic shapes per daemon: A pays the miss + search,
     // then both serve hits (B's first request ingests A's record via
     // the targeted on-miss refresh).
-    assert!(ca.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    assert!(get_kernel(&mut ca, suites::MM1, None, None).unwrap().enqueued);
     ca.wait_for_drain(DRAIN_TIMEOUT).unwrap();
     for _ in 0..3 {
-        assert!(ca.get_kernel(suites::MM1, None, None).unwrap().hit);
+        assert!(get_kernel(&mut ca, suites::MM1, None, None).unwrap().hit);
     }
     assert!(cb.get_kernel_wait(suites::MM1, None, None, DRAIN_TIMEOUT).unwrap().hit);
-    assert!(cb.get_kernel(suites::MM1, None, None).unwrap().hit);
+    assert!(get_kernel(&mut cb, suites::MM1, None, None).unwrap().hit);
 
-    let ma = ca.metrics().unwrap();
-    let mb = cb.metrics().unwrap();
+    let ma = metrics(&mut ca).unwrap();
+    let mb = metrics(&mut cb).unwrap();
     assert!(ma.reply_wall_s.count() >= 4);
     assert!(mb.reply_wall_s.count() >= 2);
 
@@ -289,13 +326,13 @@ fn notify_delivers_foreign_writebacks_without_polling() {
     let mut cb = ServeClient::connect(&b.addr).unwrap();
 
     // A searches MM1 and lands the write-back; B never requests it.
-    assert!(ca.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    assert!(get_kernel(&mut ca, suites::MM1, None, None).unwrap().enqueued);
     ca.wait_for_drain(DRAIN_TIMEOUT).unwrap();
 
     // B's refresh loop ingests A's announcement.
     let deadline = std::time::Instant::now() + Duration::from_secs(60);
     loop {
-        let s = cb.stats().unwrap();
+        let s = stats(&mut cb).unwrap();
         if s.n_notify_refresh >= 1 {
             break;
         }
@@ -308,16 +345,16 @@ fn notify_delivers_foreign_writebacks_without_polling() {
 
     // B's FIRST request for the key is a plain exact hit, served from
     // memory the push path filled.
-    let hit = cb.get_kernel(suites::MM1, None, None).unwrap();
+    let hit = get_kernel(&mut cb, suites::MM1, None, None).unwrap();
     assert!(hit.hit, "B serves A's write-back via notify");
     assert_eq!(hit.source.name(), "store");
 
-    let sb = cb.stats().unwrap();
+    let sb = stats(&mut cb).unwrap();
     assert_eq!(sb.n_poll_refresh, 0, "zero interval polls: freshness was pushed");
     assert!(sb.n_notify_refresh >= 1);
     assert_eq!(sb.n_searches_done, 0, "B never searched");
     assert_eq!(sb.n_enqueued, 0);
-    let sa = ca.stats().unwrap();
+    let sa = stats(&mut ca).unwrap();
     assert_eq!(sa.n_notify_refresh, 0, "a daemon skips its own announcements");
     assert_eq!(sa.n_poll_refresh, 0);
 
@@ -339,7 +376,7 @@ fn batch_of_eight_mixed_requests_is_positionally_matched() {
     let mut client = ServeClient::connect(&handle.addr).unwrap();
 
     // Warm MM1 so the batch has real hits in it.
-    client.get_kernel(suites::MM1, None, None).unwrap();
+    get_kernel(&mut client, suites::MM1, None, None).unwrap();
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
 
     let requests: Vec<ecokernel::serve::BatchRequest> = vec![
@@ -352,7 +389,7 @@ fn batch_of_eight_mixed_requests_is_positionally_matched() {
         (suites::MM2, None, None), // miss, enqueues
         (suites::MM1, None, None), // hit
     ];
-    let replies = client.get_kernel_batch(&requests).unwrap();
+    let replies = get_kernel_batch(&mut client, &requests).unwrap();
     assert_eq!(replies.len(), 8, "one reply per request");
     let replies: Vec<_> = replies.into_iter().map(|r| r.unwrap()).collect();
     // Positional matching: entry i answers request i (the client's
@@ -372,13 +409,18 @@ fn batch_of_eight_mixed_requests_is_positionally_matched() {
     assert_eq!(s.n_searches_done, 4, "warm-up + 3 distinct batch misses");
     assert_eq!((s.n_hits, s.n_misses), (4, 5), "batch entries count as requests");
 
-    // The pipelined queue/flush API is the same wire path.
-    client.queue_get_kernel(suites::MM1, None, None);
-    client.queue_get_kernel(suites::MV3, None, None);
-    assert_eq!(client.queued_len(), 2);
-    let flushed = client.flush_batch().unwrap();
-    assert_eq!(client.queued_len(), 0);
-    assert!(flushed.iter().all(|r| r.as_ref().unwrap().hit), "both landed earlier");
+    // The pipelined queue/flush API is the same wire path. It is
+    // deprecated in favor of `call(Op::Batch(..))` but contractually
+    // alive for one release — this block IS its compat test.
+    #[allow(deprecated)]
+    {
+        client.queue_get_kernel(suites::MM1, None, None);
+        client.queue_get_kernel(suites::MV3, None, None);
+        assert_eq!(client.queued_len(), 2);
+        let flushed = client.flush_batch().unwrap();
+        assert_eq!(client.queued_len(), 0);
+        assert!(flushed.iter().all(|r| r.as_ref().unwrap().hit), "both landed earlier");
+    }
 
     client.shutdown().unwrap();
     handle.join().unwrap();
@@ -393,7 +435,7 @@ fn single_get_kernel_frames_are_byte_stable() {
     let dir = tmp_dir("bytestable");
     let handle = spawn_on(ServeAddr::Unix(dir.join("eco.sock")), &dir, quick_search(35));
     let mut client = ServeClient::connect(&handle.addr).unwrap();
-    client.get_kernel(suites::MM1, None, None).unwrap();
+    get_kernel(&mut client, suites::MM1, None, None).unwrap();
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
 
     let frame = r#"{"v":1,"op":"get_kernel","id":"pin1","workload":"MM1"}"#;
@@ -404,9 +446,9 @@ fn single_get_kernel_frames_are_byte_stable() {
     assert!(first.contains(r#""source":"store""#), "{first}");
     // A batch wrapping the same request carries the same payload per
     // entry (only the ids differ — they are client-chosen).
-    let hit = client.get_kernel(suites::MM1, None, None).unwrap();
+    let hit = get_kernel(&mut client, suites::MM1, None, None).unwrap();
     let batched =
-        client.get_kernel_batch(&[(suites::MM1, None, None)]).unwrap().remove(0).unwrap();
+        get_kernel_batch(&mut client, &[(suites::MM1, None, None)]).unwrap().remove(0).unwrap();
     assert_eq!(batched.schedule, hit.schedule);
     assert_eq!(batched.latency_s, hit.latency_s);
     assert_eq!(batched.energy_j, hit.energy_j);
@@ -596,9 +638,9 @@ fn merged_metrics_survives_a_dead_daemon() {
     let dir = tmp_dir("partial_merge");
     let a = spawn_on(ServeAddr::Unix(dir.join("a.sock")), &dir, quick_search(41));
     let mut ca = ServeClient::connect(&a.addr).unwrap();
-    assert!(ca.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    assert!(get_kernel(&mut ca, suites::MM1, None, None).unwrap().enqueued);
     ca.wait_for_drain(DRAIN_TIMEOUT).unwrap();
-    let solo = ca.metrics().unwrap();
+    let solo = metrics(&mut ca).unwrap();
 
     // A socket path nothing listens on stands in for a crashed daemon.
     let dead = ServeAddr::Unix(dir.join("dead.sock"));
@@ -644,15 +686,15 @@ fn duplicated_miss_yields_one_trace_across_the_fleet() {
     let wire_id = "feedc0dedeadbeef";
     let first = ca.get_kernel_traced(suites::MM1, None, None, Some(wire_id)).unwrap();
     assert!(!first.hit && first.enqueued);
-    ca.get_kernel(suites::MM1, None, None).unwrap(); // duplicate on A
-    cb.get_kernel(suites::MM1, None, None).unwrap(); // duplicate on B
+    get_kernel(&mut ca, suites::MM1, None, None).unwrap(); // duplicate on A
+    get_kernel(&mut cb, suites::MM1, None, None).unwrap(); // duplicate on B
     ca.wait_for_drain(DRAIN_TIMEOUT).unwrap();
 
     // A: exactly one trace, complete, under the client's id, with the
     // whole story attached.
     let deadline = std::time::Instant::now() + Duration::from_secs(60);
     let trace_a = loop {
-        let tr = ca.traces(0).unwrap();
+        let tr = traces(&mut ca, 0).unwrap();
         if let Some(t) = tr.traces.iter().find(|t| t.complete && !t.remote) {
             assert_eq!(tr.traces.len(), 1, "duplicates opened no extra trace: {tr:?}");
             break t.clone();
@@ -676,7 +718,7 @@ fn duplicated_miss_yields_one_trace_across_the_fleet() {
     // B: the SAME id continues as a completed remote trace whose
     // notify_refresh span names the announcing holder.
     let trace_b = loop {
-        let tr = cb.traces(0).unwrap();
+        let tr = traces(&mut cb, 0).unwrap();
         if let Some(t) = tr.traces.iter().find(|t| t.remote) {
             break t.clone();
         }
@@ -719,16 +761,16 @@ fn fleet_energy_ledger_merges_as_union_over_tcp() {
 
     // A pays the fleet's one search; both daemons then serve hits off
     // the landed record (B ingests it via the on-miss refresh).
-    assert!(ca.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    assert!(get_kernel(&mut ca, suites::MM1, None, None).unwrap().enqueued);
     ca.wait_for_drain(DRAIN_TIMEOUT).unwrap();
     for _ in 0..3 {
-        assert!(ca.get_kernel(suites::MM1, None, None).unwrap().hit);
+        assert!(get_kernel(&mut ca, suites::MM1, None, None).unwrap().hit);
     }
     assert!(cb.get_kernel_wait(suites::MM1, None, None, DRAIN_TIMEOUT).unwrap().hit);
-    assert!(cb.get_kernel(suites::MM1, None, None).unwrap().hit);
+    assert!(get_kernel(&mut cb, suites::MM1, None, None).unwrap().hit);
 
-    let ma = ca.metrics().unwrap();
-    let mb = cb.metrics().unwrap();
+    let ma = metrics(&mut ca).unwrap();
+    let mb = metrics(&mut cb).unwrap();
     let (gpu, mm) = (ledger_gpu_index("a100").unwrap(), ledger_family_index("mm"));
 
     // The searching daemon debited real measurement joules into the
@@ -803,7 +845,7 @@ fn merged_health_survives_a_dead_daemon_and_names_it() {
     let dir = tmp_dir("health_partial");
     let a = spawn_on(ServeAddr::Unix(dir.join("a.sock")), &dir, quick_search(53));
     let mut ca = ServeClient::connect(&a.addr).unwrap();
-    assert!(ca.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    assert!(get_kernel(&mut ca, suites::MM1, None, None).unwrap().enqueued);
     ca.wait_for_drain(DRAIN_TIMEOUT).unwrap();
 
     // Healthy fleet-of-one: the default [slo] targets are lenient and
@@ -861,14 +903,14 @@ fn drift_watchdog_researches_hottest_key_within_budget() {
     // Seed: one miss pays a search, whose rounds record the steady
     // relerr samples the watchdog judges; the request also heats MM1
     // in the admission sketch, making it the re-search candidate.
-    assert!(client.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    assert!(get_kernel(&mut client, suites::MM1, None, None).unwrap().enqueued);
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
-    assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+    assert!(get_kernel(&mut client, suites::MM1, None, None).unwrap().hit);
 
     // The watchdog notices the breach and admits a re-search.
     let deadline = std::time::Instant::now() + Duration::from_secs(60);
     let health = loop {
-        let h = client.health().unwrap();
+        let h = health(&mut client).unwrap();
         if h.drift.n_drift_researches >= 1 {
             break h;
         }
@@ -897,13 +939,13 @@ fn drift_watchdog_researches_hottest_key_within_budget() {
         intervals
     );
     // The same counter rides the metrics op for dashboards.
-    assert!(client.metrics().unwrap().counter("n_drift_researches") >= 1);
+    assert!(metrics(&mut client).unwrap().counter("n_drift_researches") >= 1);
 
     // The re-searched record supersedes in place and keeps serving.
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
-    let hit = client.get_kernel(suites::MM1, None, None).unwrap();
+    let hit = get_kernel(&mut client, suites::MM1, None, None).unwrap();
     assert!(hit.hit, "re-search kept the key servable");
-    assert_eq!(client.stats().unwrap().n_records, 1, "superseded, not duplicated");
+    assert_eq!(stats(&mut client).unwrap().n_records, 1, "superseded, not duplicated");
 
     client.shutdown().unwrap();
     handle.join().unwrap();
@@ -932,17 +974,17 @@ fn saturated_queue_sheds_cold_keys_and_keeps_hot_ones() {
     // k1 -> worker, k2 -> queue, k3 -> backlog: all admitted. The
     // pause lets the (seconds-long) k1 search leave the queue for its
     // worker, so the slot arithmetic below is deterministic.
-    assert!(client.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    assert!(get_kernel(&mut client, suites::MM1, None, None).unwrap().enqueued);
     std::thread::sleep(Duration::from_millis(150));
-    assert!(client.get_kernel(suites::MM2, None, None).unwrap().enqueued);
-    assert!(client.get_kernel(suites::MM3, None, None).unwrap().enqueued);
+    assert!(get_kernel(&mut client, suites::MM2, None, None).unwrap().enqueued);
+    assert!(get_kernel(&mut client, suites::MM3, None, None).unwrap().enqueued);
     // k4 arrives hotter (more recent) than the backlogged k3 under the
     // decayed-rate sketch: it displaces k3, which is shed.
-    assert!(client.get_kernel(suites::MM4, None, None).unwrap().enqueued);
+    assert!(get_kernel(&mut client, suites::MM4, None, None).unwrap().enqueued);
     // Re-requesting k3 heats it past k4: k3 displaces k4 back out.
-    assert!(client.get_kernel(suites::MM3, None, None).unwrap().enqueued);
+    assert!(get_kernel(&mut client, suites::MM3, None, None).unwrap().enqueued);
 
-    let s = client.stats().unwrap();
+    let s = stats(&mut client).unwrap();
     assert_eq!(s.n_shed, 2, "two displacement sheds under saturation");
     assert_eq!(s.backlog_len, 1, "one key heat-queued behind the saturated queue");
 
@@ -950,8 +992,8 @@ fn saturated_queue_sheds_cold_keys_and_keeps_hot_ones() {
     let drained = client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
     assert_eq!(drained.n_searches_done, 3);
     assert_eq!(drained.n_enqueued, 3, "admissions minus sheds");
-    assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
-    assert!(client.get_kernel(suites::MM3, None, None).unwrap().hit, "hot key was kept");
+    assert!(get_kernel(&mut client, suites::MM1, None, None).unwrap().hit);
+    assert!(get_kernel(&mut client, suites::MM3, None, None).unwrap().hit, "hot key was kept");
 
     client.shutdown().unwrap();
     handle.join().unwrap();

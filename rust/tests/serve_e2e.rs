@@ -7,16 +7,45 @@
 
 use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
 use ecokernel::serve::{
-    error_code, Daemon, DaemonConfig, DaemonHandle, HealthStatus, ServeAddr, ServeClient,
-    ServeSource, ServeTier, HEALTH_VERSION,
+    error_code, Daemon, DaemonConfig, DaemonHandle, HealthReply, HealthStatus, KernelReply,
+    MetricsReply, Op, ServeAddr, ServeClient, ServeSource, ServeTier, StatsReply, TraceReply,
+    HEALTH_VERSION,
 };
 use ecokernel::telemetry::{ledger_family_index, ledger_gpu_index};
 use ecokernel::util::Json;
-use ecokernel::workload::suites;
+use ecokernel::workload::{suites, Workload};
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(120);
+
+// Thin shims over the typed op API, so every test reads as one call
+// per wire operation.
+
+fn get_kernel(
+    client: &mut ServeClient,
+    workload: Workload,
+    gpu: Option<GpuArch>,
+    mode: Option<SearchMode>,
+) -> anyhow::Result<KernelReply> {
+    client.call(Op::GetKernel { workload, gpu, mode, trace: None })?.into_kernel()
+}
+
+fn stats(client: &mut ServeClient) -> anyhow::Result<StatsReply> {
+    client.call(Op::Stats)?.into_stats()
+}
+
+fn metrics(client: &mut ServeClient) -> anyhow::Result<MetricsReply> {
+    client.call(Op::Metrics)?.into_metrics()
+}
+
+fn traces(client: &mut ServeClient, slowest: usize) -> anyhow::Result<TraceReply> {
+    client.call(Op::Traces { slowest })?.into_traces()
+}
+
+fn health(client: &mut ServeClient) -> anyhow::Result<HealthReply> {
+    client.call(Op::Health)?.into_health()
+}
 
 fn tmp_dir(tag: &str) -> PathBuf {
     let dir =
@@ -69,7 +98,7 @@ fn miss_then_background_search_then_hit_with_zero_measurements() {
     let (handle, dir) = spawn_daemon("hitmiss", |_| {});
     let mut client = ServeClient::connect(&handle.addr).unwrap();
 
-    let first = client.get_kernel(suites::MM1, None, None).unwrap();
+    let first = get_kernel(&mut client, suites::MM1, None, None).unwrap();
     assert!(!first.hit, "a fresh store cannot hit");
     assert!(first.enqueued, "first miss enqueues the real search");
     assert_eq!(first.source, ServeSource::Fallback, "empty store has no neighbor to guess from");
@@ -81,7 +110,7 @@ fn miss_then_background_search_then_hit_with_zero_measurements() {
     let paid_after_search = drained.measurements_paid;
     assert!(paid_after_search > 0, "the background search pays real measurements");
 
-    let second = client.get_kernel(suites::MM1, None, None).unwrap();
+    let second = get_kernel(&mut client, suites::MM1, None, None).unwrap();
     assert!(second.hit, "identical request must now hit the store");
     assert_eq!(second.source, ServeSource::Store);
     assert!(!second.enqueued, "hits never re-search");
@@ -89,7 +118,7 @@ fn miss_then_background_search_then_hit_with_zero_measurements() {
 
     // The hit itself paid nothing: the daemon's measurement ledger is
     // unchanged, and no new search ran.
-    let s = client.stats().unwrap();
+    let s = stats(&mut client).unwrap();
     assert_eq!(s.measurements_paid, paid_after_search, "a hit costs 0 NVML measurements");
     assert_eq!(s.n_searches_done, 1);
     assert_eq!(s.n_hits, 1);
@@ -97,7 +126,7 @@ fn miss_then_background_search_then_hit_with_zero_measurements() {
 
     // A neighboring shape misses but gets a warm guess from the cached
     // MM1 record instead of the blind fallback.
-    let neighbor = client.get_kernel(suites::MM2, None, None).unwrap();
+    let neighbor = get_kernel(&mut client, suites::MM2, None, None).unwrap();
     assert!(!neighbor.hit);
     assert_eq!(neighbor.source, ServeSource::WarmGuess);
     assert!(neighbor.energy_j > 0.0, "warm guesses carry MAC-rescaled estimates");
@@ -122,7 +151,7 @@ fn never_seen_key_is_served_static_then_exact() {
     });
     let mut client = ServeClient::connect(&handle.addr).unwrap();
 
-    let first = client.get_kernel(suites::CONV2, None, None).unwrap();
+    let first = get_kernel(&mut client, suites::CONV2, None, None).unwrap();
     assert!(!first.hit, "fresh store cannot hit");
     assert_eq!(first.source, ServeSource::Fallback, "no neighbor on an empty store");
     assert_eq!(first.tier, ServeTier::Static, "the fallback is the static tier");
@@ -140,7 +169,7 @@ fn never_seen_key_is_served_static_then_exact() {
 
     // Zero measurements paid while the reply is already in hand (the
     // search is still in flight), and the tier counter saw the miss.
-    let s = client.stats().unwrap();
+    let s = stats(&mut client).unwrap();
     assert_eq!(s.measurements_paid, 0, "the static tier pays 0 NVML measurements");
     assert_eq!(s.n_static_tier, 1);
     assert_eq!(s.n_searches_done, 0, "search still in flight");
@@ -153,18 +182,18 @@ fn never_seen_key_is_served_static_then_exact() {
     assert!(raw.contains(r#""tier":"static""#), "{raw}");
     assert!(raw.contains(r#""source":"fallback""#), "{raw}");
     assert!(raw.contains(r#""enqueued":false"#), "duplicate coalesces: {raw}");
-    let s = client.stats().unwrap();
+    let s = stats(&mut client).unwrap();
     assert_eq!(s.n_enqueued, 1, "one search for both static-tier misses");
     assert_eq!(s.n_static_tier, 2);
 
     // The background search lands; the same key is now the exact tier
     // with measured metrics, and no further static-tier replies.
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
-    let second = client.get_kernel(suites::CONV2, None, None).unwrap();
+    let second = get_kernel(&mut client, suites::CONV2, None, None).unwrap();
     assert!(second.hit);
     assert_eq!(second.tier, ServeTier::Exact);
     assert_eq!(second.source, ServeSource::Store);
-    let s = client.stats().unwrap();
+    let s = stats(&mut client).unwrap();
     assert_eq!(s.n_searches_done, 1);
     assert!(s.measurements_paid > 0, "the background search paid the measurements");
     assert_eq!(s.n_static_tier, 2, "the exact hit added no static-tier reply");
@@ -178,8 +207,8 @@ fn duplicate_misses_enqueue_only_one_search() {
     let (handle, dir) = spawn_daemon("dup", |_| {});
     let mut client = ServeClient::connect(&handle.addr).unwrap();
 
-    let a = client.get_kernel(suites::MV3, None, None).unwrap();
-    let b = client.get_kernel(suites::MV3, None, None).unwrap();
+    let a = get_kernel(&mut client, suites::MV3, None, None).unwrap();
+    let b = get_kernel(&mut client, suites::MV3, None, None).unwrap();
     assert!(a.enqueued, "first miss enqueues");
     assert!(!b.enqueued, "in-flight duplicate coalesces");
     let s = client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
@@ -199,25 +228,28 @@ fn per_gpu_quota_evicts_lru_but_retained_keys_still_hit() {
     let mut client = ServeClient::connect(&handle.addr).unwrap();
 
     // Fill: MM1 then MV3, each searched and written back.
-    client.get_kernel(suites::MM1, None, None).unwrap();
+    get_kernel(&mut client, suites::MM1, None, None).unwrap();
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
-    client.get_kernel(suites::MV3, None, None).unwrap();
+    get_kernel(&mut client, suites::MV3, None, None).unwrap();
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
 
     // Serve MM1 again: MV3 is now the least-recently-served key.
-    assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+    assert!(get_kernel(&mut client, suites::MM1, None, None).unwrap().hit);
 
     // CONV2 overflows the quota: its write-back evicts MV3.
-    client.get_kernel(suites::CONV2, None, None).unwrap();
+    get_kernel(&mut client, suites::CONV2, None, None).unwrap();
     let s = client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
     assert!(s.n_evicted_records >= 1, "overflow evicted something");
     assert_eq!(s.n_records, 2, "store holds exactly the quota");
 
     // Retained keys are unaffected — both still exact hits...
-    assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit, "recently-served retained");
-    assert!(client.get_kernel(suites::CONV2, None, None).unwrap().hit, "fresh key retained");
+    assert!(
+        get_kernel(&mut client, suites::MM1, None, None).unwrap().hit,
+        "recently-served retained"
+    );
+    assert!(get_kernel(&mut client, suites::CONV2, None, None).unwrap().hit, "fresh key retained");
     // ...while the evicted key is a miss again.
-    let evicted = client.get_kernel(suites::MV3, None, None).unwrap();
+    let evicted = get_kernel(&mut client, suites::MV3, None, None).unwrap();
     assert!(!evicted.hit, "LRU victim was evicted");
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
 
@@ -240,17 +272,17 @@ fn hits_are_served_while_a_miss_search_is_in_flight() {
 
     // Fill MM1, then start a second slow search (MM2) and leave it
     // running.
-    client.get_kernel(suites::MM1, None, None).unwrap();
+    get_kernel(&mut client, suites::MM1, None, None).unwrap();
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
-    let miss = client.get_kernel(suites::MM2, None, None).unwrap();
+    let miss = get_kernel(&mut client, suites::MM2, None, None).unwrap();
     assert!(!miss.hit && miss.enqueued);
 
     // Hits on a second connection land while the MM2 search runs.
     let mut other = ServeClient::connect(&handle.addr).unwrap();
     for _ in 0..5 {
-        assert!(other.get_kernel(suites::MM1, None, None).unwrap().hit);
+        assert!(get_kernel(&mut other, suites::MM1, None, None).unwrap().hit);
     }
-    let stats = other.stats().unwrap();
+    let stats = stats(&mut other).unwrap();
     assert!(stats.n_hits >= 5, "hits were served mid-search: {}", stats.n_hits);
 
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
@@ -293,7 +325,7 @@ fn protocol_errors_over_the_socket() {
         }
     }
     // The connection still serves valid requests afterwards.
-    assert!(client.stats().is_ok());
+    assert!(stats(&mut client).is_ok());
 
     stop(handle, &dir);
 }
@@ -307,7 +339,7 @@ fn batch_errors_are_positional_over_the_socket() {
     let mut client = ServeClient::connect(&handle.addr).unwrap();
 
     // Warm MM1 so position 0 is an exact hit.
-    client.get_kernel(suites::MM1, None, None).unwrap();
+    get_kernel(&mut client, suites::MM1, None, None).unwrap();
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
 
     let frame = r#"{"v":1,"op":"batch","id":"bx","requests":[
@@ -348,7 +380,7 @@ fn batch_errors_are_positional_over_the_socket() {
     // Batch counters: the mixed frame above counted once, with three
     // requests riding in it (error positions included in the frame's
     // request count, not in hit/miss metrics).
-    let s = client.stats().unwrap();
+    let s = stats(&mut client).unwrap();
     assert_eq!(s.n_batch_frames, 1);
     assert_eq!(s.n_batch_requests, 3);
 
@@ -364,12 +396,12 @@ fn serving_metrics_separate_served_from_searched() {
     let mut client = ServeClient::connect(&handle.addr).unwrap();
 
     // 1 miss + search, then 4 hits.
-    client.get_kernel(suites::MM1, None, None).unwrap();
+    get_kernel(&mut client, suites::MM1, None, None).unwrap();
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
     for _ in 0..4 {
-        assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+        assert!(get_kernel(&mut client, suites::MM1, None, None).unwrap().hit);
     }
-    let s = client.stats().unwrap();
+    let s = stats(&mut client).unwrap();
     assert_eq!(s.n_requests, 5);
     assert_eq!((s.n_hits, s.n_misses), (4, 1));
     assert!((s.hit_rate - 0.8).abs() < 1e-9);
@@ -396,13 +428,13 @@ fn metrics_op_reports_stage_histograms() {
     let mut client = ServeClient::connect(&handle.addr).unwrap();
 
     // 1 miss (searched + drained) + 4 exact hits.
-    client.get_kernel(suites::MM1, None, None).unwrap();
+    get_kernel(&mut client, suites::MM1, None, None).unwrap();
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
     for _ in 0..4 {
-        assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+        assert!(get_kernel(&mut client, suites::MM1, None, None).unwrap().hit);
     }
 
-    let m = client.metrics().unwrap();
+    let m = metrics(&mut client).unwrap();
     assert_eq!(m.counter("n_requests"), 5);
     assert_eq!(m.counter("n_hits"), 4);
     assert_eq!(m.counter("n_misses"), 1);
@@ -474,9 +506,9 @@ fn health_op_reports_slo_targets_over_the_socket() {
     let (handle, dir) = spawn_daemon("healthop", |_| {});
     let mut client = ServeClient::connect(&handle.addr).unwrap();
 
-    client.get_kernel(suites::MM1, None, None).unwrap();
+    get_kernel(&mut client, suites::MM1, None, None).unwrap();
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
-    assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+    assert!(get_kernel(&mut client, suites::MM1, None, None).unwrap().hit);
 
     // Raw frame: versioned, ok, one entry per [slo] target.
     let reply = client.roundtrip_raw(r#"{"v":1,"op":"health","id":"h1"}"#).unwrap();
@@ -497,7 +529,7 @@ fn health_op_reports_slo_targets_over_the_socket() {
     // Typed client: a barely-used daemon under default [slo] targets
     // is healthy (windows below min_window never breach), each target
     // says WHY it holds, and the reply parses losslessly.
-    let h = client.health().unwrap();
+    let h = health(&mut client).unwrap();
     assert_eq!(h.status, HealthStatus::Ok, "{h:?}");
     assert_eq!(h.targets.len(), 4);
     assert!(h.targets.iter().all(|t| !t.reason.is_empty()), "{h:?}");
@@ -515,17 +547,17 @@ fn trace_op_returns_the_completed_miss_chain() {
     let (handle, dir) = spawn_daemon("traceop", |_| {});
     let mut client = ServeClient::connect(&handle.addr).unwrap();
 
-    assert!(client.get_kernel(suites::MM1, None, None).unwrap().enqueued);
+    assert!(get_kernel(&mut client, suites::MM1, None, None).unwrap().enqueued);
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
     for _ in 0..3 {
-        assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+        assert!(get_kernel(&mut client, suites::MM1, None, None).unwrap().hit);
     }
 
     // The trace closes moments after the drain (the write-back's
     // bookkeeping finishes outside the lock the drain poll reads).
     let deadline = std::time::Instant::now() + DRAIN_TIMEOUT;
     let t = loop {
-        let tr = client.traces(0).unwrap();
+        let tr = traces(&mut client, 0).unwrap();
         if let Some(t) = tr.traces.first().filter(|t| t.complete) {
             assert_eq!(tr.traces.len(), 1, "the 3 hits added no traces: {tr:?}");
             break t.clone();
@@ -541,7 +573,7 @@ fn trace_op_returns_the_completed_miss_chain() {
         assert!(names.contains(&expected), "missing '{expected}' in {names:?}");
     }
     // `--slowest 1` caps the reply; the lone trace survives the cap.
-    assert_eq!(client.traces(1).unwrap().traces.len(), 1);
+    assert_eq!(traces(&mut client, 1).unwrap().traces.len(), 1);
 
     stop(handle, &dir);
 }
@@ -552,15 +584,15 @@ fn gpu_and_mode_are_part_of_the_serve_key() {
     let (handle, dir) = spawn_daemon("keys", |_| {});
     let mut client = ServeClient::connect(&handle.addr).unwrap();
 
-    client.get_kernel(suites::MM1, None, None).unwrap();
+    get_kernel(&mut client, suites::MM1, None, None).unwrap();
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
-    assert!(client.get_kernel(suites::MM1, None, None).unwrap().hit);
+    assert!(get_kernel(&mut client, suites::MM1, None, None).unwrap().hit);
 
     // Same workload on another GPU is its own key: a miss.
-    let other_gpu = client.get_kernel(suites::MM1, Some(GpuArch::V100), None).unwrap();
+    let other_gpu = get_kernel(&mut client, suites::MM1, Some(GpuArch::V100), None).unwrap();
     assert!(!other_gpu.hit);
     client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
-    assert!(client.get_kernel(suites::MM1, Some(GpuArch::V100), None).unwrap().hit);
+    assert!(get_kernel(&mut client, suites::MM1, Some(GpuArch::V100), None).unwrap().hit);
 
     stop(handle, &dir);
 }

@@ -1,0 +1,394 @@
+//! Integration: the wire-v2 data plane end to end (the ISSUE 10
+//! acceptance criteria) — `hello` negotiation and the clean downgrade
+//! against a daemon that predates it, all three historical line-JSON
+//! frame generations still parsing, and the out-of-order reply pin: a
+//! slow miss and a fast hit multiplexed on ONE binary connection, the
+//! hit replying first, over both `unix:` and `tcp:`.
+#![cfg(unix)]
+
+use ecokernel::config::{GpuArch, SearchConfig, SearchMode};
+use ecokernel::fleet::Stream;
+use ecokernel::serve::{
+    wire, wire_name, Daemon, DaemonConfig, DaemonHandle, KernelReply, Op, Response, ServeAddr,
+    ServeClient, ServeSource, ServeTier, StatsReply, WIRE_VERSION,
+};
+use ecokernel::workload::suites;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(120);
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ecokernel_wire_e2e_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A quick daemon on the given address: small searches, small pool.
+fn spawn_daemon(tag: &str, addr: ServeAddr) -> (DaemonHandle, PathBuf) {
+    let dir = tmp_dir(tag);
+    let mut search = SearchConfig {
+        gpu: GpuArch::A100,
+        mode: SearchMode::EnergyAware,
+        population: 16,
+        m_latency_keep: 4,
+        rounds: 2,
+        patience: 0,
+        seed: 11,
+        ..Default::default()
+    };
+    search.serve.n_workers = 1;
+    search.serve.n_shards = 4;
+    let addr = match addr {
+        ServeAddr::Unix(_) => ServeAddr::Unix(dir.join("ecokernel.sock")),
+        tcp => tcp,
+    };
+    let handle =
+        Daemon::spawn(DaemonConfig { addr, store_dir: dir.clone(), search }, None).unwrap();
+    (handle, dir)
+}
+
+fn stop(handle: DaemonHandle, dir: &Path) {
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Warm one workload into the store so later requests are exact hits.
+fn warm(addr: &ServeAddr) {
+    let mut client = ServeClient::connect(addr).unwrap();
+    let first = client
+        .call(Op::GetKernel { workload: suites::MM1, gpu: None, mode: None, trace: None })
+        .unwrap()
+        .into_kernel()
+        .unwrap();
+    assert!(!first.hit);
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+}
+
+// -- negotiation ------------------------------------------------------
+
+/// The full upgrade path: `hello` grants binary, the same connection
+/// then serves a miss (kind-2 via the slow lane), a hit (kind-2
+/// inline), admin ops (kind-0 JSON), and a traced request (which rides
+/// kind-0 because kind-1 carries no trace field).
+#[test]
+fn binary_negotiation_upgrades_and_serves() {
+    let (handle, dir) = spawn_daemon("nego", ServeAddr::Unix(PathBuf::new()));
+    let mut client = ServeClient::connect_negotiated(&handle.addr).unwrap();
+    assert_eq!(client.wire(), wire_name::BINARY);
+    // Re-negotiation is idempotent once granted.
+    assert!(client.negotiate_binary().unwrap());
+
+    let miss = client
+        .call(Op::GetKernel { workload: suites::MM1, gpu: None, mode: None, trace: None })
+        .unwrap()
+        .into_kernel()
+        .unwrap();
+    assert!(!miss.hit);
+    assert!(miss.enqueued);
+
+    let drained = client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    assert_eq!(drained.n_searches_done, 1);
+
+    let hit = client
+        .call(Op::GetKernel { workload: suites::MM1, gpu: None, mode: None, trace: None })
+        .unwrap()
+        .into_kernel()
+        .unwrap();
+    assert!(hit.hit);
+    assert_eq!(hit.source, ServeSource::Store);
+
+    // A traced request works on the binary wire (kind-0 fallback).
+    let traced = client
+        .get_kernel_traced(suites::MM1, None, None, Some("00ff00ff00ff00ff"))
+        .unwrap();
+    assert!(traced.hit);
+
+    // The negotiation and the frames it carried are visible in the
+    // daemon's counters.
+    let metrics = client.call(Op::Metrics).unwrap().into_metrics().unwrap();
+    assert!(metrics.counter("n_hello") >= 1, "hello negotiations counted");
+    assert!(metrics.counter("n_binary_frames") >= 4, "binary frames counted");
+
+    stop(handle, &dir);
+}
+
+/// A daemon that never heard of `hello`: replies `bad_request`, and
+/// the client downgrades to line-JSON without erroring — then keeps
+/// using the same connection. The canned reply is a real pre-fleet
+/// stats frame, so this doubles as a cross-generation compat check.
+#[test]
+fn old_daemon_downgrades_to_line_json() {
+    let (listener, addr) =
+        ecokernel::fleet::Listener::bind(&ServeAddr::Tcp("127.0.0.1:0".to_string())).unwrap();
+    let fake = std::thread::spawn(move || {
+        let stream = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut stream = stream;
+        // Frame 1: the hello this daemon does not understand.
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"hello\""), "expected a hello, got {line}");
+        stream
+            .write_all(
+                b"{\"v\":1,\"id\":\"c1\",\"ok\":false,\"error\":{\"code\":\"bad_request\",\"message\":\"unknown op 'hello'\"}}\n",
+            )
+            .unwrap();
+        // Frame 2: a stats request, answered with a pre-fleet frame.
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"stats\""), "expected stats, got {line}");
+        stream
+            .write_all(
+                b"{\"v\":1,\"id\":\"c2\",\"ok\":true,\"op\":\"stats\",\"stats\":{\"n_requests\":7,\"n_hits\":3,\"n_misses\":4,\"n_enqueued\":4,\"n_searches_done\":4,\"n_evicted_records\":0,\"queue_depth\":0,\"n_records\":4,\"n_shards\":4,\"hit_rate\":0.42,\"p50_reply_s\":0.001,\"p99_reply_s\":0.002,\"measurements_paid\":96}}\n",
+            )
+            .unwrap();
+    });
+
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let granted = client.negotiate_binary().unwrap();
+    assert!(!granted, "an old daemon must downgrade, not error");
+    assert_eq!(client.wire(), wire_name::LINE);
+
+    let stats = client.call(Op::Stats).unwrap().into_stats().unwrap();
+    assert_eq!(stats.n_requests, 7);
+    assert_eq!(stats.measurements_paid, 96);
+    // Fleet-era fields are absent in that generation: parsed as zero.
+    assert_eq!(stats.n_shed, 0);
+    assert_eq!(stats.pending_keys, 0);
+
+    drop(client);
+    fake.join().unwrap();
+}
+
+// -- historical frame generations -------------------------------------
+
+const SCHEDULE_JSON: &str =
+    "{\"tm\":8,\"tn\":8,\"rm\":4,\"rn\":4,\"tk\":16,\"uk\":2,\"vw\":4,\"sk\":1,\"sh\":true}";
+
+/// All three line-JSON reply generations parse with today's client:
+/// gen 1 (pre-tier — no `tier`, derived from `source`), gen 2
+/// (pre-fleet stats — fleet counters absent, parsed as zero), and
+/// gen 3 (the current frame, which must round-trip exactly).
+#[test]
+fn historical_frame_generations_parse() {
+    // Gen 1: a kernel reply from before the serving-tier split.
+    let gen1 = format!(
+        "{{\"v\":1,\"id\":\"g1\",\"ok\":true,\"op\":\"get_kernel\",\"result\":\"hit\",\
+         \"source\":\"store\",\"schedule\":{SCHEDULE_JSON},\"latency_s\":0.002,\
+         \"energy_j\":0.4,\"avg_power_w\":200.0,\"enqueued\":false,\"queue_depth\":0,\
+         \"reply_time_s\":0.0001}}"
+    );
+    match Response::parse_line(&gen1).unwrap() {
+        Response::Kernel(r) => {
+            assert!(r.hit);
+            assert_eq!(r.tier, ServeTier::Exact, "tier derived from source on pre-tier frames");
+        }
+        other => panic!("gen-1 frame parsed as {other:?}"),
+    }
+
+    // Gen 2: a pre-fleet stats frame (no shed/coalesce/backlog/batch
+    // counters, no uptime or shard maps).
+    let gen2 = "{\"v\":1,\"id\":\"g2\",\"ok\":true,\"op\":\"stats\",\"stats\":{\
+         \"n_requests\":1,\"n_hits\":0,\"n_misses\":1,\"n_enqueued\":1,\"n_searches_done\":0,\
+         \"n_evicted_records\":0,\"queue_depth\":1,\"n_records\":0,\"n_shards\":4,\
+         \"hit_rate\":0.0,\"p50_reply_s\":0.0,\"p99_reply_s\":0.0,\"measurements_paid\":0}}";
+    match Response::parse_line(gen2).unwrap() {
+        Response::Stats(s) => {
+            assert_eq!(s.n_misses, 1);
+            assert_eq!(s.n_batch_frames, 0);
+            assert!(s.shard_records.is_empty());
+        }
+        other => panic!("gen-2 frame parsed as {other:?}"),
+    }
+
+    // Gen 3: the current generation round-trips bit-exactly, hello
+    // ack included (`wire_v` advertises the binary framing version).
+    let ack = Response::HelloAck { id: "g3".to_string(), wire: wire_name::BINARY.to_string() };
+    let encoded = ack.to_json().to_string();
+    assert!(encoded.contains(&format!("\"wire_v\":{WIRE_VERSION}")));
+    assert_eq!(Response::parse_line(&encoded).unwrap(), ack);
+}
+
+// -- out-of-order replies ---------------------------------------------
+
+/// Read one `\n`-terminated line from a raw stream, byte at a time
+/// (the hello ack is the only line-framed byte sequence on this
+/// connection, so simplicity beats buffering — a buffered reader
+/// could steal the binary bytes that follow).
+fn read_ack_line(stream: &mut Stream) -> String {
+    let mut line = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        let n = stream.read(&mut byte).unwrap();
+        assert!(n > 0, "daemon closed before the hello ack");
+        if byte[0] == b'\n' {
+            break;
+        }
+        line.push(byte[0]);
+    }
+    String::from_utf8(line).unwrap()
+}
+
+/// Read exactly `n` whole binary frames, in arrival order.
+fn read_frames(stream: &mut Stream, n: usize) -> Vec<wire::Frame> {
+    let mut frames = Vec::with_capacity(n);
+    let mut rbuf: Vec<u8> = Vec::new();
+    while frames.len() < n {
+        match wire::Frame::decode(&rbuf).unwrap() {
+            Some((frame, used)) => {
+                rbuf.drain(..used);
+                frames.push(frame);
+            }
+            None => {
+                let mut chunk = [0u8; 8192];
+                let got = stream.read(&mut chunk).unwrap();
+                assert!(got > 0, "daemon closed mid-frame");
+                rbuf.extend_from_slice(&chunk[..got]);
+            }
+        }
+    }
+    frames
+}
+
+/// THE head-of-line pin: one binary connection sends a slow miss
+/// (tag 7) immediately followed by a fast hit (tag 8) in a single
+/// write. The hit's reply must arrive FIRST — the miss is parked on
+/// the slow lane and must not block its sibling. Raw frames (not
+/// `call_many`) so physical arrival order is observable.
+fn out_of_order_pin(tag: &str, addr: ServeAddr) {
+    let (handle, dir) = spawn_daemon(tag, addr);
+    warm(&handle.addr);
+
+    let mut stream = Stream::connect(&handle.addr).unwrap();
+    stream
+        .write_all(b"{\"v\":1,\"op\":\"hello\",\"id\":\"h1\",\"wire\":\"binary\"}\n")
+        .unwrap();
+    let ack = read_ack_line(&mut stream);
+    match Response::parse_line(&ack).unwrap() {
+        Response::HelloAck { wire, .. } => assert_eq!(wire, wire_name::BINARY),
+        other => panic!("expected a hello ack, got {other:?}"),
+    }
+
+    // One buffer, one write: miss first, hit second.
+    let mut buf = Vec::new();
+    wire::Frame {
+        tag: 7,
+        kind: wire::KIND_GET_KERNEL,
+        payload: wire::encode_get_kernel(&suites::MM2, None, None),
+    }
+    .encode_into(&mut buf);
+    wire::Frame {
+        tag: 8,
+        kind: wire::KIND_GET_KERNEL,
+        payload: wire::encode_get_kernel(&suites::MM1, None, None),
+    }
+    .encode_into(&mut buf);
+    stream.write_all(&buf).unwrap();
+    stream.flush().unwrap();
+
+    let frames = read_frames(&mut stream, 2);
+    assert_eq!(
+        frames[0].tag, 8,
+        "the hit must reply before the miss that was written ahead of it"
+    );
+    assert_eq!(frames[1].tag, 7);
+    for frame in &frames {
+        assert_eq!(frame.kind, wire::KIND_KERNEL_REPLY);
+    }
+    let hit = wire::decode_kernel_reply(frames[0].tag, &frames[0].payload).unwrap();
+    assert!(hit.hit);
+    assert_eq!(hit.id, "t8");
+    let miss = wire::decode_kernel_reply(frames[1].tag, &frames[1].payload).unwrap();
+    assert!(!miss.hit);
+    assert!(miss.enqueued);
+    drop(stream);
+
+    // The daemon saw the reorder and counted it.
+    let mut client = ServeClient::connect(&handle.addr).unwrap();
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    let metrics = client.call(Op::Metrics).unwrap().into_metrics().unwrap();
+    assert!(metrics.counter("n_ooo_replies") >= 1, "out-of-order reply counted");
+
+    stop(handle, &dir);
+}
+
+#[test]
+fn out_of_order_replies_over_unix() {
+    out_of_order_pin("ooo_unix", ServeAddr::Unix(PathBuf::new()));
+}
+
+#[test]
+fn out_of_order_replies_over_tcp() {
+    out_of_order_pin("ooo_tcp", ServeAddr::Tcp("127.0.0.1:0".to_string()));
+}
+
+/// `call_many` on the binary wire: replies physically arrive out of
+/// order (miss slow, hit fast) but the returned vector is positional.
+#[test]
+fn call_many_reorders_binary_replies() {
+    let (handle, dir) = spawn_daemon("pipeline", ServeAddr::Unix(PathBuf::new()));
+    warm(&handle.addr);
+
+    let mut client = ServeClient::connect_negotiated(&handle.addr).unwrap();
+    assert_eq!(client.wire(), wire_name::BINARY);
+    let replies = client
+        .call_many(vec![
+            Op::GetKernel { workload: suites::MM3, gpu: None, mode: None, trace: None },
+            Op::GetKernel { workload: suites::MM1, gpu: None, mode: None, trace: None },
+        ])
+        .unwrap();
+    let replies: Vec<KernelReply> =
+        replies.into_iter().map(|r| r.into_kernel().unwrap()).collect();
+    assert!(!replies[0].hit, "slot 0 is the MM3 miss");
+    assert!(replies[1].hit, "slot 1 is the warmed MM1 hit");
+    assert_eq!(replies[1].tier, ServeTier::Exact);
+
+    client.wait_for_drain(DRAIN_TIMEOUT).unwrap();
+    stop(handle, &dir);
+}
+
+/// Sanity for the helper types this file leans on.
+#[test]
+fn stats_reply_helper_shape() {
+    let stats = StatsReply {
+        id: "x".to_string(),
+        n_requests: 0,
+        n_hits: 0,
+        n_misses: 0,
+        n_enqueued: 0,
+        n_searches_done: 0,
+        n_evicted_records: 0,
+        queue_depth: 0,
+        n_records: 0,
+        n_shards: 1,
+        hit_rate: 0.0,
+        p50_reply_s: 0.0,
+        p99_reply_s: 0.0,
+        measurements_paid: 0,
+        n_shed: 0,
+        n_fleet_coalesced: 0,
+        n_static_tier: 0,
+        backlog_len: 0,
+        pending_keys: 0,
+        n_writebacks_fenced: 0,
+        n_writebacks_dropped: 0,
+        n_batch_frames: 0,
+        n_batch_requests: 0,
+        n_notify_refresh: 0,
+        n_poll_refresh: 0,
+        uptime_s: 0.0,
+        build_info: String::new(),
+        shard_records: vec![],
+        heat_histogram: vec![],
+    };
+    let line = stats.to_json().to_string();
+    match Response::parse_line(&line).unwrap() {
+        Response::Stats(parsed) => assert_eq!(parsed, stats),
+        other => panic!("stats round-trip parsed as {other:?}"),
+    }
+}

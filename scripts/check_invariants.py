@@ -18,6 +18,15 @@ instead (stdlib python only, no build needed):
    `.read().expect(...)` / `.write().expect(...)` (a poisoned lock
    means another thread already panicked; propagating is correct).
 
+3. **No socket write under the state guard** — in `daemon.rs` AND the
+   evented accept loop `reactor.rs`, no socket/pipe write
+   (`.write_all(`, `.write(buf)`, `writeln!(`, `.flush()`) may happen
+   while a `state`-guard binding is live. A blocked peer must never be
+   able to extend the daemon's bookkeeping critical section: the
+   reactor buffers reply bytes and flushes them strictly outside any
+   guard. (`.write()` with no argument is the RwLock acquisition form
+   and is exempt.)
+
 The scanner is lexical, not a parser, with exactly the precision the
 daemon's style needs:
 
@@ -43,11 +52,15 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 DAEMON = REPO / "rust" / "src" / "serve" / "daemon.rs"
+REACTOR = REPO / "rust" / "src" / "serve" / "reactor.rs"
 
 # The request path: every function a `get_kernel`/`batch` frame flows
 # through between socket read and socket write.
 REQUEST_PATH_FNS = [
     "handle_frame",
+    "dispatch_fast",
+    "run_slow",
+    "finish_miss",
     "serve_get_kernel",
     "serve_hit",
     "serve_memory_miss",
@@ -100,10 +113,16 @@ GUARD_BIND = re.compile(
 GUARD_LET = re.compile(r"let\s+(?:mut\s+)?(\w+)\s*=")
 DROP = re.compile(r"\bdrop\(\s*(\w+)\s*\)")
 FORBIDDEN_UNDER_STATE = re.compile(r"\.(traces|slo)\s*\.lock\(\)")
+# Socket/pipe writes: `.write(` only counts with an argument — the
+# no-arg form is the RwLock acquisition (`.write().expect(...)`).
+SOCKET_WRITE = re.compile(r"\.write_all\(|\.write\(\s*[^)\s]|\bwriteln!\(|\.flush\(\)")
 
 
-def check_lock_order(lines: list[str]) -> list[str]:
-    """No traces/slo lock while a state-guard binding is live."""
+def scan_under_guard(
+    label: str, lines: list[str], forbidden: re.Pattern[str], what: str
+) -> list[str]:
+    """Walk `lines` tracking live state-guard bindings; error on any
+    line matching `forbidden` while one is live."""
     errors: list[str] = []
     depth = 0
     # name -> depth the binding's scope opened at (first `let`).
@@ -119,10 +138,10 @@ def check_lock_order(lines: list[str]) -> list[str]:
             # A re-assignment re-arms the guard at its original
             # binding depth (the `let` scope still owns the slot).
             live[name] = known_depth.get(name, depth)
-        if live and FORBIDDEN_UNDER_STATE.search(code) and not m:
+        if live and forbidden.search(code) and not m:
             held = ", ".join(sorted(live))
             errors.append(
-                f"daemon.rs:{lineno}: traces/slo mutex acquired while state "
+                f"{label}:{lineno}: {what} while state "
                 f"guard(s) [{held}] are live: {raw.strip()}"
             )
         for d in DROP.finditer(code):
@@ -140,7 +159,14 @@ def check_lock_order(lines: list[str]) -> list[str]:
     return errors
 
 
-FN_DEF = re.compile(r"^\s*(?:pub\s+)?fn\s+(\w+)\s*[(<]")
+def check_lock_order(lines: list[str]) -> list[str]:
+    """No traces/slo lock while a state-guard binding is live."""
+    return scan_under_guard(
+        "daemon.rs", lines, FORBIDDEN_UNDER_STATE, "traces/slo mutex acquired"
+    )
+
+
+FN_DEF = re.compile(r"^\s*(?:pub\s*(?:\(\s*\w+\s*\))?\s+)?fn\s+(\w+)\s*[(<]")
 ALLOWED_EXPECT = re.compile(r"\.\s*(?:lock|read|write)\(\)\s*\.\s*expect\(")
 ANY_EXPECT = re.compile(r"\.\s*expect\(")
 ANY_UNWRAP = re.compile(r"\.\s*unwrap\(\)")
@@ -212,22 +238,31 @@ def check_no_panics(lines: list[str]) -> list[str]:
 
 
 def main() -> int:
-    if not DAEMON.is_file():
-        print(f"check_invariants: {DAEMON} missing", file=sys.stderr)
-        return 1
+    for path in (DAEMON, REACTOR):
+        if not path.is_file():
+            print(f"check_invariants: {path} missing", file=sys.stderr)
+            return 1
     lines = DAEMON.read_text().splitlines()
+    reactor_lines = REACTOR.read_text().splitlines()
     errors = check_lock_order(lines) + check_no_panics(lines)
+    # Contract 3: reply bytes are buffered and flushed outside any
+    # state guard — in the blocking daemon AND the evented reactor.
+    for label, text in (("daemon.rs", lines), ("reactor.rs", reactor_lines)):
+        errors += scan_under_guard(label, text, SOCKET_WRITE, "socket write")
     if errors:
         print("serve-daemon invariant violations:", file=sys.stderr)
         for e in errors:
             print(f"  {e}", file=sys.stderr)
         return 1
     n_guards = sum(
-        1 for raw in lines if GUARD_BIND.search(strip_code(raw))
+        1
+        for raw in lines + reactor_lines
+        if GUARD_BIND.search(strip_code(raw))
     )
     print(
         f"check_invariants: OK ({n_guards} state-guard sites, "
-        f"{len(REQUEST_PATH_FNS)} request-path fns panic-free)"
+        f"{len(REQUEST_PATH_FNS)} request-path fns panic-free, "
+        "no socket write under a state guard)"
     )
     return 0
 
